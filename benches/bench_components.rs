@@ -1,0 +1,122 @@
+//! Component microbenchmarks (benchkit; `cargo bench --bench bench_components`).
+//!
+//! Hot-path pieces: the master combine, native linalg, the native SGD
+//! block, partitioning, the gradient code, delay sampling, JSON.
+//! `BENCHLINE` rows feed EXPERIMENTS.md §Perf.
+
+use anytime_sgd::backend::{Consts, NativeWorker, WorkerCompute};
+use anytime_sgd::benchkit::{black_box, Bench};
+use anytime_sgd::data::synthetic_linreg;
+use anytime_sgd::linalg::{dot_f32, gemv, weighted_sum, Matrix};
+use anytime_sgd::methods::gradient_coding::GradientCode;
+use anytime_sgd::partition::{materialize_shards, Assignment};
+use anytime_sgd::rng::Xoshiro256pp;
+use anytime_sgd::straggler::{DelayModel, StragglerEnv};
+use std::sync::Arc;
+
+fn main() {
+    let mut b = Bench::new();
+    let mut rng = Xoshiro256pp::seed_from_u64(1);
+
+    // ---- combine: the master's per-epoch hot op --------------------------
+    for (n, d) in [(10usize, 1_000usize), (20, 1_000), (10, 100_000)] {
+        let xs: Vec<Vec<f32>> = (0..n)
+            .map(|_| {
+                let mut v = vec![0.0f32; d];
+                rng.fill_normal_f32(&mut v);
+                v
+            })
+            .collect();
+        let refs: Vec<&[f32]> = xs.iter().map(|x| x.as_slice()).collect();
+        let w: Vec<f64> = (0..n).map(|i| (i + 1) as f64).collect();
+        let mut out = vec![0.0f32; d];
+        b.run_with_throughput(&format!("combine/weighted_sum n={n} d={d}"), (n * d) as f64, || {
+            weighted_sum(black_box(&refs), black_box(&w), &mut out);
+            out[0]
+        });
+    }
+
+    // ---- native linalg ----------------------------------------------------
+    let a = {
+        let mut m = Matrix::zeros(1_000, 1_000);
+        rng.fill_normal_f32(m.as_mut_slice());
+        m
+    };
+    let x: Vec<f32> = (0..1_000).map(|i| (i as f32).sin()).collect();
+    let mut y = vec![0.0f32; 1_000];
+    b.run_with_throughput("linalg/gemv 1000x1000 (f32)", 2.0 * 1_000.0 * 1_000.0, || {
+        gemv(black_box(&a), black_box(&x), &mut y);
+        y[0]
+    });
+    b.run_with_throughput("linalg/dot_f32 d=1000", 2.0 * 1_000.0, || {
+        dot_f32(black_box(a.row(0)), black_box(&x))
+    });
+
+    // ---- native SGD block: the worker hot loop ----------------------------
+    let ds = synthetic_linreg(5_000, 200, 1e-3, 3);
+    let shards = materialize_shards(&ds, &Assignment::new(1, 0));
+    let shard = Arc::new(shards.into_iter().next().unwrap());
+    let mut w = NativeWorker::new(shard, 32);
+    let x0 = vec![0.0f32; 200];
+    let idx: Vec<u32> = (0..32 * 64).map(|_| rng.index(5_000) as u32).collect();
+    // 64 steps, each 2*b*d flops for residual + 2*b*d for update.
+    let flops = 64.0 * 2.0 * 2.0 * 32.0 * 200.0;
+    b.run_with_throughput("backend/native 64-step block (b=32,d=200)", flops, || {
+        w.run_steps(black_box(&x0), black_box(&idx), 0.0, Consts::constant(1e-3)).x_k[0]
+    });
+
+    // ---- partitioning ------------------------------------------------------
+    let part_ds = synthetic_linreg(48_000, 200, 0.0, 5);
+    b.run_with_throughput(
+        "partition/materialize N=10 S=2 (48k x 200)",
+        (48_000 * 200 * 3) as f64, // rows copied incl. S+1 redundancy
+        || materialize_shards(black_box(&part_ds), &Assignment::new(10, 2)).len(),
+    );
+
+    // ---- gradient code ------------------------------------------------------
+    let code = GradientCode::new(10, 2, 7);
+    let grads: Vec<Vec<f32>> = (0..3)
+        .map(|_| {
+            let mut g = vec![0.0f32; 1_000];
+            rng.fill_normal_f32(&mut g);
+            g
+        })
+        .collect();
+    b.run("gc/encode (S=2, d=1000)", || code.encode(3, black_box(&grads)));
+    let received: Vec<(usize, Vec<f32>)> =
+        (0..8).map(|v| (v, code.encode(v, &grads_of(&code, v, &mut rng)))).collect();
+    b.run("gc/decode (8 of 10, d=1000)", || code.decode(black_box(&received)).map(|g| g[0]));
+
+    // ---- straggler sampling --------------------------------------------------
+    let model = DelayModel::new(StragglerEnv::ec2_default(0.02), 9);
+    let mut e = 0usize;
+    b.run("straggler/rate sample (ec2 bimodal)", || {
+        e += 1;
+        model.rate(black_box(e % 20), e)
+    });
+
+    // ---- JSON substrate --------------------------------------------------------
+    let doc = {
+        let mut s = String::from("[");
+        for i in 0..500 {
+            s.push_str(&format!("{{\"epoch\": {i}, \"err\": {:.6e}}},", 1.0 / (i + 1) as f64));
+        }
+        s.pop();
+        s.push(']');
+        s
+    };
+    b.run_with_throughput("ser/parse 500-row trace json", doc.len() as f64, || {
+        anytime_sgd::ser::parse(black_box(&doc)).unwrap()
+    });
+}
+
+fn grads_of(code: &GradientCode, v: usize, rng: &mut Xoshiro256pp) -> Vec<Vec<f32>> {
+    code.blocks_of(v)
+        .iter()
+        .map(|_| {
+            let mut g = vec![0.0f32; 1_000];
+            rng.fill_normal_f32(&mut g);
+            g
+        })
+        .collect()
+}

@@ -1,0 +1,74 @@
+//! Per-figure end-to-end benchmarks: one epoch of every figure's
+//! protocol (native backend), measuring the L3 coordinator + compute
+//! cost that dominates figure regeneration. One bench per paper
+//! table/figure (`cargo bench --bench bench_figures`).
+
+use anytime_sgd::benchkit::Bench;
+use anytime_sgd::config::RunConfig;
+use anytime_sgd::coordinator::{build_dataset, Trainer};
+use anytime_sgd::figures::{fig1, FigOpts};
+use std::sync::Arc;
+use std::time::Duration;
+
+fn epoch_bench(b: &mut Bench, preset: &str) {
+    let cfg = RunConfig::preset(preset).unwrap();
+    let ds = Arc::new(build_dataset(&cfg));
+    // Steps per epoch vary; report epochs/s and let the BENCHLINE carry it.
+    b.run(&format!("figure-epoch/{preset}"), || {
+        // A fresh trainer per iteration would re-materialize shards; we
+        // measure the epoch loop itself on a persistent trainer (the
+        // realistic steady-state cost).
+        thread_local! {
+            static TR: std::cell::RefCell<Option<(String, Trainer)>> =
+                const { std::cell::RefCell::new(None) };
+        }
+        TR.with(|slot| {
+            let mut slot = slot.borrow_mut();
+            let rebuild = match &*slot {
+                Some((name, _)) => name != preset,
+                None => true,
+            };
+            if rebuild {
+                *slot = Some((
+                    preset.to_string(),
+                    Trainer::with_dataset(RunConfig::preset(preset).unwrap(), ds.clone()).unwrap(),
+                ));
+            }
+            let (_, tr) = slot.as_mut().unwrap();
+            tr.run_epoch().q.iter().sum::<usize>()
+        })
+    });
+}
+
+fn main() {
+    let mut b = Bench::new().with_measure_time(Duration::from_secs(4));
+
+    // Fig 1 is a sampling workload, not a training epoch.
+    b.run("figure/fig1 histogram (5000 tasks)", || {
+        fig1(&FigOpts::default()).unwrap().0.total()
+    });
+
+    for preset in [
+        "fig2-proportional",
+        "fig2-uniform",
+        "fig3-anytime",
+        "fig3-sync",
+        "fig4-anytime",
+        "fig4-fnb",
+        "fig4-gc",
+        "fig5-anytime",
+        "fig5-fnb",
+        "fig5-sync",
+        "fig6-anytime",
+        "fig6-generalized",
+    ] {
+        epoch_bench(&mut b, preset);
+    }
+
+    // Table I: the placement computation itself.
+    b.run("figure/table1 assignment N=20 S=4", || {
+        let asg = anytime_sgd::partition::Assignment::new(20, 4);
+        asg.validate().unwrap();
+        asg.matrix().len()
+    });
+}

@@ -1,0 +1,76 @@
+//! PJRT runtime benchmarks: dispatch overhead and the K-step block
+//! amortization that motivates DESIGN.md's "variable work under static
+//! shapes" scheme. Skips (with a notice) if artifacts are missing.
+
+use anytime_sgd::backend::{Consts, WorkerCompute, XlaWorker};
+use anytime_sgd::benchkit::{black_box, Bench};
+use anytime_sgd::data::synthetic_linreg;
+use anytime_sgd::partition::{materialize_shards, Assignment};
+use anytime_sgd::rng::Xoshiro256pp;
+use anytime_sgd::runtime::Engine;
+use std::path::PathBuf;
+use std::sync::Arc;
+
+fn main() {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        println!("SKIP bench_runtime: no artifacts/ — run `make artifacts`");
+        return;
+    }
+    let engine = Arc::new(Engine::new(&dir).expect("engine"));
+    let mut b = Bench::new();
+    let mut rng = Xoshiro256pp::seed_from_u64(2);
+
+    // Canonical AOT shape: shard 5000x200, batch 32.
+    let ds = synthetic_linreg(50_000, 200, 1e-3, 7);
+    let shards = materialize_shards(&ds, &Assignment::new(10, 0));
+    let shard = Arc::new(shards.into_iter().next().unwrap());
+    let mut xw = XlaWorker::new(engine.clone(), &shard).expect("xla worker");
+    let mut x0 = vec![0.0f32; 200];
+    rng.fill_normal_f32(&mut x0);
+    let consts = Consts::constant(1e-3);
+
+    // Per-step cost through the K=1 artifact (dispatch-bound)...
+    let idx1: Vec<u32> = (0..32).map(|_| rng.index(5_000) as u32).collect();
+    b.run_with_throughput("runtime/linreg_step K=1 (per step)", 1.0, || {
+        xw.run_steps(black_box(&x0), black_box(&idx1), 0.0, consts).x_k[0]
+    });
+
+    // ...vs the K=32 block (amortized).
+    let idx32: Vec<u32> = (0..32 * 32).map(|_| rng.index(5_000) as u32).collect();
+    b.run_with_throughput("runtime/linreg_step K=32 (per 32 steps)", 32.0, || {
+        xw.run_steps(black_box(&x0), black_box(&idx32), 0.0, consts).x_k[0]
+    });
+
+    // A realistic anytime epoch quantum: q = 157 (one pass).
+    let idx157: Vec<u32> = (0..157 * 32).map(|_| rng.index(5_000) as u32).collect();
+    b.run_with_throughput("runtime/linreg_step q=157 (greedy 32/8/1)", 157.0, || {
+        xw.run_steps(black_box(&x0), black_box(&idx157), 0.0, consts).x_k[0]
+    });
+
+    // Eval artifact (full-dataset cost + norm error).
+    let x_star = ds.x_star.clone().unwrap();
+    let mut ax_star = vec![0.0f32; ds.rows()];
+    ds.predict_into(&x_star, &mut ax_star);
+    let mut xe = anytime_sgd::backend::XlaEvaluator::new(engine.clone(), &ds.a, &ds.y, &ax_star)
+        .expect("xla eval");
+    {
+        use anytime_sgd::backend::Evaluator;
+        b.run("runtime/linreg_eval 50k x 200", || xe.eval(black_box(&x0)).cost);
+    }
+
+    // Raw upload overhead for the per-call inputs.
+    b.run("runtime/upload x (200 f32)", || {
+        engine.upload_f32(black_box(&x0), &[200]).unwrap()
+    });
+    let idx_i32: Vec<i32> = idx32.iter().map(|&v| v as i32).collect();
+    b.run("runtime/upload idx (32x32 i32)", || {
+        engine.upload_i32(black_box(&idx_i32), &[32, 32]).unwrap()
+    });
+
+    // Native-vs-XLA epoch-equivalent block for the crossover analysis.
+    let mut nw = anytime_sgd::backend::NativeWorker::new(shard, 32);
+    b.run_with_throughput("runtime/native q=157 (same work)", 157.0, || {
+        nw.run_steps(black_box(&x0), black_box(&idx157), 0.0, consts).x_k[0]
+    });
+}

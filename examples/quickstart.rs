@@ -1,0 +1,68 @@
+//! Quickstart: Anytime-Gradients vs classical Sync-SGD on a small
+//! synthetic regression, through the public API.
+//!
+//! ```bash
+//! cargo run --release --example quickstart              # native backend
+//! cargo run --release --example quickstart -- --xla     # AOT/PJRT path
+//! ```
+//!
+//! With `--xla`, worker SGD blocks execute the AOT-compiled HLO via the
+//! PJRT runtime (requires `make artifacts`); numerics match the native
+//! backend to float tolerance.
+
+use anytime_sgd::config::{Backend, CombinePolicy, Iterate, MethodSpec, RunConfig};
+use anytime_sgd::coordinator::{build_dataset, Trainer};
+use std::sync::Arc;
+
+fn main() -> anyhow::Result<()> {
+    let xla = std::env::args().any(|a| a == "--xla");
+
+    // One config, two protocols. The preset matches the Fig-3 setup:
+    // 10 workers, EC2-like stragglers, S=0.
+    let mut cfg = RunConfig::preset("fig3-anytime")?;
+    cfg.backend = if xla { Backend::Xla } else { Backend::Native };
+
+    let ds = Arc::new(build_dataset(&cfg));
+    println!("dataset: {} ({} rows x {} dims)", ds.name, ds.rows(), ds.dim());
+    println!("backend: {:?}\n", cfg.backend);
+
+    // Anytime-Gradients: fixed 200-second epochs, Theorem-3 combining.
+    cfg.method = MethodSpec::Anytime {
+        t: 200.0,
+        combine: CombinePolicy::Proportional,
+        iterate: Iterate::Last,
+    };
+    let anytime = Trainer::with_dataset(cfg.clone(), ds.clone())?.run();
+
+    // Classical Sync-SGD: fixed work per epoch, wait for the slowest.
+    cfg.method = MethodSpec::SyncSgd { steps_per_epoch: 156 };
+    cfg.name = "quickstart-sync".into();
+    let sync = Trainer::with_dataset(cfg, ds)?.run();
+
+    println!("{:>6} {:>14} {:>12}   {:>14} {:>12}", "epoch", "anytime t(s)", "err", "sync t(s)", "err");
+    for i in 0..anytime.trace.points.len().max(sync.trace.points.len()) {
+        let a = anytime.trace.points.get(i);
+        let s = sync.trace.points.get(i);
+        println!(
+            "{:>6} {:>14} {:>12}   {:>14} {:>12}",
+            i,
+            a.map(|p| format!("{:.0}", p.time)).unwrap_or_default(),
+            a.map(|p| format!("{:.3e}", p.norm_err)).unwrap_or_default(),
+            s.map(|p| format!("{:.0}", p.time)).unwrap_or_default(),
+            s.map(|p| format!("{:.3e}", p.norm_err)).unwrap_or_default(),
+        );
+    }
+
+    let target = 0.3;
+    println!(
+        "\ntime to reach normalized error {target}: anytime {} vs sync {}",
+        anytime
+            .trace
+            .time_to_error(target)
+            .map(|t| format!("{t:.0}s"))
+            .unwrap_or("n/a".into()),
+        sync.trace.time_to_error(target).map(|t| format!("{t:.0}s")).unwrap_or("n/a".into()),
+    );
+    println!("(anytime exploits straggler work instead of waiting for it)");
+    Ok(())
+}

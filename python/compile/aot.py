@@ -1,0 +1,271 @@
+"""AOT pipeline: lower the L2/L1 programs to HLO text + manifest.
+
+Runs ONCE at build time (``make artifacts``). The rust runtime loads the
+emitted ``artifacts/*.hlo.txt`` via ``HloModuleProto::from_text_file``
+and keeps a compiled executable per program.
+
+Interchange format is HLO **text**, not serialized HloModuleProto: jax
+>= 0.5 emits protos with 64-bit instruction ids which the xla crate's
+xla_extension 0.5.1 rejects; the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md). We lower via
+stablehlo -> XlaComputation with ``return_tuple=True`` and the rust side
+unwraps the tuple.
+
+Usage::
+
+    python -m compile.aot --out-dir ../artifacts [--lm tiny,small] [--spec extra.json]
+
+The manifest (``manifest.json``) records every program's input/output
+shapes and dtypes plus its semantic parameters; the rust runtime treats
+the manifest as the source of truth for argument order.
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model, transformer
+
+DTYPE_NAMES = {jnp.float32.dtype: "f32", jnp.int32.dtype: "i32"}
+
+
+def to_hlo_text(lowered) -> str:
+    """jax lowering -> XLA HLO text (see module docstring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _io_entry(name, spec):
+    return {"name": name, "shape": list(spec.shape), "dtype": DTYPE_NAMES[spec.dtype]}
+
+
+class Emitter:
+    """Collects lowered programs + manifest rows, writes them out."""
+
+    def __init__(self, out_dir: str):
+        self.out_dir = out_dir
+        self.entries = []
+        os.makedirs(out_dir, exist_ok=True)
+
+    def emit(self, name, kind, fn, arg_specs, params, output_names):
+        """Lower ``fn`` at ``arg_specs`` and record a manifest entry."""
+        lowered = jax.jit(fn).lower(*(s for _, s in arg_specs))
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(self.out_dir, fname), "w") as f:
+            f.write(text)
+        out_avals = lowered.out_info
+        # out_info is a pytree of ShapeDtypeStruct matching fn's output.
+        flat_outs, _ = jax.tree_util.tree_flatten(out_avals)
+        assert len(flat_outs) == len(output_names), (
+            f"{name}: {len(flat_outs)} outputs, {len(output_names)} names"
+        )
+        self.entries.append(
+            {
+                "name": name,
+                "file": fname,
+                "kind": kind,
+                "params": params,
+                "inputs": [_io_entry(n, s) for n, s in arg_specs],
+                "outputs": [_io_entry(n, s) for n, s in zip(output_names, flat_outs)],
+            }
+        )
+        print(f"  wrote {fname} ({len(text)} chars)")
+
+    def finish(self):
+        manifest = {"version": 1, "artifacts": self.entries}
+        path = os.path.join(self.out_dir, "manifest.json")
+        with open(path, "w") as f:
+            json.dump(manifest, f, indent=2, sort_keys=True)
+        print(f"  wrote manifest.json ({len(self.entries)} artifacts)")
+
+
+def f32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def i32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.int32)
+
+
+def emit_linreg(em: Emitter, rows: int, dim: int, batch: int, ks=(1, 8, 32)):
+    """SGD block programs for one (shard-rows, dim, batch) shape."""
+    for k in ks:
+        block = model.make_sgd_block(k)
+        em.emit(
+            f"linreg_step_r{rows}_d{dim}_b{batch}_k{k}",
+            "linreg_step",
+            block,
+            [
+                ("a", f32(rows, dim)),
+                ("y", f32(rows)),
+                ("x0", f32(dim)),
+                ("idx", i32(k, batch)),
+                ("t0", f32(1)),
+                ("consts", f32(3)),
+            ],
+            {"rows": rows, "dim": dim, "batch": batch, "k": k},
+            ["x_k", "x_bar"],
+        )
+
+
+def emit_logreg(em: Emitter, rows: int, dim: int, batch: int, ks=(1, 8, 32)):
+    """Logistic-regression SGD block programs (paper eq. 1's other case)."""
+    for k in ks:
+        block = model.make_logreg_block(k)
+        em.emit(
+            f"logreg_step_r{rows}_d{dim}_b{batch}_k{k}",
+            "logreg_step",
+            block,
+            [
+                ("a", f32(rows, dim)),
+                ("y", f32(rows)),
+                ("x0", f32(dim)),
+                ("idx", i32(k, batch)),
+                ("t0", f32(1)),
+                ("consts", f32(3)),
+            ],
+            {"rows": rows, "dim": dim, "batch": batch, "k": k},
+            ["x_k", "x_bar"],
+        )
+
+
+def emit_logreg_eval(em: Emitter, m: int, dim: int):
+    ev = model.make_logreg_eval()
+    em.emit(
+        f"logreg_eval_m{m}_d{dim}",
+        "logreg_eval",
+        ev,
+        [("a", f32(m, dim)), ("y", f32(m)), ("ax_star", f32(m)), ("x", f32(dim))],
+        {"m": m, "dim": dim},
+        ["nll", "err_num", "err_den"],
+    )
+
+
+def emit_eval(em: Emitter, m: int, dim: int):
+    ev = model.make_eval()
+    em.emit(
+        f"linreg_eval_m{m}_d{dim}",
+        "linreg_eval",
+        ev,
+        [("a", f32(m, dim)), ("y", f32(m)), ("ax_star", f32(m)), ("x", f32(dim))],
+        {"m": m, "dim": dim},
+        ["cost", "err_num", "err_den"],
+    )
+
+
+def emit_combine(em: Emitter, n: int, dim: int):
+    comb = model.make_combine()
+    em.emit(
+        f"combine_n{n}_d{dim}",
+        "combine",
+        comb,
+        [("xs", f32(n, dim)), ("lam", f32(n))],
+        {"n": n, "dim": dim},
+        ["x"],
+    )
+
+
+LM_CONFIGS = {"tiny": transformer.TINY, "small": transformer.SMALL, "large": transformer.LARGE}
+
+
+def emit_lm(em: Emitter, size: str):
+    cfg = LM_CONFIGS[size]
+    spec = transformer.param_spec(cfg)
+    params_specs = [(name, f32(*shape)) for name, shape in spec]
+    step = transformer.make_train_step(cfg)
+    em.emit(
+        f"lm_step_{size}",
+        "lm_step",
+        step,
+        [
+            ("tokens", i32(cfg.batch, cfg.seq_len)),
+            ("targets", i32(cfg.batch, cfg.seq_len)),
+            ("lr", f32(1)),
+        ]
+        + params_specs,
+        {
+            "size": size,
+            "vocab": cfg.vocab,
+            "seq_len": cfg.seq_len,
+            "d_model": cfg.d_model,
+            "n_layer": cfg.n_layer,
+            "n_head": cfg.n_head,
+            "batch": cfg.batch,
+            "n_params": cfg.n_params(),
+            "param_order": [name for name, _ in spec],
+        },
+        ["loss"] + [name for name, _ in spec],
+    )
+    loss_fn = transformer.make_loss(cfg)
+
+    def loss_wrap(tokens, targets, *params):
+        return (loss_fn(list(params), tokens, targets),)
+
+    em.emit(
+        f"lm_loss_{size}",
+        "lm_loss",
+        loss_wrap,
+        [("tokens", i32(cfg.batch, cfg.seq_len)), ("targets", i32(cfg.batch, cfg.seq_len))]
+        + params_specs,
+        {"size": size, "n_params": cfg.n_params()},
+        ["loss"],
+    )
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument(
+        "--lm",
+        default="tiny,small",
+        help="comma-separated LM sizes to emit (tiny,small,large or 'none')",
+    )
+    ap.add_argument(
+        "--spec",
+        default=None,
+        help="JSON file with extra linreg shapes: "
+        '{"linreg": [{"rows":..,"dim":..,"batch":..}], "eval": [...], "combine": [...]}',
+    )
+    args = ap.parse_args()
+
+    em = Emitter(args.out_dir)
+    print("AOT: default linreg set")
+    # Default set — matches the rust config presets for XLA-backend runs:
+    #   quickstart / fig3-style: m=50k, d=200, N=10, S=0 -> shard 5000 rows.
+    emit_linreg(em, rows=5000, dim=200, batch=32)
+    emit_eval(em, m=50_000, dim=200)
+    emit_combine(em, n=10, dim=200)
+    print("AOT: logistic regression set")
+    emit_logreg(em, rows=5000, dim=200, batch=32)
+    emit_logreg_eval(em, m=50_000, dim=200)
+
+    if args.spec:
+        with open(args.spec) as f:
+            extra = json.load(f)
+        for e in extra.get("linreg", []):
+            emit_linreg(em, e["rows"], e["dim"], e["batch"], tuple(e.get("ks", (1, 8, 32))))
+        for e in extra.get("logreg", []):
+            emit_logreg(em, e["rows"], e["dim"], e["batch"], tuple(e.get("ks", (1, 8, 32))))
+        for e in extra.get("eval", []):
+            emit_eval(em, e["m"], e["dim"])
+        for e in extra.get("combine", []):
+            emit_combine(em, e["n"], e["dim"])
+
+    if args.lm != "none":
+        for size in [s for s in args.lm.split(",") if s]:
+            print(f"AOT: lm {size}")
+            emit_lm(em, size)
+
+    em.finish()
+
+
+if __name__ == "__main__":
+    main()

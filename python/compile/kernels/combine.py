@@ -1,0 +1,49 @@
+"""L1 Pallas kernel: the master's weighted combine (Algorithm 1, step 15).
+
+``x = sum_v lambda_v x_v`` over the worker outputs — a (N,) x (N, d)
+contraction tiled over d. N is small (10-20 workers) so each grid
+program holds an (N, dt) block plus the (N,) weights in VMEM.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .linreg import pick_tile
+
+__all__ = ["combine"]
+
+
+def _combine_kernel(x_ref, lam_ref, o_ref):
+    o_ref[...] = lam_ref[...] @ x_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("tile",))
+def combine(xs, lam, *, tile=None):
+    """Weighted combination of worker parameter vectors.
+
+    Args:
+      xs:  (n_workers, d) stacked worker outputs ``x_vt``.
+      lam: (n_workers,) combining factors ``lambda_v`` (the master zeroes
+           entries for workers outside the received set, per step 13).
+
+    Returns: (d,) combined parameter vector ``x_t``.
+    """
+    n, d = xs.shape
+    dt = tile or pick_tile(d)
+    assert d % dt == 0, f"tile {dt} must divide d={d}"
+    grid = (d // dt,)
+    lam = jnp.asarray(lam, dtype=xs.dtype)
+    return pl.pallas_call(
+        _combine_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((n, dt), lambda j: (0, j)),
+            pl.BlockSpec((n,), lambda j: (0,)),
+        ],
+        out_specs=pl.BlockSpec((dt,), lambda j: (j,)),
+        out_shape=jax.ShapeDtypeStruct((d,), xs.dtype),
+        interpret=True,
+    )(xs, lam)

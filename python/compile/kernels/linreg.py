@@ -1,0 +1,153 @@
+"""L1 Pallas kernels: the linear-regression SGD hot spot.
+
+The paper's per-worker inner loop (Algorithm 2, step 7) is
+
+    x_{t} = x_{t-1} - (1/eta_t) * grad f(x_{t-1}, a_t)
+
+with, for least squares on a minibatch ``B`` (batch x dim) and labels
+``y``::
+
+    grad = (2/batch) * B^T (B x - y)
+
+This module implements that step as two Pallas kernels tiled over the
+feature axis ``d`` (the only axis that grows large — d = 1000 at paper
+scale):
+
+* :func:`residual` — ``r = B x - y``, a grid over d-tiles accumulating
+  the partial matvec into ``r`` (first tile also subtracts ``y``).
+* :func:`apply_update` — per d-tile ``x_tile -= lr * (2/b) * B_tile^T r``.
+
+TPU mapping (DESIGN.md §Hardware adaptation): each grid program touches a
+``(b, dt)`` block of B, the ``dt`` slice of x, and the ``(b,)`` residual —
+VMEM footprint ``(b*dt + b + dt) * 4`` bytes, far under the ~16 MB VMEM
+for all shapes we ship; the ``(b,dt) @ (dt,)`` contraction is MXU-shaped.
+On CPU we run ``interpret=True`` (Mosaic custom-calls cannot execute on
+the CPU PJRT plugin) — grid programs execute sequentially, making the
+accumulation pattern in :func:`residual` well-defined.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["pick_tile", "residual", "apply_update", "sgd_step"]
+
+
+def pick_tile(d: int, max_tile: int = 256) -> int:
+    """Largest divisor of ``d`` in ``[32, max_tile]``, else ``d`` itself.
+
+    Pallas BlockSpecs here require the feature dim to split evenly; all
+    shipped shapes (90, 200, 1000, ...) have a convenient divisor. For
+    awkward ``d`` (primes > max_tile) we fall back to a single tile
+    rather than degenerate tiny tiles — many tiny grid programs would
+    accumulate the residual in the output dtype (catastrophic in bf16)
+    and waste dispatch.
+    """
+    if d <= max_tile:
+        return d
+    for t in range(max_tile, 31, -1):
+        if d % t == 0:
+            return t
+    return d
+
+
+def _residual_kernel(b_ref, x_ref, y_ref, r_ref):
+    # Accumulate in f32 regardless of the input dtype (the standard TPU
+    # kernel pattern): per-tile partials rounded to bf16 would compound
+    # across the grid.
+    j = pl.program_id(0)
+    partial = (b_ref[...].astype(jnp.float32)) @ (x_ref[...].astype(jnp.float32))
+
+    @pl.when(j == 0)
+    def _first():
+        r_ref[...] = partial - y_ref[...].astype(jnp.float32)
+
+    @pl.when(j > 0)
+    def _rest():
+        r_ref[...] = r_ref[...] + partial
+
+
+@functools.partial(jax.jit, static_argnames=("tile",))
+def residual(bb, x, yb, *, tile=None):
+    """``r = bb @ x - yb`` via a d-tiled Pallas grid.
+
+    Args:
+      bb: (batch, d) minibatch rows.
+      x:  (d,) parameter vector.
+      yb: (batch,) labels.
+      tile: d-tile width (default :func:`pick_tile`).
+
+    Returns: (batch,) residual.
+    """
+    b, d = bb.shape
+    dt = tile or pick_tile(d)
+    assert d % dt == 0, f"tile {dt} must divide d={d}"
+    grid = (d // dt,)
+    return pl.pallas_call(
+        _residual_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((b, dt), lambda j: (0, j)),
+            pl.BlockSpec((dt,), lambda j: (j,)),
+            pl.BlockSpec((b,), lambda j: (0,)),
+        ],
+        out_specs=pl.BlockSpec((b,), lambda j: (0,)),
+        # f32 accumulator output; callers cast if they need the I/O dtype.
+        out_shape=jax.ShapeDtypeStruct((b,), jnp.float32),
+        interpret=True,
+    )(bb, x, yb)
+
+
+def _update_kernel(b_ref, r_ref, x_ref, scale_ref, o_ref):
+    # o = x_tile - scale * (r @ B_tile); scale = lr * 2 / batch.
+    # f32 math, single rounding to the output dtype.
+    upd = r_ref[...].astype(jnp.float32) @ b_ref[...].astype(jnp.float32)
+    o_ref[...] = (
+        x_ref[...].astype(jnp.float32) - scale_ref[...].astype(jnp.float32)[0] * upd
+    ).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("tile",))
+def apply_update(bb, r, x, scale, *, tile=None):
+    """``x' = x - scale * bb^T r`` via a d-tiled Pallas grid.
+
+    Args:
+      bb: (batch, d) minibatch rows.
+      r: (batch,) residual from :func:`residual`.
+      x: (d,) parameters.
+      scale: (1,) f32 — ``lr * 2 / batch`` (runtime-settable).
+      tile: d-tile width.
+
+    Returns: (d,) updated parameters.
+    """
+    b, d = bb.shape
+    dt = tile or pick_tile(d)
+    assert d % dt == 0, f"tile {dt} must divide d={d}"
+    grid = (d // dt,)
+    return pl.pallas_call(
+        _update_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((b, dt), lambda j: (0, j)),
+            pl.BlockSpec((b,), lambda j: (0,)),
+            pl.BlockSpec((dt,), lambda j: (j,)),
+            pl.BlockSpec((1,), lambda j: (0,)),
+        ],
+        out_specs=pl.BlockSpec((dt,), lambda j: (j,)),
+        out_shape=jax.ShapeDtypeStruct((d,), x.dtype),
+        interpret=True,
+    )(bb, r, x, scale)
+
+
+def sgd_step(x, bb, yb, lr, *, tile=None):
+    """One fused minibatch least-squares SGD step (Algorithm 2, step 7).
+
+    ``x - lr * (2/b) * bb^T (bb x - yb)`` — residual and update both run
+    as Pallas kernels so the whole step lowers into the AOT HLO.
+    """
+    b = bb.shape[0]
+    r = residual(bb, x, yb, tile=tile)  # f32 accumulator
+    scale = jnp.asarray(lr, jnp.float32).reshape(1) * (2.0 / b)
+    return apply_update(bb, r, x, scale, tile=tile)

@@ -1,0 +1,68 @@
+"""L1 Pallas kernels: logistic-regression SGD step.
+
+The paper's problem statement (eq. 1) names logistic regression next to
+linear regression as the canonical instance. The per-step update for
+labels y ∈ {0,1} and minibatch ``B`` is::
+
+    p    = sigmoid(B x)
+    grad = (1/b) * B^T (p - y)
+    x'   = x - lr * grad
+
+Tiling mirrors :mod:`linreg`: a d-tiled accumulation pass produces the
+logits ``z = B x`` (Pallas), the sigmoid runs as plain jnp glue (L2),
+and the update pass reuses the linreg ``apply_update`` kernel with
+``scale = lr / b`` over the probability residual ``p - y``.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .linreg import apply_update, pick_tile
+
+__all__ = ["logits", "sgd_step"]
+
+
+def _logits_kernel(b_ref, x_ref, z_ref):
+    # f32 accumulation across tiles (see linreg._residual_kernel).
+    j = pl.program_id(0)
+    partial = b_ref[...].astype(jnp.float32) @ x_ref[...].astype(jnp.float32)
+
+    @pl.when(j == 0)
+    def _first():
+        z_ref[...] = partial
+
+    @pl.when(j > 0)
+    def _rest():
+        z_ref[...] = z_ref[...] + partial
+
+
+@functools.partial(jax.jit, static_argnames=("tile",))
+def logits(bb, x, *, tile=None):
+    """``z = bb @ x`` via a d-tiled Pallas grid (batch, d) x (d,) -> (batch,)."""
+    b, d = bb.shape
+    dt = tile or pick_tile(d)
+    assert d % dt == 0, f"tile {dt} must divide d={d}"
+    return pl.pallas_call(
+        _logits_kernel,
+        grid=(d // dt,),
+        in_specs=[
+            pl.BlockSpec((b, dt), lambda j: (0, j)),
+            pl.BlockSpec((dt,), lambda j: (j,)),
+        ],
+        out_specs=pl.BlockSpec((b,), lambda j: (0,)),
+        out_shape=jax.ShapeDtypeStruct((b,), jnp.float32),
+        interpret=True,
+    )(bb, x)
+
+
+def sgd_step(x, bb, yb, lr, *, tile=None):
+    """One logistic-regression SGD step; both matvecs run as Pallas
+    kernels, the sigmoid is jnp glue between them."""
+    b = bb.shape[0]
+    z = logits(bb, x, tile=tile)  # f32
+    resid = jax.nn.sigmoid(z) - yb.astype(jnp.float32)  # p - y
+    scale = jnp.asarray(lr, jnp.float32).reshape(1) / b
+    return apply_update(bb, resid, x, scale, tile=tile)

@@ -1,0 +1,62 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+Every kernel in this package has a reference implementation here; pytest
+asserts allclose between the two across shape/dtype sweeps (hypothesis).
+These are the CORE correctness signal for L1.
+"""
+
+import jax.numpy as jnp
+
+__all__ = ["residual_ref", "sgd_step_ref", "combine_ref", "sgd_chain_ref", "logreg_step_ref", "logreg_chain_ref"]
+
+
+def residual_ref(bb, x, yb):
+    """``r = bb @ x - yb``."""
+    return bb @ x - yb
+
+
+def sgd_step_ref(x, bb, yb, lr):
+    """One minibatch least-squares SGD step, textbook form."""
+    b = bb.shape[0]
+    r = bb @ x - yb
+    grad = (2.0 / b) * (bb.T @ r)
+    return x - lr * grad
+
+
+def combine_ref(xs, lam):
+    """``sum_v lam_v xs_v``."""
+    return jnp.asarray(lam, dtype=xs.dtype) @ xs
+
+
+def sgd_chain_ref(x0, a, y, idx, lrs):
+    """Reference for a K-step SGD block: step through ``idx`` rows of the
+    shard with per-step learning rates ``lrs``; returns the final iterate
+    and the running average of iterates x_1..x_K (the theory's averaged
+    output, one block's worth)."""
+    x = x0
+    xsum = jnp.zeros_like(x0)
+    for k in range(idx.shape[0]):
+        rows = idx[k]
+        x = sgd_step_ref(x, a[rows], y[rows], lrs[k])
+        xsum = xsum + x
+    return x, xsum / idx.shape[0]
+
+
+def logreg_step_ref(x, bb, yb, lr):
+    """One logistic-regression SGD step, textbook form (y in {0,1})."""
+    import jax
+    b = bb.shape[0]
+    p = jax.nn.sigmoid(bb @ x)
+    grad = (bb.T @ (p - yb)) / b
+    return x - lr * grad
+
+
+def logreg_chain_ref(x0, a, y, idx, lrs):
+    """K-step logistic SGD block reference (mirrors sgd_chain_ref)."""
+    x = x0
+    xsum = jnp.zeros_like(x0)
+    for k in range(idx.shape[0]):
+        rows = idx[k]
+        x = logreg_step_ref(x, a[rows], y[rows], lrs[k])
+        xsum = xsum + x
+    return x, xsum / idx.shape[0]

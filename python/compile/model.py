@@ -1,0 +1,163 @@
+"""L2: the JAX compute graphs the coordinator executes (build-time only).
+
+Three program families, each AOT-lowered to HLO text by :mod:`aot`:
+
+* :func:`make_sgd_block` — a K-step worker SGD block (Algorithm 2's inner
+  loop, `lax.scan` over the L1 Pallas step kernel). The worker's
+  variable step count ``q_v`` is composed at runtime from K=32 blocks
+  plus K=1 remainders by the rust coordinator.
+* :func:`make_eval` — full-dataset cost + the paper's normalized error
+  ``||A x - A x*|| / ||A x*||`` (the figures' y-axis).
+* :func:`make_combine` — the master's weighted combine (Theorem 3
+  weights are computed rust-side; this is the (N,d) contraction).
+
+Step-size schedule (Theorem 1): the update in Algorithm 2 is the prox
+form ``x_t = x_{t-1} - (1/eta_vt) grad`` with ``eta_vt = L +
+sigma*sqrt(t+1)/D``. Schedules are runtime-settable through the
+``consts`` input: ``consts = [L, sigma_over_D, base_lr]`` — if
+``sigma_over_D > 0`` the paper schedule is used with ``lr = 1/eta_t``;
+otherwise the constant ``base_lr``.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import linreg as lk
+from .kernels import logreg as gk
+from .kernels.combine import combine as pallas_combine
+
+__all__ = [
+    "learning_rate",
+    "make_sgd_block",
+    "make_logreg_block",
+    "make_eval",
+    "make_logreg_eval",
+    "make_combine",
+]
+
+
+def learning_rate(t, consts):
+    """Per-iteration learning rate.
+
+    Args:
+      t: global iteration index within the epoch (0-based), f32 scalar.
+      consts: (3,) f32 ``[L, sigma_over_D, base_lr]``.
+
+    Returns the scalar lr: ``1 / (L + sigma_over_D * sqrt(t+1))`` under
+    the paper schedule, else ``base_lr``.
+    """
+    big_l, sigma_over_d, base_lr = consts[0], consts[1], consts[2]
+    eta = big_l + sigma_over_d * jnp.sqrt(t + 1.0)
+    return jnp.where(sigma_over_d > 0.0, 1.0 / eta, base_lr)
+
+
+def make_sgd_block(k: int):
+    """Build the K-step SGD block function.
+
+    Signature of the returned function::
+
+        block(a, y, x0, idx, t0, consts) -> (x_k, xbar)
+
+    * ``a``      (rows, d) — the worker's shard (device-resident at runtime)
+    * ``y``      (rows,)   — shard labels
+    * ``x0``     (d,)      — parameter vector at block start
+    * ``idx``    (k, batch) i32 — minibatch row indices (sampled rust-side
+                  from the worker's seeded stream)
+    * ``t0``     (1,) f32  — iteration count before this block (schedule
+                  continuity across blocks)
+    * ``consts`` (3,) f32  — schedule constants, see module docstring
+
+    Returns the final iterate and the mean of iterates ``x_1..x_k``
+    (the analysis' averaged output, accumulated per-block; the rust side
+    recombines block averages into the epoch average).
+    """
+
+    def block(a, y, x0, idx, t0, consts):
+        def step(carry, it):
+            x, xsum = carry
+            rows = idx[it]
+            bb = a[rows]
+            yb = y[rows]
+            lr = learning_rate(t0[0] + it.astype(jnp.float32), consts)
+            x_new = lk.sgd_step(x, bb, yb, lr)
+            return (x_new, xsum + x_new), None
+
+        (x_k, xsum), _ = jax.lax.scan(step, (x0, jnp.zeros_like(x0)), jnp.arange(k))
+        return x_k, xsum / k
+
+    return block
+
+
+def make_logreg_block(k: int):
+    """K-step logistic-regression SGD block — same contract as
+    :func:`make_sgd_block` (a, y, x0, idx, t0, consts) -> (x_k, xbar),
+    with y in {0,1} and the logistic gradient (paper eq. 1's other
+    canonical instance)."""
+
+    def block(a, y, x0, idx, t0, consts):
+        def step(carry, it):
+            x, xsum = carry
+            rows = idx[it]
+            lr = learning_rate(t0[0] + it.astype(jnp.float32), consts)
+            x_new = gk.sgd_step(x, a[rows], y[rows], lr)
+            return (x_new, xsum + x_new), None
+
+        (x_k, xsum), _ = jax.lax.scan(step, (x0, jnp.zeros_like(x0)), jnp.arange(k))
+        return x_k, xsum / k
+
+    return block
+
+
+def make_logreg_eval():
+    """Logistic eval: ``ev(a, y, ax_star, x) -> (nll, err_num, err_den)``.
+
+    * ``nll`` — total negative log-likelihood (the logistic F(x), eq. 1),
+    * the normalized-error pair reuses the linear geometry
+      ``||A x − A x*|| / ||A x*||`` so logistic figures share the y-axis.
+    """
+
+    def ev(a, y, ax_star, x):
+        z = a @ x
+        # Stable NLL: log(1+exp(z)) - y*z = softplus(z) - y*z.
+        nll = jnp.sum(jax.nn.softplus(z) - y * z)
+        derr = z - ax_star
+        err_num = jnp.sqrt(jnp.sum(derr * derr))
+        err_den = jnp.sqrt(jnp.sum(ax_star * ax_star))
+        return nll, err_num, err_den
+
+    return ev
+
+
+def make_eval():
+    """Build the evaluation function.
+
+    Signature::
+
+        ev(a, y, ax_star, x) -> (cost, err_num, err_den)
+
+    * ``cost``    = sum((a@x - y)^2)             — the paper's F(x), eq. (1)
+    * ``err_num`` = ||a@x - ax_star||            — numerator of Fig. 2-5's
+    * ``err_den`` = ||ax_star||                    normalized error
+    ``ax_star`` is precomputed once rust-side (= A x* for synthetic sets,
+    or A x_lsq for real data).
+    """
+
+    def ev(a, y, ax_star, x):
+        pred = a @ x
+        dcost = pred - y
+        cost = jnp.sum(dcost * dcost)
+        derr = pred - ax_star
+        err_num = jnp.sqrt(jnp.sum(derr * derr))
+        err_den = jnp.sqrt(jnp.sum(ax_star * ax_star))
+        return cost, err_num, err_den
+
+    return ev
+
+
+def make_combine():
+    """Build the master combine: ``(xs (n,d), lam (n,)) -> (d,)``."""
+
+    def comb(xs, lam):
+        return (pallas_combine(xs, lam),)
+
+    return comb

@@ -1,0 +1,186 @@
+"""L2: decoder-only transformer LM for the end-to-end training driver.
+
+The paper's workload is linear regression; the system-level deliverable
+additionally requires an end-to-end driver that trains a real model under
+the anytime coordination protocol. This module defines a GPT-style
+byte-level LM whose *train step* (forward + backward + SGD update) is AOT
+lowered to a single HLO program; the rust coordinator runs time-budgeted
+blocks of train steps per worker and anytime-combines the parameter sets
+(weighted by realized step counts, exactly as for linear regression).
+
+Parameters travel as a flat, documented list of arrays (PJRT argument
+order must be stable for the rust runtime): see :func:`param_spec`.
+
+Plain SGD (no momentum) keeps the optimizer state stateless, which is
+what makes parameter-vector averaging across workers meaningful — the
+same property the paper's method relies on.
+"""
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["LMConfig", "param_spec", "init_params", "make_train_step", "make_loss"]
+
+
+@dataclasses.dataclass(frozen=True)
+class LMConfig:
+    """Transformer hyperparameters (all static at AOT time)."""
+
+    vocab: int = 256
+    seq_len: int = 128
+    d_model: int = 256
+    n_layer: int = 4
+    n_head: int = 8
+    batch: int = 8
+
+    @property
+    def d_head(self) -> int:
+        assert self.d_model % self.n_head == 0
+        return self.d_model // self.n_head
+
+    @property
+    def d_ff(self) -> int:
+        return 4 * self.d_model
+
+    def n_params(self) -> int:
+        """Total trainable parameter count."""
+        return sum(int(math.prod(shape)) for _, shape in param_spec(self))
+
+
+# Canonical configs used by artifacts + examples.
+TINY = LMConfig(vocab=256, seq_len=32, d_model=64, n_layer=2, n_head=2, batch=4)
+SMALL = LMConfig(vocab=256, seq_len=128, d_model=256, n_layer=4, n_head=8, batch=8)
+LARGE = LMConfig(vocab=256, seq_len=256, d_model=768, n_layer=12, n_head=12, batch=4)
+
+
+def param_spec(cfg: LMConfig):
+    """The flat parameter layout: ordered (name, shape) pairs.
+
+    The rust runtime addresses parameters by position; this order is the
+    contract (also dumped into the artifact manifest).
+    """
+    spec = [
+        ("tok_emb", (cfg.vocab, cfg.d_model)),
+        ("pos_emb", (cfg.seq_len, cfg.d_model)),
+    ]
+    for layer in range(cfg.n_layer):
+        p = f"h{layer}."
+        spec += [
+            (p + "ln1.scale", (cfg.d_model,)),
+            (p + "ln1.bias", (cfg.d_model,)),
+            (p + "attn.wqkv", (cfg.d_model, 3 * cfg.d_model)),
+            (p + "attn.bqkv", (3 * cfg.d_model,)),
+            (p + "attn.wo", (cfg.d_model, cfg.d_model)),
+            (p + "attn.bo", (cfg.d_model,)),
+            (p + "ln2.scale", (cfg.d_model,)),
+            (p + "ln2.bias", (cfg.d_model,)),
+            (p + "mlp.wi", (cfg.d_model, cfg.d_ff)),
+            (p + "mlp.bi", (cfg.d_ff,)),
+            (p + "mlp.wo", (cfg.d_ff, cfg.d_model)),
+            (p + "mlp.bo", (cfg.d_model,)),
+        ]
+    spec += [
+        ("lnf.scale", (cfg.d_model,)),
+        ("lnf.bias", (cfg.d_model,)),
+    ]
+    # LM head is tied to tok_emb (GPT-2 style) — no separate matrix.
+    return spec
+
+
+def init_params(cfg: LMConfig, seed: int = 0):
+    """GPT-2-style init: normal(0, 0.02) weights, zero biases, unit LN."""
+    key = jax.random.PRNGKey(seed)
+    params = []
+    for name, shape in param_spec(cfg):
+        key, sub = jax.random.split(key)
+        if name.endswith(".bias") or name.endswith(".bqkv") or name.endswith(".bo") or name.endswith(".bi"):
+            params.append(jnp.zeros(shape, jnp.float32))
+        elif name.endswith(".scale"):
+            params.append(jnp.ones(shape, jnp.float32))
+        else:
+            scale = 0.02
+            if name.endswith("attn.wo") or name.endswith("mlp.wo"):
+                # Residual-branch scaling per GPT-2.
+                scale = 0.02 / math.sqrt(2 * cfg.n_layer)
+            params.append(scale * jax.random.normal(sub, shape, jnp.float32))
+    return params
+
+
+def _layer_norm(x, scale, bias, eps=1e-5):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps) * scale + bias
+
+
+def _attention(x, wqkv, bqkv, wo, bo, cfg: LMConfig):
+    b, l, d = x.shape
+    qkv = x @ wqkv + bqkv  # (b, l, 3d)
+    q, k, v = jnp.split(qkv, 3, axis=-1)
+
+    def heads(t):
+        return t.reshape(b, l, cfg.n_head, cfg.d_head).transpose(0, 2, 1, 3)
+
+    q, k, v = heads(q), heads(k), heads(v)  # (b, h, l, dh)
+    att = (q @ k.transpose(0, 1, 3, 2)) / math.sqrt(cfg.d_head)  # (b, h, l, l)
+    mask = jnp.tril(jnp.ones((l, l), bool))
+    att = jnp.where(mask, att, -1e9)
+    att = jax.nn.softmax(att, axis=-1)
+    out = (att @ v).transpose(0, 2, 1, 3).reshape(b, l, d)
+    return out @ wo + bo
+
+
+def _forward(cfg: LMConfig, params, tokens):
+    """Logits (batch, seq, vocab) from token ids (batch, seq)."""
+    it = iter(params)
+    nxt = lambda: next(it)  # noqa: E731
+    tok_emb = nxt()
+    pos_emb = nxt()
+    x = tok_emb[tokens] + pos_emb[None, : tokens.shape[1]]
+    for _ in range(cfg.n_layer):
+        ln1s, ln1b = nxt(), nxt()
+        wqkv, bqkv, wo, bo = nxt(), nxt(), nxt(), nxt()
+        ln2s, ln2b = nxt(), nxt()
+        wi, bi, wmo, bmo = nxt(), nxt(), nxt(), nxt()
+        h = _layer_norm(x, ln1s, ln1b)
+        x = x + _attention(h, wqkv, bqkv, wo, bo, cfg)
+        h = _layer_norm(x, ln2s, ln2b)
+        x = x + (jax.nn.gelu(h @ wi + bi) @ wmo + bmo)
+    lnfs, lnfb = nxt(), nxt()
+    x = _layer_norm(x, lnfs, lnfb)
+    return x @ tok_emb.T  # tied head
+
+
+def make_loss(cfg: LMConfig):
+    """``loss(params_list, tokens, targets) -> scalar`` mean cross-entropy."""
+
+    def loss_fn(params, tokens, targets):
+        logits = _forward(cfg, params, tokens)
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+        return jnp.mean(nll)
+
+    return loss_fn
+
+
+def make_train_step(cfg: LMConfig):
+    """Build the AOT train step.
+
+    Signature::
+
+        step(tokens, targets, lr, *params) -> (loss, *new_params)
+
+    tokens/targets (batch, seq) i32; lr (1,) f32; params per
+    :func:`param_spec`. Forward + backward + SGD update in one program.
+    """
+    loss_fn = make_loss(cfg)
+
+    def step(tokens, targets, lr, *params):
+        params = list(params)
+        loss, grads = jax.value_and_grad(loss_fn)(params, tokens, targets)
+        new_params = [p - lr[0] * g for p, g in zip(params, grads)]
+        return (loss, *new_params)
+
+    return step

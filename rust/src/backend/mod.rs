@@ -1,0 +1,135 @@
+//! Compute backends: the worker-side SGD block and master-side eval.
+//!
+//! Two interchangeable implementations of [`WorkerCompute`]:
+//!
+//! * [`NativeWorker`] — pure-rust linalg. Always available (no
+//!   artifacts), used by default for the figure harness where thousands
+//!   of epochs are simulated, and as the cross-check oracle.
+//! * [`XlaWorker`] — executes the AOT `linreg_step_*` artifacts through
+//!   the PJRT runtime; the shard lives device-resident. This is the
+//!   deployment path (Python never runs here).
+//!
+//! Both implement the same contract and are asserted numerically close
+//! in `rust/tests/xla_runtime.rs`.
+
+mod native;
+mod xla_backend;
+
+pub use native::{NativeEvaluator, NativeWorker};
+pub use xla_backend::{XlaEvaluator, XlaWorker};
+
+/// Step-size schedule constants (mirror of `model.learning_rate`).
+///
+/// If `sigma_over_d > 0` the paper schedule `lr_t = 1/(L + (σ/D)√(t+1))`
+/// applies (Theorem 1's `η_vt = L + σ√(t+1)/D`); otherwise constant
+/// `base_lr`.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Consts {
+    pub big_l: f32,
+    pub sigma_over_d: f32,
+    pub base_lr: f32,
+}
+
+impl Consts {
+    /// Paper schedule.
+    pub fn paper(big_l: f32, sigma_over_d: f32) -> Self {
+        Self { big_l, sigma_over_d, base_lr: 0.0 }
+    }
+
+    /// Constant learning rate.
+    pub fn constant(lr: f32) -> Self {
+        Self { big_l: 0.0, sigma_over_d: 0.0, base_lr: lr }
+    }
+
+    /// lr at iteration `t` (0-based).
+    pub fn lr(&self, t: f32) -> f32 {
+        if self.sigma_over_d > 0.0 {
+            1.0 / (self.big_l + self.sigma_over_d * (t + 1.0).sqrt())
+        } else {
+            self.base_lr
+        }
+    }
+
+    /// As the (3,) f32 `consts` artifact input.
+    pub fn to_array(self) -> [f32; 3] {
+        [self.big_l, self.sigma_over_d, self.base_lr]
+    }
+}
+
+/// The per-sample objective (paper eq. 1's canonical instances).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum Objective {
+    /// Least squares: f = (a·x − y)², grad = 2a(a·x − y).
+    #[default]
+    LeastSquares,
+    /// Logistic (y ∈ {0,1}): f = softplus(a·x) − y(a·x),
+    /// grad = a(σ(a·x) − y).
+    Logistic,
+}
+
+/// Output of a K-step block.
+#[derive(Clone, Debug)]
+pub struct StepOut {
+    /// Final iterate `x_k`.
+    pub x_k: Vec<f32>,
+    /// Mean of iterates `x_1..x_k` (the analysis' averaged output).
+    pub x_bar: Vec<f32>,
+}
+
+/// Per-worker compute engine bound to one shard (`Ā_v` of Algorithm 2).
+///
+/// Deliberately NOT `Send`-bounded: the XLA backend wraps PJRT handles
+/// (internally `Rc`) that must stay on their creating thread. Simulated-
+/// time coordination runs workers sequentially on the master thread;
+/// the threaded wallclock runner bounds `W: WorkerCompute + Send`, which
+/// the native backend satisfies.
+pub trait WorkerCompute {
+    /// Minibatch size per SGD step.
+    fn batch(&self) -> usize;
+
+    /// Shard row count (the sampling universe `m(S+1)/N`).
+    fn shard_rows(&self) -> usize;
+
+    /// Parameter dimension.
+    fn dim(&self) -> usize;
+
+    /// Run `idx.len() / batch` SGD steps starting from `x`, using the
+    /// given minibatch row indices (flattened (k, batch)), iteration
+    /// offset `t0` for schedule continuity, and schedule `consts`.
+    fn run_steps(&mut self, x: &[f32], idx: &[u32], t0: f32, consts: Consts) -> StepOut;
+}
+
+/// Master-side evaluation: cost + the paper's normalized error.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct EvalOut {
+    /// `F(x) = Σ (a_k·x − y_k)²` (eq. 1).
+    pub cost: f64,
+    /// `‖A x − A x*‖ / ‖A x*‖` — the figures' y-axis.
+    pub norm_err: f64,
+}
+
+/// Full-dataset evaluator.
+pub trait Evaluator {
+    fn eval(&mut self, x: &[f32]) -> EvalOut;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn consts_paper_schedule_decays() {
+        let c = Consts::paper(2.0, 0.5);
+        assert!((c.lr(0.0) - 1.0 / 2.5).abs() < 1e-7);
+        assert!((c.lr(8.0) - 1.0 / 3.5).abs() < 1e-7);
+        assert!(c.lr(100.0) < c.lr(0.0));
+    }
+
+    #[test]
+    fn consts_constant_schedule() {
+        let c = Consts::constant(0.01);
+        assert_eq!(c.lr(0.0), 0.01);
+        assert_eq!(c.lr(1e6), 0.01);
+        assert_eq!(c.to_array(), [0.0, 0.0, 0.01]);
+    }
+}

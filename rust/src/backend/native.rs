@@ -1,0 +1,269 @@
+//! Pure-rust backend: the SGD block and evaluator without PJRT.
+//!
+//! Numerically mirrors the L1 Pallas kernel (f32 arithmetic, same update
+//! rule), so figures produced with either backend agree to float noise.
+//! The hot loop is allocation-free: gather/residual scratch buffers are
+//! owned by the worker and reused across epochs (§Perf L3 target).
+
+use super::{Consts, EvalOut, Evaluator, Objective, StepOut, WorkerCompute};
+use crate::linalg::{axpy, dot_f32, Matrix};
+use crate::partition::Shard;
+use std::sync::Arc;
+
+/// Native per-worker compute bound to a shard.
+pub struct NativeWorker {
+    shard: Arc<Shard>,
+    batch: usize,
+    objective: Objective,
+    // Scratch (reused, never reallocated in the hot loop):
+    x: Vec<f32>,
+    xsum: Vec<f32>,
+    resid: Vec<f32>,
+}
+
+impl NativeWorker {
+    pub fn new(shard: Arc<Shard>, batch: usize) -> Self {
+        Self::with_objective(shard, batch, Objective::LeastSquares)
+    }
+
+    /// Select the per-sample objective (least squares / logistic).
+    pub fn with_objective(shard: Arc<Shard>, batch: usize, objective: Objective) -> Self {
+        assert!(batch >= 1);
+        let d = shard.a.cols();
+        Self {
+            shard,
+            batch,
+            objective,
+            x: vec![0.0; d],
+            xsum: vec![0.0; d],
+            resid: vec![0.0; batch],
+        }
+    }
+}
+
+#[inline]
+fn sigmoid(z: f32) -> f32 {
+    1.0 / (1.0 + (-z).exp())
+}
+
+impl WorkerCompute for NativeWorker {
+    fn batch(&self) -> usize {
+        self.batch
+    }
+
+    fn shard_rows(&self) -> usize {
+        self.shard.rows()
+    }
+
+    fn dim(&self) -> usize {
+        self.shard.a.cols()
+    }
+
+    fn run_steps(&mut self, x: &[f32], idx: &[u32], t0: f32, consts: Consts) -> StepOut {
+        let d = self.dim();
+        assert_eq!(x.len(), d);
+        assert_eq!(idx.len() % self.batch, 0, "idx must be k*batch");
+        let k = idx.len() / self.batch;
+        let a: &Matrix = &self.shard.a;
+        let y = &self.shard.y;
+
+        self.x.copy_from_slice(x);
+        self.xsum.fill(0.0);
+
+        for step in 0..k {
+            let rows = &idx[step * self.batch..(step + 1) * self.batch];
+            // Per-sample residual: least squares r = a·x − y (grad scale
+            // 2/b), logistic r = σ(a·x) − y (grad scale 1/b).
+            for (i, &r) in rows.iter().enumerate() {
+                let r = r as usize;
+                debug_assert!(r < a.rows(), "row index {r} out of shard");
+                let z = dot_f32(a.row(r), &self.x);
+                self.resid[i] = match self.objective {
+                    Objective::LeastSquares => z - y[r],
+                    Objective::Logistic => sigmoid(z) - y[r],
+                };
+            }
+            let lr = consts.lr(t0 + step as f32);
+            let grad_scale = match self.objective {
+                Objective::LeastSquares => 2.0,
+                Objective::Logistic => 1.0,
+            };
+            let scale = -lr * grad_scale / self.batch as f32;
+            for (i, &r) in rows.iter().enumerate() {
+                axpy(scale * self.resid[i], a.row(r as usize), &mut self.x);
+            }
+            // Running sum of iterates x_1..x_k.
+            for (s, &xv) in self.xsum.iter_mut().zip(self.x.iter()) {
+                *s += xv;
+            }
+        }
+
+        let x_bar = if k > 0 {
+            self.xsum.iter().map(|&s| s / k as f32).collect()
+        } else {
+            self.x.clone()
+        };
+        StepOut { x_k: self.x.clone(), x_bar }
+    }
+}
+
+/// Native full-dataset evaluator.
+///
+/// Precomputes `A x*` (or, for real data, `A x_ref` where `x_ref` is the
+/// least-squares solution proxy) and `‖A x*‖` once; each eval is one
+/// gemv + two reductions, parallelized over row chunks.
+pub struct NativeEvaluator {
+    a: Arc<Matrix>,
+    y: Arc<Vec<f32>>,
+    ax_star: Vec<f32>,
+    den: f64,
+    threads: usize,
+    objective: Objective,
+}
+
+impl NativeEvaluator {
+    /// `ax_star` is the reference prediction vector (A x*).
+    pub fn new(a: Arc<Matrix>, y: Arc<Vec<f32>>, ax_star: Vec<f32>) -> Self {
+        Self::with_objective(a, y, ax_star, Objective::LeastSquares)
+    }
+
+    /// Objective-aware constructor (cost = NLL under `Logistic`).
+    pub fn with_objective(
+        a: Arc<Matrix>,
+        y: Arc<Vec<f32>>,
+        ax_star: Vec<f32>,
+        objective: Objective,
+    ) -> Self {
+        assert_eq!(a.rows(), y.len());
+        assert_eq!(a.rows(), ax_star.len());
+        let den = crate::linalg::norm2(&ax_star);
+        let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
+        Self { a, y, ax_star, den, threads, objective }
+    }
+}
+
+impl Evaluator for NativeEvaluator {
+    fn eval(&mut self, x: &[f32]) -> EvalOut {
+        let m = self.a.rows();
+        const CHUNK: usize = 8192;
+        let chunks = m.div_ceil(CHUNK);
+        // Per-chunk (cost, err_num²) partial sums.
+        let parts: Vec<(f64, f64)> = crate::exec::scoped_map(chunks, self.threads, |c| {
+            let lo = c * CHUNK;
+            let hi = ((c + 1) * CHUNK).min(m);
+            let (mut cost, mut num) = (0.0f64, 0.0f64);
+            for i in lo..hi {
+                let pred = dot_f32(self.a.row(i), x) as f64;
+                cost += match self.objective {
+                    Objective::LeastSquares => {
+                        let dc = pred - self.y[i] as f64;
+                        dc * dc
+                    }
+                    Objective::Logistic => {
+                        // Stable softplus(z) − y z.
+                        let z = pred;
+                        let sp = if z > 30.0 { z } else { (1.0 + z.exp()).ln() };
+                        sp - self.y[i] as f64 * z
+                    }
+                };
+                let de = pred - self.ax_star[i] as f64;
+                num += de * de;
+            }
+            (cost, num)
+        });
+        let cost: f64 = parts.iter().map(|p| p.0).sum();
+        let num: f64 = parts.iter().map(|p| p.1).sum();
+        EvalOut { cost, norm_err: num.sqrt() / self.den.max(1e-300) }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic_linreg;
+    use crate::partition::{materialize_shards, Assignment};
+    use crate::rng::Xoshiro256pp;
+
+    fn setup(m: usize, d: usize) -> (crate::data::Dataset, Arc<Shard>) {
+        let ds = synthetic_linreg(m, d, 0.0, 5);
+        let shards = materialize_shards(&ds, &Assignment::new(1, 0));
+        (ds, Arc::new(shards.into_iter().next().unwrap()))
+    }
+
+    #[test]
+    fn run_steps_descends() {
+        let (ds, shard) = setup(256, 16);
+        let mut w = NativeWorker::new(shard, 8);
+        let x0 = vec![0.0f32; 16];
+        let mut rng = Xoshiro256pp::seed_from_u64(1);
+        let idx: Vec<u32> = (0..8 * 64).map(|_| rng.index(256) as u32).collect();
+        let out = w.run_steps(&x0, &idx, 0.0, Consts::constant(0.01));
+        assert!(ds.cost(&out.x_k) < ds.cost(&x0) * 0.5, "not descending");
+        assert_eq!(out.x_k.len(), 16);
+        assert_eq!(out.x_bar.len(), 16);
+    }
+
+    #[test]
+    fn zero_steps_is_identity() {
+        let (_, shard) = setup(64, 8);
+        let mut w = NativeWorker::new(shard, 4);
+        let x0: Vec<f32> = (0..8).map(|i| i as f32).collect();
+        let out = w.run_steps(&x0, &[], 0.0, Consts::constant(0.01));
+        assert_eq!(out.x_k, x0);
+        assert_eq!(out.x_bar, x0);
+    }
+
+    #[test]
+    fn block_composition_matches_single_run() {
+        // q = 6 in one call == q = 3+3 across two calls with t0 continuity.
+        let (_, shard) = setup(128, 12);
+        let consts = Consts::paper(2.0, 0.4);
+        let mut rng = Xoshiro256pp::seed_from_u64(2);
+        let idx: Vec<u32> = (0..6 * 4).map(|_| rng.index(128) as u32).collect();
+        let x0 = vec![0.1f32; 12];
+
+        let mut w1 = NativeWorker::new(shard.clone(), 4);
+        let full = w1.run_steps(&x0, &idx, 0.0, consts);
+
+        let mut w2 = NativeWorker::new(shard, 4);
+        let first = w2.run_steps(&x0, &idx[..12], 0.0, consts);
+        let second = w2.run_steps(&first.x_k, &idx[12..], 3.0, consts);
+        for (a, b) in full.x_k.iter().zip(second.x_k.iter()) {
+            assert!((a - b).abs() < 1e-6, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn x_bar_is_mean_of_iterates() {
+        let (_, shard) = setup(64, 4);
+        let mut w = NativeWorker::new(shard.clone(), 2);
+        let x0 = vec![0.0f32; 4];
+        let idx: Vec<u32> = vec![0, 1, 2, 3, 4, 5]; // 3 steps of batch 2
+        let consts = Consts::constant(0.05);
+        let out = w.run_steps(&x0, &idx, 0.0, consts);
+        // Recompute iterates step by step.
+        let mut w2 = NativeWorker::new(shard, 2);
+        let s1 = w2.run_steps(&x0, &idx[..2], 0.0, consts);
+        let s2 = w2.run_steps(&s1.x_k, &idx[2..4], 1.0, consts);
+        let s3 = w2.run_steps(&s2.x_k, &idx[4..], 2.0, consts);
+        for j in 0..4 {
+            let want = (s1.x_k[j] + s2.x_k[j] + s3.x_k[j]) / 3.0;
+            assert!((out.x_bar[j] - want).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn evaluator_zero_error_at_x_star() {
+        let ds = synthetic_linreg(512, 10, 0.0, 9);
+        let xs = ds.x_star.clone().unwrap();
+        let mut ax = vec![0.0f32; 512];
+        ds.predict_into(&xs, &mut ax);
+        let mut ev = NativeEvaluator::new(Arc::new(ds.a.clone()), Arc::new(ds.y.clone()), ax);
+        let at_star = ev.eval(&xs);
+        assert!(at_star.norm_err < 1e-5);
+        assert!(at_star.cost < 1e-4);
+        let at_zero = ev.eval(&vec![0.0; 10]);
+        assert!((at_zero.norm_err - 1.0).abs() < 1e-5, "x=0 → err 1.0");
+        assert!(at_zero.cost > 1.0);
+    }
+}

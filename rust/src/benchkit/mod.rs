@@ -1,0 +1,205 @@
+//! Minimal benchmarking harness (no `criterion` offline).
+//!
+//! Mirrors criterion's shape where it matters: warmup phase, timed
+//! iterations until a target measurement time, outlier-robust stats
+//! (mean/σ/median/p95/min), `black_box` to defeat dead-code elimination,
+//! and throughput reporting. Benches declare `harness = false` in
+//! `Cargo.toml` and call [`Bench::run`] from `main`.
+//!
+//! Output is both human-readable and machine-parseable
+//! (`BENCHLINE <json>` rows), which the EXPERIMENTS.md tooling scrapes.
+
+use std::hint::black_box as std_black_box;
+use std::time::{Duration, Instant};
+
+/// Re-export of `std::hint::black_box` under the criterion-familiar name.
+pub fn black_box<T>(x: T) -> T {
+    std_black_box(x)
+}
+
+/// Summary statistics of one benchmark.
+#[derive(Clone, Debug)]
+pub struct Stats {
+    pub name: String,
+    pub iters: usize,
+    pub mean_ns: f64,
+    pub stddev_ns: f64,
+    pub median_ns: f64,
+    pub p95_ns: f64,
+    pub min_ns: f64,
+    /// Optional items-per-iteration for throughput reporting.
+    pub throughput_items: Option<f64>,
+}
+
+impl Stats {
+    /// items/s if throughput was declared.
+    pub fn items_per_sec(&self) -> Option<f64> {
+        self.throughput_items.map(|n| n / (self.mean_ns * 1e-9))
+    }
+}
+
+fn fmt_ns(ns: f64) -> String {
+    if ns < 1_000.0 {
+        format!("{ns:.1} ns")
+    } else if ns < 1_000_000.0 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+/// Benchmark runner.
+pub struct Bench {
+    warmup: Duration,
+    measure: Duration,
+    min_iters: usize,
+    max_iters: usize,
+    results: Vec<Stats>,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Bench {
+    pub fn new() -> Self {
+        // `BENCH_FAST=1` shrinks budgets so `cargo test`-style smoke runs
+        // of the bench binaries stay quick.
+        let fast = std::env::var("BENCH_FAST").ok().as_deref() == Some("1");
+        Self {
+            warmup: if fast { Duration::from_millis(20) } else { Duration::from_millis(300) },
+            measure: if fast { Duration::from_millis(100) } else { Duration::from_secs(2) },
+            min_iters: 5,
+            max_iters: 1_000_000,
+            results: Vec::new(),
+        }
+    }
+
+    /// Override measurement budget (long end-to-end benches).
+    pub fn with_measure_time(mut self, d: Duration) -> Self {
+        self.measure = d;
+        self
+    }
+
+    /// Declare throughput items for the *next* `run` call.
+    pub fn run_with_throughput<R>(
+        &mut self,
+        name: &str,
+        items: f64,
+        mut f: impl FnMut() -> R,
+    ) -> Stats {
+        self.run_inner(name, Some(items), &mut f)
+    }
+
+    /// Time `f` and record stats under `name`.
+    pub fn run<R>(&mut self, name: &str, mut f: impl FnMut() -> R) -> Stats {
+        self.run_inner(name, None, &mut f)
+    }
+
+    fn run_inner<R>(
+        &mut self,
+        name: &str,
+        throughput_items: Option<f64>,
+        f: &mut dyn FnMut() -> R,
+    ) -> Stats {
+        // Warmup: run until the warmup budget is burned; estimate cost.
+        let warm_start = Instant::now();
+        let mut warm_iters = 0usize;
+        while warm_start.elapsed() < self.warmup || warm_iters == 0 {
+            black_box(f());
+            warm_iters += 1;
+            if warm_iters >= self.max_iters {
+                break;
+            }
+        }
+        let est_ns = (warm_start.elapsed().as_nanos() as f64 / warm_iters as f64).max(1.0);
+
+        // Choose a sample count: aim for `measure` total, ≥ min_iters.
+        let target =
+            ((self.measure.as_nanos() as f64 / est_ns) as usize).clamp(self.min_iters, self.max_iters);
+
+        let mut samples_ns = Vec::with_capacity(target);
+        for _ in 0..target {
+            let t0 = Instant::now();
+            black_box(f());
+            samples_ns.push(t0.elapsed().as_nanos() as f64);
+        }
+        samples_ns.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = samples_ns.len();
+        let mean = samples_ns.iter().sum::<f64>() / n as f64;
+        let var = samples_ns.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        let stats = Stats {
+            name: name.to_string(),
+            iters: n,
+            mean_ns: mean,
+            stddev_ns: var.sqrt(),
+            median_ns: samples_ns[n / 2],
+            p95_ns: samples_ns[((n as f64 * 0.95) as usize).min(n - 1)],
+            min_ns: samples_ns[0],
+            throughput_items,
+        };
+        self.report(&stats);
+        self.results.push(stats.clone());
+        stats
+    }
+
+    fn report(&self, s: &Stats) {
+        let tp = s
+            .items_per_sec()
+            .map(|r| format!("  [{:.3} Melem/s]", r / 1e6))
+            .unwrap_or_default();
+        println!(
+            "{:<44} mean {:>10}  p50 {:>10}  p95 {:>10}  min {:>10}  (n={}){tp}",
+            s.name,
+            fmt_ns(s.mean_ns),
+            fmt_ns(s.median_ns),
+            fmt_ns(s.p95_ns),
+            fmt_ns(s.min_ns),
+            s.iters
+        );
+        println!(
+            "BENCHLINE {{\"name\": \"{}\", \"mean_ns\": {:.1}, \"p50_ns\": {:.1}, \"p95_ns\": {:.1}, \"min_ns\": {:.1}, \"iters\": {}}}",
+            s.name, s.mean_ns, s.median_ns, s.p95_ns, s.min_ns, s.iters
+        );
+    }
+
+    /// All recorded results.
+    pub fn results(&self) -> &[Stats] {
+        &self.results
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_plausible_stats() {
+        std::env::set_var("BENCH_FAST", "1");
+        let mut b = Bench::new();
+        let s = b.run("spin", || {
+            let mut acc = 0u64;
+            for i in 0..1000u64 {
+                acc = acc.wrapping_add(black_box(i));
+            }
+            acc
+        });
+        assert!(s.iters >= 5);
+        assert!(s.mean_ns > 0.0);
+        assert!(s.min_ns <= s.median_ns);
+        assert!(s.median_ns <= s.p95_ns + 1.0);
+    }
+
+    #[test]
+    fn throughput_reported() {
+        std::env::set_var("BENCH_FAST", "1");
+        let mut b = Bench::new();
+        let s = b.run_with_throughput("tp", 1000.0, || black_box(42));
+        assert!(s.items_per_sec().unwrap() > 0.0);
+        assert_eq!(b.results().len(), 1);
+    }
+}

@@ -1,0 +1,250 @@
+//! Command-line parsing substrate (no `clap` offline).
+//!
+//! A declarative-enough flag parser: define a [`Command`] with typed
+//! [`FlagSpec`]s, parse `--flag value` / `--flag=value` / bare
+//! positionals, get defaults, validation, and generated `--help` text.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+/// Parse error with the offending token.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct CliError(pub String);
+
+impl fmt::Display for CliError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+impl std::error::Error for CliError {}
+
+/// Flag value types.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FlagKind {
+    Bool,
+    Int,
+    Float,
+    Str,
+}
+
+/// One flag's declaration.
+#[derive(Debug, Clone)]
+pub struct FlagSpec {
+    pub name: &'static str,
+    pub kind: FlagKind,
+    pub default: Option<&'static str>,
+    pub help: &'static str,
+}
+
+/// A (sub)command: name, description, flag table.
+#[derive(Debug, Clone)]
+pub struct Command {
+    pub name: &'static str,
+    pub about: &'static str,
+    pub flags: Vec<FlagSpec>,
+}
+
+impl Command {
+    pub fn new(name: &'static str, about: &'static str) -> Self {
+        Self { name, about, flags: Vec::new() }
+    }
+
+    pub fn flag(
+        mut self,
+        name: &'static str,
+        kind: FlagKind,
+        default: Option<&'static str>,
+        help: &'static str,
+    ) -> Self {
+        assert!(
+            !self.flags.iter().any(|f| f.name == name),
+            "duplicate flag --{name}"
+        );
+        self.flags.push(FlagSpec { name, kind, default, help });
+        self
+    }
+
+    /// Render help text.
+    pub fn help(&self) -> String {
+        let mut s = format!("{} — {}\n\nFlags:\n", self.name, self.about);
+        for f in &self.flags {
+            let kind = match f.kind {
+                FlagKind::Bool => "",
+                FlagKind::Int => " <int>",
+                FlagKind::Float => " <float>",
+                FlagKind::Str => " <str>",
+            };
+            let default = f
+                .default
+                .map(|d| format!(" [default: {d}]"))
+                .unwrap_or_default();
+            s.push_str(&format!("  --{}{kind}\n      {}{default}\n", f.name, f.help));
+        }
+        s
+    }
+
+    /// Parse an argument list (without the command name itself).
+    pub fn parse(&self, args: &[String]) -> Result<Matches, CliError> {
+        let mut values: BTreeMap<String, String> = BTreeMap::new();
+        let mut positional = Vec::new();
+        let mut i = 0;
+        while i < args.len() {
+            let arg = &args[i];
+            if arg == "--help" || arg == "-h" {
+                return Err(CliError(self.help()));
+            }
+            if let Some(body) = arg.strip_prefix("--") {
+                let (name, inline) = match body.split_once('=') {
+                    Some((n, v)) => (n, Some(v.to_string())),
+                    None => (body, None),
+                };
+                let spec = self
+                    .flags
+                    .iter()
+                    .find(|f| f.name == name)
+                    .ok_or_else(|| CliError(format!("unknown flag --{name} (try --help)")))?;
+                let raw = match (spec.kind, inline) {
+                    (FlagKind::Bool, None) => "true".to_string(),
+                    (FlagKind::Bool, Some(v)) => v,
+                    (_, Some(v)) => v,
+                    (_, None) => {
+                        i += 1;
+                        args.get(i)
+                            .cloned()
+                            .ok_or_else(|| CliError(format!("--{name} expects a value")))?
+                    }
+                };
+                validate(spec, &raw)?;
+                values.insert(name.to_string(), raw);
+            } else {
+                positional.push(arg.clone());
+            }
+            i += 1;
+        }
+        // Fill defaults.
+        for spec in &self.flags {
+            if !values.contains_key(spec.name) {
+                if let Some(d) = spec.default {
+                    values.insert(spec.name.to_string(), d.to_string());
+                }
+            }
+        }
+        Ok(Matches { values, positional })
+    }
+}
+
+fn validate(spec: &FlagSpec, raw: &str) -> Result<(), CliError> {
+    let ok = match spec.kind {
+        FlagKind::Bool => matches!(raw, "true" | "false" | "1" | "0"),
+        FlagKind::Int => raw.parse::<i64>().is_ok(),
+        FlagKind::Float => raw.parse::<f64>().is_ok(),
+        FlagKind::Str => true,
+    };
+    if ok {
+        Ok(())
+    } else {
+        Err(CliError(format!("--{}: invalid {:?} value {raw:?}", spec.name, spec.kind)))
+    }
+}
+
+/// Parsed flag values + positionals.
+#[derive(Debug, Clone, Default)]
+pub struct Matches {
+    values: BTreeMap<String, String>,
+    pub positional: Vec<String>,
+}
+
+impl Matches {
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.values.get(name).map(|s| s.as_str())
+    }
+    pub fn str_of(&self, name: &str) -> String {
+        self.values.get(name).cloned().unwrap_or_default()
+    }
+    pub fn usize_of(&self, name: &str) -> usize {
+        self.values.get(name).and_then(|v| v.parse().ok()).unwrap_or_else(|| panic!("flag --{name} missing/invalid"))
+    }
+    pub fn u64_of(&self, name: &str) -> u64 {
+        self.values.get(name).and_then(|v| v.parse().ok()).unwrap_or_else(|| panic!("flag --{name} missing/invalid"))
+    }
+    pub fn f64_of(&self, name: &str) -> f64 {
+        self.values.get(name).and_then(|v| v.parse().ok()).unwrap_or_else(|| panic!("flag --{name} missing/invalid"))
+    }
+    pub fn bool_of(&self, name: &str) -> bool {
+        matches!(self.values.get(name).map(|s| s.as_str()), Some("true") | Some("1"))
+    }
+    pub fn is_set(&self, name: &str) -> bool {
+        self.values.contains_key(name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cmd() -> Command {
+        Command::new("train", "run a training job")
+            .flag("workers", FlagKind::Int, Some("10"), "worker count")
+            .flag("t", FlagKind::Float, Some("100.0"), "epoch budget seconds")
+            .flag("verbose", FlagKind::Bool, None, "chatty output")
+            .flag("method", FlagKind::Str, Some("anytime"), "method name")
+    }
+
+    fn argv(parts: &[&str]) -> Vec<String> {
+        parts.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let m = cmd().parse(&[]).unwrap();
+        assert_eq!(m.usize_of("workers"), 10);
+        assert_eq!(m.f64_of("t"), 100.0);
+        assert!(!m.bool_of("verbose"));
+        assert_eq!(m.str_of("method"), "anytime");
+    }
+
+    #[test]
+    fn space_and_equals_forms() {
+        let m = cmd().parse(&argv(&["--workers", "20", "--t=3.5", "--verbose"])).unwrap();
+        assert_eq!(m.usize_of("workers"), 20);
+        assert_eq!(m.f64_of("t"), 3.5);
+        assert!(m.bool_of("verbose"));
+    }
+
+    #[test]
+    fn unknown_flag_rejected() {
+        assert!(cmd().parse(&argv(&["--nope", "1"])).is_err());
+    }
+
+    #[test]
+    fn invalid_typed_value_rejected() {
+        assert!(cmd().parse(&argv(&["--workers", "many"])).is_err());
+        assert!(cmd().parse(&argv(&["--t", "fast"])).is_err());
+    }
+
+    #[test]
+    fn missing_value_rejected() {
+        assert!(cmd().parse(&argv(&["--workers"])).is_err());
+    }
+
+    #[test]
+    fn positionals_collected() {
+        let m = cmd().parse(&argv(&["fig3", "--workers", "4", "out.csv"])).unwrap();
+        assert_eq!(m.positional, vec!["fig3".to_string(), "out.csv".to_string()]);
+    }
+
+    #[test]
+    fn help_lists_flags() {
+        let h = cmd().help();
+        assert!(h.contains("--workers"));
+        assert!(h.contains("default: 10"));
+    }
+
+    #[test]
+    #[should_panic]
+    fn duplicate_flag_panics() {
+        Command::new("x", "y")
+            .flag("a", FlagKind::Int, None, "")
+            .flag("a", FlagKind::Int, None, "");
+    }
+}

@@ -1,0 +1,640 @@
+//! Typed run configuration + per-figure presets.
+//!
+//! A [`RunConfig`] fully specifies one training run: dataset, placement,
+//! method, schedule, straggler environment, and evaluation cadence.
+//! Configs load from JSON (see `configs/` examples in README) and every
+//! paper figure has a named preset ([`RunConfig::preset`]), so
+//! `anytime-sgd train --preset fig3-anytime` reproduces a curve exactly.
+
+use crate::ser::Value;
+use crate::straggler::{CommSpec, DelaySpec, PersistentSpec, StragglerEnv};
+use anyhow::{anyhow, bail, Result};
+
+/// Which dataset to build.
+#[derive(Clone, Debug, PartialEq)]
+pub enum DataSpec {
+    /// Paper synthetic: A ~ N(0,1)^{m×d}, y = A x* + N(0, noise²).
+    Synthetic { m: usize, d: usize, noise: f64 },
+    /// Synthetic logistic regression (eq. 1's other canonical instance).
+    SyntheticLogistic { m: usize, d: usize },
+    /// MSD-like year regression (90 features), standardized.
+    MsdLike { m: usize },
+}
+
+impl DataSpec {
+    pub fn dim(&self) -> usize {
+        match self {
+            DataSpec::Synthetic { d, .. } | DataSpec::SyntheticLogistic { d, .. } => *d,
+            DataSpec::MsdLike { .. } => 90,
+        }
+    }
+    pub fn rows(&self) -> usize {
+        match self {
+            DataSpec::Synthetic { m, .. }
+            | DataSpec::SyntheticLogistic { m, .. }
+            | DataSpec::MsdLike { m } => *m,
+        }
+    }
+
+    /// The per-sample objective this dataset trains.
+    pub fn objective(&self) -> crate::backend::Objective {
+        match self {
+            DataSpec::SyntheticLogistic { .. } => crate::backend::Objective::Logistic,
+            _ => crate::backend::Objective::LeastSquares,
+        }
+    }
+}
+
+/// The distributed-SGD protocol to run.
+#[derive(Clone, Debug, PartialEq)]
+pub enum MethodSpec {
+    /// The paper's Anytime-Gradients (Algorithms 1-2).
+    Anytime { t: f64, combine: CombinePolicy, iterate: Iterate },
+    /// §V generalized variant: workers keep stepping through the
+    /// communication period and blend via eq. (13).
+    Generalized { t: f64 },
+    /// Classical synchronous local-SGD: fixed steps/epoch, wait for all,
+    /// uniform averaging (Zinkevich et al.).
+    SyncSgd { steps_per_epoch: usize },
+    /// Fastest N−B (Pan et al.): fixed steps/epoch, wait for the first
+    /// N−B workers, discard the rest.
+    Fnb { steps_per_epoch: usize, b: usize },
+    /// Gradient Coding (Tandon et al.): coded full-gradient descent,
+    /// decodable from any N−S workers.
+    GradientCoding { lr: f64 },
+    /// Parameter-server Async-SGD (paper §I's contrast): workers loop
+    /// independently — fetch x, run `steps_per_update` local steps, push
+    /// the delta; the master applies deltas immediately (stale updates
+    /// included). One "epoch" simulates `horizon` seconds of events.
+    AsyncSgd { steps_per_update: usize, horizon: f64 },
+}
+
+impl MethodSpec {
+    pub fn name(&self) -> &'static str {
+        match self {
+            MethodSpec::Anytime { .. } => "anytime",
+            MethodSpec::Generalized { .. } => "generalized",
+            MethodSpec::SyncSgd { .. } => "sync",
+            MethodSpec::Fnb { .. } => "fnb",
+            MethodSpec::GradientCoding { .. } => "gradient-coding",
+            MethodSpec::AsyncSgd { .. } => "async",
+        }
+    }
+}
+
+/// Master combining policy (Algorithm 1 step 15).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CombinePolicy {
+    /// λ_v = q_v / Σ q — Theorem 3, the paper's choice.
+    Proportional,
+    /// λ_v = 1/|χ| — classical uniform averaging.
+    Uniform,
+    /// Take only the worker with the most steps (the "expected distance"
+    /// strawman discussed after Theorem 1).
+    FastestOnly,
+}
+
+/// Which per-worker iterate the master combines.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Iterate {
+    /// Final iterate x_{v,q_v} — Algorithm 2's return value.
+    Last,
+    /// Running average (1/q)Σ x_vt — the quantity the analysis bounds.
+    Average,
+}
+
+/// Learning-rate schedule selection.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Schedule {
+    /// η_vt = L + (σ/D)√(t+1); lr = 1/η (Theorem 1).
+    Paper { big_l: f32, sigma_over_d: f32 },
+    /// Constant lr.
+    Constant { lr: f32 },
+}
+
+impl Schedule {
+    pub fn to_consts(self) -> crate::backend::Consts {
+        match self {
+            Schedule::Paper { big_l, sigma_over_d } => {
+                crate::backend::Consts::paper(big_l, sigma_over_d)
+            }
+            Schedule::Constant { lr } => crate::backend::Consts::constant(lr),
+        }
+    }
+}
+
+/// Compute backend selection.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Backend {
+    /// Pure-rust (default for figure sweeps; no artifacts needed).
+    Native,
+    /// AOT artifacts through PJRT (the deployment path).
+    Xla,
+}
+
+/// A complete run description.
+#[derive(Clone, Debug)]
+pub struct RunConfig {
+    pub name: String,
+    pub data: DataSpec,
+    /// Worker count N.
+    pub workers: usize,
+    /// Redundancy S (each block on S+1 workers).
+    pub redundancy: usize,
+    pub method: MethodSpec,
+    pub schedule: Schedule,
+    /// Minibatch size per SGD step (paper uses 1; we default 32 —
+    /// figures are invariant to this up to step-count scaling).
+    pub batch: usize,
+    /// Straggler environment.
+    pub env: StragglerEnv,
+    /// Communication model.
+    pub comm: CommSpec,
+    /// Master waiting-time guard T_c (seconds).
+    pub t_c: f64,
+    /// Number of epochs τ.
+    pub epochs: usize,
+    /// Evaluate every k epochs (1 = every epoch).
+    pub eval_every: usize,
+    /// Cap on steps per worker-epoch, in fractions of one shard pass.
+    pub max_passes: f64,
+    pub backend: Backend,
+    pub seed: u64,
+}
+
+impl RunConfig {
+    /// Baseline config all presets derive from.
+    pub fn base() -> Self {
+        Self {
+            name: "base".into(),
+            data: DataSpec::Synthetic { m: 50_000, d: 200, noise: 1e-3 },
+            workers: 10,
+            redundancy: 0,
+            method: MethodSpec::Anytime {
+                t: 200.0,
+                combine: CombinePolicy::Proportional,
+                iterate: Iterate::Last,
+            },
+            schedule: Schedule::Constant { lr: 5e-4 },
+            batch: 32,
+            env: StragglerEnv::ec2_default(0.02),
+            comm: CommSpec::Fixed { secs: 1.0 },
+            t_c: 1e9,
+            epochs: 12,
+            eval_every: 1,
+            max_passes: 1.0,
+            backend: Backend::Native,
+            seed: 42,
+        }
+    }
+
+    /// Named presets — one per figure/experiment (DESIGN.md §4).
+    ///
+    /// `--paper-scale` variants use the paper's exact matrix sizes; the
+    /// defaults are scaled for quick runs with identical protocol.
+    pub fn preset(name: &str) -> Result<Self> {
+        let mut c = Self::base();
+        c.name = name.to_string();
+        match name {
+            // ---- Fig 2: forced iteration skew; proportional vs uniform.
+            "fig2-proportional" | "fig2-uniform" => {
+                c.data = DataSpec::Synthetic { m: 20_000, d: 200, noise: 1e-3 };
+                // Fig 2(a)'s per-worker iterations: rates chosen so worker
+                // v completes q_v of [10000, 8500, ..., 500] in T=100.
+                // Paper targets (m=1e5): [10000, 8500, ... 500]; scaled by
+                // m/1e5 so the one-pass cap (shard = m/N rows) stays the
+                // binding ceiling only for the fastest worker.
+                let its = [2_000.0, 1_700.0, 1_400.0, 1_100.0, 840.0, 640.0, 480.0, 300.0, 180.0, 100.0];
+                c.env = StragglerEnv {
+                    delay: DelaySpec::PerWorker { secs: its.iter().map(|q| 100.0 / q).collect() },
+                    persistent: vec![],
+                };
+                c.batch = 1; // paper samples single points here
+                c.max_passes = 1.0;
+                c.method = MethodSpec::Anytime {
+                    t: 100.0,
+                    combine: if name.ends_with("uniform") {
+                        CombinePolicy::Uniform
+                    } else {
+                        CombinePolicy::Proportional
+                    },
+                    iterate: Iterate::Last,
+                };
+                c.schedule = Schedule::Constant { lr: 1e-3 };
+                // Stop before the noise floor: the weighting gap is a
+                // transient-phase phenomenon (as in the paper's Fig 2b).
+                c.epochs = 8;
+            }
+            // ---- Fig 3: S=0, T=200 vs wait-for-all sync.
+            "fig3-anytime" | "fig3-sync" => {
+                c.data = DataSpec::Synthetic { m: 50_000, d: 200, noise: 1e-3 };
+                c.redundancy = 0;
+                c.epochs = 12;
+                if name.ends_with("sync") {
+                    // Sync does a full pass per epoch (the paper's
+                    // "fixed amount of data" contract).
+                    c.method = MethodSpec::SyncSgd { steps_per_epoch: 156 }; // 5000/32
+                } else {
+                    c.method = MethodSpec::Anytime {
+                        t: 200.0,
+                        combine: CombinePolicy::Proportional,
+                        iterate: Iterate::Last,
+                    };
+                }
+                // T=200 at 0.02 s/step ≈ bulk workers finish the full pass;
+                // stragglers don't — exactly the paper's regime.
+                c.env = StragglerEnv::ec2_default(1.0);
+            }
+            // ---- Fig 4: S=2, T=100 vs FNB(B=8) vs Gradient Coding.
+            "fig4-anytime" | "fig4-fnb" | "fig4-gc" => {
+                c.data = DataSpec::Synthetic { m: 48_000, d: 200, noise: 1e-3 };
+                c.redundancy = 2;
+                c.epochs = 16;
+                // Step rate calibrated so the T=100 budget covers ~2-3
+                // passes of the (S+1)-replicated shard — the paper's
+                // regime, where each worker does substantial local work
+                // per epoch and anytime's use of ALL workers' partial
+                // work pays off.
+                c.env = StragglerEnv::ec2_default(0.1);
+                c.max_passes = 3.0;
+                match name {
+                    "fig4-anytime" => {
+                        c.method = MethodSpec::Anytime {
+                            t: 100.0,
+                            combine: CombinePolicy::Proportional,
+                            iterate: Iterate::Last,
+                        };
+                    }
+                    "fig4-fnb" => {
+                        // FNB (Pan et al.) has no data redundancy: each
+                        // worker owns its unique m/N block (150 steps =
+                        // one pass); the master waits for the fastest
+                        // N-B = 2 and discards the rest.
+                        c.redundancy = 0;
+                        c.method = MethodSpec::Fnb { steps_per_epoch: 150, b: 8 };
+                        c.epochs = 60;
+                    }
+                    _ => {
+                        c.method = MethodSpec::GradientCoding { lr: 0.4 };
+                        c.schedule = Schedule::Constant { lr: 0.4 };
+                    }
+                }
+            }
+            // ---- Fig 5: MSD-like, S=1, T=20 vs FNB(B=8) vs sync.
+            "fig5-anytime" | "fig5-fnb" | "fig5-sync" => {
+                c.data = DataSpec::MsdLike { m: 60_000 };
+                c.redundancy = 1;
+                c.epochs = 15;
+                c.schedule = Schedule::Constant { lr: 2e-4 };
+                // T=20 covers ~2.5 passes of the 12k-row shard at the
+                // median rate (pass = 375 steps x 0.02 s).
+                c.env = StragglerEnv::ec2_default(0.02);
+                c.max_passes = 3.0;
+                match name {
+                    "fig5-anytime" => {
+                        c.method = MethodSpec::Anytime {
+                            t: 20.0,
+                            combine: CombinePolicy::Proportional,
+                            iterate: Iterate::Last,
+                        };
+                        c.epochs = 20;
+                    }
+                    "fig5-fnb" => {
+                        // No redundancy for FNB (see fig4-fnb): unique
+                        // 6000-row block = 187 steps per pass.
+                        c.redundancy = 0;
+                        c.method = MethodSpec::Fnb { steps_per_epoch: 187, b: 8 };
+                        c.epochs = 60;
+                    }
+                    _ => {
+                        c.method = MethodSpec::SyncSgd { steps_per_epoch: 375 };
+                        c.epochs = 20;
+                    }
+                }
+            }
+            // ---- Fig 6: generalized vs original, T=50.
+            "fig6-anytime" | "fig6-generalized" => {
+                c.data = DataSpec::Synthetic { m: 50_000, d: 200, noise: 1e-3 };
+                c.epochs = 15;
+                c.env = StragglerEnv::ec2_default(1.0);
+                // Comm period long enough that idle compute matters
+                // (20-80%% of the budget, as on a congested cluster).
+                c.comm = CommSpec::UniformRange { lo: 10.0, hi: 40.0 };
+                c.schedule = Schedule::Constant { lr: 1e-3 };
+                c.epochs = 20;
+                if name.ends_with("generalized") {
+                    c.method = MethodSpec::Generalized { t: 50.0 };
+                } else {
+                    c.method = MethodSpec::Anytime {
+                        t: 50.0,
+                        combine: CombinePolicy::Proportional,
+                        iterate: Iterate::Last,
+                    };
+                }
+            }
+            // ---- Extension: logistic regression under the fig-3 protocol.
+            "logreg-anytime" | "logreg-sync" => {
+                c.data = DataSpec::SyntheticLogistic { m: 50_000, d: 200 };
+                c.schedule = Schedule::Constant { lr: 0.05 };
+                c.epochs = 12;
+                c.env = StragglerEnv::ec2_default(1.0);
+                if name.ends_with("sync") {
+                    c.method = MethodSpec::SyncSgd { steps_per_epoch: 156 };
+                } else {
+                    c.method = MethodSpec::Anytime {
+                        t: 200.0,
+                        combine: CombinePolicy::Proportional,
+                        iterate: Iterate::Last,
+                    };
+                }
+            }
+            other => bail!("unknown preset `{other}` (see DESIGN.md §4)"),
+        }
+        Ok(c)
+    }
+
+    /// Scale a preset up to the paper's exact data dimensions.
+    pub fn paper_scale(mut self) -> Self {
+        self.data = match self.data {
+            DataSpec::Synthetic { noise, .. } if self.name.starts_with("fig2") => {
+                DataSpec::Synthetic { m: 100_000, d: 1000, noise }
+            }
+            DataSpec::Synthetic { noise, .. } => DataSpec::Synthetic { m: 500_000, d: 1000, noise },
+            DataSpec::SyntheticLogistic { .. } => DataSpec::SyntheticLogistic { m: 500_000, d: 1000 },
+            DataSpec::MsdLike { .. } => DataSpec::MsdLike { m: 515_345 },
+        };
+        self
+    }
+
+    /// Parse a config from JSON (subset schema; unknown fields rejected).
+    pub fn from_json(v: &Value) -> Result<Self> {
+        let mut c = if let Some(p) = v.get_str("preset") {
+            Self::preset(p)?
+        } else {
+            Self::base()
+        };
+        if let Some(n) = v.get_str("name") {
+            c.name = n.to_string();
+        }
+        if let Some(w) = v.get_usize("workers") {
+            c.workers = w;
+        }
+        if let Some(s) = v.get_usize("redundancy") {
+            c.redundancy = s;
+        }
+        if let Some(b) = v.get_usize("batch") {
+            c.batch = b;
+        }
+        if let Some(e) = v.get_usize("epochs") {
+            c.epochs = e;
+        }
+        if let Some(x) = v.get_f64("t_c") {
+            c.t_c = x;
+        }
+        if let Some(x) = v.get_f64("max_passes") {
+            c.max_passes = x;
+        }
+        if let Some(s) = v.get("seed").and_then(Value::as_u64) {
+            c.seed = s;
+        }
+        if let Some(d) = v.get("data") {
+            let kind = d.get_str("kind").unwrap_or("synthetic");
+            c.data = match kind {
+                "synthetic" => DataSpec::Synthetic {
+                    m: d.get_usize("m").ok_or_else(|| anyhow!("data.m"))?,
+                    d: d.get_usize("d").ok_or_else(|| anyhow!("data.d"))?,
+                    noise: d.get_f64("noise").unwrap_or(1e-3),
+                },
+                "msd-like" => DataSpec::MsdLike {
+                    m: d.get_usize("m").ok_or_else(|| anyhow!("data.m"))?,
+                },
+                "synthetic-logistic" => DataSpec::SyntheticLogistic {
+                    m: d.get_usize("m").ok_or_else(|| anyhow!("data.m"))?,
+                    d: d.get_usize("d").ok_or_else(|| anyhow!("data.d"))?,
+                },
+                other => bail!("unknown data.kind `{other}`"),
+            };
+        }
+        if let Some(m) = v.get("method") {
+            let kind = m.get_str("kind").ok_or_else(|| anyhow!("method.kind"))?;
+            c.method = match kind {
+                "anytime" => MethodSpec::Anytime {
+                    t: m.get_f64("t").ok_or_else(|| anyhow!("method.t"))?,
+                    combine: match m.get_str("combine").unwrap_or("proportional") {
+                        "proportional" => CombinePolicy::Proportional,
+                        "uniform" => CombinePolicy::Uniform,
+                        "fastest" => CombinePolicy::FastestOnly,
+                        o => bail!("unknown combine `{o}`"),
+                    },
+                    iterate: match m.get_str("iterate").unwrap_or("last") {
+                        "last" => Iterate::Last,
+                        "average" => Iterate::Average,
+                        o => bail!("unknown iterate `{o}`"),
+                    },
+                },
+                "generalized" => MethodSpec::Generalized {
+                    t: m.get_f64("t").ok_or_else(|| anyhow!("method.t"))?,
+                },
+                "sync" => MethodSpec::SyncSgd {
+                    steps_per_epoch: m.get_usize("steps_per_epoch").ok_or_else(|| anyhow!("method.steps_per_epoch"))?,
+                },
+                "fnb" => MethodSpec::Fnb {
+                    steps_per_epoch: m.get_usize("steps_per_epoch").ok_or_else(|| anyhow!("method.steps_per_epoch"))?,
+                    b: m.get_usize("b").ok_or_else(|| anyhow!("method.b"))?,
+                },
+                "gradient-coding" => MethodSpec::GradientCoding {
+                    lr: m.get_f64("lr").unwrap_or(0.4),
+                },
+                "async" => MethodSpec::AsyncSgd {
+                    steps_per_update: m.get_usize("steps_per_update").unwrap_or(16),
+                    horizon: m.get_f64("horizon").unwrap_or(100.0),
+                },
+                other => bail!("unknown method.kind `{other}`"),
+            };
+        }
+        if let Some(s) = v.get("schedule") {
+            c.schedule = match s.get_str("kind").unwrap_or("constant") {
+                "paper" => Schedule::Paper {
+                    big_l: s.get_f64("L").unwrap_or(2.0) as f32,
+                    sigma_over_d: s.get_f64("sigma_over_d").unwrap_or(0.1) as f32,
+                },
+                "constant" => Schedule::Constant { lr: s.get_f64("lr").unwrap_or(5e-4) as f32 },
+                o => bail!("unknown schedule `{o}`"),
+            };
+        }
+        if let Some(e) = v.get("env") {
+            c.env = parse_env(e)?;
+        }
+        if let Some(b) = v.get_str("backend") {
+            c.backend = match b {
+                "native" => Backend::Native,
+                "xla" => Backend::Xla,
+                o => bail!("unknown backend `{o}`"),
+            };
+        }
+        c.validate()?;
+        Ok(c)
+    }
+
+    /// Sanity-check cross-field constraints.
+    pub fn validate(&self) -> Result<()> {
+        if self.workers == 0 {
+            bail!("workers must be >= 1");
+        }
+        if self.redundancy >= self.workers {
+            bail!("redundancy S={} must be < workers N={}", self.redundancy, self.workers);
+        }
+        if self.batch == 0 {
+            bail!("batch must be >= 1");
+        }
+        if let MethodSpec::Fnb { b, .. } = self.method {
+            if b >= self.workers {
+                bail!("FNB B={b} must be < N={}", self.workers);
+            }
+        }
+        if self.data.rows() < self.workers * self.batch {
+            bail!("dataset too small for {} workers x batch {}", self.workers, self.batch);
+        }
+        Ok(())
+    }
+}
+
+fn parse_env(e: &Value) -> Result<StragglerEnv> {
+    let kind = e.get_str("kind").unwrap_or("ec2");
+    let delay = match kind {
+        "deterministic" => DelaySpec::Deterministic { secs: e.get_f64("secs").unwrap_or(0.02) },
+        "shifted-exp" => DelaySpec::ShiftedExp {
+            base: e.get_f64("base").unwrap_or(0.01),
+            rate: e.get_f64("rate").unwrap_or(1.0),
+        },
+        "pareto" => DelaySpec::Pareto {
+            xm: e.get_f64("xm").unwrap_or(0.01),
+            alpha: e.get_f64("alpha").unwrap_or(1.5),
+        },
+        "ec2" => {
+            return Ok(StragglerEnv::ec2_default(e.get_f64("step_secs").unwrap_or(0.02)));
+        }
+        "trace" => {
+            let path = e.get_str("file").ok_or_else(|| anyhow!("env.file for trace replay"))?;
+            let factors = crate::straggler::load_factors_csv(std::path::Path::new(path))
+                .map_err(anyhow::Error::msg)?;
+            let step = e.get_f64("step_secs").unwrap_or(1.0);
+            DelaySpec::TraceReplay { factors: factors.into_iter().map(|f| f * step).collect() }
+        }
+        other => bail!("unknown env.kind `{other}`"),
+    };
+    let mut env = StragglerEnv { delay, persistent: vec![] };
+    if let Some(ps) = e.get("persistent").and_then(Value::as_arr) {
+        for p in ps {
+            env.persistent.push(PersistentSpec {
+                workers: p
+                    .req("workers")
+                    .map_err(|x| anyhow!(x))?
+                    .as_arr()
+                    .ok_or_else(|| anyhow!("persistent.workers"))?
+                    .iter()
+                    .filter_map(Value::as_usize)
+                    .collect(),
+                from_epoch: p.get_usize("from_epoch").unwrap_or(0),
+                factor: p.get_f64("factor").unwrap_or(f64::INFINITY),
+            });
+        }
+    }
+    Ok(env)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ser::parse;
+
+    #[test]
+    fn all_presets_valid() {
+        for p in [
+            "fig2-proportional",
+            "fig2-uniform",
+            "fig3-anytime",
+            "fig3-sync",
+            "fig4-anytime",
+            "fig4-fnb",
+            "fig4-gc",
+            "fig5-anytime",
+            "fig5-fnb",
+            "fig5-sync",
+            "fig6-anytime",
+            "fig6-generalized",
+        ] {
+            let c = RunConfig::preset(p).unwrap_or_else(|e| panic!("{p}: {e}"));
+            c.validate().unwrap_or_else(|e| panic!("{p}: {e}"));
+        }
+        assert!(RunConfig::preset("fig9-nope").is_err());
+    }
+
+    #[test]
+    fn paper_scale_upsizes() {
+        let c = RunConfig::preset("fig3-anytime").unwrap().paper_scale();
+        assert_eq!(c.data, DataSpec::Synthetic { m: 500_000, d: 1000, noise: 1e-3 });
+        let c5 = RunConfig::preset("fig5-anytime").unwrap().paper_scale();
+        assert_eq!(c5.data.rows(), 515_345);
+    }
+
+    #[test]
+    fn from_json_overrides() {
+        let v = parse(
+            r#"{
+            "preset": "fig3-anytime",
+            "workers": 4,
+            "epochs": 3,
+            "method": {"kind": "anytime", "t": 10.0, "combine": "uniform"},
+            "schedule": {"kind": "paper", "L": 3.0, "sigma_over_d": 0.2},
+            "backend": "native"
+        }"#,
+        )
+        .unwrap();
+        let c = RunConfig::from_json(&v).unwrap();
+        assert_eq!(c.workers, 4);
+        assert_eq!(c.epochs, 3);
+        match c.method {
+            MethodSpec::Anytime { t, combine, .. } => {
+                assert_eq!(t, 10.0);
+                assert_eq!(combine, CombinePolicy::Uniform);
+            }
+            _ => panic!("wrong method"),
+        }
+        assert_eq!(c.schedule, Schedule::Paper { big_l: 3.0, sigma_over_d: 0.2 });
+    }
+
+    #[test]
+    fn from_json_rejects_bad_fields() {
+        for bad in [
+            r#"{"method": {"kind": "warp"}}"#,
+            r#"{"data": {"kind": "imagenet", "m": 5}}"#,
+            r#"{"preset": "fig3-anytime", "backend": "gpu"}"#,
+        ] {
+            assert!(RunConfig::from_json(&parse(bad).unwrap()).is_err(), "{bad}");
+        }
+    }
+
+    #[test]
+    fn validate_catches_bad_combos() {
+        let mut c = RunConfig::base();
+        c.redundancy = 10;
+        assert!(c.validate().is_err());
+        let mut c = RunConfig::base();
+        c.method = MethodSpec::Fnb { steps_per_epoch: 10, b: 10 };
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn json_env_with_persistent_stragglers() {
+        let v = parse(
+            r#"{"env": {"kind": "deterministic", "secs": 0.1,
+                 "persistent": [{"workers": [0, 3], "from_epoch": 2, "factor": 8.0}]}}"#,
+        )
+        .unwrap();
+        let c = RunConfig::from_json(&v).unwrap();
+        assert_eq!(c.env.persistent.len(), 1);
+        assert_eq!(c.env.persistent[0].workers, vec![0, 3]);
+        assert_eq!(c.env.persistent[0].factor, 8.0);
+    }
+}

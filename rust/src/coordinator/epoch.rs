@@ -1,0 +1,469 @@
+//! Per-method epoch protocols.
+//!
+//! Each `epoch_*` method executes one epoch's real numerics and returns
+//! the [`EpochStats`] with modeled time charges. See module docs in
+//! `coordinator` for the time semantics.
+
+use super::{EpochStats, Trainer};
+use crate::config::{CombinePolicy, Iterate};
+use crate::linalg::weighted_sum;
+use crate::sim::wait;
+use crate::straggler::WorkerEpochRate;
+use crate::theory;
+
+impl Trainer {
+    /// Anytime-Gradients (Algorithms 1 + 2).
+    ///
+    /// Every worker computes for exactly `t` seconds (or until the
+    /// one-pass cap); the master gathers whatever arrives within `t_c`,
+    /// zeroes the rest (step 13), and combines with the policy's λ.
+    pub(super) fn epoch_anytime(
+        &mut self,
+        e: usize,
+        t: f64,
+        policy: CombinePolicy,
+        iterate: Iterate,
+    ) -> EpochStats {
+        let n = self.cfg.workers;
+        let mut q = vec![0usize; n];
+        let mut finish: Vec<Option<f64>> = vec![None; n];
+        let mut outputs: Vec<Option<Vec<f32>>> = vec![None; n];
+
+        for v in 0..n {
+            let (qv, _used) = self.delay.steps_within(v, e, t, self.max_steps(v));
+            if matches!(self.delay.rate(v, e), WorkerEpochRate::Dead) {
+                continue; // never reports
+            }
+            // Workers report at the end of the budget; arrival = T + uplink.
+            let arrival = t + self.comm.delay(v, e, 0);
+            if arrival > self.cfg.t_c {
+                continue; // missed the waiting-time guard
+            }
+            finish[v] = Some(arrival);
+            if qv == 0 {
+                // Reported but completed nothing: x_vt = x_{t-1}, q_v = 0
+                // — contributes no weight under any policy.
+                continue;
+            }
+            let idx = self.sample_idx(v, e, qv);
+            let out = self.workers[v].run_steps(&self.x, &idx, 0.0, self.consts);
+            q[v] = qv;
+            outputs[v] = Some(match iterate {
+                Iterate::Last => out.x_k,
+                Iterate::Average => out.x_bar,
+            });
+        }
+
+        let lambda = combine_lambda(policy, &q, &outputs);
+        self.apply_combine(&outputs, &lambda);
+
+        // Master-side wait: the fixed budget T (the paper's headline
+        // property — deterministic epoch length), then communication:
+        // the slowest received uplink, or the full T_c guard if some
+        // worker never reported (Algorithm 1's while-loop runs it out).
+        let compute = wait::anytime(t);
+        let all_reported = finish.iter().all(|f| f.is_some());
+        let uplink = if all_reported {
+            finish.iter().flatten().fold(0.0f64, |a, &b| a.max(b)) - t
+        } else {
+            (self.cfg.t_c - t).max(0.0)
+        };
+        let comm = uplink + self.broadcast_charge(e);
+        let received = finish.iter().map(|f| f.is_some()).collect();
+        EpochStats { q, received, compute_secs: compute, comm_secs: comm, lambda }
+    }
+
+    /// §V Generalized Anytime-Gradients: workers keep stepping during
+    /// the communication round-trip and blend via eq. (13).
+    pub(super) fn epoch_generalized(&mut self, e: usize, t: f64) -> EpochStats {
+        let n = self.cfg.workers;
+        let mut q = vec![0usize; n];
+        let mut qbar = vec![0usize; n];
+        let mut outputs: Vec<Option<Vec<f32>>> = vec![None; n];
+        let mut finish: Vec<Option<f64>> = vec![None; n];
+        let mut round_trips = vec![0.0f64; n];
+
+        // Phase 1: the budgeted epoch (from each worker's own vector).
+        for v in 0..n {
+            let (qv, used) = self.delay.steps_within(v, e, t, self.max_steps(v));
+            if matches!(self.delay.rate(v, e), WorkerEpochRate::Dead) {
+                continue;
+            }
+            finish[v] = Some(used + self.comm.delay(v, e, 0));
+            if qv == 0 {
+                continue;
+            }
+            let idx = self.sample_idx(v, e, qv);
+            let out = self.workers[v].run_steps(&self.x_workers[v], &idx, 0.0, self.consts);
+            q[v] = qv;
+            outputs[v] = Some(out.x_k);
+        }
+
+        // Master combines with Theorem-3 weights (the generalized scheme
+        // builds on the proportional rule).
+        let lambda = combine_lambda(CombinePolicy::Proportional, &q, &outputs);
+        self.apply_combine(&outputs, &lambda);
+        let sum_q: usize = q.iter().sum();
+
+        // Phase 2: idle-period compute + worker-side blend (eq. 13).
+        for v in 0..n {
+            let rt = self.comm.delay(v, e, 0) + self.comm.delay(v, e, 1);
+            round_trips[v] = rt;
+            if matches!(self.delay.rate(v, e), WorkerEpochRate::Dead) {
+                continue;
+            }
+            let start = match &outputs[v] {
+                Some(x) => x.clone(),
+                None => self.x_workers[v].clone(),
+            };
+            let (qb, _) = self.delay.steps_within(v, e, rt, self.max_steps(v));
+            let xbar_v = if qb > 0 {
+                let mut rng = self.root.split("idle-minibatch", v as u64, e as u64);
+                let rows = self.workers[v].shard_rows();
+                let idx: Vec<u32> =
+                    (0..qb * self.cfg.batch).map(|_| rng.index(rows) as u32).collect();
+                qbar[v] = qb;
+                self.workers[v].run_steps(&start, &idx, q[v] as f32, self.consts).x_k
+            } else {
+                start
+            };
+            // x_v^{t+1} = λ_vt x^t + (1 − λ_vt) x̄_vt.
+            let lam_vt = theory::generalized_lambda(sum_q, qbar[v]) as f32;
+            let xg = &self.x;
+            self.x_workers[v] = xg
+                .iter()
+                .zip(xbar_v.iter())
+                .map(|(&g, &l)| lam_vt * g + (1.0 - lam_vt) * l)
+                .collect();
+        }
+
+        // Time: budget T, then the round trip overlaps the idle compute.
+        let comm = round_trips.iter().cloned().fold(0.0f64, f64::max).min(self.cfg.t_c);
+        let received = finish.iter().map(|f| f.is_some()).collect();
+        EpochStats { q, received, compute_secs: t, comm_secs: comm, lambda }
+    }
+
+    /// Classical synchronous local-SGD: fixed steps, wait for all,
+    /// uniform averaging over whoever reports within `t_c`.
+    pub(super) fn epoch_sync(&mut self, e: usize, steps: usize) -> EpochStats {
+        let n = self.cfg.workers;
+        let mut q = vec![0usize; n];
+        let mut finish: Vec<Option<f64>> = vec![None; n];
+        let mut outputs: Vec<Option<Vec<f32>>> = vec![None; n];
+
+        for v in 0..n {
+            let rate = match self.delay.rate(v, e) {
+                WorkerEpochRate::Dead => continue,
+                WorkerEpochRate::StepSecs(s) => s,
+            };
+            let compute_time = steps as f64 * rate;
+            let arrival = compute_time + self.comm.delay(v, e, 0);
+            if arrival > self.cfg.t_c {
+                continue; // abandoned by the guard; its work is lost
+            }
+            finish[v] = Some(arrival);
+            let idx = self.sample_idx(v, e, steps);
+            let out = self.workers[v].run_steps(&self.x, &idx, 0.0, self.consts);
+            q[v] = steps;
+            outputs[v] = Some(out.x_k);
+        }
+
+        let lambda = combine_lambda(CombinePolicy::Uniform, &q, &outputs);
+        self.apply_combine(&outputs, &lambda);
+        let compute = wait::all(&finish, self.cfg.t_c);
+        let comm = self.broadcast_charge(e);
+        let received = finish.iter().map(|f| f.is_some()).collect();
+        EpochStats { q, received, compute_secs: compute, comm_secs: comm, lambda }
+    }
+
+    /// Fastest N−B (Pan et al.): fixed steps; the master proceeds after
+    /// the (N−B)-th arrival and *discards* everything else.
+    pub(super) fn epoch_fnb(&mut self, e: usize, steps: usize, b: usize) -> EpochStats {
+        let n = self.cfg.workers;
+        let k = n - b;
+        let mut arrivals: Vec<Option<f64>> = vec![None; n];
+        for v in 0..n {
+            if let WorkerEpochRate::StepSecs(rate) = self.delay.rate(v, e) {
+                let t = steps as f64 * rate + self.comm.delay(v, e, 0);
+                if t <= self.cfg.t_c {
+                    arrivals[v] = Some(t);
+                }
+            }
+        }
+        // The k fastest arrivals form χ; everyone else is discarded.
+        let cutoff = wait::fastest_k(&arrivals, k, self.cfg.t_c);
+        let mut order: Vec<usize> = (0..n).filter(|&v| arrivals[v].is_some()).collect();
+        order.sort_by(|&a, &b2| arrivals[a].partial_cmp(&arrivals[b2]).unwrap());
+        let chi: Vec<usize> = order.into_iter().take(k).collect();
+
+        let mut q = vec![0usize; n];
+        let mut outputs: Vec<Option<Vec<f32>>> = vec![None; n];
+        for &v in &chi {
+            let idx = self.sample_idx(v, e, steps);
+            let out = self.workers[v].run_steps(&self.x, &idx, 0.0, self.consts);
+            q[v] = steps;
+            outputs[v] = Some(out.x_k);
+        }
+
+        let lambda = combine_lambda(CombinePolicy::Uniform, &q, &outputs);
+        self.apply_combine(&outputs, &lambda);
+        let comm = self.broadcast_charge(e);
+        let received = (0..n).map(|v| chi.contains(&v)).collect();
+        EpochStats { q, received, compute_secs: cutoff, comm_secs: comm, lambda }
+    }
+
+    /// Gradient Coding (Tandon et al.): coded full-gradient descent.
+    ///
+    /// Workers compute full gradients of their S+1 blocks (work ∝ shard
+    /// rows), send one coded vector; the master decodes the exact full
+    /// gradient from the fastest N−S and takes a GD step.
+    pub(super) fn epoch_gradient_coding(&mut self, e: usize, lr: f64) -> EpochStats {
+        let n = self.cfg.workers;
+        let code = self.gc.as_ref().expect("gradient code built").clone();
+        let k = n - code.s();
+
+        // Work model: processing R rows costs (R / batch) step-times.
+        let mut arrivals: Vec<Option<f64>> = vec![None; n];
+        for v in 0..n {
+            if let WorkerEpochRate::StepSecs(rate) = self.delay.rate(v, e) {
+                let work = self.shards[v].rows() as f64 / self.cfg.batch as f64;
+                let t = work * rate + self.comm.delay(v, e, 0);
+                if t <= self.cfg.t_c {
+                    arrivals[v] = Some(t);
+                }
+            }
+        }
+        let cutoff = wait::fastest_k(&arrivals, k, self.cfg.t_c);
+        let mut order: Vec<usize> = (0..n).filter(|&v| arrivals[v].is_some()).collect();
+        order.sort_by(|&a, &b| arrivals[a].partial_cmp(&arrivals[b]).unwrap());
+        let chi: Vec<usize> = order.into_iter().take(k).collect();
+
+        let mut q = vec![0usize; n];
+        let mut received_vec = vec![false; n];
+        // Real numerics: block gradients + encode + decode.
+        let mut coded: Vec<(usize, Vec<f32>)> = Vec::with_capacity(chi.len());
+        for &v in &chi {
+            let grads: Vec<Vec<f32>> = code
+                .blocks_of(v)
+                .iter()
+                .map(|&blk| self.block_gradient(blk))
+                .collect();
+            coded.push((v, code.encode(v, &grads)));
+            q[v] = self.shards[v].rows() / self.cfg.batch;
+            received_vec[v] = true;
+        }
+        if let Some(grad) = code.decode(&coded) {
+            // x ← x − lr · (mean gradient over the dataset).
+            let scale = -(lr as f32) / self.ds.rows() as f32;
+            crate::linalg::axpy(scale, &grad, &mut self.x);
+        }
+        // else: undecodable epoch (|χ| < N−S) — x unchanged, time burned.
+
+        let comm = self.broadcast_charge(e);
+        let lambda = vec![0.0; n];
+        EpochStats { q, received: received_vec, compute_secs: cutoff, comm_secs: comm, lambda }
+    }
+
+    /// Full gradient of block `blk`: 2 Σ_{i∈block} a_i (a_i·x − y_i),
+    /// computed over the master's dataset view.
+    fn block_gradient(&self, blk: usize) -> Vec<f32> {
+        let range = crate::partition::block_range(self.ds.rows(), self.cfg.workers, blk);
+        let d = self.ds.dim();
+        let mut g = vec![0.0f32; d];
+        for i in range {
+            let row = self.ds.a.row(i);
+            let r = 2.0 * (crate::linalg::dot_f32(row, &self.x) - self.ds.y[i]);
+            crate::linalg::axpy(r, row, &mut g);
+        }
+        g
+    }
+
+    /// Combine λ-weighted worker outputs into the master vector.
+    /// Workers with λ_v = 0 or no output are skipped (never touch NaN).
+    fn apply_combine(&mut self, outputs: &[Option<Vec<f32>>], lambda: &[f64]) {
+        let mut xs: Vec<&[f32]> = Vec::with_capacity(outputs.len());
+        let mut w: Vec<f64> = Vec::with_capacity(outputs.len());
+        for (out, &lv) in outputs.iter().zip(lambda.iter()) {
+            if lv > 0.0 {
+                if let Some(x) = out {
+                    xs.push(x);
+                    w.push(lv);
+                }
+            }
+        }
+        if xs.is_empty() {
+            return; // nobody reported: x_t = x_{t-1}
+        }
+        let mut combined = vec![0.0f32; self.x.len()];
+        weighted_sum(&xs, &w, &mut combined);
+        self.x = combined;
+    }
+
+    /// Communication charge for methods where the master's wait already
+    /// includes upload times: the downlink broadcast to the slowest
+    /// worker.
+    fn broadcast_charge(&self, e: usize) -> f64 {
+        (0..self.cfg.workers)
+            .map(|v| self.comm.delay(v, e, 1))
+            .fold(0.0f64, f64::max)
+    }
+
+}
+
+/// λ per policy over realized step counts (Algorithm 1 step 15 /
+/// Theorem 3). Workers without outputs always get λ = 0.
+pub fn combine_lambda(
+    policy: CombinePolicy,
+    q: &[usize],
+    outputs: &[Option<Vec<f32>>],
+) -> Vec<f64> {
+    let n = q.len();
+    let have: Vec<bool> = outputs.iter().map(|o| o.is_some()).collect();
+    match policy {
+        CombinePolicy::Proportional => {
+            let total: usize = q.iter().zip(&have).filter(|(_, &h)| h).map(|(&qv, _)| qv).sum();
+            if total == 0 {
+                return vec![0.0; n];
+            }
+            (0..n)
+                .map(|v| if have[v] { q[v] as f64 / total as f64 } else { 0.0 })
+                .collect()
+        }
+        CombinePolicy::Uniform => {
+            let cnt = have.iter().filter(|&&h| h).count();
+            if cnt == 0 {
+                return vec![0.0; n];
+            }
+            (0..n).map(|v| if have[v] { 1.0 / cnt as f64 } else { 0.0 }).collect()
+        }
+        CombinePolicy::FastestOnly => {
+            let best = (0..n).filter(|&v| have[v]).max_by_key(|&v| q[v]);
+            let mut lam = vec![0.0; n];
+            if let Some(b) = best {
+                lam[b] = 1.0;
+            }
+            lam
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn outs(n: usize, missing: &[usize]) -> Vec<Option<Vec<f32>>> {
+        (0..n)
+            .map(|v| if missing.contains(&v) { None } else { Some(vec![v as f32]) })
+            .collect()
+    }
+
+    #[test]
+    fn proportional_lambda_matches_theorem3() {
+        let q = [100usize, 50, 50, 0];
+        let lam = combine_lambda(CombinePolicy::Proportional, &q, &outs(4, &[]));
+        assert_eq!(lam, vec![0.5, 0.25, 0.25, 0.0]);
+    }
+
+    #[test]
+    fn missing_workers_get_zero_lambda() {
+        let q = [100usize, 100, 100];
+        let lam = combine_lambda(CombinePolicy::Proportional, &q, &outs(3, &[1]));
+        assert_eq!(lam, vec![0.5, 0.0, 0.5]);
+        let lam_u = combine_lambda(CombinePolicy::Uniform, &q, &outs(3, &[1]));
+        assert_eq!(lam_u, vec![0.5, 0.0, 0.5]);
+    }
+
+    #[test]
+    fn fastest_only_selects_max_q() {
+        let q = [10usize, 90, 40];
+        let lam = combine_lambda(CombinePolicy::FastestOnly, &q, &outs(3, &[]));
+        assert_eq!(lam, vec![0.0, 1.0, 0.0]);
+        // Fastest missing -> next best.
+        let lam2 = combine_lambda(CombinePolicy::FastestOnly, &q, &outs(3, &[1]));
+        assert_eq!(lam2, vec![0.0, 0.0, 1.0]);
+    }
+
+    #[test]
+    fn all_missing_gives_zero_vector() {
+        let q = [5usize, 5];
+        for p in [CombinePolicy::Proportional, CombinePolicy::Uniform, CombinePolicy::FastestOnly] {
+            let lam = combine_lambda(p, &q, &outs(2, &[0, 1]));
+            assert_eq!(lam, vec![0.0, 0.0]);
+        }
+    }
+}
+
+impl Trainer {
+    /// Parameter-server Async-SGD (paper §I): a discrete-event simulation
+    /// of one `horizon`-second window.
+    ///
+    /// Each worker loops independently: snapshot the master vector, run
+    /// `u = steps_per_update` local SGD steps, push the *delta*
+    /// `x_w − snapshot`; the master applies deltas as they arrive — no
+    /// barrier, so updates are computed against stale parameters (the
+    /// staleness the paper's §I cites as Async-SGD's failure mode at
+    /// scale). Events are processed in simulated-time order from a
+    /// binary heap, so the interleaving is exactly time-consistent.
+    pub(super) fn epoch_async(&mut self, e: usize, u: usize, horizon: f64) -> EpochStats {
+        use std::cmp::Reverse;
+        use std::collections::BinaryHeap;
+
+        let n = self.cfg.workers;
+        // (finish_time, worker, dispatch_count) min-heap. f64 is not Ord;
+        // order by bits (times are non-negative finite here).
+        #[derive(PartialEq, Eq, PartialOrd, Ord)]
+        struct Key(u64, usize, usize);
+        let key = |t: f64, v: usize, c: usize| Reverse(Key(t.to_bits(), v, c));
+
+        let mut heap = BinaryHeap::new();
+        let mut snapshots: Vec<Vec<f32>> = vec![Vec::new(); n];
+        let mut dispatch_count = vec![0usize; n];
+        let mut q = vec![0usize; n];
+        let mut received = vec![false; n];
+
+        // Initial dispatch: every live worker grabs the current x.
+        for v in 0..n {
+            match self.delay.rate(v, e) {
+                WorkerEpochRate::Dead => continue,
+                WorkerEpochRate::StepSecs(rate) => {
+                    let rt = self.comm.delay(v, e, 0) + self.comm.delay(v, e, 1);
+                    let finish = u as f64 * rate + rt;
+                    if finish <= horizon {
+                        snapshots[v] = self.x.clone();
+                        heap.push(key(finish, v, 0));
+                    }
+                }
+            }
+        }
+
+        while let Some(Reverse(Key(bits, v, c))) = heap.pop() {
+            let now = f64::from_bits(bits);
+            // Compute the worker's u steps from its snapshot (real
+            // numerics), apply the delta to the (possibly moved-on) x.
+            let mut rng = self.root.split("async-mb", v as u64, (e * 1_000_003 + c) as u64);
+            let rows = self.workers[v].shard_rows();
+            let idx: Vec<u32> = (0..u * self.cfg.batch).map(|_| rng.index(rows) as u32).collect();
+            let t_sched = (dispatch_count[v] * u) as f32;
+            let out = self.workers[v].run_steps(&snapshots[v], &idx, t_sched, self.consts);
+            for ((xm, &xw), &s) in self.x.iter_mut().zip(out.x_k.iter()).zip(snapshots[v].iter()) {
+                *xm += xw - s;
+            }
+            q[v] += u;
+            received[v] = true;
+            dispatch_count[v] += 1;
+
+            // Redispatch if the next round still fits the horizon.
+            if let WorkerEpochRate::StepSecs(rate) = self.delay.rate(v, e) {
+                let rt = self.comm.delay(v, e, 0) + self.comm.delay(v, e, 1);
+                let next = now + u as f64 * rate + rt;
+                if next <= horizon {
+                    snapshots[v] = self.x.clone();
+                    heap.push(key(next, v, c + 1));
+                }
+            }
+        }
+
+        let lambda = vec![0.0; n];
+        EpochStats { q, received, compute_secs: horizon, comm_secs: 0.0, lambda }
+    }
+}

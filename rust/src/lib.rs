@@ -1,0 +1,39 @@
+//! # anytime-sgd
+//!
+//! Production-quality reproduction of **"Anytime Stochastic Gradient
+//! Descent: A Time to Hear from all the Workers"** (Ferdinand & Draper,
+//! 2018) as a three-layer Rust + JAX + Pallas system:
+//!
+//! * **L3 (this crate)** — the distributed-SGD coordinator: fixed-time
+//!   epochs, work-proportional combining (Theorem 3), redundant data
+//!   placement (Table I), straggler simulation, and the paper's baselines
+//!   (wait-for-all Sync-SGD, fastest-(N−B), Gradient Coding).
+//! * **L2/L1 (python/compile)** — the JAX SGD block and Pallas kernels,
+//!   AOT-lowered to HLO text at build time (`make artifacts`); Python
+//!   never runs on the request path.
+//! * **runtime** — loads the AOT artifacts via the PJRT C API (`xla`
+//!   crate) and executes them from the coordinator's hot loop.
+//!
+//! See `DESIGN.md` for the system inventory and per-experiment index,
+//! and `EXPERIMENTS.md` for reproduction results.
+
+pub mod backend;
+pub mod benchkit;
+pub mod data;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod exec;
+pub mod figures;
+pub mod linalg;
+pub mod lm;
+pub mod methods;
+pub mod metrics;
+pub mod partition;
+pub mod rng;
+pub mod runtime;
+pub mod sim;
+pub mod straggler;
+pub mod ser;
+pub mod theory;
+pub mod testkit;

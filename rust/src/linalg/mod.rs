@@ -1,0 +1,347 @@
+//! Dense f32 linear algebra for the native backend and the metrics path.
+//!
+//! No BLAS is available in the image, so this is a small, cache-aware
+//! substrate: a row-major [`Matrix`], `gemv`/`gemv_t`, dot/axpy/norms,
+//! and the fused operations the native SGD hot loop needs. The kernels
+//! accumulate in f64 where it matters for reproducibility of the error
+//! metric (‖Ax − Ax*‖ over 5e5 rows is ill-conditioned in pure f32).
+
+mod solve;
+
+pub use solve::{lstsq, solve, solve_consistent};
+
+/// Row-major dense f32 matrix.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Matrix {
+    rows: usize,
+    cols: usize,
+    data: Vec<f32>,
+}
+
+impl Matrix {
+    /// Allocate a zero matrix.
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Self { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    /// Wrap an existing row-major buffer.
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Self {
+        assert_eq!(data.len(), rows * cols, "Matrix::from_vec: size mismatch");
+        Self { rows, cols, data }
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// Borrow row `i` as a slice.
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f32] {
+        debug_assert!(i < self.rows);
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    /// Mutable row access.
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        debug_assert!(i < self.rows);
+        &mut self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    /// The backing row-major slice.
+    pub fn as_slice(&self) -> &[f32] {
+        &self.data
+    }
+
+    /// Mutable backing slice.
+    pub fn as_mut_slice(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    /// Element access (row, col) — for tests; hot paths use rows.
+    #[inline]
+    pub fn get(&self, i: usize, j: usize) -> f32 {
+        self.data[i * self.cols + j]
+    }
+
+    /// Copy a subset of rows into a new matrix (minibatch gather).
+    pub fn gather_rows(&self, idx: &[usize]) -> Matrix {
+        let mut out = Matrix::zeros(idx.len(), self.cols);
+        for (k, &i) in idx.iter().enumerate() {
+            out.row_mut(k).copy_from_slice(self.row(i));
+        }
+        out
+    }
+
+    /// Gather rows into a preallocated row-major buffer (no allocation).
+    pub fn gather_rows_into(&self, idx: &[usize], out: &mut [f32]) {
+        assert_eq!(out.len(), idx.len() * self.cols);
+        for (k, &i) in idx.iter().enumerate() {
+            out[k * self.cols..(k + 1) * self.cols].copy_from_slice(self.row(i));
+        }
+    }
+}
+
+/// Dot product with f64 accumulation, 4-way unrolled.
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    let n = a.len();
+    let chunks = n / 4;
+    let (mut s0, mut s1, mut s2, mut s3) = (0.0f64, 0.0f64, 0.0f64, 0.0f64);
+    for c in 0..chunks {
+        let i = c * 4;
+        s0 += a[i] as f64 * b[i] as f64;
+        s1 += a[i + 1] as f64 * b[i + 1] as f64;
+        s2 += a[i + 2] as f64 * b[i + 2] as f64;
+        s3 += a[i + 3] as f64 * b[i + 3] as f64;
+    }
+    let mut s = s0 + s1 + s2 + s3;
+    for i in chunks * 4..n {
+        s += a[i] as f64 * b[i] as f64;
+    }
+    s
+}
+
+/// Fast f32-accumulated dot for the SGD hot loop (residual computation).
+/// 8-way unrolled; the minibatch residual tolerates f32 accumulation.
+/// (A 32-wide 4-bank variant was tried in the perf pass and measured
+/// ~20% slower — register pressure; see EXPERIMENTS.md §Perf.)
+#[inline]
+pub fn dot_f32(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let n = a.len();
+    let chunks = n / 8;
+    let mut acc = [0.0f32; 8];
+    for c in 0..chunks {
+        let i = c * 8;
+        for l in 0..8 {
+            acc[l] += a[i + l] * b[i + l];
+        }
+    }
+    let mut s = (acc[0] + acc[1]) + (acc[2] + acc[3]) + ((acc[4] + acc[5]) + (acc[6] + acc[7]));
+    for i in chunks * 8..n {
+        s += a[i] * b[i];
+    }
+    s
+}
+
+/// `y += alpha * x`.
+#[inline]
+pub fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
+    debug_assert_eq!(x.len(), y.len());
+    for (yi, xi) in y.iter_mut().zip(x.iter()) {
+        *yi += alpha * xi;
+    }
+}
+
+/// `y = A x` (row-major gemv). `y.len() == A.rows()`.
+pub fn gemv(a: &Matrix, x: &[f32], y: &mut [f32]) {
+    assert_eq!(x.len(), a.cols());
+    assert_eq!(y.len(), a.rows());
+    for i in 0..a.rows() {
+        y[i] = dot_f32(a.row(i), x);
+    }
+}
+
+/// `y = A^T r` for row-major A: accumulate `r[i] * A.row(i)` into y.
+pub fn gemv_t(a: &Matrix, r: &[f32], y: &mut [f32]) {
+    assert_eq!(r.len(), a.rows());
+    assert_eq!(y.len(), a.cols());
+    y.fill(0.0);
+    for i in 0..a.rows() {
+        axpy(r[i], a.row(i), y);
+    }
+}
+
+/// ‖x‖₂ with f64 accumulation.
+pub fn norm2(x: &[f32]) -> f64 {
+    dot(x, x).sqrt()
+}
+
+/// ‖a − b‖₂ with f64 accumulation.
+pub fn dist2(a: &[f32], b: &[f32]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut s = 0.0f64;
+    for (x, y) in a.iter().zip(b.iter()) {
+        let d = (*x - *y) as f64;
+        s += d * d;
+    }
+    s.sqrt()
+}
+
+/// Weighted sum of rows: `out = Σ_v w[v] * xs[v]` — the master's combine.
+///
+/// Accumulates in f64 to keep combining exactly associative-independent
+/// (the same result regardless of worker arrival order).
+pub fn weighted_sum(xs: &[&[f32]], w: &[f64], out: &mut [f32]) {
+    assert_eq!(xs.len(), w.len());
+    let d = out.len();
+    for x in xs {
+        assert_eq!(x.len(), d, "weighted_sum: ragged inputs");
+    }
+    // Column-major accumulation order over a row chunk keeps all worker
+    // vectors' chunks hot in cache.
+    const CHUNK: usize = 4096;
+    let mut acc = vec![0.0f64; CHUNK.min(d)];
+    let mut start = 0;
+    while start < d {
+        let end = (start + CHUNK).min(d);
+        let len = end - start;
+        acc[..len].fill(0.0);
+        for (x, &wv) in xs.iter().zip(w.iter()) {
+            if wv == 0.0 {
+                continue;
+            }
+            for (a, &xv) in acc[..len].iter_mut().zip(x[start..end].iter()) {
+                *a += wv * xv as f64;
+            }
+        }
+        for (o, &a) in out[start..end].iter_mut().zip(acc[..len].iter()) {
+            *o = a as f32;
+        }
+        start = end;
+    }
+}
+
+/// Blocked `C = A B` (row-major, f32 accumulation) — used by tests and
+/// the MSD-like generator's low-rank mixing; not on the SGD hot path.
+pub fn gemm(a: &Matrix, b: &Matrix, c: &mut Matrix) {
+    assert_eq!(a.cols(), b.rows());
+    assert_eq!(c.rows(), a.rows());
+    assert_eq!(c.cols(), b.cols());
+    c.as_mut_slice().fill(0.0);
+    const BK: usize = 64;
+    let (m, k, n) = (a.rows(), a.cols(), b.cols());
+    for k0 in (0..k).step_by(BK) {
+        let kmax = (k0 + BK).min(k);
+        for i in 0..m {
+            let arow = a.row(i);
+            let crow = c.row_mut(i);
+            for kk in k0..kmax {
+                let aik = arow[kk];
+                if aik == 0.0 {
+                    continue;
+                }
+                let brow = &b.data[kk * n..(kk + 1) * n];
+                axpy(aik, brow, crow);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Xoshiro256pp;
+
+    fn randn_matrix(r: usize, c: usize, seed: u64) -> Matrix {
+        let mut rng = Xoshiro256pp::seed_from_u64(seed);
+        let mut m = Matrix::zeros(r, c);
+        rng.fill_normal_f32(m.as_mut_slice());
+        m
+    }
+
+    #[test]
+    fn dot_matches_naive() {
+        let a: Vec<f32> = (0..103).map(|i| (i as f32) * 0.1 - 5.0).collect();
+        let b: Vec<f32> = (0..103).map(|i| (i as f32) * -0.03 + 1.0).collect();
+        let naive: f64 = a.iter().zip(&b).map(|(x, y)| *x as f64 * *y as f64).sum();
+        assert!((dot(&a, &b) - naive).abs() < 1e-9);
+        assert!((dot_f32(&a, &b) as f64 - naive).abs() < 1e-2);
+    }
+
+    #[test]
+    fn gemv_matches_naive() {
+        let a = randn_matrix(17, 31, 1);
+        let x: Vec<f32> = (0..31).map(|i| (i as f32).sin()).collect();
+        let mut y = vec![0.0f32; 17];
+        gemv(&a, &x, &mut y);
+        for i in 0..17 {
+            let naive: f32 = a.row(i).iter().zip(&x).map(|(p, q)| p * q).sum();
+            assert!((y[i] - naive).abs() < 1e-3, "row {i}: {} vs {naive}", y[i]);
+        }
+    }
+
+    #[test]
+    fn gemv_t_matches_naive() {
+        let a = randn_matrix(9, 13, 2);
+        let r: Vec<f32> = (0..9).map(|i| (i as f32) * 0.25 - 1.0).collect();
+        let mut y = vec![0.0f32; 13];
+        gemv_t(&a, &r, &mut y);
+        for j in 0..13 {
+            let naive: f32 = (0..9).map(|i| a.get(i, j) * r[i]).sum();
+            assert!((y[j] - naive).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn gemm_matches_naive_small() {
+        let a = randn_matrix(7, 11, 3);
+        let b = randn_matrix(11, 5, 4);
+        let mut c = Matrix::zeros(7, 5);
+        gemm(&a, &b, &mut c);
+        for i in 0..7 {
+            for j in 0..5 {
+                let naive: f32 = (0..11).map(|k| a.get(i, k) * b.get(k, j)).sum();
+                assert!((c.get(i, j) - naive).abs() < 1e-3);
+            }
+        }
+    }
+
+    #[test]
+    fn weighted_sum_matches_naive_and_is_order_independent() {
+        let d = 10_000;
+        let xs: Vec<Vec<f32>> = (0..5).map(|v| {
+            let mut rng = Xoshiro256pp::seed_from_u64(100 + v);
+            let mut x = vec![0.0f32; d];
+            rng.fill_normal_f32(&mut x);
+            x
+        }).collect();
+        let w = [0.4, 0.0, 0.25, 0.2, 0.15];
+        let refs: Vec<&[f32]> = xs.iter().map(|x| x.as_slice()).collect();
+        let mut out = vec![0.0f32; d];
+        weighted_sum(&refs, &w, &mut out);
+        // Naive check at a few positions.
+        for &j in &[0usize, 1, 4999, d - 1] {
+            let naive: f64 = xs.iter().zip(&w).map(|(x, &wv)| wv * x[j] as f64).sum();
+            assert!((out[j] as f64 - naive).abs() < 1e-5);
+        }
+        // Permuted order gives bit-identical output (f64 accumulation is
+        // not associative in general, but we check the permutation the
+        // coordinator actually performs: reordering *workers*).
+        let perm = [2usize, 0, 4, 1, 3];
+        let refs2: Vec<&[f32]> = perm.iter().map(|&i| xs[i].as_slice()).collect();
+        let w2: Vec<f64> = perm.iter().map(|&i| w[i]).collect();
+        let mut out2 = vec![0.0f32; d];
+        weighted_sum(&refs2, &w2, &mut out2);
+        for j in 0..d {
+            assert!((out[j] - out2[j]).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn gather_rows_into_matches_gather_rows() {
+        let a = randn_matrix(20, 6, 5);
+        let idx = [3usize, 19, 0, 7];
+        let g = a.gather_rows(&idx);
+        let mut buf = vec![0.0f32; idx.len() * 6];
+        a.gather_rows_into(&idx, &mut buf);
+        assert_eq!(g.as_slice(), &buf[..]);
+    }
+
+    #[test]
+    fn norms() {
+        assert!((norm2(&[3.0, 4.0]) - 5.0).abs() < 1e-9);
+        assert!((dist2(&[1.0, 1.0], &[4.0, 5.0]) - 5.0).abs() < 1e-9);
+    }
+
+    #[test]
+    #[should_panic]
+    fn from_vec_size_mismatch_panics() {
+        Matrix::from_vec(2, 3, vec![0.0; 5]);
+    }
+}

@@ -1,0 +1,202 @@
+//! Small dense linear solvers (f64) — Gaussian elimination with partial
+//! pivoting, plus a minimum-norm least-squares fallback via normal
+//! equations. Used by the gradient-coding decoder (systems are N×N with
+//! N = worker count, so dense O(n³) is plenty).
+
+/// Solve `A x = b` for square `A` (row-major, n×n) by Gaussian
+/// elimination with partial pivoting. Returns `None` if singular to
+/// working precision.
+pub fn solve(a: &[f64], b: &[f64], n: usize) -> Option<Vec<f64>> {
+    assert_eq!(a.len(), n * n);
+    assert_eq!(b.len(), n);
+    let mut m = a.to_vec();
+    let mut rhs = b.to_vec();
+    for col in 0..n {
+        // Pivot.
+        let mut piv = col;
+        let mut best = m[col * n + col].abs();
+        for r in col + 1..n {
+            let v = m[r * n + col].abs();
+            if v > best {
+                best = v;
+                piv = r;
+            }
+        }
+        if best < 1e-12 {
+            return None;
+        }
+        if piv != col {
+            for j in 0..n {
+                m.swap(col * n + j, piv * n + j);
+            }
+            rhs.swap(col, piv);
+        }
+        // Eliminate below.
+        let d = m[col * n + col];
+        for r in col + 1..n {
+            let f = m[r * n + col] / d;
+            if f == 0.0 {
+                continue;
+            }
+            for j in col..n {
+                m[r * n + j] -= f * m[col * n + j];
+            }
+            rhs[r] -= f * rhs[col];
+        }
+    }
+    // Back substitution.
+    let mut x = vec![0.0; n];
+    for col in (0..n).rev() {
+        let mut s = rhs[col];
+        for j in col + 1..n {
+            s -= m[col * n + j] * x[j];
+        }
+        x[col] = s / m[col * n + col];
+    }
+    Some(x)
+}
+
+/// Solve a *consistent* (possibly overdetermined) system `A x = b`
+/// (A is rows×cols row-major, rows ≥ cols) by Gaussian elimination with
+/// full row pivoting across all equations. Avoids the normal equations'
+/// condition-number squaring; returns `None` if no pivot is found.
+/// The caller should verify the residual — consistency is assumed, not
+/// checked here.
+pub fn solve_consistent(a: &[f64], b: &[f64], rows: usize, cols: usize) -> Option<Vec<f64>> {
+    assert_eq!(a.len(), rows * cols);
+    assert_eq!(b.len(), rows);
+    assert!(rows >= cols);
+    let mut m = a.to_vec();
+    let mut rhs = b.to_vec();
+    // Forward elimination: for each column, pivot over ALL remaining rows.
+    for col in 0..cols {
+        let mut piv = col;
+        let mut best = 0.0f64;
+        for r in col..rows {
+            let v = m[r * cols + col].abs();
+            if v > best {
+                best = v;
+                piv = r;
+            }
+        }
+        if best < 1e-12 {
+            return None;
+        }
+        if piv != col {
+            for j in 0..cols {
+                m.swap(col * cols + j, piv * cols + j);
+            }
+            rhs.swap(col, piv);
+        }
+        let d = m[col * cols + col];
+        for r in col + 1..rows {
+            let f = m[r * cols + col] / d;
+            if f == 0.0 {
+                continue;
+            }
+            for j in col..cols {
+                m[r * cols + j] -= f * m[col * cols + j];
+            }
+            rhs[r] -= f * rhs[col];
+        }
+    }
+    // Back substitution on the top cols×cols triangle.
+    let mut x = vec![0.0; cols];
+    for col in (0..cols).rev() {
+        let mut s = rhs[col];
+        for j in col + 1..cols {
+            s -= m[col * cols + j] * x[j];
+        }
+        x[col] = s / m[col * cols + col];
+    }
+    Some(x)
+}
+
+/// Solve the underdetermined/overdetermined `A x = b` (A is r×c,
+/// row-major) in the least-squares sense via normal equations
+/// `AᵀA x = Aᵀ b` with Tikhonov jitter for rank deficiency.
+pub fn lstsq(a: &[f64], b: &[f64], rows: usize, cols: usize) -> Option<Vec<f64>> {
+    assert_eq!(a.len(), rows * cols);
+    assert_eq!(b.len(), rows);
+    let mut ata = vec![0.0; cols * cols];
+    let mut atb = vec![0.0; cols];
+    for i in 0..rows {
+        for j in 0..cols {
+            let aij = a[i * cols + j];
+            if aij == 0.0 {
+                continue;
+            }
+            atb[j] += aij * b[i];
+            for k in 0..cols {
+                ata[j * cols + k] += aij * a[i * cols + k];
+            }
+        }
+    }
+    // Jitter keeps the decode well-posed when the receive set is larger
+    // than strictly necessary (redundant rows).
+    let trace: f64 = (0..cols).map(|j| ata[j * cols + j]).sum();
+    let eps = 1e-10 * (trace / cols as f64).max(1e-300);
+    for j in 0..cols {
+        ata[j * cols + j] += eps;
+    }
+    solve(&ata, &atb, cols)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn solves_known_system() {
+        // [2 1; 1 3] x = [5; 10] -> x = [1; 3]
+        let a = [2.0, 1.0, 1.0, 3.0];
+        let b = [5.0, 10.0];
+        let x = solve(&a, &b, 2).unwrap();
+        assert!((x[0] - 1.0).abs() < 1e-12);
+        assert!((x[1] - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn pivoting_handles_zero_diagonal() {
+        // [0 1; 1 0] x = [2; 3] -> x = [3; 2]
+        let a = [0.0, 1.0, 1.0, 0.0];
+        let x = solve(&a, &[2.0, 3.0], 2).unwrap();
+        assert_eq!(x, vec![3.0, 2.0]);
+    }
+
+    #[test]
+    fn singular_returns_none() {
+        let a = [1.0, 2.0, 2.0, 4.0];
+        assert!(solve(&a, &[1.0, 2.0], 2).is_none());
+    }
+
+    #[test]
+    fn random_round_trip() {
+        use crate::rng::Xoshiro256pp;
+        let mut rng = Xoshiro256pp::seed_from_u64(4);
+        for n in [1usize, 3, 8, 15] {
+            let a: Vec<f64> = (0..n * n).map(|_| rng.normal()).collect();
+            let x_true: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            let mut b = vec![0.0; n];
+            for i in 0..n {
+                for j in 0..n {
+                    b[i] += a[i * n + j] * x_true[j];
+                }
+            }
+            let x = solve(&a, &b, n).unwrap();
+            for (got, want) in x.iter().zip(&x_true) {
+                assert!((got - want).abs() < 1e-8, "n={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn lstsq_overdetermined_consistent() {
+        // 3 equations, 2 unknowns, consistent system.
+        let a = [1.0, 0.0, 0.0, 1.0, 1.0, 1.0];
+        let b = [2.0, 3.0, 5.0];
+        let x = lstsq(&a, &b, 3, 2).unwrap();
+        assert!((x[0] - 2.0).abs() < 1e-5);
+        assert!((x[1] - 3.0).abs() < 1e-5);
+    }
+}

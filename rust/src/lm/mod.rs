@@ -1,0 +1,300 @@
+//! Transformer-LM training under anytime coordination — the end-to-end
+//! driver's engine room.
+//!
+//! The LM train step (forward + backward + SGD update, a single HLO
+//! program per model size) is AOT-compiled by `python/compile/aot.py`;
+//! this module owns everything request-path: parameter storage, GPT-2
+//! style initialization, batch construction from the byte corpus, PJRT
+//! execution, and the anytime epoch protocol (time-budgeted steps per
+//! worker, work-proportional parameter averaging — the paper's Theorem-3
+//! rule applied to a 12-layer parameter pytree instead of a vector).
+
+use crate::data::corpus;
+use crate::rng::Xoshiro256pp;
+use crate::runtime::Engine;
+use crate::straggler::{DelayModel, WorkerEpochRate};
+use anyhow::{anyhow, Context, Result};
+use std::sync::Arc;
+
+/// Static model description recovered from the artifact manifest.
+#[derive(Clone, Debug)]
+pub struct LmSpec {
+    pub size: String,
+    pub batch: usize,
+    pub seq_len: usize,
+    pub vocab: usize,
+    pub n_params: usize,
+    /// (name, shape) per parameter, in PJRT argument order.
+    pub params: Vec<(String, Vec<usize>)>,
+}
+
+/// Executes the `lm_step_*` / `lm_loss_*` artifacts.
+pub struct LmRunner {
+    engine: Arc<Engine>,
+    step_name: String,
+    loss_name: String,
+    pub spec: LmSpec,
+}
+
+impl LmRunner {
+    /// Bind to a model size present in the artifacts (e.g. "tiny",
+    /// "small", "large").
+    pub fn new(engine: Arc<Engine>, size: &str) -> Result<Self> {
+        let step_name = format!("lm_step_{size}");
+        let loss_name = format!("lm_loss_{size}");
+        let info = engine
+            .manifest()
+            .get(&step_name)
+            .ok_or_else(|| anyhow!("no {step_name} artifact — run `make artifacts` with --lm {size}"))?;
+        let p = &info.params;
+        let order = p
+            .get("param_order")
+            .and_then(|v| v.as_arr())
+            .ok_or_else(|| anyhow!("{step_name}: manifest missing param_order"))?;
+        // inputs = tokens, targets, lr, then params in order.
+        let param_inputs = &info.inputs[3..];
+        anyhow::ensure!(param_inputs.len() == order.len(), "manifest param count mismatch");
+        let params = order
+            .iter()
+            .zip(param_inputs)
+            .map(|(n, io)| (n.as_str().unwrap_or_default().to_string(), io.shape.clone()))
+            .collect();
+        let spec = LmSpec {
+            size: size.to_string(),
+            batch: p.get_usize("batch").context("batch")?,
+            seq_len: p.get_usize("seq_len").context("seq_len")?,
+            vocab: p.get_usize("vocab").context("vocab")?,
+            n_params: p.get_usize("n_params").context("n_params")?,
+            params,
+        };
+        Ok(Self { engine, step_name, loss_name, spec })
+    }
+
+    /// GPT-2-style initialization (normal(0, 0.02) weights with residual
+    /// scaling, zero biases, unit LN scales) — mirrors
+    /// `transformer.init_params` semantically; exact values differ (the
+    /// artifact is init-agnostic).
+    pub fn init_params(&self, seed: u64) -> Vec<Vec<f32>> {
+        let root = Xoshiro256pp::seed_from_u64(seed);
+        let n_layer = self
+            .spec
+            .params
+            .iter()
+            .filter(|(n, _)| n.ends_with("attn.wqkv"))
+            .count()
+            .max(1);
+        self.spec
+            .params
+            .iter()
+            .enumerate()
+            .map(|(i, (name, shape))| {
+                let len: usize = shape.iter().product();
+                if name.ends_with(".scale") {
+                    vec![1.0; len]
+                } else if name.ends_with(".bias")
+                    || name.ends_with(".bqkv")
+                    || name.ends_with(".bo")
+                    || name.ends_with(".bi")
+                {
+                    vec![0.0; len]
+                } else {
+                    let mut rng = root.split("lm-init", i as u64, 0);
+                    let mut buf = vec![0.0f32; len];
+                    rng.fill_normal_f32(&mut buf);
+                    let scale = if name.ends_with("attn.wo") || name.ends_with("mlp.wo") {
+                        0.02 / (2.0 * n_layer as f32).sqrt()
+                    } else {
+                        0.02
+                    };
+                    for b in buf.iter_mut() {
+                        *b *= scale;
+                    }
+                    buf
+                }
+            })
+            .collect()
+    }
+
+    fn upload_params(&self, params: &[Vec<f32>]) -> Result<Vec<crate::runtime::DeviceBuf>> {
+        params
+            .iter()
+            .zip(&self.spec.params)
+            .map(|(p, (_, shape))| self.engine.upload_f32(p, shape))
+            .collect()
+    }
+
+    /// Run `batches.len()` train steps in place; returns per-step losses.
+    pub fn train_steps(
+        &self,
+        params: &mut Vec<Vec<f32>>,
+        batches: &[(Vec<i32>, Vec<i32>)],
+        lr: f32,
+    ) -> Result<Vec<f32>> {
+        let mut losses = Vec::with_capacity(batches.len());
+        let dims = [self.spec.batch, self.spec.seq_len];
+        for (tokens, targets) in batches {
+            let t_buf = self.engine.upload_i32(tokens, &dims)?;
+            let y_buf = self.engine.upload_i32(targets, &dims)?;
+            let lr_buf = self.engine.upload_f32(&[lr], &[1])?;
+            let p_bufs = self.upload_params(params)?;
+            let mut args: Vec<&crate::runtime::DeviceBuf> = vec![&t_buf, &y_buf, &lr_buf];
+            args.extend(p_bufs.iter());
+            let outs = self.engine.exec(&self.step_name, &args)?;
+            anyhow::ensure!(outs.len() == 1 + params.len(), "lm_step output arity");
+            losses.push(outs[0].data[0]);
+            for (p, o) in params.iter_mut().zip(outs.into_iter().skip(1)) {
+                *p = o.data;
+            }
+        }
+        Ok(losses)
+    }
+
+    /// Cross-entropy on one batch (no update).
+    pub fn eval_loss(&self, params: &[Vec<f32>], batch: &(Vec<i32>, Vec<i32>)) -> Result<f32> {
+        let dims = [self.spec.batch, self.spec.seq_len];
+        let t_buf = self.engine.upload_i32(&batch.0, &dims)?;
+        let y_buf = self.engine.upload_i32(&batch.1, &dims)?;
+        let p_bufs = self.upload_params(params)?;
+        let mut args: Vec<&crate::runtime::DeviceBuf> = vec![&t_buf, &y_buf];
+        args.extend(p_bufs.iter());
+        let outs = self.engine.exec(&self.loss_name, &args)?;
+        Ok(outs[0].data[0])
+    }
+}
+
+/// Batch sampler over a token stream (next-token prediction windows).
+pub struct BatchSampler {
+    tokens: Vec<u16>,
+    batch: usize,
+    seq_len: usize,
+}
+
+impl BatchSampler {
+    pub fn new(tokens: Vec<u16>, batch: usize, seq_len: usize) -> Self {
+        assert!(tokens.len() > seq_len + 1, "corpus shorter than one window");
+        Self { tokens, batch, seq_len }
+    }
+
+    /// Sample one (tokens, targets) batch with the given stream.
+    pub fn sample(&self, rng: &mut Xoshiro256pp) -> (Vec<i32>, Vec<i32>) {
+        let mut xs = Vec::with_capacity(self.batch * self.seq_len);
+        let mut ys = Vec::with_capacity(self.batch * self.seq_len);
+        for _ in 0..self.batch {
+            let start = rng.index(self.tokens.len() - self.seq_len - 1);
+            for j in 0..self.seq_len {
+                xs.push(self.tokens[start + j] as i32);
+                ys.push(self.tokens[start + j + 1] as i32);
+            }
+        }
+        (xs, ys)
+    }
+}
+
+/// One evaluated point of the LM run.
+#[derive(Clone, Copy, Debug)]
+pub struct LmPoint {
+    pub epoch: usize,
+    pub sim_time: f64,
+    pub eval_loss: f32,
+    pub total_q: usize,
+}
+
+/// Anytime coordination over LM workers: each epoch every worker runs
+/// time-budgeted train steps from the combined parameters; the master
+/// averages parameter sets with Theorem-3 weights λ_v = q_v/Σq.
+pub struct AnytimeLm {
+    pub runner: LmRunner,
+    pub params: Vec<Vec<f32>>,
+    sampler: BatchSampler,
+    eval_batch: (Vec<i32>, Vec<i32>),
+    delay: DelayModel,
+    root: Xoshiro256pp,
+    n_workers: usize,
+    lr: f32,
+    sim_time: f64,
+}
+
+impl AnytimeLm {
+    pub fn new(
+        runner: LmRunner,
+        corpus_bytes: usize,
+        n_workers: usize,
+        lr: f32,
+        env: crate::straggler::StragglerEnv,
+        seed: u64,
+    ) -> Result<Self> {
+        let text = corpus::tiny_corpus(corpus_bytes, seed);
+        let tokens = corpus::encode(&text);
+        // Hold out the final 10% for eval.
+        let split = tokens.len() * 9 / 10;
+        let (train, held) = (tokens[..split].to_vec(), tokens[split..].to_vec());
+        let sampler = BatchSampler::new(train, runner.spec.batch, runner.spec.seq_len);
+        let held_sampler = BatchSampler::new(held, runner.spec.batch, runner.spec.seq_len);
+        let root = Xoshiro256pp::seed_from_u64(seed);
+        let mut eval_rng = root.split("lm-eval", 0, 0);
+        let eval_batch = held_sampler.sample(&mut eval_rng);
+        let params = runner.init_params(seed);
+        Ok(Self {
+            runner,
+            params,
+            sampler,
+            eval_batch,
+            delay: DelayModel::new(env, seed),
+            root,
+            n_workers,
+            lr,
+            sim_time: 0.0,
+        })
+    }
+
+    /// Evaluate held-out loss of the combined parameters.
+    pub fn eval(&self) -> Result<f32> {
+        self.runner.eval_loss(&self.params, &self.eval_batch)
+    }
+
+    /// One anytime epoch with step budget `t` seconds per worker and a
+    /// per-worker step cap; returns (q profile, mean train loss).
+    pub fn run_epoch(&mut self, e: usize, t: f64, max_steps: usize) -> Result<(Vec<usize>, f32)> {
+        let mut q = vec![0usize; self.n_workers];
+        let mut outputs: Vec<Option<Vec<Vec<f32>>>> = vec![None; self.n_workers];
+        let mut loss_sum = 0.0f32;
+        let mut loss_n = 0usize;
+        for v in 0..self.n_workers {
+            let (qv, _) = self.delay.steps_within(v, e, t, max_steps);
+            if qv == 0 || matches!(self.delay.rate(v, e), WorkerEpochRate::Dead) {
+                continue;
+            }
+            let mut rng = self.root.split("lm-batches", v as u64, e as u64);
+            let batches: Vec<_> = (0..qv).map(|_| self.sampler.sample(&mut rng)).collect();
+            let mut wp = self.params.clone();
+            let losses = self.runner.train_steps(&mut wp, &batches, self.lr)?;
+            loss_sum += losses.iter().sum::<f32>();
+            loss_n += losses.len();
+            q[v] = qv;
+            outputs[v] = Some(wp);
+        }
+        // Theorem-3 combine across the full parameter pytree.
+        let lambda = crate::theory::optimal_lambda(&q);
+        if lambda.iter().any(|&l| l > 0.0) {
+            for (pi, slot) in self.params.iter_mut().enumerate() {
+                let xs: Vec<&[f32]> = outputs
+                    .iter()
+                    .zip(&lambda)
+                    .filter(|(o, &l)| o.is_some() && l > 0.0)
+                    .map(|(o, _)| o.as_ref().unwrap()[pi].as_slice())
+                    .collect();
+                let w: Vec<f64> = lambda.iter().copied().filter(|&l| l > 0.0).collect();
+                let mut combined = vec![0.0f32; slot.len()];
+                crate::linalg::weighted_sum(&xs, &w, &mut combined);
+                *slot = combined;
+            }
+        }
+        self.sim_time += t;
+        let mean_loss = if loss_n > 0 { loss_sum / loss_n as f32 } else { f32::NAN };
+        Ok((q, mean_loss))
+    }
+
+    pub fn sim_time(&self) -> f64 {
+        self.sim_time
+    }
+}

@@ -1,0 +1,288 @@
+//! `anytime-sgd` CLI — the leader entrypoint.
+//!
+//! Subcommands:
+//! * `train`     — run one configuration (preset, JSON file, or flags).
+//! * `figures`   — regenerate the paper's figures (fig1..fig6, theory,
+//!                 ablations, all); writes CSV/JSON under `results/`.
+//! * `partition` — print Table I for any (N, S) and validate it.
+//! * `inspect`   — list the AOT artifacts the runtime would load.
+
+use anyhow::{bail, Result};
+use anytime_sgd::cli::{Command, FlagKind};
+use anytime_sgd::config::{Backend, RunConfig};
+use anytime_sgd::coordinator::Trainer;
+use anytime_sgd::figures::{self, FigOpts};
+use std::path::Path;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let code = match dispatch(&args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+fn usage() -> String {
+    "anytime-sgd — Anytime Stochastic Gradient Descent (Ferdinand & Draper '18)\n\n\
+     Subcommands:\n\
+       train      run one configuration\n\
+       figures    regenerate paper figures (fig1..fig6 | theory | ablations |\n\
+                  variance | async | logreg | all)\n\
+       partition  print + validate the Table-I data assignment\n\
+       inspect    list AOT artifacts\n\n\
+     Run `anytime-sgd <subcommand> --help` for flags.\n"
+        .to_string()
+}
+
+fn dispatch(args: &[String]) -> Result<()> {
+    let Some(sub) = args.first() else {
+        print!("{}", usage());
+        return Ok(());
+    };
+    let rest = &args[1..];
+    match sub.as_str() {
+        "train" => cmd_train(rest),
+        "figures" => cmd_figures(rest),
+        "partition" => cmd_partition(rest),
+        "inspect" => cmd_inspect(rest),
+        "--help" | "-h" | "help" => {
+            print!("{}", usage());
+            Ok(())
+        }
+        other => bail!("unknown subcommand `{other}`\n\n{}", usage()),
+    }
+}
+
+fn parse_backend(s: &str) -> Result<Backend> {
+    match s {
+        "native" => Ok(Backend::Native),
+        "xla" => Ok(Backend::Xla),
+        other => bail!("unknown backend `{other}` (native|xla)"),
+    }
+}
+
+fn cmd_train(args: &[String]) -> Result<()> {
+    let cmd = Command::new("train", "run one training configuration")
+        .flag("preset", FlagKind::Str, None, "figure preset name (e.g. fig3-anytime)")
+        .flag("config", FlagKind::Str, None, "path to a JSON run config")
+        .flag("backend", FlagKind::Str, Some("native"), "compute backend: native | xla")
+        .flag("epochs", FlagKind::Int, None, "override epoch count")
+        .flag("seed", FlagKind::Int, None, "override root seed")
+        .flag("paper-scale", FlagKind::Bool, None, "use the paper's exact data sizes")
+        .flag("out", FlagKind::Str, Some("results"), "output directory for the trace CSV")
+        .flag("events", FlagKind::Str, None, "write a JSONL telemetry stream to this path")
+        .flag("wallclock", FlagKind::Bool, None, "run under REAL time (anytime + native only)")
+        .flag("time-scale", FlagKind::Float, Some("0.001"), "wall-clock compression factor");
+    let m = cmd.parse(args).map_err(|e| anyhow::anyhow!("{e}"))?;
+
+    let mut cfg = if let Some(path) = m.get("config") {
+        let text = std::fs::read_to_string(path)?;
+        let v = anytime_sgd::ser::parse(&text).map_err(|e| anyhow::anyhow!("{path}: {e}"))?;
+        RunConfig::from_json(&v)?
+    } else if let Some(p) = m.get("preset") {
+        RunConfig::preset(p)?
+    } else {
+        bail!("train needs --preset or --config (try `figures all` for everything)");
+    };
+    if m.bool_of("paper-scale") {
+        cfg = cfg.paper_scale();
+    }
+    if m.is_set("epochs") {
+        cfg.epochs = m.usize_of("epochs");
+    }
+    if m.is_set("seed") {
+        cfg.seed = m.u64_of("seed");
+    }
+    cfg.backend = parse_backend(&m.str_of("backend"))?;
+
+    eprintln!(
+        "train: {} | data {:?} | N={} S={} | backend {:?} | {} epochs",
+        cfg.name, cfg.data, cfg.workers, cfg.redundancy, cfg.backend, cfg.epochs
+    );
+    if m.bool_of("wallclock") {
+        // Real-time execution path (threaded workers, real T budgets).
+        let ds = std::sync::Arc::new(anytime_sgd::coordinator::build_dataset(&cfg));
+        let scale = m.f64_of("time-scale");
+        let t0 = std::time::Instant::now();
+        let res = anytime_sgd::coordinator::wallclock::run_wallclock(&cfg, ds, scale)?;
+        eprintln!("wall-clock mode: {:.2}s real at scale {scale}", t0.elapsed().as_secs_f64());
+        let mut f = anytime_sgd::metrics::Figure::new("run-wallclock", "time");
+        f.traces.push(res.trace);
+        println!("{}", f.render_table());
+        let path = f.write(Path::new(&m.str_of("out")))?;
+        eprintln!("trace written to {}", path.display());
+        return Ok(());
+    }
+
+    let t0 = std::time::Instant::now();
+    let mut tr = Trainer::new(cfg)?;
+    if let Some(p) = m.get("events") {
+        tr = tr.with_events(anytime_sgd::metrics::events::EventLog::create(Path::new(p))?);
+    }
+    let res = tr.run();
+    eprintln!("wall-clock: {:.2}s (simulated: {:.1}s)", t0.elapsed().as_secs_f64(), tr.now());
+
+    let mut fig = anytime_sgd::metrics::Figure::new(res.trace.label.clone(), "time");
+    println!("{}", {
+        let mut f = anytime_sgd::metrics::Figure::new("run", "time");
+        f.traces.push(res.trace.clone());
+        f.render_table()
+    });
+    fig.traces.push(res.trace);
+    let path = fig.write(Path::new(&m.str_of("out")))?;
+    eprintln!("trace written to {}", path.display());
+    Ok(())
+}
+
+fn fig_opts(m: &anytime_sgd::cli::Matches) -> Result<FigOpts> {
+    Ok(FigOpts {
+        paper_scale: m.bool_of("paper-scale"),
+        epochs: m.is_set("epochs").then(|| m.usize_of("epochs")),
+        seed: m.is_set("seed").then(|| m.u64_of("seed")),
+        backend: match m.get("backend") {
+            Some(b) => Some(parse_backend(b)?),
+            None => None,
+        },
+    })
+}
+
+fn cmd_figures(args: &[String]) -> Result<()> {
+    let cmd = Command::new("figures", "regenerate paper figures")
+        .flag("epochs", FlagKind::Int, None, "override epoch count")
+        .flag("seed", FlagKind::Int, None, "override root seed")
+        .flag("paper-scale", FlagKind::Bool, None, "use the paper's exact data sizes")
+        .flag("backend", FlagKind::Str, None, "compute backend override: native | xla")
+        .flag("out", FlagKind::Str, Some("results"), "output directory");
+    let m = cmd.parse(args).map_err(|e| anyhow::anyhow!("{e}"))?;
+    let which: Vec<String> = if m.positional.is_empty() {
+        vec!["all".into()]
+    } else {
+        m.positional.clone()
+    };
+    let o = fig_opts(&m)?;
+    let out = std::path::PathBuf::from(m.str_of("out"));
+    std::fs::create_dir_all(&out)?;
+
+    let all = which.iter().any(|w| w == "all");
+    let want = |name: &str| all || which.iter().any(|w| w == name);
+
+    if want("fig1") {
+        let (h, _) = figures::fig1(&o)?;
+        println!("== Fig 1: task finishing-time histogram (20 workers, 5000 tasks) ==");
+        print!("{}", h.render(48));
+        std::fs::write(out.join("fig1_finishing_times.csv"), h.to_csv())?;
+        println!("-> results/fig1_finishing_times.csv\n");
+    }
+    if want("fig2") {
+        let (iters, fig) = figures::fig2(&o)?;
+        println!("== Fig 2(a): iterations per worker in one epoch ==");
+        let qmax = *iters.iter().max().unwrap_or(&1);
+        for (v, q) in iters.iter().enumerate() {
+            println!("  W{:<3} {q:>8}  {}", v + 1, "#".repeat(q * 40 / qmax.max(1)));
+        }
+        print!("{}", fig.render_table());
+        fig.write(&out)?;
+        println!("-> results/{}.csv\n", fig.name);
+    }
+    for (name, f) in [
+        ("fig3", figures::fig3 as fn(&FigOpts) -> Result<anytime_sgd::metrics::Figure>),
+        ("fig4", figures::fig4),
+        ("fig5", figures::fig5),
+        ("fig6", figures::fig6),
+    ] {
+        if want(name) {
+            let fig = f(&o)?;
+            print!("{}", fig.render_table());
+            // Headline deltas: time to reach the figure's target error.
+            if fig.traces.len() >= 2 {
+                let target = fig.traces[0].final_err().max(1e-6) * 2.0;
+                print!("time-to-error({target:.2e}):");
+                for t in &fig.traces {
+                    match t.time_to_error(target) {
+                        Some(tt) => print!("  {}={tt:.0}s", t.label),
+                        None => print!("  {}=n/a", t.label),
+                    }
+                }
+                println!();
+            }
+            fig.write(&out)?;
+            println!("-> results/{}.csv\n", fig.name);
+        }
+    }
+    if want("theory") {
+        let r = figures::theory_check(&o)?;
+        println!("== Theory check (§III) ==");
+        for (k, v) in &r {
+            println!("  {k:<24} {v:.4e}");
+        }
+        let json = anytime_sgd::ser::Value::Obj(
+            r.iter().map(|(k, &v)| (k.clone(), anytime_sgd::ser::Value::Num(v))).collect(),
+        );
+        std::fs::write(out.join("theory_check.json"), anytime_sgd::ser::to_string_pretty(&json))?;
+        println!("-> results/theory_check.json\n");
+    }
+    if want("variance") {
+        let rows = figures::variance_decay(&o)?;
+        println!("== Corollary 4: Var[F] ~ 1/Q (var*Q should be ~flat) ==");
+        println!("{:>10} {:>14} {:>14}", "Q", "var", "var*Q");
+        let mut csv = String::from("q,var,var_q\n");
+        for (q, v, vq) in &rows {
+            println!("{q:>10.0} {v:>14.4e} {vq:>14.4e}");
+            csv.push_str(&format!("{q:.1},{v:.6e},{vq:.6e}\n"));
+        }
+        std::fs::write(out.join("variance_decay.csv"), csv)?;
+        println!("-> results/variance_decay.csv\n");
+    }
+    if want("async") {
+        let fig = figures::async_compare(&o)?;
+        print!("{}", fig.render_table());
+        fig.write(&out)?;
+        println!("-> results/{}.csv\n", fig.name);
+    }
+    if want("logreg") {
+        let fig = figures::logreg_figure(&o)?;
+        print!("{}", fig.render_table());
+        fig.write(&out)?;
+        println!("-> results/{}.csv\n", fig.name);
+    }
+    if want("ablations") {
+        for fig in figures::ablations(&o)? {
+            print!("{}", fig.render_table());
+            fig.write(&out)?;
+            println!("-> results/{}.csv\n", fig.name);
+        }
+    }
+    Ok(())
+}
+
+fn cmd_partition(args: &[String]) -> Result<()> {
+    let cmd = Command::new("partition", "print the Table-I data assignment")
+        .flag("workers", FlagKind::Int, Some("10"), "number of workers N")
+        .flag("redundancy", FlagKind::Int, Some("2"), "redundancy S (block on S+1 workers)");
+    let m = cmd.parse(args).map_err(|e| anyhow::anyhow!("{e}"))?;
+    let (n, s) = (m.usize_of("workers"), m.usize_of("redundancy"));
+    println!("Table I — N={n} workers, S={s} (each block on {} workers):\n", s + 1);
+    print!("{}", figures::table1(n, s)?);
+    println!("\nvalidation: OK (every block on exactly S+1 workers, every worker holds S+1 blocks)");
+    Ok(())
+}
+
+fn cmd_inspect(args: &[String]) -> Result<()> {
+    let cmd = Command::new("inspect", "list AOT artifacts")
+        .flag("dir", FlagKind::Str, Some("artifacts"), "artifacts directory");
+    let m = cmd.parse(args).map_err(|e| anyhow::anyhow!("{e}"))?;
+    let dir = m.str_of("dir");
+    let manifest =
+        anytime_sgd::runtime::Manifest::load(Path::new(&dir).join("manifest.json").as_path())?;
+    println!("{} artifacts in {dir}/:", manifest.artifacts.len());
+    for a in &manifest.artifacts {
+        let ins: Vec<String> =
+            a.inputs.iter().map(|i| format!("{}{:?}", i.dtype, i.shape)).collect();
+        println!("  {:<36} {:<12} inputs: {}", a.name, a.kind, ins.join(", "));
+    }
+    Ok(())
+}

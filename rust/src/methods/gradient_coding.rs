@@ -1,0 +1,320 @@
+//! Gradient Coding (Tandon et al., ICML'17) — the coded-computation
+//! baseline of Fig. 4.
+//!
+//! Setup: N workers, data in N blocks, block b placed on workers
+//! `{b, b−1, …, b−S} mod N` (the same cyclic placement as Table I, which
+//! is exactly Tandon's cyclic repetition support). Each epoch every
+//! worker computes the *full* gradient of each of its S+1 blocks and
+//! sends one coded vector
+//!
+//! ```text
+//!     c_v = Σ_b  B[v, b] · g_b
+//! ```
+//!
+//! The master, after hearing from any set χ with |χ| ≥ N−S workers,
+//! finds coefficients a with  Σ_{v∈χ} a_v B[v,·] = 1ᵀ  and recovers the
+//! full gradient  Σ_b g_b = Σ_v a_v c_v.
+//!
+//! Construction: Tandon's Algorithm 1 — draw `H ∈ R^{S×N}` Gaussian with
+//! columns summing to zero and fill each row's cyclic support so that
+//! `H Bᵀ = 0` with a leading 1; their Theorem guarantees every
+//! (N−S)-subset of rows spans `1ᵀ` with probability 1.
+//! [`GradientCode::new`] additionally *verifies* decodability
+//! (exhaustively for small N) and resamples on failure.
+
+use crate::linalg::solve_consistent;
+use crate::rng::Xoshiro256pp;
+
+/// The code matrix and its parameters.
+#[derive(Clone, Debug)]
+pub struct GradientCode {
+    n: usize,
+    s: usize,
+    /// Row-major N×N; row v is worker v's encoding vector (support =
+    /// blocks of worker v).
+    b: Vec<f64>,
+}
+
+impl GradientCode {
+    /// Build a decodable code for (n, s); `s < n`.
+    pub fn new(n: usize, s: usize, seed: u64) -> Self {
+        assert!(s < n, "gradient coding requires S < N");
+        let mut rng = Xoshiro256pp::seed_from_u64(seed).split("gradient-code", n as u64, s as u64);
+        // s = 0 degenerates to plain distributed GD: identity code.
+        if s == 0 {
+            let mut b = vec![0.0; n * n];
+            for v in 0..n {
+                b[v * n + v] = 1.0;
+            }
+            return Self { n, s, b };
+        }
+        // Tandon et al. Algorithm 1: draw H ∈ R^{s×n} Gaussian with
+        // columns summing to zero, then fill each row's support so that
+        // H Bᵀ = 0 with a leading 1 — this guarantees 1ᵀ lies in the
+        // span of every (N−S)-subset of rows (their Theorem 2) w.p. 1.
+        'attempt: for _ in 0..64 {
+            let mut h = vec![0.0f64; s * n];
+            for r in 0..s {
+                let mut row_sum = 0.0;
+                for cidx in 0..n - 1 {
+                    let v = rng.normal();
+                    h[r * n + cidx] = v;
+                    row_sum += v;
+                }
+                h[r * n + (n - 1)] = -row_sum;
+            }
+            let mut b = vec![0.0; n * n];
+            for v in 0..n {
+                // Support j0=v, j1..js = v+1..v+s (mod n). Solve
+                // H[:, j1..js] · w = −H[:, j0]; row = [1, w].
+                let mut sub = vec![0.0f64; s * s];
+                let mut rhs = vec![0.0f64; s];
+                for r in 0..s {
+                    rhs[r] = -h[r * n + v];
+                    for k in 1..=s {
+                        sub[r * s + (k - 1)] = h[r * n + (v + k) % n];
+                    }
+                }
+                let Some(w) = crate::linalg::solve(&sub, &rhs, s) else {
+                    continue 'attempt;
+                };
+                b[v * n + v] = 1.0;
+                for k in 1..=s {
+                    b[v * n + (v + k) % n] = w[k - 1];
+                }
+            }
+            let code = Self { n, s, b };
+            if code.verify() {
+                return code;
+            }
+        }
+        panic!("failed to construct a decodable gradient code for n={n} s={s}");
+    }
+
+    pub fn n(&self) -> usize {
+        self.n
+    }
+    pub fn s(&self) -> usize {
+        self.s
+    }
+
+    /// Blocks worker v encodes over (cyclic support, matches Table I).
+    pub fn blocks_of(&self, v: usize) -> Vec<usize> {
+        (0..=self.s).map(|k| (v + k) % self.n).collect()
+    }
+
+    /// Check decodability from every contiguous-loss pattern and a sample
+    /// of random (N−S)-subsets (exhaustive for small N).
+    fn verify(&self) -> bool {
+        let k = self.n - self.s;
+        // All subsets when feasible, else sampled.
+        let subsets = enumerate_or_sample_subsets(self.n, k, 2000);
+        subsets.iter().all(|sub| self.decode_coeffs(sub).is_some())
+    }
+
+    /// Worker-side encode: `c_v = Σ_b B[v,b] g_b`. `block_grads[i]` is
+    /// the gradient of the i-th block in `blocks_of(v)` order.
+    pub fn encode(&self, v: usize, block_grads: &[Vec<f32>]) -> Vec<f32> {
+        let blocks = self.blocks_of(v);
+        assert_eq!(block_grads.len(), blocks.len());
+        let d = block_grads[0].len();
+        let mut out = vec![0.0f32; d];
+        for (i, &blk) in blocks.iter().enumerate() {
+            let w = self.b[v * self.n + blk] as f32;
+            crate::linalg::axpy(w, &block_grads[i], &mut out);
+        }
+        out
+    }
+
+    /// Decoding coefficients for a received worker set: find `a` with
+    /// `Σ_v a_v B[v,·] = 1ᵀ`. Returns None if not decodable.
+    pub fn decode_coeffs(&self, received: &[usize]) -> Option<Vec<f64>> {
+        if received.len() < self.n - self.s {
+            return None;
+        }
+        // Solve Bᵀ_χ a = 1: n equations, |χ| unknowns, least squares.
+        let rows = self.n;
+        let cols = received.len();
+        let mut mat = vec![0.0; rows * cols];
+        for (j, &v) in received.iter().enumerate() {
+            for blk in 0..self.n {
+                mat[blk * cols + j] = self.b[v * self.n + blk];
+            }
+        }
+        let ones = vec![1.0; rows];
+        let a = solve_consistent(&mat, &ones, rows, cols)?;
+        // Verify the solution actually reconstructs 1ᵀ (lstsq always
+        // returns *something*; consistency is the decodability test).
+        for blk in 0..self.n {
+            let got: f64 = received
+                .iter()
+                .enumerate()
+                .map(|(j, &v)| a[j] * self.b[v * self.n + blk])
+                .sum();
+            if (got - 1.0).abs() > 1e-6 {
+                return None;
+            }
+        }
+        Some(a)
+    }
+
+    /// Master-side decode: full gradient `Σ_b g_b` from coded vectors.
+    pub fn decode(&self, received: &[(usize, Vec<f32>)]) -> Option<Vec<f32>> {
+        let ids: Vec<usize> = received.iter().map(|(v, _)| *v).collect();
+        let a = self.decode_coeffs(&ids)?;
+        let d = received[0].1.len();
+        let mut out = vec![0.0f32; d];
+        let mut acc = vec![0.0f64; d];
+        for ((_, c), &av) in received.iter().zip(a.iter()) {
+            for (s, &cv) in acc.iter_mut().zip(c.iter()) {
+                *s += av * cv as f64;
+            }
+        }
+        for (o, &s) in out.iter_mut().zip(acc.iter()) {
+            *o = s as f32;
+        }
+        Some(out)
+    }
+}
+
+/// All k-subsets of [0,n) if the count is small, else `samples` random
+/// ones (plus all contiguous-loss patterns, the adversarial cases for
+/// cyclic codes).
+fn enumerate_or_sample_subsets(n: usize, k: usize, samples: usize) -> Vec<Vec<usize>> {
+    fn choose(n: usize, k: usize) -> usize {
+        let mut r = 1usize;
+        for i in 0..k {
+            r = r.saturating_mul(n - i) / (i + 1);
+        }
+        r
+    }
+    let mut out = Vec::new();
+    if choose(n, k) <= 4096 {
+        // Exhaustive enumeration (lexicographic).
+        let mut idx: Vec<usize> = (0..k).collect();
+        loop {
+            out.push(idx.clone());
+            // Advance.
+            let mut i = k;
+            loop {
+                if i == 0 {
+                    return out;
+                }
+                i -= 1;
+                if idx[i] != i + n - k {
+                    break;
+                }
+            }
+            idx[i] += 1;
+            for j in i + 1..k {
+                idx[j] = idx[j - 1] + 1;
+            }
+        }
+    }
+    // Contiguous-loss patterns: drop s consecutive workers.
+    for start in 0..n {
+        let lost: Vec<usize> = (0..n - k).map(|i| (start + i) % n).collect();
+        out.push((0..n).filter(|v| !lost.contains(v)).collect());
+    }
+    let mut rng = Xoshiro256pp::seed_from_u64(0xC0DE).split("subsets", n as u64, k as u64);
+    let mut scratch = Vec::new();
+    for _ in 0..samples {
+        let mut s = rng.sample_without_replacement(n, k, &mut scratch);
+        s.sort_unstable();
+        out.push(s);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn identity_code_for_s0() {
+        let code = GradientCode::new(5, 0, 1);
+        let a = code.decode_coeffs(&[0, 1, 2, 3, 4]).unwrap();
+        for &c in &a {
+            assert!((c - 1.0).abs() < 1e-9);
+        }
+        // s=0 cannot tolerate any loss.
+        assert!(code.decode_coeffs(&[0, 1, 2, 3]).is_none());
+    }
+
+    #[test]
+    fn decodes_from_any_n_minus_s_subset() {
+        for (n, s) in [(5, 1), (6, 2), (10, 2), (10, 3), (7, 3)] {
+            let code = GradientCode::new(n, s, 2);
+            let subsets = enumerate_or_sample_subsets(n, n - s, 500);
+            for sub in subsets {
+                assert!(
+                    code.decode_coeffs(&sub).is_some(),
+                    "n={n} s={s}: subset {sub:?} not decodable"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn too_few_workers_not_decodable() {
+        let code = GradientCode::new(6, 2, 3);
+        assert!(code.decode_coeffs(&[0, 1, 2]).is_none());
+    }
+
+    #[test]
+    fn encode_decode_recovers_gradient_sum() {
+        use crate::rng::Xoshiro256pp;
+        let (n, s, d) = (6usize, 2usize, 40usize);
+        let code = GradientCode::new(n, s, 4);
+        // Random per-block "gradients".
+        let mut rng = Xoshiro256pp::seed_from_u64(9);
+        let blocks: Vec<Vec<f32>> = (0..n)
+            .map(|_| {
+                let mut g = vec![0.0f32; d];
+                rng.fill_normal_f32(&mut g);
+                g
+            })
+            .collect();
+        let want: Vec<f32> = (0..d).map(|j| blocks.iter().map(|g| g[j]).sum()).collect();
+
+        // Lose workers 1 and 4 (any 2 with s=2).
+        let received: Vec<(usize, Vec<f32>)> = [0usize, 2, 3, 5]
+            .iter()
+            .map(|&v| {
+                let grads: Vec<Vec<f32>> =
+                    code.blocks_of(v).iter().map(|&b| blocks[b].clone()).collect();
+                (v, code.encode(v, &grads))
+            })
+            .collect();
+        let got = code.decode(&received).unwrap();
+        for j in 0..d {
+            assert!((got[j] - want[j]).abs() < 1e-3, "j={j}: {} vs {}", got[j], want[j]);
+        }
+    }
+
+    #[test]
+    fn construction_deterministic_per_seed() {
+        let a = GradientCode::new(8, 2, 7);
+        let b = GradientCode::new(8, 2, 7);
+        assert_eq!(a.b, b.b);
+    }
+
+    #[test]
+    fn support_matches_table_one() {
+        let code = GradientCode::new(6, 2, 1);
+        assert_eq!(code.blocks_of(0), vec![0, 1, 2]);
+        assert_eq!(code.blocks_of(5), vec![5, 0, 1]);
+        // Off-support entries are exactly zero.
+        for v in 0..6 {
+            let blocks = code.blocks_of(v);
+            for blk in 0..6 {
+                let entry = code.b[v * 6 + blk];
+                if blocks.contains(&blk) {
+                    assert!(entry != 0.0);
+                } else {
+                    assert_eq!(entry, 0.0);
+                }
+            }
+        }
+    }
+}

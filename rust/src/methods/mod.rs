@@ -1,0 +1,8 @@
+//! Method-specific machinery beyond the shared coordinator loop.
+//!
+//! The per-epoch protocols of all five methods (anytime, generalized,
+//! sync, FNB, gradient coding) live in `crate::coordinator`; this module
+//! holds the pieces with real algorithmic content of their own —
+//! currently the Gradient Coding code construction/encoder/decoder.
+
+pub mod gradient_coding;

@@ -1,0 +1,120 @@
+//! Structured run telemetry: JSONL event stream.
+//!
+//! Production framing for the coordinator: every epoch emits one JSON
+//! line with the χ set, q profile, λ, time charges and evaluation — the
+//! artifact a downstream dashboard (or a debugging session) consumes.
+//! Enabled from the CLI with `train --events <path>`.
+
+use crate::coordinator::EpochStats;
+use crate::ser::Value;
+use std::io::Write;
+use std::path::Path;
+
+/// JSONL sink for run events.
+pub struct EventLog {
+    out: std::io::BufWriter<std::fs::File>,
+    lines: usize,
+}
+
+impl EventLog {
+    /// Create (truncate) the log file.
+    pub fn create(path: &Path) -> std::io::Result<Self> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        Ok(Self { out: std::io::BufWriter::new(std::fs::File::create(path)?), lines: 0 })
+    }
+
+    fn emit(&mut self, v: &Value) -> std::io::Result<()> {
+        // Compact one-line form: reuse the pretty writer and strip
+        // newlines (values here are shallow; cosmetics don't matter).
+        let text = crate::ser::to_string_pretty(v).replace('\n', " ");
+        writeln!(self.out, "{text}")?;
+        self.lines += 1;
+        Ok(())
+    }
+
+    /// Run header.
+    pub fn run_started(&mut self, name: &str, workers: usize, seed: u64) -> std::io::Result<()> {
+        self.emit(&Value::obj(vec![
+            ("event", "run_started".into()),
+            ("name", name.into()),
+            ("workers", workers.into()),
+            ("seed", Value::Num(seed as f64)),
+        ]))
+    }
+
+    /// One epoch's protocol outcome.
+    pub fn epoch(&mut self, e: usize, stats: &EpochStats, sim_time: f64) -> std::io::Result<()> {
+        self.emit(&Value::obj(vec![
+            ("event", "epoch".into()),
+            ("epoch", e.into()),
+            ("sim_time", sim_time.into()),
+            ("q", Value::Arr(stats.q.iter().map(|&q| q.into()).collect())),
+            ("received", Value::Arr(stats.received.iter().map(|&r| r.into()).collect())),
+            ("lambda", Value::nums(&stats.lambda.iter().map(|&l| l).collect::<Vec<f64>>())),
+            ("compute_secs", stats.compute_secs.into()),
+            ("comm_secs", stats.comm_secs.into()),
+        ]))
+    }
+
+    /// An evaluation point.
+    pub fn eval(&mut self, e: usize, norm_err: f64, cost: f64) -> std::io::Result<()> {
+        self.emit(&Value::obj(vec![
+            ("event", "eval".into()),
+            ("epoch", e.into()),
+            ("norm_err", norm_err.into()),
+            ("cost", cost.into()),
+        ]))
+    }
+
+    /// Run footer; flushes.
+    pub fn run_finished(&mut self, final_err: f64) -> std::io::Result<()> {
+        self.emit(&Value::obj(vec![
+            ("event", "run_finished".into()),
+            ("final_err", final_err.into()),
+        ]))?;
+        self.out.flush()
+    }
+
+    /// Lines written so far.
+    pub fn lines(&self) -> usize {
+        self.lines
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn writes_parseable_jsonl() {
+        let path = std::env::temp_dir().join(format!("anytime-events-{}.jsonl", std::process::id()));
+        {
+            let mut log = EventLog::create(&path).unwrap();
+            log.run_started("test", 4, 42).unwrap();
+            let stats = EpochStats {
+                q: vec![10, 0, 5],
+                received: vec![true, false, true],
+                compute_secs: 20.0,
+                comm_secs: 2.0,
+                lambda: vec![0.66, 0.0, 0.34],
+            };
+            log.epoch(0, &stats, 22.0).unwrap();
+            log.eval(0, 0.5, 123.0).unwrap();
+            log.run_finished(0.5).unwrap();
+            assert_eq!(log.lines(), 4);
+        }
+        let text = std::fs::read_to_string(&path).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 4);
+        for line in &lines {
+            let v = crate::ser::parse(line).unwrap();
+            assert!(v.get_str("event").is_some());
+        }
+        let epoch = crate::ser::parse(lines[1]).unwrap();
+        assert_eq!(epoch.get_str("event"), Some("epoch"));
+        assert_eq!(epoch.get("q").unwrap().as_arr().unwrap().len(), 3);
+        std::fs::remove_file(path).ok();
+    }
+}

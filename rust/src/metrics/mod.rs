@@ -1,0 +1,291 @@
+//! Run traces, series, and CSV/JSON emitters for the figure harness.
+
+pub mod events;
+
+use crate::ser::Value;
+use std::fmt::Write as _;
+use std::path::Path;
+
+/// One evaluated point on a convergence curve.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct TracePoint {
+    pub epoch: usize,
+    /// Simulated wall-clock seconds at the end of this epoch.
+    pub time: f64,
+    /// Normalized error ‖A(x−x*)‖/‖Ax*‖.
+    pub norm_err: f64,
+    /// Cost F(x) (eq. 1).
+    pub cost: f64,
+    /// Total steps Σ_v q_v this epoch.
+    pub total_q: usize,
+}
+
+/// A labeled convergence curve.
+#[derive(Clone, Debug, Default)]
+pub struct Trace {
+    pub label: String,
+    pub points: Vec<TracePoint>,
+}
+
+impl Trace {
+    pub fn new(label: impl Into<String>) -> Self {
+        Self { label: label.into(), points: Vec::new() }
+    }
+
+    /// First simulated time at which the error drops below `target`
+    /// (linear interpolation between epochs), or None.
+    pub fn time_to_error(&self, target: f64) -> Option<f64> {
+        let mut prev: Option<&TracePoint> = None;
+        for p in &self.points {
+            if p.norm_err <= target {
+                if let Some(q) = prev {
+                    if q.norm_err > p.norm_err {
+                        let f = (q.norm_err - target) / (q.norm_err - p.norm_err);
+                        return Some(q.time + f * (p.time - q.time));
+                    }
+                }
+                return Some(p.time);
+            }
+            prev = Some(p);
+        }
+        None
+    }
+
+    /// Final error.
+    pub fn final_err(&self) -> f64 {
+        self.points.last().map(|p| p.norm_err).unwrap_or(f64::INFINITY)
+    }
+}
+
+/// A figure: several traces over a shared x-axis.
+#[derive(Clone, Debug, Default)]
+pub struct Figure {
+    pub name: String,
+    pub x_axis: String,
+    pub traces: Vec<Trace>,
+}
+
+impl Figure {
+    pub fn new(name: impl Into<String>, x_axis: impl Into<String>) -> Self {
+        Self { name: name.into(), x_axis: x_axis.into(), traces: Vec::new() }
+    }
+
+    /// CSV rows: label,epoch,time,norm_err,cost,total_q.
+    pub fn to_csv(&self) -> String {
+        let mut out = String::from("label,epoch,time,norm_err,cost,total_q\n");
+        for t in &self.traces {
+            for p in &t.points {
+                let _ = writeln!(
+                    out,
+                    "{},{},{:.6},{:.6e},{:.6e},{}",
+                    t.label, p.epoch, p.time, p.norm_err, p.cost, p.total_q
+                );
+            }
+        }
+        out
+    }
+
+    /// JSON dump (stable key order via ser::Value).
+    pub fn to_json(&self) -> Value {
+        Value::obj(vec![
+            ("name", self.name.as_str().into()),
+            ("x_axis", self.x_axis.as_str().into()),
+            (
+                "traces",
+                Value::Arr(
+                    self.traces
+                        .iter()
+                        .map(|t| {
+                            Value::obj(vec![
+                                ("label", t.label.as_str().into()),
+                                (
+                                    "points",
+                                    Value::Arr(
+                                        t.points
+                                            .iter()
+                                            .map(|p| {
+                                                Value::obj(vec![
+                                                    ("epoch", p.epoch.into()),
+                                                    ("time", p.time.into()),
+                                                    ("norm_err", p.norm_err.into()),
+                                                    ("cost", p.cost.into()),
+                                                    ("total_q", p.total_q.into()),
+                                                ])
+                                            })
+                                            .collect(),
+                                    ),
+                                ),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    /// Write `<dir>/<name>.csv` and `.json`; returns the csv path.
+    pub fn write(&self, dir: &Path) -> std::io::Result<std::path::PathBuf> {
+        std::fs::create_dir_all(dir)?;
+        let csv = dir.join(format!("{}.csv", self.name));
+        std::fs::write(&csv, self.to_csv())?;
+        let json = dir.join(format!("{}.json", self.name));
+        std::fs::write(json, crate::ser::to_string_pretty(&self.to_json()))?;
+        Ok(csv)
+    }
+
+    /// Terminal rendering: one row per epoch, log-error columns.
+    pub fn render_table(&self) -> String {
+        let mut out = String::new();
+        let _ = writeln!(out, "== {} (x = {}) ==", self.name, self.x_axis);
+        let _ = write!(out, "{:>8}", self.x_axis);
+        for t in &self.traces {
+            let _ = write!(out, "{:>24}", t.label);
+        }
+        out.push('\n');
+        let rows = self.traces.iter().map(|t| t.points.len()).max().unwrap_or(0);
+        for i in 0..rows {
+            let x = self
+                .traces
+                .iter()
+                .find_map(|t| t.points.get(i))
+                .map(|p| if self.x_axis == "epoch" { p.epoch as f64 } else { p.time })
+                .unwrap_or(0.0);
+            let _ = write!(out, "{x:>8.1}");
+            for t in &self.traces {
+                match t.points.get(i) {
+                    Some(p) => {
+                        let _ = write!(out, "    err={:>9.3e} (t={:>7.1})", p.norm_err, p.time);
+                    }
+                    None => {
+                        let _ = write!(out, "{:>24}", "-");
+                    }
+                }
+            }
+            out.push('\n');
+        }
+        out
+    }
+}
+
+/// Simple fixed-width histogram (Fig. 1 reproduction).
+#[derive(Clone, Debug)]
+pub struct Histogram {
+    pub lo: f64,
+    pub hi: f64,
+    pub counts: Vec<usize>,
+    pub overflow: usize,
+}
+
+impl Histogram {
+    pub fn new(lo: f64, hi: f64, bins: usize) -> Self {
+        assert!(hi > lo && bins > 0);
+        Self { lo, hi, counts: vec![0; bins], overflow: 0 }
+    }
+
+    pub fn add(&mut self, x: f64) {
+        if x >= self.hi {
+            self.overflow += 1;
+            return;
+        }
+        let f = (x - self.lo) / (self.hi - self.lo);
+        let b = ((f * self.counts.len() as f64) as usize).min(self.counts.len() - 1);
+        self.counts[b] += 1;
+    }
+
+    pub fn total(&self) -> usize {
+        self.counts.iter().sum::<usize>() + self.overflow
+    }
+
+    /// ASCII rendering with bin ranges and bars.
+    pub fn render(&self, width: usize) -> String {
+        let max = self.counts.iter().copied().max().unwrap_or(1).max(1);
+        let bw = (self.hi - self.lo) / self.counts.len() as f64;
+        let mut out = String::new();
+        for (i, &c) in self.counts.iter().enumerate() {
+            let bar = "#".repeat(c * width / max);
+            let _ = writeln!(
+                out,
+                "{:>7.1}-{:<7.1} {:>6} {bar}",
+                self.lo + i as f64 * bw,
+                self.lo + (i + 1) as f64 * bw,
+                c
+            );
+        }
+        let _ = writeln!(out, ">{:<14.1} {:>6} (tail)", self.hi, self.overflow);
+        out
+    }
+
+    /// CSV rows: bin_lo,bin_hi,count.
+    pub fn to_csv(&self) -> String {
+        let bw = (self.hi - self.lo) / self.counts.len() as f64;
+        let mut out = String::from("bin_lo,bin_hi,count\n");
+        for (i, &c) in self.counts.iter().enumerate() {
+            let _ = writeln!(out, "{:.4},{:.4},{c}", self.lo + i as f64 * bw, self.lo + (i + 1) as f64 * bw);
+        }
+        let _ = writeln!(out, "{:.4},inf,{}", self.hi, self.overflow);
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn trace(points: &[(f64, f64)]) -> Trace {
+        Trace {
+            label: "t".into(),
+            points: points
+                .iter()
+                .enumerate()
+                .map(|(i, &(time, err))| TracePoint { epoch: i, time, norm_err: err, cost: 0.0, total_q: 0 })
+                .collect(),
+        }
+    }
+
+    #[test]
+    fn time_to_error_interpolates() {
+        let t = trace(&[(0.0, 1.0), (10.0, 0.5), (20.0, 0.1)]);
+        assert_eq!(t.time_to_error(0.5), Some(10.0));
+        // 0.3 is 50% between 0.5 and 0.1 -> t = 15.
+        assert!((t.time_to_error(0.3).unwrap() - 15.0).abs() < 1e-9);
+        assert_eq!(t.time_to_error(0.01), None);
+        assert_eq!(t.final_err(), 0.1);
+    }
+
+    #[test]
+    fn csv_has_all_rows() {
+        let mut f = Figure::new("fig_test", "time");
+        f.traces.push(trace(&[(0.0, 1.0), (1.0, 0.5)]));
+        let csv = f.to_csv();
+        assert_eq!(csv.lines().count(), 3);
+        assert!(csv.starts_with("label,epoch"));
+    }
+
+    #[test]
+    fn figure_write_and_json(){
+        let dir = std::env::temp_dir().join(format!("anytime-metrics-{}", std::process::id()));
+        let mut f = Figure::new("fig_x", "time");
+        f.traces.push(trace(&[(0.0, 1.0)]));
+        let p = f.write(&dir).unwrap();
+        assert!(p.exists());
+        let json = std::fs::read_to_string(dir.join("fig_x.json")).unwrap();
+        let v = crate::ser::parse(&json).unwrap();
+        assert_eq!(v.get_str("name"), Some("fig_x"));
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn histogram_bins_and_overflow() {
+        let mut h = Histogram::new(0.0, 100.0, 10);
+        for x in [5.0, 15.0, 15.5, 99.9, 150.0] {
+            h.add(x);
+        }
+        assert_eq!(h.counts[0], 1);
+        assert_eq!(h.counts[1], 2);
+        assert_eq!(h.counts[9], 1);
+        assert_eq!(h.overflow, 1);
+        assert_eq!(h.total(), 5);
+        assert!(h.render(40).contains("(tail)"));
+        assert!(h.to_csv().lines().count() == 12);
+    }
+}

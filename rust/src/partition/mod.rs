@@ -1,0 +1,265 @@
+//! Data partitioning and redundant placement — the paper's §II-B /
+//! Table I.
+//!
+//! The dataset is decomposed into `N` blocks `A_1..A_N`; each worker `v`
+//! receives `S+1` consecutive blocks (circularly): `A_v, A_{v+1}, …,
+//! A_{v+S}`. Consequences the tests pin down:
+//!
+//! * every block is held by exactly `S+1` workers → up to `S` persistent
+//!   stragglers lose no data;
+//! * every worker holds exactly `S+1` blocks → balanced storage
+//!   `(S+1)·m/N` rows per worker.
+//!
+//! [`Assignment`] is the placement math; [`Shard`] materializes a
+//! worker's rows (the `Ā_v` of Algorithm 2).
+
+use crate::data::Dataset;
+use crate::linalg::Matrix;
+
+/// Block-to-worker placement per Table I.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Assignment {
+    /// Number of workers (== number of blocks).
+    pub n: usize,
+    /// Redundancy: each block is placed on `s + 1` workers.
+    pub s: usize,
+}
+
+impl Assignment {
+    /// Create a placement; requires `s < n`.
+    pub fn new(n: usize, s: usize) -> Self {
+        assert!(n > 0, "need at least one worker");
+        assert!(s < n, "redundancy S={s} must be < N={n}");
+        Self { n, s }
+    }
+
+    /// Blocks assigned to worker `v` (circular shift: `v, v+1, …, v+S`).
+    pub fn blocks_of(&self, v: usize) -> Vec<usize> {
+        assert!(v < self.n);
+        (0..=self.s).map(|k| (v + k) % self.n).collect()
+    }
+
+    /// Workers holding block `b` (inverse map: `b, b−1, …, b−S` mod N).
+    pub fn workers_of(&self, b: usize) -> Vec<usize> {
+        assert!(b < self.n);
+        (0..=self.s).map(|k| (b + self.n - k) % self.n).collect()
+    }
+
+    /// Boolean placement matrix `[worker][block]` — Table I itself.
+    pub fn matrix(&self) -> Vec<Vec<bool>> {
+        (0..self.n)
+            .map(|v| {
+                let blocks = self.blocks_of(v);
+                (0..self.n).map(|b| blocks.contains(&b)).collect()
+            })
+            .collect()
+    }
+
+    /// Validate the two Table-I invariants; returns a violation message
+    /// if either fails. Used by tests and by `partition --check`.
+    pub fn validate(&self) -> Result<(), String> {
+        let m = self.matrix();
+        for b in 0..self.n {
+            let holders = (0..self.n).filter(|&v| m[v][b]).count();
+            if holders != self.s + 1 {
+                return Err(format!("block {b} held by {holders} workers, want {}", self.s + 1));
+            }
+        }
+        for (v, row) in m.iter().enumerate() {
+            let held = row.iter().filter(|&&x| x).count();
+            if held != self.s + 1 {
+                return Err(format!("worker {v} holds {held} blocks, want {}", self.s + 1));
+            }
+        }
+        // Cross-check the inverse map.
+        for b in 0..self.n {
+            for &v in &self.workers_of(b) {
+                if !m[v][b] {
+                    return Err(format!("workers_of({b}) claims worker {v}, matrix disagrees"));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Render Table I as text (x = assigned, o = not).
+    pub fn render(&self) -> String {
+        let m = self.matrix();
+        let mut out = String::new();
+        out.push_str("      ");
+        for b in 0..self.n {
+            out.push_str(&format!("A{:<3}", b + 1));
+        }
+        out.push('\n');
+        for (v, row) in m.iter().enumerate() {
+            out.push_str(&format!("W{:<4} ", v + 1));
+            for &cell in row {
+                out.push_str(if cell { "x   " } else { "o   " });
+            }
+            out.push('\n');
+        }
+        out
+    }
+}
+
+/// Row range of block `b` when `m` rows are cut into `n` near-equal
+/// blocks (first `m % n` blocks get one extra row).
+pub fn block_range(m: usize, n: usize, b: usize) -> std::ops::Range<usize> {
+    assert!(b < n);
+    let base = m / n;
+    let extra = m % n;
+    let start = b * base + b.min(extra);
+    let len = base + usize::from(b < extra);
+    start..start + len
+}
+
+/// A worker's materialized data (`Ā_v`): the concatenated rows of its
+/// `S+1` blocks, plus the global row ids for provenance/debugging.
+#[derive(Clone, Debug)]
+pub struct Shard {
+    pub worker: usize,
+    pub a: Matrix,
+    pub y: Vec<f32>,
+    /// Global row index of each local row.
+    pub global_rows: Vec<u32>,
+}
+
+impl Shard {
+    pub fn rows(&self) -> usize {
+        self.a.rows()
+    }
+}
+
+/// Materialize every worker's shard per the assignment.
+///
+/// This is the master's step 2–5 of Algorithm 1 (decompose + send); in
+/// our single-process deployment "sending" is building the shard the
+/// worker thread will own.
+pub fn materialize_shards(ds: &Dataset, asg: &Assignment) -> Vec<Shard> {
+    let m = ds.rows();
+    let d = ds.dim();
+    (0..asg.n)
+        .map(|v| {
+            let mut rows_idx: Vec<u32> = Vec::new();
+            for b in asg.blocks_of(v) {
+                rows_idx.extend(block_range(m, asg.n, b).map(|r| r as u32));
+            }
+            let mut a = Matrix::zeros(rows_idx.len(), d);
+            let mut y = Vec::with_capacity(rows_idx.len());
+            for (local, &g) in rows_idx.iter().enumerate() {
+                a.row_mut(local).copy_from_slice(ds.a.row(g as usize));
+                y.push(ds.y[g as usize]);
+            }
+            Shard { worker: v, a, y, global_rows: rows_idx }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic_linreg;
+
+    #[test]
+    fn table_one_example_n4_s2() {
+        // Mirrors the paper's Table I shape: W1 gets A1..A_{S+1}.
+        let asg = Assignment::new(4, 2);
+        assert_eq!(asg.blocks_of(0), vec![0, 1, 2]);
+        assert_eq!(asg.blocks_of(3), vec![3, 0, 1]); // wraps
+        asg.validate().unwrap();
+    }
+
+    #[test]
+    fn validate_all_small_configs() {
+        for n in 1..=12 {
+            for s in 0..n {
+                Assignment::new(n, s).validate().unwrap_or_else(|e| panic!("n={n} s={s}: {e}"));
+            }
+        }
+    }
+
+    #[test]
+    fn workers_of_is_inverse_of_blocks_of() {
+        let asg = Assignment::new(10, 3);
+        for b in 0..10 {
+            for &v in &asg.workers_of(b) {
+                assert!(asg.blocks_of(v).contains(&b));
+            }
+        }
+        for v in 0..10 {
+            for &b in &asg.blocks_of(v) {
+                assert!(asg.workers_of(b).contains(&v));
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_s_ge_n() {
+        Assignment::new(4, 4);
+    }
+
+    #[test]
+    fn block_ranges_partition_rows() {
+        for (m, n) in [(100, 10), (103, 10), (7, 3), (5, 5), (9, 4)] {
+            let mut covered = vec![false; m];
+            for b in 0..n {
+                for r in block_range(m, n, b) {
+                    assert!(!covered[r], "row {r} covered twice");
+                    covered[r] = true;
+                }
+            }
+            assert!(covered.iter().all(|&c| c), "m={m} n={n}: rows uncovered");
+            // Near-equal: sizes differ by at most 1.
+            let sizes: Vec<usize> = (0..n).map(|b| block_range(m, n, b).len()).collect();
+            let (mn, mx) = (sizes.iter().min().unwrap(), sizes.iter().max().unwrap());
+            assert!(mx - mn <= 1);
+        }
+    }
+
+    #[test]
+    fn shards_have_expected_rows_and_content() {
+        let ds = synthetic_linreg(100, 8, 0.0, 21);
+        let asg = Assignment::new(10, 2);
+        let shards = materialize_shards(&ds, &asg);
+        assert_eq!(shards.len(), 10);
+        for sh in &shards {
+            assert_eq!(sh.rows(), 30); // (S+1) * m/N = 3 * 10
+            // Content matches the global rows.
+            for (local, &g) in sh.global_rows.iter().enumerate() {
+                assert_eq!(sh.a.row(local), ds.a.row(g as usize));
+                assert_eq!(sh.y[local], ds.y[g as usize]);
+            }
+        }
+        // Union of shards covers all rows (with S=2 each row appears 3x).
+        let mut counts = vec![0usize; 100];
+        for sh in &shards {
+            for &g in &sh.global_rows {
+                counts[g as usize] += 1;
+            }
+        }
+        assert!(counts.iter().all(|&c| c == 3), "every row on S+1 workers");
+    }
+
+    #[test]
+    fn s_zero_is_disjoint_partition() {
+        let ds = synthetic_linreg(50, 4, 0.0, 22);
+        let shards = materialize_shards(&ds, &Assignment::new(5, 0));
+        let mut seen = vec![false; 50];
+        for sh in &shards {
+            assert_eq!(sh.rows(), 10);
+            for &g in &sh.global_rows {
+                assert!(!seen[g as usize]);
+                seen[g as usize] = true;
+            }
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn render_contains_markers() {
+        let txt = Assignment::new(4, 1).render();
+        assert!(txt.contains('x') && txt.contains('o'));
+        assert!(txt.contains("W1"));
+    }
+}

@@ -1,0 +1,268 @@
+//! Sampling distributions over [`Xoshiro256pp`].
+//!
+//! Straggler delay models (`crate::straggler`) compose these: e.g. the
+//! EC2-like finishing-time model is a mixture of a [`LogNormal`] body and
+//! a [`Pareto`] tail.
+
+use super::Xoshiro256pp;
+
+/// A sampleable univariate distribution.
+pub trait Distribution {
+    /// Draw one sample.
+    fn sample(&self, rng: &mut Xoshiro256pp) -> f64;
+
+    /// Analytic mean, if finite (used by tests and by `T` auto-tuning).
+    fn mean(&self) -> Option<f64>;
+}
+
+/// Uniform on `[lo, hi)`.
+#[derive(Clone, Copy, Debug)]
+pub struct Uniform {
+    pub lo: f64,
+    pub hi: f64,
+}
+
+impl Uniform {
+    pub fn new(lo: f64, hi: f64) -> Self {
+        assert!(hi >= lo, "Uniform: hi < lo");
+        Self { lo, hi }
+    }
+}
+
+impl Distribution for Uniform {
+    fn sample(&self, rng: &mut Xoshiro256pp) -> f64 {
+        self.lo + (self.hi - self.lo) * rng.next_f64()
+    }
+    fn mean(&self) -> Option<f64> {
+        Some(0.5 * (self.lo + self.hi))
+    }
+}
+
+/// Gaussian `N(mu, sigma^2)`.
+#[derive(Clone, Copy, Debug)]
+pub struct Normal {
+    pub mu: f64,
+    pub sigma: f64,
+}
+
+impl Normal {
+    pub fn new(mu: f64, sigma: f64) -> Self {
+        assert!(sigma >= 0.0, "Normal: sigma < 0");
+        Self { mu, sigma }
+    }
+}
+
+impl Distribution for Normal {
+    fn sample(&self, rng: &mut Xoshiro256pp) -> f64 {
+        self.mu + self.sigma * rng.normal()
+    }
+    fn mean(&self) -> Option<f64> {
+        Some(self.mu)
+    }
+}
+
+/// Exponential with rate `lambda` (mean `1/lambda`).
+#[derive(Clone, Copy, Debug)]
+pub struct Exponential {
+    pub lambda: f64,
+}
+
+impl Exponential {
+    pub fn new(lambda: f64) -> Self {
+        assert!(lambda > 0.0, "Exponential: lambda <= 0");
+        Self { lambda }
+    }
+}
+
+impl Distribution for Exponential {
+    fn sample(&self, rng: &mut Xoshiro256pp) -> f64 {
+        // Inverse CDF; 1 - U avoids ln(0).
+        -(1.0 - rng.next_f64()).ln() / self.lambda
+    }
+    fn mean(&self) -> Option<f64> {
+        Some(1.0 / self.lambda)
+    }
+}
+
+/// Pareto (Type I): support `[xm, inf)`, shape `alpha`.
+///
+/// `alpha <= 1` has infinite mean — exactly the heavy-tail regime the
+/// "tail at scale" literature ascribes to shared-tenancy stragglers.
+#[derive(Clone, Copy, Debug)]
+pub struct Pareto {
+    pub xm: f64,
+    pub alpha: f64,
+}
+
+impl Pareto {
+    pub fn new(xm: f64, alpha: f64) -> Self {
+        assert!(xm > 0.0 && alpha > 0.0, "Pareto: xm, alpha must be > 0");
+        Self { xm, alpha }
+    }
+}
+
+impl Distribution for Pareto {
+    fn sample(&self, rng: &mut Xoshiro256pp) -> f64 {
+        self.xm / (1.0 - rng.next_f64()).powf(1.0 / self.alpha)
+    }
+    fn mean(&self) -> Option<f64> {
+        (self.alpha > 1.0).then(|| self.alpha * self.xm / (self.alpha - 1.0))
+    }
+}
+
+/// Log-normal: `exp(N(mu, sigma^2))`.
+#[derive(Clone, Copy, Debug)]
+pub struct LogNormal {
+    pub mu: f64,
+    pub sigma: f64,
+}
+
+impl LogNormal {
+    pub fn new(mu: f64, sigma: f64) -> Self {
+        assert!(sigma >= 0.0);
+        Self { mu, sigma }
+    }
+
+    /// Construct from a target median and p90/median ratio — the natural
+    /// parameterization when fitting "bulk finishes in 10–40 s".
+    pub fn from_median_p90(median: f64, p90: f64) -> Self {
+        assert!(p90 > median && median > 0.0);
+        // p90 = median * exp(sigma * z90), z90 ≈ 1.2815515655446004.
+        let sigma = (p90 / median).ln() / 1.2815515655446004;
+        Self { mu: median.ln(), sigma }
+    }
+}
+
+impl Distribution for LogNormal {
+    fn sample(&self, rng: &mut Xoshiro256pp) -> f64 {
+        (self.mu + self.sigma * rng.normal()).exp()
+    }
+    fn mean(&self) -> Option<f64> {
+        Some((self.mu + 0.5 * self.sigma * self.sigma).exp())
+    }
+}
+
+/// Categorical over arbitrary weights (normalized internally).
+#[derive(Clone, Debug)]
+pub struct Categorical {
+    cdf: Vec<f64>,
+}
+
+impl Categorical {
+    pub fn new(weights: &[f64]) -> Self {
+        assert!(!weights.is_empty());
+        assert!(weights.iter().all(|&w| w >= 0.0), "negative weight");
+        let total: f64 = weights.iter().sum();
+        assert!(total > 0.0, "all-zero weights");
+        let mut cdf = Vec::with_capacity(weights.len());
+        let mut acc = 0.0;
+        for &w in weights {
+            acc += w / total;
+            cdf.push(acc);
+        }
+        *cdf.last_mut().unwrap() = 1.0; // close rounding gap
+        Self { cdf }
+    }
+
+    /// Draw a category index.
+    pub fn sample_index(&self, rng: &mut Xoshiro256pp) -> usize {
+        let u = rng.next_f64();
+        // Binary search the CDF.
+        match self.cdf.binary_search_by(|p| p.partial_cmp(&u).unwrap()) {
+            Ok(i) => (i + 1).min(self.cdf.len() - 1),
+            Err(i) => i.min(self.cdf.len() - 1),
+        }
+    }
+}
+
+impl Distribution for Categorical {
+    fn sample(&self, rng: &mut Xoshiro256pp) -> f64 {
+        self.sample_index(rng) as f64
+    }
+    fn mean(&self) -> Option<f64> {
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn empirical_mean<D: Distribution>(d: &D, n: usize, seed: u64) -> f64 {
+        let mut rng = Xoshiro256pp::seed_from_u64(seed);
+        (0..n).map(|_| d.sample(&mut rng)).sum::<f64>() / n as f64
+    }
+
+    #[test]
+    fn uniform_mean_and_bounds() {
+        let d = Uniform::new(2.0, 6.0);
+        let mut rng = Xoshiro256pp::seed_from_u64(1);
+        for _ in 0..5000 {
+            let x = d.sample(&mut rng);
+            assert!((2.0..6.0).contains(&x));
+        }
+        assert!((empirical_mean(&d, 100_000, 2) - 4.0).abs() < 0.02);
+    }
+
+    #[test]
+    fn exponential_mean() {
+        let d = Exponential::new(0.5);
+        assert_eq!(d.mean(), Some(2.0));
+        assert!((empirical_mean(&d, 200_000, 3) - 2.0).abs() < 0.03);
+    }
+
+    #[test]
+    fn pareto_mean_finite_alpha() {
+        let d = Pareto::new(1.0, 3.0);
+        assert_eq!(d.mean(), Some(1.5));
+        assert!((empirical_mean(&d, 400_000, 4) - 1.5).abs() < 0.05);
+    }
+
+    #[test]
+    fn pareto_heavy_tail_has_no_mean() {
+        assert_eq!(Pareto::new(1.0, 0.9).mean(), None);
+        // And empirically produces extreme values.
+        let d = Pareto::new(1.0, 0.9);
+        let mut rng = Xoshiro256pp::seed_from_u64(5);
+        let max = (0..100_000).map(|_| d.sample(&mut rng)).fold(0.0f64, f64::max);
+        assert!(max > 1000.0, "max={max}");
+    }
+
+    #[test]
+    fn lognormal_from_median_p90() {
+        let d = LogNormal::from_median_p90(20.0, 40.0);
+        let mut rng = Xoshiro256pp::seed_from_u64(6);
+        let mut xs: Vec<f64> = (0..100_000).map(|_| d.sample(&mut rng)).collect();
+        xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let median = xs[xs.len() / 2];
+        let p90 = xs[(xs.len() as f64 * 0.9) as usize];
+        assert!((median - 20.0).abs() < 0.5, "median={median}");
+        assert!((p90 - 40.0).abs() < 1.0, "p90={p90}");
+    }
+
+    #[test]
+    fn normal_wraps_moments() {
+        let d = Normal::new(-3.0, 2.0);
+        assert!((empirical_mean(&d, 200_000, 7) + 3.0).abs() < 0.02);
+    }
+
+    #[test]
+    fn categorical_frequencies() {
+        let d = Categorical::new(&[1.0, 2.0, 7.0]);
+        let mut rng = Xoshiro256pp::seed_from_u64(8);
+        let mut counts = [0usize; 3];
+        let n = 100_000;
+        for _ in 0..n {
+            counts[d.sample_index(&mut rng)] += 1;
+        }
+        assert!((counts[0] as f64 / n as f64 - 0.1).abs() < 0.01);
+        assert!((counts[1] as f64 / n as f64 - 0.2).abs() < 0.01);
+        assert!((counts[2] as f64 / n as f64 - 0.7).abs() < 0.01);
+    }
+
+    #[test]
+    #[should_panic]
+    fn categorical_rejects_all_zero() {
+        Categorical::new(&[0.0, 0.0]);
+    }
+}

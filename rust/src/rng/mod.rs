@@ -1,0 +1,324 @@
+//! Deterministic pseudo-random number generation and sampling.
+//!
+//! The image ships no `rand` crate, so this module is a from-scratch
+//! substrate: a [`SplitMix64`] seeder, a [`Xoshiro256pp`] generator
+//! (xoshiro256++ 1.0, Blackman & Vigna), and the distributions the
+//! paper's workloads need — uniform, Gaussian (Box–Muller), exponential,
+//! Pareto, log-normal, and categorical.
+//!
+//! # Determinism contract
+//!
+//! Every stochastic choice in the system (data synthesis, minibatch
+//! indices, straggler delays, communication times) flows from one root
+//! seed through *named splits* ([`Xoshiro256pp::split`]), so whole
+//! experiments are bit-reproducible across runs and across thread
+//! interleavings: each worker/epoch pair derives its own independent
+//! stream up front rather than sharing a mutable generator.
+
+mod distributions;
+
+pub use distributions::{Categorical, Distribution, Exponential, LogNormal, Normal, Pareto, Uniform};
+
+/// SplitMix64 — used to expand a 64-bit seed into xoshiro state and to
+/// derive child seeds for named streams.
+#[derive(Clone, Debug)]
+pub struct SplitMix64 {
+    state: u64,
+}
+
+impl SplitMix64 {
+    /// Create a new SplitMix64 stream from `seed`.
+    pub fn new(seed: u64) -> Self {
+        Self { state: seed }
+    }
+
+    /// Next 64 random bits.
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E3779B97F4A7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+        z ^ (z >> 31)
+    }
+}
+
+/// xoshiro256++ 1.0 — the workhorse generator.
+///
+/// Fast (sub-ns per draw), 2^256-1 period, passes BigCrush. All sampling
+/// in the repo goes through this type.
+#[derive(Clone, Debug)]
+pub struct Xoshiro256pp {
+    s: [u64; 4],
+}
+
+impl Xoshiro256pp {
+    /// Seed via SplitMix64 expansion (the reference seeding procedure).
+    pub fn seed_from_u64(seed: u64) -> Self {
+        let mut sm = SplitMix64::new(seed);
+        let s = [sm.next_u64(), sm.next_u64(), sm.next_u64(), sm.next_u64()];
+        // All-zero state is the one forbidden state; SplitMix64 cannot
+        // produce four consecutive zeros, but guard anyway.
+        if s == [0, 0, 0, 0] {
+            Self { s: [0x9E3779B97F4A7C15, 1, 2, 3] }
+        } else {
+            Self { s }
+        }
+    }
+
+    /// Next 64 random bits.
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let s = &mut self.s;
+        let result = (s[0].wrapping_add(s[3])).rotate_left(23).wrapping_add(s[0]);
+        let t = s[1] << 17;
+        s[2] ^= s[0];
+        s[3] ^= s[1];
+        s[1] ^= s[2];
+        s[0] ^= s[3];
+        s[2] ^= t;
+        s[3] = s[3].rotate_left(45);
+        result
+    }
+
+    /// Uniform f64 in [0, 1): 53 mantissa bits.
+    #[inline]
+    pub fn next_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform f32 in [0, 1).
+    #[inline]
+    pub fn next_f32(&mut self) -> f32 {
+        (self.next_u64() >> 40) as f32 * (1.0 / (1u64 << 24) as f32)
+    }
+
+    /// Uniform integer in `[0, bound)` via Lemire's multiply-shift with
+    /// rejection (unbiased).
+    #[inline]
+    pub fn next_below(&mut self, bound: u64) -> u64 {
+        assert!(bound > 0, "next_below(0)");
+        let mut x = self.next_u64();
+        let mut m = (x as u128) * (bound as u128);
+        let mut l = m as u64;
+        if l < bound {
+            let t = bound.wrapping_neg() % bound;
+            while l < t {
+                x = self.next_u64();
+                m = (x as u128) * (bound as u128);
+                l = m as u64;
+            }
+        }
+        (m >> 64) as u64
+    }
+
+    /// Uniform usize index in `[0, bound)`.
+    #[inline]
+    pub fn index(&mut self, bound: usize) -> usize {
+        self.next_below(bound as u64) as usize
+    }
+
+    /// Derive an independent child stream from a name and indices.
+    ///
+    /// Streams are keyed by an FNV-1a hash of `(label, a, b)` mixed with
+    /// this stream's *initial-state-independent* seed material. The parent
+    /// is not advanced — splits are pure functions of (parent state, key),
+    /// which is what makes per-(worker, epoch) streams order-independent.
+    pub fn split(&self, label: &str, a: u64, b: u64) -> Xoshiro256pp {
+        let mut h: u64 = 0xcbf29ce484222325;
+        for &byte in label.as_bytes() {
+            h ^= byte as u64;
+            h = h.wrapping_mul(0x100000001b3);
+        }
+        h ^= a.wrapping_mul(0x9E3779B97F4A7C15);
+        h = h.rotate_left(17);
+        h ^= b.wrapping_mul(0xBF58476D1CE4E5B9);
+        // Mix with the parent's state so different roots give different
+        // children even for identical labels.
+        let mix = self.s[0] ^ self.s[1].rotate_left(13) ^ self.s[2].rotate_left(29) ^ self.s[3].rotate_left(43);
+        Xoshiro256pp::seed_from_u64(h ^ mix)
+    }
+
+    /// Standard normal draw (Box–Muller, one value per call; the spare is
+    /// discarded to keep `split`/replay semantics simple).
+    pub fn normal(&mut self) -> f64 {
+        // Avoid u1 == 0 (log(0)).
+        let u1 = loop {
+            let u = self.next_f64();
+            if u > 0.0 {
+                break u;
+            }
+        };
+        let u2 = self.next_f64();
+        (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos()
+    }
+
+    /// Fill `out` with i.i.d. N(0,1) f32 values.
+    pub fn fill_normal_f32(&mut self, out: &mut [f32]) {
+        // Box–Muller pairs: consume both outputs for throughput.
+        let mut i = 0;
+        while i + 1 < out.len() {
+            let u1 = loop {
+                let u = self.next_f64();
+                if u > 0.0 {
+                    break u;
+                }
+            };
+            let u2 = self.next_f64();
+            let r = (-2.0 * u1.ln()).sqrt();
+            let theta = 2.0 * std::f64::consts::PI * u2;
+            out[i] = (r * theta.cos()) as f32;
+            out[i + 1] = (r * theta.sin()) as f32;
+            i += 2;
+        }
+        if i < out.len() {
+            out[i] = self.normal() as f32;
+        }
+    }
+
+    /// Sample `k` indices uniformly without replacement from `[0, n)`
+    /// (partial Fisher–Yates over an index map; O(k) memory for k ≪ n
+    /// would need a hash map — we keep the simple O(n) scratch since the
+    /// call sites reuse a scratch buffer).
+    pub fn sample_without_replacement(&mut self, n: usize, k: usize, scratch: &mut Vec<usize>) -> Vec<usize> {
+        assert!(k <= n);
+        scratch.clear();
+        scratch.extend(0..n);
+        for i in 0..k {
+            let j = i + self.index(n - i);
+            scratch.swap(i, j);
+        }
+        scratch[..k].to_vec()
+    }
+
+    /// Shuffle a slice in place (Fisher–Yates).
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.index(i + 1);
+            xs.swap(i, j);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn splitmix_reference_vector() {
+        // Reference values for seed 1234567 from the public-domain
+        // splitmix64.c reference implementation.
+        let mut sm = SplitMix64::new(0);
+        let a = sm.next_u64();
+        let b = sm.next_u64();
+        assert_ne!(a, b);
+        // Seed 0 first output of splitmix64 is 0xE220A8397B1DCDAF.
+        assert_eq!(a, 0xE220A8397B1DCDAF);
+    }
+
+    #[test]
+    fn xoshiro_is_deterministic() {
+        let mut a = Xoshiro256pp::seed_from_u64(42);
+        let mut b = Xoshiro256pp::seed_from_u64(42);
+        for _ in 0..1000 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn xoshiro_different_seeds_differ() {
+        let mut a = Xoshiro256pp::seed_from_u64(1);
+        let mut b = Xoshiro256pp::seed_from_u64(2);
+        let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert!(same < 2);
+    }
+
+    #[test]
+    fn next_f64_in_unit_interval() {
+        let mut r = Xoshiro256pp::seed_from_u64(7);
+        for _ in 0..10_000 {
+            let x = r.next_f64();
+            assert!((0.0..1.0).contains(&x));
+        }
+    }
+
+    #[test]
+    fn next_below_unbiased_small_bound() {
+        let mut r = Xoshiro256pp::seed_from_u64(3);
+        let mut counts = [0usize; 3];
+        let n = 90_000;
+        for _ in 0..n {
+            counts[r.next_below(3) as usize] += 1;
+        }
+        for &c in &counts {
+            let expected = n / 3;
+            assert!((c as i64 - expected as i64).unsigned_abs() < 1500, "counts={counts:?}");
+        }
+    }
+
+    #[test]
+    fn split_streams_are_independent_and_stable() {
+        let root = Xoshiro256pp::seed_from_u64(99);
+        let mut w0e0 = root.split("worker", 0, 0);
+        let mut w0e0_again = root.split("worker", 0, 0);
+        let mut w1e0 = root.split("worker", 1, 0);
+        let mut w0e1 = root.split("worker", 0, 1);
+        assert_eq!(w0e0.next_u64(), w0e0_again.next_u64());
+        let x = w0e0.next_u64();
+        assert_ne!(x, w1e0.next_u64());
+        assert_ne!(x, w0e1.next_u64());
+        // Label matters.
+        let mut d = root.split("delay", 0, 0);
+        assert_ne!(root.split("worker", 0, 0).next_u64(), d.next_u64());
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Xoshiro256pp::seed_from_u64(5);
+        let n = 200_000;
+        let (mut sum, mut sumsq) = (0.0f64, 0.0f64);
+        for _ in 0..n {
+            let x = r.normal();
+            sum += x;
+            sumsq += x * x;
+        }
+        let mean = sum / n as f64;
+        let var = sumsq / n as f64 - mean * mean;
+        assert!(mean.abs() < 0.01, "mean={mean}");
+        assert!((var - 1.0).abs() < 0.02, "var={var}");
+    }
+
+    #[test]
+    fn fill_normal_f32_moments_odd_len() {
+        let mut r = Xoshiro256pp::seed_from_u64(8);
+        let mut buf = vec![0.0f32; 100_001];
+        r.fill_normal_f32(&mut buf);
+        let mean: f64 = buf.iter().map(|&x| x as f64).sum::<f64>() / buf.len() as f64;
+        let var: f64 =
+            buf.iter().map(|&x| (x as f64 - mean).powi(2)).sum::<f64>() / buf.len() as f64;
+        assert!(mean.abs() < 0.02);
+        assert!((var - 1.0).abs() < 0.03);
+    }
+
+    #[test]
+    fn sample_without_replacement_unique_and_in_range() {
+        let mut r = Xoshiro256pp::seed_from_u64(11);
+        let mut scratch = Vec::new();
+        let s = r.sample_without_replacement(100, 30, &mut scratch);
+        assert_eq!(s.len(), 30);
+        let mut seen = std::collections::HashSet::new();
+        for &i in &s {
+            assert!(i < 100);
+            assert!(seen.insert(i), "duplicate {i}");
+        }
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Xoshiro256pp::seed_from_u64(13);
+        let mut v: Vec<u32> = (0..50).collect();
+        r.shuffle(&mut v);
+        let mut sorted = v.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..50).collect::<Vec<u32>>());
+    }
+}

@@ -1,0 +1,174 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` and
+//! the rust runtime (argument order, shapes, dtypes, semantic params).
+
+use crate::ser::{parse, Value};
+use anyhow::{anyhow, Context, Result};
+use std::path::Path;
+
+/// One input/output tensor description.
+#[derive(Clone, Debug, PartialEq)]
+pub struct IoSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl IoSpec {
+    fn from_value(v: &Value) -> Result<Self> {
+        let name = v.req("name").map_err(|e| anyhow!(e))?.as_str().unwrap_or_default().to_string();
+        let shape = v
+            .req("shape")
+            .map_err(|e| anyhow!(e))?
+            .as_arr()
+            .ok_or_else(|| anyhow!("shape not an array"))?
+            .iter()
+            .map(|x| x.as_usize().ok_or_else(|| anyhow!("bad dim")))
+            .collect::<Result<Vec<_>>>()?;
+        let dtype = v.get_str("dtype").unwrap_or("f32").to_string();
+        Ok(Self { name, shape, dtype })
+    }
+
+    /// Total element count.
+    pub fn elems(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// One AOT program.
+#[derive(Clone, Debug)]
+pub struct ArtifactInfo {
+    pub name: String,
+    pub file: String,
+    pub kind: String,
+    pub params: Value,
+    pub inputs: Vec<IoSpec>,
+    pub outputs: Vec<IoSpec>,
+}
+
+/// The parsed manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub artifacts: Vec<ArtifactInfo>,
+}
+
+impl Manifest {
+    /// Load and validate `manifest.json`.
+    pub fn load(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Self::parse_str(&text)
+    }
+
+    /// Parse from a JSON string (exposed for tests).
+    pub fn parse_str(text: &str) -> Result<Self> {
+        let root = parse(text).map_err(|e| anyhow!("manifest: {e}"))?;
+        let version = root.get_usize("version").unwrap_or(0);
+        if version != 1 {
+            anyhow::bail!("unsupported manifest version {version}");
+        }
+        let arts = root
+            .req("artifacts")
+            .map_err(|e| anyhow!(e))?
+            .as_arr()
+            .ok_or_else(|| anyhow!("artifacts not an array"))?;
+        let mut artifacts = Vec::with_capacity(arts.len());
+        for a in arts {
+            let name = a.get_str("name").unwrap_or_default().to_string();
+            let parse_io = |key: &str| -> Result<Vec<IoSpec>> {
+                a.req(key)
+                    .map_err(|e| anyhow!("{name}: {e}"))?
+                    .as_arr()
+                    .ok_or_else(|| anyhow!("{name}: {key} not an array"))?
+                    .iter()
+                    .map(IoSpec::from_value)
+                    .collect()
+            };
+            artifacts.push(ArtifactInfo {
+                file: a.get_str("file").unwrap_or_default().to_string(),
+                kind: a.get_str("kind").unwrap_or_default().to_string(),
+                params: a.get("params").cloned().unwrap_or(Value::Null),
+                inputs: parse_io("inputs")?,
+                outputs: parse_io("outputs")?,
+                name,
+            });
+        }
+        // Names must be unique (executable-cache key).
+        let mut names: Vec<&str> = artifacts.iter().map(|a| a.name.as_str()).collect();
+        names.sort_unstable();
+        names.dedup();
+        if names.len() != artifacts.len() {
+            anyhow::bail!("duplicate artifact names in manifest");
+        }
+        Ok(Self { artifacts })
+    }
+
+    /// Look up by name.
+    pub fn get(&self, name: &str) -> Option<&ArtifactInfo> {
+        self.artifacts.iter().find(|a| a.name == name)
+    }
+
+    /// All artifacts of a kind.
+    pub fn of_kind(&self, kind: &str) -> Vec<&ArtifactInfo> {
+        self.artifacts.iter().filter(|a| a.kind == kind).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "version": 1,
+      "artifacts": [
+        {
+          "name": "linreg_step_r64_d24_b4_k2",
+          "file": "linreg_step_r64_d24_b4_k2.hlo.txt",
+          "kind": "linreg_step",
+          "params": {"rows": 64, "dim": 24, "batch": 4, "k": 2},
+          "inputs": [
+            {"name": "a", "shape": [64, 24], "dtype": "f32"},
+            {"name": "idx", "shape": [2, 4], "dtype": "i32"}
+          ],
+          "outputs": [{"name": "x_k", "shape": [24], "dtype": "f32"}]
+        }
+      ]
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse_str(SAMPLE).unwrap();
+        assert_eq!(m.artifacts.len(), 1);
+        let a = m.get("linreg_step_r64_d24_b4_k2").unwrap();
+        assert_eq!(a.kind, "linreg_step");
+        assert_eq!(a.inputs[0].shape, vec![64, 24]);
+        assert_eq!(a.inputs[1].dtype, "i32");
+        assert_eq!(a.inputs[0].elems(), 64 * 24);
+        assert_eq!(a.params.get_usize("k"), Some(2));
+        assert_eq!(m.of_kind("linreg_step").len(), 1);
+        assert_eq!(m.of_kind("combine").len(), 0);
+    }
+
+    #[test]
+    fn rejects_bad_version() {
+        assert!(Manifest::parse_str(r#"{"version": 9, "artifacts": []}"#).is_err());
+    }
+
+    #[test]
+    fn rejects_duplicate_names() {
+        let dup = r#"{"version": 1, "artifacts": [
+            {"name": "a", "file": "f", "kind": "k", "inputs": [], "outputs": []},
+            {"name": "a", "file": "g", "kind": "k", "inputs": [], "outputs": []}
+        ]}"#;
+        assert!(Manifest::parse_str(dup).is_err());
+    }
+
+    #[test]
+    fn real_manifest_parses_if_present() {
+        let p = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts/manifest.json");
+        if p.exists() {
+            let m = Manifest::load(&p).unwrap();
+            assert!(!m.artifacts.is_empty());
+            assert!(!m.of_kind("linreg_step").is_empty());
+        }
+    }
+}

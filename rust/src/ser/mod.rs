@@ -1,0 +1,174 @@
+//! Minimal JSON — parser, writer, and typed accessors.
+//!
+//! `serde`/`serde_json` are not available offline, so this substrate
+//! covers what the repo needs: the AOT `artifacts/manifest.json`, run
+//! configs, and metric/figure dumps. It supports the full JSON grammar
+//! (objects, arrays, strings with escapes, numbers, bools, null) with
+//! precise error positions; it does not aim for serde's zero-copy or
+//! derive ergonomics.
+
+mod parse;
+mod write;
+
+pub use parse::{parse, ParseError};
+pub use write::to_string_pretty;
+
+use std::collections::BTreeMap;
+
+/// A JSON value. Object keys are sorted (BTreeMap) so output is stable.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<Value>),
+    Obj(BTreeMap<String, Value>),
+}
+
+impl Value {
+    /// Typed accessor: object field.
+    pub fn get(&self, key: &str) -> Option<&Value> {
+        match self {
+            Value::Obj(m) => m.get(key),
+            _ => None,
+        }
+    }
+
+    /// Field access that reports *which* key was missing.
+    pub fn req(&self, key: &str) -> Result<&Value, String> {
+        self.get(key).ok_or_else(|| format!("missing field `{key}`"))
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Num(x) => Some(*x),
+            _ => None,
+        }
+    }
+
+    pub fn as_usize(&self) -> Option<usize> {
+        match self {
+            Value::Num(x) if *x >= 0.0 && x.fract() == 0.0 => Some(*x as usize),
+            _ => None,
+        }
+    }
+
+    pub fn as_u64(&self) -> Option<u64> {
+        match self {
+            Value::Num(x) if *x >= 0.0 && x.fract() == 0.0 => Some(*x as u64),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_arr(&self) -> Option<&[Value]> {
+        match self {
+            Value::Arr(v) => Some(v),
+            _ => None,
+        }
+    }
+
+    pub fn as_obj(&self) -> Option<&BTreeMap<String, Value>> {
+        match self {
+            Value::Obj(m) => Some(m),
+            _ => None,
+        }
+    }
+
+    /// Convenience: `obj.get_f64("lr").unwrap_or(default)`.
+    pub fn get_f64(&self, key: &str) -> Option<f64> {
+        self.get(key).and_then(Value::as_f64)
+    }
+    pub fn get_usize(&self, key: &str) -> Option<usize> {
+        self.get(key).and_then(Value::as_usize)
+    }
+    pub fn get_str(&self, key: &str) -> Option<&str> {
+        self.get(key).and_then(Value::as_str)
+    }
+    pub fn get_bool(&self, key: &str) -> Option<bool> {
+        self.get(key).and_then(Value::as_bool)
+    }
+
+    /// Build an object from pairs (test/figure-dump ergonomics).
+    pub fn obj(pairs: Vec<(&str, Value)>) -> Value {
+        Value::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+    }
+
+    /// Build an array of numbers.
+    pub fn nums<T: Into<f64> + Copy>(xs: &[T]) -> Value {
+        Value::Arr(xs.iter().map(|&x| Value::Num(x.into())).collect())
+    }
+}
+
+impl From<f64> for Value {
+    fn from(x: f64) -> Self {
+        Value::Num(x)
+    }
+}
+impl From<usize> for Value {
+    fn from(x: usize) -> Self {
+        Value::Num(x as f64)
+    }
+}
+impl From<bool> for Value {
+    fn from(x: bool) -> Self {
+        Value::Bool(x)
+    }
+}
+impl From<&str> for Value {
+    fn from(x: &str) -> Self {
+        Value::Str(x.to_string())
+    }
+}
+impl From<String> for Value {
+    fn from(x: String) -> Self {
+        Value::Str(x)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_trip() {
+        let v = Value::obj(vec![
+            ("name", "fig3".into()),
+            ("workers", 10usize.into()),
+            ("t", 200.0.into()),
+            ("enabled", true.into()),
+            ("none", Value::Null),
+            ("series", Value::nums(&[1.0f64, 2.5, -3.0])),
+            ("nested", Value::obj(vec![("k", 7usize.into())])),
+        ]);
+        let text = to_string_pretty(&v);
+        let back = parse(&text).unwrap();
+        assert_eq!(v, back);
+    }
+
+    #[test]
+    fn accessors() {
+        let v = parse(r#"{"a": 3, "b": "x", "c": [1,2], "d": {"e": false}}"#).unwrap();
+        assert_eq!(v.get_usize("a"), Some(3));
+        assert_eq!(v.get_str("b"), Some("x"));
+        assert_eq!(v.get("c").unwrap().as_arr().unwrap().len(), 2);
+        assert_eq!(v.get("d").unwrap().get_bool("e"), Some(false));
+        assert!(v.req("zzz").is_err());
+        assert_eq!(Value::Num(3.5).as_usize(), None);
+        assert_eq!(Value::Num(-1.0).as_usize(), None);
+    }
+}

@@ -1,0 +1,146 @@
+//! JSON writer (pretty, 2-space indent, stable key order).
+
+use super::Value;
+use std::fmt::Write as _;
+
+/// Serialize with stable formatting — object keys come out sorted because
+/// [`Value::Obj`] is a `BTreeMap`, so dumps diff cleanly across runs.
+pub fn to_string_pretty(v: &Value) -> String {
+    let mut out = String::new();
+    write_value(v, 0, &mut out);
+    out
+}
+
+fn write_value(v: &Value, indent: usize, out: &mut String) {
+    match v {
+        Value::Null => out.push_str("null"),
+        Value::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
+        Value::Num(x) => write_num(*x, out),
+        Value::Str(s) => write_str(s, out),
+        Value::Arr(items) => {
+            if items.is_empty() {
+                out.push_str("[]");
+                return;
+            }
+            // Short numeric arrays inline; everything else one-per-line.
+            let inline = items.len() <= 16 && items.iter().all(|i| matches!(i, Value::Num(_)));
+            if inline {
+                out.push('[');
+                for (i, item) in items.iter().enumerate() {
+                    if i > 0 {
+                        out.push_str(", ");
+                    }
+                    write_value(item, indent, out);
+                }
+                out.push(']');
+            } else {
+                out.push_str("[\n");
+                for (i, item) in items.iter().enumerate() {
+                    pad(indent + 1, out);
+                    write_value(item, indent + 1, out);
+                    if i + 1 < items.len() {
+                        out.push(',');
+                    }
+                    out.push('\n');
+                }
+                pad(indent, out);
+                out.push(']');
+            }
+        }
+        Value::Obj(map) => {
+            if map.is_empty() {
+                out.push_str("{}");
+                return;
+            }
+            out.push_str("{\n");
+            for (i, (k, val)) in map.iter().enumerate() {
+                pad(indent + 1, out);
+                write_str(k, out);
+                out.push_str(": ");
+                write_value(val, indent + 1, out);
+                if i + 1 < map.len() {
+                    out.push(',');
+                }
+                out.push('\n');
+            }
+            pad(indent, out);
+            out.push('}');
+        }
+    }
+}
+
+fn pad(indent: usize, out: &mut String) {
+    for _ in 0..indent {
+        out.push_str("  ");
+    }
+}
+
+fn write_num(x: f64, out: &mut String) {
+    if !x.is_finite() {
+        // JSON has no Inf/NaN; emit null (documented lossy behavior).
+        out.push_str("null");
+    } else if x.fract() == 0.0 && x.abs() < 1e15 {
+        let _ = write!(out, "{}", x as i64);
+    } else {
+        let _ = write!(out, "{x}");
+    }
+}
+
+fn write_str(s: &str, out: &mut String) {
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                let _ = write!(out, "\\u{:04x}", c as u32);
+            }
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ser::parse;
+
+    #[test]
+    fn writes_integers_without_fraction() {
+        assert_eq!(to_string_pretty(&Value::Num(3.0)), "3");
+        assert_eq!(to_string_pretty(&Value::Num(3.25)), "3.25");
+        assert_eq!(to_string_pretty(&Value::Num(-0.0)), "0");
+    }
+
+    #[test]
+    fn escapes_round_trip() {
+        let s = Value::Str("a\"b\\c\nd\te\u{1}".into());
+        let text = to_string_pretty(&s);
+        assert_eq!(parse(&text).unwrap(), s);
+    }
+
+    #[test]
+    fn non_finite_becomes_null() {
+        assert_eq!(to_string_pretty(&Value::Num(f64::NAN)), "null");
+        assert_eq!(to_string_pretty(&Value::Num(f64::INFINITY)), "null");
+    }
+
+    #[test]
+    fn short_numeric_arrays_inline() {
+        let v = Value::nums(&[1.0f64, 2.0, 3.0]);
+        assert_eq!(to_string_pretty(&v), "[1, 2, 3]");
+    }
+
+    #[test]
+    fn object_keys_sorted() {
+        let v = Value::obj(vec![("b", 1usize.into()), ("a", 2usize.into())]);
+        let text = to_string_pretty(&v);
+        let ia = text.find("\"a\"").unwrap();
+        let ib = text.find("\"b\"").unwrap();
+        assert!(ia < ib);
+    }
+}

@@ -1,0 +1,164 @@
+//! Simulated wall-clock accounting.
+//!
+//! Every figure in the paper plots error against *time*. Our testbed is
+//! a single machine, so the coordinator charges a [`SimClock`] with the
+//! modeled durations (compute from `straggler::DelayModel`, communication
+//! from `straggler::CommModel`) instead of reading the host clock. The
+//! numerics are real; only the time axis is modeled — see DESIGN.md.
+//!
+//! The clock also exposes the epoch-duration law of each method:
+//! * Anytime:   `T + max_comm` (deterministic budget — the paper's point),
+//! * Sync/FNB:  order statistics of worker finishing times,
+//! * and a [`FinishLog`] so figures can audit per-epoch charges.
+
+/// Simulated clock: monotonically advancing f64 seconds.
+#[derive(Clone, Debug, Default)]
+pub struct SimClock {
+    now: f64,
+    log: FinishLog,
+}
+
+/// Per-epoch charge breakdown (for figures/tests).
+#[derive(Clone, Debug, Default)]
+pub struct FinishLog {
+    pub epochs: Vec<EpochCharge>,
+}
+
+/// One epoch's accounting record.
+#[derive(Clone, Debug, PartialEq)]
+pub struct EpochCharge {
+    pub epoch: usize,
+    /// Compute part of the epoch duration (the master's wait for work).
+    pub compute_secs: f64,
+    /// Communication part.
+    pub comm_secs: f64,
+    /// Per-worker finishing times (compute only), None = never reported.
+    pub worker_finish: Vec<Option<f64>>,
+}
+
+impl SimClock {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Current simulated time (seconds).
+    pub fn now(&self) -> f64 {
+        self.now
+    }
+
+    /// Charge one epoch: master-side duration = `compute + comm`.
+    pub fn charge_epoch(
+        &mut self,
+        epoch: usize,
+        compute_secs: f64,
+        comm_secs: f64,
+        worker_finish: Vec<Option<f64>>,
+    ) {
+        assert!(compute_secs >= 0.0 && comm_secs >= 0.0, "negative charge");
+        self.now += compute_secs + comm_secs;
+        self.log.epochs.push(EpochCharge { epoch, compute_secs, comm_secs, worker_finish });
+    }
+
+    /// Audit log of charges.
+    pub fn log(&self) -> &FinishLog {
+        &self.log
+    }
+}
+
+/// Master-side wait for a set of worker finishing times under different
+/// collection rules. `finish[v] = None` means worker never reports
+/// (dead, or beyond `T_c`).
+pub mod wait {
+    /// Wait-for-all (classical Sync-SGD): the max finishing time; dead
+    /// workers stall the master until `t_c` (the waiting-time guard).
+    pub fn all(finish: &[Option<f64>], t_c: f64) -> f64 {
+        let mut worst: f64 = 0.0;
+        for f in finish {
+            match f {
+                Some(t) => worst = worst.max(*t),
+                None => return t_c,
+            }
+        }
+        worst.min(t_c)
+    }
+
+    /// Fastest `k` of the reported times (FNB waits for the (N−B)-th
+    /// order statistic). If fewer than `k` report within `t_c`, the wait
+    /// is `t_c`.
+    pub fn fastest_k(finish: &[Option<f64>], k: usize, t_c: f64) -> f64 {
+        let mut times: Vec<f64> = finish.iter().flatten().copied().filter(|&t| t <= t_c).collect();
+        if times.len() < k {
+            return t_c;
+        }
+        times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        times[k - 1]
+    }
+
+    /// Anytime: the fixed budget `t` — the whole point of the paper: the
+    /// master's wait is deterministic. Late *communication* is capped by
+    /// `t_c` at the call site.
+    pub fn anytime(t: f64) -> f64 {
+        t
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn clock_accumulates() {
+        let mut c = SimClock::new();
+        c.charge_epoch(0, 10.0, 1.0, vec![]);
+        c.charge_epoch(1, 5.0, 0.5, vec![]);
+        assert!((c.now() - 16.5).abs() < 1e-12);
+        assert_eq!(c.log().epochs.len(), 2);
+        assert_eq!(c.log().epochs[1].epoch, 1);
+    }
+
+    #[test]
+    #[should_panic]
+    fn negative_charge_rejected() {
+        SimClock::new().charge_epoch(0, -1.0, 0.0, vec![]);
+    }
+
+    #[test]
+    fn wait_all_is_max() {
+        let f = vec![Some(3.0), Some(9.0), Some(1.0)];
+        assert_eq!(wait::all(&f, 100.0), 9.0);
+    }
+
+    #[test]
+    fn wait_all_dead_worker_costs_tc() {
+        let f = vec![Some(3.0), None];
+        assert_eq!(wait::all(&f, 50.0), 50.0);
+    }
+
+    #[test]
+    fn wait_all_capped_by_tc() {
+        let f = vec![Some(3.0), Some(200.0)];
+        assert_eq!(wait::all(&f, 50.0), 50.0);
+    }
+
+    #[test]
+    fn fastest_k_order_statistic() {
+        let f = vec![Some(5.0), Some(1.0), Some(9.0), Some(3.0)];
+        assert_eq!(wait::fastest_k(&f, 1, 100.0), 1.0);
+        assert_eq!(wait::fastest_k(&f, 2, 100.0), 3.0);
+        assert_eq!(wait::fastest_k(&f, 4, 100.0), 9.0);
+    }
+
+    #[test]
+    fn fastest_k_insufficient_reporters_costs_tc() {
+        let f = vec![Some(5.0), None, None];
+        assert_eq!(wait::fastest_k(&f, 2, 77.0), 77.0);
+        // Times beyond t_c don't count as reported.
+        let g = vec![Some(5.0), Some(90.0)];
+        assert_eq!(wait::fastest_k(&g, 2, 77.0), 77.0);
+    }
+
+    #[test]
+    fn anytime_wait_is_budget() {
+        assert_eq!(wait::anytime(100.0), 100.0);
+    }
+}

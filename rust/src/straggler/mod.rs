@@ -1,0 +1,412 @@
+//! Straggler delay models — the simulated EC2.
+//!
+//! The paper's experiments ran on 20 Amazon EC2 nodes whose organic load
+//! noise produced the heavy-tailed finishing times of Fig. 1. We have no
+//! EC2, so this module is the substitute substrate (DESIGN.md §Dataset
+//! substitutions): a [`DelayModel`] yields the *per-SGD-step compute
+//! time* of worker `v` at epoch `e`, and a [`CommModel`] the
+//! worker↔master communication time. The coordinator charges these
+//! against the simulated clock; numerics still execute for real.
+//!
+//! Model taxonomy (paper §I):
+//! * **non-persistent stragglers** — per-epoch randomized slowness:
+//!   [`DelaySpec::ShiftedExp`], [`DelaySpec::Pareto`],
+//!   [`DelaySpec::Ec2Bimodal`] (lognormal body + Pareto tail fitted to
+//!   Fig. 1's "10–40 s bulk, >100 s tail"), [`DelaySpec::TraceReplay`].
+//! * **persistent stragglers** — permanently slow/failed nodes:
+//!   [`PersistentSpec`] wraps any base model, marking chosen workers as
+//!   `SlowBy(factor)` or `Dead` from a given epoch.
+
+use crate::rng::{Distribution, Exponential, LogNormal, Pareto, Uniform, Xoshiro256pp};
+
+/// Declarative delay-model description (lives in run configs).
+#[derive(Clone, Debug, PartialEq)]
+pub enum DelaySpec {
+    /// Every step takes exactly `secs` — the idealized cluster.
+    Deterministic { secs: f64 },
+    /// `base + Exp(rate)` per *epoch* slowdown factor applied to a fixed
+    /// per-step cost: the classic shifted-exponential worker model from
+    /// the coded-computation literature (Lee et al. '18).
+    ShiftedExp { base: f64, rate: f64 },
+    /// Per-epoch Pareto(xm, alpha) slowdown factor (alpha near 1 → the
+    /// "tail at scale" regime).
+    Pareto { xm: f64, alpha: f64 },
+    /// Fig.-1-like EC2 model: per-epoch worker rate drawn from a
+    /// lognormal body, with probability `tail_p` replaced by a Pareto
+    /// tail draw. `step_secs` is the intrinsic per-step cost.
+    /// `machine_spread` is the sigma of a per-worker *fixed* lognormal
+    /// factor — "distinct physical computers have differing processing
+    /// powers" (paper §I): machine heterogeneity persists across epochs,
+    /// while the body/tail noise redraws every epoch.
+    Ec2Bimodal {
+        step_secs: f64,
+        body_median: f64,
+        body_p90: f64,
+        tail_p: f64,
+        tail_alpha: f64,
+        machine_spread: f64,
+    },
+    /// Replay an empirical distribution of per-epoch slowdown factors.
+    TraceReplay { factors: Vec<f64> },
+    /// Heterogeneous fleet: worker v's deterministic per-step cost is
+    /// `secs[v % secs.len()]` — reproduces Fig. 2(a)'s forced iteration
+    /// skew exactly.
+    PerWorker { secs: Vec<f64> },
+}
+
+/// Persistent-straggler overlay.
+#[derive(Clone, Debug, PartialEq)]
+pub struct PersistentSpec {
+    /// Worker ids affected.
+    pub workers: Vec<usize>,
+    /// Epoch at which the condition begins.
+    pub from_epoch: usize,
+    /// Slowdown factor; `f64::INFINITY` means dead (never reports).
+    pub factor: f64,
+}
+
+/// A fully-specified straggler environment.
+#[derive(Clone, Debug, PartialEq)]
+pub struct StragglerEnv {
+    pub delay: DelaySpec,
+    pub persistent: Vec<PersistentSpec>,
+}
+
+impl StragglerEnv {
+    pub fn ideal(step_secs: f64) -> Self {
+        Self { delay: DelaySpec::Deterministic { secs: step_secs }, persistent: Vec::new() }
+    }
+
+    /// The paper's default evaluation environment: EC2-like bimodal with
+    /// a 3% heavy tail, calibrated so the bulk of *task* (epoch) times
+    /// lands in 10–40 s for ~1k-step epochs.
+    pub fn ec2_default(step_secs: f64) -> Self {
+        Self {
+            delay: DelaySpec::Ec2Bimodal {
+                step_secs,
+                body_median: 1.0,
+                body_p90: 2.0,
+                tail_p: 0.03,
+                tail_alpha: 1.1,
+                machine_spread: 0.35,
+            },
+            persistent: Vec::new(),
+        }
+    }
+
+    /// Add a persistent straggler overlay.
+    pub fn with_persistent(mut self, p: PersistentSpec) -> Self {
+        self.persistent.push(p);
+        self
+    }
+}
+
+/// Sampled per-(worker, epoch) behavior. The per-step cost is constant
+/// within an epoch (worker rate varies epoch to epoch), matching how
+/// EC2 contention manifests at SGD-step granularity.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum WorkerEpochRate {
+    /// Seconds per SGD step.
+    StepSecs(f64),
+    /// Worker never reports this epoch.
+    Dead,
+}
+
+/// Instantiated delay model: pure function of (worker, epoch) given the
+/// root seed — independent streams per pair, so simulation results do
+/// not depend on thread scheduling.
+#[derive(Clone, Debug)]
+pub struct DelayModel {
+    env: StragglerEnv,
+    root: Xoshiro256pp,
+}
+
+impl DelayModel {
+    pub fn new(env: StragglerEnv, seed: u64) -> Self {
+        Self { env, root: Xoshiro256pp::seed_from_u64(seed).split("straggler", 0, 0) }
+    }
+
+    /// Per-step compute seconds for worker `v` at epoch `e`.
+    pub fn rate(&self, v: usize, e: usize) -> WorkerEpochRate {
+        // Persistent overlays take precedence.
+        for p in &self.env.persistent {
+            if e >= p.from_epoch && p.workers.contains(&v) {
+                if p.factor.is_infinite() {
+                    return WorkerEpochRate::Dead;
+                }
+                let base = self.base_rate(v, e);
+                return WorkerEpochRate::StepSecs(base * p.factor);
+            }
+        }
+        WorkerEpochRate::StepSecs(self.base_rate(v, e))
+    }
+
+    fn base_rate(&self, v: usize, e: usize) -> f64 {
+        let _ = v;
+        let mut rng = self.root.split("rate", v as u64, e as u64);
+        match &self.env.delay {
+            DelaySpec::Deterministic { secs } => *secs,
+            DelaySpec::PerWorker { secs } => secs[v % secs.len()],
+            DelaySpec::ShiftedExp { base, rate } => {
+                base + Exponential::new(*rate).sample(&mut rng)
+            }
+            DelaySpec::Pareto { xm, alpha } => Pareto::new(*xm, *alpha).sample(&mut rng),
+            DelaySpec::Ec2Bimodal {
+                step_secs,
+                body_median,
+                body_p90,
+                tail_p,
+                tail_alpha,
+                machine_spread,
+            } => {
+                // Fixed per-machine factor (epoch-independent stream).
+                let machine = if *machine_spread > 0.0 {
+                    let mut mrng = self.root.split("machine", v as u64, 0);
+                    LogNormal::new(0.0, *machine_spread).sample(&mut mrng)
+                } else {
+                    1.0
+                };
+                let u = rng.next_f64();
+                let factor = if u < *tail_p {
+                    // Tail event: at least 4x the p90, Pareto beyond.
+                    let tail_min = body_p90 * 4.0;
+                    Pareto::new(tail_min, *tail_alpha).sample(&mut rng)
+                } else {
+                    LogNormal::from_median_p90(*body_median, *body_p90).sample(&mut rng)
+                };
+                step_secs * machine * factor
+            }
+            DelaySpec::TraceReplay { factors } => {
+                assert!(!factors.is_empty(), "empty trace");
+                factors[rng.index(factors.len())]
+            }
+        }
+    }
+
+    /// Steps completed within a time budget `t` at this epoch's rate, and
+    /// the time actually consumed. A worker also stops after
+    /// `max_steps` (Algorithm 2's `t ≤ m(S+1)/N` guard is handled by the
+    /// caller passing the shard-size bound).
+    pub fn steps_within(&self, v: usize, e: usize, t: f64, max_steps: usize) -> (usize, f64) {
+        match self.rate(v, e) {
+            WorkerEpochRate::Dead => (0, t),
+            WorkerEpochRate::StepSecs(s) => {
+                if s <= 0.0 {
+                    return (max_steps, 0.0);
+                }
+                let q = ((t / s).floor() as usize).min(max_steps);
+                (q, q as f64 * s)
+            }
+        }
+    }
+}
+
+/// Load an empirical slowdown-factor trace from a one-column CSV (header
+/// optional, `#` comments ignored) for [`DelaySpec::TraceReplay`] — the
+/// hook for replaying *real* cluster measurements through the simulator.
+pub fn load_factors_csv(path: &std::path::Path) -> Result<Vec<f64>, String> {
+    let text = std::fs::read_to_string(path).map_err(|e| format!("{}: {e}", path.display()))?;
+    let mut out = Vec::new();
+    for (i, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        // Take the first comma-separated field.
+        let field = line.split(',').next().unwrap_or("").trim();
+        match field.parse::<f64>() {
+            Ok(v) if v > 0.0 => out.push(v),
+            Ok(v) => return Err(format!("line {}: non-positive factor {v}", i + 1)),
+            Err(_) if i == 0 => continue, // header row
+            Err(e) => return Err(format!("line {}: {e}", i + 1)),
+        }
+    }
+    if out.is_empty() {
+        return Err(format!("{}: no factors found", path.display()));
+    }
+    Ok(out)
+}
+
+/// Communication-time model (master↔worker round-trip contributions).
+#[derive(Clone, Debug, PartialEq)]
+pub enum CommSpec {
+    /// No communication cost.
+    Zero,
+    /// Fixed seconds per direction.
+    Fixed { secs: f64 },
+    /// Uniform in [lo, hi] per direction — used by the generalized
+    /// Anytime experiments where idle-period length varies.
+    UniformRange { lo: f64, hi: f64 },
+}
+
+/// Instantiated communication model.
+#[derive(Clone, Debug)]
+pub struct CommModel {
+    spec: CommSpec,
+    root: Xoshiro256pp,
+}
+
+impl CommModel {
+    pub fn new(spec: CommSpec, seed: u64) -> Self {
+        Self { spec, root: Xoshiro256pp::seed_from_u64(seed).split("comm", 0, 0) }
+    }
+
+    /// One-way communication seconds for worker `v`, epoch `e`,
+    /// direction `dir` (0 = worker→master, 1 = master→worker).
+    pub fn delay(&self, v: usize, e: usize, dir: u8) -> f64 {
+        let mut rng = self.root.split("comm-delay", v as u64, (e as u64) << 1 | dir as u64);
+        match &self.spec {
+            CommSpec::Zero => 0.0,
+            CommSpec::Fixed { secs } => *secs,
+            CommSpec::UniformRange { lo, hi } => Uniform::new(*lo, *hi).sample(&mut rng),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_rate_and_steps() {
+        let m = DelayModel::new(StragglerEnv::ideal(0.1), 1);
+        assert_eq!(m.rate(0, 0), WorkerEpochRate::StepSecs(0.1));
+        let (q, used) = m.steps_within(0, 0, 1.05, usize::MAX);
+        assert_eq!(q, 10);
+        assert!((used - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn steps_capped_by_max() {
+        let m = DelayModel::new(StragglerEnv::ideal(0.01), 1);
+        let (q, used) = m.steps_within(0, 0, 10.0, 50);
+        assert_eq!(q, 50);
+        assert!((used - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn rates_deterministic_per_worker_epoch() {
+        let env = StragglerEnv::ec2_default(0.02);
+        let a = DelayModel::new(env.clone(), 7);
+        let b = DelayModel::new(env, 7);
+        for v in 0..5 {
+            for e in 0..5 {
+                assert_eq!(a.rate(v, e), b.rate(v, e));
+            }
+        }
+        // Different epochs give different rates (non-persistent variation).
+        let r0 = a.rate(0, 0);
+        let r1 = a.rate(0, 1);
+        assert_ne!(r0, r1);
+    }
+
+    #[test]
+    fn ec2_bimodal_has_heavy_tail() {
+        let m = DelayModel::new(StragglerEnv::ec2_default(1.0), 3);
+        let mut rates = Vec::new();
+        for v in 0..20 {
+            for e in 0..500 {
+                match m.rate(v, e) {
+                    WorkerEpochRate::StepSecs(s) => rates.push(s),
+                    WorkerEpochRate::Dead => unreachable!(),
+                }
+            }
+        }
+        rates.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let med = rates[rates.len() / 2];
+        let max = *rates.last().unwrap();
+        // Median near body median 1.0, max way out in the tail.
+        assert!((0.6..1.6).contains(&med), "median {med}");
+        assert!(max > 10.0 * med, "tail too light: max {max} med {med}");
+    }
+
+    #[test]
+    fn persistent_dead_worker_reports_nothing() {
+        let env = StragglerEnv::ideal(0.1).with_persistent(PersistentSpec {
+            workers: vec![2],
+            from_epoch: 3,
+            factor: f64::INFINITY,
+        });
+        let m = DelayModel::new(env, 5);
+        assert_eq!(m.rate(2, 2), WorkerEpochRate::StepSecs(0.1));
+        assert_eq!(m.rate(2, 3), WorkerEpochRate::Dead);
+        assert_eq!(m.rate(1, 3), WorkerEpochRate::StepSecs(0.1));
+        let (q, _) = m.steps_within(2, 5, 100.0, usize::MAX);
+        assert_eq!(q, 0);
+    }
+
+    #[test]
+    fn persistent_slow_factor_applies() {
+        let env = StragglerEnv::ideal(0.1).with_persistent(PersistentSpec {
+            workers: vec![0],
+            from_epoch: 0,
+            factor: 10.0,
+        });
+        let m = DelayModel::new(env, 5);
+        assert_eq!(m.rate(0, 0), WorkerEpochRate::StepSecs(1.0));
+    }
+
+    #[test]
+    fn per_worker_rates_match_fig2a_style() {
+        // Fig 2(a): worker 1 does 10000 iters while worker 10 does 500 —
+        // i.e. rates proportional to 1/q.
+        let secs: Vec<f64> = [10_000.0, 8_500.0, 7_000.0, 5_500.0, 4_000.0, 3_000.0, 2_000.0,
+            1_200.0, 800.0, 500.0]
+            .iter()
+            .map(|q| 100.0 / q)
+            .collect();
+        let m = DelayModel::new(
+            StragglerEnv { delay: DelaySpec::PerWorker { secs }, persistent: vec![] },
+            1,
+        );
+        let (q0, _) = m.steps_within(0, 0, 100.0, usize::MAX);
+        let (q9, _) = m.steps_within(9, 0, 100.0, usize::MAX);
+        assert_eq!(q0, 10_000);
+        assert_eq!(q9, 500);
+    }
+
+    #[test]
+    fn trace_replay_draws_from_trace() {
+        let m = DelayModel::new(
+            StragglerEnv {
+                delay: DelaySpec::TraceReplay { factors: vec![1.0, 2.0, 4.0] },
+                persistent: vec![],
+            },
+            9,
+        );
+        for v in 0..10 {
+            match m.rate(v, 0) {
+                WorkerEpochRate::StepSecs(s) => assert!([1.0, 2.0, 4.0].contains(&s)),
+                WorkerEpochRate::Dead => unreachable!(),
+            }
+        }
+    }
+
+    #[test]
+    fn load_factors_csv_parses_and_validates() {
+        let dir = std::env::temp_dir();
+        let p = dir.join(format!("anytime-trace-{}.csv", std::process::id()));
+        std::fs::write(&p, "factor\n# comment\n1.0\n2.5,ignored\n\n0.75\n").unwrap();
+        let f = load_factors_csv(&p).unwrap();
+        assert_eq!(f, vec![1.0, 2.5, 0.75]);
+        std::fs::write(&p, "factor\n-1.0\n").unwrap();
+        assert!(load_factors_csv(&p).is_err());
+        std::fs::write(&p, "").unwrap();
+        assert!(load_factors_csv(&p).is_err());
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn comm_models() {
+        let zero = CommModel::new(CommSpec::Zero, 1);
+        assert_eq!(zero.delay(0, 0, 0), 0.0);
+        let fixed = CommModel::new(CommSpec::Fixed { secs: 2.5 }, 1);
+        assert_eq!(fixed.delay(3, 9, 1), 2.5);
+        let range = CommModel::new(CommSpec::UniformRange { lo: 1.0, hi: 3.0 }, 1);
+        let d = range.delay(0, 0, 0);
+        assert!((1.0..=3.0).contains(&d));
+        // Deterministic per (v, e, dir).
+        assert_eq!(d, CommModel::new(CommSpec::UniformRange { lo: 1.0, hi: 3.0 }, 1).delay(0, 0, 0));
+        assert_ne!(d, range.delay(0, 0, 1));
+    }
+}

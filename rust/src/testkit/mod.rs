@@ -1,0 +1,266 @@
+//! Mini property-based testing harness (no `proptest` offline).
+//!
+//! Provides seeded random-case generation with shrinking: a [`Gen<T>`]
+//! produces values from an [`Xoshiro256pp`]; [`check`] runs `N` cases and
+//! on failure greedily shrinks via the generator's `shrink` candidates,
+//! reporting the minimal failing input and the seed to replay it.
+//!
+//! Coordinator invariants (routing, batching, combining, partition) are
+//! tested with this in `rust/tests/prop_*.rs`.
+
+use crate::rng::Xoshiro256pp;
+
+/// A generator of random values with optional shrinking.
+pub trait Gen<T> {
+    /// Produce one value.
+    fn gen(&self, rng: &mut Xoshiro256pp) -> T;
+
+    /// Candidate smaller values (for shrinking). Default: none.
+    fn shrink(&self, _value: &T) -> Vec<T> {
+        Vec::new()
+    }
+}
+
+/// Configuration for a property run.
+#[derive(Clone, Copy, Debug)]
+pub struct Config {
+    pub cases: usize,
+    pub seed: u64,
+    pub max_shrink_steps: usize,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        // Seed can be pinned via TESTKIT_SEED for replay.
+        let seed = std::env::var("TESTKIT_SEED")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(0xA57E_C0DE);
+        Self { cases: 128, seed, max_shrink_steps: 500 }
+    }
+}
+
+/// Outcome of a single property evaluation.
+pub type PropResult = Result<(), String>;
+
+/// Run `prop` over `cfg.cases` generated values; panic with the minimal
+/// shrunk counterexample on failure.
+pub fn check<T: Clone + std::fmt::Debug>(
+    cfg: Config,
+    g: &dyn Gen<T>,
+    prop: impl Fn(&T) -> PropResult,
+) {
+    let mut rng = Xoshiro256pp::seed_from_u64(cfg.seed);
+    for case in 0..cfg.cases {
+        let value = g.gen(&mut rng);
+        if let Err(msg) = prop(&value) {
+            let (min_value, min_msg, steps) = shrink_loop(cfg, g, &prop, value, msg);
+            panic!(
+                "property failed (case {case}/{}, seed {}, {} shrink steps)\n  minimal input: {:?}\n  failure: {}",
+                cfg.cases, cfg.seed, steps, min_value, min_msg
+            );
+        }
+    }
+}
+
+fn shrink_loop<T: Clone + std::fmt::Debug>(
+    cfg: Config,
+    g: &dyn Gen<T>,
+    prop: &impl Fn(&T) -> PropResult,
+    mut value: T,
+    mut msg: String,
+) -> (T, String, usize) {
+    let mut steps = 0;
+    'outer: while steps < cfg.max_shrink_steps {
+        for cand in g.shrink(&value) {
+            steps += 1;
+            if let Err(m) = prop(&cand) {
+                value = cand;
+                msg = m;
+                continue 'outer;
+            }
+            if steps >= cfg.max_shrink_steps {
+                break;
+            }
+        }
+        break;
+    }
+    (value, msg, steps)
+}
+
+/// Assert inside a property, returning `Err` with context on failure.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)*) => {
+        if !($cond) {
+            return Err(format!($($fmt)*));
+        }
+    };
+}
+
+// ---------------------------------------------------------------------
+// Standard generators
+// ---------------------------------------------------------------------
+
+/// Uniform usize in [lo, hi]; shrinks toward lo.
+pub struct UsizeRange {
+    pub lo: usize,
+    pub hi: usize,
+}
+
+impl Gen<usize> for UsizeRange {
+    fn gen(&self, rng: &mut Xoshiro256pp) -> usize {
+        self.lo + rng.index(self.hi - self.lo + 1)
+    }
+    fn shrink(&self, value: &usize) -> Vec<usize> {
+        let mut out = Vec::new();
+        if *value > self.lo {
+            // Binary-search-style candidates: jump to lo, then approach
+            // `value` by halving deltas — converges in O(log²) steps.
+            out.push(self.lo);
+            let mut delta = (*value - self.lo) / 2;
+            while delta > 0 {
+                out.push(*value - delta);
+                delta /= 2;
+            }
+        }
+        out.dedup();
+        out
+    }
+}
+
+/// Uniform f64 in [lo, hi]; shrinks toward 0-in-range midpoint.
+pub struct F64Range {
+    pub lo: f64,
+    pub hi: f64,
+}
+
+impl Gen<f64> for F64Range {
+    fn gen(&self, rng: &mut Xoshiro256pp) -> f64 {
+        self.lo + (self.hi - self.lo) * rng.next_f64()
+    }
+    fn shrink(&self, value: &f64) -> Vec<f64> {
+        let anchor = self.lo.max(0.0).min(self.hi);
+        if (value - anchor).abs() < 1e-12 {
+            Vec::new()
+        } else {
+            vec![anchor, anchor + (value - anchor) / 2.0]
+        }
+    }
+}
+
+/// Vector of values from an element generator; shrinks by halving length
+/// then shrinking elements.
+pub struct VecGen<G> {
+    pub elem: G,
+    pub min_len: usize,
+    pub max_len: usize,
+}
+
+impl<T: Clone, G: Gen<T>> Gen<Vec<T>> for VecGen<G> {
+    fn gen(&self, rng: &mut Xoshiro256pp) -> Vec<T> {
+        let len = self.min_len + rng.index(self.max_len - self.min_len + 1);
+        (0..len).map(|_| self.elem.gen(rng)).collect()
+    }
+    fn shrink(&self, value: &Vec<T>) -> Vec<Vec<T>> {
+        let mut out = Vec::new();
+        if value.len() > self.min_len {
+            // Drop back half, drop front half, drop one.
+            let keep = (value.len() / 2).max(self.min_len);
+            out.push(value[..keep].to_vec());
+            out.push(value[value.len() - keep..].to_vec());
+            out.push(value[..value.len() - 1].to_vec());
+        }
+        // Shrink a single element (first shrinkable).
+        for (i, v) in value.iter().enumerate() {
+            let cands = self.elem.shrink(v);
+            if let Some(c) = cands.into_iter().next() {
+                let mut w = value.clone();
+                w[i] = c;
+                out.push(w);
+                break;
+            }
+        }
+        out
+    }
+}
+
+/// Pair generator.
+pub struct PairGen<GA, GB> {
+    pub a: GA,
+    pub b: GB,
+}
+
+impl<A: Clone, B: Clone, GA: Gen<A>, GB: Gen<B>> Gen<(A, B)> for PairGen<GA, GB> {
+    fn gen(&self, rng: &mut Xoshiro256pp) -> (A, B) {
+        (self.a.gen(rng), self.b.gen(rng))
+    }
+    fn shrink(&self, value: &(A, B)) -> Vec<(A, B)> {
+        let mut out: Vec<(A, B)> = self
+            .a
+            .shrink(&value.0)
+            .into_iter()
+            .map(|a| (a, value.1.clone()))
+            .collect();
+        out.extend(self.b.shrink(&value.1).into_iter().map(|b| (value.0.clone(), b)));
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check(Config { cases: 64, ..Default::default() }, &UsizeRange { lo: 0, hi: 100 }, |&x| {
+            prop_assert!(x <= 100, "x out of range: {x}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn failing_property_shrinks_to_minimum() {
+        let result = std::panic::catch_unwind(|| {
+            check(
+                Config { cases: 200, seed: 7, max_shrink_steps: 200 },
+                &UsizeRange { lo: 0, hi: 1000 },
+                |&x| {
+                    prop_assert!(x < 500, "too big: {x}");
+                    Ok(())
+                },
+            );
+        });
+        let msg = match result {
+            Err(e) => *e.downcast::<String>().unwrap(),
+            Ok(()) => panic!("property should have failed"),
+        };
+        // The minimal counterexample of x >= 500 is exactly 500.
+        assert!(msg.contains("minimal input: 500"), "msg: {msg}");
+    }
+
+    #[test]
+    fn vec_gen_respects_bounds() {
+        let g = VecGen { elem: UsizeRange { lo: 1, hi: 5 }, min_len: 2, max_len: 9 };
+        check(Config { cases: 100, ..Default::default() }, &g, |v| {
+            prop_assert!(v.len() >= 2 && v.len() <= 9, "len {}", v.len());
+            prop_assert!(v.iter().all(|&x| (1..=5).contains(&x)), "elem out of range");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn pair_gen_shrinks_both_sides() {
+        let g = PairGen { a: UsizeRange { lo: 0, hi: 10 }, b: UsizeRange { lo: 0, hi: 10 } };
+        let shrunk = g.shrink(&(10, 10));
+        assert!(shrunk.iter().any(|&(a, _)| a < 10));
+        assert!(shrunk.iter().any(|&(_, b)| b < 10));
+    }
+
+    #[test]
+    fn f64_range_shrinks_toward_anchor() {
+        let g = F64Range { lo: -5.0, hi: 5.0 };
+        let s = g.shrink(&4.0);
+        assert!(s.contains(&0.0));
+    }
+}

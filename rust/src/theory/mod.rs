@@ -1,0 +1,242 @@
+//! The paper's convergence analysis (§III) as executable bounds.
+//!
+//! Given problem constants (L, σ, D, G) and a realized step profile
+//! `q_1..q_N`, this module computes:
+//!
+//! * [`expected_distance_bound`] — Theorem 1's bound on E[F(x) − F(x*)],
+//! * [`variance_bound`] — Theorem 2's bound on V[F(x) − F(x*)],
+//! * [`optimal_lambda`] — Theorem 3's variance-minimizing weights
+//!   λ_v = q_v / Σ q (also exposed as the general constrained-QP solver
+//!   so tests can verify Theorem 3 against brute force),
+//! * [`corollary4_bound`] — the 1/Q variance decay of Corollary 4,
+//! * [`high_prob_bound`] — Theorem 5 / Corollary 6's deviation bound,
+//! * [`generalized_lambda`] — eq. (13) for the §V worker-side blend.
+//!
+//! The `figures theory` harness checks these against empirical runs.
+
+/// Problem constants of the analysis (§III-A).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Constants {
+    /// Gradient Lipschitz constant L (eq. 3).
+    pub big_l: f64,
+    /// Gradient-noise bound σ: E‖∇f − ∇F‖² ≤ σ².
+    pub sigma: f64,
+    /// Domain radius D: D² = max d(x, u).
+    pub big_d: f64,
+    /// Gradient bound G: ‖∇f‖ ≤ G.
+    pub big_g: f64,
+    /// Initial suboptimality F(x₀) − F(x*).
+    pub f0_gap: f64,
+}
+
+impl Constants {
+    /// Estimate constants for a least-squares problem with i.i.d. N(0,1)
+    /// design of m rows, d cols — used to instantiate the paper schedule
+    /// (`theory::constants` in DESIGN.md §6).
+    pub fn for_synthetic_linreg(m: usize, d: usize) -> Self {
+        let (m, d) = (m as f64, d as f64);
+        // Per-sample f_k = (a·x − y)²: ∇f = 2a(a·x − y). Over the unit-ish
+        // domain ‖x − x*‖ ≤ √d: |a·(x−x*)| ~ √d ⇒ L ≈ 2E‖a‖² ≈ 2d.
+        let big_l = 2.0 * d;
+        let big_d = d.sqrt();
+        let sigma = 2.0 * d; // gradient noise scale ~ L
+        let big_g = 2.0 * d * big_d / m.sqrt().max(1.0) + 2.0 * d;
+        Self { big_l, sigma, big_d, big_g, f0_gap: d * m / m }
+    }
+
+    /// σ/D — the schedule coefficient the artifacts consume.
+    pub fn sigma_over_d(&self) -> f64 {
+        self.sigma / self.big_d
+    }
+}
+
+/// Theorem 1: E[F(x) − F(x*)] ≤ Σ_v (λ_v/q_v)(F₀ + LD² + 2σD√q_v).
+pub fn expected_distance_bound(c: &Constants, lambda: &[f64], q: &[usize]) -> f64 {
+    assert_eq!(lambda.len(), q.len());
+    lambda
+        .iter()
+        .zip(q.iter())
+        .filter(|(_, &qv)| qv > 0)
+        .map(|(&lv, &qv)| {
+            let qv = qv as f64;
+            lv / qv * (c.f0_gap + c.big_l * c.big_d * c.big_d + 2.0 * c.sigma * c.big_d * qv.sqrt())
+        })
+        .sum()
+}
+
+/// Theorem 2: V[F(x) − F(x*)] ≤ 2σ²D²(G²/σ² + 2) Σ λ_v²/q_v.
+pub fn variance_bound(c: &Constants, lambda: &[f64], q: &[usize]) -> f64 {
+    let pref = 2.0 * c.sigma * c.sigma * c.big_d * c.big_d
+        * (c.big_g * c.big_g / (c.sigma * c.sigma) + 2.0);
+    pref
+        * lambda
+            .iter()
+            .zip(q.iter())
+            .filter(|(_, &qv)| qv > 0)
+            .map(|(&lv, &qv)| lv * lv / qv as f64)
+            .sum::<f64>()
+}
+
+/// Theorem 3: λ_v = q_v / Σ q — the variance-bound minimizer subject to
+/// Σλ = 1, λ ≥ 0. Workers with q_v = 0 (outside χ) get λ_v = 0
+/// (Algorithm 1, step 13).
+pub fn optimal_lambda(q: &[usize]) -> Vec<f64> {
+    let total: usize = q.iter().sum();
+    if total == 0 {
+        return vec![0.0; q.len()];
+    }
+    q.iter().map(|&qv| qv as f64 / total as f64).collect()
+}
+
+/// General minimizer of Σ λ_v²·r_v s.t. Σλ=1, λ≥0 (r_v > 0): the
+/// closed form is λ_v ∝ 1/r_v. Exposed so tests can confirm Theorem 3
+/// is this QP's solution with r_v = 1/q_v (up to the paper's constant).
+pub fn qp_min_weighted_sq(r: &[f64]) -> Vec<f64> {
+    let inv: Vec<f64> = r.iter().map(|&rv| if rv > 0.0 { 1.0 / rv } else { 0.0 }).collect();
+    let s: f64 = inv.iter().sum();
+    if s == 0.0 {
+        return vec![0.0; r.len()];
+    }
+    inv.iter().map(|&i| i / s).collect()
+}
+
+/// Corollary 4: with Theorem-3 weights the variance bound collapses to
+/// 2σ²D²(G²/σ²+2)/Q, Q = Σ q_v.
+pub fn corollary4_bound(c: &Constants, q: &[usize]) -> f64 {
+    let total: usize = q.iter().sum();
+    if total == 0 {
+        return f64::INFINITY;
+    }
+    2.0 * c.sigma * c.sigma * c.big_d * c.big_d
+        * (c.big_g * c.big_g / (c.sigma * c.sigma) + 2.0)
+        / total as f64
+}
+
+/// Theorem 5: with probability ≥ 1−δ,
+/// F(x)−F(x*)−E[·] ≤ γ·2GD(G/σ+2)·log(1/δ)·√(1 + 18·V/log(1/δ))
+/// with γ = max_v λ_v/q_v and V the Theorem-2 bound (the paper's (11)
+/// written through (59)'s variance form).
+pub fn high_prob_bound(c: &Constants, lambda: &[f64], q: &[usize], delta: f64) -> f64 {
+    assert!((0.0..1.0).contains(&delta) && delta > 0.0);
+    let gamma = lambda
+        .iter()
+        .zip(q.iter())
+        .filter(|(_, &qv)| qv > 0)
+        .map(|(&lv, &qv)| lv / qv as f64)
+        .fold(0.0f64, f64::max);
+    let v = variance_bound(c, lambda, q);
+    let logd = (1.0 / delta).ln();
+    gamma * 2.0 * c.big_g * c.big_d * (c.big_g / c.sigma + 2.0) * logd
+        * (1.0 + 18.0 * v / logd).sqrt()
+}
+
+/// §V eq. (13): worker-side blending factor
+/// λ_vt = Σq / (q̄_v + Σq), where q̄_v is the steps the worker completed
+/// during the communication window.
+pub fn generalized_lambda(sum_q: usize, qbar_v: usize) -> f64 {
+    if sum_q == 0 && qbar_v == 0 {
+        return 1.0;
+    }
+    sum_q as f64 / (qbar_v + sum_q) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn consts() -> Constants {
+        Constants { big_l: 2.0, sigma: 1.0, big_d: 3.0, big_g: 4.0, f0_gap: 5.0 }
+    }
+
+    #[test]
+    fn optimal_lambda_is_proportional_and_normalized() {
+        let lam = optimal_lambda(&[100, 50, 0, 50]);
+        assert_eq!(lam, vec![0.5, 0.25, 0.0, 0.25]);
+        assert!((lam.iter().sum::<f64>() - 1.0).abs() < 1e-12);
+        assert_eq!(optimal_lambda(&[0, 0]), vec![0.0, 0.0]);
+    }
+
+    #[test]
+    fn theorem3_minimizes_variance_bound() {
+        // Brute-force check on the 2-worker simplex.
+        let c = consts();
+        let q = [120usize, 30];
+        let best = optimal_lambda(&q);
+        let vb_best = variance_bound(&c, &best, &q);
+        for i in 0..=100 {
+            let l0 = i as f64 / 100.0;
+            let vb = variance_bound(&c, &[l0, 1.0 - l0], &q);
+            assert!(vb + 1e-12 >= vb_best, "λ=({l0},{}) beats Theorem 3", 1.0 - l0);
+        }
+    }
+
+    #[test]
+    fn qp_solver_agrees_with_theorem3() {
+        let q = [120usize, 30, 60];
+        // r_v ∝ 1/q_v ⇒ QP solution ∝ q_v.
+        let r: Vec<f64> = q.iter().map(|&qv| 1.0 / qv as f64).collect();
+        let qp = qp_min_weighted_sq(&r);
+        let th3 = optimal_lambda(&q);
+        for (a, b) in qp.iter().zip(th3.iter()) {
+            assert!((a - b).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn corollary4_matches_theorem2_at_optimum() {
+        let c = consts();
+        let q = [40usize, 10, 30];
+        let lam = optimal_lambda(&q);
+        let v = variance_bound(&c, &lam, &q);
+        let c4 = corollary4_bound(&c, &q);
+        assert!((v - c4).abs() < 1e-9 * c4, "{v} vs {c4}");
+    }
+
+    #[test]
+    fn variance_decays_with_total_work() {
+        let c = consts();
+        let small = corollary4_bound(&c, &[10, 10]);
+        let big = corollary4_bound(&c, &[100, 100]);
+        assert!((small / big - 10.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn expected_bound_favors_more_steps() {
+        // More steps per worker with the same weights lowers the
+        // per-worker 1/q_v·(F0 + LD²) term share but grows √q — the
+        // bound's shape; check monotone pieces make sense.
+        let c = consts();
+        let b1 = expected_distance_bound(&c, &[1.0], &[10]);
+        let b2 = expected_distance_bound(&c, &[1.0], &[1000]);
+        // Dominant term 2σD√q/q = 2σD/√q shrinks with q.
+        assert!(b2 < b1);
+    }
+
+    #[test]
+    fn high_prob_bound_tightens_with_delta_and_q() {
+        let c = consts();
+        let q = [50usize, 50];
+        let lam = optimal_lambda(&q);
+        let loose = high_prob_bound(&c, &lam, &q, 0.5);
+        let tight = high_prob_bound(&c, &lam, &q, 0.01);
+        assert!(tight > loose, "smaller δ ⇒ larger bound");
+        let q_big = [500usize, 500];
+        let lam_big = optimal_lambda(&q_big);
+        assert!(high_prob_bound(&c, &lam_big, &q_big, 0.1) < high_prob_bound(&c, &lam, &q, 0.1));
+    }
+
+    #[test]
+    fn generalized_lambda_matches_eq13() {
+        assert_eq!(generalized_lambda(100, 0), 1.0);
+        assert_eq!(generalized_lambda(100, 100), 0.5);
+        assert_eq!(generalized_lambda(0, 0), 1.0);
+        assert!((generalized_lambda(300, 100) - 0.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn synthetic_constants_sane() {
+        let c = Constants::for_synthetic_linreg(50_000, 200);
+        assert!(c.big_l > 0.0 && c.sigma > 0.0 && c.big_d > 0.0 && c.big_g > 0.0);
+        assert!((c.sigma_over_d() - c.sigma / c.big_d).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,446 @@
+//! Integration tests over the full coordinator: method equivalences,
+//! straggler/failure injection, and the paper's qualitative claims on
+//! small problems (native backend; fast).
+
+use anytime_sgd::config::{
+    Backend, CombinePolicy, DataSpec, Iterate, MethodSpec, RunConfig, Schedule,
+};
+use anytime_sgd::coordinator::{build_dataset, Trainer};
+use anytime_sgd::straggler::{CommSpec, DelaySpec, PersistentSpec, StragglerEnv};
+use std::sync::Arc;
+
+fn base_cfg() -> RunConfig {
+    let mut c = RunConfig::base();
+    c.data = DataSpec::Synthetic { m: 4_000, d: 24, noise: 1e-3 };
+    c.workers = 5;
+    c.batch = 8;
+    c.epochs = 6;
+    c.schedule = Schedule::Constant { lr: 4e-3 };
+    c.env = StragglerEnv::ideal(0.1);
+    c.comm = CommSpec::Fixed { secs: 1.0 };
+    c.backend = Backend::Native;
+    c.seed = 7;
+    c
+}
+
+fn anytime(t: f64) -> MethodSpec {
+    MethodSpec::Anytime { t, combine: CombinePolicy::Proportional, iterate: Iterate::Last }
+}
+
+#[test]
+fn all_methods_decrease_error() {
+    for (name, method, redundancy) in [
+        ("anytime", anytime(20.0), 0usize),
+        ("generalized", MethodSpec::Generalized { t: 20.0 }, 0),
+        ("sync", MethodSpec::SyncSgd { steps_per_epoch: 80 }, 0),
+        ("fnb", MethodSpec::Fnb { steps_per_epoch: 80, b: 1 }, 0),
+        ("gradient-coding", MethodSpec::GradientCoding { lr: 0.4 }, 2),
+    ] {
+        let mut cfg = base_cfg();
+        cfg.name = name.into();
+        cfg.method = method;
+        cfg.redundancy = redundancy;
+        let res = Trainer::new(cfg).unwrap().run();
+        assert!(
+            res.trace.final_err() < 0.5 * res.initial_err,
+            "{name}: {} -> {}",
+            res.initial_err,
+            res.trace.final_err()
+        );
+    }
+}
+
+#[test]
+fn fnb_b0_equals_sync() {
+    // Waiting for the fastest N-0 == waiting for all == Sync-SGD.
+    let mut c1 = base_cfg();
+    c1.method = MethodSpec::SyncSgd { steps_per_epoch: 50 };
+    let mut c2 = base_cfg();
+    c2.method = MethodSpec::Fnb { steps_per_epoch: 50, b: 0 };
+    let ds = Arc::new(build_dataset(&c1));
+    let r1 = Trainer::with_dataset(c1, ds.clone()).unwrap().run();
+    let r2 = Trainer::with_dataset(c2, ds).unwrap().run();
+    assert_eq!(r1.x, r2.x, "FNB(B=0) must reproduce Sync exactly");
+    for (a, b) in r1.trace.points.iter().zip(r2.trace.points.iter()) {
+        assert_eq!(a.norm_err, b.norm_err);
+    }
+}
+
+#[test]
+fn generalized_with_zero_comm_matches_anytime() {
+    // No communication window -> q̄_v = 0 -> λ_vt = 1 -> workers restart
+    // from the combined vector: exactly the original scheme.
+    let mut c1 = base_cfg();
+    c1.comm = CommSpec::Zero;
+    c1.method = anytime(20.0);
+    let mut c2 = c1.clone();
+    c2.method = MethodSpec::Generalized { t: 20.0 };
+    let ds = Arc::new(build_dataset(&c1));
+    let r1 = Trainer::with_dataset(c1, ds.clone()).unwrap().run();
+    let r2 = Trainer::with_dataset(c2, ds).unwrap().run();
+    assert_eq!(r1.x, r2.x);
+}
+
+#[test]
+fn uniform_equals_proportional_when_rates_equal() {
+    // Ideal env -> all q_v equal -> Theorem-3 weights are uniform.
+    let mut c1 = base_cfg();
+    c1.method = anytime(20.0);
+    let mut c2 = base_cfg();
+    c2.method =
+        MethodSpec::Anytime { t: 20.0, combine: CombinePolicy::Uniform, iterate: Iterate::Last };
+    let ds = Arc::new(build_dataset(&c1));
+    let r1 = Trainer::with_dataset(c1, ds.clone()).unwrap().run();
+    let r2 = Trainer::with_dataset(c2, ds).unwrap().run();
+    for (s1, s2) in r1.epochs.iter().zip(r2.epochs.iter()) {
+        assert_eq!(s1.q, s2.q);
+        for (a, b) in s1.lambda.iter().zip(s2.lambda.iter()) {
+            assert!((a - b).abs() < 1e-12);
+        }
+    }
+    assert_eq!(r1.x, r2.x);
+}
+
+#[test]
+fn anytime_q_profile_follows_rates() {
+    let mut cfg = base_cfg();
+    cfg.workers = 4;
+    cfg.env = StragglerEnv {
+        delay: DelaySpec::PerWorker { secs: vec![0.05, 0.1, 0.2, 0.4] },
+        persistent: vec![],
+    };
+    cfg.max_passes = 10.0; // don't let the cap flatten the skew
+    cfg.method = anytime(20.0);
+    let res = Trainer::new(cfg).unwrap().run();
+    let q = &res.epochs[0].q;
+    assert_eq!(q, &vec![400, 200, 100, 50], "q must be T/rate");
+    // λ proportional to q.
+    let lam = &res.epochs[0].lambda;
+    assert!((lam[0] - 400.0 / 750.0).abs() < 1e-9);
+}
+
+#[test]
+fn dead_worker_excluded_but_run_progresses() {
+    let mut cfg = base_cfg();
+    cfg.t_c = 100.0;
+    cfg.env = StragglerEnv::ideal(0.1).with_persistent(PersistentSpec {
+        workers: vec![2],
+        from_epoch: 1,
+        factor: f64::INFINITY,
+    });
+    cfg.method = anytime(20.0);
+    let res = Trainer::new(cfg).unwrap().run();
+    assert!(res.epochs[0].received[2], "alive in epoch 0");
+    for e in &res.epochs[1..] {
+        assert!(!e.received[2], "dead worker must not be in chi");
+        assert_eq!(e.q[2], 0);
+        assert_eq!(e.lambda[2], 0.0);
+    }
+    assert!(res.trace.final_err() < 0.5 * res.initial_err, "run must still converge");
+    // Dead worker costs the T_c guard: epochs after the death charge more.
+    let t0 = res.epochs[0].compute_secs + res.epochs[0].comm_secs;
+    let t1 = res.epochs[1].compute_secs + res.epochs[1].comm_secs;
+    assert!(t1 > t0, "missing report must run out the waiting-time guard");
+}
+
+#[test]
+fn tc_too_small_drops_everyone_and_x_stays() {
+    let mut cfg = base_cfg();
+    cfg.t_c = 0.5; // below T: nobody can report in time
+    cfg.method = anytime(20.0);
+    let res = Trainer::new(cfg).unwrap().run();
+    for e in &res.epochs {
+        assert!(e.received.iter().all(|&r| !r));
+    }
+    assert_eq!(res.x, vec![0.0; 24], "no updates should have been applied");
+    assert!((res.trace.final_err() - res.initial_err).abs() < 1e-12);
+}
+
+#[test]
+fn gradient_coding_matches_plain_gd() {
+    // With no losses, decoded GC must equal exact full-gradient descent.
+    let mut cfg = base_cfg();
+    cfg.redundancy = 2;
+    cfg.method = MethodSpec::GradientCoding { lr: 0.3 };
+    cfg.epochs = 4;
+    let ds = Arc::new(build_dataset(&cfg));
+    let res = Trainer::with_dataset(cfg, ds.clone()).unwrap().run();
+
+    // Manual GD: x <- x - lr/m * 2 AᵀA(x) residual.
+    let (m, d) = (ds.rows(), ds.dim());
+    let mut x = vec![0.0f32; d];
+    let mut resid = vec![0.0f32; m];
+    let mut grad = vec![0.0f32; d];
+    for _ in 0..4 {
+        anytime_sgd::linalg::gemv(&ds.a, &x, &mut resid);
+        for i in 0..m {
+            resid[i] = 2.0 * (resid[i] - ds.y[i]);
+        }
+        anytime_sgd::linalg::gemv_t(&ds.a, &resid, &mut grad);
+        anytime_sgd::linalg::axpy(-0.3 / m as f32, &grad, &mut x);
+    }
+    let rel = anytime_sgd::linalg::dist2(&res.x, &x) / anytime_sgd::linalg::norm2(&x).max(1e-12);
+    assert!(rel < 1e-3, "GC diverged from plain GD: rel {rel}");
+}
+
+#[test]
+fn fnb_discards_exactly_b_slowest() {
+    let mut cfg = base_cfg();
+    cfg.workers = 5;
+    cfg.env = StragglerEnv {
+        delay: DelaySpec::PerWorker { secs: vec![0.1, 0.5, 0.2, 0.9, 0.3] },
+        persistent: vec![],
+    };
+    cfg.method = MethodSpec::Fnb { steps_per_epoch: 10, b: 2 };
+    let res = Trainer::new(cfg).unwrap().run();
+    for e in &res.epochs {
+        let received: Vec<usize> =
+            (0..5).filter(|&v| e.received[v]).collect();
+        assert_eq!(received, vec![0, 2, 4], "the two slowest (1, 3) must be dropped");
+    }
+}
+
+#[test]
+fn persistent_straggler_biases_fnb_but_not_anytime_s1() {
+    // §II-E: with a dead worker, FNB at S=0 permanently loses a data
+    // block and plateaus; anytime with S=1 keeps converging.
+    let mut base = base_cfg();
+    base.epochs = 18;
+    base.t_c = 60.0;
+    base.env = StragglerEnv::ideal(0.1).with_persistent(PersistentSpec {
+        workers: vec![0],
+        from_epoch: 0,
+        factor: f64::INFINITY,
+    });
+    // Non-i.i.d. shards (worker 0 owns exclusive feature directions):
+    // the regime where data loss actually biases the solution.
+    let ds = Arc::new(anytime_sgd::data::heterogeneous_linreg(4_000, 24, 5, 1e-3, 99));
+
+    let mut c_any = base.clone();
+    c_any.redundancy = 1;
+    c_any.method = anytime(20.0);
+    let r_any = Trainer::with_dataset(c_any, ds.clone()).unwrap().run();
+
+    let mut c_fnb = base.clone();
+    c_fnb.method = MethodSpec::Fnb { steps_per_epoch: 80, b: 1 };
+    let r_fnb = Trainer::with_dataset(c_fnb, ds).unwrap().run();
+
+    assert!(
+        r_any.trace.final_err() < 0.5 * r_fnb.trace.final_err(),
+        "S=1 anytime {} should beat S=0 FNB {} under data loss",
+        r_any.trace.final_err(),
+        r_fnb.trace.final_err()
+    );
+}
+
+#[test]
+fn average_iterate_also_converges() {
+    let mut cfg = base_cfg();
+    cfg.method = MethodSpec::Anytime {
+        t: 20.0,
+        combine: CombinePolicy::Proportional,
+        iterate: Iterate::Average,
+    };
+    let res = Trainer::new(cfg).unwrap().run();
+    assert!(res.trace.final_err() < 0.6 * res.initial_err);
+}
+
+#[test]
+fn epoch_times_follow_method_laws() {
+    // anytime: every epoch charges exactly T + comm (deterministic).
+    let mut cfg = base_cfg();
+    cfg.method = anytime(20.0);
+    let res = Trainer::new(cfg).unwrap().run();
+    for e in &res.epochs {
+        assert!((e.compute_secs - 20.0).abs() < 1e-9);
+        assert!((e.comm_secs - 2.0).abs() < 1e-9); // 1s up + 1s down
+    }
+    // sync under skewed rates: epoch = slowest worker.
+    let mut cfg = base_cfg();
+    cfg.env = StragglerEnv {
+        delay: DelaySpec::PerWorker { secs: vec![0.1, 0.1, 0.1, 0.1, 0.9] },
+        persistent: vec![],
+    };
+    cfg.method = MethodSpec::SyncSgd { steps_per_epoch: 10 };
+    let res = Trainer::new(cfg).unwrap().run();
+    for e in &res.epochs {
+        assert!((e.compute_secs - (10.0 * 0.9 + 1.0)).abs() < 1e-9, "{}", e.compute_secs);
+    }
+}
+
+#[test]
+fn msd_dataset_runs_through_all_methods() {
+    let mut cfg = base_cfg();
+    cfg.data = DataSpec::MsdLike { m: 3_000 };
+    cfg.schedule = Schedule::Constant { lr: 2e-4 };
+    cfg.redundancy = 1;
+    for method in [anytime(20.0), MethodSpec::SyncSgd { steps_per_epoch: 40 }] {
+        let mut c = cfg.clone();
+        c.method = method;
+        let res = Trainer::new(c).unwrap().run();
+        assert!(res.trace.final_err() < res.initial_err);
+    }
+}
+
+#[test]
+fn paper_schedule_converges() {
+    let mut cfg = base_cfg();
+    // L and σ/D estimated loosely for the tiny problem; the schedule
+    // must still make progress.
+    cfg.schedule = Schedule::Paper { big_l: 48.0, sigma_over_d: 2.0 };
+    cfg.method = anytime(40.0);
+    cfg.epochs = 10;
+    let res = Trainer::new(cfg).unwrap().run();
+    assert!(res.trace.final_err() < 0.7 * res.initial_err,
+        "{} -> {}", res.initial_err, res.trace.final_err());
+}
+
+#[test]
+fn async_sgd_progresses_and_tracks_staleness_free_baseline() {
+    let mut cfg = base_cfg();
+    cfg.method = MethodSpec::AsyncSgd { steps_per_update: 8, horizon: 30.0 };
+    cfg.epochs = 6;
+    let res = Trainer::new(cfg).unwrap().run();
+    assert!(
+        res.trace.final_err() < 0.5 * res.initial_err,
+        "async did not converge: {} -> {}",
+        res.initial_err,
+        res.trace.final_err()
+    );
+    // Every live worker participated (ideal env: all equal rates).
+    for e in &res.epochs {
+        assert!(e.received.iter().all(|&r| r), "{:?}", e.received);
+        assert!(e.q.iter().all(|&q| q > 0));
+        assert_eq!(e.compute_secs, 30.0, "epoch charges the horizon");
+    }
+}
+
+#[test]
+fn async_dead_worker_never_contributes() {
+    let mut cfg = base_cfg();
+    cfg.env = StragglerEnv::ideal(0.1).with_persistent(PersistentSpec {
+        workers: vec![1],
+        from_epoch: 0,
+        factor: f64::INFINITY,
+    });
+    cfg.method = MethodSpec::AsyncSgd { steps_per_update: 8, horizon: 30.0 };
+    let res = Trainer::new(cfg).unwrap().run();
+    for e in &res.epochs {
+        assert_eq!(e.q[1], 0);
+        assert!(!e.received[1]);
+    }
+    assert!(res.trace.final_err() < res.initial_err);
+}
+
+#[test]
+fn logistic_regression_anytime_converges() {
+    let mut cfg = base_cfg();
+    cfg.data = DataSpec::SyntheticLogistic { m: 6_000, d: 24 };
+    cfg.schedule = Schedule::Constant { lr: 0.1 };
+    cfg.method = anytime(30.0);
+    cfg.epochs = 10;
+    let res = Trainer::new(cfg).unwrap().run();
+    // Normalized logit error must drop well below the x=0 level (1.0).
+    assert!(
+        res.trace.final_err() < 0.5,
+        "logreg did not converge: {} -> {}",
+        res.initial_err,
+        res.trace.final_err()
+    );
+    // Cost is the NLL: must be below chance level m*ln2.
+    let last = res.trace.points.last().unwrap();
+    assert!(last.cost < 6_000.0 * std::f64::consts::LN_2, "NLL {}", last.cost);
+}
+
+#[test]
+fn logistic_native_matches_textbook_update() {
+    use anytime_sgd::backend::{Consts, NativeWorker, Objective, WorkerCompute};
+    use anytime_sgd::partition::{materialize_shards, Assignment};
+
+    let ds = anytime_sgd::data::synthetic_logreg(200, 8, 3);
+    let shards = materialize_shards(&ds, &Assignment::new(1, 0));
+    let shard = Arc::new(shards.into_iter().next().unwrap());
+    let mut w = NativeWorker::with_objective(shard.clone(), 2, Objective::Logistic);
+    let x0 = vec![0.05f32; 8];
+    let idx = [3u32, 77, 11, 150]; // 2 steps of batch 2
+    let out = w.run_steps(&x0, &idx, 0.0, Consts::constant(0.2));
+
+    // Textbook replay.
+    let sigmoid = |z: f32| 1.0 / (1.0 + (-z).exp());
+    let mut x = x0.clone();
+    for step in 0..2 {
+        let rows = &idx[step * 2..step * 2 + 2];
+        let mut grad = vec![0.0f32; 8];
+        for &r in rows {
+            let row = shard.a.row(r as usize);
+            let p = sigmoid(row.iter().zip(&x).map(|(a, b)| a * b).sum::<f32>());
+            let resid = p - shard.y[r as usize];
+            for (g, &a) in grad.iter_mut().zip(row) {
+                *g += resid * a;
+            }
+        }
+        for (xi, g) in x.iter_mut().zip(&grad) {
+            *xi -= 0.2 * g / 2.0;
+        }
+    }
+    for (got, want) in out.x_k.iter().zip(&x) {
+        assert!((got - want).abs() < 1e-5, "{got} vs {want}");
+    }
+}
+
+#[test]
+fn eval_every_reduces_trace_density() {
+    let mut cfg = base_cfg();
+    cfg.epochs = 8;
+    cfg.eval_every = 4;
+    let res = Trainer::new(cfg).unwrap().run();
+    // initial point + epochs 4 and 8.
+    assert_eq!(res.trace.points.len(), 3);
+    assert_eq!(res.trace.points[1].epoch, 4);
+    assert_eq!(res.trace.points[2].epoch, 8);
+}
+
+#[test]
+fn trace_replay_env_from_csv_config() {
+    // End-to-end: env.kind = "trace" with a factors file.
+    let dir = std::env::temp_dir();
+    let p = dir.join(format!("anytime-tracecfg-{}.csv", std::process::id()));
+    std::fs::write(&p, "factor\n1.0\n2.0\n4.0\n").unwrap();
+    let json = format!(
+        r#"{{"preset": "fig3-anytime", "epochs": 2,
+             "data": {{"kind": "synthetic", "m": 2000, "d": 16}},
+             "env": {{"kind": "trace", "file": "{}", "step_secs": 0.05}}}}"#,
+        p.display()
+    );
+    let v = anytime_sgd::ser::parse(&json).unwrap();
+    let cfg = RunConfig::from_json(&v).unwrap();
+    let res = Trainer::new(cfg).unwrap().run();
+    assert!(res.trace.final_err() < res.initial_err);
+    // Realized q must correspond to one of the trace rates:
+    // q = T/(factor*0.05) for factor in {1,2,4} -> {4000, 2000, 1000},
+    // capped at one pass (2000*1/32... m=2000 d=16 batch 32: shard 500
+    // rows /32 = 16 steps cap). All q equal the cap or a divisor set.
+    for e in &res.epochs {
+        for &q in &e.q {
+            assert!(q > 0, "worker idle under trace env");
+        }
+    }
+    std::fs::remove_file(p).ok();
+}
+
+#[test]
+fn events_log_records_run() {
+    let path = std::env::temp_dir().join(format!("anytime-ev-{}.jsonl", std::process::id()));
+    let mut cfg = base_cfg();
+    cfg.epochs = 3;
+    let tr = Trainer::new(cfg).unwrap();
+    let mut tr = tr.with_events(anytime_sgd::metrics::events::EventLog::create(&path).unwrap());
+    let _ = tr.run();
+    let text = std::fs::read_to_string(&path).unwrap();
+    // run_started + 3 epochs + 3 evals + run_finished.
+    assert_eq!(text.lines().count(), 8, "{text}");
+    for line in text.lines() {
+        anytime_sgd::ser::parse(line).unwrap();
+    }
+    std::fs::remove_file(path).ok();
+}

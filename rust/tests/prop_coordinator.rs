@@ -1,0 +1,216 @@
+//! Property-based tests (testkit) on coordinator-facing invariants:
+//! partition placement, λ combining, the gradient code, the wait
+//! calculus, and the weighted-sum combine.
+
+use anytime_sgd::coordinator::combine_lambda;
+use anytime_sgd::config::CombinePolicy;
+use anytime_sgd::methods::gradient_coding::GradientCode;
+use anytime_sgd::partition::{block_range, Assignment};
+use anytime_sgd::prop_assert;
+use anytime_sgd::rng::Xoshiro256pp;
+use anytime_sgd::sim::wait;
+use anytime_sgd::testkit::{check, Config, Gen, PairGen, UsizeRange, VecGen};
+
+fn cfg(cases: usize) -> Config {
+    Config { cases, ..Default::default() }
+}
+
+#[test]
+fn prop_partition_every_block_on_s_plus_1_workers() {
+    // (n, s) with s < n, n up to 24.
+    struct NS;
+    impl Gen<(usize, usize)> for NS {
+        fn gen(&self, rng: &mut Xoshiro256pp) -> (usize, usize) {
+            let n = 1 + rng.index(24);
+            let s = rng.index(n);
+            (n, s)
+        }
+        fn shrink(&self, &(n, s): &(usize, usize)) -> Vec<(usize, usize)> {
+            let mut out = Vec::new();
+            if s > 0 {
+                out.push((n, s / 2));
+            }
+            if n > s + 1 {
+                out.push((n - 1, s.min(n - 2)));
+            }
+            out
+        }
+    }
+    check(cfg(200), &NS, |&(n, s)| {
+        let asg = Assignment::new(n, s);
+        asg.validate().map_err(|e| format!("n={n} s={s}: {e}"))?;
+        // Inverse maps agree.
+        for b in 0..n {
+            for &v in &asg.workers_of(b) {
+                prop_assert!(asg.blocks_of(v).contains(&b), "inverse map broken at b={b} v={v}");
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_block_ranges_cover_exactly() {
+    let g = PairGen { a: UsizeRange { lo: 1, hi: 5000 }, b: UsizeRange { lo: 1, hi: 64 } };
+    check(cfg(200), &g, |&(m, n)| {
+        let mut covered = 0usize;
+        let mut prev_end = 0usize;
+        for b in 0..n {
+            let r = block_range(m, n, b);
+            prop_assert!(r.start == prev_end, "blocks not contiguous at {b}");
+            prev_end = r.end;
+            covered += r.len();
+        }
+        prop_assert!(covered == m, "covered {covered} != m {m}");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_lambda_simplex_and_proportionality() {
+    // Random q vectors with random missing workers.
+    let g = VecGen { elem: UsizeRange { lo: 0, hi: 10_000 }, min_len: 1, max_len: 24 };
+    check(cfg(300), &g, |q| {
+        let outputs: Vec<Option<Vec<f32>>> = q
+            .iter()
+            .map(|&qv| if qv % 7 == 3 { None } else { Some(vec![0.0]) })
+            .collect();
+        for policy in
+            [CombinePolicy::Proportional, CombinePolicy::Uniform, CombinePolicy::FastestOnly]
+        {
+            let lam = combine_lambda(policy, q, &outputs);
+            let sum: f64 = lam.iter().sum();
+            let any_output = outputs.iter().zip(q).any(|(o, &qv)| {
+                o.is_some() && (policy != CombinePolicy::Proportional || qv > 0)
+            });
+            if any_output {
+                prop_assert!((sum - 1.0).abs() < 1e-9, "{policy:?}: Σλ = {sum}");
+            } else {
+                prop_assert!(sum == 0.0, "{policy:?}: expected zero weights");
+            }
+            for (v, (&lv, o)) in lam.iter().zip(&outputs).enumerate() {
+                prop_assert!(lv >= 0.0, "negative λ");
+                prop_assert!(
+                    o.is_some() || lv == 0.0,
+                    "{policy:?}: λ[{v}] = {lv} for missing worker"
+                );
+            }
+        }
+        // Theorem-3 proportionality: λ_i/λ_j == q_i/q_j for present workers.
+        let lam = combine_lambda(CombinePolicy::Proportional, q, &outputs);
+        for i in 0..q.len() {
+            for j in 0..q.len() {
+                if outputs[i].is_some() && outputs[j].is_some() && q[j] > 0 && lam[j] > 0.0 {
+                    let ratio = lam[i] / lam[j];
+                    let want = q[i] as f64 / q[j] as f64;
+                    prop_assert!((ratio - want).abs() < 1e-9, "proportionality broken");
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_gradient_code_decodes_random_subsets() {
+    struct NSsub;
+    impl Gen<(usize, usize, u64)> for NSsub {
+        fn gen(&self, rng: &mut Xoshiro256pp) -> (usize, usize, u64) {
+            let n = 3 + rng.index(10); // 3..12
+            let s = rng.index((n - 1).min(4)); // keep decode cost sane
+            (n, s, rng.next_u64())
+        }
+    }
+    check(cfg(40), &NSsub, |&(n, s, seed)| {
+        let code = GradientCode::new(n, s, 11);
+        let mut rng = Xoshiro256pp::seed_from_u64(seed);
+        let mut scratch = Vec::new();
+        let mut subset = rng.sample_without_replacement(n, n - s, &mut scratch);
+        subset.sort_unstable();
+        let coeffs = code.decode_coeffs(&subset);
+        prop_assert!(coeffs.is_some(), "n={n} s={s}: subset {subset:?} not decodable");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_wait_all_dominates_fastest_k() {
+    // wait::all >= wait::fastest_k for any k <= #workers.
+    let g = VecGen { elem: UsizeRange { lo: 1, hi: 1000 }, min_len: 1, max_len: 16 };
+    check(cfg(200), &g, |ts| {
+        let finish: Vec<Option<f64>> = ts.iter().map(|&t| Some(t as f64)).collect();
+        let t_c = 10_000.0;
+        let all = wait::all(&finish, t_c);
+        for k in 1..=ts.len() {
+            let fk = wait::fastest_k(&finish, k, t_c);
+            prop_assert!(fk <= all + 1e-12, "fastest_{k} {fk} > all {all}");
+        }
+        prop_assert!(
+            (wait::fastest_k(&finish, ts.len(), t_c) - all).abs() < 1e-12,
+            "fastest_N must equal wait-all"
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_weighted_sum_is_linear() {
+    // weighted_sum(xs, w) + weighted_sum(xs, u) == weighted_sum(xs, w+u).
+    let g = UsizeRange { lo: 1, hi: 12 };
+    check(cfg(60), &g, |&n| {
+        let d = 257;
+        let mut rng = Xoshiro256pp::seed_from_u64(n as u64);
+        let xs: Vec<Vec<f32>> = (0..n)
+            .map(|_| {
+                let mut v = vec![0.0f32; d];
+                rng.fill_normal_f32(&mut v);
+                v
+            })
+            .collect();
+        let refs: Vec<&[f32]> = xs.iter().map(|x| x.as_slice()).collect();
+        let w: Vec<f64> = (0..n).map(|i| (i + 1) as f64 / 10.0).collect();
+        let u: Vec<f64> = (0..n).map(|i| 0.3 - (i % 3) as f64 * 0.1).collect();
+        let wu: Vec<f64> = w.iter().zip(&u).map(|(a, b)| a + b).collect();
+        let (mut ow, mut ou, mut owu) = (vec![0.0f32; d], vec![0.0f32; d], vec![0.0f32; d]);
+        anytime_sgd::linalg::weighted_sum(&refs, &w, &mut ow);
+        anytime_sgd::linalg::weighted_sum(&refs, &u, &mut ou);
+        anytime_sgd::linalg::weighted_sum(&refs, &wu, &mut owu);
+        for j in 0..d {
+            prop_assert!(
+                (ow[j] + ou[j] - owu[j]).abs() < 1e-4,
+                "linearity broken at {j}: {} + {} != {}",
+                ow[j],
+                ou[j],
+                owu[j]
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_optimal_lambda_minimizes_variance_bound() {
+    // Theorem 3 against random perturbations on the simplex.
+    let g = VecGen { elem: UsizeRange { lo: 1, hi: 500 }, min_len: 2, max_len: 10 };
+    check(cfg(100), &g, |q| {
+        let c = anytime_sgd::theory::Constants {
+            big_l: 2.0,
+            sigma: 1.0,
+            big_d: 3.0,
+            big_g: 4.0,
+            f0_gap: 5.0,
+        };
+        let best = anytime_sgd::theory::optimal_lambda(q);
+        let vb_best = anytime_sgd::theory::variance_bound(&c, &best, q);
+        let mut rng = Xoshiro256pp::seed_from_u64(q.iter().sum::<usize>() as u64);
+        for _ in 0..20 {
+            // Random point on the simplex (normalized exponentials).
+            let raw: Vec<f64> = (0..q.len()).map(|_| rng.next_f64() + 1e-3).collect();
+            let s: f64 = raw.iter().sum();
+            let lam: Vec<f64> = raw.iter().map(|r| r / s).collect();
+            let vb = anytime_sgd::theory::variance_bound(&c, &lam, q);
+            prop_assert!(vb + 1e-9 >= vb_best, "random λ beat Theorem 3: {vb} < {vb_best}");
+        }
+        Ok(())
+    });
+}

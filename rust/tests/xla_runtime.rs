@@ -1,0 +1,230 @@
+//! Integration: AOT artifacts → PJRT runtime → backends.
+//!
+//! These tests need `artifacts/` (run `make artifacts` first); they skip
+//! with a notice otherwise so `cargo test` stays green pre-build.
+
+use anytime_sgd::backend::{Consts, Evaluator, NativeEvaluator, NativeWorker, WorkerCompute, XlaEvaluator, XlaWorker};
+use anytime_sgd::data::synthetic_linreg;
+use anytime_sgd::partition::{materialize_shards, Assignment};
+use anytime_sgd::rng::Xoshiro256pp;
+use anytime_sgd::runtime::Engine;
+use std::path::PathBuf;
+use std::sync::Arc;
+
+fn engine() -> Option<Arc<Engine>> {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("SKIP: no artifacts/ — run `make artifacts`");
+        return None;
+    }
+    Some(Arc::new(Engine::new(dir).expect("engine")))
+}
+
+/// The canonical AOT config: m=50k, d=200, N=10, S=0 → shard 5000 rows.
+fn canonical_setup() -> (anytime_sgd::data::Dataset, Vec<anytime_sgd::partition::Shard>) {
+    let ds = synthetic_linreg(50_000, 200, 1e-3, 7);
+    let shards = materialize_shards(&ds, &Assignment::new(10, 0));
+    (ds, shards)
+}
+
+#[test]
+fn combine_artifact_matches_native() {
+    let Some(eng) = engine() else { return };
+    let mut rng = Xoshiro256pp::seed_from_u64(1);
+    let (n, d) = (10usize, 200usize);
+    let mut xs = vec![0.0f32; n * d];
+    rng.fill_normal_f32(&mut xs);
+    let lam: Vec<f32> = (0..n).map(|i| (i + 1) as f32 / 55.0).collect();
+
+    let xs_buf = eng.upload_f32(&xs, &[n, d]).unwrap();
+    let lam_buf = eng.upload_f32(&lam, &[n]).unwrap();
+    let out = eng.exec("combine_n10_d200", &[&xs_buf, &lam_buf]).unwrap();
+    assert_eq!(out.len(), 1);
+    assert_eq!(out[0].shape, vec![d]);
+
+    let rows: Vec<&[f32]> = (0..n).map(|v| &xs[v * d..(v + 1) * d]).collect();
+    let w: Vec<f64> = lam.iter().map(|&l| l as f64).collect();
+    let mut want = vec![0.0f32; d];
+    anytime_sgd::linalg::weighted_sum(&rows, &w, &mut want);
+    for j in 0..d {
+        assert!((out[0].data[j] - want[j]).abs() < 1e-4, "j={j}");
+    }
+}
+
+#[test]
+fn xla_worker_matches_native_worker() {
+    let Some(eng) = engine() else { return };
+    let (_, shards) = canonical_setup();
+    let shard = Arc::new(shards.into_iter().next().unwrap());
+
+    let mut xw = XlaWorker::new(eng, &shard).expect("xla worker");
+    assert_eq!(xw.batch(), 32);
+    assert_eq!(xw.shard_rows(), 5000);
+    let mut nw = NativeWorker::new(shard.clone(), 32);
+
+    let mut rng = Xoshiro256pp::seed_from_u64(3);
+    let d = 200;
+    let mut x0 = vec![0.0f32; d];
+    rng.fill_normal_f32(&mut x0);
+    // q = 70 = 2*32 + 6 exercises both K=32 and K=1 artifacts.
+    let q = 70usize;
+    let idx: Vec<u32> = (0..q * 32).map(|_| rng.index(5000) as u32).collect();
+    let consts = Consts::paper(2.0, 0.05);
+
+    let xla_out = xw.run_steps(&x0, &idx, 5.0, consts);
+    let nat_out = nw.run_steps(&x0, &idx, 5.0, consts);
+
+    let rel = |a: &[f32], b: &[f32]| {
+        let num: f64 = a.iter().zip(b).map(|(x, y)| ((x - y) as f64).powi(2)).sum::<f64>();
+        let den: f64 = b.iter().map(|&y| (y as f64).powi(2)).sum::<f64>();
+        (num / den.max(1e-30)).sqrt()
+    };
+    assert!(rel(&xla_out.x_k, &nat_out.x_k) < 1e-3, "x_k diverged: {}", rel(&xla_out.x_k, &nat_out.x_k));
+    assert!(rel(&xla_out.x_bar, &nat_out.x_bar) < 1e-3, "x_bar diverged");
+}
+
+#[test]
+fn xla_worker_zero_steps_identity() {
+    let Some(eng) = engine() else { return };
+    let (_, shards) = canonical_setup();
+    let shard = Arc::new(shards.into_iter().next().unwrap());
+    let mut xw = XlaWorker::new(eng, &shard).unwrap();
+    let x0: Vec<f32> = (0..200).map(|i| i as f32 * 0.01).collect();
+    let out = xw.run_steps(&x0, &[], 0.0, Consts::constant(0.1));
+    assert_eq!(out.x_k, x0);
+}
+
+#[test]
+fn xla_evaluator_matches_native() {
+    let Some(eng) = engine() else { return };
+    let (ds, _) = canonical_setup();
+    let x_star = ds.x_star.clone().unwrap();
+    let mut ax_star = vec![0.0f32; ds.rows()];
+    ds.predict_into(&x_star, &mut ax_star);
+
+    let mut xe = XlaEvaluator::new(eng, &ds.a, &ds.y, &ax_star).expect("xla eval");
+    let mut ne = NativeEvaluator::new(Arc::new(ds.a.clone()), Arc::new(ds.y.clone()), ax_star);
+
+    let mut rng = Xoshiro256pp::seed_from_u64(5);
+    for trial in 0..3 {
+        let mut x = vec![0.0f32; 200];
+        if trial > 0 {
+            rng.fill_normal_f32(&mut x);
+        }
+        let a = xe.eval(&x);
+        let b = ne.eval(&x);
+        let cost_rel = (a.cost - b.cost).abs() / b.cost.max(1.0);
+        assert!(cost_rel < 1e-3, "cost {} vs {}", a.cost, b.cost);
+        assert!((a.norm_err - b.norm_err).abs() < 1e-3 * b.norm_err.max(1e-6),
+            "err {} vs {}", a.norm_err, b.norm_err);
+    }
+}
+
+#[test]
+fn warm_compiles_all_linreg_steps() {
+    let Some(eng) = engine() else { return };
+    let n = eng.warm("linreg_step").unwrap();
+    assert!(n >= 2, "expected at least k=1 and k=32 artifacts, got {n}");
+}
+
+#[test]
+fn full_trainer_xla_matches_native_backend() {
+    // End-to-end: the same fig3 protocol through both backends must
+    // produce near-identical error traces (sim-time identical; numerics
+    // to f32 tolerance).
+    use anytime_sgd::config::{Backend, RunConfig};
+    use anytime_sgd::coordinator::{build_dataset, Trainer};
+
+    if engine().is_none() {
+        return;
+    }
+    let mut cfg = RunConfig::preset("fig3-anytime").unwrap();
+    cfg.epochs = 2;
+    let ds = Arc::new(build_dataset(&cfg));
+
+    let mut cfg_native = cfg.clone();
+    cfg_native.backend = Backend::Native;
+    let r_native = Trainer::with_dataset(cfg_native, ds.clone()).unwrap().run();
+
+    let mut cfg_xla = cfg;
+    cfg_xla.backend = Backend::Xla;
+    let r_xla = Trainer::with_dataset(cfg_xla, ds).unwrap().run();
+
+    for (a, b) in r_native.trace.points.iter().zip(r_xla.trace.points.iter()) {
+        assert_eq!(a.time, b.time, "sim time must be backend-independent");
+        let rel = (a.norm_err - b.norm_err).abs() / a.norm_err.max(1e-9);
+        assert!(rel < 1e-3, "epoch {}: native {} vs xla {}", a.epoch, a.norm_err, b.norm_err);
+    }
+    // Per-epoch q profiles are identical (time model, not numerics).
+    for (ea, eb) in r_native.epochs.iter().zip(r_xla.epochs.iter()) {
+        assert_eq!(ea.q, eb.q);
+    }
+}
+
+#[test]
+fn lm_runner_tiny_trains() {
+    // LM path: init from manifest, run a few steps, loss must drop.
+    use anytime_sgd::lm::{BatchSampler, LmRunner};
+
+    let Some(eng) = engine() else { return };
+    if eng.manifest().get("lm_step_tiny").is_none() {
+        eprintln!("SKIP: no lm_step_tiny artifact");
+        return;
+    }
+    let runner = LmRunner::new(eng, "tiny").unwrap();
+    assert!(runner.spec.n_params > 50_000);
+    let mut params = runner.init_params(3);
+    assert_eq!(params.len(), runner.spec.params.len());
+
+    let text = anytime_sgd::data::corpus::tiny_corpus(50_000, 5);
+    let tokens = anytime_sgd::data::corpus::encode(&text);
+    let sampler = BatchSampler::new(tokens, runner.spec.batch, runner.spec.seq_len);
+    let mut rng = Xoshiro256pp::seed_from_u64(9);
+    let eval_batch = sampler.sample(&mut rng);
+
+    let loss0 = runner.eval_loss(&params, &eval_batch).unwrap();
+    assert!((loss0 - (256f32).ln()).abs() < 0.5, "init loss {loss0} not near ln(vocab)");
+    let batches: Vec<_> = (0..30).map(|_| sampler.sample(&mut rng)).collect();
+    runner.train_steps(&mut params, &batches, 0.3).unwrap();
+    let loss1 = runner.eval_loss(&params, &eval_batch).unwrap();
+    assert!(loss1 < loss0 - 0.3, "loss did not drop: {loss0} -> {loss1}");
+}
+
+#[test]
+fn logreg_xla_matches_native() {
+    use anytime_sgd::backend::Objective;
+    let Some(eng) = engine() else { return };
+    if eng.manifest().of_kind("logreg_step").is_empty() {
+        eprintln!("SKIP: no logreg artifacts");
+        return;
+    }
+    let ds = anytime_sgd::data::synthetic_logreg(50_000, 200, 7);
+    let shards = materialize_shards(&ds, &Assignment::new(10, 0));
+    let shard = Arc::new(shards.into_iter().next().unwrap());
+
+    let mut xw = XlaWorker::with_objective(eng, &shard, Objective::Logistic).expect("xla logreg");
+    let mut nw = anytime_sgd::backend::NativeWorker::with_objective(
+        shard.clone(),
+        32,
+        Objective::Logistic,
+    );
+    let mut rng = Xoshiro256pp::seed_from_u64(4);
+    let mut x0 = vec![0.0f32; 200];
+    rng.fill_normal_f32(&mut x0);
+    for v in x0.iter_mut() {
+        *v *= 0.05; // keep logits unsaturated
+    }
+    let q = 45usize; // exercises K=32 + K=8 + K=1
+    let idx: Vec<u32> = (0..q * 32).map(|_| rng.index(5000) as u32).collect();
+    let xla = xw.run_steps(&x0, &idx, 0.0, Consts::constant(0.1));
+    let nat = nw.run_steps(&x0, &idx, 0.0, Consts::constant(0.1));
+    let rel: f64 = xla
+        .x_k
+        .iter()
+        .zip(&nat.x_k)
+        .map(|(a, b)| ((a - b) as f64).powi(2))
+        .sum::<f64>()
+        .sqrt()
+        / nat.x_k.iter().map(|&b| (b as f64).powi(2)).sum::<f64>().sqrt().max(1e-30);
+    assert!(rel < 1e-3, "logreg xla vs native diverged: {rel}");
+}
