@@ -1,0 +1,47 @@
+//! Sweep-engine benchmarks: cells/sec through the parallel campaign
+//! runner at 1 thread vs all cores, plus grid-expansion and aggregation
+//! microbenchmarks. `BENCHLINE` rows feed EXPERIMENTS.md §Perf.
+
+use anytime_sgd::benchkit::{black_box, Bench};
+use anytime_sgd::config::{DataSpec, RunConfig};
+use anytime_sgd::sweep::{self, aggregate, run_cells, Grid};
+
+fn bench_base() -> RunConfig {
+    let mut c = sweep::sweep_base();
+    c.data = DataSpec::Synthetic { m: 2_000, d: 32, noise: 1e-3 };
+    c.workers = 8;
+    c.batch = 16;
+    c.epochs = 2;
+    c
+}
+
+fn main() {
+    let mut b = Bench::new();
+
+    // ---- grid expansion ---------------------------------------------------
+    let grid = Grid::new(bench_base())
+        .scenarios(["ideal", "ec2", "hetero"])
+        .methods(["anytime", "sync", "fnb", "gc"])
+        .seed_count(2);
+    let n_cells = grid.len();
+    b.run_with_throughput(&format!("sweep/expand/{n_cells}cells"), n_cells as f64, || {
+        black_box(grid.expand().unwrap().len())
+    });
+
+    // ---- end-to-end cells/sec: serial vs parallel -------------------------
+    let cells = grid.expand().unwrap();
+    let all_cores = sweep::runner::default_threads();
+    for threads in [1, all_cores] {
+        b.run_with_throughput(
+            &format!("sweep/run/{n_cells}cells/threads{threads}"),
+            n_cells as f64,
+            || black_box(run_cells(&cells, threads).unwrap().len()),
+        );
+    }
+
+    // ---- aggregation ------------------------------------------------------
+    let results = run_cells(&cells, all_cores).unwrap();
+    b.run_with_throughput(&format!("sweep/aggregate/{n_cells}cells"), n_cells as f64, || {
+        black_box(aggregate("bench", &results).to_csv().len())
+    });
+}

@@ -13,9 +13,11 @@
 //! in `rust/tests/xla_runtime.rs`.
 
 mod native;
+#[cfg(feature = "xla")]
 mod xla_backend;
 
 pub use native::{NativeEvaluator, NativeWorker};
+#[cfg(feature = "xla")]
 pub use xla_backend::{XlaEvaluator, XlaWorker};
 
 /// Step-size schedule constants (mirror of `model.learning_rate`).

@@ -137,7 +137,9 @@ impl NativeEvaluator {
         assert_eq!(a.rows(), y.len());
         assert_eq!(a.rows(), ax_star.len());
         let den = crate::linalg::norm2(&ax_star);
-        let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
+        // Respects the constructing thread's nested-parallelism cap (see
+        // `exec::inner_threads`) so sweep cells don't oversubscribe cores.
+        let threads = crate::exec::inner_threads();
         Self { a, y, ax_star, den, threads, objective }
     }
 }

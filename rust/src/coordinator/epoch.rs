@@ -70,7 +70,14 @@ impl Trainer {
         };
         let comm = uplink + self.broadcast_charge(e);
         let received = finish.iter().map(|f| f.is_some()).collect();
-        EpochStats { q, received, compute_secs: compute, comm_secs: comm, lambda }
+        EpochStats {
+            q,
+            received,
+            compute_secs: compute,
+            comm_secs: comm,
+            lambda,
+            worker_finish: finish,
+        }
     }
 
     /// §V Generalized Anytime-Gradients: workers keep stepping during
@@ -140,7 +147,7 @@ impl Trainer {
         // Time: budget T, then the round trip overlaps the idle compute.
         let comm = round_trips.iter().cloned().fold(0.0f64, f64::max).min(self.cfg.t_c);
         let received = finish.iter().map(|f| f.is_some()).collect();
-        EpochStats { q, received, compute_secs: t, comm_secs: comm, lambda }
+        EpochStats { q, received, compute_secs: t, comm_secs: comm, lambda, worker_finish: finish }
     }
 
     /// Classical synchronous local-SGD: fixed steps, wait for all,
@@ -173,7 +180,14 @@ impl Trainer {
         let compute = wait::all(&finish, self.cfg.t_c);
         let comm = self.broadcast_charge(e);
         let received = finish.iter().map(|f| f.is_some()).collect();
-        EpochStats { q, received, compute_secs: compute, comm_secs: comm, lambda }
+        EpochStats {
+            q,
+            received,
+            compute_secs: compute,
+            comm_secs: comm,
+            lambda,
+            worker_finish: finish,
+        }
     }
 
     /// Fastest N−B (Pan et al.): fixed steps; the master proceeds after
@@ -209,7 +223,14 @@ impl Trainer {
         self.apply_combine(&outputs, &lambda);
         let comm = self.broadcast_charge(e);
         let received = (0..n).map(|v| chi.contains(&v)).collect();
-        EpochStats { q, received, compute_secs: cutoff, comm_secs: comm, lambda }
+        EpochStats {
+            q,
+            received,
+            compute_secs: cutoff,
+            comm_secs: comm,
+            lambda,
+            worker_finish: arrivals,
+        }
     }
 
     /// Gradient Coding (Tandon et al.): coded full-gradient descent.
@@ -261,7 +282,14 @@ impl Trainer {
 
         let comm = self.broadcast_charge(e);
         let lambda = vec![0.0; n];
-        EpochStats { q, received: received_vec, compute_secs: cutoff, comm_secs: comm, lambda }
+        EpochStats {
+            q,
+            received: received_vec,
+            compute_secs: cutoff,
+            comm_secs: comm,
+            lambda,
+            worker_finish: arrivals,
+        }
     }
 
     /// Full gradient of block `blk`: 2 Σ_{i∈block} a_i (a_i·x − y_i),
@@ -420,6 +448,7 @@ impl Trainer {
         let mut dispatch_count = vec![0usize; n];
         let mut q = vec![0usize; n];
         let mut received = vec![false; n];
+        let mut last_finish: Vec<Option<f64>> = vec![None; n];
 
         // Initial dispatch: every live worker grabs the current x.
         for v in 0..n {
@@ -450,6 +479,7 @@ impl Trainer {
             }
             q[v] += u;
             received[v] = true;
+            last_finish[v] = Some(now);
             dispatch_count[v] += 1;
 
             // Redispatch if the next round still fits the horizon.
@@ -464,6 +494,13 @@ impl Trainer {
         }
 
         let lambda = vec![0.0; n];
-        EpochStats { q, received, compute_secs: horizon, comm_secs: 0.0, lambda }
+        EpochStats {
+            q,
+            received,
+            compute_secs: horizon,
+            comm_secs: 0.0,
+            lambda,
+            worker_finish: last_finish,
+        }
     }
 }

@@ -27,7 +27,9 @@ use crate::partition::{materialize_shards, Assignment, Shard};
 use crate::rng::Xoshiro256pp;
 use crate::sim::SimClock;
 use crate::straggler::{CommModel, DelayModel};
-use anyhow::{Context, Result};
+#[cfg(feature = "xla")]
+use anyhow::Context;
+use anyhow::Result;
 use std::sync::Arc;
 
 /// Per-epoch protocol outcome (before evaluation).
@@ -44,6 +46,10 @@ pub struct EpochStats {
     pub comm_secs: f64,
     /// λ used at the combine step (0 for excluded workers).
     pub lambda: Vec<f64>,
+    /// Per-worker finishing times within the epoch (compute + uplink,
+    /// seconds from epoch start); `None` = never reported (dead or past
+    /// the `T_c` guard). Feeds the clock's [`crate::sim::FinishLog`].
+    pub worker_finish: Vec<Option<f64>>,
 }
 
 /// Result of a full run.
@@ -124,6 +130,7 @@ impl Trainer {
                     objective,
                 ));
             }
+            #[cfg(feature = "xla")]
             Backend::Xla => {
                 let dir = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
                 let engine = Arc::new(
@@ -140,6 +147,14 @@ impl Trainer {
                 evaluator = Box::new(crate::backend::XlaEvaluator::with_objective(
                     engine, &ds.a, &ds.y, &ax_star, objective,
                 )?);
+            }
+            #[cfg(not(feature = "xla"))]
+            Backend::Xla => {
+                anyhow::bail!(
+                    "backend `xla` requires building with `--features xla` \
+                     (and AOT artifacts via `make artifacts`); this is a \
+                     native-only build"
+                );
             }
         }
 
@@ -188,6 +203,12 @@ impl Trainer {
         self.clock.now()
     }
 
+    /// The clock's per-epoch audit log (charges + per-worker finishing
+    /// times), populated by [`Trainer::run`].
+    pub fn finish_log(&self) -> &crate::sim::FinishLog {
+        self.clock.log()
+    }
+
     /// Max SGD steps a worker may take in one epoch (Algorithm 2's
     /// one-pass guard, scaled by `cfg.max_passes`).
     pub fn max_steps(&self, v: usize) -> usize {
@@ -221,7 +242,12 @@ impl Trainer {
         let mut epochs = Vec::with_capacity(self.cfg.epochs);
         for e in 0..self.cfg.epochs {
             let stats = self.run_epoch();
-            self.clock.charge_epoch(e, stats.compute_secs, stats.comm_secs, vec![]);
+            self.clock.charge_epoch(
+                e,
+                stats.compute_secs,
+                stats.comm_secs,
+                stats.worker_finish.clone(),
+            );
             if let Some(log) = self.events.as_mut() {
                 let _ = log.epoch(e, &stats, self.clock.now());
             }
@@ -354,6 +380,25 @@ mod tests {
         // Deterministic clock: ideal env, fixed comm -> epoch = T + comm.
         let p1 = &res.trace.points[1];
         assert!((p1.time - 12.0).abs() < 1e-9, "time {}", p1.time); // T + uplink + broadcast
+    }
+
+    #[test]
+    fn finish_log_records_worker_arrivals() {
+        let cfg = tiny_cfg();
+        let (workers, epochs) = (cfg.workers, cfg.epochs);
+        let mut tr = Trainer::new(cfg).unwrap();
+        tr.run();
+        let log = tr.finish_log();
+        assert_eq!(log.epochs.len(), epochs);
+        for charge in &log.epochs {
+            assert_eq!(charge.worker_finish.len(), workers);
+            // Ideal env + fixed 1 s comm: every worker reports at
+            // T + uplink = 10 + 1 s.
+            for f in &charge.worker_finish {
+                let t = f.expect("worker reported");
+                assert!((t - 11.0).abs() < 1e-9, "arrival {t}");
+            }
+        }
     }
 
     #[test]

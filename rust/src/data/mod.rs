@@ -281,7 +281,9 @@ pub fn standardize(ds: &mut Dataset) {
 }
 
 fn threads() -> usize {
-    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+    // Respects the caller's nested-parallelism cap (see `exec`): a sweep
+    // already running one cell per core generates datasets single-threaded.
+    crate::exec::inner_threads()
 }
 
 #[cfg(test)]

@@ -16,6 +16,37 @@ use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
+thread_local! {
+    static INNER_THREADS: std::cell::Cell<Option<usize>> =
+        const { std::cell::Cell::new(None) };
+}
+
+/// Per-thread cap on nested data parallelism.
+///
+/// Bulk helpers (dataset generation, full-dataset evaluation) size
+/// their [`scoped_map`] fan-out with this. By default it is the full
+/// core count; an orchestrator that already saturates cores with
+/// coarser units (the sweep runner's one-thread-per-cell fan-out)
+/// narrows its workers via [`with_inner_threads`] so the nest does not
+/// oversubscribe to ~cores² threads.
+pub fn inner_threads() -> usize {
+    INNER_THREADS
+        .with(|c| c.get())
+        .unwrap_or_else(|| std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4))
+}
+
+/// Run `f` with this thread's nested parallelism capped at `n`.
+/// The previous cap is restored afterwards (nesting-safe).
+pub fn with_inner_threads<R>(n: usize, f: impl FnOnce() -> R) -> R {
+    INNER_THREADS.with(|c| {
+        let prev = c.get();
+        c.set(Some(n.max(1)));
+        let out = f();
+        c.set(prev);
+        out
+    })
+}
+
 /// A job sent to a worker: boxed closure over the worker's state.
 type Job<W, R> = Box<dyn FnOnce(&mut W) -> R + Send>;
 
@@ -242,6 +273,28 @@ mod tests {
         // Next epoch: the late generation-1 reply must not pollute results.
         let out2 = pool.scatter_gather(|v| job(move |_| 100 + v as u64));
         assert_eq!(out2, vec![100, 101]);
+    }
+
+    #[test]
+    fn inner_threads_cap_scopes_to_closure_and_thread() {
+        assert!(inner_threads() >= 1);
+        let inside = with_inner_threads(2, || {
+            // Nested caps restore on exit.
+            let nested = with_inner_threads(5, inner_threads);
+            assert_eq!(nested, 5);
+            inner_threads()
+        });
+        assert_eq!(inside, 2);
+        // Cap does not leak past the closure...
+        assert_ne!(inner_threads(), 0);
+        // ...and never goes below 1.
+        assert_eq!(with_inner_threads(0, inner_threads), 1);
+        // Other threads are unaffected while a cap is active.
+        with_inner_threads(3, || {
+            let other = std::thread::spawn(inner_threads).join().unwrap();
+            assert!(other >= 1);
+            assert_eq!(inner_threads(), 3);
+        });
     }
 
     #[test]

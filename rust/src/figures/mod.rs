@@ -4,6 +4,13 @@
 //! Each `figN()` returns a [`Figure`] (and writes CSV/JSON under
 //! `results/` when invoked through the CLI); `render_table` prints the
 //! same series the paper plots.
+//!
+//! Execution goes through the sweep runner
+//! ([`crate::sweep::runner::run_shared`] /
+//! [`crate::sweep::runner::run_results`]): each figure's method
+//! comparisons, seed replicates, and ablation arms are independent
+//! deterministic trainer runs, so they fan out across cores while
+//! producing bit-identical traces to the serial path.
 
 use crate::config::RunConfig;
 use crate::coordinator::{build_dataset, Trainer};
@@ -51,11 +58,16 @@ fn cfg(preset: &str, o: &FigOpts) -> Result<RunConfig> {
     Ok(c)
 }
 
-/// Run one preset against a shared dataset, returning its trace.
-fn run_on(dataset: &Arc<Dataset>, preset: &str, o: &FigOpts) -> Result<Trace> {
-    let c = cfg(preset, o)?;
-    let mut tr = Trainer::with_dataset(c, dataset.clone())?;
-    Ok(tr.run().trace)
+/// Run several presets against a shared dataset in parallel (one
+/// sweep-runner cell per preset), returning traces in preset order.
+fn run_many(dataset: &Arc<Dataset>, presets: &[&str], o: &FigOpts) -> Result<Vec<Trace>> {
+    let cfgs: Vec<RunConfig> = presets.iter().map(|p| cfg(p, o)).collect::<Result<_>>()?;
+    crate::sweep::runner::run_shared(dataset, &cfgs, crate::sweep::runner::default_threads())
+}
+
+/// Run explicit configs against a shared dataset in parallel.
+fn run_cfgs_on(dataset: &Arc<Dataset>, cfgs: &[RunConfig]) -> Result<Vec<Trace>> {
+    crate::sweep::runner::run_shared(dataset, cfgs, crate::sweep::runner::default_threads())
 }
 
 /// Datasets are shared across the methods of one figure so every method
@@ -105,8 +117,7 @@ pub fn fig2(o: &FigOpts) -> Result<(Vec<usize>, Figure)> {
     let stats = tr.run_epoch();
     let iters = stats.q.clone();
 
-    fig.traces.push(run_on(&ds, "fig2-proportional", o)?);
-    fig.traces.push(run_on(&ds, "fig2-uniform", o)?);
+    fig.traces.extend(run_many(&ds, &["fig2-proportional", "fig2-uniform"], o)?);
     Ok((iters, fig))
 }
 
@@ -114,8 +125,7 @@ pub fn fig2(o: &FigOpts) -> Result<(Vec<usize>, Figure)> {
 pub fn fig3(o: &FigOpts) -> Result<Figure> {
     let ds = shared_dataset("fig3-anytime", o)?;
     let mut fig = Figure::new("fig3_anytime_vs_sync", "time");
-    fig.traces.push(run_on(&ds, "fig3-anytime", o)?);
-    fig.traces.push(run_on(&ds, "fig3-sync", o)?);
+    fig.traces.extend(run_many(&ds, &["fig3-anytime", "fig3-sync"], o)?);
     Ok(fig)
 }
 
@@ -123,9 +133,7 @@ pub fn fig3(o: &FigOpts) -> Result<Figure> {
 pub fn fig4(o: &FigOpts) -> Result<Figure> {
     let ds = shared_dataset("fig4-anytime", o)?;
     let mut fig = Figure::new("fig4_redundancy", "time");
-    fig.traces.push(run_on(&ds, "fig4-anytime", o)?);
-    fig.traces.push(run_on(&ds, "fig4-fnb", o)?);
-    fig.traces.push(run_on(&ds, "fig4-gc", o)?);
+    fig.traces.extend(run_many(&ds, &["fig4-anytime", "fig4-fnb", "fig4-gc"], o)?);
     Ok(fig)
 }
 
@@ -133,9 +141,7 @@ pub fn fig4(o: &FigOpts) -> Result<Figure> {
 pub fn fig5(o: &FigOpts) -> Result<Figure> {
     let ds = shared_dataset("fig5-anytime", o)?;
     let mut fig = Figure::new("fig5_msd", "time");
-    fig.traces.push(run_on(&ds, "fig5-anytime", o)?);
-    fig.traces.push(run_on(&ds, "fig5-fnb", o)?);
-    fig.traces.push(run_on(&ds, "fig5-sync", o)?);
+    fig.traces.extend(run_many(&ds, &["fig5-anytime", "fig5-fnb", "fig5-sync"], o)?);
     Ok(fig)
 }
 
@@ -143,8 +149,7 @@ pub fn fig5(o: &FigOpts) -> Result<Figure> {
 pub fn fig6(o: &FigOpts) -> Result<Figure> {
     let ds = shared_dataset("fig6-anytime", o)?;
     let mut fig = Figure::new("fig6_generalized", "epoch");
-    fig.traces.push(run_on(&ds, "fig6-anytime", o)?);
-    fig.traces.push(run_on(&ds, "fig6-generalized", o)?);
+    fig.traces.extend(run_many(&ds, &["fig6-anytime", "fig6-generalized"], o)?);
     Ok(fig)
 }
 
@@ -154,23 +159,26 @@ pub fn theory_check(o: &FigOpts) -> Result<BTreeMap<String, f64>> {
     use crate::theory;
     let mut out = BTreeMap::new();
 
-    // Empirical variance under repeated single-epoch runs.
-    let mut costs = Vec::new();
-    let mut q_profile = Vec::new();
-    for seed in 0..24u64 {
-        let mut c = cfg("fig3-anytime", o)?;
-        c.epochs = 1;
-        c.seed = 1000 + seed;
-        let mut tr = Trainer::new(c)?;
-        let m_rows = tr.ds.rows() as f64;
-        let res = tr.run();
-        // The analysis' F is the per-sample mean (eq. 4); our metric
-        // tracks the sum (eq. 1) — normalize before comparing to bounds.
-        costs.push(res.trace.points.last().unwrap().cost / m_rows);
-        if seed == 0 {
-            q_profile = res.epochs[0].q.clone();
-        }
-    }
+    // Empirical variance under repeated single-epoch runs — one
+    // sweep-runner cell per seed, fanned out across cores.
+    let cfgs: Vec<RunConfig> = (0..24u64)
+        .map(|seed| {
+            let mut c = cfg("fig3-anytime", o)?;
+            c.epochs = 1;
+            c.seed = 1000 + seed;
+            Ok(c)
+        })
+        .collect::<Result<_>>()?;
+    let results =
+        crate::sweep::runner::run_results(&cfgs, crate::sweep::runner::default_threads(), None)?;
+    // The analysis' F is the per-sample mean (eq. 4); our metric
+    // tracks the sum (eq. 1) — normalize before comparing to bounds.
+    let costs: Vec<f64> = cfgs
+        .iter()
+        .zip(&results)
+        .map(|(c, r)| r.trace.points.last().unwrap().cost / c.data.rows() as f64)
+        .collect();
+    let q_profile = results[0].epochs[0].q.clone();
     let mean = costs.iter().sum::<f64>() / costs.len() as f64;
     let var = costs.iter().map(|c| (c - mean).powi(2)).sum::<f64>() / costs.len() as f64;
     out.insert("empirical_var_F".into(), var);
@@ -197,11 +205,13 @@ pub fn theory_check(o: &FigOpts) -> Result<BTreeMap<String, f64>> {
 /// after one epoch, and reports (Q, var, var·Q). If the corollary's
 /// 1/Q law holds, var·Q is ~flat across the sweep.
 pub fn variance_decay(o: &FigOpts) -> Result<Vec<(f64, f64, f64)>> {
-    let mut rows = Vec::new();
-    for t in [25.0, 50.0, 100.0, 200.0, 400.0] {
-        let mut costs = Vec::new();
-        let mut sum_q = 0usize;
-        for seed in 0..16u64 {
+    const T_GRID: [f64; 5] = [25.0, 50.0, 100.0, 200.0, 400.0];
+    const SEEDS: u64 = 16;
+    // One flat (T × seed) cell list through the sweep runner; regroup
+    // per T below (chunks preserve the expansion order).
+    let mut cfgs = Vec::with_capacity(T_GRID.len() * SEEDS as usize);
+    for t in T_GRID {
+        for seed in 0..SEEDS {
             let mut c = cfg("fig3-anytime", o)?;
             c.method = crate::config::MethodSpec::Anytime {
                 t,
@@ -210,15 +220,22 @@ pub fn variance_decay(o: &FigOpts) -> Result<Vec<(f64, f64, f64)>> {
             };
             c.epochs = 1;
             c.seed = 7_000 + seed;
-            let mut tr = Trainer::new(c)?;
-            let m_rows = tr.ds.rows() as f64;
-            let res = tr.run();
-            costs.push(res.trace.points.last().unwrap().cost / m_rows);
-            sum_q += res.epochs[0].q.iter().sum::<usize>();
+            cfgs.push(c);
         }
+    }
+    let results =
+        crate::sweep::runner::run_results(&cfgs, crate::sweep::runner::default_threads(), None)?;
+    let mut rows = Vec::new();
+    for (chunk, cfg_chunk) in results.chunks(SEEDS as usize).zip(cfgs.chunks(SEEDS as usize)) {
+        let costs: Vec<f64> = chunk
+            .iter()
+            .zip(cfg_chunk)
+            .map(|(r, c)| r.trace.points.last().unwrap().cost / c.data.rows() as f64)
+            .collect();
+        let sum_q: usize = chunk.iter().map(|r| r.epochs[0].q.iter().sum::<usize>()).sum();
         let mean = costs.iter().sum::<f64>() / costs.len() as f64;
         let var = costs.iter().map(|c| (c - mean).powi(2)).sum::<f64>() / costs.len() as f64;
-        let q_avg = sum_q as f64 / 16.0;
+        let q_avg = sum_q as f64 / SEEDS as f64;
         rows.push((q_avg, var, var * q_avg));
     }
     Ok(rows)
@@ -229,12 +246,11 @@ pub fn variance_decay(o: &FigOpts) -> Result<Vec<(f64, f64, f64)>> {
 pub fn async_compare(o: &FigOpts) -> Result<Figure> {
     let ds = shared_dataset("fig3-anytime", o)?;
     let mut fig = Figure::new("async_vs_anytime", "time");
-    fig.traces.push(run_on(&ds, "fig3-anytime", o)?);
     let mut c = cfg("fig3-anytime", o)?;
     c.name = "async".into();
     // Same per-epoch horizon as anytime's T+comm so time axes align.
     c.method = crate::config::MethodSpec::AsyncSgd { steps_per_update: 16, horizon: 202.0 };
-    fig.traces.push(Trainer::with_dataset(c, ds)?.run().trace);
+    fig.traces.extend(run_cfgs_on(&ds, &[cfg("fig3-anytime", o)?, c])?);
     Ok(fig)
 }
 
@@ -243,8 +259,7 @@ pub fn async_compare(o: &FigOpts) -> Result<Figure> {
 pub fn logreg_figure(o: &FigOpts) -> Result<Figure> {
     let ds = shared_dataset("logreg-anytime", o)?;
     let mut fig = Figure::new("logreg_anytime_vs_sync", "time");
-    fig.traces.push(run_on(&ds, "logreg-anytime", o)?);
-    fig.traces.push(run_on(&ds, "logreg-sync", o)?);
+    fig.traces.extend(run_many(&ds, &["logreg-anytime", "logreg-sync"], o)?);
     Ok(fig)
 }
 
@@ -280,18 +295,17 @@ pub fn ablations(o: &FigOpts) -> Result<Vec<Figure>> {
         let mut c1 = base.clone();
         c1.name = "anytime-s1".into();
         c1.redundancy = 1;
-        fig.traces.push(Trainer::with_dataset(c1, ds.clone())?.run().trace);
 
         // FNB S=0 (loses worker 0's unique block)
         let mut c2 = base.clone();
         c2.name = "fnb-s0".into();
         c2.method = crate::config::MethodSpec::Fnb { steps_per_epoch: 156, b: 2 };
-        fig.traces.push(Trainer::with_dataset(c2, ds.clone())?.run().trace);
 
         // anytime S=0 (also loses the block — shows S matters, not method)
         let mut c3 = base.clone();
         c3.name = "anytime-s0".into();
-        fig.traces.push(Trainer::with_dataset(c3, ds)?.run().trace);
+
+        fig.traces.extend(run_cfgs_on(&ds, &[c1, c2, c3])?);
         figs.push(fig);
     }
 
@@ -299,6 +313,7 @@ pub fn ablations(o: &FigOpts) -> Result<Vec<Figure>> {
     {
         let ds = shared_dataset("fig3-anytime", o)?;
         let mut fig = Figure::new("ablation_t_sweep", "time");
+        let mut cfgs = Vec::new();
         for t in [50.0, 100.0, 200.0, 400.0] {
             let mut c = cfg("fig3-anytime", o)?;
             c.name = format!("T={t}");
@@ -307,8 +322,9 @@ pub fn ablations(o: &FigOpts) -> Result<Vec<Figure>> {
                 combine: crate::config::CombinePolicy::Proportional,
                 iterate: crate::config::Iterate::Last,
             };
-            fig.traces.push(Trainer::with_dataset(c, ds.clone())?.run().trace);
+            cfgs.push(c);
         }
+        fig.traces.extend(run_cfgs_on(&ds, &cfgs)?);
         figs.push(fig);
     }
 
@@ -316,6 +332,7 @@ pub fn ablations(o: &FigOpts) -> Result<Vec<Figure>> {
     {
         let ds = shared_dataset("fig3-anytime", o)?;
         let mut fig = Figure::new("ablation_lambda_policy", "epoch");
+        let mut cfgs = Vec::new();
         for (name, p) in [
             ("proportional", crate::config::CombinePolicy::Proportional),
             ("uniform", crate::config::CombinePolicy::Uniform),
@@ -328,22 +345,27 @@ pub fn ablations(o: &FigOpts) -> Result<Vec<Figure>> {
                 combine: p,
                 iterate: crate::config::Iterate::Last,
             };
-            fig.traces.push(Trainer::with_dataset(c, ds.clone())?.run().trace);
+            cfgs.push(c);
         }
+        fig.traces.extend(run_cfgs_on(&ds, &cfgs)?);
         figs.push(fig);
     }
 
     // (d) S sweep under non-persistent stragglers: redundancy buys
-    // robustness without hurting convergence.
+    // robustness without hurting convergence. Each arm rebuilds its
+    // shards, so the cells run dataset-independent.
     {
         let mut fig = Figure::new("ablation_s_sweep", "time");
+        let mut cfgs = Vec::new();
         for s in [0usize, 1, 2, 4] {
             let mut c = cfg("fig4-anytime", o)?;
             c.name = format!("S={s}");
             c.redundancy = s;
-            // Rebuild per-S (shard shapes change).
-            fig.traces.push(Trainer::new(c)?.run().trace);
+            cfgs.push(c);
         }
+        let results =
+            crate::sweep::runner::run_results(&cfgs, crate::sweep::runner::default_threads(), None)?;
+        fig.traces.extend(results.into_iter().map(|r| r.trace));
         figs.push(fig);
     }
 
@@ -351,6 +373,7 @@ pub fn ablations(o: &FigOpts) -> Result<Vec<Figure>> {
     {
         let ds = shared_dataset("fig3-anytime", o)?;
         let mut fig = Figure::new("ablation_iterate", "epoch");
+        let mut cfgs = Vec::new();
         for (name, it) in [
             ("last", crate::config::Iterate::Last),
             ("average", crate::config::Iterate::Average),
@@ -362,8 +385,9 @@ pub fn ablations(o: &FigOpts) -> Result<Vec<Figure>> {
                 combine: crate::config::CombinePolicy::Proportional,
                 iterate: it,
             };
-            fig.traces.push(Trainer::with_dataset(c, ds.clone())?.run().trace);
+            cfgs.push(c);
         }
+        fig.traces.extend(run_cfgs_on(&ds, &cfgs)?);
         figs.push(fig);
     }
 

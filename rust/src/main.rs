@@ -2,10 +2,17 @@
 //!
 //! Subcommands:
 //! * `train`     — run one configuration (preset, JSON file, or flags).
+//! * `sweep`     — run an experiment campaign: a parameter grid ×
+//!                 scenario library × seeds, executed in parallel and
+//!                 aggregated to mean ± CI curves under `results/`.
 //! * `figures`   — regenerate the paper's figures (fig1..fig6, theory,
 //!                 ablations, all); writes CSV/JSON under `results/`.
 //! * `partition` — print Table I for any (N, S) and validate it.
 //! * `inspect`   — list the AOT artifacts the runtime would load.
+
+// Mirrors the crate-root posture: correctness/suspicious/perf lints are
+// load-bearing in CI; style/complexity churn is settled here.
+#![allow(clippy::style, clippy::complexity)]
 
 use anyhow::{bail, Result};
 use anytime_sgd::cli::{Command, FlagKind};
@@ -30,6 +37,8 @@ fn usage() -> String {
     "anytime-sgd — Anytime Stochastic Gradient Descent (Ferdinand & Draper '18)\n\n\
      Subcommands:\n\
        train      run one configuration\n\
+       sweep      run an experiment campaign (grid x scenarios x seeds,\n\
+                  parallel; mean ± CI aggregates under results/)\n\
        figures    regenerate paper figures (fig1..fig6 | theory | ablations |\n\
                   variance | async | logreg | all)\n\
        partition  print + validate the Table-I data assignment\n\
@@ -46,6 +55,7 @@ fn dispatch(args: &[String]) -> Result<()> {
     let rest = &args[1..];
     match sub.as_str() {
         "train" => cmd_train(rest),
+        "sweep" => cmd_sweep(rest),
         "figures" => cmd_figures(rest),
         "partition" => cmd_partition(rest),
         "inspect" => cmd_inspect(rest),
@@ -135,6 +145,53 @@ fn cmd_train(args: &[String]) -> Result<()> {
     fig.traces.push(res.trace);
     let path = fig.write(Path::new(&m.str_of("out")))?;
     eprintln!("trace written to {}", path.display());
+    Ok(())
+}
+
+fn cmd_sweep(args: &[String]) -> Result<()> {
+    let cmd = anytime_sgd::sweep::cli_command();
+    let m = cmd.parse(args).map_err(|e| anyhow::anyhow!("{e}"))?;
+
+    let grid = if let Some(path) = m.get("spec") {
+        let text = std::fs::read_to_string(path)?;
+        let v = anytime_sgd::ser::parse(&text).map_err(|e| anyhow::anyhow!("{path}: {e}"))?;
+        let mut g = anytime_sgd::sweep::Grid::from_json(&v)?;
+        if m.is_set("epochs") {
+            g.base.epochs = m.usize_of("epochs");
+        }
+        g
+    } else {
+        anytime_sgd::sweep::grid_from_matches(&m)?
+    };
+
+    let cells = grid.expand()?;
+    let threads = anytime_sgd::sweep::resolve_threads(m.usize_of("threads"));
+    eprintln!(
+        "sweep `{}`: {} cells in {} groups ({} scenarios x {} methods, {} seeds) on {threads} threads",
+        m.str_of("name"),
+        cells.len(),
+        grid.groups(),
+        grid.scenarios.len(),
+        grid.methods.len(),
+        grid.seeds.len(),
+    );
+
+    let t0 = std::time::Instant::now();
+    let results = anytime_sgd::sweep::run_cells(&cells, threads)?;
+    let dt = t0.elapsed().as_secs_f64();
+    eprintln!(
+        "ran {} cells in {:.2}s ({:.2} cells/s)",
+        results.len(),
+        dt,
+        results.len() as f64 / dt.max(1e-9)
+    );
+
+    let agg = anytime_sgd::sweep::aggregate(&m.str_of("name"), &results);
+    print!("{}", agg.render_summary());
+    let out = std::path::PathBuf::from(m.str_of("out"));
+    for p in agg.write(&out)? {
+        eprintln!("-> {}", p.display());
+    }
     Ok(())
 }
 

@@ -55,6 +55,19 @@ impl EventLog {
             ("lambda", Value::nums(&stats.lambda.iter().map(|&l| l).collect::<Vec<f64>>())),
             ("compute_secs", stats.compute_secs.into()),
             ("comm_secs", stats.comm_secs.into()),
+            (
+                "worker_finish",
+                Value::Arr(
+                    stats
+                        .worker_finish
+                        .iter()
+                        .map(|f| match f {
+                            Some(t) => Value::Num(*t),
+                            None => Value::Null,
+                        })
+                        .collect(),
+                ),
+            ),
         ]))
     }
 
@@ -99,6 +112,7 @@ mod tests {
                 compute_secs: 20.0,
                 comm_secs: 2.0,
                 lambda: vec![0.66, 0.0, 0.34],
+                worker_finish: vec![Some(20.5), None, Some(21.0)],
             };
             log.epoch(0, &stats, 22.0).unwrap();
             log.eval(0, 0.5, 123.0).unwrap();
@@ -115,6 +129,10 @@ mod tests {
         let epoch = crate::ser::parse(lines[1]).unwrap();
         assert_eq!(epoch.get_str("event"), Some("epoch"));
         assert_eq!(epoch.get("q").unwrap().as_arr().unwrap().len(), 3);
+        let wf = epoch.get("worker_finish").unwrap().as_arr().unwrap();
+        assert_eq!(wf.len(), 3);
+        assert_eq!(wf[0].as_f64(), Some(20.5));
+        assert_eq!(wf[1], crate::ser::Value::Null);
         std::fs::remove_file(path).ok();
     }
 }

@@ -1,16 +1,23 @@
 //! PJRT runtime: load AOT HLO-text artifacts and execute them.
 //!
-//! This is the only module that touches the `xla` crate. Flow:
+//! The manifest half of this module (what artifacts exist, their
+//! argument order, shapes and dtypes) is dependency-free and always
+//! compiled — the CLI's `inspect` subcommand uses it. The engine half
+//! ([`Engine`], [`DeviceBuf`], [`HostTensor`]) is the only code in the
+//! crate that touches the `xla` bindings and is gated behind the `xla`
+//! cargo feature so offline/native-only builds succeed.
+//!
+//! Engine flow (feature `xla`):
 //!
 //! 1. [`Manifest::load`] reads `artifacts/manifest.json` (written by
 //!    `python/compile/aot.py`) — the source of truth for each program's
 //!    argument order, shapes and dtypes.
-//! 2. [`Engine::new`] creates the PJRT CPU client; [`Engine::executable`]
+//! 2. `Engine::new` creates the PJRT CPU client; `Engine::executable`
 //!    compiles an artifact on first use and caches the
 //!    `PjRtLoadedExecutable` (compilation is ~10-100 ms; the hot loop
 //!    never recompiles).
 //! 3. Hot-path data (a worker's shard) is uploaded once via
-//!    [`Engine::upload_f32`] and reused by handle across thousands of
+//!    `Engine::upload_f32` and reused by handle across thousands of
 //!    `execute_b` calls — no per-step host→device copies of the data.
 //!
 //! Interchange is HLO *text* (`HloModuleProto::from_text_file`): jax ≥0.5
@@ -21,209 +28,8 @@ mod manifest;
 
 pub use manifest::{ArtifactInfo, IoSpec, Manifest};
 
-use anyhow::{anyhow, bail, Context, Result};
-use std::collections::HashMap;
-use std::path::{Path, PathBuf};
-use std::sync::Mutex;
+#[cfg(feature = "xla")]
+mod engine;
 
-/// A loaded PJRT engine over one artifacts directory.
-///
-/// Thread-safety: `xla::PjRtClient` and executables are internally
-/// reference-counted; the executable cache is guarded by a mutex. Worker
-/// threads share one `Engine` via `Arc`.
-pub struct Engine {
-    client: xla::PjRtClient,
-    dir: PathBuf,
-    manifest: Manifest,
-    cache: Mutex<HashMap<String, std::sync::Arc<xla::PjRtLoadedExecutable>>>,
-}
-
-/// A device-resident input (uploaded once, reused per call).
-pub struct DeviceBuf {
-    buf: xla::PjRtBuffer,
-}
-
-/// One output tensor copied back to the host.
-#[derive(Clone, Debug)]
-pub struct HostTensor {
-    pub shape: Vec<usize>,
-    pub data: Vec<f32>,
-}
-
-impl Engine {
-    /// Open the artifacts directory (must contain `manifest.json`).
-    pub fn new(dir: impl AsRef<Path>) -> Result<Self> {
-        let dir = dir.as_ref().to_path_buf();
-        let manifest = Manifest::load(&dir.join("manifest.json"))
-            .with_context(|| format!("loading manifest from {}", dir.display()))?;
-        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e:?}"))?;
-        Ok(Self { client, dir, manifest, cache: Mutex::new(HashMap::new()) })
-    }
-
-    /// The manifest describing all artifacts.
-    pub fn manifest(&self) -> &Manifest {
-        &self.manifest
-    }
-
-    /// Compile (or fetch cached) the named artifact.
-    pub fn executable(&self, name: &str) -> Result<std::sync::Arc<xla::PjRtLoadedExecutable>> {
-        if let Some(exe) = self.cache.lock().unwrap().get(name) {
-            return Ok(exe.clone());
-        }
-        let info = self
-            .manifest
-            .get(name)
-            .ok_or_else(|| anyhow!("artifact `{name}` not in manifest"))?;
-        let path = self.dir.join(&info.file);
-        let proto = xla::HloModuleProto::from_text_file(&path)
-            .map_err(|e| anyhow!("parsing {}: {e:?}", path.display()))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .map_err(|e| anyhow!("compiling {name}: {e:?}"))?;
-        let exe = std::sync::Arc::new(exe);
-        self.cache.lock().unwrap().insert(name.to_string(), exe.clone());
-        Ok(exe)
-    }
-
-    /// Pre-compile every artifact of a given kind (warm start).
-    pub fn warm(&self, kind: &str) -> Result<usize> {
-        let names: Vec<String> = self
-            .manifest
-            .artifacts
-            .iter()
-            .filter(|a| a.kind == kind)
-            .map(|a| a.name.clone())
-            .collect();
-        for n in &names {
-            self.executable(n)?;
-        }
-        Ok(names.len())
-    }
-
-    /// Upload an f32 tensor to the device (resident until dropped).
-    pub fn upload_f32(&self, data: &[f32], dims: &[usize]) -> Result<DeviceBuf> {
-        let buf = self
-            .client
-            .buffer_from_host_buffer::<f32>(data, dims, None)
-            .map_err(|e| anyhow!("upload f32 {dims:?}: {e:?}"))?;
-        Ok(DeviceBuf { buf })
-    }
-
-    /// Upload an i32 tensor to the device.
-    pub fn upload_i32(&self, data: &[i32], dims: &[usize]) -> Result<DeviceBuf> {
-        let buf = self
-            .client
-            .buffer_from_host_buffer::<i32>(data, dims, None)
-            .map_err(|e| anyhow!("upload i32 {dims:?}: {e:?}"))?;
-        Ok(DeviceBuf { buf })
-    }
-
-    /// Execute by artifact name over device-resident inputs.
-    ///
-    /// Returns every output of the program's result tuple, copied back
-    /// to host f32 tensors (outputs of all shipped programs are f32
-    /// except `lm_step`'s loss, also f32).
-    pub fn exec(&self, name: &str, args: &[&DeviceBuf]) -> Result<Vec<HostTensor>> {
-        let exe = self.executable(name)?;
-        let bufs: Vec<&xla::PjRtBuffer> = args.iter().map(|a| &a.buf).collect();
-        let out = exe.execute_b(&bufs).map_err(|e| anyhow!("execute {name}: {e:?}"))?;
-        let tuple = out
-            .first()
-            .and_then(|d| d.first())
-            .ok_or_else(|| anyhow!("{name}: no output buffer"))?;
-        let lit = tuple.to_literal_sync().map_err(|e| anyhow!("{name} to_literal: {e:?}"))?;
-        // Lowering uses return_tuple=True: single tuple-shaped output.
-        let parts = lit.to_tuple().map_err(|e| anyhow!("{name} untuple: {e:?}"))?;
-        let mut outs = Vec::with_capacity(parts.len());
-        for (i, p) in parts.into_iter().enumerate() {
-            let shape = p
-                .array_shape()
-                .map_err(|e| anyhow!("{name} out[{i}] shape: {e:?}"))?;
-            let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
-            let data = p
-                .to_vec::<f32>()
-                .map_err(|e| anyhow!("{name} out[{i}] to_vec: {e:?}"))?;
-            outs.push(HostTensor { shape: dims, data });
-        }
-        Ok(outs)
-    }
-
-    /// Find the linreg step artifacts for a shard shape.
-    pub fn find_linreg_steps(&self, rows: usize, dim: usize) -> Result<(Vec<(usize, String)>, usize)> {
-        self.find_step_blocks("linreg_step", rows, dim)
-    }
-
-    /// Find the K-step block artifacts of `kind` ("linreg_step" /
-    /// "logreg_step") for a shard shape.
-    ///
-    /// Returns the available block sizes as (k, name) sorted descending
-    /// (the worker composes arbitrary q greedily from these) plus the
-    /// batch size; errors if no K=1 artifact exists (required to realize
-    /// every q exactly).
-    pub fn find_step_blocks(
-        &self,
-        kind: &str,
-        rows: usize,
-        dim: usize,
-    ) -> Result<(Vec<(usize, String)>, usize)> {
-        let mut ks: Vec<(usize, String)> = Vec::new();
-        let mut batch = None;
-        for a in &self.manifest.artifacts {
-            if a.kind != kind {
-                continue;
-            }
-            let (r, d) = (a.params.get_usize("rows"), a.params.get_usize("dim"));
-            if r == Some(rows) && d == Some(dim) {
-                batch = a.params.get_usize("batch");
-                if let Some(k) = a.params.get_usize("k") {
-                    ks.push((k, a.name.clone()));
-                }
-            }
-        }
-        ks.sort_by(|a, b| b.0.cmp(&a.0));
-        match batch {
-            Some(b) if ks.iter().any(|(k, _)| *k == 1) => Ok((ks, b)),
-            _ => bail!(
-                "no usable {kind} artifacts for rows={rows} dim={dim} (need K=1); \
-                 re-run `make artifacts` with a matching spec (have: {})",
-                self.manifest
-                    .artifacts
-                    .iter()
-                    .filter(|a| a.kind == kind)
-                    .map(|a| a.name.as_str())
-                    .collect::<Vec<_>>()
-                    .join(", ")
-            ),
-        }
-    }
-}
-
-#[cfg(test)]
-mod tests {
-    use super::*;
-
-    fn artifacts_dir() -> Option<PathBuf> {
-        let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
-        dir.join("manifest.json").exists().then_some(dir)
-    }
-
-    /// Most runtime tests live in `rust/tests/xla_runtime.rs` (they need
-    /// built artifacts); here we only check graceful failure paths.
-    #[test]
-    fn missing_dir_errors() {
-        assert!(Engine::new("/definitely/not/a/dir").is_err());
-    }
-
-    #[test]
-    fn unknown_artifact_errors() {
-        let Some(dir) = artifacts_dir() else { return };
-        let eng = Engine::new(dir).unwrap();
-        let err = match eng.executable("nope") {
-            Err(e) => e.to_string(),
-            Ok(_) => panic!("unknown artifact should error"),
-        };
-        assert!(err.contains("not in manifest"), "{err}");
-    }
-}
+#[cfg(feature = "xla")]
+pub use engine::{DeviceBuf, Engine, HostTensor};

@@ -1,0 +1,363 @@
+//! Multi-seed aggregation: collapse a sweep's cell results into
+//! mean ± 95% CI convergence curves per group, rank methods within each
+//! scenario, and emit the campaign artifacts (CSV + JSON + summary)
+//! under `results/`.
+//!
+//! Determinism contract: grouping preserves first-seen cell order (which
+//! [`crate::sweep::Grid::expand`] fixes), every statistic folds seeds in
+//! that order, and all floats print with fixed `{:.6e}` formatting — so
+//! the emitted bytes are identical across runs and thread counts.
+
+use crate::ser::Value;
+use crate::sweep::runner::CellResult;
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+use std::path::{Path, PathBuf};
+
+/// One aggregated evaluation point (across the group's seeds).
+#[derive(Clone, Debug)]
+pub struct AggPoint {
+    pub epoch: usize,
+    pub time_mean: f64,
+    pub err_mean: f64,
+    /// Half-width of the 95% confidence interval on `err_mean`
+    /// (1.96 σ/√n; 0 when the group has a single seed).
+    pub err_ci95: f64,
+    pub cost_mean: f64,
+}
+
+/// One group's aggregated curve (= one grid point, all seeds).
+#[derive(Clone, Debug)]
+pub struct GroupAgg {
+    pub group: String,
+    pub scenario: String,
+    pub method: String,
+    pub n_seeds: usize,
+    pub points: Vec<AggPoint>,
+    pub final_err_mean: f64,
+    pub final_err_ci95: f64,
+}
+
+/// A fully-aggregated sweep.
+#[derive(Clone, Debug)]
+pub struct Aggregate {
+    pub name: String,
+    pub groups: Vec<GroupAgg>,
+}
+
+/// Sample mean and 95% CI half-width (normal approximation).
+pub fn mean_ci95(xs: &[f64]) -> (f64, f64) {
+    if xs.is_empty() {
+        return (f64::NAN, 0.0);
+    }
+    let n = xs.len() as f64;
+    let mean = xs.iter().sum::<f64>() / n;
+    if xs.len() < 2 {
+        return (mean, 0.0);
+    }
+    let var = xs.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / (n - 1.0);
+    (mean, 1.96 * (var / n).sqrt())
+}
+
+/// Aggregate cell results into per-group mean ± CI curves.
+///
+/// Cells sharing a `group` key (same grid point, different seeds) are
+/// folded point-by-point; traces are truncated to the group's shortest
+/// trace (they only differ if a config varies `eval_every`, which the
+/// grid does not).
+pub fn aggregate(name: &str, results: &[CellResult]) -> Aggregate {
+    let mut order: Vec<&str> = Vec::new();
+    let mut by: BTreeMap<&str, Vec<&CellResult>> = BTreeMap::new();
+    for r in results {
+        let k = r.cell.group.as_str();
+        if !by.contains_key(k) {
+            order.push(k);
+        }
+        by.entry(k).or_default().push(r);
+    }
+    let mut groups = Vec::with_capacity(order.len());
+    for k in order {
+        let cells = &by[k];
+        let npts = cells.iter().map(|c| c.trace.points.len()).min().unwrap_or(0);
+        let mut points = Vec::with_capacity(npts);
+        for i in 0..npts {
+            let times: Vec<f64> = cells.iter().map(|c| c.trace.points[i].time).collect();
+            let errs: Vec<f64> = cells.iter().map(|c| c.trace.points[i].norm_err).collect();
+            let costs: Vec<f64> = cells.iter().map(|c| c.trace.points[i].cost).collect();
+            let (time_mean, _) = mean_ci95(&times);
+            let (err_mean, err_ci95) = mean_ci95(&errs);
+            let (cost_mean, _) = mean_ci95(&costs);
+            points.push(AggPoint {
+                epoch: cells[0].trace.points[i].epoch,
+                time_mean,
+                err_mean,
+                err_ci95,
+                cost_mean,
+            });
+        }
+        let (final_err_mean, final_err_ci95) =
+            points.last().map(|p| (p.err_mean, p.err_ci95)).unwrap_or((f64::INFINITY, 0.0));
+        groups.push(GroupAgg {
+            group: k.to_string(),
+            scenario: cells[0].cell.scenario.clone(),
+            method: cells[0].cell.method.clone(),
+            n_seeds: cells.len(),
+            points,
+            final_err_mean,
+            final_err_ci95,
+        });
+    }
+    Aggregate { name: name.to_string(), groups }
+}
+
+impl Aggregate {
+    /// Scenario names in first-seen order.
+    fn scenario_order(&self) -> Vec<&str> {
+        let mut out: Vec<&str> = Vec::new();
+        for g in &self.groups {
+            if !out.contains(&g.scenario.as_str()) {
+                out.push(&g.scenario);
+            }
+        }
+        out
+    }
+
+    /// Groups of one scenario, ranked by final mean error (ascending);
+    /// ties break on group name for determinism.
+    fn ranked(&self, scenario: &str) -> Vec<&GroupAgg> {
+        let mut gs: Vec<&GroupAgg> =
+            self.groups.iter().filter(|g| g.scenario == scenario).collect();
+        gs.sort_by(|a, b| {
+            a.final_err_mean
+                .partial_cmp(&b.final_err_mean)
+                .unwrap_or(std::cmp::Ordering::Equal)
+                .then_with(|| a.group.cmp(&b.group))
+        });
+        gs
+    }
+
+    /// The winning group per scenario (lowest final mean error).
+    pub fn winners(&self) -> Vec<(&str, &GroupAgg)> {
+        self.scenario_order()
+            .into_iter()
+            .filter_map(|sc| self.ranked(sc).first().copied().map(|g| (sc, g)))
+            .collect()
+    }
+
+    /// Full curve CSV: one row per (group, eval point).
+    pub fn to_csv(&self) -> String {
+        let mut out =
+            String::from("group,scenario,method,n_seeds,epoch,time_mean,err_mean,err_ci95,cost_mean\n");
+        for g in &self.groups {
+            for p in &g.points {
+                let _ = writeln!(
+                    out,
+                    "{},{},{},{},{},{:.6e},{:.6e},{:.6e},{:.6e}",
+                    g.group,
+                    g.scenario,
+                    g.method,
+                    g.n_seeds,
+                    p.epoch,
+                    p.time_mean,
+                    p.err_mean,
+                    p.err_ci95,
+                    p.cost_mean
+                );
+            }
+        }
+        out
+    }
+
+    /// Winner-per-scenario summary CSV: every group ranked within its
+    /// scenario.
+    pub fn summary_csv(&self) -> String {
+        let mut out =
+            String::from("scenario,rank,group,method,n_seeds,final_err_mean,final_err_ci95\n");
+        for sc in self.scenario_order() {
+            for (rank, g) in self.ranked(sc).iter().enumerate() {
+                let _ = writeln!(
+                    out,
+                    "{},{},{},{},{},{:.6e},{:.6e}",
+                    sc,
+                    rank + 1,
+                    g.group,
+                    g.method,
+                    g.n_seeds,
+                    g.final_err_mean,
+                    g.final_err_ci95
+                );
+            }
+        }
+        out
+    }
+
+    /// JSON dump (stable key order via `ser::Value`).
+    pub fn to_json(&self) -> Value {
+        Value::obj(vec![
+            ("name", self.name.as_str().into()),
+            (
+                "groups",
+                Value::Arr(
+                    self.groups
+                        .iter()
+                        .map(|g| {
+                            Value::obj(vec![
+                                ("group", g.group.as_str().into()),
+                                ("scenario", g.scenario.as_str().into()),
+                                ("method", g.method.as_str().into()),
+                                ("n_seeds", g.n_seeds.into()),
+                                ("final_err_mean", g.final_err_mean.into()),
+                                ("final_err_ci95", g.final_err_ci95.into()),
+                                (
+                                    "points",
+                                    Value::Arr(
+                                        g.points
+                                            .iter()
+                                            .map(|p| {
+                                                Value::obj(vec![
+                                                    ("epoch", p.epoch.into()),
+                                                    ("time_mean", p.time_mean.into()),
+                                                    ("err_mean", p.err_mean.into()),
+                                                    ("err_ci95", p.err_ci95.into()),
+                                                    ("cost_mean", p.cost_mean.into()),
+                                                ])
+                                            })
+                                            .collect(),
+                                    ),
+                                ),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    /// Terminal summary: per scenario, the ranked methods with their
+    /// final mean ± CI errors.
+    pub fn render_summary(&self) -> String {
+        let mut out = String::new();
+        let _ = writeln!(out, "== sweep `{}`: {} groups ==", self.name, self.groups.len());
+        for sc in self.scenario_order() {
+            let _ = writeln!(out, "scenario {sc}:");
+            for (rank, g) in self.ranked(sc).iter().enumerate() {
+                let marker = if rank == 0 { "*" } else { " " };
+                let _ = writeln!(
+                    out,
+                    "  {marker} {:<32} final err {:>11.4e} ± {:>9.3e}  ({} seeds)",
+                    g.group, g.final_err_mean, g.final_err_ci95, g.n_seeds
+                );
+            }
+        }
+        out
+    }
+
+    /// Write `<dir>/sweep_<name>.csv`, `.json`, and
+    /// `<dir>/sweep_<name>_summary.csv`; returns the paths.
+    pub fn write(&self, dir: &Path) -> std::io::Result<Vec<PathBuf>> {
+        std::fs::create_dir_all(dir)?;
+        let csv = dir.join(format!("sweep_{}.csv", self.name));
+        std::fs::write(&csv, self.to_csv())?;
+        let json = dir.join(format!("sweep_{}.json", self.name));
+        std::fs::write(&json, crate::ser::to_string_pretty(&self.to_json()))?;
+        let summary = dir.join(format!("sweep_{}_summary.csv", self.name));
+        std::fs::write(&summary, self.summary_csv())?;
+        Ok(vec![csv, json, summary])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::{Trace, TracePoint};
+    use crate::sweep::grid::Cell;
+
+    fn cell_result(scenario: &str, method: &str, seed: u64, errs: &[f64]) -> CellResult {
+        let mut trace = Trace::new(format!("{scenario}/{method}/seed{seed}"));
+        for (i, &e) in errs.iter().enumerate() {
+            trace.points.push(TracePoint {
+                epoch: i,
+                time: 10.0 * i as f64,
+                norm_err: e,
+                cost: e * 2.0,
+                total_q: 100,
+            });
+        }
+        let mut cfg = crate::sweep::sweep_base();
+        cfg.seed = seed;
+        CellResult {
+            cell: Cell {
+                scenario: scenario.into(),
+                method: method.into(),
+                seed,
+                group: format!("{scenario}/{method}"),
+                cfg,
+            },
+            trace,
+            initial_err: errs.first().copied().unwrap_or(1.0),
+        }
+    }
+
+    #[test]
+    fn mean_ci_basic() {
+        let (m, ci) = mean_ci95(&[1.0, 2.0, 3.0]);
+        assert!((m - 2.0).abs() < 1e-12);
+        // sd = 1, ci = 1.96 / sqrt(3).
+        assert!((ci - 1.96 / 3.0f64.sqrt()).abs() < 1e-12);
+        let (m1, ci1) = mean_ci95(&[5.0]);
+        assert_eq!((m1, ci1), (5.0, 0.0));
+    }
+
+    #[test]
+    fn groups_fold_across_seeds_only() {
+        let results = vec![
+            cell_result("ec2", "anytime", 0, &[1.0, 0.4]),
+            cell_result("ec2", "anytime", 1, &[1.0, 0.6]),
+            cell_result("ec2", "sync", 0, &[1.0, 0.9]),
+            cell_result("ec2", "sync", 1, &[1.0, 0.7]),
+        ];
+        let agg = aggregate("t", &results);
+        assert_eq!(agg.groups.len(), 2);
+        let any = &agg.groups[0];
+        assert_eq!(any.group, "ec2/anytime");
+        assert_eq!(any.n_seeds, 2);
+        assert!((any.final_err_mean - 0.5).abs() < 1e-12);
+        assert!(any.final_err_ci95 > 0.0);
+        // Winner: anytime (0.5 < 0.8).
+        let winners = agg.winners();
+        assert_eq!(winners.len(), 1);
+        assert_eq!(winners[0].1.method, "anytime");
+        // Summary ranks both.
+        let summary = agg.summary_csv();
+        assert!(summary.contains("ec2,1,ec2/anytime"), "{summary}");
+        assert!(summary.contains("ec2,2,ec2/sync"), "{summary}");
+    }
+
+    #[test]
+    fn csv_shape_and_determinism() {
+        let results = vec![
+            cell_result("ideal", "anytime", 0, &[1.0, 0.5, 0.2]),
+            cell_result("ideal", "anytime", 1, &[1.0, 0.5, 0.3]),
+        ];
+        let a = aggregate("x", &results).to_csv();
+        let b = aggregate("x", &results).to_csv();
+        assert_eq!(a, b);
+        assert_eq!(a.lines().count(), 1 + 3);
+        assert!(a.starts_with("group,scenario,method"));
+    }
+
+    #[test]
+    fn write_emits_three_files() {
+        let dir = std::env::temp_dir().join(format!("anytime-sweep-{}", std::process::id()));
+        let agg = aggregate("unit", &[cell_result("ideal", "anytime", 0, &[1.0, 0.5])]);
+        let paths = agg.write(&dir).unwrap();
+        assert_eq!(paths.len(), 3);
+        for p in &paths {
+            assert!(p.exists(), "{}", p.display());
+        }
+        let json = std::fs::read_to_string(&paths[1]).unwrap();
+        let v = crate::ser::parse(&json).unwrap();
+        assert_eq!(v.get_str("name"), Some("unit"));
+        std::fs::remove_dir_all(dir).ok();
+    }
+}

@@ -1,0 +1,560 @@
+//! Parameter grids over [`RunConfig`]: declarative axes, a builder API,
+//! a JSON spec form, and deterministic cartesian expansion into cells.
+//!
+//! A [`Grid`] holds a base config plus per-axis value lists; empty axes
+//! mean "use the base value". [`Grid::expand`] walks the cartesian
+//! product in a fixed order (scenario → method → workers → redundancy →
+//! T → T_c → backend → seed), so cell order — and therefore every
+//! downstream aggregate — is independent of thread scheduling.
+//!
+//! Cells within one group (= every axis except `seed`) differ only in
+//! the root seed; the aggregator collapses them into mean ± CI curves.
+
+use crate::config::{Backend, CombinePolicy, Iterate, MethodSpec, RunConfig};
+use crate::ser::Value;
+use crate::sweep::scenarios;
+use anyhow::{anyhow, bail, Result};
+
+/// One fully-specified sweep cell: a runnable config plus the grouping
+/// metadata the aggregator keys on.
+#[derive(Clone, Debug)]
+pub struct Cell {
+    /// Scenario name (library entry).
+    pub scenario: String,
+    /// Method name (grid axis value, e.g. "anytime", "fnb").
+    pub method: String,
+    /// Root seed of this cell.
+    pub seed: u64,
+    /// Group key: every axis except the seed. Cells sharing a group are
+    /// aggregated into one mean ± CI curve.
+    pub group: String,
+    pub cfg: RunConfig,
+}
+
+/// A declarative parameter grid (see module docs).
+#[derive(Clone, Debug)]
+pub struct Grid {
+    /// Template config; axes override its fields per cell.
+    pub base: RunConfig,
+    /// Scenario library names (never empty).
+    pub scenarios: Vec<String>,
+    /// Method names (never empty); see [`method_for`].
+    pub methods: Vec<String>,
+    /// Worker counts N (empty = base).
+    pub workers: Vec<usize>,
+    /// Redundancy S (empty = base).
+    pub redundancy: Vec<usize>,
+    /// Anytime/generalized epoch budgets T (empty = base method's T).
+    /// Multiplies only the methods that consume a budget
+    /// ([`method_uses_t`]); step-counted baselines get one cell.
+    pub t: Vec<f64>,
+    /// Master waiting-time guards T_c (empty = base).
+    pub t_c: Vec<f64>,
+    /// Compute backends (empty = base).
+    pub backends: Vec<Backend>,
+    /// Root seeds (never empty).
+    pub seeds: Vec<u64>,
+}
+
+impl Grid {
+    /// A single-cell grid around `base` (ec2 scenario, anytime method,
+    /// base seed); grow it with the builder methods.
+    pub fn new(base: RunConfig) -> Self {
+        let seed = base.seed;
+        Self {
+            base,
+            scenarios: vec!["ec2".into()],
+            methods: vec!["anytime".into()],
+            workers: Vec::new(),
+            redundancy: Vec::new(),
+            t: Vec::new(),
+            t_c: Vec::new(),
+            backends: Vec::new(),
+            seeds: vec![seed],
+        }
+    }
+
+    pub fn scenarios<S: Into<String>>(mut self, v: impl IntoIterator<Item = S>) -> Self {
+        self.scenarios = v.into_iter().map(Into::into).collect();
+        self
+    }
+
+    pub fn methods<S: Into<String>>(mut self, v: impl IntoIterator<Item = S>) -> Self {
+        self.methods = v.into_iter().map(Into::into).collect();
+        self
+    }
+
+    pub fn workers(mut self, v: impl IntoIterator<Item = usize>) -> Self {
+        self.workers = v.into_iter().collect();
+        self
+    }
+
+    pub fn redundancy(mut self, v: impl IntoIterator<Item = usize>) -> Self {
+        self.redundancy = v.into_iter().collect();
+        self
+    }
+
+    pub fn t(mut self, v: impl IntoIterator<Item = f64>) -> Self {
+        self.t = v.into_iter().collect();
+        self
+    }
+
+    pub fn t_c(mut self, v: impl IntoIterator<Item = f64>) -> Self {
+        self.t_c = v.into_iter().collect();
+        self
+    }
+
+    pub fn backends(mut self, v: impl IntoIterator<Item = Backend>) -> Self {
+        self.backends = v.into_iter().collect();
+        self
+    }
+
+    pub fn seeds(mut self, v: impl IntoIterator<Item = u64>) -> Self {
+        self.seeds = v.into_iter().collect();
+        self
+    }
+
+    /// `n` consecutive seeds starting at the base seed.
+    pub fn seed_count(mut self, n: usize) -> Self {
+        let s0 = self.base.seed;
+        self.seeds = (0..n.max(1) as u64).map(|i| s0 + i).collect();
+        self
+    }
+
+    fn axis_len(v: usize) -> usize {
+        v.max(1)
+    }
+
+    /// Number of cells `expand` will produce (0 for grids `expand`
+    /// rejects outright). The T axis multiplies only the methods that
+    /// consume a budget — step-counted baselines (sync/fnb/gc) run one
+    /// cell per grid point regardless of `t`.
+    pub fn len(&self) -> usize {
+        if self.scenarios.is_empty() || self.methods.is_empty() || self.seeds.is_empty() {
+            return 0;
+        }
+        let method_t_cells: usize = self
+            .methods
+            .iter()
+            .map(|m| if method_uses_t(m) { self.t.len().max(1) } else { 1 })
+            .sum();
+        self.scenarios.len()
+            * method_t_cells
+            * Self::axis_len(self.workers.len())
+            * Self::axis_len(self.redundancy.len())
+            * Self::axis_len(self.t_c.len())
+            * Self::axis_len(self.backends.len())
+            * self.seeds.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Number of seed-groups (`len() / seeds`).
+    pub fn groups(&self) -> usize {
+        if self.seeds.is_empty() {
+            return 0;
+        }
+        self.len() / self.seeds.len()
+    }
+
+    /// Expand to the full cell list. Errors name the offending cell
+    /// (unknown scenario/method, invalid topology combination).
+    pub fn expand(&self) -> Result<Vec<Cell>> {
+        if self.scenarios.is_empty() {
+            bail!("grid has no scenarios");
+        }
+        if self.methods.is_empty() {
+            bail!("grid has no methods");
+        }
+        if self.seeds.is_empty() {
+            bail!("grid has no seeds");
+        }
+        let workers = or_base(&self.workers, self.base.workers);
+        let reds = or_base(&self.redundancy, self.base.redundancy);
+        let ts: Vec<Option<f64>> = if self.t.is_empty() {
+            vec![None]
+        } else {
+            self.t.iter().copied().map(Some).collect()
+        };
+        let tcs = or_base(&self.t_c, self.base.t_c);
+        let backends = or_base(&self.backends, self.base.backend);
+
+        let mut cells = Vec::with_capacity(self.len());
+        for sc in &self.scenarios {
+            for method in &self.methods {
+                // The T axis only applies to budgeted methods; for the
+                // step-counted baselines every T value would produce the
+                // same cell, so they get a single (base-T) cell instead
+                // of duplicates.
+                let ts_m: &[Option<f64>] = if method_uses_t(method) { &ts } else { &[None] };
+                for &n in &workers {
+                    for &s in &reds {
+                        for &t in ts_m {
+                            for &tc in &tcs {
+                                for &bk in &backends {
+                                    let mut group = format!("{sc}/{method}");
+                                    if workers.len() > 1 {
+                                        group.push_str(&format!("/N{n}"));
+                                    }
+                                    if reds.len() > 1 {
+                                        group.push_str(&format!("/S{s}"));
+                                    }
+                                    if let (true, Some(t)) = (ts_m.len() > 1, t) {
+                                        group.push_str(&format!("/T{t}"));
+                                    }
+                                    if tcs.len() > 1 {
+                                        group.push_str(&format!("/Tc{tc}"));
+                                    }
+                                    if backends.len() > 1 {
+                                        group.push_str(&format!("/{}", backend_name(bk)));
+                                    }
+                                    for &seed in &self.seeds {
+                                        let mut cfg = self.base.clone();
+                                        cfg.workers = n;
+                                        cfg.redundancy = s;
+                                        cfg.t_c = tc;
+                                        cfg.backend = bk;
+                                        scenarios::apply(sc, &mut cfg)?;
+                                        cfg.method = method_for(method, &cfg, t)?;
+                                        cfg.seed = seed;
+                                        cfg.name = format!("{group}/seed{seed}");
+                                        cfg.validate()
+                                            .map_err(|e| anyhow!("cell `{}`: {e}", cfg.name))?;
+                                        cells.push(Cell {
+                                            scenario: sc.clone(),
+                                            method: method.clone(),
+                                            seed,
+                                            group: group.clone(),
+                                            cfg,
+                                        });
+                                    }
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        Ok(cells)
+    }
+
+    /// Parse a grid from its JSON spec form:
+    ///
+    /// ```json
+    /// {
+    ///   "base": { ... RunConfig fields (all optional) ... },
+    ///   "scenarios": ["ec2", "ideal"],
+    ///   "methods": ["anytime", "sync", "fnb", "gc"],
+    ///   "workers": [10, 20],
+    ///   "redundancy": [0, 2],
+    ///   "t": [1.0, 2.0],
+    ///   "t_c": [1e9],
+    ///   "backends": ["native"],
+    ///   "seeds": 5            // count, or an explicit array [7, 8, 9]
+    /// }
+    /// ```
+    pub fn from_json(v: &Value) -> Result<Self> {
+        const KNOWN: &[&str] = &[
+            "base", "scenarios", "methods", "workers", "redundancy", "t", "t_c", "backends",
+            "seeds",
+        ];
+        let obj = v.as_obj().ok_or_else(|| anyhow!("sweep spec must be a JSON object"))?;
+        for key in obj.keys() {
+            if !KNOWN.contains(&key.as_str()) {
+                bail!(
+                    "sweep spec: unknown field `{key}` (known fields: {})",
+                    KNOWN.join(", ")
+                );
+            }
+        }
+        let base = match v.get("base") {
+            Some(b) => RunConfig::from_json(b)?,
+            None => crate::sweep::sweep_base(),
+        };
+        let mut g = Grid::new(base);
+        if let Some(a) = v.get("scenarios") {
+            g.scenarios = str_list(a, "scenarios")?;
+        }
+        if let Some(a) = v.get("methods") {
+            g.methods = str_list(a, "methods")?;
+        }
+        if let Some(a) = v.get("workers") {
+            g.workers = usize_list(a, "workers")?;
+        }
+        if let Some(a) = v.get("redundancy") {
+            g.redundancy = usize_list(a, "redundancy")?;
+        }
+        if let Some(a) = v.get("t") {
+            g.t = f64_list(a, "t")?;
+        }
+        if let Some(a) = v.get("t_c") {
+            g.t_c = f64_list(a, "t_c")?;
+        }
+        if let Some(a) = v.get("backends") {
+            g.backends = str_list(a, "backends")?
+                .iter()
+                .map(|s| parse_backend(s))
+                .collect::<Result<Vec<_>>>()?;
+        }
+        match v.get("seeds") {
+            Some(Value::Num(_)) => {
+                let n = v.get_usize("seeds").ok_or_else(|| anyhow!("seeds: bad count"))?;
+                g = g.seed_count(n);
+            }
+            Some(arr @ Value::Arr(_)) => {
+                g.seeds = arr
+                    .as_arr()
+                    .unwrap()
+                    .iter()
+                    .map(|x| x.as_u64().ok_or_else(|| anyhow!("seeds: bad entry")))
+                    .collect::<Result<Vec<_>>>()?;
+            }
+            Some(_) => bail!("seeds must be a count or an array"),
+            None => {}
+        }
+        Ok(g)
+    }
+}
+
+fn or_base<T: Copy>(axis: &[T], base: T) -> Vec<T> {
+    if axis.is_empty() {
+        vec![base]
+    } else {
+        axis.to_vec()
+    }
+}
+
+fn str_list(v: &Value, field: &str) -> Result<Vec<String>> {
+    v.as_arr()
+        .ok_or_else(|| anyhow!("{field} must be an array of strings"))?
+        .iter()
+        .map(|x| {
+            x.as_str().map(String::from).ok_or_else(|| anyhow!("{field}: non-string entry"))
+        })
+        .collect()
+}
+
+fn usize_list(v: &Value, field: &str) -> Result<Vec<usize>> {
+    v.as_arr()
+        .ok_or_else(|| anyhow!("{field} must be an array of integers"))?
+        .iter()
+        .map(|x| x.as_usize().ok_or_else(|| anyhow!("{field}: non-integer entry")))
+        .collect()
+}
+
+fn f64_list(v: &Value, field: &str) -> Result<Vec<f64>> {
+    v.as_arr()
+        .ok_or_else(|| anyhow!("{field} must be an array of numbers"))?
+        .iter()
+        .map(|x| x.as_f64().ok_or_else(|| anyhow!("{field}: non-number entry")))
+        .collect()
+}
+
+/// Whether a method consumes the grid's T (epoch budget) axis.
+pub fn method_uses_t(name: &str) -> bool {
+    matches!(name, "anytime" | "anytime-uniform" | "generalized" | "async")
+}
+
+/// Backend from its CLI/JSON name.
+pub fn parse_backend(s: &str) -> Result<Backend> {
+    match s {
+        "native" => Ok(Backend::Native),
+        "xla" => Ok(Backend::Xla),
+        other => bail!("unknown backend `{other}` (native|xla)"),
+    }
+}
+
+fn backend_name(b: Backend) -> &'static str {
+    match b {
+        Backend::Native => "native",
+        Backend::Xla => "xla",
+    }
+}
+
+/// Resolve a method axis value against a (scenario-applied) config.
+///
+/// Budgeted methods take the grid's `T` axis (or the base method's T);
+/// step-counted baselines derive their per-epoch step count from the
+/// paper's "fixed amount of data" contract — one pass of the worker's
+/// unique m/N block.
+pub fn method_for(name: &str, cfg: &RunConfig, t_axis: Option<f64>) -> Result<MethodSpec> {
+    let base_t = t_axis.unwrap_or(match cfg.method {
+        MethodSpec::Anytime { t, .. } | MethodSpec::Generalized { t } => t,
+        _ => 200.0,
+    });
+    let pass_steps = (cfg.data.rows() / cfg.workers.max(1) / cfg.batch.max(1)).max(1);
+    Ok(match name {
+        "anytime" => MethodSpec::Anytime {
+            t: base_t,
+            combine: CombinePolicy::Proportional,
+            iterate: Iterate::Last,
+        },
+        "anytime-uniform" => MethodSpec::Anytime {
+            t: base_t,
+            combine: CombinePolicy::Uniform,
+            iterate: Iterate::Last,
+        },
+        "generalized" => MethodSpec::Generalized { t: base_t },
+        "sync" => MethodSpec::SyncSgd { steps_per_epoch: pass_steps },
+        "fnb" => {
+            // Pan et al.'s setting: wait for the fastest ~N/5 (Fig. 4
+            // uses B = 8 of N = 10); clamp to a valid 0 <= B < N.
+            let b = (cfg.workers * 4 / 5).min(cfg.workers.saturating_sub(1));
+            MethodSpec::Fnb { steps_per_epoch: pass_steps, b }
+        }
+        "gc" | "gradient-coding" => MethodSpec::GradientCoding { lr: 0.4 },
+        "async" => MethodSpec::AsyncSgd { steps_per_update: 16, horizon: base_t },
+        other => bail!(
+            "unknown method `{other}` \
+             (anytime|anytime-uniform|generalized|sync|fnb|gc|async)"
+        ),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ser::parse;
+
+    fn tiny_base() -> RunConfig {
+        let mut c = crate::sweep::sweep_base();
+        c.data = crate::config::DataSpec::Synthetic { m: 1_200, d: 16, noise: 1e-3 };
+        c.workers = 4;
+        c.batch = 8;
+        c.epochs = 2;
+        c
+    }
+
+    #[test]
+    fn expansion_counts_match_len() {
+        let g = Grid::new(tiny_base())
+            .scenarios(["ideal", "ec2"])
+            .methods(["anytime", "sync", "fnb"])
+            .seed_count(2);
+        assert_eq!(g.len(), 12);
+        assert_eq!(g.groups(), 6);
+        let cells = g.expand().unwrap();
+        assert_eq!(cells.len(), 12);
+        // Cell names unique; groups = scenario/method pairs.
+        let mut names: Vec<_> = cells.iter().map(|c| c.cfg.name.clone()).collect();
+        names.sort();
+        names.dedup();
+        assert_eq!(names.len(), 12);
+        let mut groups: Vec<_> = cells.iter().map(|c| c.group.clone()).collect();
+        groups.sort();
+        groups.dedup();
+        assert_eq!(groups.len(), 6);
+    }
+
+    #[test]
+    fn axes_override_base_fields() {
+        let g = Grid::new(tiny_base())
+            .scenarios(["ideal"])
+            .methods(["anytime"])
+            .workers([2, 4])
+            .t([0.5, 1.0])
+            .t_c([10.0, 1e9]);
+        let cells = g.expand().unwrap();
+        assert_eq!(cells.len(), 8);
+        assert!(cells.iter().any(|c| c.cfg.workers == 2 && c.cfg.t_c == 10.0));
+        for c in &cells {
+            match c.cfg.method {
+                MethodSpec::Anytime { t, .. } => assert!(t == 0.5 || t == 1.0),
+                _ => panic!("wrong method"),
+            }
+            // Multi-value axes are encoded in the group key.
+            assert!(c.group.contains("/N"), "{}", c.group);
+            assert!(c.group.contains("/T"), "{}", c.group);
+            assert!(c.group.contains("/Tc"), "{}", c.group);
+        }
+    }
+
+    #[test]
+    fn t_axis_multiplies_only_budgeted_methods() {
+        let g = Grid::new(tiny_base())
+            .scenarios(["ideal"])
+            .methods(["anytime", "sync"])
+            .t([0.5, 1.0]);
+        // anytime × {0.5, 1.0} + sync × 1 = 3 cells.
+        assert_eq!(g.len(), 3);
+        let cells = g.expand().unwrap();
+        assert_eq!(cells.len(), 3);
+        let sync: Vec<_> = cells.iter().filter(|c| c.method == "sync").collect();
+        assert_eq!(sync.len(), 1, "sync must not be duplicated per T");
+        assert!(!sync[0].group.contains("/T"), "{}", sync[0].group);
+        let anytime: Vec<_> = cells.iter().filter(|c| c.method == "anytime").collect();
+        assert_eq!(anytime.len(), 2);
+        assert!(anytime.iter().all(|c| c.group.contains("/T")));
+        // Empty required axes make the grid empty (and expand() errors).
+        let mut g = Grid::new(tiny_base());
+        g.scenarios.clear();
+        assert!(g.is_empty());
+        assert_eq!(g.len(), 0);
+        assert!(g.expand().is_err());
+    }
+
+    #[test]
+    fn unknown_names_error() {
+        let g = Grid::new(tiny_base()).scenarios(["warp-core"]);
+        assert!(g.expand().is_err());
+        let g = Grid::new(tiny_base()).methods(["teleport"]);
+        assert!(g.expand().is_err());
+        // Invalid topology (S >= N) errors with the cell name.
+        let g = Grid::new(tiny_base()).scenarios(["ideal"]).redundancy([4]);
+        let err = g.expand().unwrap_err().to_string();
+        assert!(err.contains("cell `"), "{err}");
+    }
+
+    #[test]
+    fn method_defaults_are_sane() {
+        let cfg = tiny_base();
+        // pass = 1200 / 4 workers / batch 8 ≈ 37 steps.
+        match method_for("sync", &cfg, None).unwrap() {
+            MethodSpec::SyncSgd { steps_per_epoch } => assert_eq!(steps_per_epoch, 37),
+            _ => panic!(),
+        }
+        match method_for("fnb", &cfg, None).unwrap() {
+            MethodSpec::Fnb { b, .. } => assert_eq!(b, 3),
+            _ => panic!(),
+        }
+        // T axis overrides the budget.
+        match method_for("anytime", &cfg, Some(7.5)).unwrap() {
+            MethodSpec::Anytime { t, .. } => assert_eq!(t, 7.5),
+            _ => panic!(),
+        }
+        assert!(method_for("nope", &cfg, None).is_err());
+    }
+
+    #[test]
+    fn json_spec_parses() {
+        let v = parse(
+            r#"{
+            "base": {"workers": 4, "batch": 8, "epochs": 2,
+                     "data": {"kind": "synthetic", "m": 1200, "d": 16}},
+            "scenarios": ["ideal"],
+            "methods": ["anytime", "sync"],
+            "seeds": 3
+        }"#,
+        )
+        .unwrap();
+        let g = Grid::from_json(&v).unwrap();
+        assert_eq!(g.len(), 6);
+        assert_eq!(g.seeds.len(), 3);
+        let cells = g.expand().unwrap();
+        assert_eq!(cells.len(), 6);
+
+        let v = parse(r#"{"seeds": [5, 9]}"#).unwrap();
+        let g = Grid::from_json(&v).unwrap();
+        assert_eq!(g.seeds, vec![5, 9]);
+        assert!(Grid::from_json(&parse(r#"{"seeds": "many"}"#).unwrap()).is_err());
+        assert!(Grid::from_json(&parse(r#"{"methods": [3]}"#).unwrap()).is_err());
+        // Typoed keys are rejected, not silently ignored.
+        let err = Grid::from_json(&parse(r#"{"scenario": ["ec2"]}"#).unwrap())
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("unknown field `scenario`"), "{err}");
+        assert!(Grid::from_json(&parse(r#""not an object""#).unwrap()).is_err());
+    }
+}

@@ -1,0 +1,190 @@
+//! `sweep` — the experiment-campaign orchestrator.
+//!
+//! The paper's headline claim (fixed-time anytime SGD beats
+//! wait-for-all, fastest-(N−B), and Gradient Coding across straggler
+//! regimes) is inherently a *sweep* claim: it only shows up across many
+//! (method × environment × T × seed) combinations compared on
+//! error-vs-time curves. This subsystem is the campaign engine that
+//! produces those comparisons at scale:
+//!
+//! * [`grid`] — declarative parameter grids over [`RunConfig`] with a
+//!   builder API and a JSON spec form; deterministic cartesian
+//!   expansion into cells.
+//! * [`scenarios`] — a named library of ≥8 cluster environments
+//!   (ideal, ec2, persistent, bursty, hetero, fat-tail, churn, logreg,
+//!   msd) layered on [`crate::straggler::StragglerEnv`].
+//! * [`runner`] — executes the cells in parallel on a bounded thread
+//!   pool ([`crate::exec::scoped_map`]); each cell is an independent
+//!   deterministic [`crate::coordinator::Trainer`] run, so results are
+//!   bit-identical at any thread count.
+//! * [`aggregate`] — folds multi-seed groups into mean ± 95% CI curves
+//!   with winner-per-scenario summaries, emitted as CSV/JSON under
+//!   `results/`.
+//!
+//! CLI (`anytime-sgd sweep`):
+//!
+//! ```bash
+//! anytime-sgd sweep --scenario ec2 --methods anytime,sync,fnb,gc --seeds 5
+//! anytime-sgd sweep --scenario ideal,ec2,churn --methods anytime,sync \
+//!                   --workers 10,20 --threads 8 --name campaign
+//! anytime-sgd sweep --spec configs/sweep.json
+//! ```
+
+pub mod aggregate;
+pub mod grid;
+pub mod runner;
+pub mod scenarios;
+
+pub use aggregate::{aggregate, Aggregate};
+pub use grid::{Cell, Grid};
+pub use runner::{run_cells, CellResult};
+
+use crate::cli::{Command, FlagKind, Matches};
+use crate::config::{CombinePolicy, DataSpec, Iterate, MethodSpec, RunConfig, Schedule};
+use crate::straggler::{CommSpec, StragglerEnv};
+use anyhow::{anyhow, bail, Result};
+
+/// The sweep template config: a mid-sized synthetic regression sized so
+/// a 20+ cell campaign finishes in seconds while still exercising the
+/// straggler regimes (T = 2 s covers ~100 nominal steps against a
+/// 3-pass/150-step shard cap, so slow workers visibly under-deliver).
+pub fn sweep_base() -> RunConfig {
+    let mut c = RunConfig::base();
+    c.name = "sweep".into();
+    c.data = DataSpec::Synthetic { m: 8_000, d: 64, noise: 1e-3 };
+    c.workers = 10;
+    c.redundancy = 0;
+    c.batch = 16;
+    c.epochs = 8;
+    c.eval_every = 1;
+    c.max_passes = 3.0;
+    c.schedule = Schedule::Constant { lr: 2e-3 };
+    c.method = MethodSpec::Anytime {
+        t: 2.0,
+        combine: CombinePolicy::Proportional,
+        iterate: Iterate::Last,
+    };
+    c.env = StragglerEnv::ec2_default(0.02);
+    c.comm = CommSpec::Fixed { secs: 0.5 };
+    c.t_c = 1e9;
+    c.seed = 42;
+    c
+}
+
+/// The `sweep` subcommand's flag table (shared by `main` and the CLI
+/// tests).
+pub fn cli_command() -> Command {
+    Command::new("sweep", "run an experiment campaign (grid × scenarios × seeds)")
+        .flag("spec", FlagKind::Str, None, "JSON grid spec file (overrides the axis flags)")
+        .flag("scenario", FlagKind::Str, Some("ec2"), "comma-separated scenario names")
+        .flag(
+            "methods",
+            FlagKind::Str,
+            Some("anytime,sync,fnb,gc"),
+            "comma-separated methods (anytime|anytime-uniform|generalized|sync|fnb|gc|async)",
+        )
+        .flag("seeds", FlagKind::Int, Some("3"), "seeds per grid point (base-seed..+n)")
+        .flag("base-seed", FlagKind::Int, Some("42"), "first root seed")
+        .flag("workers", FlagKind::Str, None, "comma-separated worker counts N")
+        .flag("redundancy", FlagKind::Str, None, "comma-separated redundancy S values")
+        .flag("t", FlagKind::Str, None, "comma-separated epoch budgets T (seconds)")
+        .flag("t-c", FlagKind::Str, None, "comma-separated waiting-time guards T_c")
+        .flag("backend", FlagKind::Str, None, "comma-separated backends (native|xla)")
+        .flag("epochs", FlagKind::Int, None, "override epochs per cell")
+        .flag("threads", FlagKind::Int, Some("0"), "worker threads (0 = all cores)")
+        .flag("name", FlagKind::Str, Some("sweep"), "campaign name (output file stem)")
+        .flag("out", FlagKind::Str, Some("results"), "output directory")
+}
+
+fn split_names(s: &str) -> Vec<String> {
+    s.split(',').map(|p| p.trim().to_string()).filter(|p| !p.is_empty()).collect()
+}
+
+fn parse_num_list<T: std::str::FromStr>(s: &str, flag: &str) -> Result<Vec<T>> {
+    split_names(s)
+        .iter()
+        .map(|p| p.parse::<T>().map_err(|_| anyhow!("--{flag}: invalid value `{p}`")))
+        .collect()
+}
+
+/// Build a [`Grid`] from parsed `sweep` flags (everything except
+/// `--spec`, which `main` resolves to [`Grid::from_json`]).
+pub fn grid_from_matches(m: &Matches) -> Result<Grid> {
+    let mut base = sweep_base();
+    base.seed = m.u64_of("base-seed");
+    if m.is_set("epochs") {
+        base.epochs = m.usize_of("epochs");
+    }
+    let mut g = Grid::new(base);
+    g.scenarios = split_names(&m.str_of("scenario"));
+    g.methods = split_names(&m.str_of("methods"));
+    if g.scenarios.is_empty() {
+        bail!("--scenario: no scenarios given");
+    }
+    if g.methods.is_empty() {
+        bail!("--methods: no methods given");
+    }
+    for sc in &g.scenarios {
+        if !scenarios::exists(sc) {
+            bail!("--scenario: unknown scenario `{sc}` (available: {})", scenarios::names().join(", "));
+        }
+    }
+    for method in &g.methods {
+        // Dry-run the resolver so bad names fail at parse time.
+        grid::method_for(method, &g.base, None)?;
+    }
+    g = g.seed_count(m.usize_of("seeds").max(1));
+    if let Some(s) = m.get("workers") {
+        g.workers = parse_num_list(s, "workers")?;
+    }
+    if let Some(s) = m.get("redundancy") {
+        g.redundancy = parse_num_list(s, "redundancy")?;
+    }
+    if let Some(s) = m.get("t") {
+        g.t = parse_num_list(s, "t")?;
+    }
+    if let Some(s) = m.get("t-c") {
+        g.t_c = parse_num_list(s, "t-c")?;
+    }
+    if let Some(s) = m.get("backend") {
+        g.backends = split_names(s)
+            .iter()
+            .map(|b| grid::parse_backend(b))
+            .collect::<Result<Vec<_>>>()?;
+    }
+    Ok(g)
+}
+
+/// Resolved thread count for a `--threads` flag value (0 = all cores).
+pub fn resolve_threads(flag: usize) -> usize {
+    if flag == 0 {
+        runner::default_threads()
+    } else {
+        flag
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sweep_base_is_valid() {
+        sweep_base().validate().unwrap();
+    }
+
+    #[test]
+    fn default_flags_build_the_acceptance_grid() {
+        let m = cli_command().parse(&[]).unwrap();
+        let g = grid_from_matches(&m).unwrap();
+        // ec2 × (anytime, sync, fnb, gc) × 3 seeds.
+        assert_eq!(g.len(), 12);
+        assert_eq!(g.groups(), 4);
+    }
+
+    #[test]
+    fn resolve_threads_zero_means_all_cores() {
+        assert!(resolve_threads(0) >= 1);
+        assert_eq!(resolve_threads(7), 7);
+    }
+}

@@ -1,0 +1,156 @@
+//! Parallel execution of sweep cells on a bounded thread pool.
+//!
+//! Every cell is an independent, fully-deterministic [`Trainer`] run
+//! (all randomness derives from the cell's root seed), so a sweep is
+//! embarrassingly parallel: [`run_results`] fans the cell list out over
+//! [`crate::exec::scoped_map`]'s work-stealing threads and returns
+//! results in cell order — output is bit-identical regardless of thread
+//! count or scheduling.
+//!
+//! `Trainer` itself is intentionally not `Send` (the XLA backend pins
+//! PJRT handles to their creating thread), so each worker thread
+//! constructs, runs, and drops its own trainer; only the plain-data
+//! [`RunResult`] crosses threads.
+
+use crate::config::RunConfig;
+use crate::coordinator::{RunResult, Trainer};
+use crate::data::Dataset;
+use crate::exec::{scoped_map, with_inner_threads};
+use crate::metrics::Trace;
+use crate::sweep::grid::Cell;
+use anyhow::Result;
+use std::sync::Arc;
+
+/// One executed cell: the cell's identity plus its convergence trace.
+#[derive(Clone, Debug)]
+pub struct CellResult {
+    pub cell: Cell,
+    pub trace: Trace,
+    pub initial_err: f64,
+}
+
+/// Default worker-thread count: every available core.
+pub fn default_threads() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// Run each config to completion on at most `threads` OS threads.
+///
+/// With `shared = Some(ds)`, every trainer is built over the same
+/// dataset (the figure harness' fairness contract: all methods of one
+/// comparison see identical data). With `shared = None`, each cell
+/// builds its dataset from its own config — cells that agree on
+/// (data spec, seed) still see byte-identical data because generation
+/// is a pure function of those two.
+pub fn run_results(
+    cfgs: &[RunConfig],
+    threads: usize,
+    shared: Option<&Arc<Dataset>>,
+) -> Result<Vec<RunResult>> {
+    // `threads` is the total thread budget. Split it between the cell
+    // fan-out and each trainer's internal data parallelism (dataset
+    // generation, evaluation): with one cell per core the inner helpers
+    // run single-threaded instead of nesting to ~cores² transient
+    // threads, and a `--threads 1` sweep really is single-threaded.
+    let outer = threads.max(1).min(cfgs.len().max(1));
+    let inner = (threads.max(1) / outer).max(1);
+    let outs: Vec<Result<RunResult, String>> = scoped_map(cfgs.len(), outer, |i| {
+        with_inner_threads(inner, || {
+            let cfg = cfgs[i].clone();
+            let name = cfg.name.clone();
+            let built = match shared {
+                Some(ds) => Trainer::with_dataset(cfg, ds.clone()),
+                None => Trainer::new(cfg),
+            };
+            match built {
+                Ok(mut tr) => Ok(tr.run()),
+                Err(e) => Err(format!("cell {i} (`{name}`): {e:#}")),
+            }
+        })
+    });
+    let mut results = Vec::with_capacity(outs.len());
+    for o in outs {
+        results.push(o.map_err(anyhow::Error::msg)?);
+    }
+    Ok(results)
+}
+
+/// Convenience: traces only, over a shared dataset (the figure harness'
+/// method-comparison shape).
+pub fn run_shared(ds: &Arc<Dataset>, cfgs: &[RunConfig], threads: usize) -> Result<Vec<Trace>> {
+    Ok(run_results(cfgs, threads, Some(ds))?.into_iter().map(|r| r.trace).collect())
+}
+
+/// Run a list of expanded sweep cells (each builds its own dataset).
+pub fn run_cells(cells: &[Cell], threads: usize) -> Result<Vec<CellResult>> {
+    let cfgs: Vec<RunConfig> = cells.iter().map(|c| c.cfg.clone()).collect();
+    let results = run_results(&cfgs, threads, None)?;
+    Ok(cells
+        .iter()
+        .zip(results)
+        .map(|(cell, r)| CellResult {
+            cell: cell.clone(),
+            trace: r.trace,
+            initial_err: r.initial_err,
+        })
+        .collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sweep::Grid;
+
+    fn tiny_cells() -> Vec<Cell> {
+        let mut base = crate::sweep::sweep_base();
+        base.data = crate::config::DataSpec::Synthetic { m: 1_200, d: 16, noise: 1e-3 };
+        base.workers = 4;
+        base.batch = 8;
+        base.epochs = 2;
+        Grid::new(base)
+            .scenarios(["ideal", "ec2"])
+            .methods(["anytime", "sync"])
+            .seed_count(2)
+            .expand()
+            .unwrap()
+    }
+
+    #[test]
+    fn parallel_equals_serial() {
+        let cells = tiny_cells();
+        let serial = run_cells(&cells, 1).unwrap();
+        let parallel = run_cells(&cells, 4).unwrap();
+        assert_eq!(serial.len(), parallel.len());
+        for (a, b) in serial.iter().zip(parallel.iter()) {
+            assert_eq!(a.cell.cfg.name, b.cell.cfg.name);
+            assert_eq!(a.trace.points.len(), b.trace.points.len());
+            for (p, q) in a.trace.points.iter().zip(b.trace.points.iter()) {
+                assert_eq!(p.norm_err, q.norm_err, "{}", a.cell.cfg.name);
+                assert_eq!(p.time, q.time, "{}", a.cell.cfg.name);
+            }
+        }
+    }
+
+    #[test]
+    fn shared_dataset_matches_direct_trainer() {
+        let cells = tiny_cells();
+        let cfg = cells[0].cfg.clone();
+        let ds = Arc::new(crate::coordinator::build_dataset(&cfg));
+        let via_runner = run_shared(&ds, std::slice::from_ref(&cfg), 2).unwrap();
+        let direct = Trainer::with_dataset(cfg, ds.clone()).unwrap().run();
+        assert_eq!(via_runner[0].points.len(), direct.trace.points.len());
+        for (p, q) in via_runner[0].points.iter().zip(direct.trace.points.iter()) {
+            assert_eq!(p.norm_err, q.norm_err);
+        }
+    }
+
+    #[test]
+    fn bad_cell_surfaces_its_name() {
+        let mut cfg = crate::sweep::sweep_base();
+        cfg.name = "bad-cell".into();
+        cfg.backend = crate::config::Backend::Xla; // no artifacts in tests
+        cfg.workers = 0; // invalid either way
+        let err = run_results(&[cfg], 2, None).unwrap_err().to_string();
+        assert!(err.contains("bad-cell"), "{err}");
+    }
+}

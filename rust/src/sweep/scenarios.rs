@@ -1,0 +1,248 @@
+//! The named scenario library: reusable cluster environments layered on
+//! [`crate::straggler::StragglerEnv`] / [`crate::straggler::CommSpec`].
+//!
+//! A scenario is everything about a sweep cell that is *not* the method
+//! under test: the straggler regime, the communication model, and (for
+//! the workload scenarios) the dataset + learning-rate pairing. Applying
+//! a scenario mutates a [`RunConfig`] in place, after the grid has fixed
+//! the topology axes (`workers`, `redundancy`, `t_c`) — per-worker
+//! scenarios read `cfg.workers`, so order matters.
+//!
+//! The library deliberately spans the paper's taxonomy (§I): ideal
+//! clusters, EC2-like organic noise, persistent stragglers, transient
+//! bursts, fixed machine heterogeneity, fat-tailed regimes, worker
+//! death, plus the two non-default workloads (logistic regression and
+//! the MSD-like real-data stand-in).
+
+use crate::config::{DataSpec, RunConfig, Schedule};
+use crate::straggler::{CommSpec, DelaySpec, PersistentSpec, StragglerEnv};
+use anyhow::{bail, Result};
+
+/// Descriptor for one library entry (for `--help`, docs, and tests).
+#[derive(Clone, Copy, Debug)]
+pub struct ScenarioInfo {
+    pub name: &'static str,
+    pub about: &'static str,
+}
+
+/// Every scenario the library ships.
+pub const ALL: &[ScenarioInfo] = &[
+    ScenarioInfo {
+        name: "ideal",
+        about: "deterministic 0.02 s/step cluster, fixed 0.5 s links (no stragglers)",
+    },
+    ScenarioInfo {
+        name: "ec2",
+        about: "EC2-like bimodal noise (Fig. 1 fit): lognormal body + 3% Pareto tail",
+    },
+    ScenarioInfo {
+        name: "persistent",
+        about: "EC2 noise + two permanently slow machines (8x) from epoch 2",
+    },
+    ScenarioInfo {
+        name: "bursty",
+        about: "transient per-epoch bursts: shifted-exponential step times",
+    },
+    ScenarioInfo {
+        name: "hetero",
+        about: "fixed heterogeneous fleet: per-worker rates ramp ~5x fastest-to-slowest",
+    },
+    ScenarioInfo {
+        name: "fat-tail",
+        about: "Pareto(alpha=1.1) step times + fat uniform 0.5-4 s links",
+    },
+    ScenarioInfo {
+        name: "churn",
+        about: "EC2 noise + staggered worker deaths (epoch 3 and 6), finite T_c — redundancy matters",
+    },
+    ScenarioInfo {
+        name: "logreg",
+        about: "synthetic logistic-regression workload under EC2 noise",
+    },
+    ScenarioInfo {
+        name: "msd",
+        about: "MSD-like year-regression workload (90 features) under EC2 noise",
+    },
+];
+
+/// Names of every scenario, for error messages and docs.
+pub fn names() -> Vec<&'static str> {
+    ALL.iter().map(|s| s.name).collect()
+}
+
+/// Whether `name` is in the library.
+pub fn exists(name: &str) -> bool {
+    ALL.iter().any(|s| s.name == name)
+}
+
+/// The two "distinguished" slow/dead workers for persistent scenarios:
+/// worker 0 and the middle of the fleet (deduplicated for tiny fleets).
+fn marked_workers(n: usize) -> Vec<usize> {
+    let mut w = vec![0];
+    if n > 1 && n / 2 != 0 {
+        w.push(n / 2);
+    }
+    w
+}
+
+/// Apply scenario `name` to `cfg` (env, comm, and for workload
+/// scenarios also data + schedule). Topology fields (`workers`,
+/// `redundancy`, `epochs`) are left untouched; `churn` additionally
+/// caps `t_c` to a finite guard (dead workers make the master run the
+/// guard out every epoch).
+pub fn apply(name: &str, cfg: &mut RunConfig) -> Result<()> {
+    match name {
+        "ideal" => {
+            cfg.env = StragglerEnv::ideal(0.02);
+            cfg.comm = CommSpec::Fixed { secs: 0.5 };
+        }
+        "ec2" => {
+            cfg.env = StragglerEnv::ec2_default(0.02);
+            cfg.comm = CommSpec::Fixed { secs: 0.5 };
+        }
+        "persistent" => {
+            cfg.env = StragglerEnv::ec2_default(0.02).with_persistent(PersistentSpec {
+                workers: marked_workers(cfg.workers),
+                from_epoch: 2,
+                factor: 8.0,
+            });
+            cfg.comm = CommSpec::Fixed { secs: 0.5 };
+        }
+        "bursty" => {
+            // Per-epoch redraw: base 0.02 s/step plus an Exp(25) burst
+            // (mean +0.04 s, occasionally much worse) — short-lived
+            // congestion that moves between workers every epoch.
+            cfg.env = StragglerEnv {
+                delay: DelaySpec::ShiftedExp { base: 0.02, rate: 25.0 },
+                persistent: vec![],
+            };
+            cfg.comm = CommSpec::Fixed { secs: 0.5 };
+        }
+        "hetero" => {
+            // Fixed machine heterogeneity: worker v runs at
+            // 0.02 * (1 + 0.4 v) s/step — a ~5x spread on 10 workers,
+            // constant across epochs (the Fig. 2(a) regime).
+            cfg.env = StragglerEnv {
+                delay: DelaySpec::PerWorker {
+                    secs: (0..cfg.workers).map(|v| 0.02 * (1.0 + 0.4 * v as f64)).collect(),
+                },
+                persistent: vec![],
+            };
+            cfg.comm = CommSpec::Fixed { secs: 0.5 };
+        }
+        "fat-tail" => {
+            // Heavy-tailed everything: Pareto step times with infinite
+            // variance (alpha = 1.1) and wide uniform link delays.
+            cfg.env = StragglerEnv {
+                delay: DelaySpec::Pareto { xm: 0.02, alpha: 1.1 },
+                persistent: vec![],
+            };
+            cfg.comm = CommSpec::UniformRange { lo: 0.5, hi: 4.0 };
+        }
+        "churn" => {
+            let marked = marked_workers(cfg.workers);
+            let mut env = StragglerEnv::ec2_default(0.02).with_persistent(PersistentSpec {
+                workers: vec![marked[0]],
+                from_epoch: 3,
+                factor: f64::INFINITY,
+            });
+            if let Some(&second) = marked.get(1) {
+                env = env.with_persistent(PersistentSpec {
+                    workers: vec![second],
+                    from_epoch: 6,
+                    factor: f64::INFINITY,
+                });
+            }
+            cfg.env = env;
+            cfg.comm = CommSpec::Fixed { secs: 0.5 };
+            // A dead worker never reports, so every protocol's master
+            // runs out the T_c guard each epoch; with the base's
+            // effectively-unbounded guard that would charge ~1e9 s per
+            // epoch and destroy the error-vs-time curves. Cap the guard
+            // at a finite wait (a tighter user-supplied T_c axis value
+            // is preserved).
+            cfg.t_c = cfg.t_c.min(60.0);
+        }
+        "logreg" => {
+            cfg.data = DataSpec::SyntheticLogistic { m: cfg.data.rows(), d: cfg.data.dim() };
+            cfg.schedule = Schedule::Constant { lr: 0.05 };
+            cfg.env = StragglerEnv::ec2_default(0.02);
+            cfg.comm = CommSpec::Fixed { secs: 0.5 };
+        }
+        "msd" => {
+            cfg.data = DataSpec::MsdLike { m: cfg.data.rows() };
+            cfg.schedule = Schedule::Constant { lr: 2e-4 };
+            cfg.env = StragglerEnv::ec2_default(0.02);
+            cfg.comm = CommSpec::Fixed { secs: 0.5 };
+        }
+        other => bail!("unknown scenario `{other}` (available: {})", names().join(", ")),
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn library_has_at_least_eight_scenarios() {
+        assert!(ALL.len() >= 8, "{} scenarios", ALL.len());
+        // Names unique.
+        let mut names: Vec<_> = ALL.iter().map(|s| s.name).collect();
+        names.sort();
+        names.dedup();
+        assert_eq!(names.len(), ALL.len());
+    }
+
+    #[test]
+    fn every_scenario_applies_to_valid_config() {
+        for s in ALL {
+            let mut cfg = crate::sweep::sweep_base();
+            apply(s.name, &mut cfg).unwrap_or_else(|e| panic!("{}: {e}", s.name));
+            cfg.validate().unwrap_or_else(|e| panic!("{}: {e}", s.name));
+        }
+        assert!(apply("nope", &mut crate::sweep::sweep_base()).is_err());
+    }
+
+    #[test]
+    fn per_worker_scenarios_respect_fleet_size() {
+        for n in [1usize, 2, 3, 10] {
+            let mut cfg = crate::sweep::sweep_base();
+            cfg.workers = n;
+            apply("hetero", &mut cfg).unwrap();
+            match &cfg.env.delay {
+                DelaySpec::PerWorker { secs } => assert_eq!(secs.len(), n),
+                other => panic!("hetero produced {other:?}"),
+            }
+            let mut cfg = crate::sweep::sweep_base();
+            cfg.workers = n;
+            apply("churn", &mut cfg).unwrap();
+            for p in &cfg.env.persistent {
+                assert!(p.workers.iter().all(|&v| v < n));
+            }
+        }
+    }
+
+    #[test]
+    fn churn_caps_the_waiting_guard() {
+        let mut cfg = crate::sweep::sweep_base();
+        apply("churn", &mut cfg).unwrap();
+        assert!(cfg.t_c <= 60.0, "t_c {} would charge ~T_c per epoch forever", cfg.t_c);
+        // A tighter user-supplied guard survives.
+        let mut cfg = crate::sweep::sweep_base();
+        cfg.t_c = 10.0;
+        apply("churn", &mut cfg).unwrap();
+        assert_eq!(cfg.t_c, 10.0);
+    }
+
+    #[test]
+    fn workload_scenarios_swap_the_dataset() {
+        let mut cfg = crate::sweep::sweep_base();
+        apply("logreg", &mut cfg).unwrap();
+        assert!(matches!(cfg.data, DataSpec::SyntheticLogistic { .. }));
+        let mut cfg = crate::sweep::sweep_base();
+        apply("msd", &mut cfg).unwrap();
+        assert!(matches!(cfg.data, DataSpec::MsdLike { .. }));
+        assert_eq!(cfg.data.dim(), 90);
+    }
+}

@@ -1,0 +1,163 @@
+//! Integration tests over the sweep subsystem: grid expansion, scenario
+//! determinism (same spec + seed → identical aggregate CSV bytes),
+//! parallel-vs-serial equivalence, and `sweep` CLI flag parsing.
+
+use anytime_sgd::config::{DataSpec, RunConfig};
+use anytime_sgd::sweep::{self, aggregate, run_cells, Grid};
+
+/// A grid small enough that a full campaign runs in well under a second.
+fn tiny_base() -> RunConfig {
+    let mut c = sweep::sweep_base();
+    c.data = DataSpec::Synthetic { m: 1_200, d: 16, noise: 1e-3 };
+    c.workers = 4;
+    c.batch = 8;
+    c.epochs = 3;
+    c
+}
+
+fn tiny_grid() -> Grid {
+    Grid::new(tiny_base())
+        .scenarios(["ideal", "ec2"])
+        .methods(["anytime", "sync"])
+        .seed_count(2)
+}
+
+#[test]
+fn grid_expansion_counts() {
+    let g = tiny_grid();
+    assert_eq!(g.len(), 8);
+    assert_eq!(g.groups(), 4);
+    let cells = g.expand().unwrap();
+    assert_eq!(cells.len(), g.len());
+    // Axes multiply: add a 2-point workers axis.
+    let g2 = tiny_grid().workers([2, 4]);
+    assert_eq!(g2.len(), 16);
+    assert_eq!(g2.expand().unwrap().len(), 16);
+    // Seeds vary only within a group.
+    for pair in g.expand().unwrap().chunks(2) {
+        assert_eq!(pair[0].group, pair[1].group);
+        assert_ne!(pair[0].seed, pair[1].seed);
+    }
+}
+
+#[test]
+fn sweep_is_bit_reproducible() {
+    let cells = tiny_grid().expand().unwrap();
+    let csv_a = aggregate("repro", &run_cells(&cells, 2).unwrap()).to_csv();
+    let csv_b = aggregate("repro", &run_cells(&cells, 2).unwrap()).to_csv();
+    assert_eq!(csv_a, csv_b, "same spec + seeds must emit identical bytes");
+    // And through a fresh expansion of an identical grid.
+    let csv_c =
+        aggregate("repro", &run_cells(&tiny_grid().expand().unwrap(), 3).unwrap()).to_csv();
+    assert_eq!(csv_a, csv_c);
+}
+
+#[test]
+fn parallel_matches_serial_bytes() {
+    let cells = tiny_grid().expand().unwrap();
+    let serial = run_cells(&cells, 1).unwrap();
+    let parallel = run_cells(&cells, 4).unwrap();
+    let a = aggregate("x", &serial);
+    let b = aggregate("x", &parallel);
+    assert_eq!(a.to_csv(), b.to_csv());
+    assert_eq!(a.summary_csv(), b.summary_csv());
+}
+
+#[test]
+fn aggregate_groups_fold_seeds() {
+    let cells = tiny_grid().expand().unwrap();
+    let agg = aggregate("fold", &run_cells(&cells, 4).unwrap());
+    assert_eq!(agg.groups.len(), 4);
+    for g in &agg.groups {
+        assert_eq!(g.n_seeds, 2);
+        assert!(!g.points.is_empty());
+        assert!(g.final_err_mean.is_finite());
+    }
+    // Winner per scenario exists for both scenarios.
+    let winners = agg.winners();
+    assert_eq!(winners.len(), 2);
+}
+
+#[test]
+fn training_actually_converges_on_ideal() {
+    let cells = Grid::new(tiny_base())
+        .scenarios(["ideal"])
+        .methods(["anytime"])
+        .seed_count(1)
+        .expand()
+        .unwrap();
+    let res = run_cells(&cells, 1).unwrap();
+    let r = &res[0];
+    assert!(
+        r.trace.final_err() < 0.5 * r.initial_err,
+        "no convergence: {} -> {}",
+        r.initial_err,
+        r.trace.final_err()
+    );
+}
+
+#[test]
+fn cli_flags_parse_into_grids() {
+    let argv = |parts: &[&str]| -> Vec<String> { parts.iter().map(|s| s.to_string()).collect() };
+    let cmd = sweep::cli_command();
+
+    // The acceptance-criteria invocation.
+    let m = cmd
+        .parse(&argv(&["--scenario", "ec2", "--methods", "anytime,sync,fnb,gc", "--seeds", "5"]))
+        .unwrap();
+    let g = sweep::grid_from_matches(&m).unwrap();
+    assert_eq!(g.len(), 20);
+    assert_eq!(g.groups(), 4);
+    assert_eq!(g.seeds, vec![42, 43, 44, 45, 46]);
+
+    // Multi-axis form.
+    let m = cmd
+        .parse(&argv(&[
+            "--scenario",
+            "ideal,churn",
+            "--methods",
+            "anytime",
+            "--workers",
+            "4,8",
+            "--t",
+            "1.0,2.0",
+            "--seeds",
+            "2",
+            "--base-seed",
+            "7",
+        ]))
+        .unwrap();
+    let g = sweep::grid_from_matches(&m).unwrap();
+    assert_eq!(g.len(), 2 * 1 * 2 * 2 * 2);
+    assert_eq!(g.seeds, vec![7, 8]);
+    assert_eq!(g.workers, vec![4, 8]);
+    assert_eq!(g.t, vec![1.0, 2.0]);
+
+    // Bad values fail at parse time with helpful errors.
+    let m = cmd.parse(&argv(&["--scenario", "marsbase"])).unwrap();
+    let err = sweep::grid_from_matches(&m).unwrap_err().to_string();
+    assert!(err.contains("unknown scenario"), "{err}");
+    let m = cmd.parse(&argv(&["--methods", "teleport"])).unwrap();
+    assert!(sweep::grid_from_matches(&m).is_err());
+    let m = cmd.parse(&argv(&["--workers", "four"])).unwrap();
+    assert!(sweep::grid_from_matches(&m).is_err());
+    // Unknown flags rejected by the parser itself.
+    assert!(cmd.parse(&argv(&["--warp", "9"])).is_err());
+}
+
+#[test]
+fn end_to_end_writes_campaign_artifacts() {
+    let dir = std::env::temp_dir().join(format!("anytime-sweep-it-{}", std::process::id()));
+    let cells = tiny_grid().expand().unwrap();
+    let agg = aggregate("it", &run_cells(&cells, 2).unwrap());
+    let paths = agg.write(&dir).unwrap();
+    assert_eq!(paths.len(), 3);
+    let csv = std::fs::read_to_string(&paths[0]).unwrap();
+    assert!(csv.starts_with("group,scenario,method,n_seeds,epoch"));
+    // 4 groups × (epochs 3 + initial point) rows + header.
+    assert_eq!(csv.lines().count(), 1 + 4 * 4);
+    let json = std::fs::read_to_string(&paths[1]).unwrap();
+    let v = anytime_sgd::ser::parse(&json).unwrap();
+    assert_eq!(v.get("groups").unwrap().as_arr().unwrap().len(), 4);
+    std::fs::remove_dir_all(dir).ok();
+}
