@@ -4,6 +4,11 @@
 //! block, partitioning, the gradient code, delay sampling, JSON.
 //! `BENCHLINE` rows feed EXPERIMENTS.md §Perf.
 
+// Crate-posture lint gate (see lib.rs): correctness/suspicious/perf
+// lints stay load-bearing under CI's `-D warnings`; the style/
+// complexity groups are settled here rather than per-site.
+#![allow(clippy::style, clippy::complexity)]
+
 use anytime_sgd::backend::{Consts, NativeWorker, WorkerCompute};
 use anytime_sgd::benchkit::{black_box, Bench};
 use anytime_sgd::data::synthetic_linreg;

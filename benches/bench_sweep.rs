@@ -1,10 +1,18 @@
 //! Sweep-engine benchmarks: cells/sec through the parallel campaign
-//! runner at 1 thread vs all cores, plus grid-expansion and aggregation
-//! microbenchmarks. `BENCHLINE` rows feed EXPERIMENTS.md §Perf.
+//! runner at 1 thread vs all cores, grid-expansion and aggregation
+//! microbenchmarks, and the dataset-cache win (per-cell rebuild vs one
+//! build per unique (DataSpec, seed) key). `BENCHLINE` rows feed
+//! EXPERIMENTS.md §Perf.
+
+// Crate-posture lint gate (see lib.rs): correctness/suspicious/perf
+// lints stay load-bearing under CI's `-D warnings`; the style/
+// complexity groups are settled here rather than per-site.
+#![allow(clippy::style, clippy::complexity)]
 
 use anytime_sgd::benchkit::{black_box, Bench};
 use anytime_sgd::config::{DataSpec, RunConfig};
-use anytime_sgd::sweep::{self, aggregate, run_cells, Grid};
+use anytime_sgd::coordinator::build_dataset;
+use anytime_sgd::sweep::{self, aggregate, run_cells, runner, Grid};
 
 fn bench_base() -> RunConfig {
     let mut c = sweep::sweep_base();
@@ -44,4 +52,28 @@ fn main() {
     b.run_with_throughput(&format!("sweep/aggregate/{n_cells}cells"), n_cells as f64, || {
         black_box(aggregate("bench", &results).to_csv().len())
     });
+
+    // ---- dataset cache ----------------------------------------------------
+    // The 24-cell grid has only 2 unique (DataSpec, seed) keys (its two
+    // seeds): "percell" is what every sweep paid before the cache — one
+    // dataset build per cell — and "cached" is what run_cells pays now.
+    let mut big = bench_base();
+    big.data = DataSpec::Synthetic { m: 20_000, d: 64, noise: 1e-3 };
+    let ds_cells = Grid::new(big)
+        .scenarios(["ideal", "ec2", "hetero"])
+        .methods(["anytime", "sync", "fnb", "gc"])
+        .seed_count(2)
+        .expand()
+        .unwrap();
+    let ds_cfgs: Vec<RunConfig> = ds_cells.iter().map(|c| c.cfg.clone()).collect();
+    b.run_with_throughput(
+        &format!("sweep/datasets/percell/{}builds", ds_cfgs.len()),
+        ds_cfgs.len() as f64,
+        || black_box(ds_cfgs.iter().map(|c| build_dataset(c).rows()).sum::<usize>()),
+    );
+    b.run_with_throughput(
+        &format!("sweep/datasets/cached/{}cells", ds_cfgs.len()),
+        ds_cfgs.len() as f64,
+        || black_box(runner::dataset_cache(&ds_cfgs, all_cores).len()),
+    );
 }

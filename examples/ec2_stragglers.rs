@@ -11,8 +11,14 @@
 //! cargo run --release --example ec2_stragglers
 //! ```
 
-use anytime_sgd::config::{CombinePolicy, Iterate, MethodSpec, RunConfig};
+// Crate-posture lint gate (see lib.rs): correctness/suspicious/perf
+// lints stay load-bearing under CI's `-D warnings`; the style/
+// complexity groups are settled here rather than per-site.
+#![allow(clippy::style, clippy::complexity)]
+
+use anytime_sgd::config::RunConfig;
 use anytime_sgd::coordinator::{build_dataset, Trainer};
+use anytime_sgd::protocols;
 use anytime_sgd::figures::{fig1, FigOpts};
 use anytime_sgd::straggler::PersistentSpec;
 use std::sync::Arc;
@@ -31,16 +37,9 @@ fn main() -> anyhow::Result<()> {
 
     let mut rows = Vec::new();
     for (label, method) in [
-        (
-            "anytime",
-            MethodSpec::Anytime {
-                t: 100.0,
-                combine: CombinePolicy::Proportional,
-                iterate: Iterate::Last,
-            },
-        ),
-        ("fnb(B=8)", MethodSpec::Fnb { steps_per_epoch: 150, b: 8 }),
-        ("grad-coding", MethodSpec::GradientCoding { lr: 0.4 }),
+        ("anytime", protocols::anytime::spec(100.0)),
+        ("fnb(B=8)", protocols::fnb::spec(150, 8)),
+        ("grad-coding", protocols::gradient_coding::spec(0.4)),
     ] {
         let mut cfg = base.clone();
         cfg.name = label.into();
@@ -71,25 +70,9 @@ fn main() -> anyhow::Result<()> {
     let ds = Arc::new(build_dataset(&base));
 
     for (label, s, method) in [
-        (
-            "anytime S=1",
-            1usize,
-            MethodSpec::Anytime {
-                t: 200.0,
-                combine: CombinePolicy::Proportional,
-                iterate: Iterate::Last,
-            },
-        ),
-        ("fnb S=0", 0, MethodSpec::Fnb { steps_per_epoch: 156, b: 2 }),
-        (
-            "anytime S=0",
-            0,
-            MethodSpec::Anytime {
-                t: 200.0,
-                combine: CombinePolicy::Proportional,
-                iterate: Iterate::Last,
-            },
-        ),
+        ("anytime S=1", 1usize, protocols::anytime::spec(200.0)),
+        ("fnb S=0", 0, protocols::fnb::spec(156, 2)),
+        ("anytime S=0", 0, protocols::anytime::spec(200.0)),
     ] {
         let mut cfg = base.clone();
         cfg.name = label.into();

@@ -1,5 +1,5 @@
 //! Quickstart: Anytime-Gradients vs classical Sync-SGD on a small
-//! synthetic regression, through the public API.
+//! synthetic regression, through the public builder + registry API.
 //!
 //! ```bash
 //! cargo run --release --example quickstart              # native backend
@@ -10,34 +10,48 @@
 //! PJRT runtime (requires `make artifacts`); numerics match the native
 //! backend to float tolerance.
 
-use anytime_sgd::config::{Backend, CombinePolicy, Iterate, MethodSpec, RunConfig};
+// Crate-posture lint gate (see lib.rs): correctness/suspicious/perf
+// lints stay load-bearing under CI's `-D warnings`; the style/
+// complexity groups are settled here rather than per-site.
+#![allow(clippy::style, clippy::complexity)]
+
+use anytime_sgd::config::{Backend, RunConfig};
 use anytime_sgd::coordinator::{build_dataset, Trainer};
+use anytime_sgd::protocols;
 use std::sync::Arc;
 
 fn main() -> anyhow::Result<()> {
     let xla = std::env::args().any(|a| a == "--xla");
+    let backend = if xla { Backend::Xla } else { Backend::Native };
 
-    // One config, two protocols. The preset matches the Fig-3 setup:
-    // 10 workers, EC2-like stragglers, S=0.
-    let mut cfg = RunConfig::preset("fig3-anytime")?;
-    cfg.backend = if xla { Backend::Xla } else { Backend::Native };
-
+    // One topology, two protocols. The preset matches the Fig-3 setup:
+    // 10 workers, EC2-like stragglers, S=0; both trainers share the
+    // same dataset for a fair comparison.
+    let cfg = RunConfig::preset("fig3-anytime")?;
     let ds = Arc::new(build_dataset(&cfg));
     println!("dataset: {} ({} rows x {} dims)", ds.name, ds.rows(), ds.dim());
-    println!("backend: {:?}\n", cfg.backend);
+    println!("backend: {:?}\n", backend);
 
     // Anytime-Gradients: fixed 200-second epochs, Theorem-3 combining.
-    cfg.method = MethodSpec::Anytime {
-        t: 200.0,
-        combine: CombinePolicy::Proportional,
-        iterate: Iterate::Last,
-    };
-    let anytime = Trainer::with_dataset(cfg.clone(), ds.clone())?.run();
+    // Protocols are picked by registry name — `anytime-sgd list` shows
+    // everything available.
+    let anytime = Trainer::builder()
+        .preset("fig3-anytime")?
+        .shared_dataset(ds.clone())
+        .backend(backend)
+        .method(protocols::anytime::spec(200.0))
+        .build()?
+        .run();
 
     // Classical Sync-SGD: fixed work per epoch, wait for the slowest.
-    cfg.method = MethodSpec::SyncSgd { steps_per_epoch: 156 };
-    cfg.name = "quickstart-sync".into();
-    let sync = Trainer::with_dataset(cfg, ds)?.run();
+    let sync = Trainer::builder()
+        .preset("fig3-anytime")?
+        .name("quickstart-sync")
+        .shared_dataset(ds)
+        .backend(backend)
+        .method(protocols::sync::spec(156))
+        .build()?
+        .run();
 
     println!("{:>6} {:>14} {:>12}   {:>14} {:>12}", "epoch", "anytime t(s)", "err", "sync t(s)", "err");
     for i in 0..anytime.trace.points.len().max(sync.trace.points.len()) {

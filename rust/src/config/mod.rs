@@ -5,10 +5,17 @@
 //! Configs load from JSON (see `configs/` examples in README) and every
 //! paper figure has a named preset ([`RunConfig::preset`]), so
 //! `anytime-sgd train --preset fig3-anytime` reproduces a curve exactly.
+//!
+//! Methods are *opaque* here: a [`MethodSpec`] is a registry kind plus
+//! a JSON parameter bag, resolved through [`crate::protocols`] — this
+//! module never matches on a method, so new protocols need no config
+//! changes.
 
+use crate::protocols::{self, CombinePolicy, Iterate};
 use crate::ser::Value;
 use crate::straggler::{CommSpec, DelaySpec, PersistentSpec, StragglerEnv};
 use anyhow::{anyhow, bail, Result};
+use std::collections::BTreeMap;
 
 /// Which dataset to build.
 #[derive(Clone, Debug, PartialEq)]
@@ -45,62 +52,72 @@ impl DataSpec {
     }
 }
 
-/// The distributed-SGD protocol to run.
+/// The distributed-SGD protocol to run: a [`crate::protocols`] registry
+/// kind plus its parameters as a JSON object.
+///
+/// Protocol modules define the parameter keys and provide typed
+/// constructors (`protocols::anytime::spec(t)`, `protocols::fnb::spec
+/// (steps, b)`, …); this type only stores and transports them. Params
+/// are validated against the full config by the registry's per-protocol
+/// `validate` hook (called from [`RunConfig::validate`]).
 #[derive(Clone, Debug, PartialEq)]
-pub enum MethodSpec {
-    /// The paper's Anytime-Gradients (Algorithms 1-2).
-    Anytime { t: f64, combine: CombinePolicy, iterate: Iterate },
-    /// §V generalized variant: workers keep stepping through the
-    /// communication period and blend via eq. (13).
-    Generalized { t: f64 },
-    /// Classical synchronous local-SGD: fixed steps/epoch, wait for all,
-    /// uniform averaging (Zinkevich et al.).
-    SyncSgd { steps_per_epoch: usize },
-    /// Fastest N−B (Pan et al.): fixed steps/epoch, wait for the first
-    /// N−B workers, discard the rest.
-    Fnb { steps_per_epoch: usize, b: usize },
-    /// Gradient Coding (Tandon et al.): coded full-gradient descent,
-    /// decodable from any N−S workers.
-    GradientCoding { lr: f64 },
-    /// Parameter-server Async-SGD (paper §I's contrast): workers loop
-    /// independently — fetch x, run `steps_per_update` local steps, push
-    /// the delta; the master applies deltas immediately (stale updates
-    /// included). One "epoch" simulates `horizon` seconds of events.
-    AsyncSgd { steps_per_update: usize, horizon: f64 },
+pub struct MethodSpec {
+    /// Canonical registry kind (e.g. `"anytime"`, `"gradient-coding"`).
+    pub kind: String,
+    /// Parameter bag (always a JSON object).
+    pub params: Value,
 }
 
 impl MethodSpec {
-    pub fn name(&self) -> &'static str {
-        match self {
-            MethodSpec::Anytime { .. } => "anytime",
-            MethodSpec::Generalized { .. } => "generalized",
-            MethodSpec::SyncSgd { .. } => "sync",
-            MethodSpec::Fnb { .. } => "fnb",
-            MethodSpec::GradientCoding { .. } => "gradient-coding",
-            MethodSpec::AsyncSgd { .. } => "async",
-        }
+    /// An empty-params spec for `kind` (not registry-checked — use
+    /// [`crate::protocols::lookup`] / [`RunConfig::validate`] for that).
+    pub fn new(kind: impl Into<String>) -> Self {
+        Self { kind: kind.into(), params: Value::Obj(BTreeMap::new()) }
     }
-}
 
-/// Master combining policy (Algorithm 1 step 15).
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
-pub enum CombinePolicy {
-    /// λ_v = q_v / Σ q — Theorem 3, the paper's choice.
-    Proportional,
-    /// λ_v = 1/|χ| — classical uniform averaging.
-    Uniform,
-    /// Take only the worker with the most steps (the "expected distance"
-    /// strawman discussed after Theorem 1).
-    FastestOnly,
-}
+    /// Builder-style param insert.
+    pub fn with(mut self, key: &str, value: impl Into<Value>) -> Self {
+        if let Value::Obj(m) = &mut self.params {
+            m.insert(key.to_string(), value.into());
+        }
+        self
+    }
 
-/// Which per-worker iterate the master combines.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
-pub enum Iterate {
-    /// Final iterate x_{v,q_v} — Algorithm 2's return value.
-    Last,
-    /// Running average (1/q)Σ x_vt — the quantity the analysis bounds.
-    Average,
+    /// The registry kind (doubles as the trace-label method name).
+    pub fn name(&self) -> &str {
+        &self.kind
+    }
+
+    pub fn get_f64(&self, key: &str) -> Option<f64> {
+        self.params.get_f64(key)
+    }
+    pub fn get_usize(&self, key: &str) -> Option<usize> {
+        self.params.get_usize(key)
+    }
+    pub fn get_str(&self, key: &str) -> Option<&str> {
+        self.params.get_str(key)
+    }
+
+    /// JSON form: `{"kind": <kind>, ...params}` (config round-trip).
+    pub fn to_json(&self) -> Value {
+        let mut m = self.params.as_obj().cloned().unwrap_or_default();
+        m.insert("kind".to_string(), Value::Str(self.kind.clone()));
+        Value::Obj(m)
+    }
+
+    /// Parse from the JSON form. The kind must resolve in the protocol
+    /// registry (pure aliases are canonicalized; axis-only shorthands
+    /// like `anytime-uniform` are rejected with a hint); param values
+    /// are validated later against the full config.
+    pub fn from_json(v: &Value) -> Result<Self> {
+        let raw = v.get_str("kind").ok_or_else(|| anyhow!("method.kind"))?;
+        let kind = protocols::canonical_kind(raw)
+            .map_err(|e| anyhow!("method.kind: {e}"))?
+            .to_string();
+        let mut params = v.as_obj().ok_or_else(|| anyhow!("method must be an object"))?.clone();
+        params.remove("kind");
+        Ok(Self { kind, params: Value::Obj(params) })
+    }
 }
 
 /// Learning-rate schedule selection.
@@ -162,6 +179,24 @@ pub struct RunConfig {
     pub seed: u64,
 }
 
+/// Every named figure preset, in DESIGN.md §4 order (`anytime-sgd list`).
+pub const PRESETS: &[&str] = &[
+    "fig2-proportional",
+    "fig2-uniform",
+    "fig3-anytime",
+    "fig3-sync",
+    "fig4-anytime",
+    "fig4-fnb",
+    "fig4-gc",
+    "fig5-anytime",
+    "fig5-fnb",
+    "fig5-sync",
+    "fig6-anytime",
+    "fig6-generalized",
+    "logreg-anytime",
+    "logreg-sync",
+];
+
 impl RunConfig {
     /// Baseline config all presets derive from.
     pub fn base() -> Self {
@@ -170,11 +205,7 @@ impl RunConfig {
             data: DataSpec::Synthetic { m: 50_000, d: 200, noise: 1e-3 },
             workers: 10,
             redundancy: 0,
-            method: MethodSpec::Anytime {
-                t: 200.0,
-                combine: CombinePolicy::Proportional,
-                iterate: Iterate::Last,
-            },
+            method: protocols::anytime::spec(200.0),
             schedule: Schedule::Constant { lr: 5e-4 },
             batch: 32,
             env: StragglerEnv::ec2_default(0.02),
@@ -188,7 +219,8 @@ impl RunConfig {
         }
     }
 
-    /// Named presets — one per figure/experiment (DESIGN.md §4).
+    /// Named presets — one per figure/experiment (DESIGN.md §4; the full
+    /// list is [`PRESETS`]).
     ///
     /// `--paper-scale` variants use the paper's exact matrix sizes; the
     /// defaults are scaled for quick runs with identical protocol.
@@ -211,15 +243,15 @@ impl RunConfig {
                 };
                 c.batch = 1; // paper samples single points here
                 c.max_passes = 1.0;
-                c.method = MethodSpec::Anytime {
-                    t: 100.0,
-                    combine: if name.ends_with("uniform") {
+                c.method = protocols::anytime::spec_with(
+                    100.0,
+                    if name.ends_with("uniform") {
                         CombinePolicy::Uniform
                     } else {
                         CombinePolicy::Proportional
                     },
-                    iterate: Iterate::Last,
-                };
+                    Iterate::Last,
+                );
                 c.schedule = Schedule::Constant { lr: 1e-3 };
                 // Stop before the noise floor: the weighting gap is a
                 // transient-phase phenomenon (as in the paper's Fig 2b).
@@ -233,13 +265,9 @@ impl RunConfig {
                 if name.ends_with("sync") {
                     // Sync does a full pass per epoch (the paper's
                     // "fixed amount of data" contract).
-                    c.method = MethodSpec::SyncSgd { steps_per_epoch: 156 }; // 5000/32
+                    c.method = protocols::sync::spec(156); // 5000/32
                 } else {
-                    c.method = MethodSpec::Anytime {
-                        t: 200.0,
-                        combine: CombinePolicy::Proportional,
-                        iterate: Iterate::Last,
-                    };
+                    c.method = protocols::anytime::spec(200.0);
                 }
                 // T=200 at 0.02 s/step ≈ bulk workers finish the full pass;
                 // stragglers don't — exactly the paper's regime.
@@ -259,11 +287,7 @@ impl RunConfig {
                 c.max_passes = 3.0;
                 match name {
                     "fig4-anytime" => {
-                        c.method = MethodSpec::Anytime {
-                            t: 100.0,
-                            combine: CombinePolicy::Proportional,
-                            iterate: Iterate::Last,
-                        };
+                        c.method = protocols::anytime::spec(100.0);
                     }
                     "fig4-fnb" => {
                         // FNB (Pan et al.) has no data redundancy: each
@@ -271,11 +295,11 @@ impl RunConfig {
                         // one pass); the master waits for the fastest
                         // N-B = 2 and discards the rest.
                         c.redundancy = 0;
-                        c.method = MethodSpec::Fnb { steps_per_epoch: 150, b: 8 };
+                        c.method = protocols::fnb::spec(150, 8);
                         c.epochs = 60;
                     }
                     _ => {
-                        c.method = MethodSpec::GradientCoding { lr: 0.4 };
+                        c.method = protocols::gradient_coding::spec(0.4);
                         c.schedule = Schedule::Constant { lr: 0.4 };
                     }
                 }
@@ -292,22 +316,18 @@ impl RunConfig {
                 c.max_passes = 3.0;
                 match name {
                     "fig5-anytime" => {
-                        c.method = MethodSpec::Anytime {
-                            t: 20.0,
-                            combine: CombinePolicy::Proportional,
-                            iterate: Iterate::Last,
-                        };
+                        c.method = protocols::anytime::spec(20.0);
                         c.epochs = 20;
                     }
                     "fig5-fnb" => {
                         // No redundancy for FNB (see fig4-fnb): unique
                         // 6000-row block = 187 steps per pass.
                         c.redundancy = 0;
-                        c.method = MethodSpec::Fnb { steps_per_epoch: 187, b: 8 };
+                        c.method = protocols::fnb::spec(187, 8);
                         c.epochs = 60;
                     }
                     _ => {
-                        c.method = MethodSpec::SyncSgd { steps_per_epoch: 375 };
+                        c.method = protocols::sync::spec(375);
                         c.epochs = 20;
                     }
                 }
@@ -323,13 +343,9 @@ impl RunConfig {
                 c.schedule = Schedule::Constant { lr: 1e-3 };
                 c.epochs = 20;
                 if name.ends_with("generalized") {
-                    c.method = MethodSpec::Generalized { t: 50.0 };
+                    c.method = protocols::generalized::spec(50.0);
                 } else {
-                    c.method = MethodSpec::Anytime {
-                        t: 50.0,
-                        combine: CombinePolicy::Proportional,
-                        iterate: Iterate::Last,
-                    };
+                    c.method = protocols::anytime::spec(50.0);
                 }
             }
             // ---- Extension: logistic regression under the fig-3 protocol.
@@ -339,13 +355,9 @@ impl RunConfig {
                 c.epochs = 12;
                 c.env = StragglerEnv::ec2_default(1.0);
                 if name.ends_with("sync") {
-                    c.method = MethodSpec::SyncSgd { steps_per_epoch: 156 };
+                    c.method = protocols::sync::spec(156);
                 } else {
-                    c.method = MethodSpec::Anytime {
-                        t: 200.0,
-                        combine: CombinePolicy::Proportional,
-                        iterate: Iterate::Last,
-                    };
+                    c.method = protocols::anytime::spec(200.0);
                 }
             }
             other => bail!("unknown preset `{other}` (see DESIGN.md §4)"),
@@ -416,41 +428,7 @@ impl RunConfig {
             };
         }
         if let Some(m) = v.get("method") {
-            let kind = m.get_str("kind").ok_or_else(|| anyhow!("method.kind"))?;
-            c.method = match kind {
-                "anytime" => MethodSpec::Anytime {
-                    t: m.get_f64("t").ok_or_else(|| anyhow!("method.t"))?,
-                    combine: match m.get_str("combine").unwrap_or("proportional") {
-                        "proportional" => CombinePolicy::Proportional,
-                        "uniform" => CombinePolicy::Uniform,
-                        "fastest" => CombinePolicy::FastestOnly,
-                        o => bail!("unknown combine `{o}`"),
-                    },
-                    iterate: match m.get_str("iterate").unwrap_or("last") {
-                        "last" => Iterate::Last,
-                        "average" => Iterate::Average,
-                        o => bail!("unknown iterate `{o}`"),
-                    },
-                },
-                "generalized" => MethodSpec::Generalized {
-                    t: m.get_f64("t").ok_or_else(|| anyhow!("method.t"))?,
-                },
-                "sync" => MethodSpec::SyncSgd {
-                    steps_per_epoch: m.get_usize("steps_per_epoch").ok_or_else(|| anyhow!("method.steps_per_epoch"))?,
-                },
-                "fnb" => MethodSpec::Fnb {
-                    steps_per_epoch: m.get_usize("steps_per_epoch").ok_or_else(|| anyhow!("method.steps_per_epoch"))?,
-                    b: m.get_usize("b").ok_or_else(|| anyhow!("method.b"))?,
-                },
-                "gradient-coding" => MethodSpec::GradientCoding {
-                    lr: m.get_f64("lr").unwrap_or(0.4),
-                },
-                "async" => MethodSpec::AsyncSgd {
-                    steps_per_update: m.get_usize("steps_per_update").unwrap_or(16),
-                    horizon: m.get_f64("horizon").unwrap_or(100.0),
-                },
-                other => bail!("unknown method.kind `{other}`"),
-            };
+            c.method = MethodSpec::from_json(m)?;
         }
         if let Some(s) = v.get("schedule") {
             c.schedule = match s.get_str("kind").unwrap_or("constant") {
@@ -476,7 +454,8 @@ impl RunConfig {
         Ok(c)
     }
 
-    /// Sanity-check cross-field constraints.
+    /// Sanity-check cross-field constraints. Method params are checked
+    /// by the registered protocol's own `validate` hook.
     pub fn validate(&self) -> Result<()> {
         if self.workers == 0 {
             bail!("workers must be >= 1");
@@ -487,14 +466,10 @@ impl RunConfig {
         if self.batch == 0 {
             bail!("batch must be >= 1");
         }
-        if let MethodSpec::Fnb { b, .. } = self.method {
-            if b >= self.workers {
-                bail!("FNB B={b} must be < N={}", self.workers);
-            }
-        }
         if self.data.rows() < self.workers * self.batch {
             bail!("dataset too small for {} workers x batch {}", self.workers, self.batch);
         }
+        protocols::validate_spec(&self.method, self)?;
         Ok(())
     }
 }
@@ -550,20 +525,7 @@ mod tests {
 
     #[test]
     fn all_presets_valid() {
-        for p in [
-            "fig2-proportional",
-            "fig2-uniform",
-            "fig3-anytime",
-            "fig3-sync",
-            "fig4-anytime",
-            "fig4-fnb",
-            "fig4-gc",
-            "fig5-anytime",
-            "fig5-fnb",
-            "fig5-sync",
-            "fig6-anytime",
-            "fig6-generalized",
-        ] {
+        for p in PRESETS {
             let c = RunConfig::preset(p).unwrap_or_else(|e| panic!("{p}: {e}"));
             c.validate().unwrap_or_else(|e| panic!("{p}: {e}"));
         }
@@ -594,20 +556,28 @@ mod tests {
         let c = RunConfig::from_json(&v).unwrap();
         assert_eq!(c.workers, 4);
         assert_eq!(c.epochs, 3);
-        match c.method {
-            MethodSpec::Anytime { t, combine, .. } => {
-                assert_eq!(t, 10.0);
-                assert_eq!(combine, CombinePolicy::Uniform);
-            }
-            _ => panic!("wrong method"),
-        }
+        assert_eq!(c.method.kind, "anytime");
+        assert_eq!(c.method.get_f64("t"), Some(10.0));
+        assert_eq!(c.method.get_str("combine"), Some("uniform"));
         assert_eq!(c.schedule, Schedule::Paper { big_l: 3.0, sigma_over_d: 0.2 });
+    }
+
+    #[test]
+    fn from_json_accepts_registry_aliases() {
+        // `gc` canonicalizes to `gradient-coding`.
+        let v = parse(r#"{"method": {"kind": "gc", "lr": 0.3}}"#).unwrap();
+        let c = RunConfig::from_json(&v).unwrap();
+        assert_eq!(c.method.kind, "gradient-coding");
+        assert_eq!(c.method.get_f64("lr"), Some(0.3));
     }
 
     #[test]
     fn from_json_rejects_bad_fields() {
         for bad in [
             r#"{"method": {"kind": "warp"}}"#,
+            r#"{"method": {"kind": "anytime"}}"#,
+            r#"{"method": {"kind": "anytime-uniform", "t": 10.0}}"#,
+            r#"{"method": {"kind": "anytime", "t": 10.0, "combine": "median"}}"#,
             r#"{"data": {"kind": "imagenet", "m": 5}}"#,
             r#"{"preset": "fig3-anytime", "backend": "gpu"}"#,
         ] {
@@ -620,9 +590,31 @@ mod tests {
         let mut c = RunConfig::base();
         c.redundancy = 10;
         assert!(c.validate().is_err());
+        // FNB with B >= N: rejected with a clear error instead of a
+        // downstream underflow/empty-χ epoch.
         let mut c = RunConfig::base();
-        c.method = MethodSpec::Fnb { steps_per_epoch: 10, b: 10 };
+        c.method = crate::protocols::fnb::spec(10, 10);
+        let err = c.validate().unwrap_err().to_string();
+        assert!(err.contains("B=10 must be < N=10"), "{err}");
+        // Missing required params are also a validation error.
+        let mut c = RunConfig::base();
+        c.method = MethodSpec::new("anytime");
         assert!(c.validate().is_err());
+        // Unknown kinds fail closed.
+        let mut c = RunConfig::base();
+        c.method = MethodSpec::new("warp");
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn method_spec_json_round_trips() {
+        let spec = crate::protocols::anytime::spec_with(
+            12.5,
+            CombinePolicy::Uniform,
+            Iterate::Average,
+        );
+        let back = MethodSpec::from_json(&spec.to_json()).unwrap();
+        assert_eq!(back, spec);
     }
 
     #[test]

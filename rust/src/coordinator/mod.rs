@@ -1,11 +1,33 @@
-//! The L3 coordinator: master epoch loop (Algorithm 1), time-budgeted
-//! worker execution (Algorithm 2), combining, and the baselines' epoch
-//! protocols.
+//! The L3 coordinator: master epoch loop (Algorithm 1), topology
+//! construction, the simulated clock, and evaluation.
 //!
 //! One [`Trainer`] owns the whole topology: dataset, Table-I placement,
 //! per-worker compute backends (native or XLA/PJRT), the straggler and
-//! communication models, and the simulated clock. `Trainer::run`
-//! produces a [`RunResult`] whose trace is directly a figure series.
+//! communication models, and the simulated clock. The *method* is a
+//! [`crate::protocols::Protocol`] object resolved from the config
+//! through the protocol registry — the coordinator never matches on a
+//! method name. `Trainer::run` produces a [`RunResult`] whose trace is
+//! directly a figure series.
+//!
+//! Construction goes through [`Trainer::new`] /
+//! [`Trainer::with_dataset`] (config-driven) or the fluent
+//! [`Trainer::builder`] (library-driven, no JSON required):
+//!
+//! ```no_run
+//! use anytime_sgd::coordinator::Trainer;
+//! use anytime_sgd::config::DataSpec;
+//!
+//! let mut tr = Trainer::builder()
+//!     .dataset(DataSpec::Synthetic { m: 2_000, d: 16, noise: 1e-3 })
+//!     .workers(4)
+//!     .epochs(5)
+//!     .protocol("anytime", anytime_sgd::ser::parse(r#"{"t": 10.0}"#).unwrap())
+//!     .unwrap()
+//!     .build()
+//!     .unwrap();
+//! let res = tr.run();
+//! # let _ = res;
+//! ```
 //!
 //! Time semantics (DESIGN.md §Simulated time): workers execute *real*
 //! SGD steps — exactly the `q_v` the delay model admits within the
@@ -13,20 +35,17 @@
 //! stochastic choice derives from the run seed, so runs are
 //! bit-reproducible.
 
-mod epoch;
 pub mod wallclock;
 
-pub use epoch::combine_lambda;
-
 use crate::backend::{Consts, Evaluator, NativeEvaluator, NativeWorker, WorkerCompute};
-use crate::config::{Backend, DataSpec, MethodSpec, RunConfig};
+use crate::config::{Backend, DataSpec, MethodSpec, RunConfig, Schedule};
 use crate::data::{msd_like, standardize, synthetic_linreg, Dataset};
 use crate::metrics::{Trace, TracePoint};
-use crate::methods::gradient_coding::GradientCode;
 use crate::partition::{materialize_shards, Assignment, Shard};
+use crate::protocols::{EpochCtx, Protocol};
 use crate::rng::Xoshiro256pp;
 use crate::sim::SimClock;
-use crate::straggler::{CommModel, DelayModel};
+use crate::straggler::{CommModel, CommSpec, DelayModel, StragglerEnv};
 #[cfg(feature = "xla")]
 use anyhow::Context;
 use anyhow::Result;
@@ -81,7 +100,10 @@ pub struct Trainer {
     x: Vec<f32>,
     /// Per-worker parameter vectors (generalized anytime only).
     x_workers: Vec<Vec<f32>>,
-    gc: Option<GradientCode>,
+    /// The method under test, dispatched through the protocol trait.
+    /// (`Option` only so `run_epoch` can lend the trainer's state to the
+    /// protocol without aliasing; always `Some` between epochs.)
+    protocol: Option<Box<dyn Protocol>>,
     epoch: usize,
     /// Optional structured telemetry sink (JSONL; `train --events`).
     events: Option<crate::metrics::events::EventLog>,
@@ -90,9 +112,10 @@ pub struct Trainer {
 impl Trainer {
     /// Build the full topology from a config.
     pub fn new(cfg: RunConfig) -> Result<Self> {
-        cfg.validate()?;
+        cfg.validate()?; // fail fast, before the dataset build
         let ds = Arc::new(build_dataset(&cfg));
-        Self::with_dataset(cfg, ds)
+        let protocol = crate::protocols::build(&cfg.method, &cfg)?;
+        Self::assemble(cfg, ds, protocol)
     }
 
     /// Build with an externally-constructed dataset (shared across the
@@ -100,6 +123,18 @@ impl Trainer {
     /// data).
     pub fn with_dataset(cfg: RunConfig, ds: Arc<Dataset>) -> Result<Self> {
         cfg.validate()?;
+        let protocol = crate::protocols::build(&cfg.method, &cfg)?;
+        Self::assemble(cfg, ds, protocol)
+    }
+
+    /// Fluent construction without JSON (see module docs).
+    pub fn builder() -> TrainerBuilder {
+        TrainerBuilder { cfg: RunConfig::base(), ds: None, protocol: None }
+    }
+
+    /// Assemble the topology. Callers validate `cfg` before building
+    /// the protocol, so this does not re-validate.
+    fn assemble(cfg: RunConfig, ds: Arc<Dataset>, protocol: Box<dyn Protocol>) -> Result<Self> {
         let asg = Assignment::new(cfg.workers, cfg.redundancy);
         asg.validate().map_err(anyhow::Error::msg)?;
         let shards: Vec<Arc<Shard>> =
@@ -158,13 +193,6 @@ impl Trainer {
             }
         }
 
-        let gc = match cfg.method {
-            MethodSpec::GradientCoding { .. } => {
-                Some(GradientCode::new(cfg.workers, cfg.redundancy, cfg.seed))
-            }
-            _ => None,
-        };
-
         let root = Xoshiro256pp::seed_from_u64(cfg.seed);
         let d = ds.dim();
         Ok(Self {
@@ -178,7 +206,7 @@ impl Trainer {
             evaluator,
             root,
             clock: SimClock::new(),
-            gc,
+            protocol: Some(protocol),
             epoch: 0,
             events: None,
             cfg,
@@ -214,14 +242,6 @@ impl Trainer {
     pub fn max_steps(&self, v: usize) -> usize {
         let rows = self.shards[v].rows();
         ((self.cfg.max_passes * rows as f64 / self.cfg.batch as f64).ceil() as usize).max(1)
-    }
-
-    /// Seeded minibatch index stream for (worker, epoch): `q*batch`
-    /// uniform draws over the shard rows (Algorithm 2 step 6).
-    fn sample_idx(&self, v: usize, epoch: usize, q: usize) -> Vec<u32> {
-        let rows = self.shards[v].rows();
-        let mut rng = self.root.split("minibatch", v as u64, epoch as u64);
-        (0..q * self.cfg.batch).map(|_| rng.index(rows) as u32).collect()
     }
 
     /// Run all epochs, evaluating per `eval_every`.
@@ -272,22 +292,168 @@ impl Trainer {
         RunResult { trace, epochs, x: self.x.clone(), initial_err: initial.norm_err }
     }
 
-    /// Dispatch one epoch by method.
+    /// Run one epoch: lend the topology to the protocol as an
+    /// [`EpochCtx`], dispatch through the trait, then fire the schedule
+    /// hook ([`Protocol::observe`]).
     pub fn run_epoch(&mut self) -> EpochStats {
         let e = self.epoch;
         self.epoch += 1;
-        match self.cfg.method.clone() {
-            MethodSpec::Anytime { t, combine, iterate } => {
-                self.epoch_anytime(e, t, combine, iterate)
-            }
-            MethodSpec::Generalized { t } => self.epoch_generalized(e, t),
-            MethodSpec::SyncSgd { steps_per_epoch } => self.epoch_sync(e, steps_per_epoch),
-            MethodSpec::Fnb { steps_per_epoch, b } => self.epoch_fnb(e, steps_per_epoch, b),
-            MethodSpec::GradientCoding { lr } => self.epoch_gradient_coding(e, lr),
-            MethodSpec::AsyncSgd { steps_per_update, horizon } => {
-                self.epoch_async(e, steps_per_update, horizon)
-            }
-        }
+        let mut proto = self.protocol.take().expect("protocol installed");
+        let stats = {
+            let mut ctx = EpochCtx {
+                epoch: e,
+                cfg: &self.cfg,
+                ds: &self.ds,
+                shards: &self.shards,
+                workers: &mut self.workers,
+                delay: &self.delay,
+                comm: &self.comm,
+                consts: self.consts,
+                root: &self.root,
+                x: &mut self.x,
+                x_workers: &mut self.x_workers,
+            };
+            let stats = proto.epoch(&mut ctx);
+            proto.observe(&stats, &ctx);
+            stats
+        };
+        self.protocol = Some(proto);
+        stats
+    }
+}
+
+/// Fluent [`Trainer`] construction: start from [`RunConfig::base`],
+/// override fields, pick a protocol by registry name (or supply a
+/// custom object), and `build()`.
+pub struct TrainerBuilder {
+    cfg: RunConfig,
+    ds: Option<Arc<Dataset>>,
+    protocol: Option<Box<dyn Protocol>>,
+}
+
+impl TrainerBuilder {
+    /// Replace the whole template config (keeps any later overrides).
+    /// Like the other method selectors, this supersedes any previously
+    /// supplied custom protocol object.
+    pub fn config(mut self, cfg: RunConfig) -> Self {
+        self.cfg = cfg;
+        self.protocol = None;
+        self
+    }
+
+    /// Start from a named figure preset (supersedes any previously
+    /// supplied custom protocol object).
+    pub fn preset(mut self, name: &str) -> Result<Self> {
+        self.cfg = RunConfig::preset(name)?;
+        self.protocol = None;
+        Ok(self)
+    }
+
+    /// Dataset to generate (from the config's seed).
+    pub fn dataset(mut self, spec: DataSpec) -> Self {
+        self.cfg.data = spec;
+        self
+    }
+
+    /// Use an externally-built dataset (shared-fairness comparisons).
+    pub fn shared_dataset(mut self, ds: Arc<Dataset>) -> Self {
+        self.ds = Some(ds);
+        self
+    }
+
+    /// Select the method by registry name with a JSON params object,
+    /// e.g. `.protocol("anytime", parse(r#"{"t": 10.0}"#)?)`.
+    pub fn protocol(mut self, name: &str, params: crate::ser::Value) -> Result<Self> {
+        let canonical = crate::protocols::canonical_kind(name)?.to_string();
+        self.cfg.method = MethodSpec { kind: canonical, params };
+        self.protocol = None; // name selection supersedes any custom object
+        Ok(self)
+    }
+
+    /// Select the method from an already-built spec (the typed
+    /// constructors in `protocols::*::spec*`).
+    pub fn method(mut self, spec: MethodSpec) -> Self {
+        self.cfg.method = spec;
+        self.protocol = None; // spec selection supersedes any custom object
+        self
+    }
+
+    /// Bypass the registry with a protocol object — the extension path
+    /// for downstream crates that implement [`Protocol`] themselves.
+    /// `label` becomes the trace-label method name.
+    pub fn custom_protocol(mut self, label: &str, protocol: Box<dyn Protocol>) -> Self {
+        self.cfg.method =
+            MethodSpec::new(format!("{}{label}", crate::protocols::CUSTOM_KIND_PREFIX));
+        self.protocol = Some(protocol);
+        self
+    }
+
+    pub fn name(mut self, name: impl Into<String>) -> Self {
+        self.cfg.name = name.into();
+        self
+    }
+    pub fn workers(mut self, n: usize) -> Self {
+        self.cfg.workers = n;
+        self
+    }
+    pub fn redundancy(mut self, s: usize) -> Self {
+        self.cfg.redundancy = s;
+        self
+    }
+    pub fn batch(mut self, b: usize) -> Self {
+        self.cfg.batch = b;
+        self
+    }
+    pub fn epochs(mut self, e: usize) -> Self {
+        self.cfg.epochs = e;
+        self
+    }
+    pub fn eval_every(mut self, k: usize) -> Self {
+        self.cfg.eval_every = k;
+        self
+    }
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.cfg.seed = seed;
+        self
+    }
+    pub fn schedule(mut self, s: Schedule) -> Self {
+        self.cfg.schedule = s;
+        self
+    }
+    pub fn env(mut self, env: StragglerEnv) -> Self {
+        self.cfg.env = env;
+        self
+    }
+    pub fn comm(mut self, comm: CommSpec) -> Self {
+        self.cfg.comm = comm;
+        self
+    }
+    pub fn t_c(mut self, t_c: f64) -> Self {
+        self.cfg.t_c = t_c;
+        self
+    }
+    pub fn max_passes(mut self, p: f64) -> Self {
+        self.cfg.max_passes = p;
+        self
+    }
+    pub fn backend(mut self, b: Backend) -> Self {
+        self.cfg.backend = b;
+        self
+    }
+
+    /// Validate and assemble the trainer.
+    pub fn build(self) -> Result<Trainer> {
+        let cfg = self.cfg;
+        cfg.validate()?;
+        let ds = match self.ds {
+            Some(ds) => ds,
+            None => Arc::new(build_dataset(&cfg)),
+        };
+        let protocol = match self.protocol {
+            Some(p) => p,
+            None => crate::protocols::build(&cfg.method, &cfg)?,
+        };
+        Trainer::assemble(cfg, ds, protocol)
     }
 }
 
@@ -349,7 +515,7 @@ pub fn reference_predictions(ds: &Dataset) -> Vec<f32> {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::config::{CombinePolicy, Iterate, Schedule};
+    use crate::protocols;
     use crate::straggler::StragglerEnv;
 
     fn tiny_cfg() -> RunConfig {
@@ -360,11 +526,7 @@ mod tests {
         c.epochs = 5;
         c.env = StragglerEnv::ideal(0.05);
         c.schedule = Schedule::Constant { lr: 5e-3 };
-        c.method = MethodSpec::Anytime {
-            t: 10.0,
-            combine: CombinePolicy::Proportional,
-            iterate: Iterate::Last,
-        };
+        c.method = protocols::anytime::spec(10.0);
         c
     }
 
@@ -380,6 +542,81 @@ mod tests {
         // Deterministic clock: ideal env, fixed comm -> epoch = T + comm.
         let p1 = &res.trace.points[1];
         assert!((p1.time - 12.0).abs() < 1e-9, "time {}", p1.time); // T + uplink + broadcast
+    }
+
+    #[test]
+    fn builder_matches_config_construction() {
+        let direct = Trainer::new(tiny_cfg()).unwrap().run();
+        let via_builder = Trainer::builder()
+            .dataset(DataSpec::Synthetic { m: 2_000, d: 16, noise: 1e-3 })
+            .workers(4)
+            .batch(8)
+            .epochs(5)
+            .env(StragglerEnv::ideal(0.05))
+            .schedule(Schedule::Constant { lr: 5e-3 })
+            .method(protocols::anytime::spec(10.0))
+            .build()
+            .unwrap()
+            .run();
+        assert_eq!(direct.x, via_builder.x, "builder must assemble the identical run");
+        // And by registry name + JSON params.
+        let via_name = Trainer::builder()
+            .dataset(DataSpec::Synthetic { m: 2_000, d: 16, noise: 1e-3 })
+            .workers(4)
+            .batch(8)
+            .epochs(5)
+            .env(StragglerEnv::ideal(0.05))
+            .schedule(Schedule::Constant { lr: 5e-3 })
+            .protocol("anytime", crate::ser::parse(r#"{"t": 10.0}"#).unwrap())
+            .unwrap()
+            .build()
+            .unwrap()
+            .run();
+        assert_eq!(direct.x, via_name.x);
+    }
+
+    #[test]
+    fn builder_rejects_bad_protocols() {
+        assert!(Trainer::builder()
+            .protocol("warp-drive", crate::ser::parse("{}").unwrap())
+            .is_err());
+        // Params validated at build():
+        let b = Trainer::builder()
+            .dataset(DataSpec::Synthetic { m: 2_000, d: 16, noise: 1e-3 })
+            .workers(4)
+            .protocol("anytime", crate::ser::parse("{}").unwrap()) // missing t
+            .unwrap();
+        assert!(b.build().is_err());
+    }
+
+    #[test]
+    fn custom_protocol_runs_outside_the_registry() {
+        /// A do-nothing protocol: everyone reports instantly, x unchanged.
+        struct Noop;
+        impl Protocol for Noop {
+            fn epoch(&mut self, ctx: &mut crate::protocols::EpochCtx) -> EpochStats {
+                let n = ctx.n();
+                EpochStats {
+                    q: vec![0; n],
+                    received: vec![true; n],
+                    compute_secs: 1.0,
+                    comm_secs: 0.0,
+                    lambda: vec![0.0; n],
+                    worker_finish: vec![Some(1.0); n],
+                }
+            }
+        }
+        let mut tr = Trainer::builder()
+            .dataset(DataSpec::Synthetic { m: 2_000, d: 16, noise: 1e-3 })
+            .workers(4)
+            .epochs(3)
+            .custom_protocol("noop", Box::new(Noop))
+            .build()
+            .unwrap();
+        let res = tr.run();
+        assert_eq!(res.x, vec![0.0; 16], "noop must leave x untouched");
+        assert!((tr.now() - 3.0).abs() < 1e-12);
+        assert!(res.trace.label.starts_with("custom:noop["));
     }
 
     #[test]
@@ -431,16 +668,5 @@ mod tests {
         let tr = Trainer::new(cfg).unwrap();
         // shard rows = 2000/4 = 500; 0.5 passes / batch 8 = 32 steps.
         assert_eq!(tr.max_steps(0), 32);
-    }
-
-    #[test]
-    fn sample_idx_deterministic_and_in_range() {
-        let tr = Trainer::new(tiny_cfg()).unwrap();
-        let a = tr.sample_idx(1, 3, 20);
-        let b = tr.sample_idx(1, 3, 20);
-        assert_eq!(a, b);
-        assert_eq!(a.len(), 20 * 8);
-        assert!(a.iter().all(|&i| (i as usize) < tr.shards[1].rows()));
-        assert_ne!(tr.sample_idx(2, 3, 20), a);
     }
 }

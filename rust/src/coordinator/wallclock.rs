@@ -14,8 +14,9 @@
 //! are not `Send`; see `backend::WorkerCompute` docs).
 
 use crate::backend::{Consts, Evaluator, NativeEvaluator, NativeWorker, WorkerCompute};
-use crate::config::{Backend, CombinePolicy, MethodSpec, RunConfig};
-use crate::coordinator::{combine_lambda, reference_predictions};
+use crate::config::{Backend, RunConfig};
+use crate::coordinator::reference_predictions;
+use crate::protocols::combine_lambda;
 use crate::data::Dataset;
 use crate::exec::{job, WorkerPool};
 use crate::linalg::weighted_sum;
@@ -56,9 +57,13 @@ pub struct WallclockResult {
 /// per-step delays scale identically, so realized q profiles match the
 /// simulated mode's up to scheduling noise.
 pub fn run_wallclock(cfg: &RunConfig, ds: Arc<Dataset>, time_scale: f64) -> Result<WallclockResult> {
-    let MethodSpec::Anytime { t, combine, .. } = cfg.method.clone() else {
-        bail!("wall-clock mode supports the Anytime method only");
-    };
+    if cfg.method.name() != "anytime" {
+        bail!(
+            "wall-clock mode supports the `anytime` protocol only (got `{}`)",
+            cfg.method.name()
+        );
+    }
+    let (t, combine, _iterate) = crate::protocols::anytime::parse(&cfg.method)?;
     if cfg.backend != Backend::Native {
         bail!("wall-clock mode requires the native backend (PJRT is thread-pinned)");
     }
@@ -190,8 +195,9 @@ pub fn run_wallclock(cfg: &RunConfig, ds: Arc<Dataset>, time_scale: f64) -> Resu
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::config::{DataSpec, Iterate, Schedule};
+    use crate::config::{DataSpec, Schedule};
     use crate::coordinator::build_dataset;
+    use crate::protocols;
     use crate::straggler::{DelaySpec, StragglerEnv};
 
     fn cfg() -> RunConfig {
@@ -201,11 +207,7 @@ mod tests {
         c.batch = 8;
         c.epochs = 4;
         c.schedule = Schedule::Constant { lr: 5e-3 };
-        c.method = MethodSpec::Anytime {
-            t: 50.0,
-            combine: CombinePolicy::Proportional,
-            iterate: Iterate::Last,
-        };
+        c.method = protocols::anytime::spec(50.0);
         c.max_passes = 100.0;
         c.seed = 3;
         c
@@ -236,7 +238,7 @@ mod tests {
     #[test]
     fn wallclock_rejects_unsupported_configs() {
         let mut c = cfg();
-        c.method = MethodSpec::SyncSgd { steps_per_epoch: 10 };
+        c.method = protocols::sync::spec(10);
         let ds = Arc::new(build_dataset(&c));
         assert!(run_wallclock(&c, ds.clone(), 1e-3).is_err());
         let mut c2 = cfg();

@@ -213,11 +213,7 @@ pub fn variance_decay(o: &FigOpts) -> Result<Vec<(f64, f64, f64)>> {
     for t in T_GRID {
         for seed in 0..SEEDS {
             let mut c = cfg("fig3-anytime", o)?;
-            c.method = crate::config::MethodSpec::Anytime {
-                t,
-                combine: crate::config::CombinePolicy::Proportional,
-                iterate: crate::config::Iterate::Last,
-            };
+            c.method = crate::protocols::anytime::spec(t);
             c.epochs = 1;
             c.seed = 7_000 + seed;
             cfgs.push(c);
@@ -249,7 +245,7 @@ pub fn async_compare(o: &FigOpts) -> Result<Figure> {
     let mut c = cfg("fig3-anytime", o)?;
     c.name = "async".into();
     // Same per-epoch horizon as anytime's T+comm so time axes align.
-    c.method = crate::config::MethodSpec::AsyncSgd { steps_per_update: 16, horizon: 202.0 };
+    c.method = crate::protocols::async_sgd::spec(16, 202.0);
     fig.traces.extend(run_cfgs_on(&ds, &[cfg("fig3-anytime", o)?, c])?);
     Ok(fig)
 }
@@ -299,7 +295,7 @@ pub fn ablations(o: &FigOpts) -> Result<Vec<Figure>> {
         // FNB S=0 (loses worker 0's unique block)
         let mut c2 = base.clone();
         c2.name = "fnb-s0".into();
-        c2.method = crate::config::MethodSpec::Fnb { steps_per_epoch: 156, b: 2 };
+        c2.method = crate::protocols::fnb::spec(156, 2);
 
         // anytime S=0 (also loses the block — shows S matters, not method)
         let mut c3 = base.clone();
@@ -317,11 +313,7 @@ pub fn ablations(o: &FigOpts) -> Result<Vec<Figure>> {
         for t in [50.0, 100.0, 200.0, 400.0] {
             let mut c = cfg("fig3-anytime", o)?;
             c.name = format!("T={t}");
-            c.method = crate::config::MethodSpec::Anytime {
-                t,
-                combine: crate::config::CombinePolicy::Proportional,
-                iterate: crate::config::Iterate::Last,
-            };
+            c.method = crate::protocols::anytime::spec(t);
             cfgs.push(c);
         }
         fig.traces.extend(run_cfgs_on(&ds, &cfgs)?);
@@ -334,17 +326,14 @@ pub fn ablations(o: &FigOpts) -> Result<Vec<Figure>> {
         let mut fig = Figure::new("ablation_lambda_policy", "epoch");
         let mut cfgs = Vec::new();
         for (name, p) in [
-            ("proportional", crate::config::CombinePolicy::Proportional),
-            ("uniform", crate::config::CombinePolicy::Uniform),
-            ("fastest-only", crate::config::CombinePolicy::FastestOnly),
+            ("proportional", crate::protocols::CombinePolicy::Proportional),
+            ("uniform", crate::protocols::CombinePolicy::Uniform),
+            ("fastest-only", crate::protocols::CombinePolicy::FastestOnly),
         ] {
             let mut c = cfg("fig3-anytime", o)?;
             c.name = name.into();
-            c.method = crate::config::MethodSpec::Anytime {
-                t: 200.0,
-                combine: p,
-                iterate: crate::config::Iterate::Last,
-            };
+            c.method =
+                crate::protocols::anytime::spec_with(200.0, p, crate::protocols::Iterate::Last);
             cfgs.push(c);
         }
         fig.traces.extend(run_cfgs_on(&ds, &cfgs)?);
@@ -375,16 +364,16 @@ pub fn ablations(o: &FigOpts) -> Result<Vec<Figure>> {
         let mut fig = Figure::new("ablation_iterate", "epoch");
         let mut cfgs = Vec::new();
         for (name, it) in [
-            ("last", crate::config::Iterate::Last),
-            ("average", crate::config::Iterate::Average),
+            ("last", crate::protocols::Iterate::Last),
+            ("average", crate::protocols::Iterate::Average),
         ] {
             let mut c = cfg("fig3-anytime", o)?;
             c.name = name.into();
-            c.method = crate::config::MethodSpec::Anytime {
-                t: 200.0,
-                combine: crate::config::CombinePolicy::Proportional,
-                iterate: it,
-            };
+            c.method = crate::protocols::anytime::spec_with(
+                200.0,
+                crate::protocols::CombinePolicy::Proportional,
+                it,
+            );
             cfgs.push(c);
         }
         fig.traces.extend(run_cfgs_on(&ds, &cfgs)?);

@@ -14,6 +14,11 @@
 //! * **runtime** — loads the AOT artifacts via the PJRT C API (`xla`
 //!   crate) and executes them from the coordinator's hot loop.
 //!
+//! * **protocols** — the pluggable method layer: every
+//!   straggler-mitigation scheme (anytime, generalized, adaptive-T,
+//!   sync, fastest-(N−B), gradient coding, async) is a
+//!   [`protocols::Protocol`] behind a name-keyed registry; config, CLI,
+//!   sweep grids, and figures all resolve methods through it.
 //! * **sweep** — the experiment-campaign engine: parameter grids over
 //!   [`config::RunConfig`], a named scenario library, a bounded-thread
 //!   parallel runner, and multi-seed mean ± CI aggregation
@@ -46,6 +51,7 @@ pub mod lm;
 pub mod methods;
 pub mod metrics;
 pub mod partition;
+pub mod protocols;
 pub mod rng;
 pub mod runtime;
 pub mod sim;

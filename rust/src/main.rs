@@ -7,6 +7,8 @@
 //!                 aggregated to mean ± CI curves under `results/`.
 //! * `figures`   — regenerate the paper's figures (fig1..fig6, theory,
 //!                 ablations, all); writes CSV/JSON under `results/`.
+//! * `list`      — enumerate the registries: protocols (with aliases),
+//!                 sweep scenarios, and figure presets.
 //! * `partition` — print Table I for any (N, S) and validate it.
 //! * `inspect`   — list the AOT artifacts the runtime would load.
 
@@ -41,6 +43,7 @@ fn usage() -> String {
                   parallel; mean ± CI aggregates under results/)\n\
        figures    regenerate paper figures (fig1..fig6 | theory | ablations |\n\
                   variance | async | logreg | all)\n\
+       list       enumerate registered protocols, scenarios, and presets\n\
        partition  print + validate the Table-I data assignment\n\
        inspect    list AOT artifacts\n\n\
      Run `anytime-sgd <subcommand> --help` for flags.\n"
@@ -57,6 +60,7 @@ fn dispatch(args: &[String]) -> Result<()> {
         "train" => cmd_train(rest),
         "sweep" => cmd_sweep(rest),
         "figures" => cmd_figures(rest),
+        "list" => cmd_list(rest),
         "partition" => cmd_partition(rest),
         "inspect" => cmd_inspect(rest),
         "--help" | "-h" | "help" => {
@@ -312,6 +316,33 @@ fn cmd_figures(args: &[String]) -> Result<()> {
             fig.write(&out)?;
             println!("-> results/{}.csv\n", fig.name);
         }
+    }
+    Ok(())
+}
+
+fn cmd_list(args: &[String]) -> Result<()> {
+    let cmd = Command::new("list", "enumerate registered protocols, scenarios, and presets");
+    let _m = cmd.parse(args).map_err(|e| anyhow::anyhow!("{e}"))?;
+
+    println!("Protocols (config `method.kind` / `sweep --methods` / Trainer::builder):");
+    for p in anytime_sgd::protocols::REGISTRY {
+        let t = if p.uses_t { " [T-axis]" } else { "" };
+        let aliases = if p.aliases.is_empty() {
+            String::new()
+        } else {
+            format!("  (aliases: {})", p.aliases.join(", "))
+        };
+        println!("  {:<16} {}{t}{aliases}", p.name, p.about);
+    }
+
+    println!("\nScenarios (`sweep --scenario`):");
+    for s in anytime_sgd::sweep::scenarios::ALL {
+        println!("  {:<16} {}", s.name, s.about);
+    }
+
+    println!("\nFigure presets (`train --preset`):");
+    for p in anytime_sgd::config::PRESETS {
+        println!("  {p}");
     }
     Ok(())
 }

@@ -1,0 +1,101 @@
+//! Adaptive-T Anytime-Gradients — the registry's extensibility proof.
+//!
+//! Fixed budgets are only optimal for a known straggler regime. In the
+//! spirit of Hanna et al. 2020 ("Adaptive Distributed Stochastic
+//! Gradient Descent for Minimizing Delay in the Presence of
+//! Stragglers"), this protocol *tunes* the anytime epoch budget `T`
+//! online from the observed per-epoch q-profiles:
+//!
+//! * if at least half the fleet hits its data cap, the budget
+//!   overshoots — fast workers idle at the barrier — so `T` halves;
+//! * if at least half the fleet delivers zero steps, the budget
+//!   undershoots — epochs burn time without gradient work — so `T`
+//!   doubles;
+//! * `T` stays clamped to `[t_min, t_max]`.
+//!
+//! The epoch numerics are *exactly* [`super::anytime::run_epoch`] —
+//! with adaptation disabled (`t_min == t_max`) the trace is
+//! bit-identical to the plain `anytime` protocol (asserted in the
+//! golden-trace tests). Everything here goes through the public
+//! protocol API: no edits to `coordinator/` were needed to add it
+//! (DESIGN.md walks through this file as the how-to-add-a-protocol
+//! example).
+
+use super::{CombinePolicy, EpochCtx, Iterate, Protocol, ProtocolInfo};
+use crate::config::{MethodSpec, RunConfig};
+use crate::coordinator::EpochStats;
+use anyhow::{bail, Result};
+
+pub const INFO: ProtocolInfo = ProtocolInfo {
+    name: "adaptive",
+    aliases: &["adaptive-anytime"],
+    axis_aliases: &[],
+    about: "anytime with an online-tuned budget: halve/grow T from observed q-profiles",
+    uses_t: true,
+    build,
+    validate,
+    spec: axis_spec,
+};
+
+pub struct AdaptiveAnytime {
+    /// Current epoch budget (starts at the spec's `t`).
+    pub t: f64,
+    pub t_min: f64,
+    pub t_max: f64,
+    pub combine: CombinePolicy,
+    pub iterate: Iterate,
+    /// Cap hits observed in the last epoch (set in `epoch`, consumed by
+    /// the `observe` schedule hook).
+    capped: usize,
+}
+
+/// Spec with default clamp `[t/8, 8t]` and the paper's λ/iterate.
+pub fn spec(t: f64) -> MethodSpec {
+    MethodSpec::new(INFO.name).with("t", t)
+}
+
+fn parse(spec: &MethodSpec) -> Result<(f64, f64, f64, CombinePolicy, Iterate)> {
+    let (t, combine, iterate) = super::anytime::parse(spec)?;
+    let t_min = spec.get_f64("t_min").unwrap_or(t / 8.0);
+    let t_max = spec.get_f64("t_max").unwrap_or(t * 8.0);
+    if t_min <= 0.0 || t_max < t_min {
+        bail!("method `adaptive`: need 0 < t_min <= t_max (got [{t_min}, {t_max}])");
+    }
+    if t < t_min || t > t_max {
+        bail!("method `adaptive`: t={t} outside clamp [{t_min}, {t_max}]");
+    }
+    Ok((t, t_min, t_max, combine, iterate))
+}
+
+fn build(spec: &MethodSpec, _cfg: &RunConfig) -> Result<Box<dyn Protocol>> {
+    let (t, t_min, t_max, combine, iterate) = parse(spec)?;
+    Ok(Box::new(AdaptiveAnytime { t, t_min, t_max, combine, iterate, capped: 0 }))
+}
+
+fn validate(spec: &MethodSpec, _cfg: &RunConfig) -> Result<()> {
+    parse(spec).map(|_| ())
+}
+
+fn axis_spec(_axis: &str, cfg: &RunConfig, t_axis: Option<f64>) -> MethodSpec {
+    spec(t_axis.unwrap_or_else(|| super::base_t(cfg)))
+}
+
+impl Protocol for AdaptiveAnytime {
+    fn epoch(&mut self, ctx: &mut EpochCtx) -> EpochStats {
+        let stats = super::anytime::run_epoch(ctx, self.t, self.combine, self.iterate);
+        // Record cap hits while the topology is still in scope; the
+        // budget update itself happens in the schedule hook below.
+        self.capped = (0..stats.q.len()).filter(|&v| stats.q[v] >= ctx.max_steps(v)).count();
+        stats
+    }
+
+    fn observe(&mut self, stats: &EpochStats, _ctx: &EpochCtx) {
+        let n = stats.q.len().max(1);
+        let idle = stats.q.iter().filter(|&&qv| qv == 0).count();
+        if self.capped * 2 >= n {
+            self.t = (self.t * 0.5).max(self.t_min);
+        } else if idle * 2 >= n {
+            self.t = (self.t * 2.0).min(self.t_max);
+        }
+    }
+}

@@ -1,0 +1,152 @@
+//! Anytime-Gradients (the paper's Algorithms 1 + 2).
+//!
+//! Every worker computes for exactly `t` seconds (or until the one-pass
+//! cap); the master gathers whatever arrives within `t_c`, zeroes the
+//! rest (step 13), and combines with the policy's λ. The master's wait
+//! is the fixed budget T — the paper's headline deterministic epoch
+//! length.
+
+use super::{combine_lambda, CombinePolicy, EpochCtx, Iterate, Protocol, ProtocolInfo};
+use crate::config::{MethodSpec, RunConfig};
+use crate::coordinator::EpochStats;
+use crate::sim::wait;
+use crate::straggler::WorkerEpochRate;
+use anyhow::{anyhow, bail, Result};
+
+pub const INFO: ProtocolInfo = ProtocolInfo {
+    name: "anytime",
+    aliases: &[],
+    axis_aliases: &["anytime-uniform"],
+    about: "fixed time budget T per epoch; combine ALL partial work (Theorem 3)",
+    uses_t: true,
+    build,
+    validate,
+    spec: axis_spec,
+};
+
+/// The protocol state: pure parameters (no per-run mutability).
+pub struct Anytime {
+    pub t: f64,
+    pub combine: CombinePolicy,
+    pub iterate: Iterate,
+}
+
+/// Spec with the paper's defaults (proportional λ, last iterate).
+pub fn spec(t: f64) -> MethodSpec {
+    spec_with(t, CombinePolicy::Proportional, Iterate::Last)
+}
+
+/// Fully-parameterized spec.
+pub fn spec_with(t: f64, combine: CombinePolicy, iterate: Iterate) -> MethodSpec {
+    MethodSpec::new(INFO.name)
+        .with("t", t)
+        .with("combine", combine.name())
+        .with("iterate", iterate.name())
+}
+
+/// Parse `(t, combine, iterate)` from a spec (shared with the
+/// wall-clock runner and the adaptive protocol).
+pub fn parse(spec: &MethodSpec) -> Result<(f64, CombinePolicy, Iterate)> {
+    let t = spec
+        .get_f64("t")
+        .ok_or_else(|| anyhow!("method `{}` needs `t` (epoch budget seconds)", spec.kind))?;
+    if t <= 0.0 {
+        bail!("method `{}`: t must be > 0 (got {t})", spec.kind);
+    }
+    let combine = CombinePolicy::parse(spec.get_str("combine").unwrap_or("proportional"))?;
+    let iterate = Iterate::parse(spec.get_str("iterate").unwrap_or("last"))?;
+    Ok((t, combine, iterate))
+}
+
+fn build(spec: &MethodSpec, _cfg: &RunConfig) -> Result<Box<dyn Protocol>> {
+    let (t, combine, iterate) = parse(spec)?;
+    Ok(Box::new(Anytime { t, combine, iterate }))
+}
+
+fn validate(spec: &MethodSpec, _cfg: &RunConfig) -> Result<()> {
+    parse(spec).map(|_| ())
+}
+
+fn axis_spec(axis: &str, cfg: &RunConfig, t_axis: Option<f64>) -> MethodSpec {
+    let combine = if axis == "anytime-uniform" {
+        CombinePolicy::Uniform
+    } else {
+        CombinePolicy::Proportional
+    };
+    spec_with(t_axis.unwrap_or_else(|| super::base_t(cfg)), combine, Iterate::Last)
+}
+
+impl Protocol for Anytime {
+    fn epoch(&mut self, ctx: &mut EpochCtx) -> EpochStats {
+        run_epoch(ctx, self.t, self.combine, self.iterate)
+    }
+}
+
+/// One anytime epoch with explicit parameters — public so composing
+/// protocols (e.g. [`super::adaptive`]) reuse the exact numerics.
+pub fn run_epoch(
+    ctx: &mut EpochCtx,
+    t: f64,
+    policy: CombinePolicy,
+    iterate: Iterate,
+) -> EpochStats {
+    let e = ctx.epoch;
+    let n = ctx.n();
+    let mut q = vec![0usize; n];
+    let mut finish: Vec<Option<f64>> = vec![None; n];
+    let mut outputs: Vec<Option<Vec<f32>>> = vec![None; n];
+    // Every worker starts from the same broadcast x_{t-1}; the master
+    // vector only moves at the combine step below.
+    let x_snapshot = ctx.x.clone();
+
+    for v in 0..n {
+        let (qv, _used) = ctx.delay.steps_within(v, e, t, ctx.max_steps(v));
+        if matches!(ctx.delay.rate(v, e), WorkerEpochRate::Dead) {
+            continue; // never reports
+        }
+        // Workers report at the end of the budget; arrival = T + uplink.
+        let arrival = t + ctx.comm.delay(v, e, 0);
+        if arrival > ctx.cfg.t_c {
+            continue; // missed the waiting-time guard
+        }
+        finish[v] = Some(arrival);
+        if qv == 0 {
+            // Reported but completed nothing: x_vt = x_{t-1}, q_v = 0
+            // — contributes no weight under any policy.
+            continue;
+        }
+        let idx = ctx.sample_idx(v, qv);
+        let consts = ctx.consts;
+        let out = ctx.workers[v].run_steps(&x_snapshot, &idx, 0.0, consts);
+        q[v] = qv;
+        outputs[v] = Some(match iterate {
+            Iterate::Last => out.x_k,
+            Iterate::Average => out.x_bar,
+        });
+    }
+
+    let lambda = combine_lambda(policy, &q, &outputs);
+    ctx.apply_combine(&outputs, &lambda);
+
+    // Master-side wait: the fixed budget T (the paper's headline
+    // property — deterministic epoch length), then communication:
+    // the slowest received uplink, or the full T_c guard if some
+    // worker never reported (Algorithm 1's while-loop runs it out).
+    let compute = wait::anytime(t);
+    let all_reported = finish.iter().all(|f| f.is_some());
+    let uplink = if all_reported {
+        finish.iter().flatten().fold(0.0f64, |a, &b| a.max(b)) - t
+    } else {
+        (ctx.cfg.t_c - t).max(0.0)
+    };
+    let comm = uplink + ctx.broadcast_charge();
+    let received = finish.iter().map(|f| f.is_some()).collect();
+    EpochStats {
+        q,
+        received,
+        compute_secs: compute,
+        comm_secs: comm,
+        lambda,
+        worker_finish: finish,
+    }
+}

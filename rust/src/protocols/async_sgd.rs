@@ -1,0 +1,142 @@
+//! Parameter-server Async-SGD (paper §I's contrast): a discrete-event
+//! simulation of one `horizon`-second window.
+//!
+//! Each worker loops independently: snapshot the master vector, run
+//! `u = steps_per_update` local SGD steps, push the *delta*
+//! `x_w − snapshot`; the master applies deltas as they arrive — no
+//! barrier, so updates are computed against stale parameters (the
+//! staleness the paper's §I cites as Async-SGD's failure mode at
+//! scale). Events are processed in simulated-time order from a binary
+//! heap, so the interleaving is exactly time-consistent.
+
+use super::{EpochCtx, Protocol, ProtocolInfo};
+use crate::config::{MethodSpec, RunConfig};
+use crate::coordinator::EpochStats;
+use crate::straggler::WorkerEpochRate;
+use anyhow::{bail, Result};
+
+pub const INFO: ProtocolInfo = ProtocolInfo {
+    name: "async",
+    aliases: &[],
+    axis_aliases: &[],
+    about: "parameter-server async SGD: stale deltas applied as they arrive",
+    uses_t: true,
+    build,
+    validate,
+    spec: axis_spec,
+};
+
+pub struct AsyncSgd {
+    pub steps_per_update: usize,
+    pub horizon: f64,
+}
+
+pub fn spec(steps_per_update: usize, horizon: f64) -> MethodSpec {
+    MethodSpec::new(INFO.name)
+        .with("steps_per_update", steps_per_update)
+        .with("horizon", horizon)
+}
+
+fn parse(spec: &MethodSpec) -> Result<(usize, f64)> {
+    let u = spec.get_usize("steps_per_update").unwrap_or(16);
+    if u == 0 {
+        bail!("method `async`: steps_per_update must be >= 1");
+    }
+    let horizon = spec.get_f64("horizon").unwrap_or(100.0);
+    if horizon <= 0.0 {
+        bail!("method `async`: horizon must be > 0 (got {horizon})");
+    }
+    Ok((u, horizon))
+}
+
+fn build(spec: &MethodSpec, _cfg: &RunConfig) -> Result<Box<dyn Protocol>> {
+    let (steps_per_update, horizon) = parse(spec)?;
+    Ok(Box::new(AsyncSgd { steps_per_update, horizon }))
+}
+
+fn validate(spec: &MethodSpec, _cfg: &RunConfig) -> Result<()> {
+    parse(spec).map(|_| ())
+}
+
+fn axis_spec(_axis: &str, cfg: &RunConfig, t_axis: Option<f64>) -> MethodSpec {
+    // The T axis maps onto the event horizon so time axes align with
+    // the budgeted methods.
+    spec(16, t_axis.unwrap_or_else(|| super::base_t(cfg)))
+}
+
+impl Protocol for AsyncSgd {
+    fn epoch(&mut self, ctx: &mut EpochCtx) -> EpochStats {
+        use std::cmp::Reverse;
+        use std::collections::BinaryHeap;
+
+        let (e, u, horizon) = (ctx.epoch, self.steps_per_update, self.horizon);
+        let n = ctx.n();
+        // (finish_time, worker, dispatch_count) min-heap. f64 is not Ord;
+        // order by bits (times are non-negative finite here).
+        #[derive(PartialEq, Eq, PartialOrd, Ord)]
+        struct Key(u64, usize, usize);
+        let key = |t: f64, v: usize, c: usize| Reverse(Key(t.to_bits(), v, c));
+
+        let mut heap = BinaryHeap::new();
+        let mut snapshots: Vec<Vec<f32>> = vec![Vec::new(); n];
+        let mut dispatch_count = vec![0usize; n];
+        let mut q = vec![0usize; n];
+        let mut received = vec![false; n];
+        let mut last_finish: Vec<Option<f64>> = vec![None; n];
+
+        // Initial dispatch: every live worker grabs the current x.
+        for v in 0..n {
+            match ctx.delay.rate(v, e) {
+                WorkerEpochRate::Dead => continue,
+                WorkerEpochRate::StepSecs(rate) => {
+                    let rt = ctx.comm.delay(v, e, 0) + ctx.comm.delay(v, e, 1);
+                    let finish = u as f64 * rate + rt;
+                    if finish <= horizon {
+                        snapshots[v] = ctx.x.clone();
+                        heap.push(key(finish, v, 0));
+                    }
+                }
+            }
+        }
+
+        while let Some(Reverse(Key(bits, v, c))) = heap.pop() {
+            let now = f64::from_bits(bits);
+            // Compute the worker's u steps from its snapshot (real
+            // numerics), apply the delta to the (possibly moved-on) x.
+            let mut rng = ctx.root.split("async-mb", v as u64, (e * 1_000_003 + c) as u64);
+            let rows = ctx.workers[v].shard_rows();
+            let idx: Vec<u32> =
+                (0..u * ctx.cfg.batch).map(|_| rng.index(rows) as u32).collect();
+            let t_sched = (dispatch_count[v] * u) as f32;
+            let consts = ctx.consts;
+            let out = ctx.workers[v].run_steps(&snapshots[v], &idx, t_sched, consts);
+            for ((xm, &xw), &s) in ctx.x.iter_mut().zip(out.x_k.iter()).zip(snapshots[v].iter()) {
+                *xm += xw - s;
+            }
+            q[v] += u;
+            received[v] = true;
+            last_finish[v] = Some(now);
+            dispatch_count[v] += 1;
+
+            // Redispatch if the next round still fits the horizon.
+            if let WorkerEpochRate::StepSecs(rate) = ctx.delay.rate(v, e) {
+                let rt = ctx.comm.delay(v, e, 0) + ctx.comm.delay(v, e, 1);
+                let next = now + u as f64 * rate + rt;
+                if next <= horizon {
+                    snapshots[v] = ctx.x.clone();
+                    heap.push(key(next, v, c + 1));
+                }
+            }
+        }
+
+        let lambda = vec![0.0; n];
+        EpochStats {
+            q,
+            received,
+            compute_secs: horizon,
+            comm_secs: 0.0,
+            lambda,
+            worker_finish: last_finish,
+        }
+    }
+}

@@ -1,0 +1,108 @@
+//! Fastest N−B (Pan et al.): fixed steps; the master proceeds after the
+//! (N−B)-th arrival and *discards* everything else.
+
+use super::{combine_lambda, CombinePolicy, EpochCtx, Protocol, ProtocolInfo};
+use crate::config::{MethodSpec, RunConfig};
+use crate::coordinator::EpochStats;
+use crate::sim::wait;
+use crate::straggler::WorkerEpochRate;
+use anyhow::{anyhow, bail, Result};
+
+pub const INFO: ProtocolInfo = ProtocolInfo {
+    name: "fnb",
+    aliases: &[],
+    axis_aliases: &[],
+    about: "fixed steps/epoch; wait for the fastest N-B workers, discard the rest",
+    uses_t: false,
+    build,
+    validate,
+    spec: axis_spec,
+};
+
+pub struct Fnb {
+    pub steps_per_epoch: usize,
+    pub b: usize,
+}
+
+pub fn spec(steps_per_epoch: usize, b: usize) -> MethodSpec {
+    MethodSpec::new(INFO.name).with("steps_per_epoch", steps_per_epoch).with("b", b)
+}
+
+fn parse(spec: &MethodSpec, cfg: &RunConfig) -> Result<(usize, usize)> {
+    let steps = spec
+        .get_usize("steps_per_epoch")
+        .ok_or_else(|| anyhow!("method `fnb` needs `steps_per_epoch`"))?;
+    if steps == 0 {
+        bail!("method `fnb`: steps_per_epoch must be >= 1");
+    }
+    let b = spec.get_usize("b").ok_or_else(|| anyhow!("method `fnb` needs `b`"))?;
+    // B >= N would make the master wait for the fastest N-B <= 0 workers
+    // (an empty χ every epoch, and an underflowing order statistic).
+    if b >= cfg.workers {
+        bail!("FNB B={b} must be < N={} (the master waits for N-B workers)", cfg.workers);
+    }
+    Ok((steps, b))
+}
+
+fn build(spec: &MethodSpec, cfg: &RunConfig) -> Result<Box<dyn Protocol>> {
+    let (steps_per_epoch, b) = parse(spec, cfg)?;
+    Ok(Box::new(Fnb { steps_per_epoch, b }))
+}
+
+fn validate(spec: &MethodSpec, cfg: &RunConfig) -> Result<()> {
+    parse(spec, cfg).map(|_| ())
+}
+
+fn axis_spec(_axis: &str, cfg: &RunConfig, _t: Option<f64>) -> MethodSpec {
+    // Pan et al.'s setting: wait for the fastest ~N/5 (Fig. 4 uses
+    // B = 8 of N = 10); clamp to a valid 0 <= B < N.
+    let b = (cfg.workers * 4 / 5).min(cfg.workers.saturating_sub(1));
+    spec(super::pass_steps(cfg), b)
+}
+
+impl Protocol for Fnb {
+    fn epoch(&mut self, ctx: &mut EpochCtx) -> EpochStats {
+        let (e, steps, b) = (ctx.epoch, self.steps_per_epoch, self.b);
+        let n = ctx.n();
+        let k = n - b;
+        let mut arrivals: Vec<Option<f64>> = vec![None; n];
+        for v in 0..n {
+            if let WorkerEpochRate::StepSecs(rate) = ctx.delay.rate(v, e) {
+                let t = steps as f64 * rate + ctx.comm.delay(v, e, 0);
+                if t <= ctx.cfg.t_c {
+                    arrivals[v] = Some(t);
+                }
+            }
+        }
+        // The k fastest arrivals form χ; everyone else is discarded.
+        let cutoff = wait::fastest_k(&arrivals, k, ctx.cfg.t_c);
+        let mut order: Vec<usize> = (0..n).filter(|&v| arrivals[v].is_some()).collect();
+        order.sort_by(|&a, &b2| arrivals[a].partial_cmp(&arrivals[b2]).unwrap());
+        let chi: Vec<usize> = order.into_iter().take(k).collect();
+
+        let mut q = vec![0usize; n];
+        let mut outputs: Vec<Option<Vec<f32>>> = vec![None; n];
+        // Every worker in χ starts from the same broadcast x_{t-1}.
+        let x_snapshot = ctx.x.clone();
+        for &v in &chi {
+            let idx = ctx.sample_idx(v, steps);
+            let consts = ctx.consts;
+            let out = ctx.workers[v].run_steps(&x_snapshot, &idx, 0.0, consts);
+            q[v] = steps;
+            outputs[v] = Some(out.x_k);
+        }
+
+        let lambda = combine_lambda(CombinePolicy::Uniform, &q, &outputs);
+        ctx.apply_combine(&outputs, &lambda);
+        let comm = ctx.broadcast_charge();
+        let received = (0..n).map(|v| chi.contains(&v)).collect();
+        EpochStats {
+            q,
+            received,
+            compute_secs: cutoff,
+            comm_secs: comm,
+            lambda,
+            worker_finish: arrivals,
+        }
+    }
+}

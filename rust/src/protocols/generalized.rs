@@ -1,0 +1,124 @@
+//! §V Generalized Anytime-Gradients: workers keep stepping during the
+//! communication round-trip and blend via eq. (13).
+
+use super::{combine_lambda, CombinePolicy, EpochCtx, Protocol, ProtocolInfo};
+use crate::config::{MethodSpec, RunConfig};
+use crate::coordinator::EpochStats;
+use crate::straggler::WorkerEpochRate;
+use crate::theory;
+use anyhow::{anyhow, bail, Result};
+
+pub const INFO: ProtocolInfo = ProtocolInfo {
+    name: "generalized",
+    aliases: &[],
+    axis_aliases: &[],
+    about: "anytime + idle-period compute during the comm round-trip (eq. 13 blend)",
+    uses_t: true,
+    build,
+    validate,
+    spec: axis_spec,
+};
+
+pub struct Generalized {
+    pub t: f64,
+}
+
+pub fn spec(t: f64) -> MethodSpec {
+    MethodSpec::new(INFO.name).with("t", t)
+}
+
+fn parse(spec: &MethodSpec) -> Result<f64> {
+    let t = spec
+        .get_f64("t")
+        .ok_or_else(|| anyhow!("method `generalized` needs `t` (epoch budget seconds)"))?;
+    if t <= 0.0 {
+        bail!("method `generalized`: t must be > 0 (got {t})");
+    }
+    Ok(t)
+}
+
+fn build(spec: &MethodSpec, _cfg: &RunConfig) -> Result<Box<dyn Protocol>> {
+    Ok(Box::new(Generalized { t: parse(spec)? }))
+}
+
+fn validate(spec: &MethodSpec, _cfg: &RunConfig) -> Result<()> {
+    parse(spec).map(|_| ())
+}
+
+fn axis_spec(_axis: &str, cfg: &RunConfig, t_axis: Option<f64>) -> MethodSpec {
+    spec(t_axis.unwrap_or_else(|| super::base_t(cfg)))
+}
+
+impl Protocol for Generalized {
+    fn epoch(&mut self, ctx: &mut EpochCtx) -> EpochStats {
+        let (e, t) = (ctx.epoch, self.t);
+        let n = ctx.n();
+        let mut q = vec![0usize; n];
+        let mut qbar = vec![0usize; n];
+        let mut outputs: Vec<Option<Vec<f32>>> = vec![None; n];
+        let mut finish: Vec<Option<f64>> = vec![None; n];
+        let mut round_trips = vec![0.0f64; n];
+
+        // Phase 1: the budgeted epoch (from each worker's own vector).
+        for v in 0..n {
+            let (qv, used) = ctx.delay.steps_within(v, e, t, ctx.max_steps(v));
+            if matches!(ctx.delay.rate(v, e), WorkerEpochRate::Dead) {
+                continue;
+            }
+            finish[v] = Some(used + ctx.comm.delay(v, e, 0));
+            if qv == 0 {
+                continue;
+            }
+            let idx = ctx.sample_idx(v, qv);
+            let consts = ctx.consts;
+            let start = ctx.x_workers[v].clone();
+            let out = ctx.workers[v].run_steps(&start, &idx, 0.0, consts);
+            q[v] = qv;
+            outputs[v] = Some(out.x_k);
+        }
+
+        // Master combines with Theorem-3 weights (the generalized scheme
+        // builds on the proportional rule).
+        let lambda = combine_lambda(CombinePolicy::Proportional, &q, &outputs);
+        ctx.apply_combine(&outputs, &lambda);
+        let sum_q: usize = q.iter().sum();
+
+        // Phase 2: idle-period compute + worker-side blend (eq. 13).
+        for v in 0..n {
+            let rt = ctx.comm.delay(v, e, 0) + ctx.comm.delay(v, e, 1);
+            round_trips[v] = rt;
+            if matches!(ctx.delay.rate(v, e), WorkerEpochRate::Dead) {
+                continue;
+            }
+            let start = match &outputs[v] {
+                Some(x) => x.clone(),
+                None => ctx.x_workers[v].clone(),
+            };
+            let (qb, _) = ctx.delay.steps_within(v, e, rt, ctx.max_steps(v));
+            let xbar_v = if qb > 0 {
+                let mut rng = ctx.root.split("idle-minibatch", v as u64, e as u64);
+                let rows = ctx.workers[v].shard_rows();
+                let idx: Vec<u32> =
+                    (0..qb * ctx.cfg.batch).map(|_| rng.index(rows) as u32).collect();
+                qbar[v] = qb;
+                let consts = ctx.consts;
+                ctx.workers[v].run_steps(&start, &idx, q[v] as f32, consts).x_k
+            } else {
+                start
+            };
+            // x_v^{t+1} = λ_vt x^t + (1 − λ_vt) x̄_vt.
+            let lam_vt = theory::generalized_lambda(sum_q, qbar[v]) as f32;
+            let xg = &*ctx.x;
+            ctx.x_workers[v] = xg
+                .iter()
+                .zip(xbar_v.iter())
+                .map(|(&g, &l)| lam_vt * g + (1.0 - lam_vt) * l)
+                .collect();
+        }
+
+        // Time: budget T, then the round trip overlaps the idle compute.
+        let comm = round_trips.iter().cloned().fold(0.0f64, f64::max).min(ctx.cfg.t_c);
+        let received = finish.iter().map(|f| f.is_some()).collect();
+        EpochStats { q, received, compute_secs: t, comm_secs: comm, lambda, worker_finish: finish }
+    }
+}

@@ -1,0 +1,113 @@
+//! Gradient Coding (Tandon et al.): coded full-gradient descent.
+//!
+//! Workers compute full gradients of their S+1 blocks (work ∝ shard
+//! rows), send one coded vector; the master decodes the exact full
+//! gradient from the fastest N−S and takes a GD step.
+
+use super::{EpochCtx, Protocol, ProtocolInfo};
+use crate::config::{MethodSpec, RunConfig};
+use crate::coordinator::EpochStats;
+use crate::methods::gradient_coding::GradientCode;
+use crate::sim::wait;
+use crate::straggler::WorkerEpochRate;
+use anyhow::{bail, Result};
+
+pub const INFO: ProtocolInfo = ProtocolInfo {
+    name: "gradient-coding",
+    aliases: &["gc"],
+    axis_aliases: &[],
+    about: "coded full-gradient descent; exact decode from the fastest N-S workers",
+    uses_t: false,
+    build,
+    validate,
+    spec: axis_spec,
+};
+
+pub struct GradientCoding {
+    pub lr: f64,
+    /// The (N, S) code, built once per run from the config topology.
+    code: GradientCode,
+}
+
+pub fn spec(lr: f64) -> MethodSpec {
+    MethodSpec::new(INFO.name).with("lr", lr)
+}
+
+fn parse(spec: &MethodSpec) -> Result<f64> {
+    let lr = spec.get_f64("lr").unwrap_or(0.4);
+    if lr <= 0.0 {
+        bail!("method `gradient-coding`: lr must be > 0 (got {lr})");
+    }
+    Ok(lr)
+}
+
+fn build(spec: &MethodSpec, cfg: &RunConfig) -> Result<Box<dyn Protocol>> {
+    let lr = parse(spec)?;
+    let code = GradientCode::new(cfg.workers, cfg.redundancy, cfg.seed);
+    Ok(Box::new(GradientCoding { lr, code }))
+}
+
+fn validate(spec: &MethodSpec, _cfg: &RunConfig) -> Result<()> {
+    parse(spec).map(|_| ())
+}
+
+fn axis_spec(_axis: &str, _cfg: &RunConfig, _t: Option<f64>) -> MethodSpec {
+    spec(0.4)
+}
+
+impl Protocol for GradientCoding {
+    fn epoch(&mut self, ctx: &mut EpochCtx) -> EpochStats {
+        let (e, lr) = (ctx.epoch, self.lr);
+        let n = ctx.n();
+        let code = &self.code;
+        let k = n - code.s();
+
+        // Work model: processing R rows costs (R / batch) step-times.
+        let mut arrivals: Vec<Option<f64>> = vec![None; n];
+        for v in 0..n {
+            if let WorkerEpochRate::StepSecs(rate) = ctx.delay.rate(v, e) {
+                let work = ctx.shards[v].rows() as f64 / ctx.cfg.batch as f64;
+                let t = work * rate + ctx.comm.delay(v, e, 0);
+                if t <= ctx.cfg.t_c {
+                    arrivals[v] = Some(t);
+                }
+            }
+        }
+        let cutoff = wait::fastest_k(&arrivals, k, ctx.cfg.t_c);
+        let mut order: Vec<usize> = (0..n).filter(|&v| arrivals[v].is_some()).collect();
+        order.sort_by(|&a, &b| arrivals[a].partial_cmp(&arrivals[b]).unwrap());
+        let chi: Vec<usize> = order.into_iter().take(k).collect();
+
+        let mut q = vec![0usize; n];
+        let mut received_vec = vec![false; n];
+        // Real numerics: block gradients + encode + decode.
+        let mut coded: Vec<(usize, Vec<f32>)> = Vec::with_capacity(chi.len());
+        for &v in &chi {
+            let grads: Vec<Vec<f32>> = code
+                .blocks_of(v)
+                .iter()
+                .map(|&blk| ctx.block_gradient(blk))
+                .collect();
+            coded.push((v, code.encode(v, &grads)));
+            q[v] = ctx.shards[v].rows() / ctx.cfg.batch;
+            received_vec[v] = true;
+        }
+        if let Some(grad) = code.decode(&coded) {
+            // x ← x − lr · (mean gradient over the dataset).
+            let scale = -(lr as f32) / ctx.ds.rows() as f32;
+            crate::linalg::axpy(scale, &grad, &mut *ctx.x);
+        }
+        // else: undecodable epoch (|χ| < N−S) — x unchanged, time burned.
+
+        let comm = ctx.broadcast_charge();
+        let lambda = vec![0.0; n];
+        EpochStats {
+            q,
+            received: received_vec,
+            compute_secs: cutoff,
+            comm_secs: comm,
+            lambda,
+            worker_finish: arrivals,
+        }
+    }
+}

@@ -1,0 +1,486 @@
+//! The pluggable protocol layer: every distributed-SGD method is a
+//! [`Protocol`] behind a name-keyed [`REGISTRY`].
+//!
+//! The paper's contribution is one point in a *family* of
+//! straggler-mitigation protocols (wait-for-all, fastest-(N−B),
+//! Gradient Coding, anytime, generalized anytime, adaptive variants…).
+//! This module is the family's extension point: each method lives in
+//! its own submodule, implements [`Protocol`], and registers a
+//! [`ProtocolInfo`] entry. `config`, the CLI, the sweep grid, and the
+//! figure harness all resolve method names through the registry — the
+//! coordinator core ([`crate::coordinator`]) never matches on a method
+//! and shrinks to topology + clock + evaluation.
+//!
+//! Adding a protocol (the DESIGN.md walkthrough uses
+//! [`adaptive`] as the worked example):
+//!
+//! 1. create `protocols/<name>.rs` with a struct implementing
+//!    [`Protocol::epoch`] (and, for self-tuning methods,
+//!    [`Protocol::observe`] — the schedule hook);
+//! 2. declare a `pub const INFO: ProtocolInfo` describing how to parse
+//!    params, validate them against a config, and derive a default spec
+//!    for a sweep-grid axis value;
+//! 3. add `INFO` to [`REGISTRY`].
+//!
+//! Nothing else changes: the protocol is immediately selectable from
+//! config JSON (`{"method": {"kind": "<name>", ...}}`), the CLI
+//! (`sweep --methods <name>`, `anytime-sgd list`), sweep grids, and
+//! [`crate::coordinator::Trainer::builder`]. Library users can also
+//! bypass the registry entirely with
+//! `Trainer::builder().custom_protocol(..)`.
+
+pub mod adaptive;
+pub mod anytime;
+pub mod async_sgd;
+pub mod fnb;
+pub mod generalized;
+pub mod gradient_coding;
+pub mod sync;
+
+use crate::backend::{Consts, WorkerCompute};
+use crate::config::{MethodSpec, RunConfig};
+use crate::coordinator::EpochStats;
+use crate::data::Dataset;
+use crate::linalg::weighted_sum;
+use crate::partition::Shard;
+use crate::rng::Xoshiro256pp;
+use crate::straggler::{CommModel, DelayModel};
+use anyhow::{bail, Result};
+use std::sync::Arc;
+
+/// One distributed-SGD method. A protocol owns its own parameters and
+/// per-run state (e.g. the gradient code, an adaptive budget); the
+/// topology it runs over arrives fresh each epoch as an [`EpochCtx`].
+pub trait Protocol {
+    /// Execute one epoch's real numerics and return the modeled time
+    /// charges. Implementations mutate `ctx.x` (the master vector) via
+    /// [`EpochCtx::apply_combine`] or directly.
+    fn epoch(&mut self, ctx: &mut EpochCtx) -> EpochStats;
+
+    /// Schedule hook: observe the finished epoch's stats (q-profile, χ,
+    /// realized times). Self-tuning protocols adjust their parameters
+    /// here; the default is a no-op.
+    fn observe(&mut self, stats: &EpochStats, ctx: &EpochCtx) {
+        let _ = (stats, ctx);
+    }
+}
+
+/// One epoch's view of the trainer topology, lent to the protocol.
+///
+/// Fields are the coordinator's own state, reborrowed per epoch; helper
+/// methods cover the shared sub-calculus (minibatch sampling streams,
+/// step caps, combining, communication charges) so protocol modules
+/// stay small.
+pub struct EpochCtx<'a> {
+    /// Epoch index `e` (0-based).
+    pub epoch: usize,
+    pub cfg: &'a RunConfig,
+    pub ds: &'a Arc<Dataset>,
+    pub shards: &'a [Arc<Shard>],
+    pub workers: &'a mut [Box<dyn WorkerCompute>],
+    pub delay: &'a DelayModel,
+    pub comm: &'a CommModel,
+    pub consts: Consts,
+    pub root: &'a Xoshiro256pp,
+    /// Master's combined parameter vector x_t.
+    pub x: &'a mut Vec<f32>,
+    /// Per-worker parameter vectors (generalized anytime only).
+    pub x_workers: &'a mut Vec<Vec<f32>>,
+}
+
+impl EpochCtx<'_> {
+    /// Worker count N.
+    pub fn n(&self) -> usize {
+        self.cfg.workers
+    }
+
+    /// Max SGD steps worker `v` may take in one epoch (Algorithm 2's
+    /// one-pass guard, scaled by `cfg.max_passes`).
+    pub fn max_steps(&self, v: usize) -> usize {
+        let rows = self.shards[v].rows();
+        ((self.cfg.max_passes * rows as f64 / self.cfg.batch as f64).ceil() as usize).max(1)
+    }
+
+    /// Seeded minibatch index stream for worker `v` this epoch:
+    /// `q*batch` uniform draws over the shard rows (Algorithm 2 step 6).
+    pub fn sample_idx(&self, v: usize, q: usize) -> Vec<u32> {
+        let rows = self.shards[v].rows();
+        let mut rng = self.root.split("minibatch", v as u64, self.epoch as u64);
+        (0..q * self.cfg.batch).map(|_| rng.index(rows) as u32).collect()
+    }
+
+    /// Combine λ-weighted worker outputs into the master vector.
+    /// Workers with λ_v = 0 or no output are skipped (never touch NaN).
+    pub fn apply_combine(&mut self, outputs: &[Option<Vec<f32>>], lambda: &[f64]) {
+        let mut xs: Vec<&[f32]> = Vec::with_capacity(outputs.len());
+        let mut w: Vec<f64> = Vec::with_capacity(outputs.len());
+        for (out, &lv) in outputs.iter().zip(lambda.iter()) {
+            if lv > 0.0 {
+                if let Some(x) = out {
+                    xs.push(x);
+                    w.push(lv);
+                }
+            }
+        }
+        if xs.is_empty() {
+            return; // nobody reported: x_t = x_{t-1}
+        }
+        let mut combined = vec![0.0f32; self.x.len()];
+        weighted_sum(&xs, &w, &mut combined);
+        *self.x = combined;
+    }
+
+    /// Communication charge for methods where the master's wait already
+    /// includes upload times: the downlink broadcast to the slowest
+    /// worker.
+    pub fn broadcast_charge(&self) -> f64 {
+        (0..self.cfg.workers)
+            .map(|v| self.comm.delay(v, self.epoch, 1))
+            .fold(0.0f64, f64::max)
+    }
+
+    /// Full gradient of block `blk`: 2 Σ_{i∈block} a_i (a_i·x − y_i),
+    /// computed over the master's dataset view.
+    pub fn block_gradient(&self, blk: usize) -> Vec<f32> {
+        let range = crate::partition::block_range(self.ds.rows(), self.cfg.workers, blk);
+        let d = self.ds.dim();
+        let mut g = vec![0.0f32; d];
+        for i in range {
+            let row = self.ds.a.row(i);
+            let r = 2.0 * (crate::linalg::dot_f32(row, &*self.x) - self.ds.y[i]);
+            crate::linalg::axpy(r, row, &mut g);
+        }
+        g
+    }
+}
+
+/// Master combining policy (Algorithm 1 step 15).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CombinePolicy {
+    /// λ_v = q_v / Σ q — Theorem 3, the paper's choice.
+    Proportional,
+    /// λ_v = 1/|χ| — classical uniform averaging.
+    Uniform,
+    /// Take only the worker with the most steps (the "expected distance"
+    /// strawman discussed after Theorem 1).
+    FastestOnly,
+}
+
+impl CombinePolicy {
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "proportional" => Ok(CombinePolicy::Proportional),
+            "uniform" => Ok(CombinePolicy::Uniform),
+            "fastest" => Ok(CombinePolicy::FastestOnly),
+            o => bail!("unknown combine `{o}` (proportional|uniform|fastest)"),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            CombinePolicy::Proportional => "proportional",
+            CombinePolicy::Uniform => "uniform",
+            CombinePolicy::FastestOnly => "fastest",
+        }
+    }
+}
+
+/// Which per-worker iterate the master combines.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Iterate {
+    /// Final iterate x_{v,q_v} — Algorithm 2's return value.
+    Last,
+    /// Running average (1/q)Σ x_vt — the quantity the analysis bounds.
+    Average,
+}
+
+impl Iterate {
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "last" => Ok(Iterate::Last),
+            "average" => Ok(Iterate::Average),
+            o => bail!("unknown iterate `{o}` (last|average)"),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Iterate::Last => "last",
+            Iterate::Average => "average",
+        }
+    }
+}
+
+/// λ per policy over realized step counts (Algorithm 1 step 15 /
+/// Theorem 3). Workers without outputs always get λ = 0.
+pub fn combine_lambda(
+    policy: CombinePolicy,
+    q: &[usize],
+    outputs: &[Option<Vec<f32>>],
+) -> Vec<f64> {
+    let n = q.len();
+    let have: Vec<bool> = outputs.iter().map(|o| o.is_some()).collect();
+    match policy {
+        CombinePolicy::Proportional => {
+            let total: usize = q.iter().zip(&have).filter(|(_, &h)| h).map(|(&qv, _)| qv).sum();
+            if total == 0 {
+                return vec![0.0; n];
+            }
+            (0..n)
+                .map(|v| if have[v] { q[v] as f64 / total as f64 } else { 0.0 })
+                .collect()
+        }
+        CombinePolicy::Uniform => {
+            let cnt = have.iter().filter(|&&h| h).count();
+            if cnt == 0 {
+                return vec![0.0; n];
+            }
+            (0..n).map(|v| if have[v] { 1.0 / cnt as f64 } else { 0.0 }).collect()
+        }
+        CombinePolicy::FastestOnly => {
+            let best = (0..n).filter(|&v| have[v]).max_by_key(|&v| q[v]);
+            let mut lam = vec![0.0; n];
+            if let Some(b) = best {
+                lam[b] = 1.0;
+            }
+            lam
+        }
+    }
+}
+
+/// One registry entry: how to build, validate, and default a protocol
+/// from its name(s).
+pub struct ProtocolInfo {
+    /// Canonical name — the `MethodSpec::kind` / config JSON `kind`.
+    pub name: &'static str,
+    /// Pure synonyms, valid everywhere a canonical name is (e.g. `gc`).
+    pub aliases: &'static [&'static str],
+    /// Names valid *only* as sweep/method axis values: they carry
+    /// parameter meaning the entry's `spec` fn expands (e.g.
+    /// `anytime-uniform` → uniform λ). Rejected as config kinds, where
+    /// the params would silently be lost.
+    pub axis_aliases: &'static [&'static str],
+    /// One-line description (`anytime-sgd list`).
+    pub about: &'static str,
+    /// Whether the sweep's T (epoch budget) axis applies.
+    pub uses_t: bool,
+    /// Instantiate the protocol for one run.
+    pub build: fn(&MethodSpec, &RunConfig) -> Result<Box<dyn Protocol>>,
+    /// Check a spec's params against a config (called from
+    /// [`RunConfig::validate`]).
+    pub validate: fn(&MethodSpec, &RunConfig) -> Result<()>,
+    /// Default spec for a sweep-grid axis value: `(axis_name, cfg,
+    /// t_axis)` → params. Budgeted methods take the T axis; step-counted
+    /// baselines derive a one-pass step count from the config.
+    pub spec: fn(&str, &RunConfig, Option<f64>) -> MethodSpec,
+}
+
+/// Every protocol the crate ships. Order is display order for
+/// `anytime-sgd list`.
+pub static REGISTRY: &[&ProtocolInfo] = &[
+    &anytime::INFO,
+    &generalized::INFO,
+    &adaptive::INFO,
+    &sync::INFO,
+    &fnb::INFO,
+    &gradient_coding::INFO,
+    &async_sgd::INFO,
+];
+
+/// Kind prefix reserved for protocols supplied directly as objects via
+/// [`crate::coordinator::TrainerBuilder::custom_protocol`] — they have
+/// no registry entry, so name-based build/validate skip them.
+pub const CUSTOM_KIND_PREFIX: &str = "custom:";
+
+/// Resolve a protocol by canonical name, alias, or axis-only alias.
+pub fn lookup(name: &str) -> Result<&'static ProtocolInfo> {
+    REGISTRY
+        .iter()
+        .find(|p| {
+            p.name == name || p.aliases.contains(&name) || p.axis_aliases.contains(&name)
+        })
+        .copied()
+        .ok_or_else(|| {
+            anyhow::anyhow!("unknown protocol `{name}` (available: {})", names().join(", "))
+        })
+}
+
+/// Canonical `MethodSpec::kind` for a config-level name. Unlike
+/// [`lookup`], this rejects axis-only aliases — their parameter
+/// meaning lives in the sweep `spec` hook and would silently be lost
+/// if accepted as a bare kind.
+pub fn canonical_kind(name: &str) -> Result<&'static str> {
+    let p = lookup(name)?;
+    if p.axis_aliases.contains(&name) {
+        bail!(
+            "`{name}` is a sweep-axis shorthand, not a config kind — use kind `{}` \
+             with explicit params (e.g. `anytime` + `\"combine\": \"uniform\"`)",
+            p.name
+        );
+    }
+    Ok(p.name)
+}
+
+/// Canonical protocol names, in registry order.
+pub fn names() -> Vec<&'static str> {
+    REGISTRY.iter().map(|p| p.name).collect()
+}
+
+/// Whether `name` resolves to a registered protocol (or alias).
+pub fn exists(name: &str) -> bool {
+    lookup(name).is_ok()
+}
+
+/// Build the protocol a spec describes. The kind may be a canonical
+/// name or pure alias, never an axis-only shorthand (see
+/// [`canonical_kind`] — accepting one would silently drop its params).
+pub fn build(spec: &MethodSpec, cfg: &RunConfig) -> Result<Box<dyn Protocol>> {
+    if spec.kind.starts_with(CUSTOM_KIND_PREFIX) {
+        bail!(
+            "protocol `{}` is builder-supplied: construct the trainer with \
+             Trainer::builder().custom_protocol(..)",
+            spec.kind
+        );
+    }
+    canonical_kind(&spec.kind)?;
+    (lookup(&spec.kind)?.build)(spec, cfg)
+}
+
+/// Validate a spec's params against a config (no-op for
+/// builder-supplied custom protocols). Rejects axis-only shorthand
+/// kinds like [`build`] does.
+pub fn validate_spec(spec: &MethodSpec, cfg: &RunConfig) -> Result<()> {
+    if spec.kind.starts_with(CUSTOM_KIND_PREFIX) {
+        return Ok(());
+    }
+    canonical_kind(&spec.kind)?;
+    (lookup(&spec.kind)?.validate)(spec, cfg)
+}
+
+/// Default spec for a sweep-grid method axis value.
+pub fn spec_for(axis: &str, cfg: &RunConfig, t_axis: Option<f64>) -> Result<MethodSpec> {
+    let p = lookup(axis)?;
+    Ok((p.spec)(axis, cfg, t_axis))
+}
+
+/// Whether a method axis name consumes the sweep's T (budget) axis.
+pub fn uses_t(name: &str) -> bool {
+    lookup(name).map(|p| p.uses_t).unwrap_or(false)
+}
+
+/// The base epoch budget a grid axis inherits when no T value is given:
+/// the base method's own `t` param, or the fig-3 default of 200 s.
+pub(crate) fn base_t(cfg: &RunConfig) -> f64 {
+    cfg.method.get_f64("t").unwrap_or(200.0)
+}
+
+/// Steps for one pass of a worker's unique m/N data block — the
+/// "fixed amount of data" contract the step-counted baselines derive
+/// their per-epoch work from.
+pub(crate) fn pass_steps(cfg: &RunConfig) -> usize {
+    (cfg.data.rows() / cfg.workers.max(1) / cfg.batch.max(1)).max(1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn outs(n: usize, missing: &[usize]) -> Vec<Option<Vec<f32>>> {
+        (0..n)
+            .map(|v| if missing.contains(&v) { None } else { Some(vec![v as f32]) })
+            .collect()
+    }
+
+    #[test]
+    fn proportional_lambda_matches_theorem3() {
+        let q = [100usize, 50, 50, 0];
+        let lam = combine_lambda(CombinePolicy::Proportional, &q, &outs(4, &[]));
+        assert_eq!(lam, vec![0.5, 0.25, 0.25, 0.0]);
+    }
+
+    #[test]
+    fn missing_workers_get_zero_lambda() {
+        let q = [100usize, 100, 100];
+        let lam = combine_lambda(CombinePolicy::Proportional, &q, &outs(3, &[1]));
+        assert_eq!(lam, vec![0.5, 0.0, 0.5]);
+        let lam_u = combine_lambda(CombinePolicy::Uniform, &q, &outs(3, &[1]));
+        assert_eq!(lam_u, vec![0.5, 0.0, 0.5]);
+    }
+
+    #[test]
+    fn fastest_only_selects_max_q() {
+        let q = [10usize, 90, 40];
+        let lam = combine_lambda(CombinePolicy::FastestOnly, &q, &outs(3, &[]));
+        assert_eq!(lam, vec![0.0, 1.0, 0.0]);
+        // Fastest missing -> next best.
+        let lam2 = combine_lambda(CombinePolicy::FastestOnly, &q, &outs(3, &[1]));
+        assert_eq!(lam2, vec![0.0, 0.0, 1.0]);
+    }
+
+    #[test]
+    fn all_missing_gives_zero_vector() {
+        let q = [5usize, 5];
+        for p in [CombinePolicy::Proportional, CombinePolicy::Uniform, CombinePolicy::FastestOnly] {
+            let lam = combine_lambda(p, &q, &outs(2, &[0, 1]));
+            assert_eq!(lam, vec![0.0, 0.0]);
+        }
+    }
+
+    #[test]
+    fn registry_names_unique_and_resolvable() {
+        let mut all: Vec<&str> = Vec::new();
+        for p in REGISTRY {
+            all.push(p.name);
+            all.extend(p.aliases);
+            all.extend(p.axis_aliases);
+        }
+        let mut sorted = all.clone();
+        sorted.sort();
+        sorted.dedup();
+        assert_eq!(sorted.len(), all.len(), "duplicate protocol name/alias");
+        for name in all {
+            assert!(exists(name), "{name} must resolve");
+        }
+        assert!(lookup("warp-drive").is_err());
+    }
+
+    #[test]
+    fn aliases_resolve_to_canonical_entries() {
+        assert_eq!(lookup("gc").unwrap().name, "gradient-coding");
+        assert_eq!(lookup("anytime-uniform").unwrap().name, "anytime");
+        assert!(uses_t("anytime"));
+        assert!(uses_t("adaptive"));
+        assert!(!uses_t("sync"));
+        assert!(!uses_t("nope"));
+    }
+
+    #[test]
+    fn axis_shorthands_are_not_config_kinds() {
+        // Pure aliases canonicalize...
+        assert_eq!(canonical_kind("gc").unwrap(), "gradient-coding");
+        assert_eq!(canonical_kind("adaptive-anytime").unwrap(), "adaptive");
+        // ...but parameter-carrying axis shorthands are rejected with a
+        // hint (accepting them would silently drop the uniform λ).
+        let err = canonical_kind("anytime-uniform").unwrap_err().to_string();
+        assert!(err.contains("combine"), "{err}");
+        assert!(canonical_kind("warp").is_err());
+        // The build/validate paths enforce the same rule for hand-built
+        // specs that smuggle a shorthand in as the kind.
+        let cfg = RunConfig::base();
+        let spec = MethodSpec::new("anytime-uniform").with("t", 10.0);
+        assert!(validate_spec(&spec, &cfg).is_err());
+        assert!(build(&spec, &cfg).is_err());
+    }
+
+    #[test]
+    fn combine_policy_and_iterate_round_trip() {
+        for p in [CombinePolicy::Proportional, CombinePolicy::Uniform, CombinePolicy::FastestOnly] {
+            assert_eq!(CombinePolicy::parse(p.name()).unwrap(), p);
+        }
+        for it in [Iterate::Last, Iterate::Average] {
+            assert_eq!(Iterate::parse(it.name()).unwrap(), it);
+        }
+        assert!(CombinePolicy::parse("median").is_err());
+        assert!(Iterate::parse("best").is_err());
+    }
+}

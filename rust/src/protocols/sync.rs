@@ -1,0 +1,96 @@
+//! Classical synchronous local-SGD (Zinkevich et al.): fixed steps,
+//! wait for all, uniform averaging over whoever reports within `t_c`.
+
+use super::{combine_lambda, CombinePolicy, EpochCtx, Protocol, ProtocolInfo};
+use crate::config::{MethodSpec, RunConfig};
+use crate::coordinator::EpochStats;
+use crate::sim::wait;
+use crate::straggler::WorkerEpochRate;
+use anyhow::{anyhow, bail, Result};
+
+pub const INFO: ProtocolInfo = ProtocolInfo {
+    name: "sync",
+    aliases: &[],
+    axis_aliases: &[],
+    about: "fixed steps/epoch, wait for ALL workers, uniform averaging",
+    uses_t: false,
+    build,
+    validate,
+    spec: axis_spec,
+};
+
+pub struct SyncSgd {
+    pub steps_per_epoch: usize,
+}
+
+pub fn spec(steps_per_epoch: usize) -> MethodSpec {
+    MethodSpec::new(INFO.name).with("steps_per_epoch", steps_per_epoch)
+}
+
+fn parse(spec: &MethodSpec) -> Result<usize> {
+    let steps = spec
+        .get_usize("steps_per_epoch")
+        .ok_or_else(|| anyhow!("method `sync` needs `steps_per_epoch`"))?;
+    if steps == 0 {
+        bail!("method `sync`: steps_per_epoch must be >= 1");
+    }
+    Ok(steps)
+}
+
+fn build(spec: &MethodSpec, _cfg: &RunConfig) -> Result<Box<dyn Protocol>> {
+    Ok(Box::new(SyncSgd { steps_per_epoch: parse(spec)? }))
+}
+
+fn validate(spec: &MethodSpec, _cfg: &RunConfig) -> Result<()> {
+    parse(spec).map(|_| ())
+}
+
+fn axis_spec(_axis: &str, cfg: &RunConfig, _t: Option<f64>) -> MethodSpec {
+    // One pass of the worker's unique m/N block per epoch — the paper's
+    // "fixed amount of data" contract.
+    spec(super::pass_steps(cfg))
+}
+
+impl Protocol for SyncSgd {
+    fn epoch(&mut self, ctx: &mut EpochCtx) -> EpochStats {
+        let (e, steps) = (ctx.epoch, self.steps_per_epoch);
+        let n = ctx.n();
+        let mut q = vec![0usize; n];
+        let mut finish: Vec<Option<f64>> = vec![None; n];
+        let mut outputs: Vec<Option<Vec<f32>>> = vec![None; n];
+        // Every worker starts from the same broadcast x_{t-1}.
+        let x_snapshot = ctx.x.clone();
+
+        for v in 0..n {
+            let rate = match ctx.delay.rate(v, e) {
+                WorkerEpochRate::Dead => continue,
+                WorkerEpochRate::StepSecs(s) => s,
+            };
+            let compute_time = steps as f64 * rate;
+            let arrival = compute_time + ctx.comm.delay(v, e, 0);
+            if arrival > ctx.cfg.t_c {
+                continue; // abandoned by the guard; its work is lost
+            }
+            finish[v] = Some(arrival);
+            let idx = ctx.sample_idx(v, steps);
+            let consts = ctx.consts;
+            let out = ctx.workers[v].run_steps(&x_snapshot, &idx, 0.0, consts);
+            q[v] = steps;
+            outputs[v] = Some(out.x_k);
+        }
+
+        let lambda = combine_lambda(CombinePolicy::Uniform, &q, &outputs);
+        ctx.apply_combine(&outputs, &lambda);
+        let compute = wait::all(&finish, ctx.cfg.t_c);
+        let comm = ctx.broadcast_charge();
+        let received = finish.iter().map(|f| f.is_some()).collect();
+        EpochStats {
+            q,
+            received,
+            compute_secs: compute,
+            comm_secs: comm,
+            lambda,
+            worker_finish: finish,
+        }
+    }
+}

@@ -10,7 +10,7 @@
 //! Cells within one group (= every axis except `seed`) differ only in
 //! the root seed; the aggregator collapses them into mean ± CI curves.
 
-use crate::config::{Backend, CombinePolicy, Iterate, MethodSpec, RunConfig};
+use crate::config::{Backend, MethodSpec, RunConfig};
 use crate::ser::Value;
 use crate::sweep::scenarios;
 use anyhow::{anyhow, bail, Result};
@@ -352,9 +352,10 @@ fn f64_list(v: &Value, field: &str) -> Result<Vec<f64>> {
         .collect()
 }
 
-/// Whether a method consumes the grid's T (epoch budget) axis.
+/// Whether a method consumes the grid's T (epoch budget) axis
+/// (resolved through the protocol registry).
 pub fn method_uses_t(name: &str) -> bool {
-    matches!(name, "anytime" | "anytime-uniform" | "generalized" | "async")
+    crate::protocols::uses_t(name)
 }
 
 /// Backend from its CLI/JSON name.
@@ -373,44 +374,15 @@ fn backend_name(b: Backend) -> &'static str {
     }
 }
 
-/// Resolve a method axis value against a (scenario-applied) config.
+/// Resolve a method axis value against a (scenario-applied) config —
+/// a thin wrapper over the protocol registry's per-entry `spec` hook.
 ///
 /// Budgeted methods take the grid's `T` axis (or the base method's T);
 /// step-counted baselines derive their per-epoch step count from the
 /// paper's "fixed amount of data" contract — one pass of the worker's
 /// unique m/N block.
 pub fn method_for(name: &str, cfg: &RunConfig, t_axis: Option<f64>) -> Result<MethodSpec> {
-    let base_t = t_axis.unwrap_or(match cfg.method {
-        MethodSpec::Anytime { t, .. } | MethodSpec::Generalized { t } => t,
-        _ => 200.0,
-    });
-    let pass_steps = (cfg.data.rows() / cfg.workers.max(1) / cfg.batch.max(1)).max(1);
-    Ok(match name {
-        "anytime" => MethodSpec::Anytime {
-            t: base_t,
-            combine: CombinePolicy::Proportional,
-            iterate: Iterate::Last,
-        },
-        "anytime-uniform" => MethodSpec::Anytime {
-            t: base_t,
-            combine: CombinePolicy::Uniform,
-            iterate: Iterate::Last,
-        },
-        "generalized" => MethodSpec::Generalized { t: base_t },
-        "sync" => MethodSpec::SyncSgd { steps_per_epoch: pass_steps },
-        "fnb" => {
-            // Pan et al.'s setting: wait for the fastest ~N/5 (Fig. 4
-            // uses B = 8 of N = 10); clamp to a valid 0 <= B < N.
-            let b = (cfg.workers * 4 / 5).min(cfg.workers.saturating_sub(1));
-            MethodSpec::Fnb { steps_per_epoch: pass_steps, b }
-        }
-        "gc" | "gradient-coding" => MethodSpec::GradientCoding { lr: 0.4 },
-        "async" => MethodSpec::AsyncSgd { steps_per_update: 16, horizon: base_t },
-        other => bail!(
-            "unknown method `{other}` \
-             (anytime|anytime-uniform|generalized|sync|fnb|gc|async)"
-        ),
-    })
+    crate::protocols::spec_for(name, cfg, t_axis)
 }
 
 #[cfg(test)]
@@ -460,10 +432,9 @@ mod tests {
         assert_eq!(cells.len(), 8);
         assert!(cells.iter().any(|c| c.cfg.workers == 2 && c.cfg.t_c == 10.0));
         for c in &cells {
-            match c.cfg.method {
-                MethodSpec::Anytime { t, .. } => assert!(t == 0.5 || t == 1.0),
-                _ => panic!("wrong method"),
-            }
+            assert_eq!(c.cfg.method.kind, "anytime");
+            let t = c.cfg.method.get_f64("t").unwrap();
+            assert!(t == 0.5 || t == 1.0);
             // Multi-value axes are encoded in the group key.
             assert!(c.group.contains("/N"), "{}", c.group);
             assert!(c.group.contains("/T"), "{}", c.group);
@@ -511,19 +482,22 @@ mod tests {
     fn method_defaults_are_sane() {
         let cfg = tiny_base();
         // pass = 1200 / 4 workers / batch 8 ≈ 37 steps.
-        match method_for("sync", &cfg, None).unwrap() {
-            MethodSpec::SyncSgd { steps_per_epoch } => assert_eq!(steps_per_epoch, 37),
-            _ => panic!(),
-        }
-        match method_for("fnb", &cfg, None).unwrap() {
-            MethodSpec::Fnb { b, .. } => assert_eq!(b, 3),
-            _ => panic!(),
-        }
-        // T axis overrides the budget.
-        match method_for("anytime", &cfg, Some(7.5)).unwrap() {
-            MethodSpec::Anytime { t, .. } => assert_eq!(t, 7.5),
-            _ => panic!(),
-        }
+        let sync = method_for("sync", &cfg, None).unwrap();
+        assert_eq!(sync.kind, "sync");
+        assert_eq!(sync.get_usize("steps_per_epoch"), Some(37));
+        let fnb = method_for("fnb", &cfg, None).unwrap();
+        assert_eq!(fnb.get_usize("b"), Some(3));
+        // Aliases canonicalize.
+        assert_eq!(method_for("gc", &cfg, None).unwrap().kind, "gradient-coding");
+        assert_eq!(
+            method_for("anytime-uniform", &cfg, None).unwrap().get_str("combine"),
+            Some("uniform")
+        );
+        // T axis overrides the budget — for the new adaptive protocol too.
+        assert_eq!(method_for("anytime", &cfg, Some(7.5)).unwrap().get_f64("t"), Some(7.5));
+        assert_eq!(method_for("adaptive", &cfg, Some(7.5)).unwrap().get_f64("t"), Some(7.5));
+        // No T axis: budgeted methods inherit the base method's T.
+        assert_eq!(method_for("anytime", &cfg, None).unwrap().get_f64("t"), Some(2.0));
         assert!(method_for("nope", &cfg, None).is_err());
     }
 

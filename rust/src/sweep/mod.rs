@@ -40,7 +40,7 @@ pub use grid::{Cell, Grid};
 pub use runner::{run_cells, CellResult};
 
 use crate::cli::{Command, FlagKind, Matches};
-use crate::config::{CombinePolicy, DataSpec, Iterate, MethodSpec, RunConfig, Schedule};
+use crate::config::{DataSpec, RunConfig, Schedule};
 use crate::straggler::{CommSpec, StragglerEnv};
 use anyhow::{anyhow, bail, Result};
 
@@ -59,11 +59,7 @@ pub fn sweep_base() -> RunConfig {
     c.eval_every = 1;
     c.max_passes = 3.0;
     c.schedule = Schedule::Constant { lr: 2e-3 };
-    c.method = MethodSpec::Anytime {
-        t: 2.0,
-        combine: CombinePolicy::Proportional,
-        iterate: Iterate::Last,
-    };
+    c.method = crate::protocols::anytime::spec(2.0);
     c.env = StragglerEnv::ec2_default(0.02);
     c.comm = CommSpec::Fixed { secs: 0.5 };
     c.t_c = 1e9;
@@ -81,7 +77,7 @@ pub fn cli_command() -> Command {
             "methods",
             FlagKind::Str,
             Some("anytime,sync,fnb,gc"),
-            "comma-separated methods (anytime|anytime-uniform|generalized|sync|fnb|gc|async)",
+            "comma-separated protocol names (see `anytime-sgd list` for the registry)",
         )
         .flag("seeds", FlagKind::Int, Some("3"), "seeds per grid point (base-seed..+n)")
         .flag("base-seed", FlagKind::Int, Some("42"), "first root seed")

@@ -7,18 +7,31 @@
 //! results in cell order — output is bit-identical regardless of thread
 //! count or scheduling.
 //!
+//! Dataset generation is a pure function of `(DataSpec, seed)`, so
+//! cells that agree on both (e.g. every method arm of one scenario ×
+//! seed grid point) share a single [`Arc<Dataset>`] from
+//! [`dataset_cache`] instead of rebuilding it per cell — the
+//! simplification DESIGN.md §3 called out, benched in
+//! `benches/bench_sweep.rs`. Sharing is an allocation-level
+//! optimization only: generation is deterministic, so results are
+//! byte-identical with or without the cache. The cache holds every
+//! unique dataset of the campaign alive at once (fine for sweep-sized
+//! data; the axes that grow a campaign — methods, seeds-per-group,
+//! scenarios over one workload — mostly reuse keys).
+//!
 //! `Trainer` itself is intentionally not `Send` (the XLA backend pins
 //! PJRT handles to their creating thread), so each worker thread
 //! constructs, runs, and drops its own trainer; only the plain-data
-//! [`RunResult`] crosses threads.
+//! [`RunResult`] and the shared datasets cross threads.
 
 use crate::config::RunConfig;
-use crate::coordinator::{RunResult, Trainer};
+use crate::coordinator::{build_dataset, RunResult, Trainer};
 use crate::data::Dataset;
 use crate::exec::{scoped_map, with_inner_threads};
 use crate::metrics::Trace;
 use crate::sweep::grid::Cell;
 use anyhow::Result;
+use std::collections::BTreeMap;
 use std::sync::Arc;
 
 /// One executed cell: the cell's identity plus its convergence trace.
@@ -34,19 +47,54 @@ pub fn default_threads() -> usize {
     std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
 }
 
+/// Dataset-cache key: generation is a pure function of these two.
+fn dataset_key(cfg: &RunConfig) -> (String, u64) {
+    (format!("{:?}", cfg.data), cfg.seed)
+}
+
+/// Build each distinct `(DataSpec, seed)` dataset of the config list
+/// exactly once, within a total budget of `threads` OS threads (the
+/// budget is split between the build fan-out and each generator's
+/// internal parallelism, exactly like [`run_results`] — so
+/// `--threads 1` stays truly single-threaded and nothing nests to
+/// ~cores² transient threads).
+pub fn dataset_cache(
+    cfgs: &[RunConfig],
+    threads: usize,
+) -> BTreeMap<(String, u64), Arc<Dataset>> {
+    let mut seen: BTreeMap<(String, u64), usize> = BTreeMap::new();
+    let mut uniques: Vec<&RunConfig> = Vec::new();
+    for cfg in cfgs {
+        let key = dataset_key(cfg);
+        if let std::collections::btree_map::Entry::Vacant(e) = seen.entry(key) {
+            e.insert(uniques.len());
+            uniques.push(cfg);
+        }
+    }
+    let outer = threads.max(1).min(uniques.len().max(1));
+    let inner = (threads.max(1) / outer).max(1);
+    let built = scoped_map(uniques.len(), outer, |i| {
+        with_inner_threads(inner, || Arc::new(build_dataset(uniques[i])))
+    });
+    seen.into_iter().map(|(key, i)| (key, built[i].clone())).collect()
+}
+
 /// Run each config to completion on at most `threads` OS threads.
 ///
 /// With `shared = Some(ds)`, every trainer is built over the same
 /// dataset (the figure harness' fairness contract: all methods of one
-/// comparison see identical data). With `shared = None`, each cell
-/// builds its dataset from its own config — cells that agree on
-/// (data spec, seed) still see byte-identical data because generation
-/// is a pure function of those two.
+/// comparison see identical data). With `shared = None`, cells draw
+/// from a [`dataset_cache`] over their own configs, so cells that agree
+/// on (data spec, seed) share one allocation.
 pub fn run_results(
     cfgs: &[RunConfig],
     threads: usize,
     shared: Option<&Arc<Dataset>>,
 ) -> Result<Vec<RunResult>> {
+    let cache = match shared {
+        Some(_) => BTreeMap::new(),
+        None => dataset_cache(cfgs, threads),
+    };
     // `threads` is the total thread budget. Split it between the cell
     // fan-out and each trainer's internal data parallelism (dataset
     // generation, evaluation): with one cell per core the inner helpers
@@ -58,11 +106,11 @@ pub fn run_results(
         with_inner_threads(inner, || {
             let cfg = cfgs[i].clone();
             let name = cfg.name.clone();
-            let built = match shared {
-                Some(ds) => Trainer::with_dataset(cfg, ds.clone()),
-                None => Trainer::new(cfg),
+            let ds = match shared {
+                Some(ds) => ds.clone(),
+                None => cache[&dataset_key(&cfg)].clone(),
             };
-            match built {
+            match Trainer::with_dataset(cfg, ds) {
                 Ok(mut tr) => Ok(tr.run()),
                 Err(e) => Err(format!("cell {i} (`{name}`): {e:#}")),
             }
@@ -81,7 +129,8 @@ pub fn run_shared(ds: &Arc<Dataset>, cfgs: &[RunConfig], threads: usize) -> Resu
     Ok(run_results(cfgs, threads, Some(ds))?.into_iter().map(|r| r.trace).collect())
 }
 
-/// Run a list of expanded sweep cells (each builds its own dataset).
+/// Run a list of expanded sweep cells (cells sharing a dataset key
+/// share its allocation).
 pub fn run_cells(cells: &[Cell], threads: usize) -> Result<Vec<CellResult>> {
     let cfgs: Vec<RunConfig> = cells.iter().map(|c| c.cfg.clone()).collect();
     let results = run_results(&cfgs, threads, None)?;
@@ -127,6 +176,37 @@ mod tests {
             for (p, q) in a.trace.points.iter().zip(b.trace.points.iter()) {
                 assert_eq!(p.norm_err, q.norm_err, "{}", a.cell.cfg.name);
                 assert_eq!(p.time, q.time, "{}", a.cell.cfg.name);
+            }
+        }
+    }
+
+    #[test]
+    fn dataset_cache_collapses_shared_keys() {
+        let cells = tiny_cells();
+        let cfgs: Vec<RunConfig> = cells.iter().map(|c| c.cfg.clone()).collect();
+        // 8 cells = 2 scenarios × 2 methods × 2 seeds, but only
+        // 2 distinct (DataSpec, seed) keys (the seeds).
+        let cache = dataset_cache(&cfgs, 2);
+        assert_eq!(cfgs.len(), 8);
+        assert_eq!(cache.len(), 2, "methods and scenarios must share datasets");
+        // Cells sharing a key share the same allocation.
+        let a = cache[&super::dataset_key(&cfgs[0])].clone();
+        let b = cache[&super::dataset_key(&cfgs[0])].clone();
+        assert!(Arc::ptr_eq(&a, &b));
+    }
+
+    #[test]
+    fn cached_results_match_fresh_trainers() {
+        // The cache is invisible in the numbers: run_cells (cached) must
+        // equal a per-cell Trainer::new (rebuilds its own dataset).
+        let cells = tiny_cells();
+        let cached = run_cells(&cells, 4).unwrap();
+        for (cell, got) in cells.iter().zip(cached.iter()) {
+            let fresh = Trainer::new(cell.cfg.clone()).unwrap().run();
+            assert_eq!(fresh.trace.points.len(), got.trace.points.len());
+            for (p, q) in fresh.trace.points.iter().zip(got.trace.points.iter()) {
+                assert_eq!(p.norm_err, q.norm_err, "{}", cell.cfg.name);
+                assert_eq!(p.time, q.time, "{}", cell.cfg.name);
             }
         }
     }

@@ -1,0 +1,192 @@
+//! Golden-trace regression pins for the protocol redesign.
+//!
+//! Every figure preset runs 3 epochs through the trait-dispatched
+//! protocol registry and must reproduce the recorded `(time, norm_err)`
+//! trace **bit-exactly** (traces are stored as raw f64 bit patterns —
+//! no tolerance). The fixture bootstraps itself on first run (when
+//! `rust/tests/golden/traces.txt` is absent it is written and the test
+//! passes); committed once, it pins the numerics against any future
+//! refactor of the dispatch path. Delete the file to regenerate after
+//! an *intentional* numerics change.
+//!
+//! The second half proves the redesign's equivalence claims without a
+//! fixture at all: the adaptive protocol with adaptation disabled must
+//! match plain `anytime` bit-for-bit (same epoch body through a
+//! different protocol object), and every registered protocol's spec
+//! must survive a config-JSON round trip.
+
+// Crate-posture lint gate (see lib.rs): correctness/suspicious/perf
+// lints stay load-bearing under CI's `-D warnings`; the style/
+// complexity groups are settled here rather than per-site.
+#![allow(clippy::style, clippy::complexity)]
+
+use anytime_sgd::config::{DataSpec, RunConfig, Schedule, PRESETS};
+use anytime_sgd::coordinator::{build_dataset, Trainer};
+use anytime_sgd::metrics::Trace;
+use anytime_sgd::protocols;
+use anytime_sgd::straggler::StragglerEnv;
+use std::fmt::Write as _;
+use std::path::PathBuf;
+use std::sync::Arc;
+
+const GOLDEN_EPOCHS: usize = 3;
+
+fn golden_path() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("rust/tests/golden/traces.txt")
+}
+
+/// One trace as a fixture line: `name e:time_bits:err_bits ...`.
+fn trace_line(name: &str, trace: &Trace) -> String {
+    let mut s = String::from(name);
+    for p in &trace.points {
+        write!(s, " {}:{:016x}:{:016x}", p.epoch, p.time.to_bits(), p.norm_err.to_bits()).unwrap();
+    }
+    s
+}
+
+fn run_preset(name: &str) -> Trace {
+    let mut cfg = RunConfig::preset(name).unwrap();
+    cfg.epochs = GOLDEN_EPOCHS;
+    Trainer::new(cfg).unwrap().run().trace
+}
+
+#[test]
+fn presets_match_golden_traces_bit_exactly() {
+    let mut lines = Vec::with_capacity(PRESETS.len());
+    for preset in PRESETS {
+        lines.push(trace_line(preset, &run_preset(preset)));
+    }
+    let got = lines.join("\n") + "\n";
+
+    let path = golden_path();
+    match std::fs::read_to_string(&path) {
+        Ok(want) => {
+            for (g, w) in got.lines().zip(want.lines()) {
+                assert_eq!(g, w, "trace drifted from the golden fixture");
+            }
+            assert_eq!(
+                got.lines().count(),
+                want.lines().count(),
+                "preset list changed — delete {} to re-pin",
+                path.display()
+            );
+        }
+        Err(_) => {
+            // Bootstrap: first run records the pins.
+            std::fs::create_dir_all(path.parent().unwrap()).unwrap();
+            std::fs::write(&path, &got).unwrap();
+            eprintln!("golden_traces: bootstrapped fixture at {}", path.display());
+        }
+    }
+}
+
+fn tiny_cfg() -> RunConfig {
+    let mut c = RunConfig::base();
+    c.data = DataSpec::Synthetic { m: 2_000, d: 16, noise: 1e-3 };
+    c.workers = 4;
+    c.batch = 8;
+    c.epochs = 6;
+    c.schedule = Schedule::Constant { lr: 4e-3 };
+    c.env = StragglerEnv::ideal(0.05);
+    c.seed = 7;
+    c
+}
+
+#[test]
+fn adaptive_with_adaptation_disabled_equals_anytime_bit_exactly() {
+    // Same epoch numerics through two different protocol objects: with
+    // the clamp collapsed to [t, t], adaptive *is* anytime.
+    let mut c1 = tiny_cfg();
+    c1.method = protocols::anytime::spec(10.0);
+    let mut c2 = tiny_cfg();
+    c2.method = protocols::adaptive::spec(10.0).with("t_min", 10.0).with("t_max", 10.0);
+    let ds = Arc::new(build_dataset(&c1));
+    let r1 = Trainer::with_dataset(c1, ds.clone()).unwrap().run();
+    let r2 = Trainer::with_dataset(c2, ds).unwrap().run();
+    assert_eq!(r1.x, r2.x);
+    for (p, q) in r1.trace.points.iter().zip(r2.trace.points.iter()) {
+        assert_eq!(p.norm_err.to_bits(), q.norm_err.to_bits());
+        assert_eq!(p.time.to_bits(), q.time.to_bits());
+    }
+}
+
+#[test]
+fn adaptive_halves_overshooting_budget() {
+    // Ideal 0.01 s/step, one-pass cap = 500/8 ≈ 63 steps, T = 8 s
+    // admits 800: every worker caps out, so T halves down to t_min.
+    let mut c = tiny_cfg();
+    c.env = StragglerEnv::ideal(0.01);
+    c.method = protocols::adaptive::spec(8.0);
+    let res = Trainer::new(c).unwrap().run();
+    let budgets: Vec<f64> = res.epochs.iter().map(|e| e.compute_secs).collect();
+    assert_eq!(budgets, vec![8.0, 4.0, 2.0, 1.0, 1.0, 1.0], "T must halve to t_min=1");
+    // The run still converges while adapting.
+    assert!(res.trace.final_err() < 0.8 * res.initial_err);
+}
+
+#[test]
+fn adaptive_grows_undershooting_budget() {
+    // 2 s/step against T = 1 s: nobody completes a step, so T doubles
+    // until workers deliver work again.
+    let mut c = tiny_cfg();
+    c.env = StragglerEnv::ideal(2.0);
+    c.method = protocols::adaptive::spec(1.0).with("t_max", 8.0);
+    let res = Trainer::new(c).unwrap().run();
+    let budgets: Vec<f64> = res.epochs.iter().map(|e| e.compute_secs).collect();
+    assert_eq!(budgets[0], 1.0);
+    assert_eq!(budgets[1], 2.0, "idle fleet must double T");
+    assert!(budgets.iter().all(|&t| t <= 8.0));
+    assert!(res.epochs[1].q.iter().all(|&q| q == 1), "T=2 fits one 2-s step");
+}
+
+#[test]
+fn registry_specs_round_trip_through_config_json() {
+    // Every registered name (and alias) must produce a grid-axis spec
+    // that parses back through config JSON to the identical MethodSpec.
+    let base = RunConfig::base();
+    for entry in protocols::REGISTRY {
+        for name in std::iter::once(&entry.name).chain(entry.aliases).chain(entry.axis_aliases) {
+            let spec = protocols::spec_for(name, &base, Some(2.0)).unwrap();
+            assert_eq!(spec.kind, entry.name, "{name} must canonicalize");
+            let json = anytime_sgd::ser::Value::obj(vec![("method", spec.to_json())]);
+            let mut cfg = RunConfig::from_json(&json)
+                .unwrap_or_else(|e| panic!("{name}: round-trip parse failed: {e}"));
+            assert_eq!(cfg.method, spec, "{name}: round trip changed the spec");
+            // And the parsed config actually builds a runnable protocol.
+            cfg.data = DataSpec::Synthetic { m: 2_000, d: 16, noise: 1e-3 };
+            cfg.workers = 4;
+            cfg.epochs = 1;
+            cfg.env = StragglerEnv::ideal(0.05);
+            // Grid-axis defaults target the base topology (N=10); remap
+            // worker-count-dependent params onto the tiny one.
+            let spec_small = protocols::spec_for(name, &cfg, Some(2.0)).unwrap();
+            cfg.method = spec_small;
+            let res = Trainer::new(cfg).unwrap().run();
+            assert_eq!(res.epochs.len(), 1, "{name} must run one epoch");
+        }
+    }
+}
+
+#[test]
+fn sweep_grid_runs_the_adaptive_protocol() {
+    use anytime_sgd::sweep::{aggregate, run_cells, Grid};
+    let mut base = anytime_sgd::sweep::sweep_base();
+    base.data = DataSpec::Synthetic { m: 1_200, d: 16, noise: 1e-3 };
+    base.workers = 4;
+    base.batch = 8;
+    base.epochs = 3;
+    let cells = Grid::new(base)
+        .scenarios(["ideal", "hetero"])
+        .methods(["anytime", "adaptive", "sync"])
+        .seed_count(2)
+        .expand()
+        .unwrap();
+    assert_eq!(cells.len(), 12);
+    assert!(cells.iter().any(|c| c.cfg.method.kind == "adaptive"));
+    let agg = aggregate("adaptive-smoke", &run_cells(&cells, 2).unwrap());
+    // Adaptive groups aggregate like any other method and are ranked in
+    // the winner-per-scenario summaries.
+    assert!(agg.groups.iter().any(|g| g.method == "adaptive"));
+    let summary = agg.summary_csv();
+    assert!(summary.contains("adaptive"), "{summary}");
+}

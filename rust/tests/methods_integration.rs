@@ -2,10 +2,14 @@
 //! straggler/failure injection, and the paper's qualitative claims on
 //! small problems (native backend; fast).
 
-use anytime_sgd::config::{
-    Backend, CombinePolicy, DataSpec, Iterate, MethodSpec, RunConfig, Schedule,
-};
+// Crate-posture lint gate (see lib.rs): correctness/suspicious/perf
+// lints stay load-bearing under CI's `-D warnings`; the style/
+// complexity groups are settled here rather than per-site.
+#![allow(clippy::style, clippy::complexity)]
+
+use anytime_sgd::config::{Backend, DataSpec, MethodSpec, RunConfig, Schedule};
 use anytime_sgd::coordinator::{build_dataset, Trainer};
+use anytime_sgd::protocols;
 use anytime_sgd::straggler::{CommSpec, DelaySpec, PersistentSpec, StragglerEnv};
 use std::sync::Arc;
 
@@ -24,17 +28,17 @@ fn base_cfg() -> RunConfig {
 }
 
 fn anytime(t: f64) -> MethodSpec {
-    MethodSpec::Anytime { t, combine: CombinePolicy::Proportional, iterate: Iterate::Last }
+    protocols::anytime::spec(t)
 }
 
 #[test]
 fn all_methods_decrease_error() {
     for (name, method, redundancy) in [
         ("anytime", anytime(20.0), 0usize),
-        ("generalized", MethodSpec::Generalized { t: 20.0 }, 0),
-        ("sync", MethodSpec::SyncSgd { steps_per_epoch: 80 }, 0),
-        ("fnb", MethodSpec::Fnb { steps_per_epoch: 80, b: 1 }, 0),
-        ("gradient-coding", MethodSpec::GradientCoding { lr: 0.4 }, 2),
+        ("generalized", protocols::generalized::spec(20.0), 0),
+        ("sync", protocols::sync::spec(80), 0),
+        ("fnb", protocols::fnb::spec(80, 1), 0),
+        ("gradient-coding", protocols::gradient_coding::spec(0.4), 2),
     ] {
         let mut cfg = base_cfg();
         cfg.name = name.into();
@@ -54,9 +58,9 @@ fn all_methods_decrease_error() {
 fn fnb_b0_equals_sync() {
     // Waiting for the fastest N-0 == waiting for all == Sync-SGD.
     let mut c1 = base_cfg();
-    c1.method = MethodSpec::SyncSgd { steps_per_epoch: 50 };
+    c1.method = protocols::sync::spec(50);
     let mut c2 = base_cfg();
-    c2.method = MethodSpec::Fnb { steps_per_epoch: 50, b: 0 };
+    c2.method = protocols::fnb::spec(50, 0);
     let ds = Arc::new(build_dataset(&c1));
     let r1 = Trainer::with_dataset(c1, ds.clone()).unwrap().run();
     let r2 = Trainer::with_dataset(c2, ds).unwrap().run();
@@ -74,7 +78,7 @@ fn generalized_with_zero_comm_matches_anytime() {
     c1.comm = CommSpec::Zero;
     c1.method = anytime(20.0);
     let mut c2 = c1.clone();
-    c2.method = MethodSpec::Generalized { t: 20.0 };
+    c2.method = protocols::generalized::spec(20.0);
     let ds = Arc::new(build_dataset(&c1));
     let r1 = Trainer::with_dataset(c1, ds.clone()).unwrap().run();
     let r2 = Trainer::with_dataset(c2, ds).unwrap().run();
@@ -87,8 +91,11 @@ fn uniform_equals_proportional_when_rates_equal() {
     let mut c1 = base_cfg();
     c1.method = anytime(20.0);
     let mut c2 = base_cfg();
-    c2.method =
-        MethodSpec::Anytime { t: 20.0, combine: CombinePolicy::Uniform, iterate: Iterate::Last };
+    c2.method = protocols::anytime::spec_with(
+        20.0,
+        protocols::CombinePolicy::Uniform,
+        protocols::Iterate::Last,
+    );
     let ds = Arc::new(build_dataset(&c1));
     let r1 = Trainer::with_dataset(c1, ds.clone()).unwrap().run();
     let r2 = Trainer::with_dataset(c2, ds).unwrap().run();
@@ -161,7 +168,7 @@ fn gradient_coding_matches_plain_gd() {
     // With no losses, decoded GC must equal exact full-gradient descent.
     let mut cfg = base_cfg();
     cfg.redundancy = 2;
-    cfg.method = MethodSpec::GradientCoding { lr: 0.3 };
+    cfg.method = protocols::gradient_coding::spec(0.3);
     cfg.epochs = 4;
     let ds = Arc::new(build_dataset(&cfg));
     let res = Trainer::with_dataset(cfg, ds.clone()).unwrap().run();
@@ -191,7 +198,7 @@ fn fnb_discards_exactly_b_slowest() {
         delay: DelaySpec::PerWorker { secs: vec![0.1, 0.5, 0.2, 0.9, 0.3] },
         persistent: vec![],
     };
-    cfg.method = MethodSpec::Fnb { steps_per_epoch: 10, b: 2 };
+    cfg.method = protocols::fnb::spec(10, 2);
     let res = Trainer::new(cfg).unwrap().run();
     for e in &res.epochs {
         let received: Vec<usize> =
@@ -222,7 +229,7 @@ fn persistent_straggler_biases_fnb_but_not_anytime_s1() {
     let r_any = Trainer::with_dataset(c_any, ds.clone()).unwrap().run();
 
     let mut c_fnb = base.clone();
-    c_fnb.method = MethodSpec::Fnb { steps_per_epoch: 80, b: 1 };
+    c_fnb.method = protocols::fnb::spec(80, 1);
     let r_fnb = Trainer::with_dataset(c_fnb, ds).unwrap().run();
 
     assert!(
@@ -236,11 +243,11 @@ fn persistent_straggler_biases_fnb_but_not_anytime_s1() {
 #[test]
 fn average_iterate_also_converges() {
     let mut cfg = base_cfg();
-    cfg.method = MethodSpec::Anytime {
-        t: 20.0,
-        combine: CombinePolicy::Proportional,
-        iterate: Iterate::Average,
-    };
+    cfg.method = protocols::anytime::spec_with(
+        20.0,
+        protocols::CombinePolicy::Proportional,
+        protocols::Iterate::Average,
+    );
     let res = Trainer::new(cfg).unwrap().run();
     assert!(res.trace.final_err() < 0.6 * res.initial_err);
 }
@@ -261,7 +268,7 @@ fn epoch_times_follow_method_laws() {
         delay: DelaySpec::PerWorker { secs: vec![0.1, 0.1, 0.1, 0.1, 0.9] },
         persistent: vec![],
     };
-    cfg.method = MethodSpec::SyncSgd { steps_per_epoch: 10 };
+    cfg.method = protocols::sync::spec(10);
     let res = Trainer::new(cfg).unwrap().run();
     for e in &res.epochs {
         assert!((e.compute_secs - (10.0 * 0.9 + 1.0)).abs() < 1e-9, "{}", e.compute_secs);
@@ -274,7 +281,7 @@ fn msd_dataset_runs_through_all_methods() {
     cfg.data = DataSpec::MsdLike { m: 3_000 };
     cfg.schedule = Schedule::Constant { lr: 2e-4 };
     cfg.redundancy = 1;
-    for method in [anytime(20.0), MethodSpec::SyncSgd { steps_per_epoch: 40 }] {
+    for method in [anytime(20.0), protocols::sync::spec(40)] {
         let mut c = cfg.clone();
         c.method = method;
         let res = Trainer::new(c).unwrap().run();
@@ -298,7 +305,7 @@ fn paper_schedule_converges() {
 #[test]
 fn async_sgd_progresses_and_tracks_staleness_free_baseline() {
     let mut cfg = base_cfg();
-    cfg.method = MethodSpec::AsyncSgd { steps_per_update: 8, horizon: 30.0 };
+    cfg.method = protocols::async_sgd::spec(8, 30.0);
     cfg.epochs = 6;
     let res = Trainer::new(cfg).unwrap().run();
     assert!(
@@ -323,7 +330,7 @@ fn async_dead_worker_never_contributes() {
         from_epoch: 0,
         factor: f64::INFINITY,
     });
-    cfg.method = MethodSpec::AsyncSgd { steps_per_update: 8, horizon: 30.0 };
+    cfg.method = protocols::async_sgd::spec(8, 30.0);
     let res = Trainer::new(cfg).unwrap().run();
     for e in &res.epochs {
         assert_eq!(e.q[1], 0);
