@@ -81,10 +81,11 @@ pub struct StepOut {
 /// Per-worker compute engine bound to one shard (`Ā_v` of Algorithm 2).
 ///
 /// Deliberately NOT `Send`-bounded: the XLA backend wraps PJRT handles
-/// (internally `Rc`) that must stay on their creating thread. Simulated-
-/// time coordination runs workers sequentially on the master thread;
-/// the threaded wallclock runner bounds `W: WorkerCompute + Send`, which
-/// the native backend satisfies.
+/// (internally `Rc`) that must stay on their creating thread. The
+/// sequential runtime runs workers inline on the master thread; the
+/// threaded runtime (`coordinator::runtime::ThreadedRuntime`) builds
+/// its own `NativeWorker`s, which are `Send`, and is therefore
+/// native-only.
 pub trait WorkerCompute {
     /// Minibatch size per SGD step.
     fn batch(&self) -> usize;

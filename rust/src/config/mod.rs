@@ -149,6 +149,47 @@ pub enum Backend {
     Xla,
 }
 
+/// Execution-runtime selection: how one epoch's worker-side numerics
+/// execute and which clock stamps the trace (see
+/// [`crate::coordinator::runtime`] and DESIGN.md §2).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum RuntimeSpec {
+    /// In-process sequential execution under the simulated clock — the
+    /// default; deterministic figures.
+    Sim,
+    /// Threaded execution (one OS thread per worker) under a real
+    /// clock: `T`/`T_c` are enforced with `Instant` deadlines and
+    /// straggling is injected as per-step sleeps, all compressed by
+    /// `time_scale` (a budget of T = 200 at `1e-3` runs 200 ms/epoch).
+    Real { time_scale: f64 },
+}
+
+/// Default wall-clock compression for [`RuntimeSpec::Real`].
+pub const DEFAULT_TIME_SCALE: f64 = 1e-3;
+
+impl RuntimeSpec {
+    /// Runtime from its CLI/JSON name; `time_scale` applies to `real`.
+    pub fn parse(name: &str, time_scale: f64) -> Result<Self> {
+        match name {
+            "sim" => Ok(RuntimeSpec::Sim),
+            "real" => {
+                if time_scale <= 0.0 {
+                    bail!("runtime `real`: time_scale must be > 0 (got {time_scale})");
+                }
+                Ok(RuntimeSpec::Real { time_scale })
+            }
+            other => bail!("unknown runtime `{other}` (sim|real)"),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            RuntimeSpec::Sim => "sim",
+            RuntimeSpec::Real { .. } => "real",
+        }
+    }
+}
+
 /// A complete run description.
 #[derive(Clone, Debug)]
 pub struct RunConfig {
@@ -176,6 +217,9 @@ pub struct RunConfig {
     /// Cap on steps per worker-epoch, in fractions of one shard pass.
     pub max_passes: f64,
     pub backend: Backend,
+    /// Execution runtime (simulated clock + sequential workers, or real
+    /// clock + threaded workers).
+    pub runtime: RuntimeSpec,
     pub seed: u64,
 }
 
@@ -215,6 +259,7 @@ impl RunConfig {
             eval_every: 1,
             max_passes: 1.0,
             backend: Backend::Native,
+            runtime: RuntimeSpec::Sim,
             seed: 42,
         }
     }
@@ -450,6 +495,17 @@ impl RunConfig {
                 o => bail!("unknown backend `{o}`"),
             };
         }
+        // Runtime: a bare name (`"runtime": "real"`) or an object with
+        // an explicit compression (`{"kind": "real", "time_scale": 1e-4}`).
+        if let Some(r) = v.get("runtime") {
+            c.runtime = match r {
+                Value::Str(name) => RuntimeSpec::parse(name, DEFAULT_TIME_SCALE)?,
+                obj => RuntimeSpec::parse(
+                    obj.get_str("kind").ok_or_else(|| anyhow!("runtime.kind"))?,
+                    obj.get_f64("time_scale").unwrap_or(DEFAULT_TIME_SCALE),
+                )?,
+            };
+        }
         c.validate()?;
         Ok(c)
     }
@@ -468,6 +524,16 @@ impl RunConfig {
         }
         if self.data.rows() < self.workers * self.batch {
             bail!("dataset too small for {} workers x batch {}", self.workers, self.batch);
+        }
+        if let RuntimeSpec::Real { time_scale } = self.runtime {
+            if time_scale <= 0.0 {
+                bail!("runtime `real`: time_scale must be > 0 (got {time_scale})");
+            }
+            // PJRT handles are thread-pinned; the threaded runtime needs
+            // Send-able workers (see backend::WorkerCompute docs).
+            if self.backend != Backend::Native {
+                bail!("runtime `real` requires the native backend (PJRT is thread-pinned)");
+            }
         }
         protocols::validate_spec(&self.method, self)?;
         Ok(())
@@ -604,6 +670,30 @@ mod tests {
         let mut c = RunConfig::base();
         c.method = MethodSpec::new("warp");
         assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn runtime_spec_parses_and_validates() {
+        // Bare name form, object form, and the default.
+        let c = RunConfig::from_json(&parse(r#"{"runtime": "real"}"#).unwrap()).unwrap();
+        assert_eq!(c.runtime, RuntimeSpec::Real { time_scale: DEFAULT_TIME_SCALE });
+        let c = RunConfig::from_json(
+            &parse(r#"{"runtime": {"kind": "real", "time_scale": 1e-4}}"#).unwrap(),
+        )
+        .unwrap();
+        assert_eq!(c.runtime, RuntimeSpec::Real { time_scale: 1e-4 });
+        assert_eq!(RunConfig::base().runtime, RuntimeSpec::Sim);
+        assert_eq!(RuntimeSpec::Sim.name(), "sim");
+        assert_eq!(RuntimeSpec::Real { time_scale: 1.0 }.name(), "real");
+        // Unknown names and bad scales fail closed.
+        assert!(RunConfig::from_json(&parse(r#"{"runtime": "warp"}"#).unwrap()).is_err());
+        assert!(RuntimeSpec::parse("real", 0.0).is_err());
+        // Real runtime is native-only (PJRT is thread-pinned).
+        let mut c = RunConfig::base();
+        c.runtime = RuntimeSpec::Real { time_scale: 1e-3 };
+        c.backend = Backend::Xla;
+        let err = c.validate().unwrap_err().to_string();
+        assert!(err.contains("native backend"), "{err}");
     }
 
     #[test]

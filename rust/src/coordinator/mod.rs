@@ -29,26 +29,32 @@
 //! # let _ = res;
 //! ```
 //!
-//! Time semantics (DESIGN.md §Simulated time): workers execute *real*
-//! SGD steps — exactly the `q_v` the delay model admits within the
-//! budget — while the clock is charged with modeled durations. Every
-//! stochastic choice derives from the run seed, so runs are
-//! bit-reproducible.
+//! Time semantics (DESIGN.md §Runtimes): under the default `sim`
+//! runtime, workers execute *real* SGD steps — exactly the `q_v` the
+//! delay model admits within the budget — while the clock is charged
+//! with modeled durations, and every stochastic choice derives from the
+//! run seed, so runs are bit-reproducible. Under the `real` runtime
+//! ([`runtime::ThreadedRuntime`] + [`crate::sim::RealClock`]), the same
+//! protocol bodies run on OS threads with `T`/`T_c` enforced as real
+//! deadlines and straggling injected as scaled sleeps — select it with
+//! `Trainer::builder().runtime(RuntimeSpec::Real { time_scale })` or
+//! `--runtime real` on the CLI.
 
-pub mod wallclock;
+pub mod runtime;
 
 use crate::backend::{Consts, Evaluator, NativeEvaluator, NativeWorker, WorkerCompute};
-use crate::config::{Backend, DataSpec, MethodSpec, RunConfig, Schedule};
+use crate::config::{Backend, DataSpec, MethodSpec, RunConfig, RuntimeSpec, Schedule};
 use crate::data::{msd_like, standardize, synthetic_linreg, Dataset};
 use crate::metrics::{Trace, TracePoint};
 use crate::partition::{materialize_shards, Assignment, Shard};
 use crate::protocols::{EpochCtx, Protocol};
 use crate::rng::Xoshiro256pp;
-use crate::sim::SimClock;
+use crate::sim::{Clock, RealClock, SimClock};
 use crate::straggler::{CommModel, CommSpec, DelayModel, StragglerEnv};
 #[cfg(feature = "xla")]
 use anyhow::Context;
 use anyhow::Result;
+use runtime::{SequentialRuntime, ThreadedRuntime, WorkerRuntime};
 use std::sync::Arc;
 
 /// Per-epoch protocol outcome (before evaluation).
@@ -89,13 +95,15 @@ pub struct Trainer {
     pub ds: Arc<Dataset>,
     pub asg: Assignment,
     shards: Vec<Arc<Shard>>,
-    workers: Vec<Box<dyn WorkerCompute>>,
+    /// The execution runtime worker numerics go through (sequential
+    /// in-process, or threaded under real time).
+    exec: Box<dyn WorkerRuntime>,
     evaluator: Box<dyn Evaluator>,
     delay: DelayModel,
     comm: CommModel,
     consts: Consts,
     root: Xoshiro256pp,
-    clock: SimClock,
+    clock: Box<dyn Clock>,
     /// Master's combined parameter vector x_t.
     x: Vec<f32>,
     /// Per-worker parameter vectors (generalized anytime only).
@@ -146,17 +154,25 @@ impl Trainer {
         // optimum as reference).
         let ax_star = reference_predictions(&ds);
 
+        let objective = cfg.data.objective();
+        let delay = DelayModel::new(cfg.env.clone(), cfg.seed);
+        let consts = cfg.schedule.to_consts();
+        let root = Xoshiro256pp::seed_from_u64(cfg.seed);
+
+        // Per-backend worker compute (the sequential runtime's engines;
+        // left empty when the threaded runtime owns its workers itself).
         let mut workers: Vec<Box<dyn WorkerCompute>> = Vec::with_capacity(cfg.workers);
         let evaluator: Box<dyn Evaluator>;
-        let objective = cfg.data.objective();
         match cfg.backend {
             Backend::Native => {
-                for sh in &shards {
-                    workers.push(Box::new(NativeWorker::with_objective(
-                        sh.clone(),
-                        cfg.batch,
-                        objective,
-                    )));
+                if cfg.runtime == RuntimeSpec::Sim {
+                    for sh in &shards {
+                        workers.push(Box::new(NativeWorker::with_objective(
+                            sh.clone(),
+                            cfg.batch,
+                            objective,
+                        )));
+                    }
                 }
                 evaluator = Box::new(NativeEvaluator::with_objective(
                     Arc::new(ds.a.clone()),
@@ -167,6 +183,8 @@ impl Trainer {
             }
             #[cfg(feature = "xla")]
             Backend::Xla => {
+                // validate() rejects Real × Xla (PJRT is thread-pinned),
+                // so this arm always feeds the sequential runtime.
                 let dir = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
                 let engine = Arc::new(
                     crate::runtime::Engine::new(&dir)
@@ -193,19 +211,47 @@ impl Trainer {
             }
         }
 
-        let root = Xoshiro256pp::seed_from_u64(cfg.seed);
+        // One execution path for every protocol: the runtime × clock
+        // pair is the only thing `--runtime` changes.
+        let (exec, clock): (Box<dyn WorkerRuntime>, Box<dyn Clock>) = match cfg.runtime {
+            RuntimeSpec::Sim => (
+                Box::new(SequentialRuntime::new(
+                    workers,
+                    delay.clone(),
+                    root.clone(),
+                    consts,
+                    cfg.batch,
+                )),
+                Box::new(SimClock::new()),
+            ),
+            // Real × non-native is rejected by `RunConfig::validate`,
+            // which every construction path runs before assembling.
+            RuntimeSpec::Real { time_scale } => (
+                Box::new(ThreadedRuntime::new(
+                    &shards,
+                    cfg.batch,
+                    objective,
+                    delay.clone(),
+                    root.clone(),
+                    consts,
+                    time_scale,
+                )),
+                Box::new(RealClock::new(time_scale)),
+            ),
+        };
+
         let d = ds.dim();
         Ok(Self {
-            delay: DelayModel::new(cfg.env.clone(), cfg.seed),
+            delay,
             comm: CommModel::new(cfg.comm.clone(), cfg.seed),
-            consts: cfg.schedule.to_consts(),
+            consts,
             x: vec![0.0; d],
             x_workers: vec![vec![0.0; d]; cfg.workers],
             shards,
-            workers,
+            exec,
             evaluator,
             root,
-            clock: SimClock::new(),
+            clock,
             protocol: Some(protocol),
             epoch: 0,
             events: None,
@@ -226,9 +272,15 @@ impl Trainer {
         &self.x
     }
 
-    /// Simulated seconds elapsed.
+    /// Seconds elapsed on the model's time axis (simulated seconds for
+    /// the `sim` runtime, decompressed host time for `real`).
     pub fn now(&self) -> f64 {
         self.clock.now()
+    }
+
+    /// The execution runtime's registry name (`sim` / `real`).
+    pub fn runtime_name(&self) -> &'static str {
+        self.exec.name()
     }
 
     /// The clock's per-epoch audit log (charges + per-worker finishing
@@ -248,6 +300,7 @@ impl Trainer {
     pub fn run(&mut self) -> RunResult {
         let label = format!("{}[{}]", self.cfg.method.name(), self.cfg.name);
         let mut trace = Trace::new(label);
+        self.clock.start_run();
         let initial = self.evaluator.eval(&self.x);
         trace.points.push(TracePoint {
             epoch: 0,
@@ -305,7 +358,7 @@ impl Trainer {
                 cfg: &self.cfg,
                 ds: &self.ds,
                 shards: &self.shards,
-                workers: &mut self.workers,
+                runtime: self.exec.as_mut(),
                 delay: &self.delay,
                 comm: &self.comm,
                 consts: self.consts,
@@ -438,6 +491,14 @@ impl TrainerBuilder {
     }
     pub fn backend(mut self, b: Backend) -> Self {
         self.cfg.backend = b;
+        self
+    }
+
+    /// Select the execution runtime: `RuntimeSpec::Sim` (default) or
+    /// `RuntimeSpec::Real { time_scale }` for threaded execution under
+    /// real deadlines. Works with every registered protocol.
+    pub fn runtime(mut self, r: RuntimeSpec) -> Self {
+        self.cfg.runtime = r;
         self
     }
 
@@ -617,6 +678,40 @@ mod tests {
         assert_eq!(res.x, vec![0.0; 16], "noop must leave x untouched");
         assert!((tr.now() - 3.0).abs() < 1e-12);
         assert!(res.trace.label.starts_with("custom:noop["));
+    }
+
+    #[test]
+    fn builder_selects_the_real_runtime() {
+        let mut tr = Trainer::builder()
+            .dataset(DataSpec::Synthetic { m: 2_000, d: 16, noise: 1e-3 })
+            .workers(4)
+            .batch(8)
+            .epochs(2)
+            .env(StragglerEnv::ideal(0.05))
+            .schedule(Schedule::Constant { lr: 5e-3 })
+            .method(protocols::anytime::spec(10.0))
+            .runtime(RuntimeSpec::Real { time_scale: 1e-4 })
+            .build()
+            .unwrap();
+        assert_eq!(tr.runtime_name(), "real");
+        let res = tr.run();
+        assert_eq!(res.epochs.len(), 2);
+        // Real clock: trace timestamps are measured, finite, monotone.
+        for w in res.trace.points.windows(2) {
+            assert!(w[1].time.is_finite() && w[1].time > w[0].time, "{:?}", res.trace.points);
+        }
+        assert!(tr.now() > 0.0);
+        // Real runtime is native-only.
+        let err = Trainer::builder()
+            .dataset(DataSpec::Synthetic { m: 2_000, d: 16, noise: 1e-3 })
+            .workers(4)
+            .method(protocols::anytime::spec(10.0))
+            .backend(Backend::Xla)
+            .runtime(RuntimeSpec::Real { time_scale: 1e-3 })
+            .build()
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("native"), "{err}");
     }
 
     #[test]

@@ -1,0 +1,537 @@
+//! The execution-runtime layer: one code path from any [`crate::protocols::Protocol`]
+//! to either simulated or real time.
+//!
+//! A protocol's epoch body is *clock-agnostic*: it decides — from the
+//! deterministic [`DelayModel`]/comm models — which workers compute,
+//! how much ([`Work`]), and from which start vectors, then hands the
+//! per-worker [`Task`]s to a [`WorkerRuntime`] and combines the
+//! [`Report`]s. The runtime decides where and when the numerics
+//! execute:
+//!
+//! * [`SequentialRuntime`] — in-process, inline, instantaneous: the
+//!   worker loop runs on the master thread and time is purely modeled.
+//!   Paired with [`crate::sim::SimClock`]; bit-reproducible figures.
+//! * [`ThreadedRuntime`] — one OS thread per worker on
+//!   [`crate::exec::WorkerPool`], with straggling injected as per-step
+//!   sleeps drawn from the *same* [`DelayModel`] (scaled by
+//!   `time_scale`) and `T`/`T_c` enforced as real `Instant` deadlines.
+//!   Paired with [`crate::sim::RealClock`]; this subsumes the old
+//!   bespoke wall-clock side path (which supported only `anytime`) —
+//!   because protocols only ever talk to the trait, *every* registered
+//!   protocol runs under real time.
+//!
+//! Determinism contract: both runtimes derive a task's step count and
+//! minibatch index stream from the run seed the same way
+//! (`root.split(stream.label, v, stream.key)`, step counts from
+//! `DelayModel::steps_within`), so under [`crate::straggler::DelaySpec::Deterministic`]
+//! delays and generous deadlines the realized q-profiles, combine
+//! weights, and iterates match bit-exactly across runtimes
+//! (`rust/tests/runtime_equivalence.rs`). Under tight real deadlines
+//! the threaded runtime may additionally cut work short or drop late
+//! replies — that is the point of real mode.
+//!
+//! One fidelity caveat: the `async` protocol is a discrete-event loop
+//! whose events are dispatched one at a time through the master, so
+//! under the real runtime its worker compute serializes on the wall
+//! clock — its `RealClock` timestamps measure the serialized event
+//! replay, not a parallel cluster. Scatter/gather protocols (all the
+//! others) genuinely run their workers concurrently.
+
+use crate::backend::{Consts, NativeWorker, Objective, WorkerCompute};
+use crate::exec::{job, WorkerPool};
+use crate::partition::Shard;
+use crate::rng::Xoshiro256pp;
+use crate::straggler::{DelayModel, WorkerEpochRate};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// What one worker computes in one dispatch round.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Work {
+    /// Local SGD until the modeled budget `t` (seconds) expires, capped
+    /// at `max_steps` (Algorithm 2's one-pass guard).
+    Budget { t: f64, max_steps: usize },
+    /// Exactly this many local SGD steps (the step-counted baselines).
+    Steps(usize),
+    /// No SGD numerics: occupy the worker for `step_equiv` step-times
+    /// (gradient coding's full-gradient pass, whose numerics run
+    /// master-side through the code's encode/decode).
+    Busy(f64),
+}
+
+/// One worker's assignment for a dispatch round.
+#[derive(Clone, Debug)]
+pub struct Task {
+    /// Start vector of the local SGD chain (empty for [`Work::Busy`]).
+    pub x0: Vec<f32>,
+    pub work: Work,
+    /// Iteration offset for learning-rate schedule continuity.
+    pub t0: f32,
+    /// Minibatch RNG stream `(label, key)`: indices are drawn from
+    /// `root.split(label, v, key)` — identical in both runtimes, which
+    /// is what makes sim ≡ real reproducible step-for-step.
+    pub stream: (&'static str, u64),
+}
+
+/// One worker's reply.
+#[derive(Clone, Debug)]
+pub struct Report {
+    /// SGD steps actually completed.
+    pub q: usize,
+    /// Modeled compute seconds consumed (`q × rate`; budget work that
+    /// hits neither cap consumes the steps the model admits).
+    pub busy_secs: f64,
+    /// Final iterate `x_q`.
+    pub x_k: Vec<f32>,
+    /// Running average of the iterates `x_1..x_q` — bit-identical
+    /// across runtimes for equal `q` (both run one `run_steps` chain).
+    pub x_bar: Vec<f32>,
+}
+
+/// Executes one scatter/gather round of worker tasks. `tasks[v] = None`
+/// means worker `v` is not dispatched (dead, or outside the protocol's
+/// χ); `guard_secs` is the master's waiting-time guard `T_c` on the
+/// modeled axis — the threaded runtime enforces it as a real gather
+/// deadline. Returns `None` for workers that were not dispatched, are
+/// dead this epoch, or (threaded only) missed the real deadline.
+pub trait WorkerRuntime {
+    fn dispatch(
+        &mut self,
+        epoch: usize,
+        tasks: Vec<Option<Task>>,
+        guard_secs: f64,
+    ) -> Vec<Option<Report>>;
+
+    /// Registry name (`sim` / `real`).
+    fn name(&self) -> &'static str;
+}
+
+/// One runtime the crate ships (for `anytime-sgd list`).
+pub struct RuntimeInfo {
+    pub name: &'static str,
+    pub about: &'static str,
+}
+
+/// Every runtime the crate ships, in display order.
+pub static RUNTIMES: &[RuntimeInfo] = &[
+    RuntimeInfo {
+        name: "sim",
+        about: "sequential in-process workers, simulated clock (deterministic figures)",
+    },
+    RuntimeInfo {
+        name: "real",
+        about: "threaded workers under REAL time: Instant deadlines + per-step sleep \
+                injection, compressed by --time-scale",
+    },
+];
+
+/// In-process sequential execution: the default, and the oracle the
+/// threaded runtime is tested against. Work runs inline on the calling
+/// thread; elapsed host time is irrelevant (the clock is simulated).
+pub struct SequentialRuntime {
+    workers: Vec<Box<dyn WorkerCompute>>,
+    delay: DelayModel,
+    root: Xoshiro256pp,
+    consts: Consts,
+    batch: usize,
+}
+
+impl SequentialRuntime {
+    pub fn new(
+        workers: Vec<Box<dyn WorkerCompute>>,
+        delay: DelayModel,
+        root: Xoshiro256pp,
+        consts: Consts,
+        batch: usize,
+    ) -> Self {
+        Self { workers, delay, root, consts, batch }
+    }
+}
+
+/// Resolve a task's step count and modeled busy time at this epoch's
+/// rate (shared by both runtimes so they agree bit-for-bit).
+fn plan(delay: &DelayModel, v: usize, epoch: usize, work: Work, rate: f64) -> (usize, f64) {
+    match work {
+        Work::Budget { t, max_steps } => delay.steps_within(v, epoch, t, max_steps),
+        Work::Steps(n) => (n, n as f64 * rate),
+        Work::Busy(step_equiv) => (0, step_equiv * rate),
+    }
+}
+
+/// The minibatch index stream for `q` steps of worker `v`: draws from
+/// `root.split(label, v, key)`. This is THE sampling function — both
+/// runtimes go through it, so the sim ≡ real bit-exactness contract
+/// cannot drift between them.
+fn sample_stream(
+    root: &Xoshiro256pp,
+    stream: (&'static str, u64),
+    v: usize,
+    q: usize,
+    batch: usize,
+    rows: usize,
+) -> Vec<u32> {
+    let (label, key) = stream;
+    let mut rng = root.split(label, v as u64, key);
+    (0..q * batch).map(|_| rng.index(rows) as u32).collect()
+}
+
+/// Report for a worker that reported but moved nothing (zero-step
+/// budget, or [`Work::Busy`]): the chain never left `x0`.
+fn idle_report(x0: Vec<f32>, busy_secs: f64) -> Report {
+    let x_bar = x0.clone();
+    Report { q: 0, busy_secs, x_k: x0, x_bar }
+}
+
+impl WorkerRuntime for SequentialRuntime {
+    fn dispatch(
+        &mut self,
+        epoch: usize,
+        tasks: Vec<Option<Task>>,
+        _guard_secs: f64,
+    ) -> Vec<Option<Report>> {
+        let mut out = Vec::with_capacity(tasks.len());
+        for (v, task) in tasks.into_iter().enumerate() {
+            let Some(task) = task else {
+                out.push(None);
+                continue;
+            };
+            let rate = match self.delay.rate(v, epoch) {
+                WorkerEpochRate::Dead => {
+                    out.push(None); // never reports
+                    continue;
+                }
+                WorkerEpochRate::StepSecs(s) => s,
+            };
+            let (q, busy) = plan(&self.delay, v, epoch, task.work, rate);
+            if q == 0 {
+                // Reported but completed nothing (or Busy work).
+                out.push(Some(idle_report(task.x0, busy)));
+                continue;
+            }
+            let rows = self.workers[v].shard_rows();
+            let idx = sample_stream(&self.root, task.stream, v, q, self.batch, rows);
+            let step_out = self.workers[v].run_steps(&task.x0, &idx, task.t0, self.consts);
+            out.push(Some(Report { q, busy_secs: busy, x_k: step_out.x_k, x_bar: step_out.x_bar }));
+        }
+        out
+    }
+
+    fn name(&self) -> &'static str {
+        "sim"
+    }
+}
+
+/// Per-thread worker state of the threaded runtime.
+struct PoolWorker {
+    compute: NativeWorker,
+}
+
+/// Threaded execution under real time: N persistent worker threads
+/// ([`WorkerPool`]), per-step straggler injection as sleeps, real
+/// budget/gather deadlines. See the module docs for the determinism
+/// contract.
+pub struct ThreadedRuntime {
+    pool: WorkerPool<PoolWorker, Option<Report>>,
+    delay: Arc<DelayModel>,
+    root: Xoshiro256pp,
+    consts: Consts,
+    batch: usize,
+    time_scale: f64,
+}
+
+impl ThreadedRuntime {
+    pub fn new(
+        shards: &[Arc<Shard>],
+        batch: usize,
+        objective: Objective,
+        delay: DelayModel,
+        root: Xoshiro256pp,
+        consts: Consts,
+        time_scale: f64,
+    ) -> Self {
+        assert!(time_scale > 0.0, "time_scale must be > 0 (got {time_scale})");
+        let states: Vec<PoolWorker> = shards
+            .iter()
+            .map(|sh| PoolWorker {
+                compute: NativeWorker::with_objective(sh.clone(), batch, objective),
+            })
+            .collect();
+        Self { pool: WorkerPool::new(states), delay: Arc::new(delay), root, consts, batch, time_scale }
+    }
+}
+
+/// Longest single sleep the injector will issue (keeps pathological
+/// configs — a dead-slow Pareto tail draw × a large budget — from
+/// wedging a worker thread for hours of real time).
+const MAX_SLEEP_SECS: f64 = 60.0;
+
+fn scaled_sleep(model_secs: f64, time_scale: f64) {
+    let s = (model_secs * time_scale).clamp(0.0, MAX_SLEEP_SECS);
+    if s > 0.0 {
+        std::thread::sleep(Duration::from_secs_f64(s));
+    }
+}
+
+/// One worker thread's task execution.
+///
+/// The modeled compute time is injected first, as chunked sleeps
+/// checked against the scaled budget deadline — that is the real `T`
+/// enforcement, and it fixes the realized step count `q`. The SGD
+/// numerics then run as ONE `run_steps` call over exactly `q` steps,
+/// which makes both `x_k` and `x_bar` bit-identical to the sequential
+/// runtime whenever `q` matches (numerics are real, time is modeled —
+/// DESIGN.md §2; host compute speed never perturbs the chain itself).
+#[allow(clippy::too_many_arguments)]
+fn run_task_real(
+    w: &mut PoolWorker,
+    v: usize,
+    epoch: usize,
+    task: Task,
+    delay: &DelayModel,
+    root: &Xoshiro256pp,
+    consts: Consts,
+    batch: usize,
+    time_scale: f64,
+) -> Option<Report> {
+    let rate = match delay.rate(v, epoch) {
+        WorkerEpochRate::Dead => return None, // never reports
+        WorkerEpochRate::StepSecs(s) => s,
+    };
+    let (target, busy) = plan(delay, v, epoch, task.work, rate);
+    if target == 0 {
+        // Busy work, or a budget too tight for a single step: occupy
+        // the thread for the modeled duration and report no steps.
+        scaled_sleep(busy, time_scale);
+        return Some(idle_report(task.x0, busy));
+    }
+    let budget_real = match task.work {
+        Work::Budget { t, .. } => Some(Duration::from_secs_f64((t * time_scale).min(86_400.0))),
+        _ => None,
+    };
+
+    // Phase 1 — time: inject the modeled per-step delays as sleeps,
+    // cutting the chain short if the real budget deadline expires.
+    // Nominal sleep totals equal the modeled time (≤ T by plan), so
+    // this break is an overrun hedge: it fires only when the host
+    // falls behind the model (scheduler stalls, sleep overshoot).
+    const CHUNK: usize = 8;
+    let start = Instant::now();
+    let mut q = 0usize;
+    while q < target {
+        if let Some(b) = budget_real {
+            if q > 0 && start.elapsed() >= b {
+                break; // real T expired: report partial work
+            }
+        }
+        let steps = CHUNK.min(target - q);
+        scaled_sleep(rate * steps as f64, time_scale);
+        q += steps;
+    }
+
+    // Phase 2 — numerics: exactly `q` steps in one call over the
+    // realized `q`-prefix of the shared sampling stream, so
+    // Deterministic runs are step-for-step reproducible across repeats
+    // and runtimes (and `x_k`/`x_bar` are bit-identical for equal `q`).
+    let rows = w.compute.shard_rows();
+    let idx = sample_stream(root, task.stream, v, q, batch, rows);
+    let out = w.compute.run_steps(&task.x0, &idx, task.t0, consts);
+    let busy_secs = if q == target { busy } else { q as f64 * rate };
+    Some(Report { q, busy_secs, x_k: out.x_k, x_bar: out.x_bar })
+}
+
+impl WorkerRuntime for ThreadedRuntime {
+    fn dispatch(
+        &mut self,
+        epoch: usize,
+        tasks: Vec<Option<Task>>,
+        guard_secs: f64,
+    ) -> Vec<Option<Report>> {
+        // The master's real waiting-time guard: T_c on the wall clock.
+        let deadline =
+            Duration::from_secs_f64((guard_secs * self.time_scale).clamp(1e-3, 86_400.0));
+        let mut tasks = tasks;
+        let (delay, root, consts, batch, scale) = (
+            self.delay.clone(),
+            self.root.clone(),
+            self.consts,
+            self.batch,
+            self.time_scale,
+        );
+        let replies = self.pool.scatter_gather_opt(
+            |v| {
+                let task = tasks[v].take()?;
+                let delay = delay.clone();
+                let root = root.clone();
+                Some(job(move |w: &mut PoolWorker| {
+                    run_task_real(w, v, epoch, task, &delay, &root, consts, batch, scale)
+                }))
+            },
+            Some(deadline),
+        );
+        // Two `None` layers collapse: not-dispatched / missed-deadline
+        // (outer) and dead-this-epoch (inner) all mean "no report".
+        replies.into_iter().map(|r| r.flatten()).collect()
+    }
+
+    fn name(&self) -> &'static str {
+        "real"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic_linreg;
+    use crate::partition::{materialize_shards, Assignment};
+    use crate::straggler::{PersistentSpec, StragglerEnv};
+
+    const N: usize = 3;
+
+    fn shards() -> Vec<Arc<Shard>> {
+        let ds = synthetic_linreg(600, 8, 1e-3, 5);
+        materialize_shards(&ds, &Assignment::new(N, 0)).into_iter().map(Arc::new).collect()
+    }
+
+    fn env() -> StragglerEnv {
+        StragglerEnv::ideal(0.01).with_persistent(PersistentSpec {
+            workers: vec![2],
+            from_epoch: 0,
+            factor: f64::INFINITY,
+        })
+    }
+
+    fn seq() -> SequentialRuntime {
+        let workers: Vec<Box<dyn WorkerCompute>> = shards()
+            .into_iter()
+            .map(|sh| {
+                Box::new(NativeWorker::with_objective(sh, 4, Objective::LeastSquares))
+                    as Box<dyn WorkerCompute>
+            })
+            .collect();
+        SequentialRuntime::new(
+            workers,
+            DelayModel::new(env(), 9),
+            Xoshiro256pp::seed_from_u64(9),
+            Consts::constant(1e-3),
+            4,
+        )
+    }
+
+    fn threaded_with_scale(time_scale: f64) -> ThreadedRuntime {
+        ThreadedRuntime::new(
+            &shards(),
+            4,
+            Objective::LeastSquares,
+            DelayModel::new(env(), 9),
+            Xoshiro256pp::seed_from_u64(9),
+            Consts::constant(1e-3),
+            time_scale,
+        )
+    }
+
+    fn threaded() -> ThreadedRuntime {
+        threaded_with_scale(1e-4)
+    }
+
+    fn steps_tasks(d: usize) -> Vec<Option<Task>> {
+        (0..N)
+            .map(|_| {
+                Some(Task {
+                    x0: vec![0.0; d],
+                    work: Work::Steps(5),
+                    t0: 0.0,
+                    stream: ("minibatch", 0),
+                })
+            })
+            .collect()
+    }
+
+    #[test]
+    fn sequential_and_threaded_reports_match_bit_exactly() {
+        let mut s = seq();
+        let mut t = threaded();
+        let a = s.dispatch(0, steps_tasks(8), 1e9);
+        let b = t.dispatch(0, steps_tasks(8), 1e9);
+        assert_eq!(s.name(), "sim");
+        assert_eq!(t.name(), "real");
+        for v in 0..2 {
+            let (ra, rb) = (a[v].as_ref().unwrap(), b[v].as_ref().unwrap());
+            assert_eq!(ra.q, 5);
+            assert_eq!(ra.q, rb.q);
+            assert_eq!(ra.x_k, rb.x_k, "worker {v} iterates must match bit-exactly");
+            assert_eq!(ra.busy_secs, rb.busy_secs);
+        }
+        // The dead worker reports in neither runtime.
+        assert!(a[2].is_none());
+        assert!(b[2].is_none());
+    }
+
+    #[test]
+    fn budget_work_caps_at_max_steps_in_both_runtimes() {
+        let mk = |_| {
+            (0..N)
+                .map(|_| {
+                    Some(Task {
+                        x0: vec![0.0; 8],
+                        work: Work::Budget { t: 100.0, max_steps: 7 },
+                        t0: 0.0,
+                        stream: ("minibatch", 1),
+                    })
+                })
+                .collect::<Vec<_>>()
+        };
+        let a = seq().dispatch(1, mk(()), 1e9);
+        let b = threaded().dispatch(1, mk(()), 1e9);
+        for v in 0..2 {
+            assert_eq!(a[v].as_ref().unwrap().q, 7, "cap must bind");
+            assert_eq!(b[v].as_ref().unwrap().q, 7, "cap must bind under real time too");
+            assert_eq!(a[v].as_ref().unwrap().x_k, b[v].as_ref().unwrap().x_k);
+        }
+    }
+
+    #[test]
+    fn real_gather_deadline_drops_late_workers() {
+        // 200 steps × 0.01 s/step × scale 0.1 = 0.2 s of injected sleep
+        // per worker, against a T_c guard of 0.05 modeled seconds =
+        // 5 ms real: every dispatched reply must miss the deadline.
+        let mut t = threaded_with_scale(0.1);
+        let tasks: Vec<Option<Task>> = (0..N)
+            .map(|_| {
+                Some(Task {
+                    x0: vec![0.0; 8],
+                    work: Work::Steps(200),
+                    t0: 0.0,
+                    stream: ("minibatch", 3),
+                })
+            })
+            .collect();
+        let out = t.dispatch(3, tasks, 0.05);
+        assert!(out.iter().all(|r| r.is_none()), "all replies must miss the real T_c deadline");
+        // The pool recovers: the next round's gather discards the stale
+        // generation and returns fresh replies.
+        let out2 = t.dispatch(0, steps_tasks(8), 1e9);
+        assert!(out2[0].is_some() && out2[1].is_some());
+    }
+
+    #[test]
+    fn undispatched_and_busy_workers() {
+        let mut s = seq();
+        let tasks: Vec<Option<Task>> = vec![
+            None,
+            Some(Task { x0: Vec::new(), work: Work::Busy(10.0), t0: 0.0, stream: ("mb", 0) }),
+            None,
+        ];
+        let out = s.dispatch(0, tasks, 1e9);
+        assert!(out[0].is_none());
+        let r = out[1].as_ref().unwrap();
+        assert_eq!(r.q, 0);
+        assert!((r.busy_secs - 0.1).abs() < 1e-12, "10 step-equivalents x 0.01 s");
+        assert!(out[2].is_none());
+    }
+
+    #[test]
+    fn runtime_registry_lists_both() {
+        let names: Vec<&str> = RUNTIMES.iter().map(|r| r.name).collect();
+        assert_eq!(names, vec!["sim", "real"]);
+    }
+}

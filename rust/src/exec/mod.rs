@@ -125,15 +125,33 @@ impl<W: Send + 'static, R: Send + 'static> WorkerPool<W, R> {
         mut make_job: impl FnMut(usize) -> Job<W, R>,
         deadline: Option<Duration>,
     ) -> Vec<Option<R>> {
+        self.scatter_gather_opt(|v| Some(make_job(v)), deadline)
+    }
+
+    /// [`WorkerPool::scatter_gather_deadline`] over a *subset* of the
+    /// pool: workers whose job builder returns `None` are not dispatched
+    /// this round (their slot stays `None`), and the gather only waits
+    /// for the dispatched ones. This is how the threaded runtime skips
+    /// workers a protocol already excluded (dead, outside χ) without
+    /// burning their threads.
+    pub fn scatter_gather_opt(
+        &mut self,
+        mut make_job: impl FnMut(usize) -> Option<Job<W, R>>,
+        deadline: Option<Duration>,
+    ) -> Vec<Option<R>> {
         self.generation += 1;
         let generation = self.generation;
+        let mut expected = 0usize;
         for (v, tx) in self.senders.iter().enumerate() {
-            tx.send(Msg::Run(generation, make_job(v))).expect("worker thread alive");
+            if let Some(job) = make_job(v) {
+                tx.send(Msg::Run(generation, job)).expect("worker thread alive");
+                expected += 1;
+            }
         }
         let mut results: Vec<Option<R>> = (0..self.n).map(|_| None).collect();
         let mut received = 0;
         let start = Instant::now();
-        while received < self.n {
+        while received < expected {
             let reply = match deadline {
                 Some(d) => {
                     let remaining = d.checked_sub(start.elapsed());
@@ -273,6 +291,22 @@ mod tests {
         // Next epoch: the late generation-1 reply must not pollute results.
         let out2 = pool.scatter_gather(|v| job(move |_| 100 + v as u64));
         assert_eq!(out2, vec![100, 101]);
+    }
+
+    #[test]
+    fn opt_scatter_skips_undispatched_workers() {
+        let mut pool: WorkerPool<u64, u64> = WorkerPool::new(vec![1, 2, 3]);
+        // Only workers 0 and 2 get jobs; the gather must not wait on 1.
+        let t0 = Instant::now();
+        let out = pool.scatter_gather_opt(
+            |v| if v == 1 { None } else { Some(job(move |state| *state * 10 + v as u64)) },
+            Some(Duration::from_secs(5)),
+        );
+        assert!(t0.elapsed() < Duration::from_secs(4), "gather must return early");
+        assert_eq!(out, vec![Some(10), None, Some(32)]);
+        // The pool stays usable for full rounds afterwards.
+        let out2 = pool.scatter_gather(|_| job(|state| *state));
+        assert_eq!(out2, vec![1, 2, 3]);
     }
 
     #[test]

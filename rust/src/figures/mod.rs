@@ -33,11 +33,14 @@ pub struct FigOpts {
     pub seed: Option<u64>,
     /// Backend override ("native"/"xla").
     pub backend: Option<crate::config::Backend>,
+    /// Execution-runtime override (None = preset default, i.e. `sim`;
+    /// `Real` regenerates a figure under real threaded time).
+    pub runtime: Option<crate::config::RuntimeSpec>,
 }
 
 impl Default for FigOpts {
     fn default() -> Self {
-        Self { paper_scale: false, epochs: None, seed: None, backend: None }
+        Self { paper_scale: false, epochs: None, seed: None, backend: None, runtime: None }
     }
 }
 
@@ -54,6 +57,9 @@ fn cfg(preset: &str, o: &FigOpts) -> Result<RunConfig> {
     }
     if let Some(b) = o.backend {
         c.backend = b;
+    }
+    if let Some(r) = o.runtime {
+        c.runtime = r;
     }
     Ok(c)
 }

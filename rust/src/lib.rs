@@ -19,6 +19,12 @@
 //!   sync, fastest-(N−B), gradient coding, async) is a
 //!   [`protocols::Protocol`] behind a name-keyed registry; config, CLI,
 //!   sweep grids, and figures all resolve methods through it.
+//! * **runtimes** — the execution layer ([`coordinator::runtime`]):
+//!   every protocol's epoch body dispatches worker numerics through a
+//!   `WorkerRuntime`, so one code path runs under the simulated clock
+//!   (sequential, deterministic) or under *real* time (threaded
+//!   workers, `Instant`-enforced `T`/`T_c`, `--runtime real
+//!   --time-scale ...`) — see DESIGN.md §2.
 //! * **sweep** — the experiment-campaign engine: parameter grids over
 //!   [`config::RunConfig`], a named scenario library, a bounded-thread
 //!   parallel runner, and multi-seed mean ± CI aggregation

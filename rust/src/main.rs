@@ -18,7 +18,7 @@
 
 use anyhow::{bail, Result};
 use anytime_sgd::cli::{Command, FlagKind};
-use anytime_sgd::config::{Backend, RunConfig};
+use anytime_sgd::config::{Backend, RunConfig, RuntimeSpec, DEFAULT_TIME_SCALE};
 use anytime_sgd::coordinator::Trainer;
 use anytime_sgd::figures::{self, FigOpts};
 use std::path::Path;
@@ -38,12 +38,12 @@ fn main() {
 fn usage() -> String {
     "anytime-sgd — Anytime Stochastic Gradient Descent (Ferdinand & Draper '18)\n\n\
      Subcommands:\n\
-       train      run one configuration\n\
+       train      run one configuration (alias: run); --runtime sim|real\n\
        sweep      run an experiment campaign (grid x scenarios x seeds,\n\
                   parallel; mean ± CI aggregates under results/)\n\
        figures    regenerate paper figures (fig1..fig6 | theory | ablations |\n\
                   variance | async | logreg | all)\n\
-       list       enumerate registered protocols, scenarios, and presets\n\
+       list       enumerate registered protocols, runtimes, scenarios, presets\n\
        partition  print + validate the Table-I data assignment\n\
        inspect    list AOT artifacts\n\n\
      Run `anytime-sgd <subcommand> --help` for flags.\n"
@@ -57,7 +57,9 @@ fn dispatch(args: &[String]) -> Result<()> {
     };
     let rest = &args[1..];
     match sub.as_str() {
-        "train" => cmd_train(rest),
+        // `run` is a synonym for `train` (the runtime-selection docs
+        // use `anytime-sgd run --runtime real`).
+        "train" | "run" => cmd_train(rest),
         "sweep" => cmd_sweep(rest),
         "figures" => cmd_figures(rest),
         "list" => cmd_list(rest),
@@ -89,7 +91,14 @@ fn cmd_train(args: &[String]) -> Result<()> {
         .flag("paper-scale", FlagKind::Bool, None, "use the paper's exact data sizes")
         .flag("out", FlagKind::Str, Some("results"), "output directory for the trace CSV")
         .flag("events", FlagKind::Str, None, "write a JSONL telemetry stream to this path")
-        .flag("wallclock", FlagKind::Bool, None, "run under REAL time (anytime + native only)")
+        .flag(
+            "runtime",
+            FlagKind::Str,
+            None,
+            "execution runtime: sim (default) | real (threaded workers, real T/T_c \
+             deadlines; works with every registered protocol)",
+        )
+        .flag("wallclock", FlagKind::Bool, None, "deprecated alias for --runtime real")
         .flag("time-scale", FlagKind::Float, Some("0.001"), "wall-clock compression factor");
     let m = cmd.parse(args).map_err(|e| anyhow::anyhow!("{e}"))?;
 
@@ -112,25 +121,23 @@ fn cmd_train(args: &[String]) -> Result<()> {
         cfg.seed = m.u64_of("seed");
     }
     cfg.backend = parse_backend(&m.str_of("backend"))?;
+    if let Some(r) = m.get("runtime") {
+        cfg.runtime = RuntimeSpec::parse(r, m.f64_of("time-scale"))?;
+    } else if m.bool_of("wallclock") {
+        eprintln!("note: --wallclock is deprecated; use --runtime real --time-scale ...");
+        cfg.runtime = RuntimeSpec::parse("real", m.f64_of("time-scale"))?;
+    }
 
     eprintln!(
-        "train: {} | data {:?} | N={} S={} | backend {:?} | {} epochs",
-        cfg.name, cfg.data, cfg.workers, cfg.redundancy, cfg.backend, cfg.epochs
+        "train: {} | data {:?} | N={} S={} | backend {:?} | runtime {} | {} epochs",
+        cfg.name,
+        cfg.data,
+        cfg.workers,
+        cfg.redundancy,
+        cfg.backend,
+        cfg.runtime.name(),
+        cfg.epochs
     );
-    if m.bool_of("wallclock") {
-        // Real-time execution path (threaded workers, real T budgets).
-        let ds = std::sync::Arc::new(anytime_sgd::coordinator::build_dataset(&cfg));
-        let scale = m.f64_of("time-scale");
-        let t0 = std::time::Instant::now();
-        let res = anytime_sgd::coordinator::wallclock::run_wallclock(&cfg, ds, scale)?;
-        eprintln!("wall-clock mode: {:.2}s real at scale {scale}", t0.elapsed().as_secs_f64());
-        let mut f = anytime_sgd::metrics::Figure::new("run-wallclock", "time");
-        f.traces.push(res.trace);
-        println!("{}", f.render_table());
-        let path = f.write(Path::new(&m.str_of("out")))?;
-        eprintln!("trace written to {}", path.display());
-        return Ok(());
-    }
 
     let t0 = std::time::Instant::now();
     let mut tr = Trainer::new(cfg)?;
@@ -138,7 +145,13 @@ fn cmd_train(args: &[String]) -> Result<()> {
         tr = tr.with_events(anytime_sgd::metrics::events::EventLog::create(Path::new(p))?);
     }
     let res = tr.run();
-    eprintln!("wall-clock: {:.2}s (simulated: {:.1}s)", t0.elapsed().as_secs_f64(), tr.now());
+    eprintln!(
+        "wall-clock: {:.2}s ({} {}: {:.1}s)",
+        t0.elapsed().as_secs_f64(),
+        tr.runtime_name(),
+        if tr.runtime_name() == "real" { "decompressed" } else { "simulated" },
+        tr.now()
+    );
 
     let mut fig = anytime_sgd::metrics::Figure::new(res.trace.label.clone(), "time");
     println!("{}", {
@@ -208,6 +221,13 @@ fn fig_opts(m: &anytime_sgd::cli::Matches) -> Result<FigOpts> {
             Some(b) => Some(parse_backend(b)?),
             None => None,
         },
+        runtime: match m.get("runtime") {
+            Some(r) => Some(RuntimeSpec::parse(
+                r,
+                if m.is_set("time-scale") { m.f64_of("time-scale") } else { DEFAULT_TIME_SCALE },
+            )?),
+            None => None,
+        },
     })
 }
 
@@ -217,6 +237,8 @@ fn cmd_figures(args: &[String]) -> Result<()> {
         .flag("seed", FlagKind::Int, None, "override root seed")
         .flag("paper-scale", FlagKind::Bool, None, "use the paper's exact data sizes")
         .flag("backend", FlagKind::Str, None, "compute backend override: native | xla")
+        .flag("runtime", FlagKind::Str, None, "execution-runtime override: sim | real")
+        .flag("time-scale", FlagKind::Float, None, "wall-clock compression for --runtime real")
         .flag("out", FlagKind::Str, Some("results"), "output directory");
     let m = cmd.parse(args).map_err(|e| anyhow::anyhow!("{e}"))?;
     let which: Vec<String> = if m.positional.is_empty() {
@@ -321,7 +343,8 @@ fn cmd_figures(args: &[String]) -> Result<()> {
 }
 
 fn cmd_list(args: &[String]) -> Result<()> {
-    let cmd = Command::new("list", "enumerate registered protocols, scenarios, and presets");
+    let cmd =
+        Command::new("list", "enumerate registered protocols, runtimes, scenarios, and presets");
     let _m = cmd.parse(args).map_err(|e| anyhow::anyhow!("{e}"))?;
 
     println!("Protocols (config `method.kind` / `sweep --methods` / Trainer::builder):");
@@ -333,6 +356,11 @@ fn cmd_list(args: &[String]) -> Result<()> {
             format!("  (aliases: {})", p.aliases.join(", "))
         };
         println!("  {:<16} {}{t}{aliases}", p.name, p.about);
+    }
+
+    println!("\nRuntimes (`train --runtime` / `sweep --runtime` / config `runtime`):");
+    for r in anytime_sgd::coordinator::runtime::RUNTIMES {
+        println!("  {:<16} {}", r.name, r.about);
     }
 
     println!("\nScenarios (`sweep --scenario`):");

@@ -34,19 +34,41 @@ impl Trace {
 
     /// First simulated time at which the error drops below `target`
     /// (linear interpolation between epochs), or None.
+    ///
+    /// Trainer traces carry their run origin as the epoch-0 point
+    /// `(t = 0, initial error)`, so the scan starts from it. For a
+    /// trace that begins mid-run (first point at t > 0) the origin
+    /// error is unknown here — use [`Trace::time_to_error_from`] with
+    /// the run's initial error so a first point that already meets the
+    /// target is interpolated from t = 0 instead of being credited
+    /// with its full first-interval time.
     pub fn time_to_error(&self, target: f64) -> Option<f64> {
-        let mut prev: Option<&TracePoint> = None;
+        match self.points.first() {
+            Some(p0) if p0.time == 0.0 => self.time_to_error_from(p0.norm_err, target),
+            _ => self.time_to_error_from(f64::INFINITY, target),
+        }
+    }
+
+    /// [`Trace::time_to_error`] seeded with an explicit run origin
+    /// `(t = 0, initial_err)` — for traces that do not store the
+    /// epoch-0 point. An infinite `initial_err` disables origin
+    /// interpolation (the first meeting point's own time is returned).
+    pub fn time_to_error_from(&self, initial_err: f64, target: f64) -> Option<f64> {
+        if initial_err <= target {
+            return Some(0.0);
+        }
+        let mut prev: (f64, f64) = (0.0, initial_err);
         for p in &self.points {
             if p.norm_err <= target {
-                if let Some(q) = prev {
-                    if q.norm_err > p.norm_err {
-                        let f = (q.norm_err - target) / (q.norm_err - p.norm_err);
-                        return Some(q.time + f * (p.time - q.time));
-                    }
-                }
-                return Some(p.time);
+                let (t0, e0) = prev;
+                return Some(if e0.is_finite() && e0 > p.norm_err {
+                    let f = (e0 - target) / (e0 - p.norm_err);
+                    t0 + f * (p.time - t0)
+                } else {
+                    p.time
+                });
             }
-            prev = Some(p);
+            prev = (p.time, p.norm_err);
         }
         None
     }
@@ -250,6 +272,25 @@ mod tests {
         assert!((t.time_to_error(0.3).unwrap() - 15.0).abs() < 1e-9);
         assert_eq!(t.time_to_error(0.01), None);
         assert_eq!(t.final_err(), 0.1);
+        // A target the origin already meets is reached at t = 0.
+        assert_eq!(t.time_to_error(1.0), Some(0.0));
+    }
+
+    #[test]
+    fn time_to_error_interpolates_from_the_run_origin() {
+        // A trace that starts mid-run: first eval point (t=12) already
+        // meets the target. With the run origin supplied, the crossing
+        // is interpolated from (0, initial) instead of credited with
+        // the full first-epoch time.
+        let t = trace(&[(12.0, 0.3), (24.0, 0.1)]);
+        let got = t.time_to_error_from(1.0, 0.5).unwrap();
+        assert!((got - 12.0 * (0.5 / 0.7)).abs() < 1e-9, "{got}");
+        // Origin at/below the target: met at t = 0.
+        assert_eq!(t.time_to_error_from(0.5, 0.5), Some(0.0));
+        // Without origin information, fall back to the point's time.
+        assert_eq!(t.time_to_error(0.5), Some(12.0));
+        // Origin seeding never changes later crossings' interpolation.
+        assert!((t.time_to_error_from(1.0, 0.2).unwrap() - 18.0).abs() < 1e-9);
     }
 
     #[test]

@@ -8,6 +8,7 @@
 
 use super::{combine_lambda, CombinePolicy, EpochCtx, Iterate, Protocol, ProtocolInfo};
 use crate::config::{MethodSpec, RunConfig};
+use crate::coordinator::runtime::{Task, Work};
 use crate::coordinator::EpochStats;
 use crate::sim::wait;
 use crate::straggler::WorkerEpochRate;
@@ -99,29 +100,39 @@ pub fn run_epoch(
     // vector only moves at the combine step below.
     let x_snapshot = ctx.x.clone();
 
-    for v in 0..n {
-        let (qv, _used) = ctx.delay.steps_within(v, e, t, ctx.max_steps(v));
-        if matches!(ctx.delay.rate(v, e), WorkerEpochRate::Dead) {
-            continue; // never reports
-        }
-        // Workers report at the end of the budget; arrival = T + uplink.
-        let arrival = t + ctx.comm.delay(v, e, 0);
-        if arrival > ctx.cfg.t_c {
-            continue; // missed the waiting-time guard
-        }
-        finish[v] = Some(arrival);
-        if qv == 0 {
+    // Plan: every live worker whose end-of-budget report would clear
+    // the T_c guard gets the full budget T; the runtime realizes the
+    // step counts (and, under real time, enforces T on the wall clock).
+    let tasks: Vec<Option<Task>> = (0..n)
+        .map(|v| {
+            if matches!(ctx.delay.rate(v, e), WorkerEpochRate::Dead) {
+                return None; // never reports
+            }
+            // Workers report at the end of the budget; arrival = T + uplink.
+            if t + ctx.comm.delay(v, e, 0) > ctx.cfg.t_c {
+                return None; // missed the waiting-time guard: work discarded
+            }
+            Some(Task {
+                x0: x_snapshot.clone(),
+                work: Work::Budget { t, max_steps: ctx.max_steps(v) },
+                t0: 0.0,
+                stream: ("minibatch", e as u64),
+            })
+        })
+        .collect();
+    let reports = ctx.dispatch(tasks, ctx.cfg.t_c);
+    for (v, rep) in reports.into_iter().enumerate() {
+        let Some(rep) = rep else { continue };
+        finish[v] = Some(t + ctx.comm.delay(v, e, 0));
+        if rep.q == 0 {
             // Reported but completed nothing: x_vt = x_{t-1}, q_v = 0
             // — contributes no weight under any policy.
             continue;
         }
-        let idx = ctx.sample_idx(v, qv);
-        let consts = ctx.consts;
-        let out = ctx.workers[v].run_steps(&x_snapshot, &idx, 0.0, consts);
-        q[v] = qv;
+        q[v] = rep.q;
         outputs[v] = Some(match iterate {
-            Iterate::Last => out.x_k,
-            Iterate::Average => out.x_bar,
+            Iterate::Last => rep.x_k,
+            Iterate::Average => rep.x_bar,
         });
     }
 

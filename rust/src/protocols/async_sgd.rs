@@ -11,6 +11,7 @@
 
 use super::{EpochCtx, Protocol, ProtocolInfo};
 use crate::config::{MethodSpec, RunConfig};
+use crate::coordinator::runtime::{Task, Work};
 use crate::coordinator::EpochStats;
 use crate::straggler::WorkerEpochRate;
 use anyhow::{bail, Result};
@@ -102,20 +103,34 @@ impl Protocol for AsyncSgd {
         while let Some(Reverse(Key(bits, v, c))) = heap.pop() {
             let now = f64::from_bits(bits);
             // Compute the worker's u steps from its snapshot (real
-            // numerics), apply the delta to the (possibly moved-on) x.
-            let mut rng = ctx.root.split("async-mb", v as u64, (e * 1_000_003 + c) as u64);
-            let rows = ctx.workers[v].shard_rows();
-            let idx: Vec<u32> =
-                (0..u * ctx.cfg.batch).map(|_| rng.index(rows) as u32).collect();
+            // numerics, executed by the runtime — on worker v's thread
+            // under real time), apply the delta to the (possibly
+            // moved-on) x. Events stay ordered by modeled finish time,
+            // so the staleness interleaving is identical across
+            // runtimes.
             let t_sched = (dispatch_count[v] * u) as f32;
-            let consts = ctx.consts;
-            let out = ctx.workers[v].run_steps(&snapshots[v], &idx, t_sched, consts);
-            for ((xm, &xw), &s) in ctx.x.iter_mut().zip(out.x_k.iter()).zip(snapshots[v].iter()) {
-                *xm += xw - s;
+            let mut tasks: Vec<Option<Task>> = (0..n).map(|_| None).collect();
+            tasks[v] = Some(Task {
+                x0: snapshots[v].clone(),
+                work: Work::Steps(u),
+                t0: t_sched,
+                stream: ("async-mb", (e * 1_000_003 + c) as u64),
+            });
+            // Async has no T_c drop rule: the master applies deltas for
+            // as long as the horizon runs, so the real gather waits it
+            // out too. A reply that still misses the real deadline loses
+            // only that one update — the worker is redispatched below.
+            let guard = ctx.cfg.t_c.max(horizon);
+            if let Some(out) = ctx.dispatch(tasks, guard).swap_remove(v) {
+                for ((xm, &xw), &s) in
+                    ctx.x.iter_mut().zip(out.x_k.iter()).zip(snapshots[v].iter())
+                {
+                    *xm += xw - s;
+                }
+                q[v] += u;
+                received[v] = true;
+                last_finish[v] = Some(now);
             }
-            q[v] += u;
-            received[v] = true;
-            last_finish[v] = Some(now);
             dispatch_count[v] += 1;
 
             // Redispatch if the next round still fits the horizon.

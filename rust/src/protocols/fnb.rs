@@ -3,6 +3,7 @@
 
 use super::{combine_lambda, CombinePolicy, EpochCtx, Protocol, ProtocolInfo};
 use crate::config::{MethodSpec, RunConfig};
+use crate::coordinator::runtime::{Task, Work};
 use crate::coordinator::EpochStats;
 use crate::sim::wait;
 use crate::straggler::WorkerEpochRate;
@@ -82,14 +83,24 @@ impl Protocol for Fnb {
 
         let mut q = vec![0usize; n];
         let mut outputs: Vec<Option<Vec<f32>>> = vec![None; n];
-        // Every worker in χ starts from the same broadcast x_{t-1}.
+        // Every worker in χ starts from the same broadcast x_{t-1};
+        // only χ is dispatched — everyone else is discarded unrun.
         let x_snapshot = ctx.x.clone();
-        for &v in &chi {
-            let idx = ctx.sample_idx(v, steps);
-            let consts = ctx.consts;
-            let out = ctx.workers[v].run_steps(&x_snapshot, &idx, 0.0, consts);
-            q[v] = steps;
-            outputs[v] = Some(out.x_k);
+        let tasks: Vec<Option<Task>> = (0..n)
+            .map(|v| {
+                chi.contains(&v).then(|| Task {
+                    x0: x_snapshot.clone(),
+                    work: Work::Steps(steps),
+                    t0: 0.0,
+                    stream: ("minibatch", e as u64),
+                })
+            })
+            .collect();
+        let reports = ctx.dispatch(tasks, ctx.cfg.t_c);
+        for (v, rep) in reports.into_iter().enumerate() {
+            let Some(rep) = rep else { continue };
+            q[v] = rep.q;
+            outputs[v] = Some(rep.x_k);
         }
 
         let lambda = combine_lambda(CombinePolicy::Uniform, &q, &outputs);

@@ -3,6 +3,7 @@
 
 use super::{combine_lambda, CombinePolicy, EpochCtx, Protocol, ProtocolInfo};
 use crate::config::{MethodSpec, RunConfig};
+use crate::coordinator::runtime::{Task, Work};
 use crate::coordinator::EpochStats;
 use crate::straggler::WorkerEpochRate;
 use crate::theory;
@@ -60,21 +61,30 @@ impl Protocol for Generalized {
         let mut round_trips = vec![0.0f64; n];
 
         // Phase 1: the budgeted epoch (from each worker's own vector).
-        for v in 0..n {
-            let (qv, used) = ctx.delay.steps_within(v, e, t, ctx.max_steps(v));
-            if matches!(ctx.delay.rate(v, e), WorkerEpochRate::Dead) {
+        let tasks: Vec<Option<Task>> = (0..n)
+            .map(|v| {
+                if matches!(ctx.delay.rate(v, e), WorkerEpochRate::Dead) {
+                    return None;
+                }
+                Some(Task {
+                    x0: ctx.x_workers[v].clone(),
+                    work: Work::Budget { t, max_steps: ctx.max_steps(v) },
+                    t0: 0.0,
+                    stream: ("minibatch", e as u64),
+                })
+            })
+            .collect();
+        // Generalized has no T_c drop rule: the master waits out the
+        // full budget, so the real gather must too.
+        let reports = ctx.dispatch(tasks, ctx.cfg.t_c.max(t));
+        for (v, rep) in reports.into_iter().enumerate() {
+            let Some(rep) = rep else { continue };
+            finish[v] = Some(rep.busy_secs + ctx.comm.delay(v, e, 0));
+            if rep.q == 0 {
                 continue;
             }
-            finish[v] = Some(used + ctx.comm.delay(v, e, 0));
-            if qv == 0 {
-                continue;
-            }
-            let idx = ctx.sample_idx(v, qv);
-            let consts = ctx.consts;
-            let start = ctx.x_workers[v].clone();
-            let out = ctx.workers[v].run_steps(&start, &idx, 0.0, consts);
-            q[v] = qv;
-            outputs[v] = Some(out.x_k);
+            q[v] = rep.q;
+            outputs[v] = Some(rep.x_k);
         }
 
         // Master combines with Theorem-3 weights (the generalized scheme
@@ -83,29 +93,35 @@ impl Protocol for Generalized {
         ctx.apply_combine(&outputs, &lambda);
         let sum_q: usize = q.iter().sum();
 
-        // Phase 2: idle-period compute + worker-side blend (eq. 13).
-        for v in 0..n {
-            let rt = ctx.comm.delay(v, e, 0) + ctx.comm.delay(v, e, 1);
-            round_trips[v] = rt;
-            if matches!(ctx.delay.rate(v, e), WorkerEpochRate::Dead) {
-                continue;
-            }
-            let start = match &outputs[v] {
-                Some(x) => x.clone(),
-                None => ctx.x_workers[v].clone(),
-            };
-            let (qb, _) = ctx.delay.steps_within(v, e, rt, ctx.max_steps(v));
-            let xbar_v = if qb > 0 {
-                let mut rng = ctx.root.split("idle-minibatch", v as u64, e as u64);
-                let rows = ctx.workers[v].shard_rows();
-                let idx: Vec<u32> =
-                    (0..qb * ctx.cfg.batch).map(|_| rng.index(rows) as u32).collect();
-                qbar[v] = qb;
-                let consts = ctx.consts;
-                ctx.workers[v].run_steps(&start, &idx, q[v] as f32, consts).x_k
-            } else {
-                start
-            };
+        // Phase 2: idle-period compute during the comm round-trip (each
+        // worker's own budget = its round-trip time), then the
+        // worker-side blend (eq. 13).
+        let idle_tasks: Vec<Option<Task>> = (0..n)
+            .map(|v| {
+                let rt = ctx.comm.delay(v, e, 0) + ctx.comm.delay(v, e, 1);
+                round_trips[v] = rt;
+                if matches!(ctx.delay.rate(v, e), WorkerEpochRate::Dead) {
+                    return None;
+                }
+                let start = match &outputs[v] {
+                    Some(x) => x.clone(),
+                    None => ctx.x_workers[v].clone(),
+                };
+                Some(Task {
+                    x0: start,
+                    work: Work::Budget { t: rt, max_steps: ctx.max_steps(v) },
+                    t0: q[v] as f32,
+                    stream: ("idle-minibatch", e as u64),
+                })
+            })
+            .collect();
+        let max_rt = round_trips.iter().cloned().fold(0.0f64, f64::max);
+        let idle_reports = ctx.dispatch(idle_tasks, ctx.cfg.t_c.max(max_rt));
+        for (v, rep) in idle_reports.into_iter().enumerate() {
+            let Some(rep) = rep else { continue };
+            qbar[v] = rep.q;
+            // q̄ = 0 leaves the chain where phase 1 ended (x_k = x0).
+            let xbar_v = rep.x_k;
             // x_v^{t+1} = λ_vt x^t + (1 − λ_vt) x̄_vt.
             let lam_vt = theory::generalized_lambda(sum_q, qbar[v]) as f32;
             let xg = &*ctx.x;
@@ -117,7 +133,7 @@ impl Protocol for Generalized {
         }
 
         // Time: budget T, then the round trip overlaps the idle compute.
-        let comm = round_trips.iter().cloned().fold(0.0f64, f64::max).min(ctx.cfg.t_c);
+        let comm = max_rt.min(ctx.cfg.t_c);
         let received = finish.iter().map(|f| f.is_some()).collect();
         EpochStats { q, received, compute_secs: t, comm_secs: comm, lambda, worker_finish: finish }
     }

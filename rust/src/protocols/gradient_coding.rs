@@ -6,6 +6,7 @@
 
 use super::{EpochCtx, Protocol, ProtocolInfo};
 use crate::config::{MethodSpec, RunConfig};
+use crate::coordinator::runtime::{Task, Work};
 use crate::coordinator::EpochStats;
 use crate::methods::gradient_coding::GradientCode;
 use crate::sim::wait;
@@ -77,6 +78,22 @@ impl Protocol for GradientCoding {
         let mut order: Vec<usize> = (0..n).filter(|&v| arrivals[v].is_some()).collect();
         order.sort_by(|&a, &b| arrivals[a].partial_cmp(&arrivals[b]).unwrap());
         let chi: Vec<usize> = order.into_iter().take(k).collect();
+
+        // Occupy χ's workers for the full-gradient pass (real time under
+        // the threaded runtime; a no-op charge under the sequential
+        // one). The coded numerics themselves run master-side below —
+        // encode/decode needs the code matrix and the full dataset view.
+        let tasks: Vec<Option<Task>> = (0..n)
+            .map(|v| {
+                chi.contains(&v).then(|| Task {
+                    x0: Vec::new(),
+                    work: Work::Busy(ctx.shards[v].rows() as f64 / ctx.cfg.batch as f64),
+                    t0: 0.0,
+                    stream: ("gc", e as u64),
+                })
+            })
+            .collect();
+        let _ = ctx.dispatch(tasks, ctx.cfg.t_c);
 
         let mut q = vec![0usize; n];
         let mut received_vec = vec![false; n];

@@ -37,8 +37,9 @@ pub mod generalized;
 pub mod gradient_coding;
 pub mod sync;
 
-use crate::backend::{Consts, WorkerCompute};
+use crate::backend::Consts;
 use crate::config::{MethodSpec, RunConfig};
+use crate::coordinator::runtime::{Report, Task, WorkerRuntime};
 use crate::coordinator::EpochStats;
 use crate::data::Dataset;
 use crate::linalg::weighted_sum;
@@ -68,16 +69,23 @@ pub trait Protocol {
 /// One epoch's view of the trainer topology, lent to the protocol.
 ///
 /// Fields are the coordinator's own state, reborrowed per epoch; helper
-/// methods cover the shared sub-calculus (minibatch sampling streams,
-/// step caps, combining, communication charges) so protocol modules
-/// stay small.
+/// methods cover the shared sub-calculus (step caps, runtime dispatch,
+/// combining, communication charges) so protocol modules stay small.
+///
+/// A protocol never touches worker compute directly: it plans each
+/// worker's [`Task`] (from the deterministic delay/comm models) and
+/// [`EpochCtx::dispatch`]es through the trainer's
+/// [`WorkerRuntime`] — which is what makes every epoch body
+/// clock-agnostic: the same code runs sequentially under the simulated
+/// clock or on real threads under real deadlines.
 pub struct EpochCtx<'a> {
     /// Epoch index `e` (0-based).
     pub epoch: usize,
     pub cfg: &'a RunConfig,
     pub ds: &'a Arc<Dataset>,
     pub shards: &'a [Arc<Shard>],
-    pub workers: &'a mut [Box<dyn WorkerCompute>],
+    /// The execution runtime worker numerics go through.
+    pub runtime: &'a mut dyn WorkerRuntime,
     pub delay: &'a DelayModel,
     pub comm: &'a CommModel,
     pub consts: Consts,
@@ -101,12 +109,18 @@ impl EpochCtx<'_> {
         ((self.cfg.max_passes * rows as f64 / self.cfg.batch as f64).ceil() as usize).max(1)
     }
 
-    /// Seeded minibatch index stream for worker `v` this epoch:
-    /// `q*batch` uniform draws over the shard rows (Algorithm 2 step 6).
-    pub fn sample_idx(&self, v: usize, q: usize) -> Vec<u32> {
-        let rows = self.shards[v].rows();
-        let mut rng = self.root.split("minibatch", v as u64, self.epoch as u64);
-        (0..q * self.cfg.batch).map(|_| rng.index(rows) as u32).collect()
+    /// Execute one scatter/gather round of worker tasks through the
+    /// trainer's runtime. `guard_secs` is how long (modeled seconds)
+    /// the master will wait before abandoning outstanding replies —
+    /// `cfg.t_c` for protocols with a waiting-time guard; protocols
+    /// without a drop rule (generalized, async) pass their own work
+    /// horizon so the real runtime never drops what the model keeps.
+    pub fn dispatch(
+        &mut self,
+        tasks: Vec<Option<Task>>,
+        guard_secs: f64,
+    ) -> Vec<Option<Report>> {
+        self.runtime.dispatch(self.epoch, tasks, guard_secs)
     }
 
     /// Combine λ-weighted worker outputs into the master vector.

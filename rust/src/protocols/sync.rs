@@ -3,6 +3,7 @@
 
 use super::{combine_lambda, CombinePolicy, EpochCtx, Protocol, ProtocolInfo};
 use crate::config::{MethodSpec, RunConfig};
+use crate::coordinator::runtime::{Task, Work};
 use crate::coordinator::EpochStats;
 use crate::sim::wait;
 use crate::straggler::WorkerEpochRate;
@@ -61,22 +62,33 @@ impl Protocol for SyncSgd {
         // Every worker starts from the same broadcast x_{t-1}.
         let x_snapshot = ctx.x.clone();
 
-        for v in 0..n {
-            let rate = match ctx.delay.rate(v, e) {
-                WorkerEpochRate::Dead => continue,
-                WorkerEpochRate::StepSecs(s) => s,
-            };
-            let compute_time = steps as f64 * rate;
-            let arrival = compute_time + ctx.comm.delay(v, e, 0);
-            if arrival > ctx.cfg.t_c {
-                continue; // abandoned by the guard; its work is lost
-            }
-            finish[v] = Some(arrival);
-            let idx = ctx.sample_idx(v, steps);
-            let consts = ctx.consts;
-            let out = ctx.workers[v].run_steps(&x_snapshot, &idx, 0.0, consts);
-            q[v] = steps;
-            outputs[v] = Some(out.x_k);
+        // Plan: fixed steps for every live worker whose arrival clears
+        // the guard; workers the guard abandons are not dispatched —
+        // their work would be lost anyway.
+        let tasks: Vec<Option<Task>> = (0..n)
+            .map(|v| {
+                let rate = match ctx.delay.rate(v, e) {
+                    WorkerEpochRate::Dead => return None,
+                    WorkerEpochRate::StepSecs(s) => s,
+                };
+                let arrival = steps as f64 * rate + ctx.comm.delay(v, e, 0);
+                if arrival > ctx.cfg.t_c {
+                    return None; // abandoned by the guard; its work is lost
+                }
+                Some(Task {
+                    x0: x_snapshot.clone(),
+                    work: Work::Steps(steps),
+                    t0: 0.0,
+                    stream: ("minibatch", e as u64),
+                })
+            })
+            .collect();
+        let reports = ctx.dispatch(tasks, ctx.cfg.t_c);
+        for (v, rep) in reports.into_iter().enumerate() {
+            let Some(rep) = rep else { continue };
+            finish[v] = Some(rep.busy_secs + ctx.comm.delay(v, e, 0));
+            q[v] = rep.q;
+            outputs[v] = Some(rep.x_k);
         }
 
         let lambda = combine_lambda(CombinePolicy::Uniform, &q, &outputs);

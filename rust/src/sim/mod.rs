@@ -1,15 +1,50 @@
-//! Simulated wall-clock accounting.
+//! Wall-clock accounting: the [`Clock`] trait, its virtual
+//! ([`SimClock`]) and real ([`RealClock`]) implementations, and the
+//! wait calculus.
 //!
 //! Every figure in the paper plots error against *time*. Our testbed is
-//! a single machine, so the coordinator charges a [`SimClock`] with the
+//! a single machine, so the coordinator charges a clock with the
 //! modeled durations (compute from `straggler::DelayModel`, communication
-//! from `straggler::CommModel`) instead of reading the host clock. The
-//! numerics are real; only the time axis is modeled — see DESIGN.md.
+//! from `straggler::CommModel`). Under the default [`SimClock`] the
+//! time axis is purely modeled (deterministic figures); under
+//! [`RealClock`] the trace timestamps are *measured* host time
+//! decompressed by `time_scale`, which is what the threaded runtime
+//! (`coordinator::runtime::ThreadedRuntime`) pairs with — see
+//! DESIGN.md §2.
 //!
 //! The clock also exposes the epoch-duration law of each method:
 //! * Anytime:   `T + max_comm` (deterministic budget — the paper's point),
 //! * Sync/FNB:  order statistics of worker finishing times,
 //! * and a [`FinishLog`] so figures can audit per-epoch charges.
+
+use std::time::Instant;
+
+/// The coordinator's time source. One epoch ends with a
+/// [`Clock::charge_epoch`] call carrying the *modeled* durations (they
+/// always feed the audit [`FinishLog`]); [`Clock::now`] is the
+/// timestamp traces record — accumulated model time for [`SimClock`],
+/// scaled host time for [`RealClock`].
+pub trait Clock {
+    /// Mark the start of the run (the trace's t = 0 origin). No-op for
+    /// the simulated clock.
+    fn start_run(&mut self) {}
+
+    /// Seconds elapsed since the run origin, on the model's time axis.
+    fn now(&self) -> f64;
+
+    /// Record one epoch's modeled charges (and, for the simulated
+    /// clock, advance time by them).
+    fn charge_epoch(
+        &mut self,
+        epoch: usize,
+        compute_secs: f64,
+        comm_secs: f64,
+        worker_finish: Vec<Option<f64>>,
+    );
+
+    /// Audit log of per-epoch charges.
+    fn log(&self) -> &FinishLog;
+}
 
 /// Simulated clock: monotonically advancing f64 seconds.
 #[derive(Clone, Debug, Default)]
@@ -61,6 +96,84 @@ impl SimClock {
 
     /// Audit log of charges.
     pub fn log(&self) -> &FinishLog {
+        &self.log
+    }
+}
+
+impl Clock for SimClock {
+    fn now(&self) -> f64 {
+        SimClock::now(self)
+    }
+
+    fn charge_epoch(
+        &mut self,
+        epoch: usize,
+        compute_secs: f64,
+        comm_secs: f64,
+        worker_finish: Vec<Option<f64>>,
+    ) {
+        SimClock::charge_epoch(self, epoch, compute_secs, comm_secs, worker_finish)
+    }
+
+    fn log(&self) -> &FinishLog {
+        SimClock::log(self)
+    }
+}
+
+/// Real clock: [`Clock::now`] is *measured* host time since
+/// [`Clock::start_run`], decompressed by `time_scale` back onto the
+/// model's seconds axis.
+///
+/// The `time_scale` contract: a configured duration of `t` modeled
+/// seconds occupies `t * time_scale` real seconds, and every timestamp
+/// read back is divided by `time_scale` — so traces from a compressed
+/// real run plot on the same axis as simulated ones. A budget of
+/// T = 200 at `time_scale = 1e-3` runs each epoch for a real 200 ms.
+/// Epoch charges still arrive from the models and land in the audit
+/// [`FinishLog`], but they do not advance this clock — elapsed time
+/// does.
+#[derive(Clone, Debug)]
+pub struct RealClock {
+    start: Option<Instant>,
+    time_scale: f64,
+    log: FinishLog,
+}
+
+impl RealClock {
+    pub fn new(time_scale: f64) -> Self {
+        assert!(time_scale > 0.0, "time_scale must be > 0 (got {time_scale})");
+        Self { start: None, time_scale, log: FinishLog::default() }
+    }
+
+    pub fn time_scale(&self) -> f64 {
+        self.time_scale
+    }
+}
+
+impl Clock for RealClock {
+    fn start_run(&mut self) {
+        self.start = Some(Instant::now());
+    }
+
+    fn now(&self) -> f64 {
+        match self.start {
+            Some(t0) => t0.elapsed().as_secs_f64() / self.time_scale,
+            None => 0.0,
+        }
+    }
+
+    fn charge_epoch(
+        &mut self,
+        epoch: usize,
+        compute_secs: f64,
+        comm_secs: f64,
+        worker_finish: Vec<Option<f64>>,
+    ) {
+        assert!(compute_secs >= 0.0 && comm_secs >= 0.0, "negative charge");
+        self.log.epochs.push(EpochCharge { epoch, compute_secs, comm_secs, worker_finish });
+    }
+
+    fn log(&self) -> &FinishLog {
         &self.log
     }
 }
@@ -160,5 +273,35 @@ mod tests {
     #[test]
     fn anytime_wait_is_budget() {
         assert_eq!(wait::anytime(100.0), 100.0);
+    }
+
+    #[test]
+    fn real_clock_decompresses_elapsed_time() {
+        let mut c = RealClock::new(1e-3);
+        assert_eq!(Clock::now(&c), 0.0, "unstarted clock reads the origin");
+        c.start_run();
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        // 20 ms real at scale 1e-3 reads as >= 20 modeled seconds.
+        let t = Clock::now(&c);
+        assert!(t >= 20.0, "decompressed time {t}");
+        // Charges feed the audit log but never advance the clock.
+        c.charge_epoch(0, 10.0, 1.0, vec![Some(1.0)]);
+        assert_eq!(c.log.epochs.len(), 1);
+        assert_eq!(c.log.epochs[0].worker_finish, vec![Some(1.0)]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn real_clock_rejects_zero_scale() {
+        RealClock::new(0.0);
+    }
+
+    #[test]
+    fn clock_trait_dispatches_to_sim() {
+        let mut c: Box<dyn Clock> = Box::<SimClock>::default();
+        c.start_run();
+        c.charge_epoch(0, 2.0, 1.0, vec![]);
+        assert!((c.now() - 3.0).abs() < 1e-12);
+        assert_eq!(c.log().epochs.len(), 1);
     }
 }

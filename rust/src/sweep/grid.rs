@@ -10,7 +10,7 @@
 //! Cells within one group (= every axis except `seed`) differ only in
 //! the root seed; the aggregator collapses them into mean ± CI curves.
 
-use crate::config::{Backend, MethodSpec, RunConfig};
+use crate::config::{Backend, MethodSpec, RunConfig, RuntimeSpec, DEFAULT_TIME_SCALE};
 use crate::ser::Value;
 use crate::sweep::scenarios;
 use anyhow::{anyhow, bail, Result};
@@ -52,6 +52,9 @@ pub struct Grid {
     pub t_c: Vec<f64>,
     /// Compute backends (empty = base).
     pub backends: Vec<Backend>,
+    /// Execution runtimes (empty = base) — sweep the same grid point
+    /// under the simulated and the real threaded runtime.
+    pub runtimes: Vec<RuntimeSpec>,
     /// Root seeds (never empty).
     pub seeds: Vec<u64>,
 }
@@ -70,6 +73,7 @@ impl Grid {
             t: Vec::new(),
             t_c: Vec::new(),
             backends: Vec::new(),
+            runtimes: Vec::new(),
             seeds: vec![seed],
         }
     }
@@ -109,6 +113,11 @@ impl Grid {
         self
     }
 
+    pub fn runtimes(mut self, v: impl IntoIterator<Item = RuntimeSpec>) -> Self {
+        self.runtimes = v.into_iter().collect();
+        self
+    }
+
     pub fn seeds(mut self, v: impl IntoIterator<Item = u64>) -> Self {
         self.seeds = v.into_iter().collect();
         self
@@ -144,6 +153,7 @@ impl Grid {
             * Self::axis_len(self.redundancy.len())
             * Self::axis_len(self.t_c.len())
             * Self::axis_len(self.backends.len())
+            * Self::axis_len(self.runtimes.len())
             * self.seeds.len()
     }
 
@@ -180,6 +190,20 @@ impl Grid {
         };
         let tcs = or_base(&self.t_c, self.base.t_c);
         let backends = or_base(&self.backends, self.base.backend);
+        let runtimes = or_base(&self.runtimes, self.base.runtime);
+        // The runtime × backend product has one intrinsically-invalid
+        // combination (real × xla: PJRT is thread-pinned). Reject the
+        // grid up front with the remedy, instead of erroring on the
+        // first expanded cell.
+        if backends.contains(&Backend::Xla)
+            && runtimes.iter().any(|r| matches!(r, RuntimeSpec::Real { .. }))
+        {
+            bail!(
+                "grid mixes backend `xla` with runtime `real` (PJRT is thread-pinned) — \
+                 split into separate sweeps, e.g. `--backend xla` and \
+                 `--backend native --runtime real`"
+            );
+        }
 
         let mut cells = Vec::with_capacity(self.len());
         for sc in &self.scenarios {
@@ -194,41 +218,48 @@ impl Grid {
                         for &t in ts_m {
                             for &tc in &tcs {
                                 for &bk in &backends {
-                                    let mut group = format!("{sc}/{method}");
-                                    if workers.len() > 1 {
-                                        group.push_str(&format!("/N{n}"));
-                                    }
-                                    if reds.len() > 1 {
-                                        group.push_str(&format!("/S{s}"));
-                                    }
-                                    if let (true, Some(t)) = (ts_m.len() > 1, t) {
-                                        group.push_str(&format!("/T{t}"));
-                                    }
-                                    if tcs.len() > 1 {
-                                        group.push_str(&format!("/Tc{tc}"));
-                                    }
-                                    if backends.len() > 1 {
-                                        group.push_str(&format!("/{}", backend_name(bk)));
-                                    }
-                                    for &seed in &self.seeds {
-                                        let mut cfg = self.base.clone();
-                                        cfg.workers = n;
-                                        cfg.redundancy = s;
-                                        cfg.t_c = tc;
-                                        cfg.backend = bk;
-                                        scenarios::apply(sc, &mut cfg)?;
-                                        cfg.method = method_for(method, &cfg, t)?;
-                                        cfg.seed = seed;
-                                        cfg.name = format!("{group}/seed{seed}");
-                                        cfg.validate()
-                                            .map_err(|e| anyhow!("cell `{}`: {e}", cfg.name))?;
-                                        cells.push(Cell {
-                                            scenario: sc.clone(),
-                                            method: method.clone(),
-                                            seed,
-                                            group: group.clone(),
-                                            cfg,
-                                        });
+                                    for &rt in &runtimes {
+                                        let mut group = format!("{sc}/{method}");
+                                        if workers.len() > 1 {
+                                            group.push_str(&format!("/N{n}"));
+                                        }
+                                        if reds.len() > 1 {
+                                            group.push_str(&format!("/S{s}"));
+                                        }
+                                        if let (true, Some(t)) = (ts_m.len() > 1, t) {
+                                            group.push_str(&format!("/T{t}"));
+                                        }
+                                        if tcs.len() > 1 {
+                                            group.push_str(&format!("/Tc{tc}"));
+                                        }
+                                        if backends.len() > 1 {
+                                            group.push_str(&format!("/{}", backend_name(bk)));
+                                        }
+                                        if runtimes.len() > 1 {
+                                            group.push_str(&format!("/rt-{}", rt.name()));
+                                        }
+                                        for &seed in &self.seeds {
+                                            let mut cfg = self.base.clone();
+                                            cfg.workers = n;
+                                            cfg.redundancy = s;
+                                            cfg.t_c = tc;
+                                            cfg.backend = bk;
+                                            cfg.runtime = rt;
+                                            scenarios::apply(sc, &mut cfg)?;
+                                            cfg.method = method_for(method, &cfg, t)?;
+                                            cfg.seed = seed;
+                                            cfg.name = format!("{group}/seed{seed}");
+                                            cfg.validate().map_err(|e| {
+                                                anyhow!("cell `{}`: {e}", cfg.name)
+                                            })?;
+                                            cells.push(Cell {
+                                                scenario: sc.clone(),
+                                                method: method.clone(),
+                                                seed,
+                                                group: group.clone(),
+                                                cfg,
+                                            });
+                                        }
                                     }
                                 }
                             }
@@ -252,13 +283,15 @@ impl Grid {
     ///   "t": [1.0, 2.0],
     ///   "t_c": [1e9],
     ///   "backends": ["native"],
+    ///   "runtimes": ["sim", "real"],   // execution-runtime axis
+    ///   "time_scale": 1e-4,            // compression for `real` cells
     ///   "seeds": 5            // count, or an explicit array [7, 8, 9]
     /// }
     /// ```
     pub fn from_json(v: &Value) -> Result<Self> {
         const KNOWN: &[&str] = &[
             "base", "scenarios", "methods", "workers", "redundancy", "t", "t_c", "backends",
-            "seeds",
+            "runtimes", "time_scale", "seeds",
         ];
         let obj = v.as_obj().ok_or_else(|| anyhow!("sweep spec must be a JSON object"))?;
         for key in obj.keys() {
@@ -296,6 +329,13 @@ impl Grid {
             g.backends = str_list(a, "backends")?
                 .iter()
                 .map(|s| parse_backend(s))
+                .collect::<Result<Vec<_>>>()?;
+        }
+        if let Some(a) = v.get("runtimes") {
+            let scale = v.get_f64("time_scale").unwrap_or(DEFAULT_TIME_SCALE);
+            g.runtimes = str_list(a, "runtimes")?
+                .iter()
+                .map(|s| RuntimeSpec::parse(s, scale))
                 .collect::<Result<Vec<_>>>()?;
         }
         match v.get("seeds") {
@@ -464,6 +504,35 @@ mod tests {
         assert!(g.is_empty());
         assert_eq!(g.len(), 0);
         assert!(g.expand().is_err());
+    }
+
+    #[test]
+    fn runtime_axis_expands_and_keys_groups() {
+        let g = Grid::new(tiny_base())
+            .scenarios(["ideal"])
+            .methods(["anytime", "sync"])
+            .runtimes([RuntimeSpec::Sim, RuntimeSpec::Real { time_scale: 1e-4 }]);
+        assert_eq!(g.len(), 4);
+        let cells = g.expand().unwrap();
+        assert_eq!(cells.len(), 4);
+        assert!(cells.iter().any(|c| c.group.ends_with("/rt-sim")), "{:?}",
+            cells.iter().map(|c| &c.group).collect::<Vec<_>>());
+        assert!(cells.iter().any(|c| c.group.ends_with("/rt-real")));
+        assert!(cells
+            .iter()
+            .any(|c| c.cfg.runtime == RuntimeSpec::Real { time_scale: 1e-4 }));
+        // Single-runtime grids keep their group keys unchanged.
+        let cells = Grid::new(tiny_base()).scenarios(["ideal"]).expand().unwrap();
+        assert!(cells.iter().all(|c| !c.group.contains("/rt-")));
+        // JSON spec form.
+        let v = parse(
+            r#"{"scenarios": ["ideal"], "methods": ["anytime"],
+                "runtimes": ["sim", "real"], "time_scale": 1e-4}"#,
+        )
+        .unwrap();
+        let g = Grid::from_json(&v).unwrap();
+        assert_eq!(g.runtimes, vec![RuntimeSpec::Sim, RuntimeSpec::Real { time_scale: 1e-4 }]);
+        assert!(Grid::from_json(&parse(r#"{"runtimes": ["warp"]}"#).unwrap()).is_err());
     }
 
     #[test]

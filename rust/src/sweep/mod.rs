@@ -86,6 +86,18 @@ pub fn cli_command() -> Command {
         .flag("t", FlagKind::Str, None, "comma-separated epoch budgets T (seconds)")
         .flag("t-c", FlagKind::Str, None, "comma-separated waiting-time guards T_c")
         .flag("backend", FlagKind::Str, None, "comma-separated backends (native|xla)")
+        .flag(
+            "runtime",
+            FlagKind::Str,
+            None,
+            "comma-separated execution runtimes (sim|real) — sweep the runtime axis",
+        )
+        .flag(
+            "time-scale",
+            FlagKind::Float,
+            Some("0.001"),
+            "wall-clock compression for `real` runtime cells",
+        )
         .flag("epochs", FlagKind::Int, None, "override epochs per cell")
         .flag("threads", FlagKind::Int, Some("0"), "worker threads (0 = all cores)")
         .flag("name", FlagKind::Str, Some("sweep"), "campaign name (output file stem)")
@@ -146,6 +158,13 @@ pub fn grid_from_matches(m: &Matches) -> Result<Grid> {
         g.backends = split_names(s)
             .iter()
             .map(|b| grid::parse_backend(b))
+            .collect::<Result<Vec<_>>>()?;
+    }
+    if let Some(s) = m.get("runtime") {
+        let scale = m.f64_of("time-scale");
+        g.runtimes = split_names(s)
+            .iter()
+            .map(|r| crate::config::RuntimeSpec::parse(r, scale))
             .collect::<Result<Vec<_>>>()?;
     }
     Ok(g)

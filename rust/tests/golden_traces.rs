@@ -9,6 +9,11 @@
 //! refactor of the dispatch path. Delete the file to regenerate after
 //! an *intentional* numerics change.
 //!
+//! With `GOLDEN_STRICT=1` in the environment (set by the CI job), a
+//! bootstrap is a **failure**: a fresh checkout that has to write its
+//! own fixture gates nothing, so CI demands the committed file and
+//! prints the commit instruction instead of trivially passing.
+//!
 //! The second half proves the redesign's equivalence claims without a
 //! fixture at all: the adaptive protocol with adaptation disabled must
 //! match plain `anytime` bit-for-bit (same epoch body through a
@@ -76,6 +81,15 @@ fn presets_match_golden_traces_bit_exactly() {
             std::fs::create_dir_all(path.parent().unwrap()).unwrap();
             std::fs::write(&path, &got).unwrap();
             eprintln!("golden_traces: bootstrapped fixture at {}", path.display());
+            // Under CI the fixture must already be committed — a
+            // checkout that bootstraps its own pins gates nothing.
+            assert!(
+                std::env::var("GOLDEN_STRICT").is_err(),
+                "GOLDEN_STRICT is set but {} was absent and had to be \
+                 bootstrapped — run `cargo test --test golden_traces` once \
+                 and commit the generated fixture",
+                path.display()
+            );
         }
     }
 }

@@ -1,0 +1,148 @@
+//! sim ≡ real: under `DelaySpec::Deterministic` delays and generous
+//! deadlines, every registered protocol must produce bit-identical
+//! results through the sequential (simulated-clock) and the threaded
+//! (real-clock) runtime — per-epoch q-profiles, χ sets, combine
+//! weights, modeled charges, iterates, and error curves.
+//!
+//! The configs are chosen so the one-pass step cap binds well before
+//! any budget (the "generous deadlines" regime): realized step counts
+//! are then fully model-determined, which is exactly the property that
+//! makes the threaded runtime a *validation* of the simulated figures
+//! rather than a separate code path. Only the trace *timestamps*
+//! differ (measured vs modeled) — those are asserted finite and
+//! monotone instead.
+
+// Crate-posture lint gate (see lib.rs): correctness/suspicious/perf
+// lints stay load-bearing under CI's `-D warnings`; the style/
+// complexity groups are settled here rather than per-site.
+#![allow(clippy::style, clippy::complexity)]
+
+use anytime_sgd::config::{DataSpec, MethodSpec, RunConfig, RuntimeSpec, Schedule};
+use anytime_sgd::coordinator::{RunResult, Trainer};
+use anytime_sgd::protocols;
+use anytime_sgd::protocols::{CombinePolicy, Iterate};
+use anytime_sgd::straggler::{CommSpec, DelaySpec, StragglerEnv};
+
+/// Deterministic 1 ms/step fleet: the one-pass cap (500-row shard /
+/// batch 8 → 63 steps) binds long before every budget below, and
+/// T_c = 1e9 never drops anyone.
+fn base_cfg() -> RunConfig {
+    let mut c = RunConfig::base();
+    c.name = "equiv".into();
+    c.data = DataSpec::Synthetic { m: 2_000, d: 16, noise: 1e-3 };
+    c.workers = 4;
+    c.redundancy = 0;
+    c.batch = 8;
+    c.epochs = 3;
+    c.eval_every = 1;
+    c.max_passes = 1.0;
+    c.schedule = Schedule::Constant { lr: 5e-3 };
+    c.env = StragglerEnv {
+        delay: DelaySpec::Deterministic { secs: 0.001 },
+        persistent: vec![],
+    };
+    c.comm = CommSpec::Fixed { secs: 2.0 };
+    c.t_c = 1e9;
+    c.seed = 7;
+    c
+}
+
+fn run_with(runtime: RuntimeSpec, method: MethodSpec) -> RunResult {
+    let mut c = base_cfg();
+    c.method = method;
+    c.runtime = runtime;
+    Trainer::new(c).unwrap().run()
+}
+
+/// One generously-budgeted spec per registered protocol (plus the
+/// averaged-iterate anytime variant: `x_bar` must be bit-exact too).
+fn specs() -> Vec<(&'static str, MethodSpec)> {
+    vec![
+        ("anytime", protocols::anytime::spec(100.0)),
+        (
+            "anytime",
+            protocols::anytime::spec_with(100.0, CombinePolicy::Proportional, Iterate::Average),
+        ),
+        ("generalized", protocols::generalized::spec(100.0)),
+        ("adaptive", protocols::adaptive::spec(100.0)),
+        ("sync", protocols::sync::spec(63)),
+        ("fnb", protocols::fnb::spec(63, 1)),
+        ("gradient-coding", protocols::gradient_coding::spec(0.4)),
+        ("async", protocols::async_sgd::spec(16, 20.0)),
+    ]
+}
+
+#[test]
+fn every_protocol_matches_bit_exactly_across_runtimes() {
+    // The spec list must cover the whole registry — a new protocol
+    // without an equivalence arm fails here, not silently.
+    let covered: Vec<&str> = specs().iter().map(|(n, _)| *n).collect();
+    for name in protocols::names() {
+        assert!(covered.contains(&name), "protocol `{name}` missing from the equivalence suite");
+    }
+
+    for (name, spec) in specs() {
+        let sim = run_with(RuntimeSpec::Sim, spec.clone());
+        let real = run_with(RuntimeSpec::Real { time_scale: 1e-3 }, spec);
+
+        assert_eq!(sim.epochs.len(), real.epochs.len(), "{name}");
+        for (e, (a, b)) in sim.epochs.iter().zip(real.epochs.iter()).enumerate() {
+            assert_eq!(a.q, b.q, "{name} epoch {e}: q-profiles must match bit-exactly");
+            assert_eq!(a.received, b.received, "{name} epoch {e}: χ sets must match");
+            assert_eq!(a.lambda.len(), b.lambda.len(), "{name} epoch {e}");
+            for (la, lb) in a.lambda.iter().zip(b.lambda.iter()) {
+                assert_eq!(la.to_bits(), lb.to_bits(), "{name} epoch {e}: combine weights");
+            }
+            // Modeled charges and per-worker finishing times are
+            // computed from the same models in both runtimes.
+            assert_eq!(
+                a.compute_secs.to_bits(),
+                b.compute_secs.to_bits(),
+                "{name} epoch {e}: compute charge"
+            );
+            assert_eq!(
+                a.comm_secs.to_bits(),
+                b.comm_secs.to_bits(),
+                "{name} epoch {e}: comm charge"
+            );
+            assert_eq!(a.worker_finish, b.worker_finish, "{name} epoch {e}: arrivals");
+        }
+
+        // Identical RNG streams + identical step counts ⇒ identical
+        // iterates ⇒ identical error curves, bit for bit.
+        assert_eq!(sim.x, real.x, "{name}: final parameter vectors must be bit-identical");
+        assert_eq!(sim.initial_err.to_bits(), real.initial_err.to_bits(), "{name}");
+        assert_eq!(sim.trace.points.len(), real.trace.points.len(), "{name}");
+        for (p, q) in sim.trace.points.iter().zip(real.trace.points.iter()) {
+            assert_eq!(p.norm_err.to_bits(), q.norm_err.to_bits(), "{name}: error curve");
+            assert_eq!(p.total_q, q.total_q, "{name}");
+        }
+
+        // The comparison is non-vacuous: real gradient work happened...
+        let total_q: usize = sim.epochs.iter().flat_map(|e| e.q.iter()).sum();
+        assert!(total_q > 0, "{name}: suite ran no steps");
+        // ...and the real clock produced finite, strictly monotone
+        // timestamps of its own.
+        for w in real.trace.points.windows(2) {
+            assert!(
+                w[1].time.is_finite() && w[1].time > w[0].time,
+                "{name}: real-clock trace must be monotone, got {:?} -> {:?}",
+                w[0],
+                w[1]
+            );
+        }
+    }
+}
+
+#[test]
+fn budget_protocols_hit_the_cap_in_this_regime() {
+    // Guard the test's own premise: if someone retunes the config so
+    // budgets bind before the step cap, the bit-exactness contract
+    // above would silently depend on wall-clock noise instead.
+    let res = run_with(RuntimeSpec::Sim, protocols::anytime::spec(100.0));
+    for e in &res.epochs {
+        for &q in &e.q {
+            assert_eq!(q, 63, "cap must be the binding constraint (got q={q})");
+        }
+    }
+}
