@@ -162,13 +162,25 @@ pub enum RuntimeSpec {
     /// straggling is injected as per-step sleeps, all compressed by
     /// `time_scale` (a budget of T = 200 at `1e-3` runs 200 ms/epoch).
     Real { time_scale: f64 },
+    /// Distributed execution over TCP ([`crate::net`]): one OS
+    /// *process* per worker, real sockets and serialization, real
+    /// `T_c` gather deadlines, and crash semantics (a lost worker is a
+    /// permanent full-`T_c` straggler). `spawn = true` (the default,
+    /// and what `--spawn-workers N` selects) launches loopback child
+    /// processes; `spawn = false` listens on `port` for external
+    /// `anytime-sgd worker --connect` processes. `port = 0` binds an
+    /// ephemeral port (spawn mode only, where children learn it).
+    Dist { port: u16, spawn: bool, time_scale: f64 },
 }
 
 /// Default wall-clock compression for [`RuntimeSpec::Real`].
 pub const DEFAULT_TIME_SCALE: f64 = 1e-3;
 
 impl RuntimeSpec {
-    /// Runtime from its CLI/JSON name; `time_scale` applies to `real`.
+    /// Runtime from its CLI/JSON name; `time_scale` applies to `real`
+    /// and `dist`. `dist` defaults to spawn mode on an ephemeral port
+    /// (loopback children) — external listening is selected via the
+    /// JSON object form or the `train --listen` flag.
     pub fn parse(name: &str, time_scale: f64) -> Result<Self> {
         match name {
             "sim" => Ok(RuntimeSpec::Sim),
@@ -178,7 +190,13 @@ impl RuntimeSpec {
                 }
                 Ok(RuntimeSpec::Real { time_scale })
             }
-            other => bail!("unknown runtime `{other}` (sim|real)"),
+            "dist" => {
+                if time_scale <= 0.0 {
+                    bail!("runtime `dist`: time_scale must be > 0 (got {time_scale})");
+                }
+                Ok(RuntimeSpec::Dist { port: 0, spawn: true, time_scale })
+            }
+            other => bail!("unknown runtime `{other}` (sim|real|dist)"),
         }
     }
 
@@ -186,6 +204,7 @@ impl RuntimeSpec {
         match self {
             RuntimeSpec::Sim => "sim",
             RuntimeSpec::Real { .. } => "real",
+            RuntimeSpec::Dist { .. } => "dist",
         }
     }
 }
@@ -497,13 +516,27 @@ impl RunConfig {
         }
         // Runtime: a bare name (`"runtime": "real"`) or an object with
         // an explicit compression (`{"kind": "real", "time_scale": 1e-4}`).
+        // `dist` additionally takes `port` and `spawn`
+        // (`{"kind": "dist", "port": 7070, "spawn": false}` = wait for
+        // external workers on :7070).
         if let Some(r) = v.get("runtime") {
             c.runtime = match r {
                 Value::Str(name) => RuntimeSpec::parse(name, DEFAULT_TIME_SCALE)?,
-                obj => RuntimeSpec::parse(
-                    obj.get_str("kind").ok_or_else(|| anyhow!("runtime.kind"))?,
-                    obj.get_f64("time_scale").unwrap_or(DEFAULT_TIME_SCALE),
-                )?,
+                obj => {
+                    let mut rt = RuntimeSpec::parse(
+                        obj.get_str("kind").ok_or_else(|| anyhow!("runtime.kind"))?,
+                        obj.get_f64("time_scale").unwrap_or(DEFAULT_TIME_SCALE),
+                    )?;
+                    if let RuntimeSpec::Dist { port, spawn, .. } = &mut rt {
+                        if let Some(p) = obj.get_usize("port") {
+                            *port = u16::try_from(p).map_err(|_| anyhow!("runtime.port: {p} out of range"))?;
+                        }
+                        if let Some(s) = obj.get_bool("spawn") {
+                            *spawn = s;
+                        }
+                    }
+                    rt
+                }
             };
         }
         c.validate()?;
@@ -525,14 +558,33 @@ impl RunConfig {
         if self.data.rows() < self.workers * self.batch {
             bail!("dataset too small for {} workers x batch {}", self.workers, self.batch);
         }
-        if let RuntimeSpec::Real { time_scale } = self.runtime {
-            if time_scale <= 0.0 {
-                bail!("runtime `real`: time_scale must be > 0 (got {time_scale})");
+        match self.runtime {
+            RuntimeSpec::Sim => {}
+            RuntimeSpec::Real { time_scale } => {
+                if time_scale <= 0.0 {
+                    bail!("runtime `real`: time_scale must be > 0 (got {time_scale})");
+                }
+                // PJRT handles are thread-pinned; the threaded runtime
+                // needs Send-able workers (see backend::WorkerCompute).
+                if self.backend != Backend::Native {
+                    bail!("runtime `real` requires the native backend (PJRT is thread-pinned)");
+                }
             }
-            // PJRT handles are thread-pinned; the threaded runtime needs
-            // Send-able workers (see backend::WorkerCompute docs).
-            if self.backend != Backend::Native {
-                bail!("runtime `real` requires the native backend (PJRT is thread-pinned)");
+            RuntimeSpec::Dist { port, spawn, time_scale } => {
+                if time_scale <= 0.0 {
+                    bail!("runtime `dist`: time_scale must be > 0 (got {time_scale})");
+                }
+                // Worker agents rebuild NativeWorker engines from the
+                // wire — there is no remote PJRT story.
+                if self.backend != Backend::Native {
+                    bail!("runtime `dist` requires the native backend");
+                }
+                if !spawn && port == 0 {
+                    bail!(
+                        "runtime `dist`: external workers need a fixed port \
+                         (spawn=false with port=0 — set `port`, or use spawn mode)"
+                    );
+                }
             }
         }
         protocols::validate_spec(&self.method, self)?;
@@ -694,6 +746,44 @@ mod tests {
         c.backend = Backend::Xla;
         let err = c.validate().unwrap_err().to_string();
         assert!(err.contains("native backend"), "{err}");
+    }
+
+    #[test]
+    fn dist_runtime_spec_parses_and_validates() {
+        // Bare name: spawn mode on an ephemeral port.
+        let c = RunConfig::from_json(&parse(r#"{"runtime": "dist"}"#).unwrap()).unwrap();
+        assert_eq!(
+            c.runtime,
+            RuntimeSpec::Dist { port: 0, spawn: true, time_scale: DEFAULT_TIME_SCALE }
+        );
+        // Object form: external workers on a fixed port.
+        let c = RunConfig::from_json(
+            &parse(r#"{"runtime": {"kind": "dist", "port": 7070, "spawn": false,
+                       "time_scale": 1e-4}}"#)
+                .unwrap(),
+        )
+        .unwrap();
+        assert_eq!(c.runtime, RuntimeSpec::Dist { port: 7070, spawn: false, time_scale: 1e-4 });
+        assert_eq!(c.runtime.name(), "dist");
+        // External mode without a port is unreachable by workers.
+        let err = RunConfig::from_json(
+            &parse(r#"{"runtime": {"kind": "dist", "spawn": false}}"#).unwrap(),
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("fixed port"), "{err}");
+        // Out-of-range port and bad scales fail closed.
+        assert!(RunConfig::from_json(
+            &parse(r#"{"runtime": {"kind": "dist", "port": 70000}}"#).unwrap()
+        )
+        .is_err());
+        assert!(RuntimeSpec::parse("dist", 0.0).is_err());
+        // Dist is native-only, like real.
+        let mut c = RunConfig::base();
+        c.runtime = RuntimeSpec::Dist { port: 0, spawn: true, time_scale: 1e-3 };
+        c.backend = Backend::Xla;
+        let err = c.validate().unwrap_err().to_string();
+        assert!(err.contains("native"), "{err}");
     }
 
     #[test]

@@ -38,7 +38,11 @@
 //! protocol bodies run on OS threads with `T`/`T_c` enforced as real
 //! deadlines and straggling injected as scaled sleeps — select it with
 //! `Trainer::builder().runtime(RuntimeSpec::Real { time_scale })` or
-//! `--runtime real` on the CLI.
+//! `--runtime real` on the CLI. The `dist` runtime
+//! ([`crate::net::master::DistRuntime`] + `RealClock`) goes one step
+//! further: workers are separate OS *processes* over TCP (`--runtime
+//! dist --spawn-workers N`, or `--listen PORT` for external
+//! `anytime-sgd worker` agents) — see DESIGN.md §6.
 
 pub mod runtime;
 
@@ -224,7 +228,7 @@ impl Trainer {
                 )),
                 Box::new(SimClock::new()),
             ),
-            // Real × non-native is rejected by `RunConfig::validate`,
+            // Real/dist × non-native is rejected by `RunConfig::validate`,
             // which every construction path runs before assembling.
             RuntimeSpec::Real { time_scale } => (
                 Box::new(ThreadedRuntime::new(
@@ -236,6 +240,23 @@ impl Trainer {
                     consts,
                     time_scale,
                 )),
+                Box::new(RealClock::new(time_scale)),
+            ),
+            // Distributed over TCP: blocks here until all N worker
+            // processes complete the handshake (spawned children on
+            // loopback, or external `anytime-sgd worker` processes).
+            RuntimeSpec::Dist { port, spawn, time_scale } => (
+                Box::new(crate::net::master::DistRuntime::new(
+                    &shards,
+                    cfg.batch,
+                    objective,
+                    delay.clone(),
+                    cfg.seed,
+                    consts,
+                    time_scale,
+                    port,
+                    spawn,
+                )?),
                 Box::new(RealClock::new(time_scale)),
             ),
         };
@@ -278,7 +299,7 @@ impl Trainer {
         self.clock.now()
     }
 
-    /// The execution runtime's registry name (`sim` / `real`).
+    /// The execution runtime's registry name (`sim` / `real` / `dist`).
     pub fn runtime_name(&self) -> &'static str {
         self.exec.name()
     }
@@ -323,6 +344,11 @@ impl Trainer {
             );
             if let Some(log) = self.events.as_mut() {
                 let _ = log.epoch(e, &stats, self.clock.now());
+                // Networked runtimes also account the epoch's real
+                // communication cost (bytes, round trips, drops).
+                if let Some(net) = self.exec.net_stats() {
+                    let _ = log.net(e, &net);
+                }
             }
             if (e + 1) % self.cfg.eval_every == 0 || e + 1 == self.cfg.epochs {
                 let ev = self.evaluator.eval(&self.x);
@@ -494,9 +520,10 @@ impl TrainerBuilder {
         self
     }
 
-    /// Select the execution runtime: `RuntimeSpec::Sim` (default) or
+    /// Select the execution runtime: `RuntimeSpec::Sim` (default),
     /// `RuntimeSpec::Real { time_scale }` for threaded execution under
-    /// real deadlines. Works with every registered protocol.
+    /// real deadlines, or `RuntimeSpec::Dist { .. }` for worker
+    /// processes over TCP. Works with every registered protocol.
     pub fn runtime(mut self, r: RuntimeSpec) -> Self {
         self.cfg.runtime = r;
         self

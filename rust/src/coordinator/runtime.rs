@@ -91,9 +91,10 @@ pub struct Report {
 /// Executes one scatter/gather round of worker tasks. `tasks[v] = None`
 /// means worker `v` is not dispatched (dead, or outside the protocol's
 /// χ); `guard_secs` is the master's waiting-time guard `T_c` on the
-/// modeled axis — the threaded runtime enforces it as a real gather
-/// deadline. Returns `None` for workers that were not dispatched, are
-/// dead this epoch, or (threaded only) missed the real deadline.
+/// modeled axis — the threaded and distributed runtimes enforce it as a
+/// real gather deadline. Returns `None` for workers that were not
+/// dispatched, are dead this epoch, or (real/dist only) missed the real
+/// deadline / disconnected.
 pub trait WorkerRuntime {
     fn dispatch(
         &mut self,
@@ -102,8 +103,39 @@ pub trait WorkerRuntime {
         guard_secs: f64,
     ) -> Vec<Option<Report>>;
 
-    /// Registry name (`sim` / `real`).
+    /// Registry name (`sim` / `real` / `dist`).
     fn name(&self) -> &'static str;
+
+    /// Network telemetry accumulated since the last call (bytes on the
+    /// wire, per-worker round trips, dropped reports). `None` for
+    /// in-process runtimes, which move no bytes; the distributed
+    /// runtime ([`crate::net::master::DistRuntime`]) returns one record
+    /// per epoch, drained by the trainer into the JSONL event stream.
+    fn net_stats(&mut self) -> Option<NetEpochStats> {
+        None
+    }
+}
+
+/// One epoch's communication-cost audit for a networked runtime
+/// (`metrics::events` emits it as a `net` JSONL record).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct NetEpochStats {
+    /// Frame bytes written to workers: `Task` frames, plus the
+    /// shard-sized `Assign` handshake frames attributed to the first
+    /// drained record (`Shutdown` happens after the last drain and is
+    /// never reported).
+    pub bytes_sent: u64,
+    /// Frame bytes read from workers during dispatch rounds: reports
+    /// (fresh and stale) and heartbeats. Handshake `Hello`s are read
+    /// before the event channel exists and are not counted.
+    pub bytes_recv: u64,
+    /// Per-worker task→report round-trip REAL seconds (last round this
+    /// epoch); `None` = not dispatched or no report.
+    pub rtt_secs: Vec<Option<f64>>,
+    /// Reports dispatched whose gather round expired without them
+    /// (real `T_c` deadline misses). Counted once per miss, at expiry —
+    /// a late arrival of the same report is not re-counted.
+    pub dropped_reports: usize,
 }
 
 /// One runtime the crate ships (for `anytime-sgd list`).
@@ -122,6 +154,11 @@ pub static RUNTIMES: &[RuntimeInfo] = &[
         name: "real",
         about: "threaded workers under REAL time: Instant deadlines + per-step sleep \
                 injection, compressed by --time-scale",
+    },
+    RuntimeInfo {
+        name: "dist",
+        about: "distributed master-worker over TCP (net::): spawn loopback workers with \
+                --spawn-workers, or --listen for external `anytime-sgd worker` processes",
     },
 ];
 
@@ -149,8 +186,15 @@ impl SequentialRuntime {
 }
 
 /// Resolve a task's step count and modeled busy time at this epoch's
-/// rate (shared by both runtimes so they agree bit-for-bit).
-fn plan(delay: &DelayModel, v: usize, epoch: usize, work: Work, rate: f64) -> (usize, f64) {
+/// rate (shared by all runtimes so they agree bit-for-bit; the dist
+/// master plans here and ships the result to the worker agent).
+pub(crate) fn plan(
+    delay: &DelayModel,
+    v: usize,
+    epoch: usize,
+    work: Work,
+    rate: f64,
+) -> (usize, f64) {
     match work {
         Work::Budget { t, max_steps } => delay.steps_within(v, epoch, t, max_steps),
         Work::Steps(n) => (n, n as f64 * rate),
@@ -159,27 +203,39 @@ fn plan(delay: &DelayModel, v: usize, epoch: usize, work: Work, rate: f64) -> (u
 }
 
 /// The minibatch index stream for `q` steps of worker `v`: draws from
-/// `root.split(label, v, key)`. This is THE sampling function — both
-/// runtimes go through it, so the sim ≡ real bit-exactness contract
-/// cannot drift between them.
-fn sample_stream(
+/// `root.split(label, v, key)`. This is THE sampling function — every
+/// runtime (including the remote worker agent in `net::worker`) goes
+/// through it, so the sim ≡ real ≡ dist bit-exactness contract cannot
+/// drift between them.
+pub(crate) fn sample_stream(
     root: &Xoshiro256pp,
-    stream: (&'static str, u64),
+    label: &str,
+    key: u64,
     v: usize,
     q: usize,
     batch: usize,
     rows: usize,
 ) -> Vec<u32> {
-    let (label, key) = stream;
     let mut rng = root.split(label, v as u64, key);
     (0..q * batch).map(|_| rng.index(rows) as u32).collect()
 }
 
 /// Report for a worker that reported but moved nothing (zero-step
 /// budget, or [`Work::Busy`]): the chain never left `x0`.
-fn idle_report(x0: Vec<f32>, busy_secs: f64) -> Report {
+pub(crate) fn idle_report(x0: Vec<f32>, busy_secs: f64) -> Report {
     let x_bar = x0.clone();
     Report { q: 0, busy_secs, x_k: x0, x_bar }
+}
+
+/// The real-deadline hedge a work item carries, in modeled seconds
+/// (`inf` = step-counted / busy work, no budget deadline). One
+/// definition shared by the threaded runtime and the dist master's
+/// task assembly, so the hedge rule cannot drift between them.
+pub(crate) fn budget_hedge_secs(work: Work) -> f64 {
+    match work {
+        Work::Budget { t, .. } => t,
+        _ => f64::INFINITY,
+    }
 }
 
 impl WorkerRuntime for SequentialRuntime {
@@ -209,7 +265,8 @@ impl WorkerRuntime for SequentialRuntime {
                 continue;
             }
             let rows = self.workers[v].shard_rows();
-            let idx = sample_stream(&self.root, task.stream, v, q, self.batch, rows);
+            let (label, key) = task.stream;
+            let idx = sample_stream(&self.root, label, key, v, q, self.batch, rows);
             let step_out = self.workers[v].run_steps(&task.x0, &idx, task.t0, self.consts);
             out.push(Some(Report { q, busy_secs: busy, x_k: step_out.x_k, x_bar: step_out.x_bar }));
         }
@@ -265,22 +322,96 @@ impl ThreadedRuntime {
 /// wedging a worker thread for hours of real time).
 const MAX_SLEEP_SECS: f64 = 60.0;
 
-fn scaled_sleep(model_secs: f64, time_scale: f64) {
+pub(crate) fn scaled_sleep(model_secs: f64, time_scale: f64) {
     let s = (model_secs * time_scale).clamp(0.0, MAX_SLEEP_SECS);
     if s > 0.0 {
         std::thread::sleep(Duration::from_secs_f64(s));
     }
 }
 
-/// One worker thread's task execution.
-///
-/// The modeled compute time is injected first, as chunked sleeps
-/// checked against the scaled budget deadline — that is the real `T`
-/// enforcement, and it fixes the realized step count `q`. The SGD
-/// numerics then run as ONE `run_steps` call over exactly `q` steps,
-/// which makes both `x_k` and `x_bar` bit-identical to the sequential
-/// runtime whenever `q` matches (numerics are real, time is modeled —
-/// DESIGN.md §2; host compute speed never perturbs the chain itself).
+/// A fully-resolved assignment for one worker, one dispatch round: the
+/// master has already turned [`Work`] into a planned step count + busy
+/// charge at this epoch's rate ([`plan`]). This is exactly what the
+/// dist master ships over the wire, so the remote worker agent and the
+/// threaded runtime execute the *same* struct through the *same*
+/// [`execute_planned`] — the realized `q` and the iterates cannot
+/// drift between execution substrates.
+#[derive(Clone, Debug)]
+pub(crate) struct PlannedTask {
+    pub x0: Vec<f32>,
+    pub t0: f32,
+    /// Minibatch stream `(label, key)` for [`sample_stream`].
+    pub label: String,
+    pub key: u64,
+    /// This epoch's per-step compute seconds (drives sleep injection).
+    pub rate: f64,
+    /// Planned step count (what the model admits).
+    pub target: usize,
+    /// Modeled busy seconds at full completion.
+    pub busy: f64,
+    /// Real-deadline hedge for budget work, in modeled seconds
+    /// (`f64::INFINITY` = step-counted / busy work, no hedge).
+    pub budget_secs: f64,
+}
+
+/// Execute one planned task under real time: phase 1 injects the
+/// modeled per-step delays as chunked sleeps, cutting the chain short
+/// only if the real budget deadline expires (an overrun hedge — nominal
+/// sleep totals equal the modeled time, so it fires only when the host
+/// falls behind the model); phase 2 runs the SGD numerics as ONE
+/// `run_steps` call over exactly the realized `q`-prefix of the shared
+/// sampling stream, which makes `x_k`/`x_bar` bit-identical to the
+/// sequential runtime whenever `q` matches (numerics are real, time is
+/// modeled — DESIGN.md §2; host compute speed never perturbs the chain).
+pub(crate) fn execute_planned(
+    compute: &mut dyn WorkerCompute,
+    v: usize,
+    task: &PlannedTask,
+    root: &Xoshiro256pp,
+    consts: Consts,
+    batch: usize,
+    time_scale: f64,
+) -> Report {
+    if task.target == 0 {
+        // Busy work, or a budget too tight for a single step: occupy
+        // the worker for the modeled duration and report no steps.
+        scaled_sleep(task.busy, time_scale);
+        return idle_report(task.x0.clone(), task.busy);
+    }
+    // Clamp below at 0: the budget may arrive off the wire (dist), and
+    // `Duration::from_secs_f64` panics on negative values — hostile or
+    // bit-flipped frames must degrade, never abort the worker.
+    let budget_real = if task.budget_secs.is_finite() {
+        Some(Duration::from_secs_f64((task.budget_secs * time_scale).clamp(0.0, 86_400.0)))
+    } else {
+        None
+    };
+
+    // Phase 1 — time.
+    const CHUNK: usize = 8;
+    let start = Instant::now();
+    let mut q = 0usize;
+    while q < task.target {
+        if let Some(b) = budget_real {
+            if q > 0 && start.elapsed() >= b {
+                break; // real T expired: report partial work
+            }
+        }
+        let steps = CHUNK.min(task.target - q);
+        scaled_sleep(task.rate * steps as f64, time_scale);
+        q += steps;
+    }
+
+    // Phase 2 — numerics.
+    let rows = compute.shard_rows();
+    let idx = sample_stream(root, &task.label, task.key, v, q, batch, rows);
+    let out = compute.run_steps(&task.x0, &idx, task.t0, consts);
+    let busy_secs = if q == task.target { task.busy } else { q as f64 * task.rate };
+    Report { q, busy_secs, x_k: out.x_k, x_bar: out.x_bar }
+}
+
+/// One worker thread's task execution: resolve the epoch rate, plan the
+/// step count, and run the shared planned-task executor.
 #[allow(clippy::too_many_arguments)]
 fn run_task_real(
     w: &mut PoolWorker,
@@ -298,45 +429,17 @@ fn run_task_real(
         WorkerEpochRate::StepSecs(s) => s,
     };
     let (target, busy) = plan(delay, v, epoch, task.work, rate);
-    if target == 0 {
-        // Busy work, or a budget too tight for a single step: occupy
-        // the thread for the modeled duration and report no steps.
-        scaled_sleep(busy, time_scale);
-        return Some(idle_report(task.x0, busy));
-    }
-    let budget_real = match task.work {
-        Work::Budget { t, .. } => Some(Duration::from_secs_f64((t * time_scale).min(86_400.0))),
-        _ => None,
+    let planned = PlannedTask {
+        x0: task.x0,
+        t0: task.t0,
+        label: task.stream.0.to_string(),
+        key: task.stream.1,
+        rate,
+        target,
+        busy,
+        budget_secs: budget_hedge_secs(task.work),
     };
-
-    // Phase 1 — time: inject the modeled per-step delays as sleeps,
-    // cutting the chain short if the real budget deadline expires.
-    // Nominal sleep totals equal the modeled time (≤ T by plan), so
-    // this break is an overrun hedge: it fires only when the host
-    // falls behind the model (scheduler stalls, sleep overshoot).
-    const CHUNK: usize = 8;
-    let start = Instant::now();
-    let mut q = 0usize;
-    while q < target {
-        if let Some(b) = budget_real {
-            if q > 0 && start.elapsed() >= b {
-                break; // real T expired: report partial work
-            }
-        }
-        let steps = CHUNK.min(target - q);
-        scaled_sleep(rate * steps as f64, time_scale);
-        q += steps;
-    }
-
-    // Phase 2 — numerics: exactly `q` steps in one call over the
-    // realized `q`-prefix of the shared sampling stream, so
-    // Deterministic runs are step-for-step reproducible across repeats
-    // and runtimes (and `x_k`/`x_bar` are bit-identical for equal `q`).
-    let rows = w.compute.shard_rows();
-    let idx = sample_stream(root, task.stream, v, q, batch, rows);
-    let out = w.compute.run_steps(&task.x0, &idx, task.t0, consts);
-    let busy_secs = if q == target { busy } else { q as f64 * rate };
-    Some(Report { q, busy_secs, x_k: out.x_k, x_bar: out.x_bar })
+    Some(execute_planned(&mut w.compute, v, &planned, root, consts, batch, time_scale))
 }
 
 impl WorkerRuntime for ThreadedRuntime {
@@ -530,8 +633,14 @@ mod tests {
     }
 
     #[test]
-    fn runtime_registry_lists_both() {
+    fn runtime_registry_lists_all_three() {
         let names: Vec<&str> = RUNTIMES.iter().map(|r| r.name).collect();
-        assert_eq!(names, vec!["sim", "real"]);
+        assert_eq!(names, vec!["sim", "real", "dist"]);
+    }
+
+    #[test]
+    fn in_process_runtimes_report_no_net_stats() {
+        assert!(seq().net_stats().is_none());
+        assert!(threaded().net_stats().is_none());
     }
 }

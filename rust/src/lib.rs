@@ -25,6 +25,11 @@
 //!   (sequential, deterministic) or under *real* time (threaded
 //!   workers, `Instant`-enforced `T`/`T_c`, `--runtime real
 //!   --time-scale ...`) — see DESIGN.md §2.
+//! * **net** — the distributed substrate ([`net`]): a std-only TCP
+//!   master–worker runtime (`--runtime dist`), with a length-prefixed
+//!   binary wire protocol, a worker agent CLI (`anytime-sgd worker`),
+//!   loopback child spawning (`--spawn-workers N`), and
+//!   crash-as-permanent-straggler failure semantics — DESIGN.md §6.
 //! * **sweep** — the experiment-campaign engine: parameter grids over
 //!   [`config::RunConfig`], a named scenario library, a bounded-thread
 //!   parallel runner, and multi-seed mean ± CI aggregation
@@ -56,6 +61,7 @@ pub mod linalg;
 pub mod lm;
 pub mod methods;
 pub mod metrics;
+pub mod net;
 pub mod partition;
 pub mod protocols;
 pub mod rng;

@@ -2,6 +2,8 @@
 //!
 //! Subcommands:
 //! * `train`     — run one configuration (preset, JSON file, or flags).
+//! * `worker`    — join a distributed run as a worker agent
+//!                 (`--connect HOST:PORT`; see `--runtime dist`).
 //! * `sweep`     — run an experiment campaign: a parameter grid ×
 //!                 scenario library × seeds, executed in parallel and
 //!                 aggregated to mean ± CI curves under `results/`.
@@ -38,7 +40,9 @@ fn main() {
 fn usage() -> String {
     "anytime-sgd — Anytime Stochastic Gradient Descent (Ferdinand & Draper '18)\n\n\
      Subcommands:\n\
-       train      run one configuration (alias: run); --runtime sim|real\n\
+       train      run one configuration (alias: run); --runtime sim|real|dist\n\
+       worker     join a distributed run as a worker agent\n\
+                  (anytime-sgd worker --connect HOST:PORT)\n\
        sweep      run an experiment campaign (grid x scenarios x seeds,\n\
                   parallel; mean ± CI aggregates under results/)\n\
        figures    regenerate paper figures (fig1..fig6 | theory | ablations |\n\
@@ -60,6 +64,7 @@ fn dispatch(args: &[String]) -> Result<()> {
         // `run` is a synonym for `train` (the runtime-selection docs
         // use `anytime-sgd run --runtime real`).
         "train" | "run" => cmd_train(rest),
+        "worker" => cmd_worker(rest),
         "sweep" => cmd_sweep(rest),
         "figures" => cmd_figures(rest),
         "list" => cmd_list(rest),
@@ -96,10 +101,24 @@ fn cmd_train(args: &[String]) -> Result<()> {
             FlagKind::Str,
             None,
             "execution runtime: sim (default) | real (threaded workers, real T/T_c \
-             deadlines; works with every registered protocol)",
+             deadlines) | dist (worker processes over TCP); works with every \
+             registered protocol",
         )
         .flag("wallclock", FlagKind::Bool, None, "deprecated alias for --runtime real")
-        .flag("time-scale", FlagKind::Float, Some("0.001"), "wall-clock compression factor");
+        .flag("time-scale", FlagKind::Float, Some("0.001"), "wall-clock compression factor")
+        .flag(
+            "spawn-workers",
+            FlagKind::Int,
+            None,
+            "dist: spawn this many loopback worker processes (sets the worker count)",
+        )
+        .flag(
+            "listen",
+            FlagKind::Int,
+            None,
+            "dist: listen on this port for external `anytime-sgd worker` processes \
+             instead of spawning children",
+        );
     let m = cmd.parse(args).map_err(|e| anyhow::anyhow!("{e}"))?;
 
     let mut cfg = if let Some(path) = m.get("config") {
@@ -127,6 +146,29 @@ fn cmd_train(args: &[String]) -> Result<()> {
         eprintln!("note: --wallclock is deprecated; use --runtime real --time-scale ...");
         cfg.runtime = RuntimeSpec::parse("real", m.f64_of("time-scale"))?;
     }
+    if m.is_set("spawn-workers") && m.is_set("listen") {
+        bail!(
+            "--spawn-workers and --listen contradict: spawn loopback children, \
+             OR listen for external workers — pick one"
+        );
+    }
+    if m.is_set("spawn-workers") || m.is_set("listen") {
+        let RuntimeSpec::Dist { port, spawn, .. } = &mut cfg.runtime else {
+            bail!("--spawn-workers/--listen only apply to --runtime dist");
+        };
+        if m.is_set("spawn-workers") {
+            // Single-machine loopback run: the fleet size IS the child
+            // count, and the flag means "spawn them" even when a config
+            // file selected external-listen mode.
+            cfg.workers = m.usize_of("spawn-workers");
+            *spawn = true;
+        }
+        if m.is_set("listen") {
+            let p = m.usize_of("listen");
+            *port = u16::try_from(p).map_err(|_| anyhow::anyhow!("--listen: port {p} out of range"))?;
+            *spawn = false;
+        }
+    }
 
     eprintln!(
         "train: {} | data {:?} | N={} S={} | backend {:?} | runtime {} | {} epochs",
@@ -149,7 +191,7 @@ fn cmd_train(args: &[String]) -> Result<()> {
         "wall-clock: {:.2}s ({} {}: {:.1}s)",
         t0.elapsed().as_secs_f64(),
         tr.runtime_name(),
-        if tr.runtime_name() == "real" { "decompressed" } else { "simulated" },
+        if tr.runtime_name() == "sim" { "simulated" } else { "decompressed" },
         tr.now()
     );
 
@@ -163,6 +205,28 @@ fn cmd_train(args: &[String]) -> Result<()> {
     let path = fig.write(Path::new(&m.str_of("out")))?;
     eprintln!("trace written to {}", path.display());
     Ok(())
+}
+
+/// The worker agent of the distributed runtime: connect to a master
+/// and serve tasks until it shuts the run down (see DESIGN.md §6).
+fn cmd_worker(args: &[String]) -> Result<()> {
+    let cmd = Command::new("worker", "join a distributed run as a worker agent")
+        .flag("connect", FlagKind::Str, None, "master address HOST:PORT (required)")
+        .flag(
+            "die-after",
+            FlagKind::Int,
+            None,
+            "fault injection: drop the connection after serving N tasks \
+             (simulates a mid-run crash; used by tests/CI churn scenarios)",
+        );
+    let m = cmd.parse(args).map_err(|e| anyhow::anyhow!("{e}"))?;
+    let Some(addr) = m.get("connect") else {
+        bail!("worker needs --connect HOST:PORT (start the master with --runtime dist --listen PORT)");
+    };
+    let opts = anytime_sgd::net::worker::WorkerOpts {
+        die_after_tasks: m.is_set("die-after").then(|| m.usize_of("die-after")),
+    };
+    anytime_sgd::net::worker::run(addr, opts)
 }
 
 fn cmd_sweep(args: &[String]) -> Result<()> {

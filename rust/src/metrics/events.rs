@@ -71,6 +71,35 @@ impl EventLog {
         ]))
     }
 
+    /// One epoch's real communication cost (networked runtimes only):
+    /// frame bytes both ways, per-worker task→report round trips in
+    /// real seconds, and reports that never made it into a gather.
+    pub fn net(
+        &mut self,
+        e: usize,
+        net: &crate::coordinator::runtime::NetEpochStats,
+    ) -> std::io::Result<()> {
+        self.emit(&Value::obj(vec![
+            ("event", "net".into()),
+            ("epoch", e.into()),
+            ("bytes_sent", Value::Num(net.bytes_sent as f64)),
+            ("bytes_recv", Value::Num(net.bytes_recv as f64)),
+            (
+                "rtt_secs",
+                Value::Arr(
+                    net.rtt_secs
+                        .iter()
+                        .map(|r| match r {
+                            Some(t) => Value::Num(*t),
+                            None => Value::Null,
+                        })
+                        .collect(),
+                ),
+            ),
+            ("dropped_reports", net.dropped_reports.into()),
+        ]))
+    }
+
     /// An evaluation point.
     pub fn eval(&mut self, e: usize, norm_err: f64, cost: f64) -> std::io::Result<()> {
         self.emit(&Value::obj(vec![
@@ -115,13 +144,23 @@ mod tests {
                 worker_finish: vec![Some(20.5), None, Some(21.0)],
             };
             log.epoch(0, &stats, 22.0).unwrap();
+            log.net(
+                0,
+                &crate::coordinator::runtime::NetEpochStats {
+                    bytes_sent: 2048,
+                    bytes_recv: 512,
+                    rtt_secs: vec![Some(0.004), None, Some(0.006)],
+                    dropped_reports: 1,
+                },
+            )
+            .unwrap();
             log.eval(0, 0.5, 123.0).unwrap();
             log.run_finished(0.5).unwrap();
-            assert_eq!(log.lines(), 4);
+            assert_eq!(log.lines(), 5);
         }
         let text = std::fs::read_to_string(&path).unwrap();
         let lines: Vec<&str> = text.lines().collect();
-        assert_eq!(lines.len(), 4);
+        assert_eq!(lines.len(), 5);
         for line in &lines {
             let v = crate::ser::parse(line).unwrap();
             assert!(v.get_str("event").is_some());
@@ -133,6 +172,14 @@ mod tests {
         assert_eq!(wf.len(), 3);
         assert_eq!(wf[0].as_f64(), Some(20.5));
         assert_eq!(wf[1], crate::ser::Value::Null);
+        let net = crate::ser::parse(lines[2]).unwrap();
+        assert_eq!(net.get_str("event"), Some("net"));
+        assert_eq!(net.get_f64("bytes_sent"), Some(2048.0));
+        assert_eq!(net.get_usize("dropped_reports"), Some(1));
+        let rtt = net.get("rtt_secs").unwrap().as_arr().unwrap();
+        assert_eq!(rtt.len(), 3);
+        assert_eq!(rtt[0].as_f64(), Some(0.004));
+        assert_eq!(rtt[1], crate::ser::Value::Null);
         std::fs::remove_file(path).ok();
     }
 }

@@ -1,0 +1,759 @@
+//! The distributed master: [`DistRuntime`], a
+//! [`WorkerRuntime`] whose workers are separate OS processes reached
+//! over TCP.
+//!
+//! Construction binds a listener, optionally spawns the worker
+//! processes itself (loopback single-machine runs), and admits exactly
+//! N workers through the versioned handshake — each gets its shard and
+//! the run constants in one `Assign` frame. Per dispatch round the
+//! master *plans* every task from its own `DelayModel` (resolved rate +
+//! step count, exactly what the in-process runtimes compute) and ships
+//! the plan; workers inject the straggling and run the numerics. The
+//! gather enforces the protocol's waiting-time guard `T_c` as a real
+//! deadline on the scaled clock.
+//!
+//! Failure semantics: a worker whose socket drops, whose writes fail,
+//! or whose heartbeats go silent past [`super::HEARTBEAT_TIMEOUT`] is
+//! marked **permanently dead** — every later dispatch returns `None`
+//! for it without waiting, so protocols charge it like a full-`T_c`
+//! straggler for the rest of the run (the paper's persistent-straggler
+//! regime, realized by an actual crash).
+
+use super::wire::{read_frame, write_frame, Assign, Msg, TaskMsg, PROTOCOL_VERSION};
+use super::worker::WorkerOpts;
+use crate::backend::{Consts, Objective};
+use crate::coordinator::runtime::{
+    budget_hedge_secs, plan, NetEpochStats, Report, Task, WorkerRuntime,
+};
+use crate::partition::Shard;
+use crate::straggler::{DelayModel, WorkerEpochRate};
+use anyhow::{bail, Context, Result};
+use std::io::ErrorKind;
+use std::net::{Shutdown as SockShutdown, TcpListener, TcpStream};
+use std::path::PathBuf;
+use std::process::{Child, Command, Stdio};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// Events the per-connection reader threads feed the master.
+enum Event {
+    /// A decoded frame from worker `v` (+ its size on the wire).
+    Frame(usize, Msg, u64),
+    /// Worker `v`'s socket closed or corrupted.
+    Disconnected(usize),
+}
+
+/// One admitted worker connection (write half + liveness clock).
+struct Conn {
+    writer: TcpStream,
+    last_seen: Arc<Mutex<Instant>>,
+}
+
+/// Distributed execution over TCP. See the module docs.
+pub struct DistRuntime {
+    conns: Vec<Conn>,
+    /// `false` once a worker disconnected or went heartbeat-dead —
+    /// permanent for the rest of the run.
+    alive: Vec<bool>,
+    events: Receiver<Event>,
+    delay: DelayModel,
+    time_scale: f64,
+    /// Telemetry accumulated since the last [`WorkerRuntime::net_stats`]
+    /// drain (dispatch may run several rounds per epoch).
+    stats: NetEpochStats,
+    /// Dispatch-round counter — the staleness tag on tasks/reports
+    /// (strictly increasing across the run, like `WorkerPool`'s job
+    /// generation; epochs alone would be ambiguous for protocols that
+    /// dispatch several rounds per epoch).
+    round: u64,
+    children: Vec<Child>,
+    readers: Vec<JoinHandle<()>>,
+}
+
+/// The binary to spawn for `--spawn-workers` children. Overridable for
+/// harnesses whose own executable is not the CLI (integration tests set
+/// this to `CARGO_BIN_EXE_anytime-sgd`).
+pub const WORKER_BIN_ENV: &str = "ANYTIME_SGD_WORKER_BIN";
+
+fn worker_bin() -> Result<PathBuf> {
+    if let Some(p) = std::env::var_os(WORKER_BIN_ENV) {
+        return Ok(PathBuf::from(p));
+    }
+    std::env::current_exe().context("locate own binary to spawn workers")
+}
+
+impl DistRuntime {
+    /// Bind, (optionally) spawn, and admit the fleet. `spawn = true`
+    /// launches one `anytime-sgd worker` child process per shard on
+    /// loopback; `spawn = false` listens on `0.0.0.0:port` and waits
+    /// for externally-launched workers. Blocks until all N workers have
+    /// completed the handshake (or the admission budget expires).
+    #[allow(clippy::too_many_arguments)]
+    pub fn new(
+        shards: &[Arc<Shard>],
+        batch: usize,
+        objective: Objective,
+        delay: DelayModel,
+        seed: u64,
+        consts: Consts,
+        time_scale: f64,
+        port: u16,
+        spawn: bool,
+    ) -> Result<Self> {
+        assert!(time_scale > 0.0, "time_scale must be > 0 (got {time_scale})");
+        let n = shards.len();
+        let host = if spawn { "127.0.0.1" } else { "0.0.0.0" };
+        let listener =
+            TcpListener::bind((host, port)).with_context(|| format!("bind {host}:{port}"))?;
+        let local = listener.local_addr()?;
+
+        let mut children = Vec::new();
+        if spawn {
+            let bin = worker_bin()?;
+            let connect = format!("127.0.0.1:{}", local.port());
+            for v in 0..n {
+                let child = Command::new(&bin)
+                    .arg("worker")
+                    .arg("--connect")
+                    .arg(&connect)
+                    .stdin(Stdio::null())
+                    .spawn()
+                    .with_context(|| format!("spawn worker {v} ({})", bin.display()))?;
+                children.push(child);
+            }
+        } else {
+            eprintln!(
+                "dist: listening on {local}; waiting for {n} workers \
+                 (`anytime-sgd worker --connect <host>:{}`)",
+                local.port()
+            );
+        }
+
+        let admit_budget =
+            if spawn { super::ADMIT_TIMEOUT_SPAWN } else { super::ADMIT_TIMEOUT_EXTERNAL };
+        match Self::admit(&listener, shards, batch, objective, seed, consts, time_scale,
+            admit_budget)
+        {
+            Ok((conns, events, readers, bytes_sent)) => Ok(Self {
+                alive: vec![true; n],
+                conns,
+                events,
+                delay,
+                time_scale,
+                stats: NetEpochStats {
+                    bytes_sent,
+                    rtt_secs: vec![None; n],
+                    ..NetEpochStats::default()
+                },
+                round: 0,
+                children,
+                readers,
+            }),
+            Err(e) => {
+                for c in &mut children {
+                    let _ = c.kill();
+                    let _ = c.wait();
+                }
+                Err(e)
+            }
+        }
+    }
+
+    /// Accept and handshake exactly `shards.len()` workers; ids are
+    /// assigned in connection order (workers are symmetric until their
+    /// `Assign` binds them to a shard).
+    #[allow(clippy::type_complexity, clippy::too_many_arguments)]
+    fn admit(
+        listener: &TcpListener,
+        shards: &[Arc<Shard>],
+        batch: usize,
+        objective: Objective,
+        seed: u64,
+        consts: Consts,
+        time_scale: f64,
+        budget: Duration,
+    ) -> Result<(Vec<Conn>, Receiver<Event>, Vec<JoinHandle<()>>, u64)> {
+        let n = shards.len();
+        listener.set_nonblocking(true)?;
+        let (tx, events) = channel::<Event>();
+        let mut conns = Vec::with_capacity(n);
+        let mut readers = Vec::with_capacity(n);
+        let mut bytes_sent = 0u64;
+        let deadline = Instant::now() + budget;
+        while conns.len() < n {
+            // Deadline check at the top, not only on idle accepts: a
+            // steady stream of rejected connections (a health-prober
+            // hitting the listen port) must not bypass the budget.
+            if Instant::now() >= deadline {
+                bail!(
+                    "dist admission timed out: {}/{n} workers registered within {budget:?}",
+                    conns.len()
+                );
+            }
+            let stream = match listener.accept() {
+                Ok((s, _)) => s,
+                Err(e) if e.kind() == ErrorKind::WouldBlock => {
+                    std::thread::sleep(Duration::from_millis(10));
+                    continue;
+                }
+                Err(e) => return Err(e.into()),
+            };
+            let v = conns.len();
+            match Self::handshake(stream, v, shards, batch, objective, seed, consts, time_scale)
+            {
+                Ok((conn, sent)) => {
+                    bytes_sent += sent;
+                    readers.push(spawn_reader(v, &conn, tx.clone())?);
+                    conns.push(conn);
+                }
+                // A connection that cannot complete the handshake — a
+                // port scanner probing the listen port, a stalled
+                // `Hello`, version skew — is rejected and its slot stays
+                // open: one stray client must not abort a run the
+                // operator is assembling by hand in external mode.
+                // Persistent causes (every worker misversioned) show up
+                // as a loud log per rejection and, eventually, the
+                // admission timeout.
+                Err(e) => eprintln!("dist: rejected connection for worker slot {v}: {e:#}"),
+            }
+        }
+        listener.set_nonblocking(false)?;
+        Ok((conns, events, readers, bytes_sent))
+    }
+
+    /// Hello/Assign exchange for one freshly-accepted connection.
+    #[allow(clippy::too_many_arguments)]
+    fn handshake(
+        stream: TcpStream,
+        v: usize,
+        shards: &[Arc<Shard>],
+        batch: usize,
+        objective: Objective,
+        seed: u64,
+        consts: Consts,
+        time_scale: f64,
+    ) -> Result<(Conn, u64)> {
+        // The listener is non-blocking during admission; on some
+        // platforms (macOS/BSD) accepted sockets inherit that flag, and
+        // a non-blocking read would see WouldBlock instead of honoring
+        // the read timeout. Force blocking mode explicitly.
+        stream.set_nonblocking(false)?;
+        stream.set_nodelay(true)?;
+        stream.set_read_timeout(Some(super::HANDSHAKE_TIMEOUT))?;
+        stream.set_write_timeout(Some(super::WRITE_TIMEOUT))?;
+        let mut reader = stream.try_clone()?;
+        let (hello, _) = read_frame(&mut reader).context("read Hello")?;
+        let capabilities = match hello {
+            Msg::Hello { version, capabilities } => {
+                if version != PROTOCOL_VERSION {
+                    bail!("wire version mismatch: worker speaks {version}, master {PROTOCOL_VERSION}");
+                }
+                capabilities
+            }
+            other => bail!("expected Hello, got {other:?}"),
+        };
+        let shard = &shards[v];
+        let d = shard.a.cols();
+        let mut flat = Vec::with_capacity(shard.rows() * d);
+        for r in 0..shard.rows() {
+            flat.extend_from_slice(shard.a.row(r));
+        }
+        let assign = Msg::Assign(Box::new(Assign {
+            worker: v as u32,
+            n_workers: shards.len() as u32,
+            seed,
+            batch: batch as u32,
+            objective: match objective {
+                Objective::LeastSquares => 0,
+                Objective::Logistic => 1,
+            },
+            time_scale,
+            consts: consts.to_array(),
+            dim: d as u32,
+            a: flat,
+            y: shard.y.clone(),
+            global_rows: shard.global_rows.clone(),
+        }));
+        let mut writer = stream;
+        let sent = write_frame(&mut writer, &assign).context("send Assign")?;
+        writer.set_read_timeout(None)?;
+        eprintln!("dist: worker {v} registered ({capabilities})");
+        Ok((Conn { writer, last_seen: Arc::new(Mutex::new(Instant::now())) }, sent))
+    }
+
+    /// Drain without blocking: liveness events and stale frames that
+    /// arrived between dispatch rounds.
+    fn drain_events(&mut self) {
+        while let Ok(ev) = self.events.try_recv() {
+            match ev {
+                // A report with no gather in flight is the late arrival
+                // of a deadline miss — already counted as dropped when
+                // its round's gather expired, so only its bytes are
+                // accounted here.
+                Event::Frame(_, _, bytes) => self.stats.bytes_recv += bytes,
+                Event::Disconnected(v) => self.mark_dead(v),
+            }
+        }
+    }
+
+    fn mark_dead(&mut self, v: usize) {
+        if self.alive[v] {
+            self.alive[v] = false;
+            eprintln!("dist: worker {v} lost — permanent straggler from here on");
+            let _ = self.conns[v].writer.shutdown(SockShutdown::Both);
+        }
+    }
+
+    /// Heartbeat sweep: a worker silent past the timeout is as dead as
+    /// a closed socket (covers wedged processes and half-open links the
+    /// reader thread cannot observe).
+    fn sweep_heartbeats(&mut self) {
+        for v in 0..self.conns.len() {
+            if self.alive[v] {
+                let last = *self.conns[v].last_seen.lock().expect("last_seen lock");
+                if last.elapsed() > super::HEARTBEAT_TIMEOUT {
+                    self.mark_dead(v);
+                }
+            }
+        }
+    }
+}
+
+/// Spawn the reader thread for one connection: decodes frames, stamps
+/// the liveness clock, and forwards everything to the master's channel.
+fn spawn_reader(v: usize, conn: &Conn, tx: Sender<Event>) -> Result<JoinHandle<()>> {
+    let mut stream = conn.writer.try_clone().context("clone socket for reader")?;
+    let last_seen = conn.last_seen.clone();
+    Ok(std::thread::Builder::new()
+        .name(format!("dist-reader-{v}"))
+        .spawn(move || loop {
+            match read_frame(&mut stream) {
+                Ok((msg, bytes)) => {
+                    *last_seen.lock().expect("last_seen lock") = Instant::now();
+                    if tx.send(Event::Frame(v, msg, bytes)).is_err() {
+                        return; // master dropped
+                    }
+                }
+                Err(_) => {
+                    let _ = tx.send(Event::Disconnected(v));
+                    return;
+                }
+            }
+        })
+        .expect("spawn dist reader thread"))
+}
+
+impl WorkerRuntime for DistRuntime {
+    fn dispatch(
+        &mut self,
+        epoch: usize,
+        tasks: Vec<Option<Task>>,
+        guard_secs: f64,
+    ) -> Vec<Option<Report>> {
+        let n = self.conns.len();
+        debug_assert_eq!(tasks.len(), n);
+        self.drain_events();
+        self.sweep_heartbeats();
+        self.round += 1;
+        let round = self.round;
+
+        // Scatter: plan each task at this epoch's modeled rate and ship
+        // the plan. Dead-this-epoch workers (delay model) are simply not
+        // dispatched — identical to the in-process runtimes.
+        let mut out: Vec<Option<Report>> = (0..n).map(|_| None).collect();
+        let mut pending = vec![false; n];
+        let mut sent_at: Vec<Option<Instant>> = vec![None; n];
+        let mut expected = 0usize;
+        for (v, task) in tasks.into_iter().enumerate() {
+            let Some(task) = task else { continue };
+            if !self.alive[v] {
+                continue; // permanent straggler: never dispatched again
+            }
+            let rate = match self.delay.rate(v, epoch) {
+                WorkerEpochRate::Dead => continue, // modeled death: no report
+                WorkerEpochRate::StepSecs(s) => s,
+            };
+            let (target, busy) = plan(&self.delay, v, epoch, task.work, rate);
+            let msg = Msg::Task(Box::new(TaskMsg {
+                round,
+                x0: task.x0,
+                t0: task.t0,
+                stream_label: task.stream.0.to_string(),
+                stream_key: task.stream.1,
+                rate,
+                target: target as u64,
+                busy,
+                budget_secs: budget_hedge_secs(task.work),
+            }));
+            match write_frame(&mut self.conns[v].writer, &msg) {
+                Ok(bytes) => {
+                    self.stats.bytes_sent += bytes;
+                    sent_at[v] = Some(Instant::now());
+                    pending[v] = true;
+                    expected += 1;
+                }
+                Err(_) => self.mark_dead(v),
+            }
+        }
+
+        // Gather under the real T_c deadline (same clamp as the
+        // threaded runtime). Disconnects release their pending slot
+        // immediately, so a crashed worker never blocks the gather; and
+        // the wait wakes at heartbeat granularity so a *silently* dead
+        // worker (half-open link — no FIN, reader blocked forever) is
+        // caught by the heartbeat sweep instead of stalling the gather
+        // for the full scaled deadline.
+        let deadline =
+            Duration::from_secs_f64((guard_secs * self.time_scale).clamp(1e-3, 86_400.0));
+        let start = Instant::now();
+        let mut last_sweep = Instant::now();
+        while expected > 0 {
+            let Some(remaining) = deadline.checked_sub(start.elapsed()) else { break };
+            match self.events.recv_timeout(remaining.min(super::HEARTBEAT_INTERVAL)) {
+                Ok(Event::Frame(v, Msg::Report(r), bytes)) => {
+                    self.stats.bytes_recv += bytes;
+                    if r.round == round && pending[v] {
+                        pending[v] = false;
+                        expected -= 1;
+                        self.stats.rtt_secs[v] =
+                            sent_at[v].map(|t0| t0.elapsed().as_secs_f64());
+                        out[v] = Some(Report {
+                            q: r.q as usize,
+                            busy_secs: r.busy_secs,
+                            x_k: r.x_k,
+                            x_bar: r.x_bar,
+                        });
+                    }
+                    // A stale-round report is not counted here: it was
+                    // already counted as dropped when its own round's
+                    // gather expired.
+                }
+                Ok(Event::Frame(_, _, bytes)) => self.stats.bytes_recv += bytes,
+                Ok(Event::Disconnected(v)) => {
+                    self.mark_dead(v);
+                    if pending[v] {
+                        pending[v] = false;
+                        expected -= 1;
+                    }
+                }
+                Err(RecvTimeoutError::Timeout) => {}
+                Err(RecvTimeoutError::Disconnected) => break,
+            }
+            // Heartbeat sweep on its own cadence — NOT only on recv
+            // timeouts, which survivors' heartbeats (a frame every few
+            // hundred ms fleet-wide) would starve indefinitely: a
+            // half-open worker must die in ~HEARTBEAT_TIMEOUT, not at
+            // the full scaled deadline.
+            if last_sweep.elapsed() >= super::HEARTBEAT_INTERVAL {
+                last_sweep = Instant::now();
+                self.sweep_heartbeats();
+                for v in 0..n {
+                    if pending[v] && !self.alive[v] {
+                        pending[v] = false;
+                        expected -= 1;
+                    }
+                }
+            }
+        }
+        // Whatever is still pending missed the real deadline.
+        self.stats.dropped_reports += expected;
+        out
+    }
+
+    fn name(&self) -> &'static str {
+        "dist"
+    }
+
+    fn net_stats(&mut self) -> Option<NetEpochStats> {
+        let n = self.conns.len();
+        let drained = std::mem::replace(
+            &mut self.stats,
+            NetEpochStats { rtt_secs: vec![None; n], ..NetEpochStats::default() },
+        );
+        Some(drained)
+    }
+}
+
+impl Drop for DistRuntime {
+    fn drop(&mut self) {
+        for v in 0..self.conns.len() {
+            if self.alive[v] {
+                let _ = write_frame(&mut self.conns[v].writer, &Msg::Shutdown);
+            }
+            let _ = self.conns[v].writer.shutdown(SockShutdown::Both);
+        }
+        for h in self.readers.drain(..) {
+            let _ = h.join();
+        }
+        // Children exit on Shutdown/EOF; give them a moment, then stop
+        // waiting politely.
+        let grace = Instant::now() + Duration::from_secs(5);
+        for c in &mut self.children {
+            loop {
+                match c.try_wait() {
+                    Ok(Some(_)) => break,
+                    Ok(None) if Instant::now() < grace => {
+                        std::thread::sleep(Duration::from_millis(20))
+                    }
+                    _ => {
+                        let _ = c.kill();
+                        let _ = c.wait();
+                        break;
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Spawn an in-process worker agent that connects to `addr` (with the
+/// same retry policy as the CLI agent) — the loopback building block
+/// for tests and for library users embedding a worker in an existing
+/// process.
+pub fn connect_worker_thread(addr: String, opts: WorkerOpts) -> JoinHandle<Result<()>> {
+    std::thread::spawn(move || {
+        super::worker::serve(super::worker::connect_with_retry(&addr)?, opts)
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::runtime::{SequentialRuntime, Work};
+    use crate::backend::WorkerCompute;
+    use crate::data::synthetic_linreg;
+    use crate::partition::{materialize_shards, Assignment};
+    use crate::rng::Xoshiro256pp;
+    use crate::straggler::{PersistentSpec, StragglerEnv};
+
+    const N: usize = 3;
+    const TS: f64 = 1e-4;
+
+    fn shards() -> Vec<Arc<Shard>> {
+        let ds = synthetic_linreg(600, 8, 1e-3, 5);
+        materialize_shards(&ds, &Assignment::new(N, 0)).into_iter().map(Arc::new).collect()
+    }
+
+    fn env() -> StragglerEnv {
+        StragglerEnv::ideal(0.01).with_persistent(PersistentSpec {
+            workers: vec![2],
+            from_epoch: 0,
+            factor: f64::INFINITY,
+        })
+    }
+
+    fn seq() -> SequentialRuntime {
+        let workers: Vec<Box<dyn WorkerCompute>> = shards()
+            .into_iter()
+            .map(|sh| {
+                Box::new(crate::backend::NativeWorker::with_objective(
+                    sh,
+                    4,
+                    Objective::LeastSquares,
+                )) as Box<dyn WorkerCompute>
+            })
+            .collect();
+        SequentialRuntime::new(
+            workers,
+            DelayModel::new(env(), 9),
+            Xoshiro256pp::seed_from_u64(9),
+            Consts::constant(1e-3),
+            4,
+        )
+    }
+
+    /// Reserve a loopback port: bind :0, read it back, release. (A
+    /// tiny race against other processes, acceptable in tests.)
+    fn free_port() -> u16 {
+        TcpListener::bind(("127.0.0.1", 0)).unwrap().local_addr().unwrap().port()
+    }
+
+    /// External-mode master + in-process loopback worker threads.
+    fn dist_with_workers(opts_for: impl Fn(usize) -> WorkerOpts) -> (DistRuntime, Vec<JoinHandle<Result<()>>>) {
+        let port = free_port();
+        let addr = format!("127.0.0.1:{port}");
+        let handles: Vec<_> =
+            (0..N).map(|v| connect_worker_thread(addr.clone(), opts_for(v))).collect();
+        let rt = DistRuntime::new(
+            &shards(),
+            4,
+            Objective::LeastSquares,
+            DelayModel::new(env(), 9),
+            9,
+            Consts::constant(1e-3),
+            TS,
+            port,
+            false,
+        )
+        .unwrap();
+        (rt, handles)
+    }
+
+    fn steps_tasks(d: usize, n_steps: usize) -> Vec<Option<Task>> {
+        (0..N)
+            .map(|_| {
+                Some(Task {
+                    x0: vec![0.0; d],
+                    work: Work::Steps(n_steps),
+                    t0: 0.0,
+                    stream: ("minibatch", 0),
+                })
+            })
+            .collect()
+    }
+
+    #[test]
+    fn dist_reports_match_sequential_bit_exactly() {
+        let (mut dist, handles) = dist_with_workers(|_| WorkerOpts::default());
+        let mut s = seq();
+        let a = s.dispatch(0, steps_tasks(8, 5), 1e9);
+        let b = dist.dispatch(0, steps_tasks(8, 5), 1e9);
+        assert_eq!(dist.name(), "dist");
+        for v in 0..2 {
+            let (ra, rb) = (a[v].as_ref().unwrap(), b[v].as_ref().unwrap());
+            assert_eq!(ra.q, rb.q, "worker {v} step counts");
+            assert_eq!(ra.x_k, rb.x_k, "worker {v} iterates must match bit-exactly");
+            assert_eq!(ra.x_bar, rb.x_bar);
+            assert_eq!(ra.busy_secs, rb.busy_secs);
+        }
+        // The model-dead worker reports in neither runtime.
+        assert!(a[2].is_none() && b[2].is_none());
+        // Telemetry: setup + one round of traffic, RTTs for dispatched
+        // workers only.
+        let stats = dist.net_stats().unwrap();
+        assert!(stats.bytes_sent > 0 && stats.bytes_recv > 0);
+        assert!(stats.rtt_secs[0].is_some() && stats.rtt_secs[1].is_some());
+        assert!(stats.rtt_secs[2].is_none());
+        assert_eq!(stats.dropped_reports, 0);
+        // A drained stats record starts the next epoch from zero.
+        let fresh = dist.net_stats().unwrap();
+        assert_eq!(fresh.bytes_sent, 0);
+        drop(dist);
+        for h in handles {
+            h.join().unwrap().unwrap();
+        }
+    }
+
+    #[test]
+    fn disconnected_worker_becomes_permanent_straggler() {
+        // Worker thread 1-of-3 crashes after serving one task. Worker
+        // identity is connection-order, so find the dead id dynamically.
+        let (mut dist, handles) = {
+            let port = free_port();
+            let addr = format!("127.0.0.1:{port}");
+            // First connector gets the crash behavior.
+            let handles: Vec<_> = (0..N)
+                .map(|v| {
+                    connect_worker_thread(
+                        addr.clone(),
+                        WorkerOpts { die_after_tasks: (v == 0).then_some(1) },
+                    )
+                })
+                .collect();
+            let rt = DistRuntime::new(
+                &shards(),
+                4,
+                Objective::LeastSquares,
+                DelayModel::new(StragglerEnv::ideal(0.01), 9), // all 3 modeled-alive
+                9,
+                Consts::constant(1e-3),
+                TS,
+                port,
+                false,
+            )
+            .unwrap();
+            (rt, handles)
+        };
+        // Round 0: everyone reports (the crasher replies, then drops).
+        let r0 = dist.dispatch(0, steps_tasks(8, 5), 1e9);
+        assert!(r0.iter().all(|r| r.is_some()), "round 0 must be complete");
+        let _ = dist.net_stats();
+        // Round 1: the crashed worker yields None and is marked dead —
+        // the gather returns without waiting out the full deadline.
+        let t0 = Instant::now();
+        let r1 = dist.dispatch(1, steps_tasks(8, 5), 1e9);
+        assert!(t0.elapsed() < Duration::from_secs(30));
+        let dead: Vec<usize> = (0..N).filter(|&v| r1[v].is_none()).collect();
+        assert_eq!(dead.len(), 1, "exactly one worker must be lost: {r1:?}");
+        let died = dead[0];
+        assert_eq!(dist.net_stats().unwrap().dropped_reports, 0,
+            "a disconnect is not a dropped report");
+        // Round 2: permanently dead — not even dispatched.
+        let r2 = dist.dispatch(2, steps_tasks(8, 5), 1e9);
+        assert!(r2[died].is_none());
+        for v in 0..N {
+            if v != died {
+                assert!(r2[v].is_some(), "surviving worker {v} must still report");
+            }
+        }
+        let stats = dist.net_stats().unwrap();
+        assert!(stats.rtt_secs[died].is_none());
+        drop(dist);
+        for h in handles {
+            h.join().unwrap().unwrap();
+        }
+    }
+
+    #[test]
+    fn bad_connection_is_rejected_and_admission_continues() {
+        // A misversioned client connects first; the master must reject
+        // it (loudly), keep the slot open, and still assemble the full
+        // fleet from the real workers that arrive afterwards.
+        let port = free_port();
+        let addr = format!("127.0.0.1:{port}");
+        let bad = {
+            let addr = addr.clone();
+            std::thread::spawn(move || {
+                for _ in 0..100 {
+                    if let Ok(mut s) = TcpStream::connect(&*addr) {
+                        let _ = write_frame(
+                            &mut s,
+                            &Msg::Hello {
+                                version: PROTOCOL_VERSION + 1,
+                                capabilities: "x".into(),
+                            },
+                        );
+                        // Hold the socket until the master drops it.
+                        let mut clone = s.try_clone().unwrap();
+                        let _ = read_frame(&mut clone);
+                        return;
+                    }
+                    std::thread::sleep(Duration::from_millis(50));
+                }
+                panic!("bad client never reached the master");
+            })
+        };
+        // Real workers arrive a beat later, so the bad client is
+        // (almost surely) the first accept — either way all slots fill.
+        let goods: Vec<_> = (0..N)
+            .map(|_| {
+                let addr = addr.clone();
+                std::thread::spawn(move || {
+                    std::thread::sleep(Duration::from_millis(300));
+                    connect_worker_thread(addr, WorkerOpts::default()).join().unwrap()
+                })
+            })
+            .collect();
+        let mut rt = DistRuntime::new(
+            &shards(),
+            4,
+            Objective::LeastSquares,
+            DelayModel::new(StragglerEnv::ideal(0.01), 9),
+            9,
+            Consts::constant(1e-3),
+            TS,
+            port,
+            false,
+        )
+        .unwrap();
+        let out = rt.dispatch(0, steps_tasks(8, 5), 1e9);
+        assert!(out.iter().all(|r| r.is_some()), "full fleet must serve: {out:?}");
+        bad.join().unwrap();
+        drop(rt);
+        for g in goods {
+            g.join().unwrap().unwrap();
+        }
+    }
+}

@@ -1,0 +1,68 @@
+//! `net` — the distributed master–worker execution subsystem over TCP.
+//!
+//! The paper's premise is a *physical* cluster: a master farming work to
+//! N workers whose compute and communication times are genuinely
+//! independent. The in-process runtimes ([`crate::coordinator::runtime`])
+//! model that; this subsystem *runs* it — std-only (no tokio/serde,
+//! matching the `ser`/`rng` house rule), one process per worker, real
+//! sockets, real serialization cost, real worker churn:
+//!
+//! * [`wire`] — length-prefixed binary frames with a versioned
+//!   handshake; `Hello`/`Assign`/`Task`/`Report`/`Heartbeat`/`Shutdown`
+//!   message enums over the [`crate::ser::bytes`] codec.
+//! * [`worker`] — the worker agent loop (`anytime-sgd worker --connect
+//!   HOST:PORT`): register with capabilities, receive the shard and run
+//!   constants once, then serve `Task`s by running the *same*
+//!   planned-task executor the threaded runtime uses
+//!   ([`crate::coordinator::runtime`]), with straggling injected as
+//!   per-step sleeps.
+//! * [`master`] — [`master::DistRuntime`], a
+//!   [`crate::coordinator::runtime::WorkerRuntime`]: listens, admits N
+//!   workers (or spawns them itself as child processes for
+//!   single-machine runs), scatters tasks, gathers reports under the
+//!   real `T_c` deadline, and treats a disconnected or heartbeat-dead
+//!   worker as a **permanent** full-`T_c` straggler for the rest of the
+//!   run — a failure mode no in-process runtime can express.
+//!
+//! Determinism contract (DESIGN.md §6): task step counts are planned
+//! master-side from the `DelayModel` and minibatch streams derive from
+//! the run seed through the one shared sampling function, so under
+//! `Deterministic` delays and generous deadlines dist runs are
+//! bit-identical to `sim` for every registered protocol
+//! (`rust/tests/dist_equivalence.rs`). Under tight deadlines, slow
+//! links, or worker crashes the dist runtime diverges — that is the
+//! point.
+
+pub mod master;
+pub mod wire;
+pub mod worker;
+
+use std::time::Duration;
+
+/// How often a worker's side thread emits a `Heartbeat` frame.
+pub const HEARTBEAT_INTERVAL: Duration = Duration::from_millis(500);
+
+/// A worker silent (no frame of any kind) for this long is declared
+/// heartbeat-dead: permanently excluded, like a disconnect. Generous
+/// relative to [`HEARTBEAT_INTERVAL`] so GC-less Rust workers only trip
+/// it when the process or link is truly wedged.
+pub const HEARTBEAT_TIMEOUT: Duration = Duration::from_secs(15);
+
+/// Handshake read budget: a connection that cannot produce its `Hello`
+/// (or consume its `Assign`) within this window is rejected.
+pub const HANDSHAKE_TIMEOUT: Duration = Duration::from_secs(10);
+
+/// Master-side socket write budget (per frame). A worker that cannot
+/// absorb a task frame within this window has stopped reading (wedged,
+/// SIGSTOPped, dead link) — the write errors and the worker is marked
+/// permanently dead, so a full kernel send buffer can never wedge the
+/// master's scatter loop. Generous enough for a shard-sized `Assign`
+/// over a LAN.
+pub const WRITE_TIMEOUT: Duration = Duration::from_secs(30);
+
+/// Admission budget when the master spawns its own loopback children.
+pub const ADMIT_TIMEOUT_SPAWN: Duration = Duration::from_secs(60);
+
+/// Admission budget when waiting for externally-launched workers (a
+/// human typing `anytime-sgd worker --connect ...` in another terminal).
+pub const ADMIT_TIMEOUT_EXTERNAL: Duration = Duration::from_secs(600);

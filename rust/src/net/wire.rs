@@ -1,0 +1,558 @@
+//! The wire protocol: length-prefixed binary frames with a versioned
+//! handshake.
+//!
+//! Every message travels as one frame: a `u32` little-endian payload
+//! length, then the payload — a one-byte message tag followed by the
+//! variant's body encoded with [`crate::ser::bytes`]. Frames are capped
+//! at [`MAX_FRAME_BYTES`]; anything larger (or any truncated/corrupt
+//! body) decodes to a [`WireError`], never a panic — the bytes come
+//! from a TCP peer and must be treated as hostile until proven
+//! well-formed.
+//!
+//! Handshake sequence (DESIGN.md §6):
+//!
+//! ```text
+//! worker                           master
+//!   |  Hello { version, caps }  ->   |   (bad Hello / version skew:
+//!   |  <- Assign { id, shard, .. }   |    rejected, slot stays open)
+//!   |  <- Task ...    Report ->      |   (repeated, one per dispatch)
+//!   |  Heartbeat ->                  |   (periodic, from a side thread)
+//!   |  <- Shutdown                   |
+//! ```
+//!
+//! Floats are raw IEEE-754 bit patterns end to end, so NaN/±inf
+//! payloads and every finite value round-trip bit-exactly — the
+//! dist ≡ sim reproducibility contract depends on it.
+
+use crate::ser::bytes::{ByteReader, ByteWriter, BytesError};
+use std::fmt;
+use std::io::{Read, Write};
+
+/// Protocol version; bumped on any frame-format change. A worker and
+/// master disagreeing on this refuse to pair during the handshake.
+pub const PROTOCOL_VERSION: u32 = 1;
+
+/// Hard cap on one frame's payload (1 GiB) — large enough for a
+/// paper-scale shard in `Assign`, small enough that a corrupt length
+/// prefix cannot drive a runaway allocation.
+pub const MAX_FRAME_BYTES: u32 = 1 << 30;
+
+/// Wire failure: framing/codec errors or the underlying socket error.
+#[derive(Debug)]
+pub enum WireError {
+    /// Frame length prefix exceeds [`MAX_FRAME_BYTES`].
+    Oversize(u32),
+    /// Unknown message tag.
+    BadTag(u8),
+    /// Payload body failed to decode.
+    Codec(BytesError),
+    /// Payload field held an out-of-domain value.
+    BadValue(&'static str),
+    /// Socket-level failure (includes EOF mid-frame).
+    Io(std::io::Error),
+}
+
+impl fmt::Display for WireError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            WireError::Oversize(n) => write!(f, "frame length {n} exceeds {MAX_FRAME_BYTES}"),
+            WireError::BadTag(t) => write!(f, "unknown message tag {t}"),
+            WireError::Codec(e) => write!(f, "frame body: {e}"),
+            WireError::BadValue(what) => write!(f, "frame body: invalid {what}"),
+            WireError::Io(e) => write!(f, "socket: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for WireError {}
+
+impl From<BytesError> for WireError {
+    fn from(e: BytesError) -> Self {
+        WireError::Codec(e)
+    }
+}
+
+impl From<std::io::Error> for WireError {
+    fn from(e: std::io::Error) -> Self {
+        WireError::Io(e)
+    }
+}
+
+/// Worker registration: shard + run constants, sent once after `Hello`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Assign {
+    /// The admitted worker's id `v` (its shard, delay stream, and
+    /// minibatch stream index).
+    pub worker: u32,
+    /// Fleet size N (display/sanity only).
+    pub n_workers: u32,
+    /// The run's root seed — the worker rebuilds the exact sampling
+    /// root `Xoshiro256pp::seed_from_u64(seed)` the master uses.
+    pub seed: u64,
+    /// Minibatch size per SGD step.
+    pub batch: u32,
+    /// Objective selector (0 = least squares, 1 = logistic).
+    pub objective: u8,
+    /// Wall-clock compression for sleep injection and deadlines.
+    pub time_scale: f64,
+    /// Schedule constants `[big_l, sigma_over_d, base_lr]`.
+    pub consts: [f32; 3],
+    /// Shard parameter dimension d.
+    pub dim: u32,
+    /// Shard rows, row-major `rows × dim`.
+    pub a: Vec<f32>,
+    /// Shard targets (length `rows`).
+    pub y: Vec<f32>,
+    /// Global row ids (provenance; length `rows`).
+    pub global_rows: Vec<u32>,
+}
+
+/// One dispatch-round assignment, fully planned master-side (the
+/// master owns the `DelayModel`, so the rate and target step count
+/// arrive resolved; the worker injects the per-step delays itself).
+#[derive(Clone, Debug, PartialEq)]
+pub struct TaskMsg {
+    /// The master's dispatch-round counter, echoed back in the report.
+    /// Rounds — not epochs — key staleness, because some protocols
+    /// (generalized, async) run several dispatch rounds per epoch and a
+    /// late round-1 reply must never be mistaken for a round-2 one.
+    pub round: u64,
+    /// Start vector of the local SGD chain.
+    pub x0: Vec<f32>,
+    /// Iteration offset for schedule continuity.
+    pub t0: f32,
+    /// Minibatch stream label + key (`root.split(label, v, key)`).
+    pub stream_label: String,
+    pub stream_key: u64,
+    /// This epoch's per-step compute seconds.
+    pub rate: f64,
+    /// Planned step count.
+    pub target: u64,
+    /// Modeled busy seconds at full completion.
+    pub busy: f64,
+    /// Budget hedge in modeled seconds (`inf` = no budget deadline).
+    pub budget_secs: f64,
+}
+
+/// One worker's reply to a [`TaskMsg`].
+#[derive(Clone, Debug, PartialEq)]
+pub struct ReportMsg {
+    /// Echo of the task's dispatch round (staleness key).
+    pub round: u64,
+    pub worker: u32,
+    /// Steps actually completed.
+    pub q: u64,
+    /// Modeled compute seconds consumed.
+    pub busy_secs: f64,
+    /// Final iterate.
+    pub x_k: Vec<f32>,
+    /// Running average of the iterates.
+    pub x_bar: Vec<f32>,
+}
+
+/// Every message the protocol speaks.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Msg {
+    /// Worker → master: registration request.
+    Hello { version: u32, capabilities: String },
+    /// Master → worker: admission + shard + run constants.
+    Assign(Box<Assign>),
+    /// Master → worker: one dispatch-round assignment.
+    Task(Box<TaskMsg>),
+    /// Worker → master: task result.
+    Report(Box<ReportMsg>),
+    /// Worker → master: liveness beacon (periodic side-thread send).
+    Heartbeat { nonce: u64 },
+    /// Master → worker: clean exit.
+    Shutdown,
+}
+
+const TAG_HELLO: u8 = 1;
+const TAG_ASSIGN: u8 = 2;
+const TAG_TASK: u8 = 3;
+const TAG_REPORT: u8 = 4;
+const TAG_HEARTBEAT: u8 = 5;
+const TAG_SHUTDOWN: u8 = 6;
+
+impl Msg {
+    /// Encode to a frame payload (tag + body, no length prefix).
+    pub fn encode(&self) -> Vec<u8> {
+        let mut w = ByteWriter::new();
+        match self {
+            Msg::Hello { version, capabilities } => {
+                w.put_u8(TAG_HELLO);
+                w.put_u32(*version);
+                w.put_str(capabilities);
+            }
+            Msg::Assign(a) => {
+                w.put_u8(TAG_ASSIGN);
+                w.put_u32(a.worker);
+                w.put_u32(a.n_workers);
+                w.put_u64(a.seed);
+                w.put_u32(a.batch);
+                w.put_u8(a.objective);
+                w.put_f64(a.time_scale);
+                for &c in &a.consts {
+                    w.put_f32(c);
+                }
+                w.put_u32(a.dim);
+                w.put_f32s(&a.a);
+                w.put_f32s(&a.y);
+                w.put_u32s(&a.global_rows);
+            }
+            Msg::Task(t) => {
+                w.put_u8(TAG_TASK);
+                w.put_u64(t.round);
+                w.put_f32s(&t.x0);
+                w.put_f32(t.t0);
+                w.put_str(&t.stream_label);
+                w.put_u64(t.stream_key);
+                w.put_f64(t.rate);
+                w.put_u64(t.target);
+                w.put_f64(t.busy);
+                w.put_f64(t.budget_secs);
+            }
+            Msg::Report(r) => {
+                w.put_u8(TAG_REPORT);
+                w.put_u64(r.round);
+                w.put_u32(r.worker);
+                w.put_u64(r.q);
+                w.put_f64(r.busy_secs);
+                w.put_f32s(&r.x_k);
+                w.put_f32s(&r.x_bar);
+            }
+            Msg::Heartbeat { nonce } => {
+                w.put_u8(TAG_HEARTBEAT);
+                w.put_u64(*nonce);
+            }
+            Msg::Shutdown => {
+                w.put_u8(TAG_SHUTDOWN);
+            }
+        }
+        w.into_bytes()
+    }
+
+    /// Decode a frame payload. Errors (never panics) on truncation,
+    /// unknown tags, length overflow, trailing bytes, or out-of-domain
+    /// fields.
+    pub fn decode(payload: &[u8]) -> Result<Msg, WireError> {
+        let mut r = ByteReader::new(payload);
+        let msg = match r.get_u8()? {
+            TAG_HELLO => Msg::Hello { version: r.get_u32()?, capabilities: r.get_str()? },
+            TAG_ASSIGN => {
+                let worker = r.get_u32()?;
+                let n_workers = r.get_u32()?;
+                let seed = r.get_u64()?;
+                let batch = r.get_u32()?;
+                let objective = r.get_u8()?;
+                if objective > 1 {
+                    return Err(WireError::BadValue("objective"));
+                }
+                let time_scale = r.get_f64()?;
+                let consts = [r.get_f32()?, r.get_f32()?, r.get_f32()?];
+                let dim = r.get_u32()?;
+                let a = r.get_f32s()?;
+                let y = r.get_f32s()?;
+                let global_rows = r.get_u32s()?;
+                if dim == 0 || a.len() != y.len() * dim as usize || y.len() != global_rows.len() {
+                    return Err(WireError::BadValue("shard shape"));
+                }
+                if batch == 0 {
+                    return Err(WireError::BadValue("batch"));
+                }
+                Msg::Assign(Box::new(Assign {
+                    worker,
+                    n_workers,
+                    seed,
+                    batch,
+                    objective,
+                    time_scale,
+                    consts,
+                    dim,
+                    a,
+                    y,
+                    global_rows,
+                }))
+            }
+            TAG_TASK => Msg::Task(Box::new(TaskMsg {
+                round: r.get_u64()?,
+                x0: r.get_f32s()?,
+                t0: r.get_f32()?,
+                stream_label: r.get_str()?,
+                stream_key: r.get_u64()?,
+                rate: r.get_f64()?,
+                target: r.get_u64()?,
+                busy: r.get_f64()?,
+                budget_secs: r.get_f64()?,
+            })),
+            TAG_REPORT => Msg::Report(Box::new(ReportMsg {
+                round: r.get_u64()?,
+                worker: r.get_u32()?,
+                q: r.get_u64()?,
+                busy_secs: r.get_f64()?,
+                x_k: r.get_f32s()?,
+                x_bar: r.get_f32s()?,
+            })),
+            TAG_HEARTBEAT => Msg::Heartbeat { nonce: r.get_u64()? },
+            TAG_SHUTDOWN => Msg::Shutdown,
+            tag => return Err(WireError::BadTag(tag)),
+        };
+        r.finish()?;
+        Ok(msg)
+    }
+}
+
+/// Write one frame (length prefix + payload). Returns the total bytes
+/// put on the wire (for the `net` telemetry record). An encoding larger
+/// than [`MAX_FRAME_BYTES`] is refused *before* any bytes hit the
+/// socket — a silent `as u32` wrap would write a wrong length prefix
+/// and desync the stream on a perfectly healthy link.
+pub fn write_frame(w: &mut impl Write, msg: &Msg) -> Result<u64, WireError> {
+    let payload = msg.encode();
+    if payload.len() > MAX_FRAME_BYTES as usize {
+        return Err(WireError::Oversize(u32::MAX));
+    }
+    let len = payload.len() as u32;
+    w.write_all(&len.to_le_bytes())?;
+    w.write_all(&payload)?;
+    w.flush()?;
+    Ok(4 + payload.len() as u64)
+}
+
+/// Read one frame. Returns the decoded message and the total bytes
+/// consumed. EOF before a complete frame is an [`WireError::Io`].
+pub fn read_frame(r: &mut impl Read) -> Result<(Msg, u64), WireError> {
+    let mut len_bytes = [0u8; 4];
+    r.read_exact(&mut len_bytes)?;
+    let len = u32::from_le_bytes(len_bytes);
+    if len > MAX_FRAME_BYTES {
+        return Err(WireError::Oversize(len));
+    }
+    let mut payload = vec![0u8; len as usize];
+    r.read_exact(&mut payload)?;
+    Ok((Msg::decode(&payload)?, 4 + len as u64))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Xoshiro256pp;
+
+    /// A fuzz-style value sampler covering the awkward floats.
+    fn fuzz_f32(rng: &mut Xoshiro256pp) -> f32 {
+        match rng.index(6) {
+            0 => f32::NAN,
+            1 => f32::INFINITY,
+            2 => f32::NEG_INFINITY,
+            3 => 0.0,
+            4 => -0.0,
+            _ => (rng.next_f64() * 2e6 - 1e6) as f32,
+        }
+    }
+
+    fn fuzz_f64(rng: &mut Xoshiro256pp) -> f64 {
+        match rng.index(6) {
+            0 => f64::from_bits(0x7FF8_0000_DEAD_BEEF), // NaN with payload
+            1 => f64::INFINITY,
+            2 => f64::NEG_INFINITY,
+            3 => 0.0,
+            4 => -0.0,
+            _ => rng.next_f64() * 2e9 - 1e9,
+        }
+    }
+
+    fn fuzz_f32s(rng: &mut Xoshiro256pp, max_len: usize) -> Vec<f32> {
+        let n = rng.index(max_len + 1);
+        (0..n).map(|_| fuzz_f32(rng)).collect()
+    }
+
+    fn fuzz_msg(rng: &mut Xoshiro256pp) -> Msg {
+        match rng.index(6) {
+            0 => Msg::Hello {
+                version: rng.next_u64() as u32,
+                capabilities: format!("native;cores={}", rng.index(128)),
+            },
+            1 => {
+                let dim = 1 + rng.index(7) as u32;
+                let rows = rng.index(9);
+                Msg::Assign(Box::new(Assign {
+                    worker: rng.next_u64() as u32,
+                    n_workers: rng.next_u64() as u32,
+                    seed: rng.next_u64(),
+                    batch: 1 + rng.next_u64() as u32 % 64,
+                    objective: (rng.index(2)) as u8,
+                    time_scale: fuzz_f64(rng),
+                    consts: [fuzz_f32(rng), fuzz_f32(rng), fuzz_f32(rng)],
+                    dim,
+                    a: (0..rows * dim as usize).map(|_| fuzz_f32(rng)).collect(),
+                    y: (0..rows).map(|_| fuzz_f32(rng)).collect(),
+                    global_rows: (0..rows as u32).collect(),
+                }))
+            }
+            2 => Msg::Task(Box::new(TaskMsg {
+                round: rng.next_u64(),
+                x0: fuzz_f32s(rng, 32),
+                t0: fuzz_f32(rng),
+                stream_label: ["minibatch", "mb", "", "η-greek"][rng.index(4)].to_string(),
+                stream_key: rng.next_u64(),
+                rate: fuzz_f64(rng),
+                target: rng.next_u64(),
+                busy: fuzz_f64(rng),
+                budget_secs: fuzz_f64(rng),
+            })),
+            3 => Msg::Report(Box::new(ReportMsg {
+                round: rng.next_u64(),
+                worker: rng.next_u64() as u32,
+                q: rng.next_u64(),
+                busy_secs: fuzz_f64(rng),
+                x_k: fuzz_f32s(rng, 32),
+                x_bar: fuzz_f32s(rng, 32),
+            })),
+            4 => Msg::Heartbeat { nonce: rng.next_u64() },
+            _ => Msg::Shutdown,
+        }
+    }
+
+    /// Bit-level equality: `PartialEq` on floats treats NaN ≠ NaN, so
+    /// compare through the encoded form (which is the bit pattern).
+    fn assert_bits_eq(a: &Msg, b: &Msg) {
+        assert_eq!(a.encode(), b.encode());
+    }
+
+    #[test]
+    fn every_variant_round_trips_under_fuzz() {
+        let mut rng = Xoshiro256pp::seed_from_u64(0xD157);
+        let mut seen = [false; 6];
+        for _ in 0..500 {
+            let msg = fuzz_msg(&mut rng);
+            seen[(msg.encode()[0] - 1) as usize] = true;
+            let payload = msg.encode();
+            let back = Msg::decode(&payload).unwrap();
+            assert_bits_eq(&msg, &back);
+            // And through the framed stream form.
+            let mut buf = Vec::new();
+            let sent = write_frame(&mut buf, &msg).unwrap();
+            assert_eq!(sent as usize, buf.len());
+            let (back2, got) = read_frame(&mut buf.as_slice()).unwrap();
+            assert_eq!(got, sent);
+            assert_bits_eq(&msg, &back2);
+        }
+        assert!(seen.iter().all(|&s| s), "fuzz must cover every variant: {seen:?}");
+    }
+
+    #[test]
+    fn truncated_frames_error_never_panic() {
+        let mut rng = Xoshiro256pp::seed_from_u64(7);
+        for _ in 0..60 {
+            let msg = fuzz_msg(&mut rng);
+            let mut buf = Vec::new();
+            write_frame(&mut buf, &msg).unwrap();
+            // Every proper prefix of the framed bytes must fail cleanly.
+            for cut in 0..buf.len() {
+                assert!(read_frame(&mut &buf[..cut]).is_err(), "prefix {cut} must error");
+            }
+        }
+    }
+
+    #[test]
+    fn corrupt_payloads_error_never_panic() {
+        let mut rng = Xoshiro256pp::seed_from_u64(21);
+        for _ in 0..60 {
+            let msg = fuzz_msg(&mut rng);
+            let mut payload = msg.encode();
+            // Flip one random byte — decode must return Ok or Err, and
+            // any Ok must re-encode without panicking.
+            let i = rng.index(payload.len());
+            payload[i] ^= 1 << rng.index(8);
+            if let Ok(back) = Msg::decode(&payload) {
+                let _ = back.encode();
+            }
+            // Truncated payloads (frame shorter than the body claims).
+            for cut in 0..payload.len().min(8) {
+                let _ = Msg::decode(&payload[..cut]);
+            }
+        }
+        // Random garbage payloads.
+        for _ in 0..200 {
+            let n = rng.index(64);
+            let junk: Vec<u8> = (0..n).map(|_| rng.next_u64() as u8).collect();
+            if let Ok(back) = Msg::decode(&junk) {
+                let _ = back.encode();
+            }
+        }
+    }
+
+    #[test]
+    fn bad_tags_trailing_bytes_and_domains_rejected() {
+        assert!(matches!(Msg::decode(&[99]), Err(WireError::BadTag(99))));
+        assert!(Msg::decode(&[]).is_err());
+        // Trailing bytes after a well-formed body.
+        let mut payload = Msg::Shutdown.encode();
+        payload.push(0);
+        assert!(matches!(Msg::decode(&payload), Err(WireError::Codec(_))));
+        // Out-of-domain objective.
+        let mut a = Msg::Assign(Box::new(Assign {
+            worker: 0,
+            n_workers: 1,
+            seed: 1,
+            batch: 8,
+            objective: 0,
+            time_scale: 1.0,
+            consts: [0.0, 0.0, 1e-3],
+            dim: 2,
+            a: vec![1.0, 2.0],
+            y: vec![3.0],
+            global_rows: vec![0],
+        }))
+        .encode();
+        // objective byte sits after tag(1)+worker(4)+n(4)+seed(8)+batch(4).
+        a[21] = 7;
+        assert!(matches!(Msg::decode(&a), Err(WireError::BadValue("objective"))));
+    }
+
+    #[test]
+    fn mismatched_shard_shape_rejected() {
+        let msg = Msg::Assign(Box::new(Assign {
+            worker: 0,
+            n_workers: 1,
+            seed: 1,
+            batch: 8,
+            objective: 0,
+            time_scale: 1.0,
+            consts: [0.0, 0.0, 1e-3],
+            dim: 3, // but a has 2 values for 1 row
+            a: vec![1.0, 2.0],
+            y: vec![3.0],
+            global_rows: vec![0],
+        }));
+        assert!(matches!(Msg::decode(&msg.encode()), Err(WireError::BadValue("shard shape"))));
+    }
+
+    #[test]
+    fn oversize_length_prefix_rejected() {
+        let mut buf = Vec::new();
+        buf.extend_from_slice(&(MAX_FRAME_BYTES + 1).to_le_bytes());
+        buf.extend_from_slice(&[0; 16]);
+        assert!(matches!(read_frame(&mut buf.as_slice()), Err(WireError::Oversize(_))));
+    }
+
+    #[test]
+    fn max_length_frame_round_trips() {
+        // A report at the frame-size boundary region (not the full
+        // 1 GiB — that would dominate test time — but big enough to
+        // cross every internal length check's fast path).
+        let n = 300_000;
+        let msg = Msg::Report(Box::new(ReportMsg {
+            round: 3,
+            worker: 1,
+            q: 9,
+            busy_secs: 0.5,
+            x_k: (0..n).map(|i| i as f32).collect(),
+            x_bar: (0..n).map(|i| -(i as f32)).collect(),
+        }));
+        let mut buf = Vec::new();
+        write_frame(&mut buf, &msg).unwrap();
+        let (back, _) = read_frame(&mut buf.as_slice()).unwrap();
+        assert_eq!(back, msg);
+    }
+}

@@ -1,0 +1,244 @@
+//! The worker agent: one OS process serving SGD tasks to a remote
+//! master (`anytime-sgd worker --connect HOST:PORT`).
+//!
+//! Lifecycle: connect → `Hello` (version + capabilities) → receive
+//! `Assign` (shard rows, schedule constants, run seed, time scale)
+//! **once** → loop serving `Task`s until `Shutdown` or the master hangs
+//! up. Each task runs through the same planned-task executor as the
+//! threaded runtime ([`crate::coordinator::runtime`]): modeled per-step
+//! delays injected as scaled sleeps first (fixing the realized step
+//! count `q`), then the SGD numerics as one `run_steps` call over the
+//! seed-derived minibatch stream — which is what makes a dist run
+//! bit-identical to a simulated one whenever `q` matches.
+//!
+//! A side thread emits a `Heartbeat` frame every
+//! [`super::HEARTBEAT_INTERVAL`] so the master can distinguish "busy
+//! computing a long task" from "wedged or gone" — the worker's main
+//! thread may legitimately sleep through a whole epoch of injected
+//! straggling.
+
+use super::wire::{read_frame, write_frame, Assign, Msg, ReportMsg, WireError, PROTOCOL_VERSION};
+use crate::backend::{Consts, NativeWorker, Objective, WorkerCompute};
+use crate::coordinator::runtime::{execute_planned, PlannedTask};
+use crate::linalg::Matrix;
+use crate::partition::Shard;
+use crate::rng::Xoshiro256pp;
+use anyhow::{bail, Context, Result};
+use std::net::TcpStream;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Agent options (the CLI maps flags onto this).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct WorkerOpts {
+    /// Fault injection: drop the connection — no `Shutdown`, simulating
+    /// a crash — after serving this many tasks. Used by the
+    /// disconnect→permanent-straggler tests and CI churn scenarios.
+    pub die_after_tasks: Option<usize>,
+}
+
+/// How long [`run`] keeps retrying its initial connect — covers both
+/// orderings of the two-terminal quickstart (worker may be launched
+/// moments before the master binds its port).
+pub const CONNECT_RETRY_BUDGET: std::time::Duration = std::time::Duration::from_secs(30);
+
+/// Connect to a master, retrying while it comes up (covers both
+/// orderings of the two-terminal quickstart). The one retry policy —
+/// shared by the CLI agent and
+/// [`crate::net::master::connect_worker_thread`].
+pub fn connect_with_retry(addr: &str) -> Result<TcpStream> {
+    let deadline = std::time::Instant::now() + CONNECT_RETRY_BUDGET;
+    loop {
+        match TcpStream::connect(addr) {
+            Ok(s) => return Ok(s),
+            Err(e) if std::time::Instant::now() < deadline => {
+                let _ = e; // master not up yet: retry
+                std::thread::sleep(std::time::Duration::from_millis(100));
+            }
+            Err(e) => {
+                return Err(e).with_context(|| {
+                    format!("connect to master {addr} (retried for {CONNECT_RETRY_BUDGET:?})")
+                })
+            }
+        }
+    }
+}
+
+/// Connect to a master (with retries while it comes up) and serve
+/// until shutdown/disconnect.
+pub fn run(addr: &str, opts: WorkerOpts) -> Result<()> {
+    serve(connect_with_retry(addr)?, opts)
+}
+
+/// Serialize frame writes: the main thread's `Report`s and the side
+/// thread's `Heartbeat`s share one socket, and interleaving two frames
+/// would corrupt the stream.
+fn send(writer: &Mutex<TcpStream>, msg: &Msg) -> Result<u64, WireError> {
+    let mut w = writer.lock().expect("writer lock");
+    write_frame(&mut *w, msg)
+}
+
+/// Serve one already-connected master (the process-free entry point the
+/// loopback tests drive directly).
+pub fn serve(stream: TcpStream, opts: WorkerOpts) -> Result<()> {
+    stream.set_nodelay(true)?;
+    let mut reader = stream.try_clone().context("clone socket")?;
+    let writer = Arc::new(Mutex::new(stream));
+
+    // Handshake: register, then receive the shard + run constants.
+    let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    send(&writer, &Msg::Hello {
+        version: PROTOCOL_VERSION,
+        capabilities: format!("native;cores={cores}"),
+    })
+    .context("send Hello")?;
+    let assign = match read_frame(&mut reader).context("await Assign")? {
+        (Msg::Assign(a), _) => a,
+        (Msg::Shutdown, _) => return Ok(()), // master full / aborted
+        (other, _) => bail!("handshake: expected Assign, got {other:?}"),
+    };
+    let v = assign.worker as usize;
+    let (mut compute, consts, root, batch, time_scale) = build_state(&assign)?;
+    eprintln!(
+        "worker {v}: registered ({} rows x {} dim, batch {batch}, time_scale {time_scale})",
+        assign.y.len(),
+        assign.dim
+    );
+
+    // Liveness beacon.
+    let stop = Arc::new(AtomicBool::new(false));
+    let hb = {
+        let writer = writer.clone();
+        let stop = stop.clone();
+        std::thread::Builder::new()
+            .name(format!("heartbeat-{v}"))
+            .spawn(move || {
+                let mut nonce = 0u64;
+                while !stop.load(Ordering::Relaxed) {
+                    std::thread::sleep(super::HEARTBEAT_INTERVAL);
+                    nonce += 1;
+                    if send(&writer, &Msg::Heartbeat { nonce }).is_err() {
+                        // Master unreachable. On a half-open link (no
+                        // FIN/RST — master host power loss, partition)
+                        // the main loop's read would otherwise block
+                        // forever; shut the socket down so it wakes and
+                        // the process exits instead of leaking. (TCP
+                        // retransmission bounds how long the writes
+                        // keep buffering before this fires.)
+                        let _ = writer
+                            .lock()
+                            .expect("writer lock")
+                            .shutdown(std::net::Shutdown::Both);
+                        break;
+                    }
+                }
+            })
+            .expect("spawn heartbeat thread")
+    };
+
+    let result = serve_tasks(&mut reader, &writer, &mut compute, v, &root, consts, batch,
+        time_scale, opts);
+    stop.store(true, Ordering::Relaxed);
+    let _ = hb.join();
+    result
+}
+
+/// Rebuild the worker-side topology from an `Assign`: the shard matrix,
+/// compute engine, and the exact sampling root the master derives
+/// minibatch streams from.
+fn build_state(assign: &Assign) -> Result<(NativeWorker, Consts, Xoshiro256pp, usize, f64)> {
+    let d = assign.dim as usize;
+    let rows = assign.y.len();
+    let mut a = Matrix::zeros(rows, d);
+    for r in 0..rows {
+        a.row_mut(r).copy_from_slice(&assign.a[r * d..(r + 1) * d]);
+    }
+    let shard = Shard {
+        worker: assign.worker as usize,
+        a,
+        y: assign.y.clone(),
+        global_rows: assign.global_rows.clone(),
+    };
+    let objective = match assign.objective {
+        0 => Objective::LeastSquares,
+        1 => Objective::Logistic,
+        o => bail!("Assign: unknown objective {o}"), // unreachable post-decode
+    };
+    if !(assign.time_scale.is_finite() && assign.time_scale > 0.0) {
+        bail!("Assign: time_scale must be finite and > 0 (got {})", assign.time_scale);
+    }
+    let batch = assign.batch as usize;
+    let compute = NativeWorker::with_objective(Arc::new(shard), batch, objective);
+    let consts = Consts {
+        big_l: assign.consts[0],
+        sigma_over_d: assign.consts[1],
+        base_lr: assign.consts[2],
+    };
+    let root = Xoshiro256pp::seed_from_u64(assign.seed);
+    Ok((compute, consts, root, batch, assign.time_scale))
+}
+
+#[allow(clippy::too_many_arguments)]
+fn serve_tasks(
+    reader: &mut TcpStream,
+    writer: &Mutex<TcpStream>,
+    compute: &mut NativeWorker,
+    v: usize,
+    root: &Xoshiro256pp,
+    consts: Consts,
+    batch: usize,
+    time_scale: f64,
+    opts: WorkerOpts,
+) -> Result<()> {
+    if opts.die_after_tasks == Some(0) {
+        // Crash before serving anything: admission-then-immediate-loss.
+        return Ok(());
+    }
+    let mut served = 0usize;
+    loop {
+        match read_frame(reader) {
+            Ok((Msg::Task(t), _)) => {
+                // Busy/zero-step tasks legitimately carry an empty x0
+                // (no SGD chain runs); only step-running tasks must
+                // match the shard dimension.
+                if t.target > 0 && t.x0.len() != compute.dim() {
+                    bail!("task x0 dim {} != shard dim {}", t.x0.len(), compute.dim());
+                }
+                let planned = PlannedTask {
+                    x0: t.x0,
+                    t0: t.t0,
+                    label: t.stream_label,
+                    key: t.stream_key,
+                    rate: t.rate,
+                    target: t.target as usize,
+                    busy: t.busy,
+                    budget_secs: t.budget_secs,
+                };
+                let rep = execute_planned(compute, v, &planned, root, consts, batch, time_scale);
+                let reply = Msg::Report(Box::new(ReportMsg {
+                    round: t.round,
+                    worker: v as u32,
+                    q: rep.q as u64,
+                    busy_secs: rep.busy_secs,
+                    x_k: rep.x_k,
+                    x_bar: rep.x_bar,
+                }));
+                if send(writer, &reply).is_err() {
+                    return Ok(()); // master gone mid-reply
+                }
+                served += 1;
+                if opts.die_after_tasks == Some(served) {
+                    // Crash simulation: drop the socket with no goodbye.
+                    return Ok(());
+                }
+            }
+            Ok((Msg::Shutdown, _)) => return Ok(()),
+            Ok((Msg::Heartbeat { .. }, _)) => {} // tolerated, unused
+            Ok((other, _)) => bail!("unexpected message from master: {other:?}"),
+            // EOF / reset: the master is gone; exit cleanly rather than
+            // erroring — runs end by master drop in the spawn mode.
+            Err(WireError::Io(_)) => return Ok(()),
+            Err(e) => return Err(e.into()),
+        }
+    }
+}

@@ -1,0 +1,318 @@
+//! Binary payload encoding for the wire protocol — little-endian,
+//! bounds-checked, allocation-conscious.
+//!
+//! [`ByteWriter`] appends fixed-width scalars and length-prefixed
+//! strings/vectors to a byte buffer; [`ByteReader`] decodes the same,
+//! returning [`BytesError`] on truncation, length overflow, or invalid
+//! UTF-8 — it must *never* panic on corrupt input, because the bytes
+//! come off a TCP socket ([`crate::net::wire`]) and a malformed frame
+//! from a confused peer is an error to report, not a process abort.
+//!
+//! Floats travel as raw IEEE-754 bit patterns (`to_bits`/`from_bits`),
+//! so NaN payloads and ±inf round-trip bit-exactly — the dist ≡ sim
+//! reproducibility contract depends on this.
+
+use std::fmt;
+
+/// Decode failure: what was expected and where.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct BytesError {
+    /// What the reader was trying to decode.
+    pub what: &'static str,
+    /// Byte offset at which the failure occurred.
+    pub at: usize,
+}
+
+impl fmt::Display for BytesError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "byte decode error: {} at offset {}", self.what, self.at)
+    }
+}
+
+impl std::error::Error for BytesError {}
+
+/// Append-only encoder over an owned buffer.
+#[derive(Debug, Default)]
+pub struct ByteWriter {
+    buf: Vec<u8>,
+}
+
+impl ByteWriter {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn with_capacity(n: usize) -> Self {
+        Self { buf: Vec::with_capacity(n) }
+    }
+
+    /// Finish and take the encoded bytes.
+    pub fn into_bytes(self) -> Vec<u8> {
+        self.buf
+    }
+
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    pub fn put_u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+
+    pub fn put_u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn put_u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn put_f32(&mut self, v: f32) {
+        self.put_u32(v.to_bits());
+    }
+
+    pub fn put_f64(&mut self, v: f64) {
+        self.put_u64(v.to_bits());
+    }
+
+    /// Length-prefixed (u32) UTF-8 string.
+    pub fn put_str(&mut self, s: &str) {
+        self.put_u32(s.len() as u32);
+        self.buf.extend_from_slice(s.as_bytes());
+    }
+
+    /// Length-prefixed (u32 element count) f32 vector.
+    pub fn put_f32s(&mut self, xs: &[f32]) {
+        self.put_u32(xs.len() as u32);
+        for &x in xs {
+            self.put_f32(x);
+        }
+    }
+
+    /// Length-prefixed (u32 element count) u32 vector.
+    pub fn put_u32s(&mut self, xs: &[u32]) {
+        self.put_u32(xs.len() as u32);
+        for &x in xs {
+            self.put_u32(x);
+        }
+    }
+}
+
+/// Bounds-checked decoder over a byte slice.
+pub struct ByteReader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> ByteReader<'a> {
+    pub fn new(buf: &'a [u8]) -> Self {
+        Self { buf, pos: 0 }
+    }
+
+    /// Bytes not yet consumed.
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    /// Current byte offset (for error reporting).
+    pub fn pos(&self) -> usize {
+        self.pos
+    }
+
+    /// Error if any bytes are left over — a well-formed message consumes
+    /// its payload exactly.
+    pub fn finish(&self) -> Result<(), BytesError> {
+        if self.remaining() == 0 {
+            Ok(())
+        } else {
+            Err(BytesError { what: "trailing bytes", at: self.pos })
+        }
+    }
+
+    fn take(&mut self, n: usize, what: &'static str) -> Result<&'a [u8], BytesError> {
+        if self.remaining() < n {
+            return Err(BytesError { what, at: self.pos });
+        }
+        let out = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(out)
+    }
+
+    pub fn get_u8(&mut self) -> Result<u8, BytesError> {
+        Ok(self.take(1, "u8")?[0])
+    }
+
+    pub fn get_u32(&mut self) -> Result<u32, BytesError> {
+        let b = self.take(4, "u32")?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    pub fn get_u64(&mut self) -> Result<u64, BytesError> {
+        let b = self.take(8, "u64")?;
+        Ok(u64::from_le_bytes([b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7]]))
+    }
+
+    pub fn get_f32(&mut self) -> Result<f32, BytesError> {
+        Ok(f32::from_bits(self.get_u32()?))
+    }
+
+    pub fn get_f64(&mut self) -> Result<f64, BytesError> {
+        Ok(f64::from_bits(self.get_u64()?))
+    }
+
+    /// Length-prefixed element count, validated against the bytes that
+    /// are actually present (`elem_size` bytes per element) — a corrupt
+    /// length can therefore never trigger a huge allocation.
+    fn get_len(&mut self, elem_size: usize, what: &'static str) -> Result<usize, BytesError> {
+        let at = self.pos;
+        let n = self.get_u32()? as usize;
+        if n.checked_mul(elem_size).map_or(true, |bytes| bytes > self.remaining()) {
+            return Err(BytesError { what, at });
+        }
+        Ok(n)
+    }
+
+    /// Length-prefixed UTF-8 string.
+    pub fn get_str(&mut self) -> Result<String, BytesError> {
+        let at = self.pos;
+        let n = self.get_len(1, "str length")?;
+        let bytes = self.take(n, "str bytes")?;
+        String::from_utf8(bytes.to_vec()).map_err(|_| BytesError { what: "str utf-8", at })
+    }
+
+    /// Length-prefixed f32 vector.
+    pub fn get_f32s(&mut self) -> Result<Vec<f32>, BytesError> {
+        let n = self.get_len(4, "f32 vec length")?;
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            out.push(self.get_f32()?);
+        }
+        Ok(out)
+    }
+
+    /// Length-prefixed u32 vector.
+    pub fn get_u32s(&mut self) -> Result<Vec<u32>, BytesError> {
+        let n = self.get_len(4, "u32 vec length")?;
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            out.push(self.get_u32()?);
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scalars_round_trip() {
+        let mut w = ByteWriter::new();
+        w.put_u8(7);
+        w.put_u32(0xDEAD_BEEF);
+        w.put_u64(u64::MAX);
+        w.put_f32(-1.5);
+        w.put_f64(std::f64::consts::PI);
+        let bytes = w.into_bytes();
+        let mut r = ByteReader::new(&bytes);
+        assert_eq!(r.get_u8().unwrap(), 7);
+        assert_eq!(r.get_u32().unwrap(), 0xDEAD_BEEF);
+        assert_eq!(r.get_u64().unwrap(), u64::MAX);
+        assert_eq!(r.get_f32().unwrap(), -1.5);
+        assert_eq!(r.get_f64().unwrap(), std::f64::consts::PI);
+        r.finish().unwrap();
+    }
+
+    #[test]
+    fn specials_round_trip_bit_exactly() {
+        // NaN payload bits must survive: raw bit-pattern transport.
+        let weird_nan = f64::from_bits(0x7FF8_0000_DEAD_BEEF);
+        let mut w = ByteWriter::new();
+        w.put_f64(weird_nan);
+        w.put_f64(f64::INFINITY);
+        w.put_f64(f64::NEG_INFINITY);
+        w.put_f32(f32::NAN);
+        w.put_f64(-0.0);
+        let bytes = w.into_bytes();
+        let mut r = ByteReader::new(&bytes);
+        assert_eq!(r.get_f64().unwrap().to_bits(), weird_nan.to_bits());
+        assert_eq!(r.get_f64().unwrap(), f64::INFINITY);
+        assert_eq!(r.get_f64().unwrap(), f64::NEG_INFINITY);
+        assert!(r.get_f32().unwrap().is_nan());
+        assert_eq!(r.get_f64().unwrap().to_bits(), (-0.0f64).to_bits());
+    }
+
+    #[test]
+    fn strings_and_vectors_round_trip() {
+        let mut w = ByteWriter::new();
+        w.put_str("minibatch");
+        w.put_str(""); // empty is legal
+        w.put_f32s(&[1.0, f32::NAN, f32::INFINITY]);
+        w.put_f32s(&[]);
+        w.put_u32s(&[0, u32::MAX]);
+        let bytes = w.into_bytes();
+        let mut r = ByteReader::new(&bytes);
+        assert_eq!(r.get_str().unwrap(), "minibatch");
+        assert_eq!(r.get_str().unwrap(), "");
+        let xs = r.get_f32s().unwrap();
+        assert_eq!(xs.len(), 3);
+        assert_eq!(xs[0], 1.0);
+        assert!(xs[1].is_nan());
+        assert_eq!(r.get_f32s().unwrap(), Vec::<f32>::new());
+        assert_eq!(r.get_u32s().unwrap(), vec![0, u32::MAX]);
+        r.finish().unwrap();
+    }
+
+    #[test]
+    fn truncation_errors_instead_of_panicking() {
+        let mut w = ByteWriter::new();
+        w.put_f32s(&[1.0, 2.0, 3.0]);
+        let bytes = w.into_bytes();
+        // Every proper prefix must decode to an error, never panic.
+        for cut in 0..bytes.len() {
+            let mut r = ByteReader::new(&bytes[..cut]);
+            assert!(r.get_f32s().is_err(), "prefix of {cut} bytes must fail");
+        }
+    }
+
+    #[test]
+    fn corrupt_length_is_rejected_without_allocation() {
+        // A vector header claiming u32::MAX elements against a 4-byte
+        // body: the reader must reject it up front (the checked multiply
+        // also guards the overflowing case).
+        let mut w = ByteWriter::new();
+        w.put_u32(u32::MAX);
+        w.put_u32(42);
+        let bytes = w.into_bytes();
+        assert!(ByteReader::new(&bytes).get_f32s().is_err());
+        assert!(ByteReader::new(&bytes).get_str().is_err());
+    }
+
+    #[test]
+    fn invalid_utf8_is_an_error() {
+        let mut w = ByteWriter::new();
+        w.put_u32(2);
+        w.put_u8(0xFF);
+        w.put_u8(0xFE);
+        let bytes = w.into_bytes();
+        let err = ByteReader::new(&bytes).get_str().unwrap_err();
+        assert_eq!(err.what, "str utf-8");
+    }
+
+    #[test]
+    fn finish_rejects_trailing_bytes() {
+        let mut w = ByteWriter::new();
+        w.put_u8(1);
+        w.put_u8(2);
+        let bytes = w.into_bytes();
+        let mut r = ByteReader::new(&bytes);
+        r.get_u8().unwrap();
+        assert!(r.finish().is_err());
+        r.get_u8().unwrap();
+        r.finish().unwrap();
+    }
+}

@@ -1,12 +1,15 @@
-//! Minimal JSON — parser, writer, and typed accessors.
+//! Minimal JSON — parser, writer, and typed accessors — plus the
+//! binary payload codec the wire protocol uses ([`bytes`]).
 //!
 //! `serde`/`serde_json` are not available offline, so this substrate
 //! covers what the repo needs: the AOT `artifacts/manifest.json`, run
 //! configs, and metric/figure dumps. It supports the full JSON grammar
 //! (objects, arrays, strings with escapes, numbers, bools, null) with
 //! precise error positions; it does not aim for serde's zero-copy or
-//! derive ergonomics.
+//! derive ergonomics. The [`bytes`] submodule is the little-endian
+//! bounds-checked encoder/decoder that `net::wire` frames are built on.
 
+pub mod bytes;
 mod parse;
 mod write;
 

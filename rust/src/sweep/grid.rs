@@ -53,7 +53,8 @@ pub struct Grid {
     /// Compute backends (empty = base).
     pub backends: Vec<Backend>,
     /// Execution runtimes (empty = base) — sweep the same grid point
-    /// under the simulated and the real threaded runtime.
+    /// under the simulated, real-threaded, and/or distributed (TCP
+    /// worker processes) runtime.
     pub runtimes: Vec<RuntimeSpec>,
     /// Root seeds (never empty).
     pub seeds: Vec<u64>,
@@ -191,17 +192,17 @@ impl Grid {
         let tcs = or_base(&self.t_c, self.base.t_c);
         let backends = or_base(&self.backends, self.base.backend);
         let runtimes = or_base(&self.runtimes, self.base.runtime);
-        // The runtime × backend product has one intrinsically-invalid
-        // combination (real × xla: PJRT is thread-pinned). Reject the
-        // grid up front with the remedy, instead of erroring on the
-        // first expanded cell.
+        // The runtime × backend product has intrinsically-invalid
+        // combinations (real/dist × xla: PJRT is thread-pinned and has
+        // no remote story). Reject the grid up front with the remedy,
+        // instead of erroring on the first expanded cell.
         if backends.contains(&Backend::Xla)
-            && runtimes.iter().any(|r| matches!(r, RuntimeSpec::Real { .. }))
+            && runtimes.iter().any(|r| !matches!(r, RuntimeSpec::Sim))
         {
             bail!(
-                "grid mixes backend `xla` with runtime `real` (PJRT is thread-pinned) — \
-                 split into separate sweeps, e.g. `--backend xla` and \
-                 `--backend native --runtime real`"
+                "grid mixes backend `xla` with a real/dist runtime (PJRT is \
+                 thread-pinned) — split into separate sweeps, e.g. `--backend xla` \
+                 and `--backend native --runtime real,dist`"
             );
         }
 
@@ -533,6 +534,38 @@ mod tests {
         let g = Grid::from_json(&v).unwrap();
         assert_eq!(g.runtimes, vec![RuntimeSpec::Sim, RuntimeSpec::Real { time_scale: 1e-4 }]);
         assert!(Grid::from_json(&parse(r#"{"runtimes": ["warp"]}"#).unwrap()).is_err());
+    }
+
+    #[test]
+    fn dist_runtime_axis_expands_and_rejects_xla() {
+        // dist is a first-class runtime axis value (expansion only —
+        // running such cells spawns loopback worker processes).
+        let g = Grid::new(tiny_base())
+            .scenarios(["ideal"])
+            .methods(["anytime"])
+            .runtimes([RuntimeSpec::Sim, RuntimeSpec::Dist { port: 0, spawn: true, time_scale: 1e-4 }]);
+        let cells = g.expand().unwrap();
+        assert_eq!(cells.len(), 2);
+        assert!(cells.iter().any(|c| c.group.ends_with("/rt-dist")));
+        let v = parse(
+            r#"{"scenarios": ["ideal"], "methods": ["anytime"],
+                "runtimes": ["sim", "dist"], "time_scale": 1e-4}"#,
+        )
+        .unwrap();
+        let g = Grid::from_json(&v).unwrap();
+        assert_eq!(
+            g.runtimes,
+            vec![RuntimeSpec::Sim, RuntimeSpec::Dist { port: 0, spawn: true, time_scale: 1e-4 }]
+        );
+        // xla × dist is as impossible as xla × real.
+        let err = Grid::new(tiny_base())
+            .scenarios(["ideal"])
+            .backends([Backend::Xla])
+            .runtimes([RuntimeSpec::Dist { port: 0, spawn: true, time_scale: 1e-4 }])
+            .expand()
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("thread-pinned"), "{err}");
     }
 
     #[test]

@@ -90,13 +90,14 @@ pub fn cli_command() -> Command {
             "runtime",
             FlagKind::Str,
             None,
-            "comma-separated execution runtimes (sim|real) — sweep the runtime axis",
+            "comma-separated execution runtimes (sim|real|dist) — sweep the runtime \
+             axis (dist cells spawn loopback worker processes per cell)",
         )
         .flag(
             "time-scale",
             FlagKind::Float,
             Some("0.001"),
-            "wall-clock compression for `real` runtime cells",
+            "wall-clock compression for `real`/`dist` runtime cells",
         )
         .flag("epochs", FlagKind::Int, None, "override epochs per cell")
         .flag("threads", FlagKind::Int, Some("0"), "worker threads (0 = all cores)")
