@@ -1,0 +1,127 @@
+//! Objective-layer microbenchmarks (benchkit; `cargo bench --bench
+//! bench_objective`).
+//!
+//! Guards the zero-allocation gradient path against regression: the
+//! fused `linalg::sgd_update` kernel, the per-objective coefficient
+//! pass, and the full `run_steps` chain for every shipped objective.
+//! `BENCHLINE` rows feed EXPERIMENTS.md §Perf.
+
+// Crate-posture lint gate (see lib.rs): correctness/suspicious/perf
+// lints stay load-bearing under CI's `-D warnings`; the style/
+// complexity groups are settled here rather than per-site.
+#![allow(clippy::style, clippy::complexity)]
+
+use anytime_sgd::backend::{Consts, NativeWorker, WorkerCompute};
+use anytime_sgd::benchkit::{black_box, Bench};
+use anytime_sgd::data::{synthetic_linreg, synthetic_logreg, synthetic_multiclass};
+use anytime_sgd::linalg::sgd_update;
+use anytime_sgd::objective::{GradBuf, LinReg, LogReg, Objective, Softmax};
+use anytime_sgd::partition::{materialize_shards, Assignment, Shard};
+use anytime_sgd::rng::Xoshiro256pp;
+use std::sync::Arc;
+
+const M: usize = 20_000;
+const D: usize = 200;
+const BATCH: usize = 32;
+const STEPS: usize = 64;
+
+fn one_shard(ds: &anytime_sgd::data::Dataset) -> Arc<Shard> {
+    let shards = materialize_shards(ds, &Assignment::new(1, 0));
+    Arc::new(shards.into_iter().next().unwrap())
+}
+
+fn main() {
+    let mut b = Bench::new();
+    let mut rng = Xoshiro256pp::seed_from_u64(1);
+
+    let lin = synthetic_linreg(M, D, 1e-3, 5);
+    let log = synthetic_logreg(M, D, 5);
+    let multi = synthetic_multiclass(M, D, 4, 5);
+
+    // ---- fused kernel: gradient-accumulate + axpy, no materialization ----
+    for classes in [1usize, 4] {
+        let ds = if classes == 1 { &lin } else { &multi };
+        let rows: Vec<u32> = (0..BATCH).map(|_| rng.index(M) as u32).collect();
+        let coeff: Vec<f32> = (0..BATCH * classes).map(|i| (i as f32).sin()).collect();
+        let mut x = vec![0.01f32; classes * D];
+        b.run_with_throughput(
+            &format!("objective/sgd_update k={classes} b={BATCH} d={D}"),
+            (2 * BATCH * classes * D) as f64,
+            || {
+                sgd_update(
+                    black_box(&ds.a),
+                    black_box(&rows),
+                    black_box(&coeff),
+                    classes,
+                    -1e-4,
+                    &mut x,
+                );
+                x[0]
+            },
+        );
+    }
+
+    // ---- per-objective coefficient pass (the "residual layer") -----------
+    {
+        let rows: Vec<u32> = (0..BATCH).map(|_| rng.index(M) as u32).collect();
+        let x1 = vec![0.01f32; D];
+        let mut buf1 = GradBuf::new(BATCH, 1);
+        b.run_with_throughput(
+            &format!("objective/loss_grad linreg b={BATCH} d={D}"),
+            (2 * BATCH * D) as f64,
+            || {
+                LinReg.loss_grad_into(black_box(&lin.a), &lin.y, black_box(&x1), &rows, &mut buf1);
+                buf1.coeff[0]
+            },
+        );
+        b.run_with_throughput(
+            &format!("objective/loss_grad logreg b={BATCH} d={D}"),
+            (2 * BATCH * D) as f64,
+            || {
+                LogReg.loss_grad_into(black_box(&log.a), &log.y, black_box(&x1), &rows, &mut buf1);
+                buf1.coeff[0]
+            },
+        );
+        let sm = Softmax::new(4);
+        let x4 = vec![0.01f32; 4 * D];
+        let mut buf4 = GradBuf::new(BATCH, 4);
+        b.run_with_throughput(
+            &format!("objective/loss_grad softmax k=4 b={BATCH} d={D}"),
+            (2 * BATCH * 4 * D) as f64,
+            || {
+                sm.loss_grad_into(black_box(&multi.a), &multi.y, black_box(&x4), &rows, &mut buf4);
+                buf4.coeff[0]
+            },
+        );
+    }
+
+    // ---- full run_steps chain per objective (the worker hot path) --------
+    {
+        let idx: Vec<u32> = (0..STEPS * BATCH).map(|_| rng.index(M) as u32).collect();
+        let consts = Consts::constant(1e-4);
+        let flops_scalar = (2 * 2 * STEPS * BATCH * D) as f64; // resid + update passes
+
+        let mut w = NativeWorker::with_objective(one_shard(&lin), BATCH, LinReg);
+        let x0 = vec![0.0f32; D];
+        b.run_with_throughput(
+            &format!("objective/run_steps linreg q={STEPS} b={BATCH} d={D}"),
+            flops_scalar,
+            || black_box(w.run_steps(black_box(&x0), &idx, 0.0, consts)).x_k[0],
+        );
+
+        let mut w = NativeWorker::with_objective(one_shard(&log), BATCH, LogReg);
+        b.run_with_throughput(
+            &format!("objective/run_steps logreg q={STEPS} b={BATCH} d={D}"),
+            flops_scalar,
+            || black_box(w.run_steps(black_box(&x0), &idx, 0.0, consts)).x_k[0],
+        );
+
+        let mut w = NativeWorker::with_objective(one_shard(&multi), BATCH, Softmax::new(4));
+        let x0 = vec![0.0f32; 4 * D];
+        b.run_with_throughput(
+            &format!("objective/run_steps softmax k=4 q={STEPS} b={BATCH} d={D}"),
+            4.0 * flops_scalar,
+            || black_box(w.run_steps(black_box(&x0), &idx, 0.0, consts)).x_k[0],
+        );
+    }
+}

@@ -58,17 +58,6 @@ impl Consts {
     }
 }
 
-/// The per-sample objective (paper eq. 1's canonical instances).
-#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
-pub enum Objective {
-    /// Least squares: f = (a·x − y)², grad = 2a(a·x − y).
-    #[default]
-    LeastSquares,
-    /// Logistic (y ∈ {0,1}): f = softplus(a·x) − y(a·x),
-    /// grad = a(σ(a·x) − y).
-    Logistic,
-}
-
 /// Output of a K-step block.
 #[derive(Clone, Debug)]
 pub struct StepOut {
@@ -93,7 +82,8 @@ pub trait WorkerCompute {
     /// Shard row count (the sampling universe `m(S+1)/N`).
     fn shard_rows(&self) -> usize;
 
-    /// Parameter dimension.
+    /// Parameter dimension: `classes · d` for the bound objective
+    /// (`d` for the scalar objectives, `k·d` for softmax).
     fn dim(&self) -> usize;
 
     /// Run `idx.len() / batch` SGD steps starting from `x`, using the
@@ -103,11 +93,20 @@ pub trait WorkerCompute {
 }
 
 /// Master-side evaluation: cost + the paper's normalized error.
+///
+/// Semantics are per-objective (DESIGN.md §7): `cost` is eq. 1's sum —
+/// squared residuals for least squares, the NLL for the cross-entropy
+/// objectives; `norm_err` is the prediction distance to the reference
+/// predictions, normalized by the reference energy
+/// (`‖Ax − Ax*‖/‖Ax*‖`; `‖Z − Z*‖/‖Z*‖` over k-class logits for
+/// softmax). When the reference energy is zero (all-zero targets) the
+/// error is reported *absolute* instead of dividing by zero.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct EvalOut {
-    /// `F(x) = Σ (a_k·x − y_k)²` (eq. 1).
+    /// `F(x)` (eq. 1): Σ squared residuals, or Σ NLL.
     pub cost: f64,
-    /// `‖A x − A x*‖ / ‖A x*‖` — the figures' y-axis.
+    /// Normalized (or, at zero reference energy, absolute) prediction
+    /// error — the figures' y-axis.
     pub norm_err: f64,
 }
 

@@ -2,51 +2,54 @@
 //!
 //! Numerically mirrors the L1 Pallas kernel (f32 arithmetic, same update
 //! rule), so figures produced with either backend agree to float noise.
-//! The hot loop is allocation-free: gather/residual scratch buffers are
-//! owned by the worker and reused across epochs (§Perf L3 target).
+//! The hot loop is allocation-free and *objective-generic*:
+//! [`NativeWorker<O>`] drives a preallocated
+//! [`crate::objective::GradBuf`] through the objective's factored
+//! per-sample gradient and the fused [`crate::linalg::sgd_update`]
+//! kernel — one scratch buffer reused across all steps of a `run_steps`
+//! call (§Perf L3 target; `benches/bench_objective.rs`). For the
+//! `linreg` objective the op sequence is bit-identical to the
+//! pre-refactor hard-wired loop (`rust/tests/objective_equivalence.rs`).
 
-use super::{Consts, EvalOut, Evaluator, Objective, StepOut, WorkerCompute};
-use crate::linalg::{axpy, dot_f32, Matrix};
+use super::{Consts, EvalOut, Evaluator, StepOut, WorkerCompute};
+use crate::linalg::Matrix;
+use crate::objective::{DynObjective, GradBuf, LinReg, Objective, ObjectiveSpec};
 use crate::partition::Shard;
 use std::sync::Arc;
 
-/// Native per-worker compute bound to a shard.
-pub struct NativeWorker {
+/// Native per-worker compute bound to a shard, generic over the
+/// training objective (defaulting to least squares). Runtimes that
+/// pick the objective at run time use `NativeWorker<DynObjective>`.
+pub struct NativeWorker<O: Objective = LinReg> {
     shard: Arc<Shard>,
     batch: usize,
-    objective: Objective,
+    objective: O,
     // Scratch (reused, never reallocated in the hot loop):
     x: Vec<f32>,
     xsum: Vec<f32>,
-    resid: Vec<f32>,
+    grad: GradBuf,
 }
 
-impl NativeWorker {
+impl NativeWorker<LinReg> {
+    /// Least-squares worker (the historical default).
     pub fn new(shard: Arc<Shard>, batch: usize) -> Self {
-        Self::with_objective(shard, batch, Objective::LeastSquares)
+        Self::with_objective(shard, batch, LinReg)
     }
+}
 
-    /// Select the per-sample objective (least squares / logistic).
-    pub fn with_objective(shard: Arc<Shard>, batch: usize, objective: Objective) -> Self {
+impl<O: Objective> NativeWorker<O> {
+    /// Bind a shard to an objective. The parameter dimension becomes
+    /// `objective.param_dim(d)` (class-major for multi-logit
+    /// objectives).
+    pub fn with_objective(shard: Arc<Shard>, batch: usize, objective: O) -> Self {
         assert!(batch >= 1);
-        let d = shard.a.cols();
-        Self {
-            shard,
-            batch,
-            objective,
-            x: vec![0.0; d],
-            xsum: vec![0.0; d],
-            resid: vec![0.0; batch],
-        }
+        let pd = objective.param_dim(shard.a.cols());
+        let grad = GradBuf::new(batch, objective.classes());
+        Self { shard, batch, objective, x: vec![0.0; pd], xsum: vec![0.0; pd], grad }
     }
 }
 
-#[inline]
-fn sigmoid(z: f32) -> f32 {
-    1.0 / (1.0 + (-z).exp())
-}
-
-impl WorkerCompute for NativeWorker {
+impl<O: Objective> WorkerCompute for NativeWorker<O> {
     fn batch(&self) -> usize {
         self.batch
     }
@@ -56,12 +59,12 @@ impl WorkerCompute for NativeWorker {
     }
 
     fn dim(&self) -> usize {
-        self.shard.a.cols()
+        self.objective.param_dim(self.shard.a.cols())
     }
 
     fn run_steps(&mut self, x: &[f32], idx: &[u32], t0: f32, consts: Consts) -> StepOut {
-        let d = self.dim();
-        assert_eq!(x.len(), d);
+        let pd = self.dim();
+        assert_eq!(x.len(), pd);
         assert_eq!(idx.len() % self.batch, 0, "idx must be k*batch");
         let k = idx.len() / self.batch;
         let a: &Matrix = &self.shard.a;
@@ -70,28 +73,16 @@ impl WorkerCompute for NativeWorker {
         self.x.copy_from_slice(x);
         self.xsum.fill(0.0);
 
+        let grad_scale = self.objective.grad_scale();
+        let classes = self.objective.classes();
         for step in 0..k {
             let rows = &idx[step * self.batch..(step + 1) * self.batch];
-            // Per-sample residual: least squares r = a·x − y (grad scale
-            // 2/b), logistic r = σ(a·x) − y (grad scale 1/b).
-            for (i, &r) in rows.iter().enumerate() {
-                let r = r as usize;
-                debug_assert!(r < a.rows(), "row index {r} out of shard");
-                let z = dot_f32(a.row(r), &self.x);
-                self.resid[i] = match self.objective {
-                    Objective::LeastSquares => z - y[r],
-                    Objective::Logistic => sigmoid(z) - y[r],
-                };
-            }
+            // Factored per-sample gradient (the "residual layer") into
+            // the reused buffer, then the fused accumulate+axpy update.
+            self.objective.loss_grad_into(a, y, &self.x, rows, &mut self.grad);
             let lr = consts.lr(t0 + step as f32);
-            let grad_scale = match self.objective {
-                Objective::LeastSquares => 2.0,
-                Objective::Logistic => 1.0,
-            };
             let scale = -lr * grad_scale / self.batch as f32;
-            for (i, &r) in rows.iter().enumerate() {
-                axpy(scale * self.resid[i], a.row(r as usize), &mut self.x);
-            }
+            crate::linalg::sgd_update(a, rows, &self.grad.coeff, classes, scale, &mut self.x);
             // Running sum of iterates x_1..x_k.
             for (s, &xv) in self.xsum.iter_mut().zip(self.x.iter()) {
                 *s += xv;
@@ -107,40 +98,44 @@ impl WorkerCompute for NativeWorker {
     }
 }
 
-/// Native full-dataset evaluator.
+/// Native full-dataset evaluator, objective-generic.
 ///
-/// Precomputes `A x*` (or, for real data, `A x_ref` where `x_ref` is the
-/// least-squares solution proxy) and `‖A x*‖` once; each eval is one
-/// gemv + two reductions, parallelized over row chunks.
+/// Precomputes the reference predictions' energy once; each eval is one
+/// pass over the rows (per-objective cost + prediction distance via
+/// [`crate::objective::Objective::eval_chunk`]), parallelized over row
+/// chunks.
 pub struct NativeEvaluator {
     a: Arc<Matrix>,
     y: Arc<Vec<f32>>,
-    ax_star: Vec<f32>,
+    /// Reference predictions (`classes` values per row, sample-major).
+    ref_pred: Vec<f32>,
+    /// ‖ref_pred‖ — the metric's denominator (0 ⇒ absolute error).
     den: f64,
     threads: usize,
-    objective: Objective,
+    objective: DynObjective,
 }
 
 impl NativeEvaluator {
-    /// `ax_star` is the reference prediction vector (A x*).
+    /// Least-squares evaluator over reference predictions `A x*`.
     pub fn new(a: Arc<Matrix>, y: Arc<Vec<f32>>, ax_star: Vec<f32>) -> Self {
-        Self::with_objective(a, y, ax_star, Objective::LeastSquares)
+        Self::with_objective(a, y, ax_star, crate::objective::build(&ObjectiveSpec::Linreg))
     }
 
-    /// Objective-aware constructor (cost = NLL under `Logistic`).
+    /// Objective-aware constructor; `ref_pred` must carry
+    /// `objective.classes()` values per row (sample-major).
     pub fn with_objective(
         a: Arc<Matrix>,
         y: Arc<Vec<f32>>,
-        ax_star: Vec<f32>,
-        objective: Objective,
+        ref_pred: Vec<f32>,
+        objective: DynObjective,
     ) -> Self {
         assert_eq!(a.rows(), y.len());
-        assert_eq!(a.rows(), ax_star.len());
-        let den = crate::linalg::norm2(&ax_star);
+        assert_eq!(a.rows() * objective.classes(), ref_pred.len());
+        let den = crate::linalg::norm2(&ref_pred);
         // Respects the constructing thread's nested-parallelism cap (see
         // `exec::inner_threads`) so sweep cells don't oversubscribe cores.
         let threads = crate::exec::inner_threads();
-        Self { a, y, ax_star, den, threads, objective }
+        Self { a, y, ref_pred, den, threads, objective }
     }
 }
 
@@ -153,36 +148,22 @@ impl Evaluator for NativeEvaluator {
         let parts: Vec<(f64, f64)> = crate::exec::scoped_map(chunks, self.threads, |c| {
             let lo = c * CHUNK;
             let hi = ((c + 1) * CHUNK).min(m);
-            let (mut cost, mut num) = (0.0f64, 0.0f64);
-            for i in lo..hi {
-                let pred = dot_f32(self.a.row(i), x) as f64;
-                cost += match self.objective {
-                    Objective::LeastSquares => {
-                        let dc = pred - self.y[i] as f64;
-                        dc * dc
-                    }
-                    Objective::Logistic => {
-                        // Stable softplus(z) − y z.
-                        let z = pred;
-                        let sp = if z > 30.0 { z } else { (1.0 + z.exp()).ln() };
-                        sp - self.y[i] as f64 * z
-                    }
-                };
-                let de = pred - self.ax_star[i] as f64;
-                num += de * de;
-            }
-            (cost, num)
+            self.objective.eval_chunk(&self.a, &self.y, &self.ref_pred, x, lo, hi)
         });
         let cost: f64 = parts.iter().map(|p| p.0).sum();
         let num: f64 = parts.iter().map(|p| p.1).sum();
-        EvalOut { cost, norm_err: num.sqrt() / self.den.max(1e-300) }
+        // Zero reference energy (all-zero targets) ⇒ report the
+        // absolute error — dividing would blow up or NaN.
+        let norm_err = if self.den > 0.0 { num.sqrt() / self.den } else { num.sqrt() };
+        EvalOut { cost, norm_err }
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::data::synthetic_linreg;
+    use crate::data::{synthetic_linreg, synthetic_multiclass};
+    use crate::objective::Softmax;
     use crate::partition::{materialize_shards, Assignment};
     use crate::rng::Xoshiro256pp;
 
@@ -267,5 +248,48 @@ mod tests {
         let at_zero = ev.eval(&vec![0.0; 10]);
         assert!((at_zero.norm_err - 1.0).abs() < 1e-5, "x=0 → err 1.0");
         assert!(at_zero.cost > 1.0);
+    }
+
+    #[test]
+    fn evaluator_zero_reference_reports_absolute_error_not_nan() {
+        // All-zero targets ⇒ x* = 0 ⇒ ‖Ax*‖ = 0: the metric must fall
+        // back to the absolute prediction error ‖Ax‖ instead of NaN (or
+        // an astronomically scaled division).
+        let mut ds = synthetic_linreg(128, 6, 0.0, 11);
+        ds.y.fill(0.0);
+        ds.x_star = Some(vec![0.0; 6]);
+        let ax_star = vec![0.0f32; 128];
+        let mut ev =
+            NativeEvaluator::new(Arc::new(ds.a.clone()), Arc::new(ds.y.clone()), ax_star);
+        let at_zero = ev.eval(&vec![0.0; 6]);
+        assert_eq!(at_zero.norm_err, 0.0, "zero model on zero reference is exact");
+        let x = vec![0.5f32; 6];
+        let got = ev.eval(&x);
+        assert!(got.norm_err.is_finite(), "must not be NaN/inf: {}", got.norm_err);
+        // Absolute error = ‖Ax − 0‖.
+        let mut ax = vec![0.0f32; 128];
+        ds.predict_into(&x, &mut ax);
+        let want = crate::linalg::norm2(&ax);
+        assert!((got.norm_err - want).abs() < 1e-9 * want.max(1.0), "{} vs {want}", got.norm_err);
+    }
+
+    #[test]
+    fn softmax_worker_runs_and_descends() {
+        let ds = synthetic_multiclass(300, 8, 3, 13);
+        let shards = materialize_shards(&ds, &Assignment::new(1, 0));
+        let shard = Arc::new(shards.into_iter().next().unwrap());
+        let obj = Softmax::new(3);
+        let mut w = NativeWorker::with_objective(shard, 4, obj);
+        assert_eq!(w.dim(), 24, "param dim = classes * d");
+        let x0 = vec![0.0f32; 24];
+        let mut rng = Xoshiro256pp::seed_from_u64(3);
+        let idx: Vec<u32> = (0..4 * 100).map(|_| rng.index(300) as u32).collect();
+        let out = w.run_steps(&x0, &idx, 0.0, Consts::constant(0.1));
+        assert_eq!(out.x_k.len(), 24);
+        // NLL must drop below the chance level m·ln k.
+        let (c0, _) = obj.eval_chunk(&ds.a, &ds.y, &vec![0.0; 900], &x0, 0, 300);
+        let (c1, _) = obj.eval_chunk(&ds.a, &ds.y, &vec![0.0; 900], &out.x_k, 0, 300);
+        assert!((c0 - 300.0 * (3.0f64).ln()).abs() < 1e-6);
+        assert!(c1 < 0.8 * c0, "softmax SGD must descend: {c0} -> {c1}");
     }
 }

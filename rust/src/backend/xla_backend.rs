@@ -8,7 +8,8 @@
 //! from the available K ∈ {32, 8, 1} block artifacts — see DESIGN.md
 //! §Variable work under static shapes (perf: 3.7x over {32, 1}).
 
-use super::{Consts, EvalOut, Evaluator, Objective, StepOut, WorkerCompute};
+use super::{Consts, EvalOut, Evaluator, StepOut, WorkerCompute};
+use crate::objective::ObjectiveSpec;
 use crate::partition::Shard;
 use crate::runtime::{DeviceBuf, Engine};
 use std::sync::Arc;
@@ -32,19 +33,23 @@ impl XlaWorker {
     /// Bind a shard to the matching artifacts; errors if no artifact was
     /// AOT-compiled for this (rows, dim).
     pub fn new(engine: Arc<Engine>, shard: &Shard) -> anyhow::Result<Self> {
-        Self::with_objective(engine, shard, Objective::LeastSquares)
+        Self::with_objective(engine, shard, ObjectiveSpec::Linreg)
     }
 
     /// Bind with an explicit objective ("linreg_step" / "logreg_step"
-    /// artifact families).
+    /// artifact families; no softmax artifacts are AOT-compiled —
+    /// `RunConfig::validate` rejects the combination up front).
     pub fn with_objective(
         engine: Arc<Engine>,
         shard: &Shard,
-        objective: Objective,
+        objective: ObjectiveSpec,
     ) -> anyhow::Result<Self> {
         let kind = match objective {
-            Objective::LeastSquares => "linreg_step",
-            Objective::Logistic => "logreg_step",
+            ObjectiveSpec::Linreg => "linreg_step",
+            ObjectiveSpec::Logreg => "logreg_step",
+            ObjectiveSpec::Softmax { .. } => {
+                anyhow::bail!("backend `xla`: no softmax artifacts (use the native backend)")
+            }
         };
         let rows = shard.rows();
         let dim = shard.a.cols();
@@ -146,7 +151,7 @@ impl XlaEvaluator {
         y: &[f32],
         ax_star: &[f32],
     ) -> anyhow::Result<Self> {
-        Self::with_objective(engine, a, y, ax_star, Objective::LeastSquares)
+        Self::with_objective(engine, a, y, ax_star, ObjectiveSpec::Linreg)
     }
 
     /// Objective-aware constructor ("linreg_eval" / "logreg_eval").
@@ -155,11 +160,14 @@ impl XlaEvaluator {
         a: &crate::linalg::Matrix,
         y: &[f32],
         ax_star: &[f32],
-        objective: Objective,
+        objective: ObjectiveSpec,
     ) -> anyhow::Result<Self> {
         let kind = match objective {
-            Objective::LeastSquares => "linreg_eval",
-            Objective::Logistic => "logreg_eval",
+            ObjectiveSpec::Linreg => "linreg_eval",
+            ObjectiveSpec::Logreg => "logreg_eval",
+            ObjectiveSpec::Softmax { .. } => {
+                anyhow::bail!("backend `xla`: no softmax artifacts (use the native backend)")
+            }
         };
         let (m, dim) = (a.rows(), a.cols());
         let name = engine
@@ -187,6 +195,8 @@ impl Evaluator for XlaEvaluator {
         let cost = outs[0].data[0] as f64;
         let num = outs[1].data[0] as f64;
         let den = outs[2].data[0] as f64;
-        EvalOut { cost, norm_err: num / den.max(1e-300) }
+        // Zero reference energy ⇒ absolute error (same rule as the
+        // native evaluator).
+        EvalOut { cost, norm_err: if den > 0.0 { num / den } else { num } }
     }
 }

@@ -11,6 +11,7 @@
 //! module never matches on a method, so new protocols need no config
 //! changes.
 
+use crate::objective::ObjectiveSpec;
 use crate::protocols::{self, CombinePolicy, Iterate};
 use crate::ser::Value;
 use crate::straggler::{CommSpec, DelaySpec, PersistentSpec, StragglerEnv};
@@ -24,6 +25,9 @@ pub enum DataSpec {
     Synthetic { m: usize, d: usize, noise: f64 },
     /// Synthetic logistic regression (eq. 1's other canonical instance).
     SyntheticLogistic { m: usize, d: usize },
+    /// Synthetic k-class classification (labels 0..classes) for the
+    /// softmax objective.
+    SyntheticMulticlass { m: usize, d: usize, classes: usize },
     /// MSD-like year regression (90 features), standardized.
     MsdLike { m: usize },
 }
@@ -31,7 +35,9 @@ pub enum DataSpec {
 impl DataSpec {
     pub fn dim(&self) -> usize {
         match self {
-            DataSpec::Synthetic { d, .. } | DataSpec::SyntheticLogistic { d, .. } => *d,
+            DataSpec::Synthetic { d, .. }
+            | DataSpec::SyntheticLogistic { d, .. }
+            | DataSpec::SyntheticMulticlass { d, .. } => *d,
             DataSpec::MsdLike { .. } => 90,
         }
     }
@@ -39,15 +45,20 @@ impl DataSpec {
         match self {
             DataSpec::Synthetic { m, .. }
             | DataSpec::SyntheticLogistic { m, .. }
+            | DataSpec::SyntheticMulticlass { m, .. }
             | DataSpec::MsdLike { m } => *m,
         }
     }
 
-    /// The per-sample objective this dataset trains.
-    pub fn objective(&self) -> crate::backend::Objective {
+    /// The objective this dataset's labels naturally train — what
+    /// `cfg.objective` defaults to when no explicit selection is made.
+    pub fn default_objective(&self) -> ObjectiveSpec {
         match self {
-            DataSpec::SyntheticLogistic { .. } => crate::backend::Objective::Logistic,
-            _ => crate::backend::Objective::LeastSquares,
+            DataSpec::SyntheticLogistic { .. } => ObjectiveSpec::Logreg,
+            DataSpec::SyntheticMulticlass { classes, .. } => {
+                ObjectiveSpec::Softmax { classes: *classes }
+            }
+            _ => ObjectiveSpec::Linreg,
         }
     }
 }
@@ -214,6 +225,9 @@ impl RuntimeSpec {
 pub struct RunConfig {
     pub name: String,
     pub data: DataSpec,
+    /// The training objective (defaults to the dataset's natural one —
+    /// [`DataSpec::default_objective`]; validated for compatibility).
+    pub objective: ObjectiveSpec,
     /// Worker count N.
     pub workers: usize,
     /// Redundancy S (each block on S+1 workers).
@@ -258,6 +272,8 @@ pub const PRESETS: &[&str] = &[
     "fig6-generalized",
     "logreg-anytime",
     "logreg-sync",
+    "softmax-anytime",
+    "softmax-sync",
 ];
 
 impl RunConfig {
@@ -266,6 +282,7 @@ impl RunConfig {
         Self {
             name: "base".into(),
             data: DataSpec::Synthetic { m: 50_000, d: 200, noise: 1e-3 },
+            objective: ObjectiveSpec::Linreg,
             workers: 10,
             redundancy: 0,
             method: protocols::anytime::spec(200.0),
@@ -424,8 +441,22 @@ impl RunConfig {
                     c.method = protocols::anytime::spec(200.0);
                 }
             }
+            // ---- Extension: k-class softmax under the fig-3 protocol.
+            "softmax-anytime" | "softmax-sync" => {
+                c.data = DataSpec::SyntheticMulticlass { m: 50_000, d: 200, classes: 4 };
+                c.schedule = Schedule::Constant { lr: 0.1 };
+                c.epochs = 12;
+                c.env = StragglerEnv::ec2_default(1.0);
+                if name.ends_with("sync") {
+                    c.method = protocols::sync::spec(156);
+                } else {
+                    c.method = protocols::anytime::spec(200.0);
+                }
+            }
             other => bail!("unknown preset `{other}` (see DESIGN.md §4)"),
         }
+        // Every preset trains its dataset's natural objective.
+        c.objective = c.data.default_objective();
         Ok(c)
     }
 
@@ -437,6 +468,9 @@ impl RunConfig {
             }
             DataSpec::Synthetic { noise, .. } => DataSpec::Synthetic { m: 500_000, d: 1000, noise },
             DataSpec::SyntheticLogistic { .. } => DataSpec::SyntheticLogistic { m: 500_000, d: 1000 },
+            DataSpec::SyntheticMulticlass { classes, .. } => {
+                DataSpec::SyntheticMulticlass { m: 500_000, d: 1000, classes }
+            }
             DataSpec::MsdLike { .. } => DataSpec::MsdLike { m: 515_345 },
         };
         self
@@ -488,8 +522,25 @@ impl RunConfig {
                     m: d.get_usize("m").ok_or_else(|| anyhow!("data.m"))?,
                     d: d.get_usize("d").ok_or_else(|| anyhow!("data.d"))?,
                 },
+                "synthetic-multiclass" => DataSpec::SyntheticMulticlass {
+                    m: d.get_usize("m").ok_or_else(|| anyhow!("data.m"))?,
+                    d: d.get_usize("d").ok_or_else(|| anyhow!("data.d"))?,
+                    // Absent defaults; present-but-unparseable errors.
+                    classes: match d.get("classes") {
+                        Some(k) => k
+                            .as_usize()
+                            .ok_or_else(|| anyhow!("data.classes must be an integer"))?,
+                        None => crate::objective::DEFAULT_SOFTMAX_CLASSES,
+                    },
+                },
                 other => bail!("unknown data.kind `{other}`"),
             };
+            // A new dataset kind resets the objective to its natural
+            // one; an explicit `objective` field below still overrides.
+            c.objective = c.data.default_objective();
+        }
+        if let Some(o) = v.get("objective") {
+            c.objective = ObjectiveSpec::from_json(o)?;
         }
         if let Some(m) = v.get("method") {
             c.method = MethodSpec::from_json(m)?;
@@ -557,6 +608,49 @@ impl RunConfig {
         }
         if self.data.rows() < self.workers * self.batch {
             bail!("dataset too small for {} workers x batch {}", self.workers, self.batch);
+        }
+        self.objective.validate()?;
+        // Objective × data compatibility: cross-entropy objectives need
+        // the matching label domain; class-index labels are not a
+        // regression target.
+        match (self.objective, &self.data) {
+            (ObjectiveSpec::Linreg, DataSpec::SyntheticMulticlass { .. }) => bail!(
+                "objective `linreg` cannot train class-index labels \
+                 (data kind `synthetic-multiclass`) — use `softmax`"
+            ),
+            // Least squares on {0,1} labels is well-defined math but
+            // almost always a stale `objective` after a data swap
+            // (pre-refactor these labels always trained logistic) —
+            // fail loudly instead of silently changing semantics.
+            (ObjectiveSpec::Linreg, DataSpec::SyntheticLogistic { .. }) => bail!(
+                "data kind `synthetic-logistic` with objective `linreg`: set \
+                 `objective: logreg` (or use a regression dataset)"
+            ),
+            (ObjectiveSpec::Linreg, _) => {}
+            (ObjectiveSpec::Logreg, DataSpec::SyntheticLogistic { .. }) => {}
+            (ObjectiveSpec::Logreg, other) => bail!(
+                "objective `logreg` needs {{0,1}} labels (data kind \
+                 `synthetic-logistic`), got {other:?}"
+            ),
+            (
+                ObjectiveSpec::Softmax { classes },
+                DataSpec::SyntheticMulticlass { classes: k, .. },
+            ) => {
+                if classes != *k {
+                    bail!(
+                        "objective `softmax` has {classes} classes but the dataset \
+                         generates {k} — align `objective.classes` with `data.classes`"
+                    );
+                }
+            }
+            (ObjectiveSpec::Softmax { .. }, other) => bail!(
+                "objective `softmax` needs class-index labels (data kind \
+                 `synthetic-multiclass`), got {other:?}"
+            ),
+        }
+        if self.backend == Backend::Xla && matches!(self.objective, ObjectiveSpec::Softmax { .. })
+        {
+            bail!("backend `xla` has no softmax artifacts — use the native backend");
         }
         match self.runtime {
             RuntimeSpec::Sim => {}
@@ -701,6 +795,71 @@ mod tests {
         ] {
             assert!(RunConfig::from_json(&parse(bad).unwrap()).is_err(), "{bad}");
         }
+    }
+
+    #[test]
+    fn presets_carry_their_natural_objective() {
+        assert_eq!(RunConfig::preset("fig3-anytime").unwrap().objective, ObjectiveSpec::Linreg);
+        assert_eq!(RunConfig::preset("fig5-anytime").unwrap().objective, ObjectiveSpec::Linreg);
+        assert_eq!(RunConfig::preset("logreg-anytime").unwrap().objective, ObjectiveSpec::Logreg);
+        let sm = RunConfig::preset("softmax-anytime").unwrap();
+        assert_eq!(sm.objective, ObjectiveSpec::Softmax { classes: 4 });
+        assert!(matches!(sm.data, DataSpec::SyntheticMulticlass { classes: 4, .. }));
+        let up = sm.paper_scale();
+        assert_eq!(up.data, DataSpec::SyntheticMulticlass { m: 500_000, d: 1000, classes: 4 });
+    }
+
+    #[test]
+    fn objective_json_parses_and_validates() {
+        // Data kind sets the default objective...
+        let c = RunConfig::from_json(
+            &parse(r#"{"data": {"kind": "synthetic-logistic", "m": 4000, "d": 8}}"#).unwrap(),
+        )
+        .unwrap();
+        assert_eq!(c.objective, ObjectiveSpec::Logreg);
+        // ...multiclass derives softmax with the generator's classes...
+        let c = RunConfig::from_json(
+            &parse(r#"{"data": {"kind": "synthetic-multiclass", "m": 4000, "d": 8, "classes": 5}}"#)
+                .unwrap(),
+        )
+        .unwrap();
+        assert_eq!(c.objective, ObjectiveSpec::Softmax { classes: 5 });
+        // ...and an explicit objective object must agree with the data.
+        let c = RunConfig::from_json(
+            &parse(
+                r#"{"data": {"kind": "synthetic-multiclass", "m": 4000, "d": 8, "classes": 5},
+                    "objective": {"kind": "softmax", "classes": 5}}"#,
+            )
+            .unwrap(),
+        )
+        .unwrap();
+        assert_eq!(c.objective, ObjectiveSpec::Softmax { classes: 5 });
+        for bad in [
+            // Mismatched class counts.
+            r#"{"data": {"kind": "synthetic-multiclass", "m": 4000, "d": 8, "classes": 5},
+                "objective": {"kind": "softmax", "classes": 3}}"#,
+            // Cross-entropy on regression labels.
+            r#"{"objective": "logreg"}"#,
+            r#"{"objective": "softmax"}"#,
+            // Regression on class indices.
+            r#"{"data": {"kind": "synthetic-multiclass", "m": 4000, "d": 8},
+                "objective": "linreg"}"#,
+            // Unknown objective.
+            r#"{"objective": "hinge"}"#,
+            // Malformed class counts error instead of defaulting, and
+            // the wire-shared upper bound binds at validate time.
+            r#"{"data": {"kind": "synthetic-multiclass", "m": 4000, "d": 8, "classes": "10"}}"#,
+            r#"{"data": {"kind": "synthetic-multiclass", "m": 400000, "d": 8, "classes": 70000}}"#,
+        ] {
+            assert!(RunConfig::from_json(&parse(bad).unwrap()).is_err(), "{bad}");
+        }
+        // Softmax is native-only (no AOT artifacts).
+        let mut c = RunConfig::base();
+        c.data = DataSpec::SyntheticMulticlass { m: 50_000, d: 200, classes: 4 };
+        c.objective = c.data.default_objective();
+        c.backend = Backend::Xla;
+        let err = c.validate().unwrap_err().to_string();
+        assert!(err.contains("softmax artifacts"), "{err}");
     }
 
     #[test]

@@ -50,6 +50,7 @@ use crate::backend::{Consts, Evaluator, NativeEvaluator, NativeWorker, WorkerCom
 use crate::config::{Backend, DataSpec, MethodSpec, RunConfig, RuntimeSpec, Schedule};
 use crate::data::{msd_like, standardize, synthetic_linreg, Dataset};
 use crate::metrics::{Trace, TracePoint};
+use crate::objective::{DynObjective, Objective, ObjectiveSpec};
 use crate::partition::{materialize_shards, Assignment, Shard};
 use crate::protocols::{EpochCtx, Protocol};
 use crate::rng::Xoshiro256pp;
@@ -106,6 +107,8 @@ pub struct Trainer {
     delay: DelayModel,
     comm: CommModel,
     consts: Consts,
+    /// The training objective (shared with the runtime's workers).
+    objective: DynObjective,
     root: Xoshiro256pp,
     clock: Box<dyn Clock>,
     /// Master's combined parameter vector x_t.
@@ -152,13 +155,14 @@ impl Trainer {
         let shards: Vec<Arc<Shard>> =
             materialize_shards(&ds, &asg).into_iter().map(Arc::new).collect();
 
-        // Reference predictions for the normalized error: A x* for
-        // synthetic data; for real data, an exact-line-search GD solve
-        // stands in for x* (the paper's MSD curves use the least-squares
-        // optimum as reference).
-        let ax_star = reference_predictions(&ds);
+        // The objective drives the parameter dimension, the worker hot
+        // loop, the evaluator, and the reference predictions for the
+        // normalized error (A x* for synthetic data; objective-specific
+        // stand-ins otherwise — e.g. the least-squares GD solve for
+        // x*-less real data).
+        let objective: DynObjective = crate::objective::build(&cfg.objective);
+        let ref_pred = objective.reference_predictions(&ds);
 
-        let objective = cfg.data.objective();
         let delay = DelayModel::new(cfg.env.clone(), cfg.seed);
         let consts = cfg.schedule.to_consts();
         let root = Xoshiro256pp::seed_from_u64(cfg.seed);
@@ -174,21 +178,22 @@ impl Trainer {
                         workers.push(Box::new(NativeWorker::with_objective(
                             sh.clone(),
                             cfg.batch,
-                            objective,
+                            objective.clone(),
                         )));
                     }
                 }
                 evaluator = Box::new(NativeEvaluator::with_objective(
                     Arc::new(ds.a.clone()),
                     Arc::new(ds.y.clone()),
-                    ax_star,
-                    objective,
+                    ref_pred,
+                    objective.clone(),
                 ));
             }
             #[cfg(feature = "xla")]
             Backend::Xla => {
-                // validate() rejects Real × Xla (PJRT is thread-pinned),
-                // so this arm always feeds the sequential runtime.
+                // validate() rejects Real × Xla (PJRT is thread-pinned)
+                // and Xla × softmax (no artifacts), so this arm always
+                // feeds the sequential runtime with a scalar objective.
                 let dir = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
                 let engine = Arc::new(
                     crate::runtime::Engine::new(&dir)
@@ -198,11 +203,11 @@ impl Trainer {
                     workers.push(Box::new(crate::backend::XlaWorker::with_objective(
                         engine.clone(),
                         sh,
-                        objective,
+                        cfg.objective,
                     )?));
                 }
                 evaluator = Box::new(crate::backend::XlaEvaluator::with_objective(
-                    engine, &ds.a, &ds.y, &ax_star, objective,
+                    engine, &ds.a, &ds.y, &ref_pred, cfg.objective,
                 )?);
             }
             #[cfg(not(feature = "xla"))]
@@ -234,7 +239,7 @@ impl Trainer {
                 Box::new(ThreadedRuntime::new(
                     &shards,
                     cfg.batch,
-                    objective,
+                    objective.clone(),
                     delay.clone(),
                     root.clone(),
                     consts,
@@ -245,11 +250,12 @@ impl Trainer {
             // Distributed over TCP: blocks here until all N worker
             // processes complete the handshake (spawned children on
             // loopback, or external `anytime-sgd worker` processes).
+            // Workers rebuild the objective from the Assign frame.
             RuntimeSpec::Dist { port, spawn, time_scale } => (
                 Box::new(crate::net::master::DistRuntime::new(
                     &shards,
                     cfg.batch,
-                    objective,
+                    cfg.objective,
                     delay.clone(),
                     cfg.seed,
                     consts,
@@ -261,13 +267,15 @@ impl Trainer {
             ),
         };
 
-        let d = ds.dim();
+        // Model dimension: `classes · d` (class-major for softmax).
+        let pd = objective.param_dim(ds.dim());
         Ok(Self {
             delay,
             comm: CommModel::new(cfg.comm.clone(), cfg.seed),
             consts,
-            x: vec![0.0; d],
-            x_workers: vec![vec![0.0; d]; cfg.workers],
+            objective,
+            x: vec![0.0; pd],
+            x_workers: vec![vec![0.0; pd]; cfg.workers],
             shards,
             exec,
             evaluator,
@@ -353,7 +361,7 @@ impl Trainer {
             if (e + 1) % self.cfg.eval_every == 0 || e + 1 == self.cfg.epochs {
                 let ev = self.evaluator.eval(&self.x);
                 if let Some(log) = self.events.as_mut() {
-                    let _ = log.eval(e + 1, ev.norm_err, ev.cost);
+                    let _ = log.eval(e + 1, ev.norm_err, ev.cost, self.cfg.objective.name());
                 }
                 trace.points.push(TracePoint {
                     epoch: e + 1,
@@ -388,6 +396,7 @@ impl Trainer {
                 delay: &self.delay,
                 comm: &self.comm,
                 consts: self.consts,
+                objective: &self.objective,
                 root: &self.root,
                 x: &mut self.x,
                 x_workers: &mut self.x_workers,
@@ -428,9 +437,19 @@ impl TrainerBuilder {
         Ok(self)
     }
 
-    /// Dataset to generate (from the config's seed).
+    /// Dataset to generate (from the config's seed). Resets the
+    /// objective to the dataset's natural one; call
+    /// [`TrainerBuilder::objective`] *after* this to override.
     pub fn dataset(mut self, spec: DataSpec) -> Self {
         self.cfg.data = spec;
+        self.cfg.objective = self.cfg.data.default_objective();
+        self
+    }
+
+    /// Select the training objective (validated against the dataset at
+    /// `build()` — see [`crate::objective`]).
+    pub fn objective(mut self, spec: ObjectiveSpec) -> Self {
+        self.cfg.objective = spec;
         self
     }
 
@@ -552,6 +571,9 @@ pub fn build_dataset(cfg: &RunConfig) -> Dataset {
         DataSpec::SyntheticLogistic { m, d } => {
             crate::data::synthetic_logreg(m, d, cfg.seed ^ 0xDA7A)
         }
+        DataSpec::SyntheticMulticlass { m, d, classes } => {
+            crate::data::synthetic_multiclass(m, d, classes, cfg.seed ^ 0xDA7A)
+        }
         DataSpec::MsdLike { m } => {
             let mut ds = msd_like(m, cfg.seed ^ 0xDA7A);
             standardize(&mut ds);
@@ -560,44 +582,12 @@ pub fn build_dataset(cfg: &RunConfig) -> Dataset {
     }
 }
 
-/// Reference predictions `A x*` for the normalized-error metric.
-///
-/// Synthetic sets carry the true x*; for real(-like) data we solve the
-/// least-squares problem to practical optimality with exact-line-search
-/// gradient descent (the objective is quadratic, so this converges
-/// linearly and deterministically).
+/// Reference predictions `A x*` for the least-squares normalized-error
+/// metric — a re-export of the objective layer's implementation (the
+/// logic moved to [`crate::objective::linreg`] with the objective
+/// refactor; this name is kept for downstream users).
 pub fn reference_predictions(ds: &Dataset) -> Vec<f32> {
-    let m = ds.rows();
-    let mut out = vec![0.0f32; m];
-    if let Some(xs) = &ds.x_star {
-        ds.predict_into(xs, &mut out);
-        return out;
-    }
-    let d = ds.dim();
-    let mut x = vec![0.0f32; d];
-    let mut grad = vec![0.0f32; d];
-    let mut resid = vec![0.0f32; m];
-    let mut ag = vec![0.0f32; m];
-    for _ in 0..200 {
-        ds.predict_into(&x, &mut resid);
-        for i in 0..m {
-            resid[i] -= ds.y[i];
-        }
-        crate::linalg::gemv_t(&ds.a, &resid, &mut grad);
-        for g in grad.iter_mut() {
-            *g *= 2.0;
-        }
-        crate::linalg::gemv(&ds.a, &grad, &mut ag);
-        let gg = crate::linalg::dot(&grad, &grad);
-        let gag = crate::linalg::dot(&ag, &ag);
-        if gag <= 0.0 || gg <= 1e-20 {
-            break;
-        }
-        let alpha = (gg / (2.0 * gag)) as f32;
-        crate::linalg::axpy(-alpha, &grad, &mut x);
-    }
-    ds.predict_into(&x, &mut out);
-    out
+    crate::objective::linreg::reference_predictions(ds)
 }
 
 #[cfg(test)]

@@ -37,8 +37,9 @@
 //! replay, not a parallel cluster. Scatter/gather protocols (all the
 //! others) genuinely run their workers concurrently.
 
-use crate::backend::{Consts, NativeWorker, Objective, WorkerCompute};
+use crate::backend::{Consts, NativeWorker, WorkerCompute};
 use crate::exec::{job, WorkerPool};
+use crate::objective::DynObjective;
 use crate::partition::Shard;
 use crate::rng::Xoshiro256pp;
 use crate::straggler::{DelayModel, WorkerEpochRate};
@@ -280,7 +281,7 @@ impl WorkerRuntime for SequentialRuntime {
 
 /// Per-thread worker state of the threaded runtime.
 struct PoolWorker {
-    compute: NativeWorker,
+    compute: NativeWorker<DynObjective>,
 }
 
 /// Threaded execution under real time: N persistent worker threads
@@ -300,7 +301,7 @@ impl ThreadedRuntime {
     pub fn new(
         shards: &[Arc<Shard>],
         batch: usize,
-        objective: Objective,
+        objective: DynObjective,
         delay: DelayModel,
         root: Xoshiro256pp,
         consts: Consts,
@@ -310,7 +311,7 @@ impl ThreadedRuntime {
         let states: Vec<PoolWorker> = shards
             .iter()
             .map(|sh| PoolWorker {
-                compute: NativeWorker::with_objective(sh.clone(), batch, objective),
+                compute: NativeWorker::with_objective(sh.clone(), batch, objective.clone()),
             })
             .collect();
         Self { pool: WorkerPool::new(states), delay: Arc::new(delay), root, consts, batch, time_scale }
@@ -503,11 +504,15 @@ mod tests {
         })
     }
 
+    fn linreg() -> DynObjective {
+        crate::objective::build(&crate::objective::ObjectiveSpec::Linreg)
+    }
+
     fn seq() -> SequentialRuntime {
         let workers: Vec<Box<dyn WorkerCompute>> = shards()
             .into_iter()
             .map(|sh| {
-                Box::new(NativeWorker::with_objective(sh, 4, Objective::LeastSquares))
+                Box::new(NativeWorker::with_objective(sh, 4, linreg()))
                     as Box<dyn WorkerCompute>
             })
             .collect();
@@ -524,7 +529,7 @@ mod tests {
         ThreadedRuntime::new(
             &shards(),
             4,
-            Objective::LeastSquares,
+            linreg(),
             DelayModel::new(env(), 9),
             Xoshiro256pp::seed_from_u64(9),
             Consts::constant(1e-3),

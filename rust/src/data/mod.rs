@@ -120,6 +120,54 @@ pub fn synthetic_logreg(m: usize, d: usize, seed: u64) -> Dataset {
     ds
 }
 
+/// Synthetic k-class classification for the softmax objective:
+/// `A ~ N(0,1)^{m×d}`; a class-major ground-truth `W* ∈ R^{k·d}` with
+/// `W* ~ N(0, 1/d)` (unit-variance logits, informative but not
+/// saturated); labels `y ~ Categorical(softmax(W* a))`, stored as
+/// `f32` class indices in `Dataset::y`. `x_star` holds the flattened
+/// class-major `W*`, which is what the softmax objective's
+/// reference-prediction metric (`‖Z − Z*‖/‖Z*‖`) consumes.
+pub fn synthetic_multiclass(m: usize, d: usize, classes: usize, seed: u64) -> Dataset {
+    assert!(classes >= 2, "multiclass needs >= 2 classes (got {classes})");
+    let mut ds = synthetic_linreg(m, d, 0.0, seed);
+    let root = Xoshiro256pp::seed_from_u64(seed);
+
+    let mut wr = root.split("w-star", 0, 0);
+    let mut w = vec![0.0f32; classes * d];
+    wr.fill_normal_f32(&mut w);
+    let scale = 1.0 / (d as f32).sqrt();
+    for v in w.iter_mut() {
+        *v *= scale;
+    }
+
+    let mut lr = root.split("labels", 0, 0);
+    let mut logits = vec![0.0f64; classes];
+    for i in 0..m {
+        let row = ds.a.row(i);
+        let mut max = f64::NEG_INFINITY;
+        for (c, l) in logits.iter_mut().enumerate() {
+            *l = crate::linalg::dot_f32(row, &w[c * d..(c + 1) * d]) as f64;
+            max = max.max(*l);
+        }
+        let denom: f64 = logits.iter().map(|&z| (z - max).exp()).sum();
+        // Sample the categorical by inverse CDF (deterministic stream).
+        let u = lr.next_f64() * denom;
+        let mut acc = 0.0f64;
+        let mut cls = classes - 1;
+        for (c, &z) in logits.iter().enumerate() {
+            acc += (z - max).exp();
+            if u < acc {
+                cls = c;
+                break;
+            }
+        }
+        ds.y[i] = cls as f32;
+    }
+    ds.x_star = Some(w);
+    ds.name = format!("multiclass-{m}x{d}x{classes}");
+    ds
+}
+
 /// Block-heterogeneous regression: the non-i.i.d. regime where losing a
 /// data block genuinely biases the solution (§II-E's data-loss claim;
 /// with i.i.d. rows the subset optimum ≈ the full optimum and the bias
@@ -338,6 +386,45 @@ mod tests {
         let mut buf = vec![0.0f32; 100 * 5];
         rng.fill_normal_f32(&mut buf);
         assert_eq!(ds.a.as_slice(), &buf[..]);
+    }
+
+    #[test]
+    fn multiclass_labels_are_valid_and_learnable() {
+        let k = 4;
+        let ds = synthetic_multiclass(2_000, 12, k, 17);
+        assert_eq!(ds.rows(), 2_000);
+        assert_eq!(ds.dim(), 12);
+        assert_eq!(ds.x_star.as_ref().unwrap().len(), k * 12);
+        // Labels are valid class indices and every class appears.
+        let mut counts = vec![0usize; k];
+        for &y in &ds.y {
+            let c = y as usize;
+            assert!(y.fract() == 0.0 && c < k, "label {y}");
+            counts[c] += 1;
+        }
+        assert!(counts.iter().all(|&c| c > 0), "degenerate class mix: {counts:?}");
+        // Informative: the true W* predicts labels far above chance.
+        let w = ds.x_star.as_ref().unwrap();
+        let mut hits = 0usize;
+        for i in 0..ds.rows() {
+            let row = ds.a.row(i);
+            let best = (0..k)
+                .max_by(|&a, &b| {
+                    crate::linalg::dot_f32(row, &w[a * 12..(a + 1) * 12])
+                        .partial_cmp(&crate::linalg::dot_f32(row, &w[b * 12..(b + 1) * 12]))
+                        .unwrap()
+                })
+                .unwrap();
+            if best == ds.y[i] as usize {
+                hits += 1;
+            }
+        }
+        let acc = hits as f64 / ds.rows() as f64;
+        assert!(acc > 1.5 / k as f64, "W* accuracy {acc} barely beats chance");
+        // Deterministic in the seed.
+        let ds2 = synthetic_multiclass(2_000, 12, k, 17);
+        assert_eq!(ds.y, ds2.y);
+        assert_eq!(ds.x_star, ds2.x_star);
     }
 
     #[test]

@@ -82,6 +82,12 @@ fn shared_dataset(preset: &str, o: &FigOpts) -> Result<Arc<Dataset>> {
     Ok(Arc::new(build_dataset(&cfg(preset, o)?)))
 }
 
+/// The y-axis metric label of a preset's objective (the objective
+/// registry's `metric` string; DESIGN.md §7).
+fn metric_of(preset: &str) -> Result<&'static str> {
+    Ok(crate::objective::info(RunConfig::preset(preset)?.objective).metric)
+}
+
 /// Fig. 1: histogram of task finishing times — 5000 simulated SGD-step
 /// epochs on 20 workers under the EC2-fit delay model.
 pub fn fig1(o: &FigOpts) -> Result<(Histogram, Figure)> {
@@ -116,7 +122,7 @@ pub fn fig1(o: &FigOpts) -> Result<(Histogram, Figure)> {
 /// uniform combining, error vs epoch.
 pub fn fig2(o: &FigOpts) -> Result<(Vec<usize>, Figure)> {
     let ds = shared_dataset("fig2-proportional", o)?;
-    let mut fig = Figure::new("fig2_weighting", "epoch");
+    let mut fig = Figure::new("fig2_weighting", "epoch").with_y_label(metric_of("fig2-proportional")?);
     // Panel (a): the per-worker iteration counts of epoch 0.
     let c = cfg("fig2-proportional", o)?;
     let mut tr = Trainer::with_dataset(c, ds.clone())?;
@@ -130,7 +136,7 @@ pub fn fig2(o: &FigOpts) -> Result<(Vec<usize>, Figure)> {
 /// Fig. 3: S=0, Anytime(T=200) vs wait-for-all Sync, error vs time.
 pub fn fig3(o: &FigOpts) -> Result<Figure> {
     let ds = shared_dataset("fig3-anytime", o)?;
-    let mut fig = Figure::new("fig3_anytime_vs_sync", "time");
+    let mut fig = Figure::new("fig3_anytime_vs_sync", "time").with_y_label(metric_of("fig3-anytime")?);
     fig.traces.extend(run_many(&ds, &["fig3-anytime", "fig3-sync"], o)?);
     Ok(fig)
 }
@@ -138,7 +144,7 @@ pub fn fig3(o: &FigOpts) -> Result<Figure> {
 /// Fig. 4: S=2 redundancy; Anytime vs FNB(B=8) vs Gradient Coding.
 pub fn fig4(o: &FigOpts) -> Result<Figure> {
     let ds = shared_dataset("fig4-anytime", o)?;
-    let mut fig = Figure::new("fig4_redundancy", "time");
+    let mut fig = Figure::new("fig4_redundancy", "time").with_y_label(metric_of("fig4-anytime")?);
     fig.traces.extend(run_many(&ds, &["fig4-anytime", "fig4-fnb", "fig4-gc"], o)?);
     Ok(fig)
 }
@@ -146,7 +152,7 @@ pub fn fig4(o: &FigOpts) -> Result<Figure> {
 /// Fig. 5: MSD-like real data, S=1; Anytime vs FNB vs Sync.
 pub fn fig5(o: &FigOpts) -> Result<Figure> {
     let ds = shared_dataset("fig5-anytime", o)?;
-    let mut fig = Figure::new("fig5_msd", "time");
+    let mut fig = Figure::new("fig5_msd", "time").with_y_label(metric_of("fig5-anytime")?);
     fig.traces.extend(run_many(&ds, &["fig5-anytime", "fig5-fnb", "fig5-sync"], o)?);
     Ok(fig)
 }
@@ -154,7 +160,7 @@ pub fn fig5(o: &FigOpts) -> Result<Figure> {
 /// Fig. 6: Generalized vs original Anytime, error vs epoch.
 pub fn fig6(o: &FigOpts) -> Result<Figure> {
     let ds = shared_dataset("fig6-anytime", o)?;
-    let mut fig = Figure::new("fig6_generalized", "epoch");
+    let mut fig = Figure::new("fig6_generalized", "epoch").with_y_label(metric_of("fig6-anytime")?);
     fig.traces.extend(run_many(&ds, &["fig6-anytime", "fig6-generalized"], o)?);
     Ok(fig)
 }
@@ -247,7 +253,7 @@ pub fn variance_decay(o: &FigOpts) -> Result<Vec<(f64, f64, f64)>> {
 /// loop over the same fleet and horizon.
 pub fn async_compare(o: &FigOpts) -> Result<Figure> {
     let ds = shared_dataset("fig3-anytime", o)?;
-    let mut fig = Figure::new("async_vs_anytime", "time");
+    let mut fig = Figure::new("async_vs_anytime", "time").with_y_label(metric_of("fig3-anytime")?);
     let mut c = cfg("fig3-anytime", o)?;
     c.name = "async".into();
     // Same per-epoch horizon as anytime's T+comm so time axes align.
@@ -260,8 +266,18 @@ pub fn async_compare(o: &FigOpts) -> Result<Figure> {
 /// second canonical objective) — extension experiment.
 pub fn logreg_figure(o: &FigOpts) -> Result<Figure> {
     let ds = shared_dataset("logreg-anytime", o)?;
-    let mut fig = Figure::new("logreg_anytime_vs_sync", "time");
+    let mut fig = Figure::new("logreg_anytime_vs_sync", "time").with_y_label(metric_of("logreg-anytime")?);
     fig.traces.extend(run_many(&ds, &["logreg-anytime", "logreg-sync"], o)?);
+    Ok(fig)
+}
+
+/// k-class softmax run under the fig-3 protocol — the objective layer's
+/// multiclass extension experiment.
+pub fn softmax_figure(o: &FigOpts) -> Result<Figure> {
+    let ds = shared_dataset("softmax-anytime", o)?;
+    let mut fig =
+        Figure::new("softmax_anytime_vs_sync", "time").with_y_label(metric_of("softmax-anytime")?);
+    fig.traces.extend(run_many(&ds, &["softmax-anytime", "softmax-sync"], o)?);
     Ok(fig)
 }
 

@@ -14,6 +14,12 @@
 //! * **runtime** — loads the AOT artifacts via the PJRT C API (`xla`
 //!   crate) and executes them from the coordinator's hot loop.
 //!
+//! * **objectives** — the pluggable objective layer ([`objective`]):
+//!   the numeric core (worker SGD block, evaluator, master-side block
+//!   gradients) dispatches through an [`objective::Objective`] trait
+//!   behind a name-keyed registry — least squares, binary logistic,
+//!   and k-class softmax ship; the combining protocols are
+//!   objective-blind (DESIGN.md §7).
 //! * **protocols** — the pluggable method layer: every
 //!   straggler-mitigation scheme (anytime, generalized, adaptive-T,
 //!   sync, fastest-(N−B), gradient coding, async) is a
@@ -62,6 +68,7 @@ pub mod lm;
 pub mod methods;
 pub mod metrics;
 pub mod net;
+pub mod objective;
 pub mod partition;
 pub mod protocols;
 pub mod rng;

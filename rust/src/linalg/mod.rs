@@ -138,6 +138,37 @@ pub fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
     }
 }
 
+/// Fused SGD update: apply a minibatch gradient in factored per-sample
+/// form (see [`crate::objective::GradBuf`]) directly to the parameter —
+/// `x[c·d..(c+1)·d] += scale · coeff[i·k + c] · A.row(rows[i])` for
+/// every sample `i` and logit channel `c`. The d-vector gradient is
+/// never materialized: gradient accumulation and the axpy update are
+/// one pass over the minibatch rows, allocation-free.
+///
+/// For `classes == 1` the loop is the pre-refactor least-squares hot
+/// loop float-op for float-op (per-sample axpys applied sequentially to
+/// `x`), which is what keeps the golden traces bit-exact across the
+/// objective refactor. Benched in `benches/bench_objective.rs`.
+#[inline]
+pub fn sgd_update(a: &Matrix, rows: &[u32], coeff: &[f32], classes: usize, scale: f32, x: &mut [f32]) {
+    let d = a.cols();
+    debug_assert!(classes >= 1);
+    debug_assert_eq!(x.len(), classes * d);
+    debug_assert_eq!(coeff.len(), rows.len() * classes);
+    if classes == 1 {
+        for (i, &r) in rows.iter().enumerate() {
+            axpy(scale * coeff[i], a.row(r as usize), x);
+        }
+    } else {
+        for (i, &r) in rows.iter().enumerate() {
+            let row = a.row(r as usize);
+            for c in 0..classes {
+                axpy(scale * coeff[i * classes + c], row, &mut x[c * d..(c + 1) * d]);
+            }
+        }
+    }
+}
+
 /// `y = A x` (row-major gemv). `y.len() == A.rows()`.
 pub fn gemv(a: &Matrix, x: &[f32], y: &mut [f32]) {
     assert_eq!(x.len(), a.cols());
@@ -331,6 +362,36 @@ mod tests {
         let mut buf = vec![0.0f32; idx.len() * 6];
         a.gather_rows_into(&idx, &mut buf);
         assert_eq!(g.as_slice(), &buf[..]);
+    }
+
+    #[test]
+    fn sgd_update_matches_sequential_axpys() {
+        let a = randn_matrix(32, 6, 7);
+        let rows = [3u32, 17, 0, 31];
+        let coeff = [0.5f32, -1.25, 2.0, 0.125];
+        let scale = -0.01f32;
+        // classes = 1: must equal the historical per-row axpy loop bit
+        // for bit (the golden-trace contract).
+        let mut x = vec![0.3f32; 6];
+        let mut want = x.clone();
+        for (i, &r) in rows.iter().enumerate() {
+            axpy(scale * coeff[i], a.row(r as usize), &mut want);
+        }
+        sgd_update(&a, &rows, &coeff, 1, scale, &mut x);
+        assert_eq!(x, want);
+
+        // classes = 3: each class slice gets its own coefficient.
+        let k = 3;
+        let coeff3: Vec<f32> = (0..rows.len() * k).map(|i| i as f32 * 0.1 - 0.5).collect();
+        let mut x3 = vec![0.2f32; 6 * k];
+        let mut want3 = x3.clone();
+        for (i, &r) in rows.iter().enumerate() {
+            for c in 0..k {
+                axpy(scale * coeff3[i * k + c], a.row(r as usize), &mut want3[c * 6..(c + 1) * 6]);
+            }
+        }
+        sgd_update(&a, &rows, &coeff3, k, scale, &mut x3);
+        assert_eq!(x3, want3);
     }
 
     #[test]

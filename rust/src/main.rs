@@ -46,8 +46,8 @@ fn usage() -> String {
        sweep      run an experiment campaign (grid x scenarios x seeds,\n\
                   parallel; mean ± CI aggregates under results/)\n\
        figures    regenerate paper figures (fig1..fig6 | theory | ablations |\n\
-                  variance | async | logreg | all)\n\
-       list       enumerate registered protocols, runtimes, scenarios, presets\n\
+                  variance | async | logreg | softmax | all)\n\
+       list       enumerate registered protocols, objectives, runtimes, scenarios, presets\n\
        partition  print + validate the Table-I data assignment\n\
        inspect    list AOT artifacts\n\n\
      Run `anytime-sgd <subcommand> --help` for flags.\n"
@@ -91,6 +91,13 @@ fn cmd_train(args: &[String]) -> Result<()> {
         .flag("preset", FlagKind::Str, None, "figure preset name (e.g. fig3-anytime)")
         .flag("config", FlagKind::Str, None, "path to a JSON run config")
         .flag("backend", FlagKind::Str, Some("native"), "compute backend: native | xla")
+        .flag(
+            "objective",
+            FlagKind::Str,
+            None,
+            "training objective: linreg | logreg | softmax — swaps the workload to the \
+             objective's dataset kind, keeping the configured (m, d)",
+        )
         .flag("epochs", FlagKind::Int, None, "override epoch count")
         .flag("seed", FlagKind::Int, None, "override root seed")
         .flag("paper-scale", FlagKind::Bool, None, "use the paper's exact data sizes")
@@ -133,6 +140,9 @@ fn cmd_train(args: &[String]) -> Result<()> {
     if m.bool_of("paper-scale") {
         cfg = cfg.paper_scale();
     }
+    if let Some(o) = m.get("objective") {
+        anytime_sgd::objective::apply_axis(o, &mut cfg)?;
+    }
     if m.is_set("epochs") {
         cfg.epochs = m.usize_of("epochs");
     }
@@ -171,9 +181,10 @@ fn cmd_train(args: &[String]) -> Result<()> {
     }
 
     eprintln!(
-        "train: {} | data {:?} | N={} S={} | backend {:?} | runtime {} | {} epochs",
+        "train: {} | data {:?} | objective {} | N={} S={} | backend {:?} | runtime {} | {} epochs",
         cfg.name,
         cfg.data,
+        cfg.objective.name(),
         cfg.workers,
         cfg.redundancy,
         cfg.backend,
@@ -396,6 +407,12 @@ fn cmd_figures(args: &[String]) -> Result<()> {
         fig.write(&out)?;
         println!("-> results/{}.csv\n", fig.name);
     }
+    if want("softmax") {
+        let fig = figures::softmax_figure(&o)?;
+        print!("{}", fig.render_table());
+        fig.write(&out)?;
+        println!("-> results/{}.csv\n", fig.name);
+    }
     if want("ablations") {
         for fig in figures::ablations(&o)? {
             print!("{}", fig.render_table());
@@ -407,8 +424,10 @@ fn cmd_figures(args: &[String]) -> Result<()> {
 }
 
 fn cmd_list(args: &[String]) -> Result<()> {
-    let cmd =
-        Command::new("list", "enumerate registered protocols, runtimes, scenarios, and presets");
+    let cmd = Command::new(
+        "list",
+        "enumerate registered protocols, objectives, runtimes, scenarios, and presets",
+    );
     let _m = cmd.parse(args).map_err(|e| anyhow::anyhow!("{e}"))?;
 
     println!("Protocols (config `method.kind` / `sweep --methods` / Trainer::builder):");
@@ -420,6 +439,16 @@ fn cmd_list(args: &[String]) -> Result<()> {
             format!("  (aliases: {})", p.aliases.join(", "))
         };
         println!("  {:<16} {}{t}{aliases}", p.name, p.about);
+    }
+
+    println!("\nObjectives (`train --objective` / `sweep --objective` / config `objective`):");
+    for o in anytime_sgd::objective::REGISTRY {
+        let aliases = if o.aliases.is_empty() {
+            String::new()
+        } else {
+            format!("  (aliases: {})", o.aliases.join(", "))
+        };
+        println!("  {:<16} {} [err: {}]{aliases}", o.name, o.about, o.metric);
     }
 
     println!("\nRuntimes (`train --runtime` / `sweep --runtime` / config `runtime`):");

@@ -100,13 +100,21 @@ impl EventLog {
         ]))
     }
 
-    /// An evaluation point.
-    pub fn eval(&mut self, e: usize, norm_err: f64, cost: f64) -> std::io::Result<()> {
+    /// An evaluation point. `objective` names the metric's semantics
+    /// (per-objective cost/error — DESIGN.md §7).
+    pub fn eval(
+        &mut self,
+        e: usize,
+        norm_err: f64,
+        cost: f64,
+        objective: &str,
+    ) -> std::io::Result<()> {
         self.emit(&Value::obj(vec![
             ("event", "eval".into()),
             ("epoch", e.into()),
             ("norm_err", norm_err.into()),
             ("cost", cost.into()),
+            ("objective", objective.into()),
         ]))
     }
 
@@ -154,7 +162,7 @@ mod tests {
                 },
             )
             .unwrap();
-            log.eval(0, 0.5, 123.0).unwrap();
+            log.eval(0, 0.5, 123.0, "linreg").unwrap();
             log.run_finished(0.5).unwrap();
             assert_eq!(log.lines(), 5);
         }
@@ -180,6 +188,8 @@ mod tests {
         assert_eq!(rtt.len(), 3);
         assert_eq!(rtt[0].as_f64(), Some(0.004));
         assert_eq!(rtt[1], crate::ser::Value::Null);
+        let eval = crate::ser::parse(lines[3]).unwrap();
+        assert_eq!(eval.get_str("objective"), Some("linreg"));
         std::fs::remove_file(path).ok();
     }
 }

@@ -84,12 +84,28 @@ impl Trace {
 pub struct Figure {
     pub name: String,
     pub x_axis: String,
+    /// The error metric on the y-axis — per-objective (e.g.
+    /// `‖Ax − Ax*‖/‖Ax*‖` for least squares, k-class logit distance for
+    /// softmax). Defaults to the generic `norm_err`.
+    pub y_label: String,
     pub traces: Vec<Trace>,
 }
 
 impl Figure {
     pub fn new(name: impl Into<String>, x_axis: impl Into<String>) -> Self {
-        Self { name: name.into(), x_axis: x_axis.into(), traces: Vec::new() }
+        Self {
+            name: name.into(),
+            x_axis: x_axis.into(),
+            y_label: "norm_err".into(),
+            traces: Vec::new(),
+        }
+    }
+
+    /// Builder-style y-axis metric label (the objective registry's
+    /// `metric` string).
+    pub fn with_y_label(mut self, label: impl Into<String>) -> Self {
+        self.y_label = label.into();
+        self
     }
 
     /// CSV rows: label,epoch,time,norm_err,cost,total_q.
@@ -112,6 +128,7 @@ impl Figure {
         Value::obj(vec![
             ("name", self.name.as_str().into()),
             ("x_axis", self.x_axis.as_str().into()),
+            ("y_label", self.y_label.as_str().into()),
             (
                 "traces",
                 Value::Arr(
@@ -158,7 +175,11 @@ impl Figure {
     /// Terminal rendering: one row per epoch, log-error columns.
     pub fn render_table(&self) -> String {
         let mut out = String::new();
-        let _ = writeln!(out, "== {} (x = {}) ==", self.name, self.x_axis);
+        if self.y_label.is_empty() || self.y_label == "norm_err" {
+            let _ = writeln!(out, "== {} (x = {}) ==", self.name, self.x_axis);
+        } else {
+            let _ = writeln!(out, "== {} (x = {}, err = {}) ==", self.name, self.x_axis, self.y_label);
+        }
         let _ = write!(out, "{:>8}", self.x_axis);
         for t in &self.traces {
             let _ = write!(out, "{:>24}", t.label);
@@ -305,13 +326,17 @@ mod tests {
     #[test]
     fn figure_write_and_json(){
         let dir = std::env::temp_dir().join(format!("anytime-metrics-{}", std::process::id()));
-        let mut f = Figure::new("fig_x", "time");
+        let mut f = Figure::new("fig_x", "time").with_y_label("‖Z − Z*‖/‖Z*‖");
         f.traces.push(trace(&[(0.0, 1.0)]));
         let p = f.write(&dir).unwrap();
         assert!(p.exists());
         let json = std::fs::read_to_string(dir.join("fig_x.json")).unwrap();
         let v = crate::ser::parse(&json).unwrap();
         assert_eq!(v.get_str("name"), Some("fig_x"));
+        assert_eq!(v.get_str("y_label"), Some("‖Z − Z*‖/‖Z*‖"));
+        assert!(f.render_table().contains("err = ‖Z − Z*‖/‖Z*‖"));
+        // The default label keeps the historical header.
+        assert!(!Figure::new("plain", "time").render_table().contains("err ="));
         std::fs::remove_dir_all(dir).ok();
     }
 

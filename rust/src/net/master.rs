@@ -21,7 +21,8 @@
 
 use super::wire::{read_frame, write_frame, Assign, Msg, TaskMsg, PROTOCOL_VERSION};
 use super::worker::WorkerOpts;
-use crate::backend::{Consts, Objective};
+use crate::backend::Consts;
+use crate::objective::ObjectiveSpec;
 use crate::coordinator::runtime::{
     budget_hedge_secs, plan, NetEpochStats, Report, Task, WorkerRuntime,
 };
@@ -94,7 +95,7 @@ impl DistRuntime {
     pub fn new(
         shards: &[Arc<Shard>],
         batch: usize,
-        objective: Objective,
+        objective: ObjectiveSpec,
         delay: DelayModel,
         seed: u64,
         consts: Consts,
@@ -169,7 +170,7 @@ impl DistRuntime {
         listener: &TcpListener,
         shards: &[Arc<Shard>],
         batch: usize,
-        objective: Objective,
+        objective: ObjectiveSpec,
         seed: u64,
         consts: Consts,
         time_scale: f64,
@@ -230,7 +231,7 @@ impl DistRuntime {
         v: usize,
         shards: &[Arc<Shard>],
         batch: usize,
-        objective: Objective,
+        objective: ObjectiveSpec,
         seed: u64,
         consts: Consts,
         time_scale: f64,
@@ -265,10 +266,7 @@ impl DistRuntime {
             n_workers: shards.len() as u32,
             seed,
             batch: batch as u32,
-            objective: match objective {
-                Objective::LeastSquares => 0,
-                Objective::Logistic => 1,
-            },
+            objective,
             time_scale,
             consts: consts.to_array(),
             dim: d as u32,
@@ -545,14 +543,12 @@ mod tests {
     }
 
     fn seq() -> SequentialRuntime {
+        let linreg = crate::objective::build(&ObjectiveSpec::Linreg);
         let workers: Vec<Box<dyn WorkerCompute>> = shards()
             .into_iter()
             .map(|sh| {
-                Box::new(crate::backend::NativeWorker::with_objective(
-                    sh,
-                    4,
-                    Objective::LeastSquares,
-                )) as Box<dyn WorkerCompute>
+                Box::new(crate::backend::NativeWorker::with_objective(sh, 4, linreg.clone()))
+                    as Box<dyn WorkerCompute>
             })
             .collect();
         SequentialRuntime::new(
@@ -579,7 +575,7 @@ mod tests {
         let rt = DistRuntime::new(
             &shards(),
             4,
-            Objective::LeastSquares,
+            ObjectiveSpec::Linreg,
             DelayModel::new(env(), 9),
             9,
             Consts::constant(1e-3),
@@ -655,7 +651,7 @@ mod tests {
             let rt = DistRuntime::new(
                 &shards(),
                 4,
-                Objective::LeastSquares,
+                ObjectiveSpec::Linreg,
                 DelayModel::new(StragglerEnv::ideal(0.01), 9), // all 3 modeled-alive
                 9,
                 Consts::constant(1e-3),
@@ -739,7 +735,7 @@ mod tests {
         let mut rt = DistRuntime::new(
             &shards(),
             4,
-            Objective::LeastSquares,
+            ObjectiveSpec::Linreg,
             DelayModel::new(StragglerEnv::ideal(0.01), 9),
             9,
             Consts::constant(1e-3),

@@ -24,13 +24,16 @@
 //! payloads and every finite value round-trip bit-exactly — the
 //! dist ≡ sim reproducibility contract depends on it.
 
+use crate::objective::ObjectiveSpec;
 use crate::ser::bytes::{ByteReader, ByteWriter, BytesError};
 use std::fmt;
 use std::io::{Read, Write};
 
 /// Protocol version; bumped on any frame-format change. A worker and
 /// master disagreeing on this refuse to pair during the handshake.
-pub const PROTOCOL_VERSION: u32 = 1;
+/// v2: `Assign` carries the full objective spec (kind + class count)
+/// instead of a bare least-squares/logistic byte.
+pub const PROTOCOL_VERSION: u32 = 2;
 
 /// Hard cap on one frame's payload (1 GiB) — large enough for a
 /// paper-scale shard in `Assign`, small enough that a corrupt length
@@ -91,8 +94,9 @@ pub struct Assign {
     pub seed: u64,
     /// Minibatch size per SGD step.
     pub batch: u32,
-    /// Objective selector (0 = least squares, 1 = logistic).
-    pub objective: u8,
+    /// The training objective the worker rebuilds its compute engine
+    /// from (wire form: a kind byte + a u32 class count).
+    pub objective: ObjectiveSpec,
     /// Wall-clock compression for sleep injection and deadlines.
     pub time_scale: f64,
     /// Schedule constants `[big_l, sigma_over_d, base_lr]`.
@@ -190,7 +194,13 @@ impl Msg {
                 w.put_u32(a.n_workers);
                 w.put_u64(a.seed);
                 w.put_u32(a.batch);
-                w.put_u8(a.objective);
+                let (tag, classes) = match a.objective {
+                    ObjectiveSpec::Linreg => (0u8, 1u32),
+                    ObjectiveSpec::Logreg => (1, 1),
+                    ObjectiveSpec::Softmax { classes } => (2, classes as u32),
+                };
+                w.put_u8(tag);
+                w.put_u32(classes);
                 w.put_f64(a.time_scale);
                 for &c in &a.consts {
                     w.put_f32(c);
@@ -244,10 +254,21 @@ impl Msg {
                 let n_workers = r.get_u32()?;
                 let seed = r.get_u64()?;
                 let batch = r.get_u32()?;
-                let objective = r.get_u8()?;
-                if objective > 1 {
-                    return Err(WireError::BadValue("objective"));
-                }
+                let obj_tag = r.get_u8()?;
+                let obj_classes = r.get_u32()? as usize;
+                let objective = match (obj_tag, obj_classes) {
+                    (0, 1) => ObjectiveSpec::Linreg,
+                    (1, 1) => ObjectiveSpec::Logreg,
+                    // Upper bound (shared with `ObjectiveSpec::validate`,
+                    // so a locally-valid config can never be rejected
+                    // only at the worker) keeps a corrupt class count
+                    // from driving a k·d-sized scratch allocation.
+                    (2, k) if (2..=crate::objective::MAX_SOFTMAX_CLASSES).contains(&k) => {
+                        ObjectiveSpec::Softmax { classes: k }
+                    }
+                    (0 | 1 | 2, _) => return Err(WireError::BadValue("objective classes")),
+                    _ => return Err(WireError::BadValue("objective")),
+                };
                 let time_scale = r.get_f64()?;
                 let consts = [r.get_f32()?, r.get_f32()?, r.get_f32()?];
                 let dim = r.get_u32()?;
@@ -380,7 +401,11 @@ mod tests {
                     n_workers: rng.next_u64() as u32,
                     seed: rng.next_u64(),
                     batch: 1 + rng.next_u64() as u32 % 64,
-                    objective: (rng.index(2)) as u8,
+                    objective: match rng.index(3) {
+                        0 => ObjectiveSpec::Linreg,
+                        1 => ObjectiveSpec::Logreg,
+                        _ => ObjectiveSpec::Softmax { classes: 2 + rng.index(9) },
+                    },
                     time_scale: fuzz_f64(rng),
                     consts: [fuzz_f32(rng), fuzz_f32(rng), fuzz_f32(rng)],
                     dim,
@@ -491,23 +516,46 @@ mod tests {
         payload.push(0);
         assert!(matches!(Msg::decode(&payload), Err(WireError::Codec(_))));
         // Out-of-domain objective.
-        let mut a = Msg::Assign(Box::new(Assign {
+        let assign = Assign {
             worker: 0,
             n_workers: 1,
             seed: 1,
             batch: 8,
-            objective: 0,
+            objective: ObjectiveSpec::Linreg,
             time_scale: 1.0,
             consts: [0.0, 0.0, 1e-3],
             dim: 2,
             a: vec![1.0, 2.0],
             y: vec![3.0],
             global_rows: vec![0],
-        }))
-        .encode();
-        // objective byte sits after tag(1)+worker(4)+n(4)+seed(8)+batch(4).
+        };
+        let mut a = Msg::Assign(Box::new(assign.clone())).encode();
+        // objective kind byte sits after tag(1)+worker(4)+n(4)+seed(8)+batch(4).
         a[21] = 7;
         assert!(matches!(Msg::decode(&a), Err(WireError::BadValue("objective"))));
+        // Kind/class mismatches are rejected: linreg with classes != 1
+        // (bytes 22..26 are the little-endian class count)...
+        let mut a = Msg::Assign(Box::new(assign.clone())).encode();
+        a[22] = 3;
+        assert!(matches!(Msg::decode(&a), Err(WireError::BadValue("objective classes"))));
+        // ...softmax with a degenerate or absurd class count.
+        for k in [0u32, 1, 1 << 30] {
+            let mut a = Msg::Assign(Box::new(assign.clone())).encode();
+            a[21] = 2;
+            a[22..26].copy_from_slice(&k.to_le_bytes());
+            assert!(
+                matches!(Msg::decode(&a), Err(WireError::BadValue("objective classes"))),
+                "classes {k} must be rejected"
+            );
+        }
+        // A well-formed softmax spec round-trips.
+        let mut ok = assign;
+        ok.objective = ObjectiveSpec::Softmax { classes: 5 };
+        let back = Msg::decode(&Msg::Assign(Box::new(ok.clone())).encode()).unwrap();
+        match back {
+            Msg::Assign(b) => assert_eq!(b.objective, ObjectiveSpec::Softmax { classes: 5 }),
+            other => panic!("{other:?}"),
+        }
     }
 
     #[test]
@@ -517,7 +565,7 @@ mod tests {
             n_workers: 1,
             seed: 1,
             batch: 8,
-            objective: 0,
+            objective: ObjectiveSpec::Linreg,
             time_scale: 1.0,
             consts: [0.0, 0.0, 1e-3],
             dim: 3, // but a has 2 values for 1 row

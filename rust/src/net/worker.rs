@@ -18,9 +18,10 @@
 //! straggling.
 
 use super::wire::{read_frame, write_frame, Assign, Msg, ReportMsg, WireError, PROTOCOL_VERSION};
-use crate::backend::{Consts, NativeWorker, Objective, WorkerCompute};
+use crate::backend::{Consts, NativeWorker, WorkerCompute};
 use crate::coordinator::runtime::{execute_planned, PlannedTask};
 use crate::linalg::Matrix;
+use crate::objective::DynObjective;
 use crate::partition::Shard;
 use crate::rng::Xoshiro256pp;
 use anyhow::{bail, Context, Result};
@@ -144,9 +145,11 @@ pub fn serve(stream: TcpStream, opts: WorkerOpts) -> Result<()> {
 }
 
 /// Rebuild the worker-side topology from an `Assign`: the shard matrix,
-/// compute engine, and the exact sampling root the master derives
-/// minibatch streams from.
-fn build_state(assign: &Assign) -> Result<(NativeWorker, Consts, Xoshiro256pp, usize, f64)> {
+/// the objective-bound compute engine, and the exact sampling root the
+/// master derives minibatch streams from.
+fn build_state(
+    assign: &Assign,
+) -> Result<(NativeWorker<DynObjective>, Consts, Xoshiro256pp, usize, f64)> {
     let d = assign.dim as usize;
     let rows = assign.y.len();
     let mut a = Matrix::zeros(rows, d);
@@ -159,11 +162,8 @@ fn build_state(assign: &Assign) -> Result<(NativeWorker, Consts, Xoshiro256pp, u
         y: assign.y.clone(),
         global_rows: assign.global_rows.clone(),
     };
-    let objective = match assign.objective {
-        0 => Objective::LeastSquares,
-        1 => Objective::Logistic,
-        o => bail!("Assign: unknown objective {o}"), // unreachable post-decode
-    };
+    // The wire decoder already validated the spec's domain.
+    let objective = crate::objective::build(&assign.objective);
     if !(assign.time_scale.is_finite() && assign.time_scale > 0.0) {
         bail!("Assign: time_scale must be finite and > 0 (got {})", assign.time_scale);
     }
@@ -182,7 +182,7 @@ fn build_state(assign: &Assign) -> Result<(NativeWorker, Consts, Xoshiro256pp, u
 fn serve_tasks(
     reader: &mut TcpStream,
     writer: &Mutex<TcpStream>,
-    compute: &mut NativeWorker,
+    compute: &mut NativeWorker<DynObjective>,
     v: usize,
     root: &Xoshiro256pp,
     consts: Consts,

@@ -1,0 +1,119 @@
+//! Binary logistic regression — cross-entropy over {0, 1} labels,
+//! ported bit-exactly from the pre-refactor `Objective::Logistic` arms.
+//!
+//! Per-sample loss `f = softplus(a·x) − y(a·x)` (the numerically stable
+//! NLL form), gradient `a(σ(a·x) − y)`. The coefficient is
+//! `σ(a·x) − y` with `grad_scale = 1`.
+
+use super::{GradBuf, Objective, ObjectiveInfo};
+use crate::data::Dataset;
+use crate::linalg::{axpy, dot_f32, Matrix};
+use std::ops::Range;
+
+pub const INFO: ObjectiveInfo = ObjectiveInfo {
+    name: "logreg",
+    aliases: &["logistic"],
+    about: "binary cross-entropy (y ∈ {0,1}): f = softplus(a·x) − y(a·x)",
+    metric: "‖Ax − Ax*‖/‖Ax*‖ (logits)",
+};
+
+#[inline]
+fn sigmoid(z: f32) -> f32 {
+    1.0 / (1.0 + (-z).exp())
+}
+
+/// The binary cross-entropy objective (stateless).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct LogReg;
+
+impl Objective for LogReg {
+    fn name(&self) -> &'static str {
+        INFO.name
+    }
+
+    fn classes(&self) -> usize {
+        1
+    }
+
+    fn grad_scale(&self) -> f32 {
+        1.0
+    }
+
+    fn loss_grad_into(&self, a: &Matrix, y: &[f32], x: &[f32], rows: &[u32], buf: &mut GradBuf) {
+        for (i, &r) in rows.iter().enumerate() {
+            let r = r as usize;
+            debug_assert!(r < a.rows(), "row index {r} out of shard");
+            buf.coeff[i] = sigmoid(dot_f32(a.row(r), x)) - y[r];
+        }
+    }
+
+    fn eval_chunk(
+        &self,
+        a: &Matrix,
+        y: &[f32],
+        ref_pred: &[f32],
+        x: &[f32],
+        lo: usize,
+        hi: usize,
+    ) -> (f64, f64) {
+        let (mut cost, mut num) = (0.0f64, 0.0f64);
+        for i in lo..hi {
+            let pred = dot_f32(a.row(i), x) as f64;
+            // Stable softplus(z) − y z.
+            let z = pred;
+            let sp = if z > 30.0 { z } else { (1.0 + z.exp()).ln() };
+            cost += sp - y[i] as f64 * z;
+            let de = pred - ref_pred[i] as f64;
+            num += de * de;
+        }
+        (cost, num)
+    }
+
+    fn reference_predictions(&self, ds: &Dataset) -> Vec<f32> {
+        // The metric compares logits: A x* where the generator stores
+        // x*; x*-less data falls back to the least-squares proxy (same
+        // behavior the evaluator had before the refactor).
+        super::linreg::reference_predictions(ds)
+    }
+
+    fn block_grad_into(&self, a: &Matrix, y: &[f32], x: &[f32], range: Range<usize>, g: &mut [f32]) {
+        for i in range {
+            let row = a.row(i);
+            let r = sigmoid(dot_f32(row, x)) - y[i];
+            axpy(r, row, g);
+        }
+    }
+
+    fn lipschitz_hint(&self, ds: &Dataset) -> f64 {
+        // σ'(z) ≤ 1/4 ⇒ L = max ‖a_i‖² / 4.
+        0.25 * super::linreg::max_row_norm2(ds)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic_logreg;
+
+    #[test]
+    fn coefficients_are_sigmoid_residuals() {
+        let ds = synthetic_logreg(64, 6, 3);
+        let x = vec![0.1f32; 6];
+        let rows = [1u32, 7, 40];
+        let mut buf = GradBuf::new(3, 1);
+        LogReg.loss_grad_into(&ds.a, &ds.y, &x, &rows, &mut buf);
+        for (i, &r) in rows.iter().enumerate() {
+            let want = sigmoid(dot_f32(ds.a.row(r as usize), &x)) - ds.y[r as usize];
+            assert_eq!(buf.coeff[i].to_bits(), want.to_bits());
+        }
+    }
+
+    #[test]
+    fn zero_model_costs_chance_level() {
+        // At x = 0 the NLL is exactly m·ln 2.
+        let ds = synthetic_logreg(500, 8, 9);
+        let (cost, _) =
+            LogReg.eval_chunk(&ds.a, &ds.y, &vec![0.0; 500], &vec![0.0; 8], 0, 500);
+        assert!((cost - 500.0 * std::f64::consts::LN_2).abs() < 1e-6, "{cost}");
+    }
+}

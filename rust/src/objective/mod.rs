@@ -1,0 +1,508 @@
+//! The pluggable objective layer: every training objective is an
+//! [`Objective`] behind a name-keyed [`REGISTRY`] — the same extension
+//! pattern as [`crate::protocols`].
+//!
+//! The paper's anytime-combining rule (Theorem 3's work-proportional λ)
+//! is objective-agnostic: it only consumes per-worker SGD iterates and
+//! step counts. This module makes that explicit by decoupling the
+//! numeric core from linear regression: the worker hot loop
+//! ([`crate::backend::NativeWorker`]), the master evaluator, and
+//! gradient coding's master-side block gradients all dispatch through
+//! the trait, while the protocol layer stays untouched — protocols only
+//! ever see `Vec<f32>` iterates.
+//!
+//! Three objectives ship:
+//!
+//! * [`linreg`] — least squares, ported **bit-exactly** from the
+//!   pre-refactor `NativeWorker` (golden traces and the sim ≡ real ≡
+//!   dist equivalence pins survive unchanged).
+//! * [`logreg`] — binary cross-entropy (consumes
+//!   [`crate::data::synthetic_logreg`]).
+//! * [`softmax`] — k-class cross-entropy over a class-major parameter
+//!   `x ∈ R^{k·d}` (consumes [`crate::data::synthetic_multiclass`]).
+//!
+//! ## The gradient contract (why `GradBuf`, not a gradient vector)
+//!
+//! All three objectives are generalized linear models: the per-sample
+//! gradient is rank-1, `∂f_i/∂x = Σ_c coeff_{i,c} · a_i ⊗ e_c`, where
+//! `coeff` is the derivative of the loss through the logit layer
+//! (least squares: `a·x − y`; logistic: `σ(a·x) − y`; softmax:
+//! `p_c − 1{y=c}`). [`Objective::loss_grad_into`] therefore writes the
+//! gradient in *factored per-sample form* into a preallocated
+//! [`GradBuf`], and [`crate::linalg::sgd_update`] applies it as a fused
+//! gradient-accumulate + axpy pass over the minibatch rows — the
+//! d-dimensional gradient vector is never materialized. This is both
+//! the allocation-free fast path (one scratch buffer reused across all
+//! steps of a `run_steps` call; `benches/bench_objective.rs`) and the
+//! bit-exactness guarantee: for `linreg` the fused update performs the
+//! exact float-op sequence of the pre-refactor hot loop.
+//!
+//! ## Adding an objective (~40 LoC; see DESIGN.md §7)
+//!
+//! 1. create `objective/<name>.rs` with a unit struct implementing
+//!    [`Objective`] (coefficients, eval chunk, reference predictions,
+//!    block gradient, smoothness hint) and a `pub const INFO`;
+//! 2. add a variant to [`ObjectiveSpec`] and arms to
+//!    [`ObjectiveSpec::name`]/[`ObjectiveSpec::parse`]/[`build`];
+//! 3. add `INFO` to [`REGISTRY`].
+//!
+//! The objective is then selectable everywhere: config JSON
+//! (`"objective": "<name>"`), the CLI (`train --objective`,
+//! `sweep --objective`, `anytime-sgd list`), sweep grids (the
+//! `objectives` axis, `/obj-*` group keys), and
+//! [`crate::coordinator::Trainer::builder`]`.objective(..)`.
+
+pub mod linreg;
+pub mod logreg;
+pub mod softmax;
+
+pub use linreg::LinReg;
+pub use logreg::LogReg;
+pub use softmax::Softmax;
+
+use crate::config::{DataSpec, RunConfig};
+use crate::data::Dataset;
+use crate::linalg::Matrix;
+use crate::ser::Value;
+use anyhow::{anyhow, bail, Result};
+use std::ops::Range;
+use std::sync::Arc;
+
+/// Preallocated scratch for one minibatch gradient in factored
+/// per-sample form (see the module docs). Owned by the worker and
+/// reused across every step of a `run_steps` call — the hot loop never
+/// allocates.
+#[derive(Clone, Debug)]
+pub struct GradBuf {
+    /// Per-sample gradient coefficients, sample-major: `coeff[i*k + c]`
+    /// is sample `i`'s derivative through logit channel `c`.
+    pub coeff: Vec<f32>,
+    /// Per-class logit scratch (len = classes; unused for k = 1).
+    pub logits: Vec<f32>,
+}
+
+impl GradBuf {
+    pub fn new(batch: usize, classes: usize) -> Self {
+        Self { coeff: vec![0.0; batch * classes], logits: vec![0.0; classes] }
+    }
+}
+
+/// One training objective (paper eq. 1 instantiated). Implementations
+/// are stateless value types; data arrives as arguments so one object
+/// serves every shard and the evaluator alike.
+pub trait Objective: Send + Sync {
+    /// Registry name (`linreg` / `logreg` / `softmax`).
+    fn name(&self) -> &'static str;
+
+    /// Logit channels k: the model is `x ∈ R^{k·d}`, class-major
+    /// (`x[c*d..(c+1)*d]` is channel `c`'s weight vector). 1 for the
+    /// scalar objectives.
+    fn classes(&self) -> usize;
+
+    /// Parameter dimension for a d-feature dataset.
+    fn param_dim(&self, d: usize) -> usize {
+        self.classes() * d
+    }
+
+    /// Constant gradient prefactor folded into the SGD step size
+    /// (2 for least squares — `∇(a·x − y)² = 2a(a·x − y)` — and 1 for
+    /// the cross-entropy objectives).
+    fn grad_scale(&self) -> f32;
+
+    /// Minibatch gradient at `x` over shard rows `rows`, in factored
+    /// per-sample form: writes `coeff[i*k + c] = ∂f_{rows[i]}/∂z_c`
+    /// into `buf` (`z = ` the k logits of the sample). Applied by
+    /// [`crate::linalg::sgd_update`] without materializing the
+    /// `k·d`-vector.
+    fn loss_grad_into(&self, a: &Matrix, y: &[f32], x: &[f32], rows: &[u32], buf: &mut GradBuf);
+
+    /// Evaluator chunk: `(Σ cost_i, Σ ‖pred_i − ref_i‖²)` over rows
+    /// `lo..hi` of the full dataset. `ref_pred` is this objective's
+    /// reference-prediction vector (`classes()` values per row,
+    /// sample-major). Cost is the paper's eq.-1 sum (squared residuals
+    /// for least squares, NLL for the cross-entropy objectives).
+    fn eval_chunk(
+        &self,
+        a: &Matrix,
+        y: &[f32],
+        ref_pred: &[f32],
+        x: &[f32],
+        lo: usize,
+        hi: usize,
+    ) -> (f64, f64);
+
+    /// Reference predictions for the normalized-error metric
+    /// (`classes()` values per row, sample-major): the logits of the
+    /// ground-truth parameter where the dataset carries one, else an
+    /// objective-specific stand-in (least squares solves the quadratic
+    /// to practical optimality).
+    fn reference_predictions(&self, ds: &Dataset) -> Vec<f32>;
+
+    /// Full-batch gradient over rows `range`, accumulated into `g`
+    /// (len = `param_dim`) — gradient coding's master-side numerics.
+    fn block_grad_into(&self, a: &Matrix, y: &[f32], x: &[f32], range: Range<usize>, g: &mut [f32]);
+
+    /// Upper bound on the per-sample smoothness constant L over the
+    /// dataset — a hint for the paper's `Schedule::Paper` step sizes
+    /// (advisory: never consulted by the numerics, so schedules and
+    /// traces are unaffected).
+    fn lipschitz_hint(&self, ds: &Dataset) -> f64;
+}
+
+/// Shared trait-object handle: runtimes hold one objective per worker
+/// without monomorphizing over it.
+pub type DynObjective = Arc<dyn Objective>;
+
+impl<T: Objective + ?Sized> Objective for Arc<T> {
+    fn name(&self) -> &'static str {
+        (**self).name()
+    }
+    fn classes(&self) -> usize {
+        (**self).classes()
+    }
+    fn param_dim(&self, d: usize) -> usize {
+        (**self).param_dim(d)
+    }
+    fn grad_scale(&self) -> f32 {
+        (**self).grad_scale()
+    }
+    fn loss_grad_into(&self, a: &Matrix, y: &[f32], x: &[f32], rows: &[u32], buf: &mut GradBuf) {
+        (**self).loss_grad_into(a, y, x, rows, buf)
+    }
+    fn eval_chunk(
+        &self,
+        a: &Matrix,
+        y: &[f32],
+        ref_pred: &[f32],
+        x: &[f32],
+        lo: usize,
+        hi: usize,
+    ) -> (f64, f64) {
+        (**self).eval_chunk(a, y, ref_pred, x, lo, hi)
+    }
+    fn reference_predictions(&self, ds: &Dataset) -> Vec<f32> {
+        (**self).reference_predictions(ds)
+    }
+    fn block_grad_into(&self, a: &Matrix, y: &[f32], x: &[f32], range: Range<usize>, g: &mut [f32]) {
+        (**self).block_grad_into(a, y, x, range, g)
+    }
+    fn lipschitz_hint(&self, ds: &Dataset) -> f64 {
+        (**self).lipschitz_hint(ds)
+    }
+}
+
+/// Default class count for a bare `softmax` axis/CLI value (override
+/// with the JSON object form `{"kind": "softmax", "classes": k}`).
+pub const DEFAULT_SOFTMAX_CLASSES: usize = 4;
+
+/// Upper bound on softmax class counts — shared by spec validation and
+/// the wire decoder, so a config that validates locally can never be
+/// rejected (or truncated by the `u32` wire field) only once it
+/// reaches a dist worker.
+pub const MAX_SOFTMAX_CLASSES: usize = 65_536;
+
+/// Which objective a run trains — the config-level selector, threaded
+/// through JSON, the CLI, sweep grids, the trainer builder, and the
+/// dist runtime's `Assign` wire frame.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ObjectiveSpec {
+    /// Least squares (the paper's default; pre-refactor behavior).
+    Linreg,
+    /// Binary cross-entropy (labels in {0, 1}).
+    Logreg,
+    /// k-class cross-entropy (labels in 0..classes).
+    Softmax { classes: usize },
+}
+
+impl ObjectiveSpec {
+    /// Canonical registry name.
+    pub fn name(self) -> &'static str {
+        match self {
+            ObjectiveSpec::Linreg => "linreg",
+            ObjectiveSpec::Logreg => "logreg",
+            ObjectiveSpec::Softmax { .. } => "softmax",
+        }
+    }
+
+    /// Logit channels (1 except softmax).
+    pub fn classes(self) -> usize {
+        match self {
+            ObjectiveSpec::Softmax { classes } => classes,
+            _ => 1,
+        }
+    }
+
+    /// Resolve a CLI/axis name (canonical or alias) to a spec; a bare
+    /// `softmax` gets [`DEFAULT_SOFTMAX_CLASSES`].
+    pub fn parse(name: &str) -> Result<Self> {
+        match lookup(name)?.name {
+            "linreg" => Ok(ObjectiveSpec::Linreg),
+            "logreg" => Ok(ObjectiveSpec::Logreg),
+            "softmax" => Ok(ObjectiveSpec::Softmax { classes: DEFAULT_SOFTMAX_CLASSES }),
+            other => unreachable!("registry entry `{other}` without a spec arm"),
+        }
+    }
+
+    /// Parse the config JSON form: a bare name (`"objective": "logreg"`)
+    /// or an object (`{"kind": "softmax", "classes": 5}`).
+    pub fn from_json(v: &Value) -> Result<Self> {
+        let mut spec = match v {
+            Value::Str(name) => Self::parse(name)?,
+            obj => Self::parse(
+                obj.get_str("kind").ok_or_else(|| anyhow!("objective.kind"))?,
+            )?,
+        };
+        if let ObjectiveSpec::Softmax { classes } = &mut spec {
+            // Present-but-unparseable must error, not silently default.
+            if let Some(k) = v.get("classes") {
+                *classes = k
+                    .as_usize()
+                    .ok_or_else(|| anyhow!("objective.classes must be an integer"))?;
+            }
+        } else if v.get("classes").is_some() {
+            bail!("objective `{}` takes no `classes`", spec.name());
+        }
+        spec.validate()?;
+        Ok(spec)
+    }
+
+    /// JSON form (round-trips through [`ObjectiveSpec::from_json`]).
+    pub fn to_json(self) -> Value {
+        match self {
+            ObjectiveSpec::Softmax { classes } => Value::obj(vec![
+                ("kind", Value::Str("softmax".into())),
+                ("classes", classes.into()),
+            ]),
+            other => Value::Str(other.name().into()),
+        }
+    }
+
+    /// Spec-level sanity (cross-field data checks live in
+    /// [`RunConfig::validate`]).
+    pub fn validate(self) -> Result<()> {
+        if let ObjectiveSpec::Softmax { classes } = self {
+            if !(2..=MAX_SOFTMAX_CLASSES).contains(&classes) {
+                bail!(
+                    "objective `softmax`: classes must be in 2..={MAX_SOFTMAX_CLASSES} \
+                     (got {classes})"
+                );
+            }
+        }
+        Ok(())
+    }
+}
+
+/// One registry entry (for `anytime-sgd list`, docs, and the figures'
+/// per-objective metric labels).
+pub struct ObjectiveInfo {
+    /// Canonical name — the config JSON `objective` / axis value.
+    pub name: &'static str,
+    /// Pure synonyms, valid everywhere the canonical name is.
+    pub aliases: &'static [&'static str],
+    /// One-line description (`anytime-sgd list`).
+    pub about: &'static str,
+    /// The error metric the figures plot for this objective.
+    pub metric: &'static str,
+}
+
+/// Every objective the crate ships, in display order.
+pub static REGISTRY: &[&ObjectiveInfo] = &[&linreg::INFO, &logreg::INFO, &softmax::INFO];
+
+/// Resolve an objective by canonical name or alias.
+pub fn lookup(name: &str) -> Result<&'static ObjectiveInfo> {
+    REGISTRY
+        .iter()
+        .find(|o| o.name == name || o.aliases.contains(&name))
+        .copied()
+        .ok_or_else(|| {
+            anyhow!("unknown objective `{name}` (available: {})", names().join(", "))
+        })
+}
+
+/// Registry entry for a spec (always present: specs are name-aligned).
+pub fn info(spec: ObjectiveSpec) -> &'static ObjectiveInfo {
+    lookup(spec.name()).expect("every ObjectiveSpec has a registry entry")
+}
+
+/// Canonical objective names, in registry order.
+pub fn names() -> Vec<&'static str> {
+    REGISTRY.iter().map(|o| o.name).collect()
+}
+
+/// Whether `name` resolves to a registered objective (or alias).
+pub fn exists(name: &str) -> bool {
+    lookup(name).is_ok()
+}
+
+/// Instantiate the objective a spec describes. Infallible: specs are
+/// validated where they enter ([`ObjectiveSpec::from_json`],
+/// `RunConfig::validate`, the wire decoder).
+pub fn build(spec: &ObjectiveSpec) -> DynObjective {
+    match *spec {
+        ObjectiveSpec::Linreg => Arc::new(LinReg),
+        ObjectiveSpec::Logreg => Arc::new(LogReg),
+        ObjectiveSpec::Softmax { classes } => Arc::new(Softmax::new(classes)),
+    }
+}
+
+/// Apply an objective *axis* value to a config: set `cfg.objective` and
+/// swap the dataset kind to a compatible workload, keeping the current
+/// (m, d). This is what `sweep --objective a,b,c` and
+/// `train --objective` do — the strict alternative (config JSON's
+/// `objective` field) leaves the data untouched and lets
+/// `RunConfig::validate` reject mismatches instead.
+pub fn apply_axis(name: &str, cfg: &mut RunConfig) -> Result<()> {
+    let mut spec = ObjectiveSpec::parse(name)?;
+    let (m, d) = (cfg.data.rows(), cfg.data.dim());
+    cfg.data = match spec {
+        // Least squares keeps real-valued-label workloads (synthetic,
+        // msd); classification labels swap to the synthetic regression.
+        ObjectiveSpec::Linreg => match &cfg.data {
+            DataSpec::SyntheticLogistic { .. } | DataSpec::SyntheticMulticlass { .. } => {
+                DataSpec::Synthetic { m, d, noise: 1e-3 }
+            }
+            keep => keep.clone(),
+        },
+        ObjectiveSpec::Logreg => DataSpec::SyntheticLogistic { m, d },
+        ObjectiveSpec::Softmax { classes } => {
+            // An already-multiclass workload keeps its class count —
+            // the bare axis name must not silently reshape a k-class
+            // config down to the default k.
+            let classes = match &cfg.data {
+                DataSpec::SyntheticMulticlass { classes: k, .. } => *k,
+                _ => classes,
+            };
+            spec = ObjectiveSpec::Softmax { classes };
+            DataSpec::SyntheticMulticlass { m, d, classes }
+        }
+    };
+    cfg.objective = spec;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ser::parse;
+
+    #[test]
+    fn registry_names_unique_and_resolvable() {
+        let mut all: Vec<&str> = Vec::new();
+        for o in REGISTRY {
+            all.push(o.name);
+            all.extend(o.aliases);
+        }
+        let mut sorted = all.clone();
+        sorted.sort();
+        sorted.dedup();
+        assert_eq!(sorted.len(), all.len(), "duplicate objective name/alias");
+        for name in all {
+            assert!(exists(name), "{name} must resolve");
+        }
+        assert!(lookup("hinge").is_err());
+        assert_eq!(names(), vec!["linreg", "logreg", "softmax"]);
+    }
+
+    #[test]
+    fn specs_parse_and_round_trip_json() {
+        assert_eq!(ObjectiveSpec::parse("linreg").unwrap(), ObjectiveSpec::Linreg);
+        assert_eq!(ObjectiveSpec::parse("least-squares").unwrap(), ObjectiveSpec::Linreg);
+        assert_eq!(ObjectiveSpec::parse("logistic").unwrap(), ObjectiveSpec::Logreg);
+        assert_eq!(
+            ObjectiveSpec::parse("softmax").unwrap(),
+            ObjectiveSpec::Softmax { classes: DEFAULT_SOFTMAX_CLASSES }
+        );
+        assert!(ObjectiveSpec::parse("hinge").is_err());
+
+        for spec in [
+            ObjectiveSpec::Linreg,
+            ObjectiveSpec::Logreg,
+            ObjectiveSpec::Softmax { classes: 7 },
+        ] {
+            let back = ObjectiveSpec::from_json(&spec.to_json()).unwrap();
+            assert_eq!(back, spec);
+        }
+        // Object form with explicit classes.
+        let v = parse(r#"{"kind": "softmax", "classes": 9}"#).unwrap();
+        assert_eq!(
+            ObjectiveSpec::from_json(&v).unwrap(),
+            ObjectiveSpec::Softmax { classes: 9 }
+        );
+        // Bad forms fail closed.
+        assert!(ObjectiveSpec::from_json(&parse(r#"{"kind": "softmax", "classes": 1}"#).unwrap())
+            .is_err());
+        assert!(ObjectiveSpec::from_json(&parse(r#"{"kind": "linreg", "classes": 3}"#).unwrap())
+            .is_err());
+        assert!(ObjectiveSpec::from_json(&parse(r#""hinge""#).unwrap()).is_err());
+        // Present-but-unparseable classes error instead of silently
+        // defaulting, and the wire-shared upper bound binds locally.
+        assert!(ObjectiveSpec::from_json(
+            &parse(r#"{"kind": "softmax", "classes": "ten"}"#).unwrap()
+        )
+        .is_err());
+        assert!(ObjectiveSpec::Softmax { classes: MAX_SOFTMAX_CLASSES }.validate().is_ok());
+        let err = ObjectiveSpec::Softmax { classes: MAX_SOFTMAX_CLASSES + 1 }
+            .validate()
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("classes"), "{err}");
+    }
+
+    #[test]
+    fn build_matches_spec_shape() {
+        for (spec, classes, dim_mult) in [
+            (ObjectiveSpec::Linreg, 1usize, 1usize),
+            (ObjectiveSpec::Logreg, 1, 1),
+            (ObjectiveSpec::Softmax { classes: 5 }, 5, 5),
+        ] {
+            let obj = build(&spec);
+            assert_eq!(obj.name(), spec.name());
+            assert_eq!(obj.classes(), classes);
+            assert_eq!(obj.param_dim(16), dim_mult * 16);
+            assert_eq!(info(spec).name, spec.name());
+        }
+        assert_eq!(build(&ObjectiveSpec::Linreg).grad_scale(), 2.0);
+        assert_eq!(build(&ObjectiveSpec::Logreg).grad_scale(), 1.0);
+    }
+
+    #[test]
+    fn apply_axis_swaps_the_dataset_kind_in_place() {
+        let mut cfg = RunConfig::base();
+        let (m, d) = (cfg.data.rows(), cfg.data.dim());
+        apply_axis("logreg", &mut cfg).unwrap();
+        assert_eq!(cfg.objective, ObjectiveSpec::Logreg);
+        assert_eq!(cfg.data, DataSpec::SyntheticLogistic { m, d });
+        cfg.validate().unwrap();
+
+        apply_axis("softmax", &mut cfg).unwrap();
+        assert_eq!(
+            cfg.data,
+            DataSpec::SyntheticMulticlass { m, d, classes: DEFAULT_SOFTMAX_CLASSES }
+        );
+        cfg.validate().unwrap();
+
+        // Re-applying `softmax` to an already-multiclass workload keeps
+        // its class count (no silent reshape down to the default).
+        let mut nine = RunConfig::base();
+        nine.data = DataSpec::SyntheticMulticlass { m, d, classes: 9 };
+        nine.objective = nine.data.default_objective();
+        apply_axis("softmax", &mut nine).unwrap();
+        assert_eq!(nine.data, DataSpec::SyntheticMulticlass { m, d, classes: 9 });
+        assert_eq!(nine.objective, ObjectiveSpec::Softmax { classes: 9 });
+        nine.validate().unwrap();
+
+        apply_axis("linreg", &mut cfg).unwrap();
+        assert_eq!(cfg.objective, ObjectiveSpec::Linreg);
+        assert!(matches!(cfg.data, DataSpec::Synthetic { .. }));
+        cfg.validate().unwrap();
+
+        // Linreg keeps real-valued workloads (msd) untouched.
+        let mut cfg = RunConfig::base();
+        cfg.data = DataSpec::MsdLike { m: 10_000 };
+        cfg.objective = cfg.data.default_objective();
+        apply_axis("linreg", &mut cfg).unwrap();
+        assert_eq!(cfg.data, DataSpec::MsdLike { m: 10_000 });
+
+        assert!(apply_axis("hinge", &mut RunConfig::base()).is_err());
+    }
+}

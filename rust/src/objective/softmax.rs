@@ -1,0 +1,203 @@
+//! k-class softmax regression — multiclass cross-entropy over a
+//! class-major parameter `x ∈ R^{k·d}` (`x[c*d..(c+1)*d]` is class
+//! `c`'s weight vector).
+//!
+//! Per-sample loss `f = logsumexp(z) − z_y` with logits
+//! `z_c = a · x_c`; gradient through the logits is the classic
+//! `p_c − 1{y = c}` (p = softmax(z)), so the coefficient form carries
+//! k entries per sample and [`crate::linalg::sgd_update`] applies the
+//! rank-1 update per class slice. Labels are class indices stored as
+//! `f32` in `Dataset::y` (the [`crate::data::synthetic_multiclass`]
+//! generator).
+
+use super::{GradBuf, Objective, ObjectiveInfo};
+use crate::data::Dataset;
+use crate::linalg::{axpy, dot_f32, Matrix};
+use std::ops::Range;
+
+pub const INFO: ObjectiveInfo = ObjectiveInfo {
+    name: "softmax",
+    aliases: &["multiclass"],
+    about: "k-class cross-entropy: f = logsumexp(Ax) − z_y over class-major x ∈ R^{k·d}",
+    metric: "‖Z − Z*‖/‖Z*‖ (k-class logits)",
+};
+
+/// The k-class cross-entropy objective.
+#[derive(Clone, Copy, Debug)]
+pub struct Softmax {
+    classes: usize,
+}
+
+impl Softmax {
+    pub fn new(classes: usize) -> Self {
+        assert!(classes >= 2, "softmax needs >= 2 classes (got {classes})");
+        Self { classes }
+    }
+}
+
+impl Objective for Softmax {
+    fn name(&self) -> &'static str {
+        INFO.name
+    }
+
+    fn classes(&self) -> usize {
+        self.classes
+    }
+
+    fn grad_scale(&self) -> f32 {
+        1.0
+    }
+
+    fn loss_grad_into(&self, a: &Matrix, y: &[f32], x: &[f32], rows: &[u32], buf: &mut GradBuf) {
+        let (d, k) = (a.cols(), self.classes);
+        debug_assert_eq!(x.len(), k * d);
+        for (i, &r) in rows.iter().enumerate() {
+            let r = r as usize;
+            debug_assert!(r < a.rows(), "row index {r} out of shard");
+            let row = a.row(r);
+            // Stable softmax over the k logits (scratch reused per step).
+            for c in 0..k {
+                buf.logits[c] = dot_f32(row, &x[c * d..(c + 1) * d]);
+            }
+            let max = buf.logits.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+            let mut denom = 0.0f32;
+            for l in buf.logits.iter_mut() {
+                *l = (*l - max).exp();
+                denom += *l;
+            }
+            let cls = (y[r] as usize).min(k - 1);
+            for c in 0..k {
+                buf.coeff[i * k + c] =
+                    buf.logits[c] / denom - if c == cls { 1.0 } else { 0.0 };
+            }
+        }
+    }
+
+    fn eval_chunk(
+        &self,
+        a: &Matrix,
+        y: &[f32],
+        ref_pred: &[f32],
+        x: &[f32],
+        lo: usize,
+        hi: usize,
+    ) -> (f64, f64) {
+        let (d, k) = (a.cols(), self.classes);
+        let (mut cost, mut num) = (0.0f64, 0.0f64);
+        let mut z = vec![0.0f64; k]; // per-chunk scratch (eval is not the hot path)
+        for i in lo..hi {
+            let row = a.row(i);
+            let mut max = f64::NEG_INFINITY;
+            for c in 0..k {
+                z[c] = dot_f32(row, &x[c * d..(c + 1) * d]) as f64;
+                max = max.max(z[c]);
+            }
+            let lse = max + z.iter().map(|&v| (v - max).exp()).sum::<f64>().ln();
+            let cls = (y[i] as usize).min(k - 1);
+            cost += lse - z[cls];
+            for c in 0..k {
+                let de = z[c] - ref_pred[i * k + c] as f64;
+                num += de * de;
+            }
+        }
+        (cost, num)
+    }
+
+    fn reference_predictions(&self, ds: &Dataset) -> Vec<f32> {
+        let (m, d, k) = (ds.rows(), ds.dim(), self.classes);
+        let mut out = vec![0.0f32; m * k];
+        match &ds.x_star {
+            Some(w) => {
+                assert_eq!(
+                    w.len(),
+                    k * d,
+                    "multiclass x* must be class-major k·d (objective classes = {k})"
+                );
+                for i in 0..m {
+                    let row = ds.a.row(i);
+                    for c in 0..k {
+                        out[i * k + c] = dot_f32(row, &w[c * d..(c + 1) * d]);
+                    }
+                }
+            }
+            // No ground truth: the all-zero reference makes the metric
+            // an absolute logit norm (the evaluator's zero-reference
+            // rule — see `NativeEvaluator`).
+            None => {}
+        }
+        out
+    }
+
+    fn block_grad_into(&self, a: &Matrix, y: &[f32], x: &[f32], range: Range<usize>, g: &mut [f32]) {
+        let (d, k) = (a.cols(), self.classes);
+        debug_assert_eq!(g.len(), k * d);
+        let mut logits = vec![0.0f32; k];
+        for i in range {
+            let row = a.row(i);
+            for c in 0..k {
+                logits[c] = dot_f32(row, &x[c * d..(c + 1) * d]);
+            }
+            let max = logits.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+            let mut denom = 0.0f32;
+            for l in logits.iter_mut() {
+                *l = (*l - max).exp();
+                denom += *l;
+            }
+            let cls = (y[i] as usize).min(k - 1);
+            for c in 0..k {
+                let coeff = logits[c] / denom - if c == cls { 1.0 } else { 0.0 };
+                axpy(coeff, row, &mut g[c * d..(c + 1) * d]);
+            }
+        }
+    }
+
+    fn lipschitz_hint(&self, ds: &Dataset) -> f64 {
+        // The softmax Jacobian satisfies ‖diag(p) − ppᵀ‖ ≤ 1/2.
+        0.5 * super::linreg::max_row_norm2(ds)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic_multiclass;
+
+    #[test]
+    fn coefficients_sum_to_zero_per_sample() {
+        // Σ_c (p_c − 1{y=c}) = 1 − 1 = 0.
+        let ds = synthetic_multiclass(64, 6, 3, 5);
+        let obj = Softmax::new(3);
+        let x = vec![0.05f32; 18];
+        let rows = [0u32, 9, 33];
+        let mut buf = GradBuf::new(3, 3);
+        obj.loss_grad_into(&ds.a, &ds.y, &x, &rows, &mut buf);
+        for i in 0..3 {
+            let s: f32 = buf.coeff[i * 3..(i + 1) * 3].iter().sum();
+            assert!(s.abs() < 1e-5, "sample {i}: coeff sum {s}");
+            // The true class's coefficient is negative (p − 1 < 0).
+            let cls = ds.y[rows[i] as usize] as usize;
+            assert!(buf.coeff[i * 3 + cls] < 0.0);
+        }
+    }
+
+    #[test]
+    fn zero_model_costs_chance_level() {
+        // At x = 0 every sample costs ln k.
+        let ds = synthetic_multiclass(400, 8, 5, 9);
+        let obj = Softmax::new(5);
+        let (cost, _) =
+            obj.eval_chunk(&ds.a, &ds.y, &vec![0.0; 400 * 5], &vec![0.0; 8 * 5], 0, 400);
+        assert!((cost - 400.0 * (5.0f64).ln()).abs() < 1e-6, "{cost}");
+    }
+
+    #[test]
+    fn reference_predictions_are_true_logits() {
+        let ds = synthetic_multiclass(50, 4, 3, 2);
+        let obj = Softmax::new(3);
+        let z = obj.reference_predictions(&ds);
+        assert_eq!(z.len(), 150);
+        let w = ds.x_star.as_ref().unwrap();
+        let want = dot_f32(ds.a.row(7), &w[4..8]); // class 1 of row 7
+        assert_eq!(z[7 * 3 + 1].to_bits(), want.to_bits());
+    }
+}

@@ -43,6 +43,7 @@ use crate::coordinator::runtime::{Report, Task, WorkerRuntime};
 use crate::coordinator::EpochStats;
 use crate::data::Dataset;
 use crate::linalg::weighted_sum;
+use crate::objective::{DynObjective, Objective};
 use crate::partition::Shard;
 use crate::rng::Xoshiro256pp;
 use crate::straggler::{CommModel, DelayModel};
@@ -89,6 +90,10 @@ pub struct EpochCtx<'a> {
     pub delay: &'a DelayModel,
     pub comm: &'a CommModel,
     pub consts: Consts,
+    /// The run's training objective. Protocol bodies never consult it —
+    /// they are objective-blind by construction — but the shared
+    /// sub-calculus ([`EpochCtx::block_gradient`]) dispatches through it.
+    pub objective: &'a DynObjective,
     pub root: &'a Xoshiro256pp,
     /// Master's combined parameter vector x_t.
     pub x: &'a mut Vec<f32>,
@@ -153,17 +158,15 @@ impl EpochCtx<'_> {
             .fold(0.0f64, f64::max)
     }
 
-    /// Full gradient of block `blk`: 2 Σ_{i∈block} a_i (a_i·x − y_i),
-    /// computed over the master's dataset view.
+    /// Full gradient of block `blk` over the master's dataset view,
+    /// dispatched through the run's objective (least squares:
+    /// `2 Σ_{i∈block} a_i (a_i·x − y_i)`, bit-identical to the
+    /// pre-refactor hard-wired loop; cross-entropy objectives
+    /// analogous). Length = the model dimension `x.len()`.
     pub fn block_gradient(&self, blk: usize) -> Vec<f32> {
         let range = crate::partition::block_range(self.ds.rows(), self.cfg.workers, blk);
-        let d = self.ds.dim();
-        let mut g = vec![0.0f32; d];
-        for i in range {
-            let row = self.ds.a.row(i);
-            let r = 2.0 * (crate::linalg::dot_f32(row, &*self.x) - self.ds.y[i]);
-            crate::linalg::axpy(r, row, &mut g);
-        }
+        let mut g = vec![0.0f32; self.x.len()];
+        self.objective.block_grad_into(&self.ds.a, &self.ds.y, self.x, range, &mut g);
         g
     }
 }

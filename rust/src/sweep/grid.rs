@@ -50,6 +50,11 @@ pub struct Grid {
     pub t: Vec<f64>,
     /// Master waiting-time guards T_c (empty = base).
     pub t_c: Vec<f64>,
+    /// Objective axis values (empty = each scenario's natural
+    /// objective). Applied after the scenario, via
+    /// [`crate::objective::apply_axis`]: the dataset kind is swapped to
+    /// the objective's workload, keeping the grid point's (m, d).
+    pub objectives: Vec<String>,
     /// Compute backends (empty = base).
     pub backends: Vec<Backend>,
     /// Execution runtimes (empty = base) — sweep the same grid point
@@ -73,6 +78,7 @@ impl Grid {
             redundancy: Vec::new(),
             t: Vec::new(),
             t_c: Vec::new(),
+            objectives: Vec::new(),
             backends: Vec::new(),
             runtimes: Vec::new(),
             seeds: vec![seed],
@@ -106,6 +112,11 @@ impl Grid {
 
     pub fn t_c(mut self, v: impl IntoIterator<Item = f64>) -> Self {
         self.t_c = v.into_iter().collect();
+        self
+    }
+
+    pub fn objectives<S: Into<String>>(mut self, v: impl IntoIterator<Item = S>) -> Self {
+        self.objectives = v.into_iter().map(Into::into).collect();
         self
     }
 
@@ -149,6 +160,7 @@ impl Grid {
             .map(|m| if method_uses_t(m) { self.t.len().max(1) } else { 1 })
             .sum();
         self.scenarios.len()
+            * Self::axis_len(self.objectives.len())
             * method_t_cells
             * Self::axis_len(self.workers.len())
             * Self::axis_len(self.redundancy.len())
@@ -206,8 +218,17 @@ impl Grid {
             );
         }
 
+        // Objective axis: `None` = keep each scenario's natural
+        // objective; values are applied after the scenario so the
+        // workload swap sees the scenario's (m, d).
+        let objectives: Vec<Option<&str>> = if self.objectives.is_empty() {
+            vec![None]
+        } else {
+            self.objectives.iter().map(|o| Some(o.as_str())).collect()
+        };
         let mut cells = Vec::with_capacity(self.len());
         for sc in &self.scenarios {
+            for &obj in &objectives {
             for method in &self.methods {
                 // The T axis only applies to budgeted methods; for the
                 // step-counted baselines every T value would produce the
@@ -221,6 +242,9 @@ impl Grid {
                                 for &bk in &backends {
                                     for &rt in &runtimes {
                                         let mut group = format!("{sc}/{method}");
+                                        if let (true, Some(o)) = (objectives.len() > 1, obj) {
+                                            group.push_str(&format!("/obj-{o}"));
+                                        }
                                         if workers.len() > 1 {
                                             group.push_str(&format!("/N{n}"));
                                         }
@@ -247,6 +271,9 @@ impl Grid {
                                             cfg.backend = bk;
                                             cfg.runtime = rt;
                                             scenarios::apply(sc, &mut cfg)?;
+                                            if let Some(o) = obj {
+                                                crate::objective::apply_axis(o, &mut cfg)?;
+                                            }
                                             cfg.method = method_for(method, &cfg, t)?;
                                             cfg.seed = seed;
                                             cfg.name = format!("{group}/seed{seed}");
@@ -267,6 +294,7 @@ impl Grid {
                         }
                     }
                 }
+            }
             }
         }
         Ok(cells)
@@ -291,8 +319,8 @@ impl Grid {
     /// ```
     pub fn from_json(v: &Value) -> Result<Self> {
         const KNOWN: &[&str] = &[
-            "base", "scenarios", "methods", "workers", "redundancy", "t", "t_c", "backends",
-            "runtimes", "time_scale", "seeds",
+            "base", "scenarios", "methods", "workers", "redundancy", "t", "t_c", "objectives",
+            "backends", "runtimes", "time_scale", "seeds",
         ];
         let obj = v.as_obj().ok_or_else(|| anyhow!("sweep spec must be a JSON object"))?;
         for key in obj.keys() {
@@ -325,6 +353,12 @@ impl Grid {
         }
         if let Some(a) = v.get("t_c") {
             g.t_c = f64_list(a, "t_c")?;
+        }
+        if let Some(a) = v.get("objectives") {
+            g.objectives = str_list(a, "objectives")?;
+            for o in &g.objectives {
+                crate::objective::lookup(o).map_err(|e| anyhow!("objectives: {e}"))?;
+            }
         }
         if let Some(a) = v.get("backends") {
             g.backends = str_list(a, "backends")?
@@ -566,6 +600,47 @@ mod tests {
             .unwrap_err()
             .to_string();
         assert!(err.contains("thread-pinned"), "{err}");
+    }
+
+    #[test]
+    fn objective_axis_expands_and_keys_groups() {
+        let g = Grid::new(tiny_base())
+            .scenarios(["ideal"])
+            .methods(["anytime", "sync"])
+            .objectives(["linreg", "logreg", "softmax"]);
+        assert_eq!(g.len(), 6);
+        let cells = g.expand().unwrap();
+        assert_eq!(cells.len(), 6);
+        // Every objective keys its group and swaps the workload.
+        for o in ["linreg", "logreg", "softmax"] {
+            assert!(
+                cells.iter().any(|c| c.group.contains(&format!("/obj-{o}"))),
+                "missing /obj-{o}: {:?}",
+                cells.iter().map(|c| &c.group).collect::<Vec<_>>()
+            );
+        }
+        for c in &cells {
+            assert_eq!(c.cfg.objective.name(), {
+                let o = c.group.split("/obj-").nth(1).unwrap();
+                o.split('/').next().unwrap()
+            });
+            c.cfg.validate().unwrap();
+            // The workload swap preserved the grid point's (m, d).
+            assert_eq!(c.cfg.data.rows(), 1_200);
+            assert_eq!(c.cfg.data.dim(), 16);
+        }
+        // Single-objective grids keep their group keys unchanged.
+        let cells = Grid::new(tiny_base()).scenarios(["ideal"]).expand().unwrap();
+        assert!(cells.iter().all(|c| !c.group.contains("/obj-")));
+        // JSON spec form + unknown names fail closed.
+        let g = Grid::from_json(
+            &parse(r#"{"scenarios": ["ideal"], "objectives": ["linreg", "softmax"]}"#).unwrap(),
+        )
+        .unwrap();
+        assert_eq!(g.objectives, vec!["linreg", "softmax"]);
+        assert!(Grid::from_json(&parse(r#"{"objectives": ["hinge"]}"#).unwrap()).is_err());
+        let g = Grid::new(tiny_base()).scenarios(["ideal"]).objectives(["hinge"]);
+        assert!(g.expand().is_err());
     }
 
     #[test]

@@ -85,6 +85,13 @@ pub fn cli_command() -> Command {
         .flag("redundancy", FlagKind::Str, None, "comma-separated redundancy S values")
         .flag("t", FlagKind::Str, None, "comma-separated epoch budgets T (seconds)")
         .flag("t-c", FlagKind::Str, None, "comma-separated waiting-time guards T_c")
+        .flag(
+            "objective",
+            FlagKind::Str,
+            None,
+            "comma-separated objectives (linreg|logreg|softmax) — sweep the objective \
+             axis (swaps each cell's workload to the objective's dataset kind)",
+        )
         .flag("backend", FlagKind::Str, None, "comma-separated backends (native|xla)")
         .flag(
             "runtime",
@@ -154,6 +161,12 @@ pub fn grid_from_matches(m: &Matches) -> Result<Grid> {
     }
     if let Some(s) = m.get("t-c") {
         g.t_c = parse_num_list(s, "t-c")?;
+    }
+    if let Some(s) = m.get("objective") {
+        g.objectives = split_names(s);
+        for o in &g.objectives {
+            crate::objective::lookup(o).map_err(|e| anyhow!("--objective: {e}"))?;
+        }
     }
     if let Some(s) = m.get("backend") {
         g.backends = split_names(s)

@@ -60,6 +60,10 @@ pub const ALL: &[ScenarioInfo] = &[
         about: "synthetic logistic-regression workload under EC2 noise",
     },
     ScenarioInfo {
+        name: "softmax",
+        about: "synthetic 4-class softmax workload under EC2 noise",
+    },
+    ScenarioInfo {
         name: "msd",
         about: "MSD-like year-regression workload (90 features) under EC2 noise",
     },
@@ -169,6 +173,16 @@ pub fn apply(name: &str, cfg: &mut RunConfig) -> Result<()> {
             cfg.env = StragglerEnv::ec2_default(0.02);
             cfg.comm = CommSpec::Fixed { secs: 0.5 };
         }
+        "softmax" => {
+            cfg.data = DataSpec::SyntheticMulticlass {
+                m: cfg.data.rows(),
+                d: cfg.data.dim(),
+                classes: crate::objective::DEFAULT_SOFTMAX_CLASSES,
+            };
+            cfg.schedule = Schedule::Constant { lr: 0.1 };
+            cfg.env = StragglerEnv::ec2_default(0.02);
+            cfg.comm = CommSpec::Fixed { secs: 0.5 };
+        }
         "msd" => {
             cfg.data = DataSpec::MsdLike { m: cfg.data.rows() };
             cfg.schedule = Schedule::Constant { lr: 2e-4 };
@@ -177,6 +191,9 @@ pub fn apply(name: &str, cfg: &mut RunConfig) -> Result<()> {
         }
         other => bail!("unknown scenario `{other}` (available: {})", names().join(", ")),
     }
+    // Workload scenarios swap the dataset: keep the objective aligned
+    // with whatever the scenario left in place.
+    cfg.objective = cfg.data.default_objective();
     Ok(())
 }
 
@@ -244,5 +261,15 @@ mod tests {
         apply("msd", &mut cfg).unwrap();
         assert!(matches!(cfg.data, DataSpec::MsdLike { .. }));
         assert_eq!(cfg.data.dim(), 90);
+        // Workload scenarios keep the objective aligned with the data.
+        let mut cfg = crate::sweep::sweep_base();
+        apply("softmax", &mut cfg).unwrap();
+        assert!(matches!(cfg.data, DataSpec::SyntheticMulticlass { .. }));
+        assert_eq!(cfg.objective.name(), "softmax");
+        cfg.validate().unwrap();
+        let mut cfg = crate::sweep::sweep_base();
+        apply("logreg", &mut cfg).unwrap();
+        assert_eq!(cfg.objective.name(), "logreg");
+        cfg.validate().unwrap();
     }
 }

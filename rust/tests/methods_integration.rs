@@ -343,6 +343,7 @@ fn async_dead_worker_never_contributes() {
 fn logistic_regression_anytime_converges() {
     let mut cfg = base_cfg();
     cfg.data = DataSpec::SyntheticLogistic { m: 6_000, d: 24 };
+    cfg.objective = cfg.data.default_objective();
     cfg.schedule = Schedule::Constant { lr: 0.1 };
     cfg.method = anytime(30.0);
     cfg.epochs = 10;
@@ -361,13 +362,14 @@ fn logistic_regression_anytime_converges() {
 
 #[test]
 fn logistic_native_matches_textbook_update() {
-    use anytime_sgd::backend::{Consts, NativeWorker, Objective, WorkerCompute};
+    use anytime_sgd::backend::{Consts, NativeWorker, WorkerCompute};
+    use anytime_sgd::objective::LogReg;
     use anytime_sgd::partition::{materialize_shards, Assignment};
 
     let ds = anytime_sgd::data::synthetic_logreg(200, 8, 3);
     let shards = materialize_shards(&ds, &Assignment::new(1, 0));
     let shard = Arc::new(shards.into_iter().next().unwrap());
-    let mut w = NativeWorker::with_objective(shard.clone(), 2, Objective::Logistic);
+    let mut w = NativeWorker::with_objective(shard.clone(), 2, LogReg);
     let x0 = vec![0.05f32; 8];
     let idx = [3u32, 77, 11, 150]; // 2 steps of batch 2
     let out = w.run_steps(&x0, &idx, 0.0, Consts::constant(0.2));

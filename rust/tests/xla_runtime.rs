@@ -197,7 +197,7 @@ fn lm_runner_tiny_trains() {
 
 #[test]
 fn logreg_xla_matches_native() {
-    use anytime_sgd::backend::Objective;
+    use anytime_sgd::objective::{LogReg, ObjectiveSpec};
     let Some(eng) = engine() else { return };
     if eng.manifest().of_kind("logreg_step").is_empty() {
         eprintln!("SKIP: no logreg artifacts");
@@ -207,12 +207,9 @@ fn logreg_xla_matches_native() {
     let shards = materialize_shards(&ds, &Assignment::new(10, 0));
     let shard = Arc::new(shards.into_iter().next().unwrap());
 
-    let mut xw = XlaWorker::with_objective(eng, &shard, Objective::Logistic).expect("xla logreg");
-    let mut nw = anytime_sgd::backend::NativeWorker::with_objective(
-        shard.clone(),
-        32,
-        Objective::Logistic,
-    );
+    let mut xw =
+        XlaWorker::with_objective(eng, &shard, ObjectiveSpec::Logreg).expect("xla logreg");
+    let mut nw = anytime_sgd::backend::NativeWorker::with_objective(shard.clone(), 32, LogReg);
     let mut rng = Xoshiro256pp::seed_from_u64(4);
     let mut x0 = vec![0.0f32; 200];
     rng.fill_normal_f32(&mut x0);
