@@ -171,6 +171,51 @@ impl Bench {
     pub fn results(&self) -> &[Stats] {
         &self.results
     }
+
+    /// All recorded results as the committed `BENCH_*.json` shape:
+    /// `{"benches": [{name, mean_ns, p50_ns, p95_ns, min_ns, iters}]}`
+    /// — the same keys as the `BENCHLINE` rows, one document per
+    /// bench binary run.
+    pub fn results_json(&self) -> crate::ser::Value {
+        use crate::ser::Value;
+        let benches: Vec<Value> = self
+            .results
+            .iter()
+            .map(|s| {
+                Value::obj(vec![
+                    ("name", s.name.as_str().into()),
+                    ("mean_ns", Value::Num(s.mean_ns)),
+                    ("p50_ns", Value::Num(s.median_ns)),
+                    ("p95_ns", Value::Num(s.p95_ns)),
+                    ("min_ns", Value::Num(s.min_ns)),
+                    ("iters", s.iters.into()),
+                ])
+            })
+            .collect();
+        Value::obj(vec![("benches", Value::Arr(benches))])
+    }
+
+    /// Write [`Bench::results_json`] to `path` (creates parent dirs).
+    pub fn write_json(&self, path: &std::path::Path) -> std::io::Result<()> {
+        if let Some(dir) = path.parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)?;
+            }
+        }
+        std::fs::write(path, crate::ser::to_string_pretty(&self.results_json()))
+    }
+
+    /// If `BENCH_JSON=<path>` is set, write the results there (how CI
+    /// scrapes bench binaries into committed `BENCH_*.json` artifacts
+    /// without parsing stdout). A write failure is reported, not fatal
+    /// — a bench run's numbers still printed.
+    pub fn write_json_env(&self) {
+        if let Ok(path) = std::env::var("BENCH_JSON") {
+            if let Err(e) = self.write_json(std::path::Path::new(&path)) {
+                eprintln!("benchkit: failed to write {path}: {e}");
+            }
+        }
+    }
 }
 
 #[cfg(test)]
@@ -201,5 +246,29 @@ mod tests {
         let s = b.run_with_throughput("tp", 1000.0, || black_box(42));
         assert!(s.items_per_sec().unwrap() > 0.0);
         assert_eq!(b.results().len(), 1);
+    }
+
+    #[test]
+    fn json_artifact_shape() {
+        std::env::set_var("BENCH_FAST", "1");
+        let mut b = Bench::new();
+        b.run("a", || black_box(1));
+        b.run("b", || black_box(2));
+        let v = b.results_json();
+        let rows = v.get("benches").unwrap().as_arr().unwrap();
+        assert_eq!(rows.len(), 2);
+        for row in rows {
+            assert!(row.get_str("name").is_some());
+            assert!(row.get_f64("mean_ns").unwrap() > 0.0);
+            assert!(row.get_f64("p50_ns").is_some());
+            assert!(row.get_f64("p95_ns").is_some());
+            assert!(row.get_f64("min_ns").is_some());
+            assert!(row.get_usize("iters").unwrap() >= 5);
+        }
+        let path = std::env::temp_dir().join(format!("benchkit-{}.json", std::process::id()));
+        b.write_json(&path).unwrap();
+        let back = crate::ser::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        assert_eq!(back.get("benches").unwrap().as_arr().unwrap().len(), 2);
+        std::fs::remove_file(path).ok();
     }
 }

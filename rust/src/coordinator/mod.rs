@@ -92,6 +92,16 @@ pub struct RunResult {
     pub x: Vec<f32>,
     /// Initial evaluation (epoch 0 reference point).
     pub initial_err: f64,
+    /// Per-epoch wire accounting (empty for in-process runtimes).
+    pub net: Vec<runtime::NetEpochStats>,
+}
+
+impl RunResult {
+    /// Fold the run's epoch + wire records into the paper-native time
+    /// ledger (`train --report`).
+    pub fn report(&self) -> crate::obs::report::RunReport {
+        crate::obs::report::RunReport::from_run(&self.epochs, &self.net)
+    }
 }
 
 /// The master + workers topology for one run.
@@ -327,10 +337,14 @@ impl Trainer {
 
     /// Run all epochs, evaluating per `eval_every`.
     pub fn run(&mut self) -> RunResult {
+        let _run_span = crate::obs::span::span("run", "trainer");
         let label = format!("{}[{}]", self.cfg.method.name(), self.cfg.name);
         let mut trace = Trace::new(label);
         self.clock.start_run();
-        let initial = self.evaluator.eval(&self.x);
+        let initial = {
+            let _sp = crate::obs::span::span_with("eval", "trainer", &[("epoch", 0.0)]);
+            self.evaluator.eval(&self.x)
+        };
         trace.points.push(TracePoint {
             epoch: 0,
             time: 0.0,
@@ -342,7 +356,9 @@ impl Trainer {
             let _ = log.run_started(&self.cfg.name, self.cfg.workers, self.cfg.seed);
         }
         let mut epochs = Vec::with_capacity(self.cfg.epochs);
+        let mut net_epochs = Vec::new();
         for e in 0..self.cfg.epochs {
+            let _ep_span = crate::obs::span::span_with("epoch", "trainer", &[("epoch", e as f64)]);
             let stats = self.run_epoch();
             self.clock.charge_epoch(
                 e,
@@ -350,16 +366,34 @@ impl Trainer {
                 stats.comm_secs,
                 stats.worker_finish.clone(),
             );
+            // Networked runtimes also account the epoch's real
+            // communication cost (bytes, round trips, drops); drained
+            // every epoch so `RunResult::report` sees it even without
+            // an events sink.
+            let net = self.exec.net_stats();
             if let Some(log) = self.events.as_mut() {
                 let _ = log.epoch(e, &stats, self.clock.now());
-                // Networked runtimes also account the epoch's real
-                // communication cost (bytes, round trips, drops).
-                if let Some(net) = self.exec.net_stats() {
-                    let _ = log.net(e, &net);
+                if let Some(net) = net.as_ref() {
+                    let _ = log.net(e, net);
                 }
             }
+            if let Some(net) = net {
+                net_epochs.push(net);
+            }
+            if crate::obs::enabled() {
+                crate::obs::metrics::add("trainer.epochs", 1);
+                crate::obs::metrics::fadd("trainer.compute_secs", stats.compute_secs);
+                crate::obs::metrics::fadd("trainer.comm_secs", stats.comm_secs);
+            }
             if (e + 1) % self.cfg.eval_every == 0 || e + 1 == self.cfg.epochs {
-                let ev = self.evaluator.eval(&self.x);
+                let ev = {
+                    let _sp = crate::obs::span::span_with(
+                        "eval",
+                        "trainer",
+                        &[("epoch", (e + 1) as f64)],
+                    );
+                    self.evaluator.eval(&self.x)
+                };
                 if let Some(log) = self.events.as_mut() {
                     let _ = log.eval(e + 1, ev.norm_err, ev.cost, self.cfg.objective.name());
                 }
@@ -376,7 +410,13 @@ impl Trainer {
         if let Some(log) = self.events.as_mut() {
             let _ = log.run_finished(trace.final_err());
         }
-        RunResult { trace, epochs, x: self.x.clone(), initial_err: initial.norm_err }
+        RunResult {
+            trace,
+            epochs,
+            x: self.x.clone(),
+            initial_err: initial.norm_err,
+            net: net_epochs,
+        }
     }
 
     /// Run one epoch: lend the topology to the protocol as an

@@ -260,6 +260,11 @@ impl WorkerRuntime for SequentialRuntime {
                 WorkerEpochRate::StepSecs(s) => s,
             };
             let (q, busy) = plan(&self.delay, v, epoch, task.work, rate);
+            let _sp = crate::obs::span::span_with(
+                "compute",
+                "worker",
+                &[("worker", v as f64), ("epoch", epoch as f64), ("q", q as f64)],
+            );
             if q == 0 {
                 // Reported but completed nothing (or Busy work).
                 out.push(Some(idle_report(task.x0, busy)));
@@ -373,6 +378,11 @@ pub(crate) fn execute_planned(
     batch: usize,
     time_scale: f64,
 ) -> Report {
+    let _sp = crate::obs::span::span_with(
+        "compute",
+        "worker",
+        &[("worker", v as f64), ("target", task.target as f64)],
+    );
     if task.target == 0 {
         // Busy work, or a budget too tight for a single step: occupy
         // the worker for the modeled duration and report no steps.

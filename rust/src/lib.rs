@@ -40,6 +40,12 @@
 //!   [`config::RunConfig`], a named scenario library, a bounded-thread
 //!   parallel runner, and multi-seed mean ± CI aggregation
 //!   (`anytime-sgd sweep`).
+//! * **obs** — observability ([`obs`]): a scoped-span tracer emitting
+//!   Chrome trace-event JSON (`train --trace`), an atomic metrics
+//!   registry (`--metrics`), post-run utilization/straggler reports
+//!   (`--report`), and the `ANYTIME_SGD_LOG`-leveled logger — zero
+//!   cost when disabled, never touches `SimClock` or RNG streams
+//!   (DESIGN.md §8).
 //!
 //! The PJRT path (`runtime::Engine`, the XLA backend, the transformer
 //! LM) is gated behind the `xla` cargo feature; the default build is
@@ -69,6 +75,7 @@ pub mod methods;
 pub mod metrics;
 pub mod net;
 pub mod objective;
+pub mod obs;
 pub mod partition;
 pub mod protocols;
 pub mod rng;

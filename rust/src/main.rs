@@ -23,6 +23,7 @@ use anytime_sgd::cli::{Command, FlagKind};
 use anytime_sgd::config::{Backend, RunConfig, RuntimeSpec, DEFAULT_TIME_SCALE};
 use anytime_sgd::coordinator::Trainer;
 use anytime_sgd::figures::{self, FigOpts};
+use anytime_sgd::{log_error, log_info, log_warn};
 use std::path::Path;
 
 fn main() {
@@ -30,7 +31,9 @@ fn main() {
     let code = match dispatch(&args) {
         Ok(()) => 0,
         Err(e) => {
-            eprintln!("error: {e:#}");
+            // Errors go through the leveled logger too, so
+            // `ANYTIME_SGD_LOG=off` really silences stderr.
+            log_error!("cli", "{e:#}");
             1
         }
     };
@@ -125,8 +128,29 @@ fn cmd_train(args: &[String]) -> Result<()> {
             None,
             "dist: listen on this port for external `anytime-sgd worker` processes \
              instead of spawning children",
+        )
+        .flag(
+            "trace",
+            FlagKind::Str,
+            None,
+            "write a Chrome trace-event JSON of the run to this path (open in \
+             Perfetto / chrome://tracing)",
+        )
+        .flag("metrics", FlagKind::Str, None, "write a metrics-snapshot JSON to this path")
+        .flag(
+            "report",
+            FlagKind::Bool,
+            None,
+            "print the run's time ledger (per-worker utilization, straggler \
+             attribution, compute/comm/gather-stall) and write report.json to --out",
         );
     let m = cmd.parse(args).map_err(|e| anyhow::anyhow!("{e}"))?;
+    // Flip collection on before the trainer exists so dist
+    // admission/handshake spans are captured too. `--report` needs no
+    // instrumentation but enables collection for symmetry of artifacts.
+    if m.is_set("trace") || m.is_set("metrics") || m.bool_of("report") {
+        anytime_sgd::obs::enable();
+    }
 
     let mut cfg = if let Some(path) = m.get("config") {
         let text = std::fs::read_to_string(path)?;
@@ -153,7 +177,7 @@ fn cmd_train(args: &[String]) -> Result<()> {
     if let Some(r) = m.get("runtime") {
         cfg.runtime = RuntimeSpec::parse(r, m.f64_of("time-scale"))?;
     } else if m.bool_of("wallclock") {
-        eprintln!("note: --wallclock is deprecated; use --runtime real --time-scale ...");
+        log_warn!("cli", "--wallclock is deprecated; use --runtime real --time-scale ...");
         cfg.runtime = RuntimeSpec::parse("real", m.f64_of("time-scale"))?;
     }
     if m.is_set("spawn-workers") && m.is_set("listen") {
@@ -180,7 +204,8 @@ fn cmd_train(args: &[String]) -> Result<()> {
         }
     }
 
-    eprintln!(
+    log_info!(
+        "cli",
         "train: {} | data {:?} | objective {} | N={} S={} | backend {:?} | runtime {} | {} epochs",
         cfg.name,
         cfg.data,
@@ -198,13 +223,19 @@ fn cmd_train(args: &[String]) -> Result<()> {
         tr = tr.with_events(anytime_sgd::metrics::events::EventLog::create(Path::new(p))?);
     }
     let res = tr.run();
-    eprintln!(
+    log_info!(
+        "cli",
         "wall-clock: {:.2}s ({} {}: {:.1}s)",
         t0.elapsed().as_secs_f64(),
         tr.runtime_name(),
         if tr.runtime_name() == "sim" { "simulated" } else { "decompressed" },
         tr.now()
     );
+    // Drop the trainer before draining obs artifacts: the dist
+    // runtime's Drop joins its reader threads and reaps child
+    // processes, flushing their final frame-read spans into the
+    // collector.
+    drop(tr);
 
     let mut fig = anytime_sgd::metrics::Figure::new(res.trace.label.clone(), "time");
     println!("{}", {
@@ -212,9 +243,24 @@ fn cmd_train(args: &[String]) -> Result<()> {
         f.traces.push(res.trace.clone());
         f.render_table()
     });
+    let out_dir = std::path::PathBuf::from(m.str_of("out"));
+    if m.bool_of("report") {
+        let report = res.report();
+        print!("{}", report.render_table());
+        let p = report.write(&out_dir)?;
+        log_info!("cli", "report written to {}", p.display());
+    }
     fig.traces.push(res.trace);
-    let path = fig.write(Path::new(&m.str_of("out")))?;
-    eprintln!("trace written to {}", path.display());
+    let path = fig.write(&out_dir)?;
+    log_info!("cli", "trace written to {}", path.display());
+    if let Some(p) = m.get("trace") {
+        anytime_sgd::obs::span::write_chrome_trace(Path::new(p))?;
+        log_info!("cli", "chrome trace written to {p} (open in https://ui.perfetto.dev)");
+    }
+    if let Some(p) = m.get("metrics") {
+        anytime_sgd::obs::metrics::write_json(Path::new(p))?;
+        log_info!("cli", "metrics snapshot written to {p}");
+    }
     Ok(())
 }
 
@@ -229,20 +275,38 @@ fn cmd_worker(args: &[String]) -> Result<()> {
             None,
             "fault injection: drop the connection after serving N tasks \
              (simulates a mid-run crash; used by tests/CI churn scenarios)",
+        )
+        .flag(
+            "trace",
+            FlagKind::Str,
+            None,
+            "write this worker's Chrome trace-event JSON (task/heartbeat/frame \
+             spans) to this path on exit",
         );
     let m = cmd.parse(args).map_err(|e| anyhow::anyhow!("{e}"))?;
     let Some(addr) = m.get("connect") else {
         bail!("worker needs --connect HOST:PORT (start the master with --runtime dist --listen PORT)");
     };
+    if m.is_set("trace") {
+        anytime_sgd::obs::enable();
+    }
     let opts = anytime_sgd::net::worker::WorkerOpts {
         die_after_tasks: m.is_set("die-after").then(|| m.usize_of("die-after")),
     };
-    anytime_sgd::net::worker::run(addr, opts)
+    let result = anytime_sgd::net::worker::run(addr, opts);
+    if let Some(p) = m.get("trace") {
+        anytime_sgd::obs::span::write_chrome_trace(Path::new(p))?;
+        log_info!("cli", "worker trace written to {p}");
+    }
+    result
 }
 
 fn cmd_sweep(args: &[String]) -> Result<()> {
     let cmd = anytime_sgd::sweep::cli_command();
     let m = cmd.parse(args).map_err(|e| anyhow::anyhow!("{e}"))?;
+    if m.is_set("trace") || m.bool_of("report") {
+        anytime_sgd::obs::enable();
+    }
 
     let grid = if let Some(path) = m.get("spec") {
         let text = std::fs::read_to_string(path)?;
@@ -258,7 +322,8 @@ fn cmd_sweep(args: &[String]) -> Result<()> {
 
     let cells = grid.expand()?;
     let threads = anytime_sgd::sweep::resolve_threads(m.usize_of("threads"));
-    eprintln!(
+    log_info!(
+        "cli",
         "sweep `{}`: {} cells in {} groups ({} scenarios x {} methods, {} seeds) on {threads} threads",
         m.str_of("name"),
         cells.len(),
@@ -271,7 +336,8 @@ fn cmd_sweep(args: &[String]) -> Result<()> {
     let t0 = std::time::Instant::now();
     let results = anytime_sgd::sweep::run_cells(&cells, threads)?;
     let dt = t0.elapsed().as_secs_f64();
-    eprintln!(
+    log_info!(
+        "cli",
         "ran {} cells in {:.2}s ({:.2} cells/s)",
         results.len(),
         dt,
@@ -280,9 +346,18 @@ fn cmd_sweep(args: &[String]) -> Result<()> {
 
     let agg = anytime_sgd::sweep::aggregate(&m.str_of("name"), &results);
     print!("{}", agg.render_summary());
+    if m.bool_of("report") {
+        let rows: Vec<(&str, &anytime_sgd::obs::report::RunReport)> =
+            results.iter().map(|r| (r.cell.cfg.name.as_str(), &r.report)).collect();
+        print!("{}", anytime_sgd::obs::report::render_sweep(&rows));
+    }
     let out = std::path::PathBuf::from(m.str_of("out"));
     for p in agg.write(&out)? {
-        eprintln!("-> {}", p.display());
+        log_info!("cli", "-> {}", p.display());
+    }
+    if let Some(p) = m.get("trace") {
+        anytime_sgd::obs::span::write_chrome_trace(Path::new(p))?;
+        log_info!("cli", "chrome trace written to {p} (open in https://ui.perfetto.dev)");
     }
     Ok(())
 }

@@ -26,9 +26,10 @@ impl EventLog {
     }
 
     fn emit(&mut self, v: &Value) -> std::io::Result<()> {
-        // Compact one-line form: reuse the pretty writer and strip
-        // newlines (values here are shallow; cosmetics don't matter).
-        let text = crate::ser::to_string_pretty(v).replace('\n', " ");
+        // True one-line form: the compact writer escapes newlines
+        // inside string values, so a newline-bearing run name can't
+        // split a record across JSONL lines.
+        let text = crate::ser::to_string_compact(v);
         writeln!(self.out, "{text}")?;
         self.lines += 1;
         Ok(())
@@ -190,6 +191,29 @@ mod tests {
         assert_eq!(rtt[1], crate::ser::Value::Null);
         let eval = crate::ser::parse(lines[3]).unwrap();
         assert_eq!(eval.get_str("objective"), Some("linreg"));
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn newline_bearing_strings_stay_one_line() {
+        // Regression: the old emit() compacted via replace('\n', " ")
+        // on the pretty form, which split any record whose *string
+        // values* contained newlines — and corrupted the value itself.
+        let path =
+            std::env::temp_dir().join(format!("anytime-events-nl-{}.jsonl", std::process::id()));
+        let name = "multi\nline \"name\"";
+        {
+            let mut log = EventLog::create(&path).unwrap();
+            log.run_started(name, 2, 7).unwrap();
+            log.run_finished(0.25).unwrap();
+            assert_eq!(log.lines(), 2);
+        }
+        let text = std::fs::read_to_string(&path).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 2, "one JSONL line per event: {text:?}");
+        let header = crate::ser::parse(lines[0]).unwrap();
+        assert_eq!(header.get_str("event"), Some("run_started"));
+        assert_eq!(header.get_str("name"), Some(name), "newline must survive the round trip");
         std::fs::remove_file(path).ok();
     }
 }

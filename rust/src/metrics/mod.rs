@@ -217,15 +217,22 @@ pub struct Histogram {
     pub hi: f64,
     pub counts: Vec<usize>,
     pub overflow: usize,
+    /// Samples below `lo` (previously folded silently into bin 0 by
+    /// the saturating float→usize cast).
+    pub underflow: usize,
 }
 
 impl Histogram {
     pub fn new(lo: f64, hi: f64, bins: usize) -> Self {
         assert!(hi > lo && bins > 0);
-        Self { lo, hi, counts: vec![0; bins], overflow: 0 }
+        Self { lo, hi, counts: vec![0; bins], overflow: 0, underflow: 0 }
     }
 
     pub fn add(&mut self, x: f64) {
+        if x < self.lo {
+            self.underflow += 1;
+            return;
+        }
         if x >= self.hi {
             self.overflow += 1;
             return;
@@ -236,7 +243,7 @@ impl Histogram {
     }
 
     pub fn total(&self) -> usize {
-        self.counts.iter().sum::<usize>() + self.overflow
+        self.counts.iter().sum::<usize>() + self.overflow + self.underflow
     }
 
     /// ASCII rendering with bin ranges and bars.
@@ -244,6 +251,7 @@ impl Histogram {
         let max = self.counts.iter().copied().max().unwrap_or(1).max(1);
         let bw = (self.hi - self.lo) / self.counts.len() as f64;
         let mut out = String::new();
+        let _ = writeln!(out, "<{:<14.1} {:>6} (below)", self.lo, self.underflow);
         for (i, &c) in self.counts.iter().enumerate() {
             let bar = "#".repeat(c * width / max);
             let _ = writeln!(
@@ -262,6 +270,7 @@ impl Histogram {
     pub fn to_csv(&self) -> String {
         let bw = (self.hi - self.lo) / self.counts.len() as f64;
         let mut out = String::from("bin_lo,bin_hi,count\n");
+        let _ = writeln!(out, "-inf,{:.4},{}", self.lo, self.underflow);
         for (i, &c) in self.counts.iter().enumerate() {
             let _ = writeln!(out, "{:.4},{:.4},{c}", self.lo + i as f64 * bw, self.lo + (i + 1) as f64 * bw);
         }
@@ -350,8 +359,24 @@ mod tests {
         assert_eq!(h.counts[1], 2);
         assert_eq!(h.counts[9], 1);
         assert_eq!(h.overflow, 1);
+        assert_eq!(h.underflow, 0);
         assert_eq!(h.total(), 5);
         assert!(h.render(40).contains("(tail)"));
-        assert!(h.to_csv().lines().count() == 12);
+        // header + underflow row + 10 bins + overflow row
+        assert!(h.to_csv().lines().count() == 13);
+    }
+
+    #[test]
+    fn histogram_counts_underflow_separately() {
+        let mut h = Histogram::new(10.0, 20.0, 5);
+        h.add(9.9);
+        h.add(-3.0);
+        h.add(10.0);
+        assert_eq!(h.underflow, 2, "below-lo samples must not fold into bin 0");
+        assert_eq!(h.counts[0], 1);
+        assert_eq!(h.total(), 3);
+        assert!(h.render(40).contains("(below)"));
+        let csv = h.to_csv();
+        assert_eq!(csv.lines().nth(1).unwrap(), "-inf,10.0000,2");
     }
 }

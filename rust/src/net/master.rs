@@ -125,8 +125,9 @@ impl DistRuntime {
                 children.push(child);
             }
         } else {
-            eprintln!(
-                "dist: listening on {local}; waiting for {n} workers \
+            crate::log_info!(
+                "net",
+                "listening on {local}; waiting for {n} workers \
                  (`anytime-sgd worker --connect <host>:{}`)",
                 local.port()
             );
@@ -134,6 +135,7 @@ impl DistRuntime {
 
         let admit_budget =
             if spawn { super::ADMIT_TIMEOUT_SPAWN } else { super::ADMIT_TIMEOUT_EXTERNAL };
+        let _admit_span = crate::obs::span::span_with("admit", "net", &[("workers", n as f64)]);
         match Self::admit(&listener, shards, batch, objective, seed, consts, time_scale,
             admit_budget)
         {
@@ -206,6 +208,7 @@ impl DistRuntime {
             {
                 Ok((conn, sent)) => {
                     bytes_sent += sent;
+                    crate::obs::metrics::add("net.bytes_sent", sent);
                     readers.push(spawn_reader(v, &conn, tx.clone())?);
                     conns.push(conn);
                 }
@@ -217,7 +220,9 @@ impl DistRuntime {
                 // Persistent causes (every worker misversioned) show up
                 // as a loud log per rejection and, eventually, the
                 // admission timeout.
-                Err(e) => eprintln!("dist: rejected connection for worker slot {v}: {e:#}"),
+                Err(e) => {
+                    crate::log_warn!("net", "rejected connection for worker slot {v}: {e:#}")
+                }
             }
         }
         listener.set_nonblocking(false)?;
@@ -277,7 +282,7 @@ impl DistRuntime {
         let mut writer = stream;
         let sent = write_frame(&mut writer, &assign).context("send Assign")?;
         writer.set_read_timeout(None)?;
-        eprintln!("dist: worker {v} registered ({capabilities})");
+        crate::log_debug!("net", "worker {v} registered ({capabilities})");
         Ok((Conn { writer, last_seen: Arc::new(Mutex::new(Instant::now())) }, sent))
     }
 
@@ -290,16 +295,23 @@ impl DistRuntime {
                 // of a deadline miss — already counted as dropped when
                 // its round's gather expired, so only its bytes are
                 // accounted here.
-                Event::Frame(_, _, bytes) => self.stats.bytes_recv += bytes,
+                Event::Frame(_, _, bytes) => self.account_recv(bytes),
                 Event::Disconnected(v) => self.mark_dead(v),
             }
         }
     }
 
+    /// All inbound-byte accounting funnels here (epoch stats + the obs
+    /// counter stay in sync by construction).
+    fn account_recv(&mut self, bytes: u64) {
+        self.stats.bytes_recv += bytes;
+        crate::obs::metrics::add("net.bytes_recv", bytes);
+    }
+
     fn mark_dead(&mut self, v: usize) {
         if self.alive[v] {
             self.alive[v] = false;
-            eprintln!("dist: worker {v} lost — permanent straggler from here on");
+            crate::log_warn!("net", "worker {v} lost — permanent straggler from here on");
             let _ = self.conns[v].writer.shutdown(SockShutdown::Both);
         }
     }
@@ -330,6 +342,11 @@ fn spawn_reader(v: usize, conn: &Conn, tx: Sender<Event>) -> Result<JoinHandle<(
             match read_frame(&mut stream) {
                 Ok((msg, bytes)) => {
                     *last_seen.lock().expect("last_seen lock") = Instant::now();
+                    crate::obs::span::instant(
+                        "frame-read",
+                        "net",
+                        &[("worker", v as f64), ("bytes", bytes as f64)],
+                    );
                     if tx.send(Event::Frame(v, msg, bytes)).is_err() {
                         return; // master dropped
                     }
@@ -364,6 +381,8 @@ impl WorkerRuntime for DistRuntime {
         let mut pending = vec![false; n];
         let mut sent_at: Vec<Option<Instant>> = vec![None; n];
         let mut expected = 0usize;
+        let scatter_span =
+            crate::obs::span::span_with("scatter", "net", &[("round", round as f64)]);
         for (v, task) in tasks.into_iter().enumerate() {
             let Some(task) = task else { continue };
             if !self.alive[v] {
@@ -385,9 +404,15 @@ impl WorkerRuntime for DistRuntime {
                 busy,
                 budget_secs: budget_hedge_secs(task.work),
             }));
-            match write_frame(&mut self.conns[v].writer, &msg) {
+            let wr = {
+                let _sp =
+                    crate::obs::span::span_with("frame-write", "net", &[("worker", v as f64)]);
+                write_frame(&mut self.conns[v].writer, &msg)
+            };
+            match wr {
                 Ok(bytes) => {
                     self.stats.bytes_sent += bytes;
+                    crate::obs::metrics::add("net.bytes_sent", bytes);
                     sent_at[v] = Some(Instant::now());
                     pending[v] = true;
                     expected += 1;
@@ -395,6 +420,7 @@ impl WorkerRuntime for DistRuntime {
                 Err(_) => self.mark_dead(v),
             }
         }
+        drop(scatter_span);
 
         // Gather under the real T_c deadline (same clamp as the
         // threaded runtime). Disconnects release their pending slot
@@ -405,13 +431,18 @@ impl WorkerRuntime for DistRuntime {
         // for the full scaled deadline.
         let deadline =
             Duration::from_secs_f64((guard_secs * self.time_scale).clamp(1e-3, 86_400.0));
+        let _gather_span = crate::obs::span::span_with(
+            "gather",
+            "net",
+            &[("round", round as f64), ("expected", expected as f64)],
+        );
         let start = Instant::now();
         let mut last_sweep = Instant::now();
         while expected > 0 {
             let Some(remaining) = deadline.checked_sub(start.elapsed()) else { break };
             match self.events.recv_timeout(remaining.min(super::HEARTBEAT_INTERVAL)) {
                 Ok(Event::Frame(v, Msg::Report(r), bytes)) => {
-                    self.stats.bytes_recv += bytes;
+                    self.account_recv(bytes);
                     if r.round == round && pending[v] {
                         pending[v] = false;
                         expected -= 1;
@@ -428,7 +459,7 @@ impl WorkerRuntime for DistRuntime {
                     // already counted as dropped when its own round's
                     // gather expired.
                 }
-                Ok(Event::Frame(_, _, bytes)) => self.stats.bytes_recv += bytes,
+                Ok(Event::Frame(_, _, bytes)) => self.account_recv(bytes),
                 Ok(Event::Disconnected(v)) => {
                     self.mark_dead(v);
                     if pending[v] {
@@ -457,6 +488,10 @@ impl WorkerRuntime for DistRuntime {
         }
         // Whatever is still pending missed the real deadline.
         self.stats.dropped_reports += expected;
+        if crate::obs::enabled() {
+            crate::obs::metrics::fadd("net.gather_stall_secs", start.elapsed().as_secs_f64());
+            crate::obs::metrics::add("net.dropped_reports", expected as u64);
+        }
         out
     }
 

@@ -100,7 +100,8 @@ pub fn serve(stream: TcpStream, opts: WorkerOpts) -> Result<()> {
     };
     let v = assign.worker as usize;
     let (mut compute, consts, root, batch, time_scale) = build_state(&assign)?;
-    eprintln!(
+    crate::log_debug!(
+        "net",
         "worker {v}: registered ({} rows x {} dim, batch {batch}, time_scale {time_scale})",
         assign.y.len(),
         assign.dim
@@ -118,6 +119,11 @@ pub fn serve(stream: TcpStream, opts: WorkerOpts) -> Result<()> {
                 while !stop.load(Ordering::Relaxed) {
                     std::thread::sleep(super::HEARTBEAT_INTERVAL);
                     nonce += 1;
+                    let _sp = crate::obs::span::span_with(
+                        "heartbeat",
+                        "net",
+                        &[("worker", v as f64), ("nonce", nonce as f64)],
+                    );
                     if send(&writer, &Msg::Heartbeat { nonce }).is_err() {
                         // Master unreachable. On a half-open link (no
                         // FIN/RST — master host power loss, partition)
@@ -198,6 +204,11 @@ fn serve_tasks(
     loop {
         match read_frame(reader) {
             Ok((Msg::Task(t), _)) => {
+                let _task_span = crate::obs::span::span_with(
+                    "task",
+                    "worker",
+                    &[("worker", v as f64), ("round", t.round as f64)],
+                );
                 // Busy/zero-step tasks legitimately carry an empty x0
                 // (no SGD chain runs); only step-running tasks must
                 // match the shard dimension.
@@ -223,7 +234,15 @@ fn serve_tasks(
                     x_k: rep.x_k,
                     x_bar: rep.x_bar,
                 }));
-                if send(writer, &reply).is_err() {
+                let sent = {
+                    let _sp = crate::obs::span::span_with(
+                        "frame-write",
+                        "net",
+                        &[("worker", v as f64)],
+                    );
+                    send(writer, &reply)
+                };
+                if sent.is_err() {
                     return Ok(()); // master gone mid-reply
                 }
                 served += 1;

@@ -1,0 +1,188 @@
+//! Leveled, env-filtered stderr logging (`ANYTIME_SGD_LOG`).
+//!
+//! The one logging substrate for the repo's diagnostics — the dist
+//! master/worker and the CLI route everything here instead of ad-hoc
+//! `eprintln!`s, so runs are quiet by default and debuggable on demand:
+//!
+//! ```bash
+//! ANYTIME_SGD_LOG=debug anytime-sgd train --runtime dist ...
+//! ANYTIME_SGD_LOG=off   anytime-sgd sweep ...   # fully silent stderr
+//! ```
+//!
+//! Levels (`off < error < warn < info < debug < trace`) parse from the
+//! env var once and cache in an atomic; the default is `info`. The
+//! [`crate::log_error!`]..[`crate::log_trace!`] macros are the call
+//! sites' interface — formatting cost is only paid when the level is
+//! enabled (the gate is checked before `eprintln!` runs).
+//!
+//! Unlike spans/metrics this pillar is *not* gated on
+//! [`crate::obs::enabled`]: a lost dist worker must be reportable even
+//! in an un-instrumented run.
+
+use std::fmt;
+use std::sync::atomic::{AtomicU8, Ordering};
+
+/// The env var the threshold is read from.
+pub const ENV_VAR: &str = "ANYTIME_SGD_LOG";
+
+/// Log severity, most severe first.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+#[repr(u8)]
+pub enum Level {
+    Error = 1,
+    Warn = 2,
+    Info = 3,
+    Debug = 4,
+    Trace = 5,
+}
+
+impl Level {
+    /// Lowercase name, as printed in the line prefix.
+    pub fn name(self) -> &'static str {
+        match self {
+            Level::Error => "error",
+            Level::Warn => "warn",
+            Level::Info => "info",
+            Level::Debug => "debug",
+            Level::Trace => "trace",
+        }
+    }
+}
+
+/// `off` as a threshold value (no `Level` is ≤ 0).
+pub const OFF: u8 = 0;
+const DEFAULT: u8 = Level::Info as u8;
+const UNSET: u8 = u8::MAX;
+
+static THRESHOLD: AtomicU8 = AtomicU8::new(UNSET);
+
+/// Parse a threshold name (`off|error|warn|info|debug|trace`, plus a
+/// couple of tolerated aliases). `None` = unrecognized.
+pub fn parse_level(s: &str) -> Option<u8> {
+    match s.trim().to_ascii_lowercase().as_str() {
+        "off" | "none" | "0" => Some(OFF),
+        "error" => Some(Level::Error as u8),
+        "warn" | "warning" => Some(Level::Warn as u8),
+        "info" => Some(Level::Info as u8),
+        "debug" => Some(Level::Debug as u8),
+        "trace" => Some(Level::Trace as u8),
+        _ => None,
+    }
+}
+
+fn threshold() -> u8 {
+    let t = THRESHOLD.load(Ordering::Relaxed);
+    if t != UNSET {
+        return t;
+    }
+    let t = std::env::var(ENV_VAR).ok().and_then(|s| parse_level(&s)).unwrap_or(DEFAULT);
+    THRESHOLD.store(t, Ordering::Relaxed);
+    t
+}
+
+/// Override the threshold programmatically (tests / embedders). Use
+/// [`OFF`] to silence everything; [`reset_threshold`] to re-read the
+/// env on next use.
+pub fn set_threshold(t: u8) {
+    THRESHOLD.store(t.min(Level::Trace as u8), Ordering::Relaxed);
+}
+
+/// Forget the cached threshold so the next log call re-reads `ENV_VAR`.
+pub fn reset_threshold() {
+    THRESHOLD.store(UNSET, Ordering::Relaxed);
+}
+
+/// Would a message at `level` be emitted right now?
+#[inline]
+pub fn enabled(level: Level) -> bool {
+    level as u8 <= threshold()
+}
+
+/// Emit one line: `[level target] message`. Prefer the macros — they
+/// skip argument formatting when the level is filtered out.
+pub fn log(level: Level, target: &str, msg: fmt::Arguments<'_>) {
+    if enabled(level) {
+        eprintln!("[{:<5} {target}] {msg}", level.name());
+    }
+}
+
+/// Log at `error`: `log_error!("net", "lost worker {}", v)`.
+#[macro_export]
+macro_rules! log_error {
+    ($target:expr, $($arg:tt)+) => {
+        if $crate::obs::log::enabled($crate::obs::log::Level::Error) {
+            $crate::obs::log::log($crate::obs::log::Level::Error, $target, format_args!($($arg)+));
+        }
+    };
+}
+
+/// Log at `warn`: `log_warn!("net", "rejected: {e:#}")`.
+#[macro_export]
+macro_rules! log_warn {
+    ($target:expr, $($arg:tt)+) => {
+        if $crate::obs::log::enabled($crate::obs::log::Level::Warn) {
+            $crate::obs::log::log($crate::obs::log::Level::Warn, $target, format_args!($($arg)+));
+        }
+    };
+}
+
+/// Log at `info` (the default threshold).
+#[macro_export]
+macro_rules! log_info {
+    ($target:expr, $($arg:tt)+) => {
+        if $crate::obs::log::enabled($crate::obs::log::Level::Info) {
+            $crate::obs::log::log($crate::obs::log::Level::Info, $target, format_args!($($arg)+));
+        }
+    };
+}
+
+/// Log at `debug` (hidden unless `ANYTIME_SGD_LOG=debug` or chattier).
+#[macro_export]
+macro_rules! log_debug {
+    ($target:expr, $($arg:tt)+) => {
+        if $crate::obs::log::enabled($crate::obs::log::Level::Debug) {
+            $crate::obs::log::log($crate::obs::log::Level::Debug, $target, format_args!($($arg)+));
+        }
+    };
+}
+
+/// Log at `trace` (the chattiest tier).
+#[macro_export]
+macro_rules! log_trace {
+    ($target:expr, $($arg:tt)+) => {
+        if $crate::obs::log::enabled($crate::obs::log::Level::Trace) {
+            $crate::obs::log::log($crate::obs::log::Level::Trace, $target, format_args!($($arg)+));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_every_level_name() {
+        assert_eq!(parse_level("off"), Some(OFF));
+        assert_eq!(parse_level("ERROR"), Some(1));
+        assert_eq!(parse_level(" warn "), Some(2));
+        assert_eq!(parse_level("info"), Some(3));
+        assert_eq!(parse_level("debug"), Some(4));
+        assert_eq!(parse_level("trace"), Some(5));
+        assert_eq!(parse_level("verbose"), None);
+    }
+
+    #[test]
+    fn threshold_gates_levels() {
+        let _g = crate::obs::test_lock();
+        set_threshold(Level::Warn as u8);
+        assert!(enabled(Level::Error));
+        assert!(enabled(Level::Warn));
+        assert!(!enabled(Level::Info));
+        assert!(!enabled(Level::Debug));
+        set_threshold(OFF);
+        assert!(!enabled(Level::Error));
+        // The macros compile and are no-ops below threshold.
+        crate::log_debug!("test", "invisible {}", 42);
+        reset_threshold();
+    }
+}

@@ -1,0 +1,312 @@
+//! Process-wide atomic metrics behind a name-keyed registry.
+//!
+//! Four instrument kinds, all lock-free to update once registered:
+//!
+//! * **counter** — monotonically increasing `u64` ([`add`]): bytes on
+//!   the wire, dropped reports, epochs run.
+//! * **gauge** — last-write-wins `u64` ([`gauge`]): current round,
+//!   live worker count.
+//! * **sum** — accumulating `f64` ([`fadd`], CAS on the bit pattern):
+//!   gather-stall seconds, per-worker busy seconds.
+//! * **histogram** — count/sum/min/max plus log2-bucketed counts
+//!   ([`observe`]): per-dispatch step counts `q`.
+//!
+//! Updates early-return while [`crate::obs::enabled`] is false (one
+//! relaxed load, no allocation or locking), so the disabled cost at a
+//! call site is negligible. [`snapshot`] freezes everything into a
+//! stable-key [`Value`] — `BTreeMap` ordering means two snapshots of
+//! identical state serialize identically, which is what the
+//! determinism test in `rust/tests/obs_integration.rs` pins.
+//!
+//! Names are flat dotted strings (`net.bytes_sent`,
+//! `worker.3.busy_secs` — taxonomy in DESIGN.md §8). The first
+//! registration of a name fixes its kind; a later call of a different
+//! kind on the same name is a silent no-op rather than a panic
+//! (observability must never take down a run).
+
+use crate::ser::Value;
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+
+/// Log2 bucket count: bucket 0 is `x <= 1`, bucket `k >= 1` holds
+/// samples with `floor(log2 x) == k - 1` (so `[2^(k-1), 2^k)`, modulo
+/// the bucket-0 edge), and the last bucket absorbs the tail.
+const BUCKETS: usize = 16;
+
+struct HistCell {
+    count: AtomicU64,
+    sum_bits: AtomicU64,
+    min_bits: AtomicU64,
+    max_bits: AtomicU64,
+    buckets: [AtomicU64; BUCKETS],
+}
+
+impl HistCell {
+    fn new() -> HistCell {
+        HistCell {
+            count: AtomicU64::new(0),
+            sum_bits: AtomicU64::new(0f64.to_bits()),
+            min_bits: AtomicU64::new(f64::INFINITY.to_bits()),
+            max_bits: AtomicU64::new(f64::NEG_INFINITY.to_bits()),
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+        }
+    }
+}
+
+fn bucket_of(x: f64) -> usize {
+    if !(x > 1.0) {
+        return 0;
+    }
+    ((x.log2().floor() as usize) + 1).min(BUCKETS - 1)
+}
+
+enum Metric {
+    Counter(AtomicU64),
+    Gauge(AtomicU64),
+    FSum(AtomicU64),
+    Hist(HistCell),
+}
+
+fn registry() -> &'static Mutex<BTreeMap<String, Arc<Metric>>> {
+    static REGISTRY: OnceLock<Mutex<BTreeMap<String, Arc<Metric>>>> = OnceLock::new();
+    REGISTRY.get_or_init(|| Mutex::new(BTreeMap::new()))
+}
+
+/// Get-or-insert: the registry lock is held only for the map lookup;
+/// the returned `Arc` is updated without any lock.
+fn metric(name: &str, make: fn() -> Metric) -> Arc<Metric> {
+    let mut reg = registry().lock().unwrap_or_else(|e| e.into_inner());
+    match reg.get(name) {
+        Some(m) => m.clone(),
+        None => {
+            let m = Arc::new(make());
+            reg.insert(name.to_string(), m.clone());
+            m
+        }
+    }
+}
+
+/// Atomically `*cell += x` on an f64 stored as bits.
+fn fadd_bits(cell: &AtomicU64, x: f64) {
+    let mut cur = cell.load(Ordering::Relaxed);
+    loop {
+        let next = (f64::from_bits(cur) + x).to_bits();
+        match cell.compare_exchange_weak(cur, next, Ordering::Relaxed, Ordering::Relaxed) {
+            Ok(_) => return,
+            Err(seen) => cur = seen,
+        }
+    }
+}
+
+fn fmin_bits(cell: &AtomicU64, x: f64) {
+    let mut cur = cell.load(Ordering::Relaxed);
+    while x < f64::from_bits(cur) {
+        match cell.compare_exchange_weak(cur, x.to_bits(), Ordering::Relaxed, Ordering::Relaxed) {
+            Ok(_) => return,
+            Err(seen) => cur = seen,
+        }
+    }
+}
+
+fn fmax_bits(cell: &AtomicU64, x: f64) {
+    let mut cur = cell.load(Ordering::Relaxed);
+    while x > f64::from_bits(cur) {
+        match cell.compare_exchange_weak(cur, x.to_bits(), Ordering::Relaxed, Ordering::Relaxed) {
+            Ok(_) => return,
+            Err(seen) => cur = seen,
+        }
+    }
+}
+
+/// Increment counter `name` by `n`.
+pub fn add(name: &str, n: u64) {
+    if !crate::obs::enabled() {
+        return;
+    }
+    if let Metric::Counter(c) = &*metric(name, || Metric::Counter(AtomicU64::new(0))) {
+        c.fetch_add(n, Ordering::Relaxed);
+    }
+}
+
+/// Set gauge `name` to `x` (last write wins).
+pub fn gauge(name: &str, x: u64) {
+    if !crate::obs::enabled() {
+        return;
+    }
+    if let Metric::Gauge(g) = &*metric(name, || Metric::Gauge(AtomicU64::new(0))) {
+        g.store(x, Ordering::Relaxed);
+    }
+}
+
+/// Accumulate `x` into f64 sum `name`.
+pub fn fadd(name: &str, x: f64) {
+    if !crate::obs::enabled() {
+        return;
+    }
+    if let Metric::FSum(s) = &*metric(name, || Metric::FSum(AtomicU64::new(0f64.to_bits()))) {
+        fadd_bits(s, x);
+    }
+}
+
+/// Record one sample into histogram `name`.
+pub fn observe(name: &str, x: f64) {
+    if !crate::obs::enabled() {
+        return;
+    }
+    if let Metric::Hist(h) = &*metric(name, || Metric::Hist(HistCell::new())) {
+        h.count.fetch_add(1, Ordering::Relaxed);
+        fadd_bits(&h.sum_bits, x);
+        fmin_bits(&h.min_bits, x);
+        fmax_bits(&h.max_bits, x);
+        h.buckets[bucket_of(x)].fetch_add(1, Ordering::Relaxed);
+    }
+}
+
+/// Freeze every registered metric into a stable-key JSON value:
+/// `{"counters": {...}, "gauges": {...}, "sums": {...}, "hists": {...}}`.
+/// Works whether or not collection is currently enabled.
+pub fn snapshot() -> Value {
+    let reg = registry().lock().unwrap_or_else(|e| e.into_inner());
+    let mut counters = BTreeMap::new();
+    let mut gauges = BTreeMap::new();
+    let mut sums = BTreeMap::new();
+    let mut hists = BTreeMap::new();
+    for (name, m) in reg.iter() {
+        match &**m {
+            Metric::Counter(c) => {
+                counters.insert(name.clone(), Value::Num(c.load(Ordering::Relaxed) as f64));
+            }
+            Metric::Gauge(g) => {
+                gauges.insert(name.clone(), Value::Num(g.load(Ordering::Relaxed) as f64));
+            }
+            Metric::FSum(s) => {
+                sums.insert(
+                    name.clone(),
+                    Value::Num(f64::from_bits(s.load(Ordering::Relaxed))),
+                );
+            }
+            Metric::Hist(h) => {
+                let count = h.count.load(Ordering::Relaxed);
+                let minmax = |bits: &AtomicU64| {
+                    if count == 0 {
+                        Value::Null
+                    } else {
+                        Value::Num(f64::from_bits(bits.load(Ordering::Relaxed)))
+                    }
+                };
+                let buckets: Vec<Value> = h
+                    .buckets
+                    .iter()
+                    .map(|b| Value::Num(b.load(Ordering::Relaxed) as f64))
+                    .collect();
+                hists.insert(
+                    name.clone(),
+                    Value::obj(vec![
+                        ("count", Value::Num(count as f64)),
+                        ("sum", Value::Num(f64::from_bits(h.sum_bits.load(Ordering::Relaxed)))),
+                        ("min", minmax(&h.min_bits)),
+                        ("max", minmax(&h.max_bits)),
+                        ("buckets", Value::Arr(buckets)),
+                    ]),
+                );
+            }
+        }
+    }
+    Value::obj(vec![
+        ("counters", Value::Obj(counters)),
+        ("gauges", Value::Obj(gauges)),
+        ("sums", Value::Obj(sums)),
+        ("hists", Value::Obj(hists)),
+    ])
+}
+
+/// Drop every registered metric (tests / between sweep cells).
+pub fn reset() {
+    registry().lock().unwrap_or_else(|e| e.into_inner()).clear();
+}
+
+/// Write [`snapshot`] to `path` as pretty JSON (creates parent dirs).
+pub fn write_json(path: &Path) -> std::io::Result<()> {
+    if let Some(dir) = path.parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir)?;
+        }
+    }
+    std::fs::write(path, crate::ser::to_string_pretty(&snapshot()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_updates_register_nothing() {
+        let _g = crate::obs::test_lock();
+        crate::obs::disable();
+        reset();
+        add("t.counter", 3);
+        fadd("t.sum", 1.5);
+        observe("t.hist", 2.0);
+        let snap = snapshot();
+        assert!(snap.get("counters").unwrap().as_obj().unwrap().is_empty());
+        assert!(snap.get("hists").unwrap().as_obj().unwrap().is_empty());
+    }
+
+    #[test]
+    fn instruments_accumulate_and_snapshot() {
+        let _g = crate::obs::test_lock();
+        crate::obs::enable();
+        reset();
+        add("t.counter", 2);
+        add("t.counter", 3);
+        gauge("t.gauge", 7);
+        gauge("t.gauge", 9);
+        fadd("t.sum", 0.25);
+        fadd("t.sum", 0.5);
+        observe("t.hist", 0.5);
+        observe("t.hist", 3.0);
+        observe("t.hist", 1e12); // tail bucket
+        crate::obs::disable();
+        let snap = snapshot();
+        assert_eq!(snap.get("counters").unwrap().get_f64("t.counter"), Some(5.0));
+        assert_eq!(snap.get("gauges").unwrap().get_f64("t.gauge"), Some(9.0));
+        assert_eq!(snap.get("sums").unwrap().get_f64("t.sum"), Some(0.75));
+        let h = snap.get("hists").unwrap().get("t.hist").unwrap();
+        assert_eq!(h.get_f64("count"), Some(3.0));
+        assert_eq!(h.get_f64("min"), Some(0.5));
+        assert_eq!(h.get_f64("max"), Some(1e12));
+        let buckets = h.get("buckets").unwrap().as_arr().unwrap();
+        assert_eq!(buckets.len(), BUCKETS);
+        assert_eq!(buckets[0].as_f64(), Some(1.0)); // 0.5
+        assert_eq!(buckets[2].as_f64(), Some(1.0)); // 3.0 ∈ [2, 4)
+        assert_eq!(buckets[BUCKETS - 1].as_f64(), Some(1.0)); // 1e12 tail
+        reset();
+    }
+
+    #[test]
+    fn kind_mismatch_is_a_noop() {
+        let _g = crate::obs::test_lock();
+        crate::obs::enable();
+        reset();
+        add("t.kind", 1);
+        fadd("t.kind", 9.0); // wrong kind: silently ignored
+        crate::obs::disable();
+        let snap = snapshot();
+        assert_eq!(snap.get("counters").unwrap().get_f64("t.kind"), Some(1.0));
+        assert!(snap.get("sums").unwrap().as_obj().unwrap().is_empty());
+        reset();
+    }
+
+    #[test]
+    fn bucket_edges() {
+        assert_eq!(bucket_of(-3.0), 0);
+        assert_eq!(bucket_of(0.0), 0);
+        assert_eq!(bucket_of(1.0), 0);
+        assert_eq!(bucket_of(1.5), 1); // (1, 2)
+        assert_eq!(bucket_of(2.5), 2); // [2, 4)
+        assert_eq!(bucket_of(f64::NAN), 0);
+        assert_eq!(bucket_of(f64::INFINITY), BUCKETS - 1);
+    }
+}

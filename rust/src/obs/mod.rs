@@ -1,0 +1,73 @@
+//! `obs` — std-only observability: spans, metrics, leveled logging,
+//! and post-run reports (DESIGN.md §8).
+//!
+//! The paper's whole argument is a time accounting — fixed-time epochs,
+//! honest straggler charges, per-worker utilization — and this module
+//! is where the repo *measures* that accounting instead of only
+//! simulating it. Three pillars, one switch:
+//!
+//! * [`span`] — a scoped-span tracer with per-thread buffers and
+//!   monotonic timestamps, drained to Chrome trace-event JSON
+//!   (loadable in Perfetto / `chrome://tracing`). The trainer, all
+//!   three runtimes, the dist wire, and the sweep runner are
+//!   instrumented; `train --trace <path>` writes the file.
+//! * [`metrics`] — process-wide atomic counters / gauges / f64 sums /
+//!   histograms behind a name-keyed registry, snapshot-able at any
+//!   point as a stable-key JSON artifact (`train --metrics <path>`).
+//! * [`report`] — [`report::RunReport`], the post-run paper-native
+//!   accounting (per-worker utilization, straggler attribution,
+//!   compute/comm/gather-stall breakdown, bytes per epoch) rendered as
+//!   a terminal table and written next to the figures
+//!   (`train --report`).
+//!
+//! [`log`] is the fourth, always-on piece: a leveled stderr logger
+//! filtered by the `ANYTIME_SGD_LOG` env var (default `info`), which
+//! replaced the net layer's ad-hoc `eprintln!`s.
+//!
+//! ## The overhead contract
+//!
+//! Spans and metrics are **off by default** and gated on one global
+//! [`AtomicBool`]: disabled, every record call is a single relaxed
+//! load and an early return — no allocation, no locks, no syscalls.
+//! Enabled or not, the subsystem reads time exclusively from
+//! [`std::time::Instant`]: it never advances [`crate::sim::SimClock`]
+//! and never touches an RNG stream, so the sim≡real≡dist bit-exactness
+//! pins and the golden traces are identical with observability on or
+//! off (pinned by `rust/tests/obs_integration.rs`).
+
+pub mod log;
+pub mod metrics;
+pub mod report;
+pub mod span;
+
+use std::sync::atomic::{AtomicBool, Ordering};
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+
+/// Turn span/metric collection on (process-wide). Flip it before
+/// constructing the trainer so admission/handshake spans are captured.
+pub fn enable() {
+    ENABLED.store(true, Ordering::SeqCst);
+}
+
+/// Turn span/metric collection off again (tests; already-recorded
+/// events stay buffered until [`span::take_events`]).
+pub fn disable() {
+    ENABLED.store(false, Ordering::SeqCst);
+}
+
+/// Is collection on? Record paths check this first so the disabled
+/// cost is one relaxed atomic load.
+#[inline]
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Serialize tests that toggle the process-global obs state (the unit
+/// tests of [`span`]/[`metrics`] share one lock; integration tests in
+/// their own binary carry their own).
+#[cfg(test)]
+pub(crate) fn test_lock() -> std::sync::MutexGuard<'static, ()> {
+    static LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+    LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}

@@ -1,0 +1,392 @@
+//! Post-run accounting: the paper's time ledger as a report.
+//!
+//! [`RunReport`] folds the trainer's per-epoch records
+//! ([`EpochStats`], plus [`NetEpochStats`] when a networked runtime
+//! ran) into the accounting the paper argues in: each epoch is a
+//! fixed compute window `T`, a worker is *busy* until its finishing
+//! time and *gather-stalled* for the rest of the window, the gap
+//! between the slowest and second-slowest finisher is charged to the
+//! slowest as *straggler* time, and utilization is busy time over
+//! total window time. The report renders as a terminal table
+//! (`train --report`), serializes with stable keys
+//! (`<out>/report.json`, next to the figures), and rolls up across
+//! sweep cells ([`render_sweep`]).
+//!
+//! This pillar is a pure data transform — it reads only what the run
+//! already recorded, so it needs no instrumentation, is not gated on
+//! [`crate::obs::enabled`], and trivially preserves bit-exactness.
+
+use crate::coordinator::runtime::NetEpochStats;
+use crate::coordinator::EpochStats;
+use crate::ser::Value;
+use std::fmt::Write as _;
+use std::path::{Path, PathBuf};
+
+/// One worker's row of the ledger.
+#[derive(Clone, Debug)]
+pub struct WorkerLine {
+    /// Seconds spent computing + uplinking (finishing times clamped to
+    /// each epoch's window).
+    pub busy_secs: f64,
+    /// Seconds idle inside epoch windows after finishing (or the whole
+    /// window, for epochs it never reported in).
+    pub stall_secs: f64,
+    /// Seconds this worker was *the* straggler: its margin over the
+    /// second-slowest finisher, summed over epochs it finished last.
+    pub straggler_secs: f64,
+    /// `busy_secs` over the run's total window time, in `[0, 1]`.
+    pub utilization: f64,
+    /// Gradient steps contributed across the run (Σ q_v).
+    pub steps: usize,
+    /// Epochs with no report from this worker (dead, or past `T_c`).
+    pub missed_epochs: usize,
+    /// Mean task→report round-trip seconds (dist runtime only).
+    pub mean_rtt_secs: Option<f64>,
+}
+
+/// The whole run's ledger (module docs for the accounting rules).
+#[derive(Clone, Debug)]
+pub struct RunReport {
+    pub epochs: usize,
+    pub workers: Vec<WorkerLine>,
+    /// Σ per-epoch compute window (the paper's `T` per epoch).
+    pub compute_secs: f64,
+    /// Σ per-epoch communication charge.
+    pub comm_secs: f64,
+    /// Σ worker stall (fleet-seconds idle inside compute windows).
+    pub gather_stall_secs: f64,
+    /// Fleet utilization: mean of per-worker utilizations.
+    pub utilization: f64,
+    /// Wire bytes (0 for in-process runtimes).
+    pub bytes_sent: u64,
+    pub bytes_recv: u64,
+    /// Real `T_c` deadline misses on the dist wire.
+    pub dropped_reports: usize,
+    /// `(bytes_sent + bytes_recv) / epochs`.
+    pub bytes_per_epoch: f64,
+}
+
+impl RunReport {
+    /// Aggregate a run's epoch records. `net` may be empty (in-process
+    /// runtimes) or one record per epoch (dist).
+    pub fn from_run(epochs: &[EpochStats], net: &[NetEpochStats]) -> RunReport {
+        let n = epochs.first().map(|e| e.q.len()).unwrap_or(0);
+        let mut busy = vec![0.0f64; n];
+        let mut stall = vec![0.0f64; n];
+        let mut straggler = vec![0.0f64; n];
+        let mut steps = vec![0usize; n];
+        let mut missed = vec![0usize; n];
+        let mut total_window = 0.0f64;
+        let mut compute_secs = 0.0f64;
+        let mut comm_secs = 0.0f64;
+
+        for ep in epochs {
+            let window = ep.compute_secs.max(0.0);
+            total_window += window;
+            compute_secs += ep.compute_secs;
+            comm_secs += ep.comm_secs;
+            // Clamped finishing times, for busy/stall and the
+            // straggler margin.
+            let mut finishes: Vec<(usize, f64)> = Vec::with_capacity(n);
+            for v in 0..n {
+                steps[v] += ep.q.get(v).copied().unwrap_or(0);
+                match ep.worker_finish.get(v).copied().flatten() {
+                    Some(f) => {
+                        let b = f.clamp(0.0, window);
+                        busy[v] += b;
+                        stall[v] += window - b;
+                        finishes.push((v, b));
+                    }
+                    None => {
+                        missed[v] += 1;
+                        stall[v] += window;
+                    }
+                }
+            }
+            // Straggler attribution: the slowest finisher is charged
+            // its margin over the runner-up.
+            if finishes.len() >= 2 {
+                finishes.sort_by(|a, b| a.1.total_cmp(&b.1));
+                let (slowest, t_last) = finishes[finishes.len() - 1];
+                let t_second = finishes[finishes.len() - 2].1;
+                straggler[slowest] += (t_last - t_second).max(0.0);
+            }
+        }
+
+        // Per-worker RTT means over the epochs that have one.
+        let mut rtt_sum = vec![0.0f64; n];
+        let mut rtt_cnt = vec![0usize; n];
+        let mut bytes_sent = 0u64;
+        let mut bytes_recv = 0u64;
+        let mut dropped_reports = 0usize;
+        for ne in net {
+            bytes_sent += ne.bytes_sent;
+            bytes_recv += ne.bytes_recv;
+            dropped_reports += ne.dropped_reports;
+            for v in 0..n {
+                if let Some(r) = ne.rtt_secs.get(v).copied().flatten() {
+                    rtt_sum[v] += r;
+                    rtt_cnt[v] += 1;
+                }
+            }
+        }
+
+        let workers: Vec<WorkerLine> = (0..n)
+            .map(|v| WorkerLine {
+                busy_secs: busy[v],
+                stall_secs: stall[v],
+                straggler_secs: straggler[v],
+                utilization: if total_window > 0.0 { busy[v] / total_window } else { 0.0 },
+                steps: steps[v],
+                missed_epochs: missed[v],
+                mean_rtt_secs: (rtt_cnt[v] > 0).then(|| rtt_sum[v] / rtt_cnt[v] as f64),
+            })
+            .collect();
+        let utilization = if n > 0 {
+            workers.iter().map(|w| w.utilization).sum::<f64>() / n as f64
+        } else {
+            0.0
+        };
+        RunReport {
+            epochs: epochs.len(),
+            gather_stall_secs: workers.iter().map(|w| w.stall_secs).sum(),
+            utilization,
+            workers,
+            compute_secs,
+            comm_secs,
+            bytes_sent,
+            bytes_recv,
+            dropped_reports,
+            bytes_per_epoch: if epochs.is_empty() {
+                0.0
+            } else {
+                (bytes_sent + bytes_recv) as f64 / epochs.len() as f64
+            },
+        }
+    }
+
+    /// The terminal table `train --report` prints.
+    pub fn render_table(&self) -> String {
+        let mut s = String::new();
+        let _ = writeln!(s, "== run report: {} epochs, {} workers ==", self.epochs, self.workers.len());
+        let _ = writeln!(
+            s,
+            "time      compute {:.3}s · comm {:.3}s · gather-stall {:.3}s · utilization {:.1}%",
+            self.compute_secs,
+            self.comm_secs,
+            self.gather_stall_secs,
+            self.utilization * 100.0
+        );
+        if self.bytes_sent + self.bytes_recv > 0 {
+            let _ = writeln!(
+                s,
+                "wire      sent {} B · recv {} B · {:.0} B/epoch · dropped reports {}",
+                self.bytes_sent, self.bytes_recv, self.bytes_per_epoch, self.dropped_reports
+            );
+        }
+        let _ = writeln!(
+            s,
+            "{:<5} {:>10} {:>10} {:>12} {:>7} {:>8} {:>7} {:>9}",
+            "", "busy_s", "stall_s", "straggler_s", "util%", "steps", "missed", "rtt_ms"
+        );
+        for (v, w) in self.workers.iter().enumerate() {
+            let rtt = match w.mean_rtt_secs {
+                Some(r) => format!("{:.2}", r * 1e3),
+                None => "-".to_string(),
+            };
+            let _ = writeln!(
+                s,
+                "W{v:<4} {:>10.3} {:>10.3} {:>12.3} {:>7.1} {:>8} {:>7} {:>9}",
+                w.busy_secs,
+                w.stall_secs,
+                w.straggler_secs,
+                w.utilization * 100.0,
+                w.steps,
+                w.missed_epochs,
+                rtt
+            );
+        }
+        s
+    }
+
+    /// Stable-key JSON shape (what [`RunReport::write`] persists).
+    pub fn to_json(&self) -> Value {
+        let workers: Vec<Value> = self
+            .workers
+            .iter()
+            .map(|w| {
+                Value::obj(vec![
+                    ("busy_secs", Value::Num(w.busy_secs)),
+                    ("stall_secs", Value::Num(w.stall_secs)),
+                    ("straggler_secs", Value::Num(w.straggler_secs)),
+                    ("utilization", Value::Num(w.utilization)),
+                    ("steps", w.steps.into()),
+                    ("missed_epochs", w.missed_epochs.into()),
+                    (
+                        "mean_rtt_secs",
+                        w.mean_rtt_secs.map(Value::Num).unwrap_or(Value::Null),
+                    ),
+                ])
+            })
+            .collect();
+        Value::obj(vec![
+            ("epochs", self.epochs.into()),
+            ("compute_secs", Value::Num(self.compute_secs)),
+            ("comm_secs", Value::Num(self.comm_secs)),
+            ("gather_stall_secs", Value::Num(self.gather_stall_secs)),
+            ("utilization", Value::Num(self.utilization)),
+            ("bytes_sent", Value::Num(self.bytes_sent as f64)),
+            ("bytes_recv", Value::Num(self.bytes_recv as f64)),
+            ("dropped_reports", self.dropped_reports.into()),
+            ("bytes_per_epoch", Value::Num(self.bytes_per_epoch)),
+            ("workers", Value::Arr(workers)),
+        ])
+    }
+
+    /// Write `report.json` into `dir` (next to the figures); returns
+    /// the path written.
+    pub fn write(&self, dir: &Path) -> std::io::Result<PathBuf> {
+        std::fs::create_dir_all(dir)?;
+        let path = dir.join("report.json");
+        std::fs::write(&path, crate::ser::to_string_pretty(&self.to_json()))?;
+        Ok(path)
+    }
+
+    /// Every aggregate and per-worker number is finite (the obs-smoke
+    /// CI gate).
+    pub fn is_finite(&self) -> bool {
+        [self.compute_secs, self.comm_secs, self.gather_stall_secs, self.utilization, self.bytes_per_epoch]
+            .iter()
+            .all(|x| x.is_finite())
+            && self.workers.iter().all(|w| {
+                [w.busy_secs, w.stall_secs, w.straggler_secs, w.utilization]
+                    .iter()
+                    .all(|x| x.is_finite())
+                    && w.mean_rtt_secs.map(f64::is_finite).unwrap_or(true)
+            })
+    }
+}
+
+/// Sweep-level roll-up: one line per cell (`sweep --report`).
+pub fn render_sweep(rows: &[(&str, &RunReport)]) -> String {
+    let name_w = rows.iter().map(|(n, _)| n.len()).max().unwrap_or(4).max(4);
+    let mut s = String::new();
+    let _ = writeln!(s, "== sweep report: {} cells ==", rows.len());
+    let _ = writeln!(
+        s,
+        "{:<name_w$} {:>7} {:>11} {:>10} {:>13} {:>7}",
+        "cell", "epochs", "compute_s", "comm_s", "gather_stall", "util%"
+    );
+    for (name, r) in rows {
+        let _ = writeln!(
+            s,
+            "{name:<name_w$} {:>7} {:>11.3} {:>10.3} {:>13.3} {:>7.1}",
+            r.epochs,
+            r.compute_secs,
+            r.comm_secs,
+            r.gather_stall_secs,
+            r.utilization * 100.0
+        );
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ep(window: f64, finish: Vec<Option<f64>>, q: Vec<usize>) -> EpochStats {
+        let n = q.len();
+        EpochStats {
+            q,
+            received: vec![true; n],
+            compute_secs: window,
+            comm_secs: 0.5,
+            lambda: vec![1.0 / n as f64; n],
+            worker_finish: finish,
+        }
+    }
+
+    #[test]
+    fn ledger_accounting() {
+        // Two epochs of window 10; W1 is the straggler both times, W2
+        // misses the second epoch entirely.
+        let epochs = vec![
+            ep(10.0, vec![Some(4.0), Some(9.0), Some(6.0)], vec![40, 90, 60]),
+            ep(10.0, vec![Some(5.0), Some(8.0), None], vec![50, 80, 0]),
+        ];
+        let r = RunReport::from_run(&epochs, &[]);
+        assert_eq!(r.epochs, 2);
+        assert_eq!(r.workers.len(), 3);
+        assert!((r.compute_secs - 20.0).abs() < 1e-12);
+        assert!((r.comm_secs - 1.0).abs() < 1e-12);
+        // W0: busy 9, stall 11. W1: busy 17, stall 3. W2: busy 6, stall 14.
+        assert!((r.workers[0].busy_secs - 9.0).abs() < 1e-12);
+        assert!((r.workers[1].busy_secs - 17.0).abs() < 1e-12);
+        assert!((r.workers[2].busy_secs - 6.0).abs() < 1e-12);
+        assert!((r.gather_stall_secs - 28.0).abs() < 1e-12);
+        // Straggler margins: epoch 1 → W1 by 9−6=3; epoch 2 → W1 by 8−5=3.
+        assert!((r.workers[1].straggler_secs - 6.0).abs() < 1e-12);
+        assert_eq!(r.workers[0].straggler_secs, 0.0);
+        assert_eq!(r.workers[2].missed_epochs, 1);
+        assert_eq!(r.workers[1].steps, 170);
+        assert!((r.workers[1].utilization - 17.0 / 20.0).abs() < 1e-12);
+        assert!(r.utilization > 0.0 && r.utilization < 1.0);
+        assert!(r.is_finite());
+        assert_eq!(r.bytes_sent, 0);
+    }
+
+    #[test]
+    fn finish_times_clamp_to_window() {
+        // A finishing time past the window (uplink landed after T)
+        // can't make busy > window or stall negative.
+        let epochs = vec![ep(10.0, vec![Some(12.0), Some(2.0)], vec![120, 20])];
+        let r = RunReport::from_run(&epochs, &[]);
+        assert!((r.workers[0].busy_secs - 10.0).abs() < 1e-12);
+        assert_eq!(r.workers[0].stall_secs, 0.0);
+        assert!((r.workers[0].utilization - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn net_epochs_fold_in() {
+        let epochs = vec![ep(10.0, vec![Some(1.0), Some(2.0)], vec![10, 20])];
+        let net = vec![NetEpochStats {
+            bytes_sent: 1000,
+            bytes_recv: 400,
+            rtt_secs: vec![Some(0.02), None],
+            dropped_reports: 1,
+        }];
+        let r = RunReport::from_run(&epochs, &net);
+        assert_eq!(r.bytes_sent, 1000);
+        assert_eq!(r.bytes_recv, 400);
+        assert_eq!(r.dropped_reports, 1);
+        assert!((r.bytes_per_epoch - 1400.0).abs() < 1e-12);
+        assert_eq!(r.workers[0].mean_rtt_secs, Some(0.02));
+        assert_eq!(r.workers[1].mean_rtt_secs, None);
+        let table = r.render_table();
+        assert!(table.contains("utilization"));
+        assert!(table.contains("gather-stall"));
+        assert!(table.contains("W0"));
+        let json = r.to_json();
+        assert_eq!(json.get_usize("epochs"), Some(1));
+        assert_eq!(json.get("workers").unwrap().as_arr().unwrap().len(), 2);
+    }
+
+    #[test]
+    fn empty_run_is_well_defined() {
+        let r = RunReport::from_run(&[], &[]);
+        assert_eq!(r.epochs, 0);
+        assert!(r.workers.is_empty());
+        assert_eq!(r.utilization, 0.0);
+        assert!(r.is_finite());
+    }
+
+    #[test]
+    fn sweep_rollup_lists_cells() {
+        let epochs = vec![ep(10.0, vec![Some(1.0), Some(2.0)], vec![10, 20])];
+        let r = RunReport::from_run(&epochs, &[]);
+        let s = render_sweep(&[("cell-a", &r), ("cell-b-long-name", &r)]);
+        assert!(s.contains("2 cells"));
+        assert!(s.contains("cell-b-long-name"));
+    }
+}

@@ -1,0 +1,367 @@
+//! Scoped-span tracer: per-thread buffers, monotonic timestamps,
+//! Chrome trace-event JSON output.
+//!
+//! A [`Span`] is an RAII guard — create it at the top of a phase
+//! ([`span`]/[`span_with`]) and its complete ("X") event is recorded
+//! when the guard drops. [`instant`] records zero-duration ("i")
+//! events (frame receipts). Events accumulate in lock-per-thread
+//! buffers registered in a global list; [`write_chrome_trace`] drains
+//! every buffer into one JSON document that Perfetto /
+//! `chrome://tracing` loads directly (timestamps in µs on one shared
+//! monotonic origin, thread names as "M" metadata events).
+//!
+//! Everything no-ops while [`crate::obs::enabled`] is false: span
+//! construction is a single relaxed atomic load, and the [`crate::obs_span!`]
+//! macro defers its `format!` behind the same gate. Time comes only
+//! from [`std::time::Instant`] — recording never advances the sim
+//! clock or consumes randomness, which is what keeps traced runs
+//! bit-identical to untraced ones.
+
+use crate::ser::Value;
+use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::Instant;
+
+/// One recorded event, in the Chrome trace-event model.
+#[derive(Clone, Debug)]
+pub struct SpanEvent {
+    pub name: String,
+    /// Category (fixed taxonomy: `trainer` / `runtime` / `worker` /
+    /// `net` / `sweep` — DESIGN.md §8).
+    pub cat: &'static str,
+    /// Microseconds since the process trace origin.
+    pub ts_us: f64,
+    /// `Some(d)` = complete ("X") event of `d` µs; `None` = instant.
+    pub dur_us: Option<f64>,
+    /// Numeric args attached to the event (worker id, epoch, bytes…).
+    pub args: Vec<(&'static str, f64)>,
+}
+
+/// One thread's buffer. Registered globally on first use and kept
+/// alive past thread exit (the registry holds an `Arc`), so events
+/// from short-lived pool/reader threads survive to the final drain.
+struct ThreadBuf {
+    tid: u64,
+    name: String,
+    events: Mutex<Vec<SpanEvent>>,
+}
+
+/// Hard per-thread cap — a runaway instrumented loop degrades to
+/// dropped events (counted, warned on write) instead of unbounded
+/// memory.
+const MAX_EVENTS_PER_THREAD: usize = 1 << 20;
+
+static NEXT_TID: AtomicU64 = AtomicU64::new(1);
+static DROPPED: AtomicU64 = AtomicU64::new(0);
+
+fn registry() -> &'static Mutex<Vec<Arc<ThreadBuf>>> {
+    static REGISTRY: OnceLock<Mutex<Vec<Arc<ThreadBuf>>>> = OnceLock::new();
+    REGISTRY.get_or_init(|| Mutex::new(Vec::new()))
+}
+
+/// The shared monotonic origin all timestamps are relative to.
+fn origin() -> Instant {
+    static ORIGIN: OnceLock<Instant> = OnceLock::new();
+    *ORIGIN.get_or_init(Instant::now)
+}
+
+fn now_us() -> f64 {
+    origin().elapsed().as_secs_f64() * 1e6
+}
+
+thread_local! {
+    static BUF: Arc<ThreadBuf> = {
+        let tid = NEXT_TID.fetch_add(1, Ordering::Relaxed);
+        let name = std::thread::current()
+            .name()
+            .map(str::to_string)
+            .unwrap_or_else(|| format!("thread-{tid}"));
+        let buf = Arc::new(ThreadBuf { tid, name, events: Mutex::new(Vec::new()) });
+        registry().lock().unwrap_or_else(|e| e.into_inner()).push(buf.clone());
+        buf
+    };
+}
+
+fn with_buf() -> Option<Arc<ThreadBuf>> {
+    // `try_with`: a span created during thread teardown (after TLS
+    // destruction) degrades to a noop instead of panicking.
+    BUF.try_with(Arc::clone).ok()
+}
+
+fn push(buf: &ThreadBuf, ev: SpanEvent) {
+    let mut events = buf.events.lock().unwrap_or_else(|e| e.into_inner());
+    if events.len() >= MAX_EVENTS_PER_THREAD {
+        DROPPED.fetch_add(1, Ordering::Relaxed);
+        return;
+    }
+    events.push(ev);
+}
+
+struct SpanRec {
+    buf: Arc<ThreadBuf>,
+    name: String,
+    cat: &'static str,
+    args: Vec<(&'static str, f64)>,
+    start_us: f64,
+}
+
+/// RAII guard: records one complete event spanning its lifetime.
+/// Disabled collection yields an inert guard ([`Span::noop`]).
+pub struct Span {
+    rec: Option<SpanRec>,
+}
+
+impl Span {
+    /// The inert guard (what every span is while obs is disabled).
+    pub fn noop() -> Span {
+        Span { rec: None }
+    }
+
+    /// Will this guard record an event on drop?
+    pub fn is_active(&self) -> bool {
+        self.rec.is_some()
+    }
+}
+
+impl Drop for Span {
+    fn drop(&mut self) {
+        if let Some(rec) = self.rec.take() {
+            let end_us = now_us();
+            push(
+                &rec.buf,
+                SpanEvent {
+                    name: rec.name,
+                    cat: rec.cat,
+                    ts_us: rec.start_us,
+                    dur_us: Some((end_us - rec.start_us).max(0.0)),
+                    args: rec.args,
+                },
+            );
+        }
+    }
+}
+
+/// Open a span with no args. `name` is only converted when enabled.
+pub fn span(name: impl Into<String>, cat: &'static str) -> Span {
+    span_with(name, cat, &[])
+}
+
+/// Open a span carrying numeric args (`&[("worker", 3.0)]`).
+pub fn span_with(name: impl Into<String>, cat: &'static str, args: &[(&'static str, f64)]) -> Span {
+    if !crate::obs::enabled() {
+        return Span::noop();
+    }
+    let Some(buf) = with_buf() else { return Span::noop() };
+    Span {
+        rec: Some(SpanRec {
+            buf,
+            name: name.into(),
+            cat,
+            args: args.to_vec(),
+            start_us: now_us(),
+        }),
+    }
+}
+
+/// Record an instant ("i") event — a point in time, no duration
+/// (frame receipts on the dist reader threads).
+pub fn instant(name: impl Into<String>, cat: &'static str, args: &[(&'static str, f64)]) {
+    if !crate::obs::enabled() {
+        return;
+    }
+    let Some(buf) = with_buf() else { return };
+    push(
+        &buf,
+        SpanEvent { name: name.into(), cat, ts_us: now_us(), dur_us: None, args: args.to_vec() },
+    );
+}
+
+/// One thread's drained events.
+pub struct ThreadEvents {
+    pub tid: u64,
+    pub name: String,
+    pub events: Vec<SpanEvent>,
+}
+
+/// Drain every thread's recorded events (buffers stay registered and
+/// keep collecting afterwards).
+pub fn take_events() -> Vec<ThreadEvents> {
+    let reg = registry().lock().unwrap_or_else(|e| e.into_inner());
+    reg.iter()
+        .map(|b| ThreadEvents {
+            tid: b.tid,
+            name: b.name.clone(),
+            events: std::mem::take(&mut *b.events.lock().unwrap_or_else(|e| e.into_inner())),
+        })
+        .collect()
+}
+
+/// Discard everything recorded so far (tests).
+pub fn clear() {
+    let _ = take_events();
+    DROPPED.store(0, Ordering::Relaxed);
+}
+
+/// Events dropped to the per-thread cap since the last [`clear`].
+pub fn dropped() -> u64 {
+    DROPPED.load(Ordering::Relaxed)
+}
+
+/// Drain the collector into one Chrome trace-event JSON document:
+/// `{"traceEvents": [...], "displayTimeUnit": "ms"}` with "X"
+/// complete events, "i" instants, and "M" thread-name metadata.
+pub fn chrome_trace_json() -> Value {
+    let mut events: Vec<Value> = Vec::new();
+    for t in take_events() {
+        if t.events.is_empty() {
+            continue;
+        }
+        events.push(Value::obj(vec![
+            ("ph", "M".into()),
+            ("name", "thread_name".into()),
+            ("pid", 1usize.into()),
+            ("tid", Value::Num(t.tid as f64)),
+            ("args", Value::obj(vec![("name", t.name.as_str().into())])),
+        ]));
+        for e in &t.events {
+            let mut fields: Vec<(&str, Value)> = vec![
+                ("name", e.name.as_str().into()),
+                ("cat", e.cat.into()),
+                ("pid", 1usize.into()),
+                ("tid", Value::Num(t.tid as f64)),
+                ("ts", Value::Num(e.ts_us)),
+            ];
+            match e.dur_us {
+                Some(d) => {
+                    fields.push(("ph", "X".into()));
+                    fields.push(("dur", Value::Num(d)));
+                }
+                None => {
+                    fields.push(("ph", "i".into()));
+                    // Instant scope: thread-local.
+                    fields.push(("s", "t".into()));
+                }
+            }
+            if !e.args.is_empty() {
+                fields.push((
+                    "args",
+                    Value::obj(e.args.iter().map(|&(k, v)| (k, Value::Num(v))).collect()),
+                ));
+            }
+            events.push(Value::obj(fields));
+        }
+    }
+    Value::obj(vec![
+        ("displayTimeUnit", "ms".into()),
+        ("traceEvents", Value::Arr(events)),
+    ])
+}
+
+/// Write the Chrome trace to `path` (creates parent dirs; drains the
+/// collector). Open the file in <https://ui.perfetto.dev> or
+/// `chrome://tracing`.
+pub fn write_chrome_trace(path: &Path) -> std::io::Result<()> {
+    if let Some(dir) = path.parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir)?;
+        }
+    }
+    if dropped() > 0 {
+        crate::log_warn!("obs", "trace buffer overflow: {} events dropped", dropped());
+    }
+    std::fs::write(path, crate::ser::to_string_compact(&chrome_trace_json()))
+}
+
+/// Open a span with a formatted name without paying the `format!`
+/// when collection is disabled:
+/// `let _sp = obs_span!("sweep", "cell {}", cell.name);`
+#[macro_export]
+macro_rules! obs_span {
+    ($cat:expr, $($fmt:tt)+) => {
+        if $crate::obs::enabled() {
+            $crate::obs::span::span(format!($($fmt)+), $cat)
+        } else {
+            $crate::obs::span::Span::noop()
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_spans_are_inert() {
+        let _g = crate::obs::test_lock();
+        crate::obs::disable();
+        clear();
+        {
+            let sp = span("never", "trainer");
+            assert!(!sp.is_active());
+            instant("never-i", "trainer", &[]);
+        }
+        let total: usize = take_events().iter().map(|t| t.events.len()).sum();
+        assert_eq!(total, 0, "disabled collection must record nothing");
+    }
+
+    #[test]
+    fn spans_nest_and_drain() {
+        let _g = crate::obs::test_lock();
+        crate::obs::enable();
+        clear();
+        {
+            let _outer = span_with("outer", "trainer", &[("epoch", 1.0)]);
+            {
+                let _inner = span("inner", "runtime");
+                std::hint::black_box(0u64);
+            }
+            instant("tick", "net", &[("worker", 2.0)]);
+        }
+        crate::obs::disable();
+        let mine: Vec<SpanEvent> = take_events()
+            .into_iter()
+            .flat_map(|t| t.events)
+            .filter(|e| matches!(e.name.as_str(), "outer" | "inner" | "tick"))
+            .collect();
+        assert_eq!(mine.len(), 3);
+        let outer = mine.iter().find(|e| e.name == "outer").unwrap();
+        let inner = mine.iter().find(|e| e.name == "inner").unwrap();
+        let tick = mine.iter().find(|e| e.name == "tick").unwrap();
+        assert_eq!(outer.args, vec![("epoch", 1.0)]);
+        assert!(tick.dur_us.is_none());
+        // Proper nesting on the time axis: inner ⊆ outer.
+        let (ots, odur) = (outer.ts_us, outer.dur_us.unwrap());
+        let (its, idur) = (inner.ts_us, inner.dur_us.unwrap());
+        assert!(its >= ots && its + idur <= ots + odur + 1e-6,
+            "inner [{its}, {}] must nest in outer [{ots}, {}]", its + idur, ots + odur);
+    }
+
+    #[test]
+    fn chrome_json_shape() {
+        let _g = crate::obs::test_lock();
+        crate::obs::enable();
+        clear();
+        {
+            let _sp = span_with("shape", "trainer", &[("k", 3.0)]);
+        }
+        crate::obs::disable();
+        let v = chrome_trace_json();
+        let evs = v.get("traceEvents").unwrap().as_arr().unwrap();
+        let shape = evs
+            .iter()
+            .find(|e| e.get_str("name") == Some("shape"))
+            .expect("span event present");
+        assert_eq!(shape.get_str("ph"), Some("X"));
+        assert_eq!(shape.get_str("cat"), Some("trainer"));
+        assert!(shape.get_f64("ts").unwrap() >= 0.0);
+        assert!(shape.get_f64("dur").unwrap() >= 0.0);
+        assert_eq!(shape.get("args").unwrap().get_f64("k"), Some(3.0));
+        // A thread_name metadata record accompanies the events.
+        assert!(evs.iter().any(|e| e.get_str("ph") == Some("M")));
+        // The document round-trips through our own parser.
+        let text = crate::ser::to_string_compact(&v);
+        assert!(!text.contains('\n'));
+        assert!(crate::ser::parse(&text).is_ok());
+    }
+}

@@ -125,12 +125,26 @@ impl EpochCtx<'_> {
         tasks: Vec<Option<Task>>,
         guard_secs: f64,
     ) -> Vec<Option<Report>> {
-        self.runtime.dispatch(self.epoch, tasks, guard_secs)
+        let _sp =
+            crate::obs::span::span_with("dispatch", "runtime", &[("epoch", self.epoch as f64)]);
+        let out = self.runtime.dispatch(self.epoch, tasks, guard_secs);
+        if crate::obs::enabled() {
+            for (v, rep) in out.iter().enumerate() {
+                if let Some(r) = rep {
+                    crate::obs::metrics::add(&format!("worker.{v}.steps"), r.q as u64);
+                    crate::obs::metrics::fadd(&format!("worker.{v}.busy_secs"), r.busy_secs);
+                    crate::obs::metrics::observe("dispatch.q", r.q as f64);
+                }
+            }
+        }
+        out
     }
 
     /// Combine λ-weighted worker outputs into the master vector.
     /// Workers with λ_v = 0 or no output are skipped (never touch NaN).
     pub fn apply_combine(&mut self, outputs: &[Option<Vec<f32>>], lambda: &[f64]) {
+        let _sp =
+            crate::obs::span::span_with("combine", "runtime", &[("epoch", self.epoch as f64)]);
         let mut xs: Vec<&[f32]> = Vec::with_capacity(outputs.len());
         let mut w: Vec<f64> = Vec::with_capacity(outputs.len());
         for (out, &lv) in outputs.iter().zip(lambda.iter()) {

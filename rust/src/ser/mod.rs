@@ -14,7 +14,7 @@ mod parse;
 mod write;
 
 pub use parse::{parse, ParseError};
-pub use write::to_string_pretty;
+pub use write::{to_string_compact, to_string_pretty};
 
 use std::collections::BTreeMap;
 

@@ -1,4 +1,5 @@
-//! JSON writer (pretty, 2-space indent, stable key order).
+//! JSON writer — pretty (2-space indent) and compact (single-line) —
+//! with stable key order.
 
 use super::Value;
 use std::fmt::Write as _;
@@ -9,6 +10,49 @@ pub fn to_string_pretty(v: &Value) -> String {
     let mut out = String::new();
     write_value(v, 0, &mut out);
     out
+}
+
+/// Serialize to a single line. Structural whitespace keeps the pretty
+/// writer's `": "` / `", "` separators (so simple greps match either
+/// form), but no newlines are ever emitted — string values containing
+/// `\n` are escaped by [`write_str`], which is what makes this safe
+/// for JSONL sinks (unlike post-hoc `replace('\n', " ")` on the
+/// pretty form, which mangled newline-bearing strings).
+pub fn to_string_compact(v: &Value) -> String {
+    let mut out = String::new();
+    write_compact(v, &mut out);
+    out
+}
+
+fn write_compact(v: &Value, out: &mut String) {
+    match v {
+        Value::Null => out.push_str("null"),
+        Value::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
+        Value::Num(x) => write_num(*x, out),
+        Value::Str(s) => write_str(s, out),
+        Value::Arr(items) => {
+            out.push('[');
+            for (i, item) in items.iter().enumerate() {
+                if i > 0 {
+                    out.push_str(", ");
+                }
+                write_compact(item, out);
+            }
+            out.push(']');
+        }
+        Value::Obj(map) => {
+            out.push('{');
+            for (i, (k, val)) in map.iter().enumerate() {
+                if i > 0 {
+                    out.push_str(", ");
+                }
+                write_str(k, out);
+                out.push_str(": ");
+                write_compact(val, out);
+            }
+            out.push('}');
+        }
+    }
 }
 
 fn write_value(v: &Value, indent: usize, out: &mut String) {
@@ -133,6 +177,27 @@ mod tests {
     fn short_numeric_arrays_inline() {
         let v = Value::nums(&[1.0f64, 2.0, 3.0]);
         assert_eq!(to_string_pretty(&v), "[1, 2, 3]");
+    }
+
+    #[test]
+    fn compact_is_single_line_and_round_trips() {
+        // The JSONL hazard case: a string value carrying a raw newline.
+        let v = Value::obj(vec![
+            ("name", "multi\nline \"run\"".into()),
+            ("nested", Value::obj(vec![("xs", Value::nums(&[1.0f64, 2.5]))])),
+            ("ok", true.into()),
+        ]);
+        let text = to_string_compact(&v);
+        assert!(!text.contains('\n'), "compact output must be one line: {text:?}");
+        assert_eq!(parse(&text).unwrap(), v, "escapes must survive the round trip");
+    }
+
+    #[test]
+    fn compact_keeps_pretty_separators() {
+        // CI greps events JSONL for patterns like `"event": "net"` —
+        // the compact writer keeps `": "` and `", "` so they still hit.
+        let v = Value::obj(vec![("event", "net".into()), ("epoch", 3usize.into())]);
+        assert_eq!(to_string_compact(&v), r#"{"epoch": 3, "event": "net"}"#);
     }
 
     #[test]

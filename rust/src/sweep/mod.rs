@@ -110,6 +110,13 @@ pub fn cli_command() -> Command {
         .flag("threads", FlagKind::Int, Some("0"), "worker threads (0 = all cores)")
         .flag("name", FlagKind::Str, Some("sweep"), "campaign name (output file stem)")
         .flag("out", FlagKind::Str, Some("results"), "output directory")
+        .flag(
+            "trace",
+            FlagKind::Str,
+            None,
+            "write a Chrome trace-event JSON of the whole campaign (open in Perfetto)",
+        )
+        .flag("report", FlagKind::Bool, None, "print a per-cell time-ledger roll-up")
 }
 
 fn split_names(s: &str) -> Vec<String> {

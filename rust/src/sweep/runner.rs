@@ -40,6 +40,8 @@ pub struct CellResult {
     pub cell: Cell,
     pub trace: Trace,
     pub initial_err: f64,
+    /// The cell's time ledger (`sweep --report` rolls these up).
+    pub report: crate::obs::report::RunReport,
 }
 
 /// Default worker-thread count: every available core.
@@ -111,7 +113,10 @@ pub fn run_results(
                 None => cache[&dataset_key(&cfg)].clone(),
             };
             match Trainer::with_dataset(cfg, ds) {
-                Ok(mut tr) => Ok(tr.run()),
+                Ok(mut tr) => {
+                    let _sp = crate::obs_span!("sweep", "cell {name}");
+                    Ok(tr.run())
+                }
                 Err(e) => Err(format!("cell {i} (`{name}`): {e:#}")),
             }
         })
@@ -139,6 +144,7 @@ pub fn run_cells(cells: &[Cell], threads: usize) -> Result<Vec<CellResult>> {
         .zip(results)
         .map(|(cell, r)| CellResult {
             cell: cell.clone(),
+            report: r.report(),
             trace: r.trace,
             initial_err: r.initial_err,
         })
