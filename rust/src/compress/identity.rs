@@ -1,0 +1,48 @@
+//! `identity` — bit-exact raw-bit passthrough.
+//!
+//! Payload: `dim` f32 values as little-endian IEEE-754 bit patterns,
+//! nothing else — byte-for-byte what `put_f32s` shipped before the
+//! compression axis existed, so frame sizes and values are unchanged
+//! and every dist ≡ sim equivalence pin survives. This is the default
+//! compressor and the registry's lossless reference point.
+
+use super::{Compressor, CompressorInfo, CompressorSpec};
+use anyhow::{bail, Result};
+
+pub struct Identity;
+
+fn build() -> Box<dyn Compressor> {
+    Box::new(Identity)
+}
+
+pub const INFO: CompressorInfo = CompressorInfo {
+    name: "identity",
+    aliases: &["id", "none", "raw"],
+    about: "raw f32 bits, bit-exact (default; 4d bytes)",
+    lossless: true,
+    build,
+};
+
+impl Compressor for Identity {
+    fn spec(&self) -> CompressorSpec {
+        CompressorSpec::Identity
+    }
+
+    fn encode(&self, v: &[f32]) -> Vec<u8> {
+        let mut out = Vec::with_capacity(4 * v.len());
+        for &x in v {
+            out.extend_from_slice(&x.to_bits().to_le_bytes());
+        }
+        out
+    }
+
+    fn decode(&self, bytes: &[u8], dim: usize) -> Result<Vec<f32>> {
+        if bytes.len() != 4 * dim {
+            bail!("identity payload: {} bytes for dim {dim} (want {})", bytes.len(), 4 * dim);
+        }
+        Ok(bytes
+            .chunks_exact(4)
+            .map(|b| f32::from_bits(u32::from_le_bytes([b[0], b[1], b[2], b[3]])))
+            .collect())
+    }
+}

@@ -1,0 +1,622 @@
+//! `compress` — pluggable gradient/iterate compression for the dist
+//! wire.
+//!
+//! The anytime scheme's premise is that every worker's partial work
+//! reaches the master in time; on real links the raw-bit f32 payloads
+//! of [`crate::net::wire`] make the *wire* the straggler. This module
+//! is the fourth plug-in axis (protocol × runtime × objective ×
+//! **compressor**): a [`Compressor`] trait behind a name-keyed
+//! [`REGISTRY`] mirroring [`crate::protocols`] and [`crate::objective`],
+//! negotiated per connection during the `Hello`/`Assign` handshake
+//! (wire v3) and applied by [`crate::net::master`] /
+//! [`crate::net::worker`] to every `Task.x0` and `Report.x_k`/`x_bar`
+//! payload — so `NetEpochStats` and the obs `RunReport` count
+//! *compressed* frame bytes.
+//!
+//! ## Codec layer vs stream layer
+//!
+//! A [`Compressor`] is a pure, stateless quantizer: `encode` turns a
+//! vector into a compact payload, `decode` reconstructs a `dim`-length
+//! vector from hostile bytes (error, never panic). Convergence-grade
+//! transport needs more than per-message quantization, though: lossy
+//! codecs are applied to the *delta* against a receiver-mirroring
+//! state, with an error-feedback residual, by [`StreamEncoder`] /
+//! [`StreamDecoder`]:
+//!
+//! ```text
+//! sender (per stream)                    receiver (per stream)
+//!   u      = v − mirror + residual
+//!   bytes  = codec.encode(u)      ──►    d̂ = codec.decode(bytes)
+//!   d̂      = codec.decode(bytes)         mirror += d̂
+//!   residual = u − d̂                     yield mirror
+//!   mirror  += d̂
+//! ```
+//!
+//! Both ends apply the identical f32 update sequence, so the mirrors
+//! stay in bit-exact lockstep; the residual re-injects whatever the
+//! codec dropped into the next message (error feedback, à la
+//! 1-bit/EF-SGD), so the receiver's mirror tracks the true vector and
+//! the quantization error stays bounded instead of accumulating.
+//! `identity` is flagged lossless and bypasses the delta/residual
+//! machinery entirely — its payloads are the raw IEEE-754 bits, so the
+//! dist ≡ sim bit-exactness pins survive unchanged.
+//!
+//! Empty vectors (a `Busy` task's `x0`, an idle report) travel as empty
+//! payloads and never touch stream state.
+//!
+//! ## Wire formats (payload layouts, all little-endian)
+//!
+//! | name       | layout                                   | bytes (dim d) |
+//! |------------|------------------------------------------|---------------|
+//! | `identity` | d × f32 raw bits                         | `4d`          |
+//! | `topk`     | u32 k, then k × (u32 idx, f32 val), idx strictly ascending | `4 + 8k`, k = max(1, d/16) |
+//! | `signsgd`  | f64 scale (mean \|v\|), then ⌈d/8⌉ sign-bit bytes (pad bits zero) | `8 + ⌈d/8⌉` |
+//! | `q8`       | f32 lo, f32 hi, then d × u8 levels       | `8 + d`       |
+//! | `q16`      | f32 lo, f32 hi, then d × u16 levels      | `8 + 2d`      |
+//!
+//! Lossy codecs are defined for finite inputs; non-finite coordinates
+//! are tolerated without panicking (they contribute nothing to
+//! `signsgd`'s scale and clamp to `q8`/`q16`'s range), and hostile
+//! payloads — k > d, out-of-range or non-ascending indices, non-finite
+//! scale/range headers, wrong lengths — always decode to an error.
+//!
+//! ## Adding a compressor (~40 LoC)
+//!
+//! 1. `rust/src/compress/mycodec.rs`: a unit struct implementing
+//!    [`Compressor`] (`spec`/`encode`/`decode`) plus a
+//!    `pub const INFO: CompressorInfo` with its name, aliases, one-line
+//!    `about`, `lossless` flag, and `build` hook.
+//! 2. Add a variant to [`CompressorSpec`] and arms to `name()` and
+//!    `parse()`; give it the next wire kind byte in `wire_kind()` /
+//!    `from_wire_kind()` (and bump [`MAX_WIRE_KIND`]).
+//! 3. Register it: `mod mycodec;` here and `&mycodec::INFO` in
+//!    [`REGISTRY`].
+//!
+//! That's it — config JSON, `train --compressor`, the sweep
+//! `compressors` axis, `anytime-sgd list`, and the wire negotiation all
+//! resolve through the registry.
+
+pub mod identity;
+pub mod quant;
+pub mod signsgd;
+pub mod topk;
+
+use crate::ser::Value;
+use anyhow::{anyhow, bail, Result};
+
+/// A pure vector quantizer (see module docs): `encode` is total,
+/// `decode` treats its input as hostile and errors instead of
+/// panicking.
+pub trait Compressor: Send {
+    /// The spec this codec was built from.
+    fn spec(&self) -> CompressorSpec;
+
+    /// Quantize `v` into a payload. Must return an empty payload for an
+    /// empty input.
+    fn encode(&self, v: &[f32]) -> Vec<u8>;
+
+    /// Reconstruct a `dim`-length vector from a payload. Hostile bytes
+    /// (wrong length, corrupt headers, bad index streams) error, never
+    /// panic.
+    fn decode(&self, bytes: &[u8], dim: usize) -> Result<Vec<f32>>;
+}
+
+/// Registry entry: identity and lookup metadata for one codec.
+pub struct CompressorInfo {
+    /// Canonical registry key (CLI/JSON/wire negotiation name).
+    pub name: &'static str,
+    /// Accepted alternate names.
+    pub aliases: &'static [&'static str],
+    /// One-line description for `anytime-sgd list`.
+    pub about: &'static str,
+    /// Bit-exact passthrough: the stream layer skips the delta/
+    /// error-feedback machinery and ships raw payloads.
+    pub lossless: bool,
+    /// Construct the codec.
+    pub build: fn() -> Box<dyn Compressor>,
+}
+
+/// Every registered compressor. Order is display order for
+/// `anytime-sgd list`.
+pub static REGISTRY: &[&CompressorInfo] =
+    &[&identity::INFO, &topk::INFO, &signsgd::INFO, &quant::INFO_Q8, &quant::INFO_Q16];
+
+/// Resolve a codec name (canonical or alias) to its registry entry.
+pub fn lookup(name: &str) -> Result<&'static CompressorInfo> {
+    REGISTRY
+        .iter()
+        .find(|i| i.name == name || i.aliases.contains(&name))
+        .copied()
+        .ok_or_else(|| anyhow!("unknown compressor `{name}` (available: {})", names().join(", ")))
+}
+
+/// Registry entry for a spec (infallible: every variant is registered).
+pub fn info(spec: CompressorSpec) -> &'static CompressorInfo {
+    REGISTRY
+        .iter()
+        .find(|i| i.name == spec.name())
+        .copied()
+        .unwrap_or_else(|| unreachable!("unregistered compressor spec {spec:?}"))
+}
+
+/// Canonical names, registry order.
+pub fn names() -> Vec<&'static str> {
+    REGISTRY.iter().map(|i| i.name).collect()
+}
+
+/// Whether `name` resolves (canonical or alias).
+pub fn exists(name: &str) -> bool {
+    lookup(name).is_ok()
+}
+
+/// Highest valid wire kind byte — the shared bound between
+/// [`CompressorSpec::from_wire_kind`] and the `Assign` frame decoder,
+/// so a locally-valid config can never be rejected only at the worker.
+pub const MAX_WIRE_KIND: u8 = 4;
+
+/// Which codec a run ships its `Task`/`Report` vector payloads through.
+/// `Identity` everywhere except the dist runtime is a no-op: the
+/// compressor is a wire concept, and the sim/real runtimes have no
+/// wire.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CompressorSpec {
+    /// Raw f32 bits; bit-exact (the dist ≡ sim pins run through this).
+    Identity,
+    /// Top-k magnitude sparsification, k = max(1, d/16).
+    TopK,
+    /// 1-bit sign + f64 scale with error feedback (EF-signSGD).
+    SignSgd,
+    /// Linear 8-bit quantization with a min/max header.
+    Q8,
+    /// Linear 16-bit quantization with a min/max header.
+    Q16,
+}
+
+impl CompressorSpec {
+    /// Canonical registry name.
+    pub fn name(self) -> &'static str {
+        match self {
+            CompressorSpec::Identity => "identity",
+            CompressorSpec::TopK => "topk",
+            CompressorSpec::SignSgd => "signsgd",
+            CompressorSpec::Q8 => "q8",
+            CompressorSpec::Q16 => "q16",
+        }
+    }
+
+    /// Parse a CLI/JSON name (canonical or alias) through the registry.
+    pub fn parse(name: &str) -> Result<Self> {
+        let info = lookup(name)?;
+        Ok(match info.name {
+            "identity" => CompressorSpec::Identity,
+            "topk" => CompressorSpec::TopK,
+            "signsgd" => CompressorSpec::SignSgd,
+            "q8" => CompressorSpec::Q8,
+            "q16" => CompressorSpec::Q16,
+            other => unreachable!("registry entry `{other}` has no spec arm"),
+        })
+    }
+
+    /// From a config JSON value: a bare name string (`"topk"`) or an
+    /// object with a `kind` field (`{"kind": "topk"}`).
+    pub fn from_json(v: &Value) -> Result<Self> {
+        if let Some(name) = v.as_str() {
+            return Self::parse(name);
+        }
+        if v.as_obj().is_some() {
+            let kind = v
+                .get_str("kind")
+                .ok_or_else(|| anyhow!("compressor object needs a `kind` name"))?;
+            return Self::parse(kind);
+        }
+        bail!("compressor must be a name string or an object with `kind`")
+    }
+
+    /// Config JSON form (the canonical name).
+    pub fn to_json(self) -> Value {
+        Value::Str(self.name().to_string())
+    }
+
+    /// Config-level validation hook (kept for symmetry with the other
+    /// spec enums; no compressor currently carries parameters).
+    pub fn validate(self) -> Result<()> {
+        Ok(())
+    }
+
+    /// Wire kind byte for the `Assign` frame (bounded by
+    /// [`MAX_WIRE_KIND`]).
+    pub fn wire_kind(self) -> u8 {
+        match self {
+            CompressorSpec::Identity => 0,
+            CompressorSpec::TopK => 1,
+            CompressorSpec::SignSgd => 2,
+            CompressorSpec::Q8 => 3,
+            CompressorSpec::Q16 => 4,
+        }
+    }
+
+    /// Decode a wire kind byte (`None` = out of domain; the frame
+    /// decoder maps that to a `BadValue`).
+    pub fn from_wire_kind(kind: u8) -> Option<Self> {
+        match kind {
+            0 => Some(CompressorSpec::Identity),
+            1 => Some(CompressorSpec::TopK),
+            2 => Some(CompressorSpec::SignSgd),
+            3 => Some(CompressorSpec::Q8),
+            4 => Some(CompressorSpec::Q16),
+            _ => None,
+        }
+    }
+
+    /// Whether the codec is a bit-exact passthrough.
+    pub fn lossless(self) -> bool {
+        info(self).lossless
+    }
+
+    /// Build the codec.
+    pub fn build(self) -> Box<dyn Compressor> {
+        (info(self).build)()
+    }
+}
+
+/// Sender half of one compressed vector stream (see module docs):
+/// per-stream delta-vs-mirror encoding with an error-feedback residual
+/// for lossy codecs, raw passthrough for lossless ones.
+pub struct StreamEncoder {
+    codec: Box<dyn Compressor>,
+    lossless: bool,
+    mirror: Vec<f32>,
+    residual: Vec<f32>,
+}
+
+impl StreamEncoder {
+    pub fn new(spec: CompressorSpec) -> Self {
+        Self {
+            codec: spec.build(),
+            lossless: spec.lossless(),
+            mirror: Vec::new(),
+            residual: Vec::new(),
+        }
+    }
+
+    /// Encode the next vector of the stream. Empty vectors yield empty
+    /// payloads and leave the stream state untouched.
+    pub fn encode(&mut self, v: &[f32]) -> Vec<u8> {
+        if v.is_empty() {
+            return Vec::new();
+        }
+        if self.lossless {
+            return self.codec.encode(v);
+        }
+        if self.mirror.len() != v.len() {
+            self.mirror = vec![0.0; v.len()];
+            self.residual = vec![0.0; v.len()];
+        }
+        let u: Vec<f32> = v
+            .iter()
+            .zip(self.mirror.iter().zip(self.residual.iter()))
+            .map(|(&x, (&m, &r))| x - m + r)
+            .collect();
+        let payload = self.codec.encode(&u);
+        // Replay the receiver's reconstruction so both mirrors apply
+        // the identical f32 update sequence (bit-exact lockstep). Our
+        // own payload always decodes: a failure here is a codec bug,
+        // not hostile input.
+        let dec = self
+            .codec
+            .decode(&payload, v.len())
+            .expect("codec must decode its own payload");
+        for i in 0..v.len() {
+            self.residual[i] = u[i] - dec[i];
+            self.mirror[i] += dec[i];
+        }
+        payload
+    }
+
+    /// The codec spec this stream runs.
+    pub fn spec(&self) -> CompressorSpec {
+        self.codec.spec()
+    }
+}
+
+/// Receiver half of one compressed vector stream: integrates decoded
+/// deltas into a mirror of the sender's vector. Must see every payload
+/// of the stream in send order.
+pub struct StreamDecoder {
+    codec: Box<dyn Compressor>,
+    lossless: bool,
+    mirror: Vec<f32>,
+}
+
+impl StreamDecoder {
+    pub fn new(spec: CompressorSpec) -> Self {
+        Self { codec: spec.build(), lossless: spec.lossless(), mirror: Vec::new() }
+    }
+
+    /// Decode the next payload of the stream into a `dim`-length
+    /// vector. Empty payloads decode to empty vectors and leave the
+    /// stream state untouched; hostile payloads error, never panic.
+    pub fn decode(&mut self, bytes: &[u8], dim: usize) -> Result<Vec<f32>> {
+        if bytes.is_empty() {
+            return Ok(Vec::new());
+        }
+        if self.lossless {
+            return self.codec.decode(bytes, dim);
+        }
+        let dec = self.codec.decode(bytes, dim)?;
+        if self.mirror.len() != dim {
+            self.mirror = vec![0.0; dim];
+        }
+        for i in 0..dim {
+            self.mirror[i] += dec[i];
+        }
+        Ok(self.mirror.clone())
+    }
+
+    /// The codec spec this stream runs.
+    pub fn spec(&self) -> CompressorSpec {
+        self.codec.spec()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Xoshiro256pp;
+
+    const ALL: [CompressorSpec; 5] = [
+        CompressorSpec::Identity,
+        CompressorSpec::TopK,
+        CompressorSpec::SignSgd,
+        CompressorSpec::Q8,
+        CompressorSpec::Q16,
+    ];
+
+    #[test]
+    fn registry_names_unique_and_resolvable() {
+        let names = names();
+        let mut sorted = names.clone();
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert_eq!(sorted.len(), names.len(), "duplicate registry names");
+        for info in REGISTRY {
+            assert!(exists(info.name));
+            assert!(!info.about.is_empty());
+            for alias in info.aliases {
+                assert_eq!(lookup(alias).unwrap().name, info.name, "alias {alias}");
+                assert!(!names.contains(alias), "alias {alias} shadows a canonical name");
+            }
+            let built = (info.build)();
+            assert_eq!(built.spec().name(), info.name);
+        }
+        assert!(lookup("gzip").unwrap_err().to_string().contains("available"));
+    }
+
+    #[test]
+    fn specs_parse_round_trip_json_and_wire_kinds() {
+        for spec in ALL {
+            assert_eq!(CompressorSpec::parse(spec.name()).unwrap(), spec);
+            assert_eq!(CompressorSpec::from_json(&spec.to_json()).unwrap(), spec);
+            let obj = Value::obj(vec![("kind", spec.to_json())]);
+            assert_eq!(CompressorSpec::from_json(&obj).unwrap(), spec);
+            assert_eq!(CompressorSpec::from_wire_kind(spec.wire_kind()), Some(spec));
+            assert!(spec.wire_kind() <= MAX_WIRE_KIND);
+            spec.validate().unwrap();
+            assert_eq!(spec.build().spec(), spec);
+        }
+        // Aliases resolve; junk fails closed.
+        assert_eq!(CompressorSpec::parse("sign").unwrap(), CompressorSpec::SignSgd);
+        assert_eq!(CompressorSpec::parse("none").unwrap(), CompressorSpec::Identity);
+        assert!(CompressorSpec::parse("gzip").is_err());
+        assert!(CompressorSpec::from_json(&Value::Num(3.0)).is_err());
+        assert!(CompressorSpec::from_json(&Value::obj(vec![("k", Value::Num(2.0))])).is_err());
+        assert_eq!(CompressorSpec::from_wire_kind(MAX_WIRE_KIND + 1), None);
+        assert_eq!(CompressorSpec::from_wire_kind(0xFF), None);
+        // Only identity is lossless.
+        assert!(CompressorSpec::Identity.lossless());
+        for spec in [
+            CompressorSpec::TopK,
+            CompressorSpec::SignSgd,
+            CompressorSpec::Q8,
+            CompressorSpec::Q16,
+        ] {
+            assert!(!spec.lossless(), "{spec:?}");
+        }
+    }
+
+    /// Fuzz-style vector sampler covering the awkward floats (mirrors
+    /// `net::wire`'s fuzzers).
+    fn fuzz_vec(rng: &mut Xoshiro256pp, max_len: usize) -> Vec<f32> {
+        let n = rng.index(max_len + 1);
+        (0..n)
+            .map(|_| match rng.index(6) {
+                0 => f32::NAN,
+                1 => f32::INFINITY,
+                2 => f32::NEG_INFINITY,
+                3 => 0.0,
+                4 => -0.0,
+                _ => (rng.next_f64() * 2e3 - 1e3) as f32,
+            })
+            .collect()
+    }
+
+    #[test]
+    fn every_codec_fuzzes_without_panicking() {
+        let mut rng = Xoshiro256pp::seed_from_u64(0xC0DEC);
+        for spec in ALL {
+            let codec = spec.build();
+            // encode is total (NaN/±inf included) and decode(encode(v))
+            // yields the right shape.
+            for _ in 0..200 {
+                let v = fuzz_vec(&mut rng, 48);
+                let payload = codec.encode(&v);
+                if v.is_empty() {
+                    assert!(payload.is_empty(), "{spec:?}: empty in, empty out");
+                    continue;
+                }
+                let back = codec.decode(&payload, v.len()).unwrap();
+                assert_eq!(back.len(), v.len(), "{spec:?}");
+                // Wrong dims must error, never panic.
+                assert!(codec.decode(&payload, v.len() + 1).is_err(), "{spec:?}");
+            }
+            // Random garbage payloads: Ok or Err, never a panic.
+            for _ in 0..300 {
+                let n = rng.index(96);
+                let junk: Vec<u8> = (0..n).map(|_| rng.next_u64() as u8).collect();
+                let _ = codec.decode(&junk, rng.index(33));
+            }
+            // Bit-flips on well-formed payloads.
+            for _ in 0..100 {
+                let v: Vec<f32> = (0..17).map(|i| (i as f32) - 8.0).collect();
+                let mut payload = codec.encode(&v);
+                let i = rng.index(payload.len());
+                payload[i] ^= 1 << rng.index(8);
+                let _ = codec.decode(&payload, v.len());
+            }
+        }
+    }
+
+    #[test]
+    fn identity_is_bit_exact_including_specials() {
+        let codec = CompressorSpec::Identity.build();
+        let v = vec![f32::NAN, f32::INFINITY, f32::NEG_INFINITY, -0.0, 0.0, 1.5e-30, -7.25];
+        let payload = codec.encode(&v);
+        assert_eq!(payload.len(), 4 * v.len());
+        let back = codec.decode(&payload, v.len()).unwrap();
+        for (a, b) in v.iter().zip(back.iter()) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        // And through the stream layer: lossless = raw passthrough.
+        let mut enc = StreamEncoder::new(CompressorSpec::Identity);
+        let mut dec = StreamDecoder::new(CompressorSpec::Identity);
+        for _ in 0..3 {
+            let payload = enc.encode(&v);
+            assert_eq!(payload, codec.encode(&v));
+            let back = dec.decode(&payload, v.len()).unwrap();
+            for (a, b) in v.iter().zip(back.iter()) {
+                assert_eq!(a.to_bits(), b.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn lossy_codecs_stay_within_documented_bounds() {
+        let mut rng = Xoshiro256pp::seed_from_u64(9);
+        let v: Vec<f32> = (0..64).map(|_| (rng.next_f64() * 2.0 - 1.0) as f32).collect();
+
+        // topk: selected coordinates exact, the rest zero.
+        let codec = CompressorSpec::TopK.build();
+        let back = codec.decode(&codec.encode(&v), v.len()).unwrap();
+        let mut kept = 0;
+        for (a, b) in v.iter().zip(back.iter()) {
+            if *b != 0.0 {
+                assert_eq!(a.to_bits(), b.to_bits(), "kept coordinate must be exact");
+                kept += 1;
+            }
+        }
+        assert_eq!(kept, 64 / 16, "k = max(1, d/16)");
+        // The kept ones are the largest magnitudes.
+        let mut mags: Vec<f32> = v.iter().map(|x| x.abs()).collect();
+        mags.sort_by(f32::total_cmp);
+        let cut = mags[mags.len() - kept];
+        for (a, b) in v.iter().zip(back.iter()) {
+            if a.abs() > cut {
+                assert_ne!(*b, 0.0, "large coordinate {a} dropped");
+            }
+        }
+
+        // signsgd: every coordinate is ±scale, scale = mean |v|.
+        let codec = CompressorSpec::SignSgd.build();
+        let back = codec.decode(&codec.encode(&v), v.len()).unwrap();
+        let scale = v.iter().map(|x| x.abs() as f64).sum::<f64>() / v.len() as f64;
+        for (a, b) in v.iter().zip(back.iter()) {
+            assert!((b.abs() as f64 - scale).abs() < 1e-6, "|{b}| != scale {scale}");
+            assert_eq!(a.is_sign_positive(), b.is_sign_positive());
+        }
+
+        // q8/q16: per-coordinate error within one quantization level.
+        for (spec, levels) in [(CompressorSpec::Q8, 255.0f64), (CompressorSpec::Q16, 65_535.0f64)] {
+            let codec = spec.build();
+            let back = codec.decode(&codec.encode(&v), v.len()).unwrap();
+            let lo = v.iter().copied().fold(f32::INFINITY, f32::min) as f64;
+            let hi = v.iter().copied().fold(f32::NEG_INFINITY, f32::max) as f64;
+            let step = (hi - lo) / levels;
+            for (a, b) in v.iter().zip(back.iter()) {
+                assert!(
+                    (*a as f64 - *b as f64).abs() <= step + 1e-6,
+                    "{spec:?}: |{a} - {b}| > level {step}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn stream_error_feedback_tracks_a_drifting_vector() {
+        // A slowly-drifting vector (an SGD iterate's shape of motion),
+        // then a hold phase: while drifting, the mirror error must stay
+        // bounded (error feedback — dropped mass is re-sent, never
+        // lost); once the vector stops moving, the residual flushes and
+        // the mirror converges onto the true vector. For every lossy
+        // codec.
+        for spec in [
+            CompressorSpec::TopK,
+            CompressorSpec::SignSgd,
+            CompressorSpec::Q8,
+            CompressorSpec::Q16,
+        ] {
+            let mut rng = Xoshiro256pp::seed_from_u64(31);
+            let d = 32;
+            let mut enc = StreamEncoder::new(spec);
+            let mut dec = StreamDecoder::new(spec);
+            let mut v = vec![0.0f32; d];
+            let err_of = |v: &[f32], got: &[f32]| -> f64 {
+                v.iter().zip(got.iter()).map(|(a, b)| ((a - b) as f64).powi(2)).sum::<f64>().sqrt()
+            };
+            let mut final_err = f64::INFINITY;
+            let mut norm = 0.0f64;
+            for round in 0..200 {
+                if round < 100 {
+                    for x in v.iter_mut() {
+                        *x += (rng.next_f64() * 0.02 - 0.01) as f32;
+                    }
+                }
+                let payload = enc.encode(&v);
+                let got = dec.decode(&payload, d).unwrap();
+                final_err = err_of(&v, &got);
+                norm = v.iter().map(|x| (*x as f64).powi(2)).sum::<f64>().sqrt();
+                assert!(
+                    final_err.is_finite() && final_err <= 2.0 * norm + 0.1,
+                    "{spec:?} round {round}: mirror error {final_err} vs ‖v‖ {norm}"
+                );
+            }
+            // 100 hold rounds flushed the residual: the receiver now
+            // sits essentially on top of the sender.
+            assert!(
+                final_err <= (0.05 * norm).max(1e-3),
+                "{spec:?}: residual failed to flush — error {final_err}, ‖v‖ {norm}"
+            );
+        }
+    }
+
+    #[test]
+    fn streams_handle_empty_vectors_without_losing_state() {
+        let mut enc = StreamEncoder::new(CompressorSpec::TopK);
+        let mut dec = StreamDecoder::new(CompressorSpec::TopK);
+        let v = vec![1.0f32, -2.0, 3.0, -4.0];
+        let p1 = enc.encode(&v);
+        let g1 = dec.decode(&p1, 4).unwrap();
+        // An interleaved empty message (a Busy task / idle report).
+        assert!(enc.encode(&[]).is_empty());
+        assert_eq!(dec.decode(&[], 4).unwrap(), Vec::<f32>::new());
+        // The stream resumes exactly where it left off.
+        let p2 = enc.encode(&v);
+        let g2 = dec.decode(&p2, 4).unwrap();
+        assert_eq!(g1.len(), 4);
+        assert_eq!(g2.len(), 4);
+        // Second round's mirror is at least as close as the first.
+        let err = |g: &[f32]| -> f64 {
+            v.iter().zip(g.iter()).map(|(a, b)| ((a - b) as f64).powi(2)).sum()
+        };
+        assert!(err(&g2) <= err(&g1) + 1e-12);
+    }
+}

@@ -1,0 +1,149 @@
+//! `q8` / `q16` — linear quantization with a min/max header.
+//!
+//! Payload: f32 `lo`, f32 `hi` (the vector's finite min/max), then one
+//! u8 (`q8`, 255 levels) or little-endian u16 (`q16`, 65535 levels)
+//! level per coordinate: `level = round((x − lo) / (hi − lo) · L)`,
+//! decoding to `lo + level/L · (hi − lo)`. A dense d-vector's `4d`
+//! bytes become `8 + d` (~4×) or `8 + 2d` (~2×). Per-coordinate error
+//! is at most half a level — `(hi − lo) / 2L` — and the stream layer's
+//! error-feedback residual keeps even that from accumulating across
+//! messages. Non-finite coordinates clamp to `lo` (NaN) or the nearest
+//! bound (±inf) without panicking.
+//!
+//! Decode rejects wrong payload lengths and non-finite or inverted
+//! (`lo > hi`) range headers.
+
+use super::{Compressor, CompressorInfo, CompressorSpec};
+use crate::ser::bytes::{ByteReader, ByteWriter};
+use anyhow::{bail, Result};
+
+/// Linear quantizer; `wide = false` is q8, `wide = true` is q16.
+pub struct Quant {
+    wide: bool,
+}
+
+fn build_q8() -> Box<dyn Compressor> {
+    Box::new(Quant { wide: false })
+}
+
+fn build_q16() -> Box<dyn Compressor> {
+    Box::new(Quant { wide: true })
+}
+
+pub const INFO_Q8: CompressorInfo = CompressorInfo {
+    name: "q8",
+    aliases: &["quant8", "u8"],
+    about: "linear 8-bit quantization with min/max header (~4x)",
+    lossless: false,
+    build: build_q8,
+};
+
+pub const INFO_Q16: CompressorInfo = CompressorInfo {
+    name: "q16",
+    aliases: &["quant16", "u16"],
+    about: "linear 16-bit quantization with min/max header (~2x)",
+    lossless: false,
+    build: build_q16,
+};
+
+impl Quant {
+    fn levels(&self) -> f64 {
+        if self.wide {
+            65_535.0
+        } else {
+            255.0
+        }
+    }
+
+    fn width(&self) -> usize {
+        if self.wide {
+            2
+        } else {
+            1
+        }
+    }
+}
+
+impl Compressor for Quant {
+    fn spec(&self) -> CompressorSpec {
+        if self.wide {
+            CompressorSpec::Q16
+        } else {
+            CompressorSpec::Q8
+        }
+    }
+
+    fn encode(&self, v: &[f32]) -> Vec<u8> {
+        if v.is_empty() {
+            return Vec::new();
+        }
+        let mut lo = f32::INFINITY;
+        let mut hi = f32::NEG_INFINITY;
+        for &x in v {
+            if x.is_finite() {
+                lo = lo.min(x);
+                hi = hi.max(x);
+            }
+        }
+        if lo > hi {
+            // No finite coordinate at all: a degenerate zero range.
+            lo = 0.0;
+            hi = 0.0;
+        }
+        let levels = self.levels();
+        let span = (hi - lo) as f64;
+        let mut w = ByteWriter::with_capacity(8 + self.width() * v.len());
+        w.put_f32(lo);
+        w.put_f32(hi);
+        for &x in v {
+            let xc = if x.is_finite() { x.clamp(lo, hi) } else if x == f32::INFINITY { hi } else { lo };
+            let q = if span > 0.0 {
+                (((xc - lo) as f64 / span) * levels).round().min(levels) as u32
+            } else {
+                0
+            };
+            if self.wide {
+                w.put_u8(q as u8);
+                w.put_u8((q >> 8) as u8);
+            } else {
+                w.put_u8(q as u8);
+            }
+        }
+        w.into_bytes()
+    }
+
+    fn decode(&self, bytes: &[u8], dim: usize) -> Result<Vec<f32>> {
+        let kind = if self.wide { "q16" } else { "q8" };
+        if dim == 0 {
+            if bytes.is_empty() {
+                return Ok(Vec::new());
+            }
+            bail!("{kind} payload: {} bytes for dim 0", bytes.len());
+        }
+        let want = 8 + self.width() * dim;
+        if bytes.len() != want {
+            bail!("{kind} payload: {} bytes for dim {dim} (want {want})", bytes.len());
+        }
+        let mut r = ByteReader::new(bytes);
+        let lo = r.get_f32()?;
+        let hi = r.get_f32()?;
+        if !lo.is_finite() || !hi.is_finite() || lo > hi {
+            bail!("{kind} payload: invalid range [{lo}, {hi}]");
+        }
+        let levels = self.levels();
+        let span = (hi - lo) as f64;
+        let mut out = Vec::with_capacity(dim);
+        for _ in 0..dim {
+            let q = if self.wide {
+                let a = r.get_u8()? as u32;
+                let b = r.get_u8()? as u32;
+                a | (b << 8)
+            } else {
+                r.get_u8()? as u32
+            };
+            out.push((lo as f64 + (q as f64 / levels) * span) as f32);
+        }
+        r.finish()?;
+        Ok(out)
+    }
+}

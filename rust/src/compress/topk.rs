@@ -1,0 +1,103 @@
+//! `topk` — top-k magnitude sparsification.
+//!
+//! Payload: `u32 k`, then `k` (u32 index, f32 raw-bit value) pairs with
+//! strictly ascending indices. k = max(1, d/16), so a dense d-vector's
+//! `4d` bytes become `4 + 8·max(1, d/16)` ≈ `d/2` — an ~8× reduction
+//! for large d. Kept coordinates travel exactly (raw bits); dropped
+//! ones decode to zero and are re-injected by the stream layer's
+//! error-feedback residual on the next message.
+//!
+//! Decode treats the payload as hostile: k > dim, an index out of
+//! range, a non-ascending (duplicate) index stream, or a length that
+//! disagrees with k all error, never panic.
+
+use super::{Compressor, CompressorInfo, CompressorSpec};
+use crate::ser::bytes::{ByteReader, ByteWriter};
+use anyhow::{bail, Result};
+
+/// Sparsification denominator: k = max(1, d / DENOM).
+pub const DENOM: usize = 16;
+
+pub struct TopK;
+
+fn build() -> Box<dyn Compressor> {
+    Box::new(TopK)
+}
+
+pub const INFO: CompressorInfo = CompressorInfo {
+    name: "topk",
+    aliases: &["top-k", "sparse"],
+    about: "top-k magnitude sparsification, k = max(1, d/16) (~8x for large d)",
+    lossless: false,
+    build,
+};
+
+/// k for a given dimension (0 for the empty vector).
+pub fn k_for(dim: usize) -> usize {
+    (dim / DENOM).max(1).min(dim)
+}
+
+impl Compressor for TopK {
+    fn spec(&self) -> CompressorSpec {
+        CompressorSpec::TopK
+    }
+
+    fn encode(&self, v: &[f32]) -> Vec<u8> {
+        let k = k_for(v.len());
+        if k == 0 {
+            return Vec::new();
+        }
+        // Deterministic selection: magnitude descending (total order,
+        // so NaN/±inf never panic a comparator), ties to the lower
+        // index.
+        let mut idx: Vec<u32> = (0..v.len() as u32).collect();
+        idx.sort_by(|&i, &j| {
+            v[j as usize]
+                .abs()
+                .total_cmp(&v[i as usize].abs())
+                .then_with(|| i.cmp(&j))
+        });
+        idx.truncate(k);
+        idx.sort_unstable();
+        let mut w = ByteWriter::with_capacity(4 + 8 * k);
+        w.put_u32(k as u32);
+        for &i in &idx {
+            w.put_u32(i);
+            w.put_f32(v[i as usize]);
+        }
+        w.into_bytes()
+    }
+
+    fn decode(&self, bytes: &[u8], dim: usize) -> Result<Vec<f32>> {
+        if dim == 0 {
+            if bytes.is_empty() {
+                return Ok(Vec::new());
+            }
+            bail!("topk payload: {} bytes for dim 0", bytes.len());
+        }
+        let mut r = ByteReader::new(bytes);
+        let k = r.get_u32()? as usize;
+        if k > dim {
+            bail!("topk payload: k {k} exceeds dim {dim}");
+        }
+        if bytes.len() != 4 + 8 * k {
+            bail!("topk payload: {} bytes for k {k} (want {})", bytes.len(), 4 + 8 * k);
+        }
+        let mut out = vec![0.0f32; dim];
+        let mut prev: Option<u32> = None;
+        for _ in 0..k {
+            let i = r.get_u32()?;
+            let x = r.get_f32()?;
+            if i as usize >= dim {
+                bail!("topk payload: index {i} out of range for dim {dim}");
+            }
+            if prev.is_some_and(|p| i <= p) {
+                bail!("topk payload: non-ascending index {i}");
+            }
+            prev = Some(i);
+            out[i as usize] = x;
+        }
+        r.finish()?;
+        Ok(out)
+    }
+}

@@ -11,6 +11,7 @@
 //! module never matches on a method, so new protocols need no config
 //! changes.
 
+use crate::compress::CompressorSpec;
 use crate::objective::ObjectiveSpec;
 use crate::protocols::{self, CombinePolicy, Iterate};
 use crate::ser::Value;
@@ -253,6 +254,10 @@ pub struct RunConfig {
     /// Execution runtime (simulated clock + sequential workers, or real
     /// clock + threaded workers).
     pub runtime: RuntimeSpec,
+    /// Gradient/iterate compression on the dist wire
+    /// ([`crate::compress`]); the in-process runtimes pass vectors by
+    /// move and ignore it. `identity` (the default) is bit-exact.
+    pub compressor: CompressorSpec,
     pub seed: u64,
 }
 
@@ -296,6 +301,7 @@ impl RunConfig {
             max_passes: 1.0,
             backend: Backend::Native,
             runtime: RuntimeSpec::Sim,
+            compressor: CompressorSpec::Identity,
             seed: 42,
         }
     }
@@ -589,6 +595,11 @@ impl RunConfig {
                     rt
                 }
             };
+        }
+        // Compressor: a bare registry name (`"compressor": "topk"`,
+        // aliases accepted) or the object form `{"kind": "topk"}`.
+        if let Some(x) = v.get("compressor") {
+            c.compressor = CompressorSpec::from_json(x)?;
         }
         c.validate()?;
         Ok(c)
@@ -943,6 +954,25 @@ mod tests {
         c.backend = Backend::Xla;
         let err = c.validate().unwrap_err().to_string();
         assert!(err.contains("native"), "{err}");
+    }
+
+    #[test]
+    fn compressor_json_parses_and_defaults() {
+        // Default is the bit-exact identity.
+        assert_eq!(RunConfig::base().compressor, CompressorSpec::Identity);
+        // Bare name, alias, and object form.
+        let c = RunConfig::from_json(&parse(r#"{"compressor": "topk"}"#).unwrap()).unwrap();
+        assert_eq!(c.compressor, CompressorSpec::TopK);
+        let c = RunConfig::from_json(&parse(r#"{"compressor": "1bit"}"#).unwrap()).unwrap();
+        assert_eq!(c.compressor, CompressorSpec::SignSgd);
+        let c =
+            RunConfig::from_json(&parse(r#"{"compressor": {"kind": "q8"}}"#).unwrap()).unwrap();
+        assert_eq!(c.compressor, CompressorSpec::Q8);
+        // Unknown names fail closed with the registry listing.
+        let err = RunConfig::from_json(&parse(r#"{"compressor": "gzip"}"#).unwrap())
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("identity"), "{err}");
     }
 
     #[test]

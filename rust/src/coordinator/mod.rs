@@ -269,6 +269,7 @@ impl Trainer {
                     delay.clone(),
                     cfg.seed,
                     consts,
+                    cfg.compressor,
                     time_scale,
                     port,
                     spawn,
@@ -585,6 +586,13 @@ impl TrainerBuilder {
     /// processes over TCP. Works with every registered protocol.
     pub fn runtime(mut self, r: RuntimeSpec) -> Self {
         self.cfg.runtime = r;
+        self
+    }
+
+    /// Select the dist-wire compressor ([`crate::compress`]; default
+    /// `identity`, bit-exact). The in-process runtimes ignore it.
+    pub fn compressor(mut self, c: crate::compress::CompressorSpec) -> Self {
+        self.cfg.compressor = c;
         self
     }
 

@@ -36,6 +36,11 @@
 //!   binary wire protocol, a worker agent CLI (`anytime-sgd worker`),
 //!   loopback child spawning (`--spawn-workers N`), and
 //!   crash-as-permanent-straggler failure semantics — DESIGN.md §6.
+//! * **compress** — pluggable gradient/iterate compression on the dist
+//!   wire ([`compress`]): a `Compressor` trait behind a name-keyed
+//!   registry (identity, top-k, EF-signSGD, 8/16-bit linear
+//!   quantization), negotiated per connection and applied through
+//!   delta/error-feedback streams (`--compressor topk`) — DESIGN.md §9.
 //! * **sweep** — the experiment-campaign engine: parameter grids over
 //!   [`config::RunConfig`], a named scenario library, a bounded-thread
 //!   parallel runner, and multi-seed mean ± CI aggregation
@@ -64,6 +69,7 @@ pub mod backend;
 pub mod benchkit;
 pub mod data;
 pub mod cli;
+pub mod compress;
 pub mod config;
 pub mod coordinator;
 pub mod exec;

@@ -50,7 +50,8 @@ fn usage() -> String {
                   parallel; mean ± CI aggregates under results/)\n\
        figures    regenerate paper figures (fig1..fig6 | theory | ablations |\n\
                   variance | async | logreg | softmax | all)\n\
-       list       enumerate registered protocols, objectives, runtimes, scenarios, presets\n\
+       list       enumerate registered protocols, objectives, compressors, runtimes,\n\
+                  scenarios, presets\n\
        partition  print + validate the Table-I data assignment\n\
        inspect    list AOT artifacts\n\n\
      Run `anytime-sgd <subcommand> --help` for flags.\n"
@@ -117,6 +118,13 @@ fn cmd_train(args: &[String]) -> Result<()> {
         .flag("wallclock", FlagKind::Bool, None, "deprecated alias for --runtime real")
         .flag("time-scale", FlagKind::Float, Some("0.001"), "wall-clock compression factor")
         .flag(
+            "compressor",
+            FlagKind::Str,
+            None,
+            "dist-wire payload compressor: identity (default, bit-exact) | topk | \
+             signsgd | q8 | q16; ignored by the in-process runtimes",
+        )
+        .flag(
             "spawn-workers",
             FlagKind::Int,
             None,
@@ -179,6 +187,9 @@ fn cmd_train(args: &[String]) -> Result<()> {
     } else if m.bool_of("wallclock") {
         log_warn!("cli", "--wallclock is deprecated; use --runtime real --time-scale ...");
         cfg.runtime = RuntimeSpec::parse("real", m.f64_of("time-scale"))?;
+    }
+    if let Some(c) = m.get("compressor") {
+        cfg.compressor = anytime_sgd::compress::CompressorSpec::parse(c)?;
     }
     if m.is_set("spawn-workers") && m.is_set("listen") {
         bail!(
@@ -501,7 +512,7 @@ fn cmd_figures(args: &[String]) -> Result<()> {
 fn cmd_list(args: &[String]) -> Result<()> {
     let cmd = Command::new(
         "list",
-        "enumerate registered protocols, objectives, runtimes, scenarios, and presets",
+        "enumerate registered protocols, objectives, compressors, runtimes, scenarios, and presets",
     );
     let _m = cmd.parse(args).map_err(|e| anyhow::anyhow!("{e}"))?;
 
@@ -524,6 +535,17 @@ fn cmd_list(args: &[String]) -> Result<()> {
             format!("  (aliases: {})", o.aliases.join(", "))
         };
         println!("  {:<16} {} [err: {}]{aliases}", o.name, o.about, o.metric);
+    }
+
+    println!("\nCompressors (`train --compressor` / `sweep --compressor` / config `compressor`):");
+    for c in anytime_sgd::compress::REGISTRY {
+        let aliases = if c.aliases.is_empty() {
+            String::new()
+        } else {
+            format!("  (aliases: {})", c.aliases.join(", "))
+        };
+        let loss = if c.lossless { " [lossless]" } else { "" };
+        println!("  {:<16} {}{loss}{aliases}", c.name, c.about);
     }
 
     println!("\nRuntimes (`train --runtime` / `sweep --runtime` / config `runtime`):");

@@ -19,9 +19,10 @@
 //! straggler for the rest of the run (the paper's persistent-straggler
 //! regime, realized by an actual crash).
 
-use super::wire::{read_frame, write_frame, Assign, Msg, TaskMsg, PROTOCOL_VERSION};
+use super::wire::{read_frame, write_frame, Assign, Msg, ReportMsg, TaskMsg, PROTOCOL_VERSION};
 use super::worker::WorkerOpts;
 use crate::backend::Consts;
+use crate::compress::{CompressorSpec, StreamDecoder, StreamEncoder};
 use crate::objective::ObjectiveSpec;
 use crate::coordinator::runtime::{
     budget_hedge_secs, plan, NetEpochStats, Report, Task, WorkerRuntime,
@@ -52,6 +53,27 @@ struct Conn {
     last_seen: Arc<Mutex<Instant>>,
 }
 
+/// Master-side compression state for one worker: the task-vector
+/// encoder plus one decoder per report payload. Each stream mirrors its
+/// peer on the worker message-by-message, which is why every received
+/// report must be decoded in arrival order (see
+/// [`DistRuntime::decode_report`]).
+struct WorkerStreams {
+    enc_task: StreamEncoder,
+    dec_xk: StreamDecoder,
+    dec_xbar: StreamDecoder,
+}
+
+impl WorkerStreams {
+    fn new(spec: CompressorSpec) -> Self {
+        Self {
+            enc_task: StreamEncoder::new(spec),
+            dec_xk: StreamDecoder::new(spec),
+            dec_xbar: StreamDecoder::new(spec),
+        }
+    }
+}
+
 /// Distributed execution over TCP. See the module docs.
 pub struct DistRuntime {
     conns: Vec<Conn>,
@@ -61,6 +83,11 @@ pub struct DistRuntime {
     events: Receiver<Event>,
     delay: DelayModel,
     time_scale: f64,
+    /// Parameter dimension d (every shard shares it) — the decode-side
+    /// length of each compressed payload.
+    dim: usize,
+    /// Per-worker compression streams (see [`WorkerStreams`]).
+    streams: Vec<WorkerStreams>,
     /// Telemetry accumulated since the last [`WorkerRuntime::net_stats`]
     /// drain (dispatch may run several rounds per epoch).
     stats: NetEpochStats,
@@ -99,6 +126,7 @@ impl DistRuntime {
         delay: DelayModel,
         seed: u64,
         consts: Consts,
+        compressor: CompressorSpec,
         time_scale: f64,
         port: u16,
         spawn: bool,
@@ -136,8 +164,8 @@ impl DistRuntime {
         let admit_budget =
             if spawn { super::ADMIT_TIMEOUT_SPAWN } else { super::ADMIT_TIMEOUT_EXTERNAL };
         let _admit_span = crate::obs::span::span_with("admit", "net", &[("workers", n as f64)]);
-        match Self::admit(&listener, shards, batch, objective, seed, consts, time_scale,
-            admit_budget)
+        match Self::admit(&listener, shards, batch, objective, seed, consts, compressor,
+            time_scale, admit_budget)
         {
             Ok((conns, events, readers, bytes_sent)) => Ok(Self {
                 alive: vec![true; n],
@@ -145,6 +173,8 @@ impl DistRuntime {
                 events,
                 delay,
                 time_scale,
+                dim: shards[0].a.cols(),
+                streams: (0..n).map(|_| WorkerStreams::new(compressor)).collect(),
                 stats: NetEpochStats {
                     bytes_sent,
                     rtt_secs: vec![None; n],
@@ -175,6 +205,7 @@ impl DistRuntime {
         objective: ObjectiveSpec,
         seed: u64,
         consts: Consts,
+        compressor: CompressorSpec,
         time_scale: f64,
         budget: Duration,
     ) -> Result<(Vec<Conn>, Receiver<Event>, Vec<JoinHandle<()>>, u64)> {
@@ -204,8 +235,9 @@ impl DistRuntime {
                 Err(e) => return Err(e.into()),
             };
             let v = conns.len();
-            match Self::handshake(stream, v, shards, batch, objective, seed, consts, time_scale)
-            {
+            match Self::handshake(
+                stream, v, shards, batch, objective, seed, consts, compressor, time_scale,
+            ) {
                 Ok((conn, sent)) => {
                     bytes_sent += sent;
                     crate::obs::metrics::add("net.bytes_sent", sent);
@@ -239,6 +271,7 @@ impl DistRuntime {
         objective: ObjectiveSpec,
         seed: u64,
         consts: Consts,
+        compressor: CompressorSpec,
         time_scale: f64,
     ) -> Result<(Conn, u64)> {
         // The listener is non-blocking during admission; on some
@@ -260,6 +293,21 @@ impl DistRuntime {
             }
             other => bail!("expected Hello, got {other:?}"),
         };
+        // Compressor negotiation: the worker advertises the codecs it
+        // can decode in a `cmp=a,b,c` capability segment. A worker that
+        // advertises none (an older build) is assumed to speak only the
+        // raw-bit identity form.
+        let supported = capabilities
+            .split(';')
+            .find_map(|seg| seg.strip_prefix("cmp="))
+            .map(|list| list.split(',').any(|name| name == compressor.name()))
+            .unwrap_or(compressor == CompressorSpec::Identity);
+        if !supported {
+            bail!(
+                "worker does not support compressor `{}` (capabilities: {capabilities})",
+                compressor.name()
+            );
+        }
         let shard = &shards[v];
         let d = shard.a.cols();
         let mut flat = Vec::with_capacity(shard.rows() * d);
@@ -278,6 +326,7 @@ impl DistRuntime {
             a: flat,
             y: shard.y.clone(),
             global_rows: shard.global_rows.clone(),
+            compressor,
         }));
         let mut writer = stream;
         let sent = write_frame(&mut writer, &assign).context("send Assign")?;
@@ -293,10 +342,37 @@ impl DistRuntime {
             match ev {
                 // A report with no gather in flight is the late arrival
                 // of a deadline miss — already counted as dropped when
-                // its round's gather expired, so only its bytes are
-                // accounted here.
-                Event::Frame(_, _, bytes) => self.account_recv(bytes),
+                // its round's gather expired, so its bytes are accounted
+                // and its payloads decoded (stream lockstep, see
+                // `decode_report`), but its values go nowhere.
+                Event::Frame(v, msg, bytes) => {
+                    self.account_recv(bytes);
+                    if let Msg::Report(r) = msg {
+                        let _ = self.decode_report(v, &r);
+                    }
+                }
                 Event::Disconnected(v) => self.mark_dead(v),
+            }
+        }
+    }
+
+    /// Decode one report's compressed payloads. Every report received
+    /// from worker `v` — fresh, stale, or about to be dropped — must
+    /// pass through here in arrival order: the two stream decoders
+    /// mirror the worker's encoders message-by-message, and skipping
+    /// one would desync every later decode on this connection. A
+    /// payload that fails to decode is a protocol violation: the worker
+    /// is marked dead (permanent straggler), never trusted again.
+    fn decode_report(&mut self, v: usize, r: &ReportMsg) -> Option<Report> {
+        let s = &mut self.streams[v];
+        match (s.dec_xk.decode(&r.x_k, self.dim), s.dec_xbar.decode(&r.x_bar, self.dim)) {
+            (Ok(x_k), Ok(x_bar)) => {
+                Some(Report { q: r.q as usize, busy_secs: r.busy_secs, x_k, x_bar })
+            }
+            (Err(e), _) | (_, Err(e)) => {
+                crate::log_warn!("net", "worker {v}: undecodable report payload: {e:#}");
+                self.mark_dead(v);
+                None
             }
         }
     }
@@ -395,7 +471,7 @@ impl WorkerRuntime for DistRuntime {
             let (target, busy) = plan(&self.delay, v, epoch, task.work, rate);
             let msg = Msg::Task(Box::new(TaskMsg {
                 round,
-                x0: task.x0,
+                x0: self.streams[v].enc_task.encode(&task.x0),
                 t0: task.t0,
                 stream_label: task.stream.0.to_string(),
                 stream_key: task.stream.1,
@@ -443,17 +519,17 @@ impl WorkerRuntime for DistRuntime {
             match self.events.recv_timeout(remaining.min(super::HEARTBEAT_INTERVAL)) {
                 Ok(Event::Frame(v, Msg::Report(r), bytes)) => {
                     self.account_recv(bytes);
+                    // Decoded unconditionally — even a stale report must
+                    // advance the streams (see `decode_report`).
+                    let decoded = self.decode_report(v, &r);
                     if r.round == round && pending[v] {
                         pending[v] = false;
                         expected -= 1;
                         self.stats.rtt_secs[v] =
                             sent_at[v].map(|t0| t0.elapsed().as_secs_f64());
-                        out[v] = Some(Report {
-                            q: r.q as usize,
-                            busy_secs: r.busy_secs,
-                            x_k: r.x_k,
-                            x_bar: r.x_bar,
-                        });
+                        // An undecodable payload leaves None: the worker
+                        // was just marked dead, same as a disconnect.
+                        out[v] = decoded;
                     }
                     // A stale-round report is not counted here: it was
                     // already counted as dropped when its own round's
@@ -614,6 +690,7 @@ mod tests {
             DelayModel::new(env(), 9),
             9,
             Consts::constant(1e-3),
+            CompressorSpec::Identity,
             TS,
             port,
             false,
@@ -690,6 +767,7 @@ mod tests {
                 DelayModel::new(StragglerEnv::ideal(0.01), 9), // all 3 modeled-alive
                 9,
                 Consts::constant(1e-3),
+                CompressorSpec::Identity,
                 TS,
                 port,
                 false,
@@ -774,6 +852,7 @@ mod tests {
             DelayModel::new(StragglerEnv::ideal(0.01), 9),
             9,
             Consts::constant(1e-3),
+            CompressorSpec::Identity,
             TS,
             port,
             false,

@@ -24,6 +24,7 @@
 //! payloads and every finite value round-trip bit-exactly — the
 //! dist ≡ sim reproducibility contract depends on it.
 
+use crate::compress::CompressorSpec;
 use crate::objective::ObjectiveSpec;
 use crate::ser::bytes::{ByteReader, ByteWriter, BytesError};
 use std::fmt;
@@ -33,7 +34,10 @@ use std::io::{Read, Write};
 /// master disagreeing on this refuse to pair during the handshake.
 /// v2: `Assign` carries the full objective spec (kind + class count)
 /// instead of a bare least-squares/logistic byte.
-pub const PROTOCOL_VERSION: u32 = 2;
+/// v3: `Assign` negotiates a compressor, and `Task`/`Report` iterate
+/// payloads travel as opaque compressed byte vectors whose layout is
+/// owned by [`crate::compress`].
+pub const PROTOCOL_VERSION: u32 = 3;
 
 /// Hard cap on one frame's payload (1 GiB) — large enough for a
 /// paper-scale shard in `Assign`, small enough that a corrupt length
@@ -109,6 +113,9 @@ pub struct Assign {
     pub y: Vec<f32>,
     /// Global row ids (provenance; length `rows`).
     pub global_rows: Vec<u32>,
+    /// The negotiated compressor both ends apply to `Task`/`Report`
+    /// iterate payloads (wire form: a kind byte).
+    pub compressor: CompressorSpec,
 }
 
 /// One dispatch-round assignment, fully planned master-side (the
@@ -121,8 +128,9 @@ pub struct TaskMsg {
     /// (generalized, async) run several dispatch rounds per epoch and a
     /// late round-1 reply must never be mistaken for a round-2 one.
     pub round: u64,
-    /// Start vector of the local SGD chain.
-    pub x0: Vec<f32>,
+    /// Start vector of the local SGD chain, encoded by the negotiated
+    /// compressor's stream encoder (empty when the round is idle).
+    pub x0: Vec<u8>,
     /// Iteration offset for schedule continuity.
     pub t0: f32,
     /// Minibatch stream label + key (`root.split(label, v, key)`).
@@ -148,10 +156,11 @@ pub struct ReportMsg {
     pub q: u64,
     /// Modeled compute seconds consumed.
     pub busy_secs: f64,
-    /// Final iterate.
-    pub x_k: Vec<f32>,
-    /// Running average of the iterates.
-    pub x_bar: Vec<f32>,
+    /// Final iterate, encoded by the negotiated compressor's stream
+    /// encoder (empty when the round was idle).
+    pub x_k: Vec<u8>,
+    /// Running average of the iterates, same encoding.
+    pub x_bar: Vec<u8>,
 }
 
 /// Every message the protocol speaks.
@@ -209,11 +218,12 @@ impl Msg {
                 w.put_f32s(&a.a);
                 w.put_f32s(&a.y);
                 w.put_u32s(&a.global_rows);
+                w.put_u8(a.compressor.wire_kind());
             }
             Msg::Task(t) => {
                 w.put_u8(TAG_TASK);
                 w.put_u64(t.round);
-                w.put_f32s(&t.x0);
+                w.put_bytes(&t.x0);
                 w.put_f32(t.t0);
                 w.put_str(&t.stream_label);
                 w.put_u64(t.stream_key);
@@ -228,8 +238,8 @@ impl Msg {
                 w.put_u32(r.worker);
                 w.put_u64(r.q);
                 w.put_f64(r.busy_secs);
-                w.put_f32s(&r.x_k);
-                w.put_f32s(&r.x_bar);
+                w.put_bytes(&r.x_k);
+                w.put_bytes(&r.x_bar);
             }
             Msg::Heartbeat { nonce } => {
                 w.put_u8(TAG_HEARTBEAT);
@@ -275,6 +285,8 @@ impl Msg {
                 let a = r.get_f32s()?;
                 let y = r.get_f32s()?;
                 let global_rows = r.get_u32s()?;
+                let compressor = CompressorSpec::from_wire_kind(r.get_u8()?)
+                    .ok_or(WireError::BadValue("compressor"))?;
                 if dim == 0 || a.len() != y.len() * dim as usize || y.len() != global_rows.len() {
                     return Err(WireError::BadValue("shard shape"));
                 }
@@ -293,11 +305,12 @@ impl Msg {
                     a,
                     y,
                     global_rows,
+                    compressor,
                 }))
             }
             TAG_TASK => Msg::Task(Box::new(TaskMsg {
                 round: r.get_u64()?,
-                x0: r.get_f32s()?,
+                x0: r.get_bytes()?,
                 t0: r.get_f32()?,
                 stream_label: r.get_str()?,
                 stream_key: r.get_u64()?,
@@ -311,8 +324,8 @@ impl Msg {
                 worker: r.get_u32()?,
                 q: r.get_u64()?,
                 busy_secs: r.get_f64()?,
-                x_k: r.get_f32s()?,
-                x_bar: r.get_f32s()?,
+                x_k: r.get_bytes()?,
+                x_bar: r.get_bytes()?,
             })),
             TAG_HEARTBEAT => Msg::Heartbeat { nonce: r.get_u64()? },
             TAG_SHUTDOWN => Msg::Shutdown,
@@ -382,9 +395,11 @@ mod tests {
         }
     }
 
-    fn fuzz_f32s(rng: &mut Xoshiro256pp, max_len: usize) -> Vec<f32> {
+    /// Compressed payloads are opaque to the wire — fuzz them as raw
+    /// bytes (the compressors' own tests cover their internal layout).
+    fn fuzz_bytes(rng: &mut Xoshiro256pp, max_len: usize) -> Vec<u8> {
         let n = rng.index(max_len + 1);
-        (0..n).map(|_| fuzz_f32(rng)).collect()
+        (0..n).map(|_| rng.next_u64() as u8).collect()
     }
 
     fn fuzz_msg(rng: &mut Xoshiro256pp) -> Msg {
@@ -412,11 +427,12 @@ mod tests {
                     a: (0..rows * dim as usize).map(|_| fuzz_f32(rng)).collect(),
                     y: (0..rows).map(|_| fuzz_f32(rng)).collect(),
                     global_rows: (0..rows as u32).collect(),
+                    compressor: CompressorSpec::from_wire_kind(rng.index(5) as u8).unwrap(),
                 }))
             }
             2 => Msg::Task(Box::new(TaskMsg {
                 round: rng.next_u64(),
-                x0: fuzz_f32s(rng, 32),
+                x0: fuzz_bytes(rng, 128),
                 t0: fuzz_f32(rng),
                 stream_label: ["minibatch", "mb", "", "η-greek"][rng.index(4)].to_string(),
                 stream_key: rng.next_u64(),
@@ -430,8 +446,8 @@ mod tests {
                 worker: rng.next_u64() as u32,
                 q: rng.next_u64(),
                 busy_secs: fuzz_f64(rng),
-                x_k: fuzz_f32s(rng, 32),
-                x_bar: fuzz_f32s(rng, 32),
+                x_k: fuzz_bytes(rng, 128),
+                x_bar: fuzz_bytes(rng, 128),
             })),
             4 => Msg::Heartbeat { nonce: rng.next_u64() },
             _ => Msg::Shutdown,
@@ -528,7 +544,12 @@ mod tests {
             a: vec![1.0, 2.0],
             y: vec![3.0],
             global_rows: vec![0],
+            compressor: CompressorSpec::Identity,
         };
+        // Out-of-domain compressor kind (the trailing payload byte).
+        let mut a = Msg::Assign(Box::new(assign.clone())).encode();
+        *a.last_mut().unwrap() = crate::compress::MAX_WIRE_KIND + 1;
+        assert!(matches!(Msg::decode(&a), Err(WireError::BadValue("compressor"))));
         let mut a = Msg::Assign(Box::new(assign.clone())).encode();
         // objective kind byte sits after tag(1)+worker(4)+n(4)+seed(8)+batch(4).
         a[21] = 7;
@@ -572,6 +593,7 @@ mod tests {
             a: vec![1.0, 2.0],
             y: vec![3.0],
             global_rows: vec![0],
+            compressor: CompressorSpec::Identity,
         }));
         assert!(matches!(Msg::decode(&msg.encode()), Err(WireError::BadValue("shard shape"))));
     }
@@ -589,18 +611,42 @@ mod tests {
         // A report at the frame-size boundary region (not the full
         // 1 GiB — that would dominate test time — but big enough to
         // cross every internal length check's fast path).
-        let n = 300_000;
+        let n = 1_200_000usize;
         let msg = Msg::Report(Box::new(ReportMsg {
             round: 3,
             worker: 1,
             q: 9,
             busy_secs: 0.5,
-            x_k: (0..n).map(|i| i as f32).collect(),
-            x_bar: (0..n).map(|i| -(i as f32)).collect(),
+            x_k: (0..n).map(|i| i as u8).collect(),
+            x_bar: (0..n).map(|i| (i >> 3) as u8).collect(),
         }));
         let mut buf = Vec::new();
         write_frame(&mut buf, &msg).unwrap();
         let (back, _) = read_frame(&mut buf.as_slice()).unwrap();
         assert_eq!(back, msg);
+    }
+
+    #[test]
+    fn framed_report_size_is_pinned() {
+        // The byte accounting the `net` telemetry reports is the framed
+        // wire size: 4 (length prefix) + 1 (tag) + 8 (round) + 4
+        // (worker) + 8 (q) + 8 (busy) + (4 + |x_k|) + (4 + |x_bar|).
+        // Two 64-byte payloads — a d=16 identity encoding — pin 169.
+        let msg = Msg::Report(Box::new(ReportMsg {
+            round: 1,
+            worker: 0,
+            q: 5,
+            busy_secs: 0.25,
+            x_k: vec![0xAA; 64],
+            x_bar: vec![0xBB; 64],
+        }));
+        let mut buf = Vec::new();
+        let sent = write_frame(&mut buf, &msg).unwrap();
+        assert_eq!(sent, 169);
+        assert_eq!(buf.len(), 169);
+        // And the identity compressor's payload for d=16 is exactly the
+        // 64 raw bytes assumed above.
+        let codec = crate::compress::CompressorSpec::Identity.build();
+        assert_eq!(codec.encode(&[1.5f32; 16]).len(), 64);
     }
 }

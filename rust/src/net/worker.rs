@@ -19,6 +19,7 @@
 
 use super::wire::{read_frame, write_frame, Assign, Msg, ReportMsg, WireError, PROTOCOL_VERSION};
 use crate::backend::{Consts, NativeWorker, WorkerCompute};
+use crate::compress::{CompressorSpec, StreamDecoder, StreamEncoder};
 use crate::coordinator::runtime::{execute_planned, PlannedTask};
 use crate::linalg::Matrix;
 use crate::objective::DynObjective;
@@ -88,9 +89,11 @@ pub fn serve(stream: TcpStream, opts: WorkerOpts) -> Result<()> {
 
     // Handshake: register, then receive the shard + run constants.
     let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    // The `cmp=` segment advertises every codec this build can decode;
+    // the master refuses admission rather than assign one we lack.
     send(&writer, &Msg::Hello {
         version: PROTOCOL_VERSION,
-        capabilities: format!("native;cores={cores}"),
+        capabilities: format!("native;cores={cores};cmp={}", crate::compress::names().join(",")),
     })
     .context("send Hello")?;
     let assign = match read_frame(&mut reader).context("await Assign")? {
@@ -144,7 +147,7 @@ pub fn serve(stream: TcpStream, opts: WorkerOpts) -> Result<()> {
     };
 
     let result = serve_tasks(&mut reader, &writer, &mut compute, v, &root, consts, batch,
-        time_scale, opts);
+        time_scale, assign.compressor, opts);
     stop.store(true, Ordering::Relaxed);
     let _ = hb.join();
     result
@@ -194,12 +197,20 @@ fn serve_tasks(
     consts: Consts,
     batch: usize,
     time_scale: f64,
+    compressor: CompressorSpec,
     opts: WorkerOpts,
 ) -> Result<()> {
     if opts.die_after_tasks == Some(0) {
         // Crash before serving anything: admission-then-immediate-loss.
         return Ok(());
     }
+    // Compression streams, mirroring the master's message-by-message
+    // (one decoder for incoming task vectors, one encoder per report
+    // payload) — every task decoded and every report encoded keeps the
+    // pair in lockstep.
+    let mut dec_x0 = StreamDecoder::new(compressor);
+    let mut enc_xk = StreamEncoder::new(compressor);
+    let mut enc_xbar = StreamEncoder::new(compressor);
     let mut served = 0usize;
     loop {
         match read_frame(reader) {
@@ -209,14 +220,17 @@ fn serve_tasks(
                     "worker",
                     &[("worker", v as f64), ("round", t.round as f64)],
                 );
+                let x0 = dec_x0
+                    .decode(&t.x0, compute.dim())
+                    .with_context(|| format!("worker {v}: undecodable task x0"))?;
                 // Busy/zero-step tasks legitimately carry an empty x0
                 // (no SGD chain runs); only step-running tasks must
                 // match the shard dimension.
-                if t.target > 0 && t.x0.len() != compute.dim() {
-                    bail!("task x0 dim {} != shard dim {}", t.x0.len(), compute.dim());
+                if t.target > 0 && x0.len() != compute.dim() {
+                    bail!("task x0 dim {} != shard dim {}", x0.len(), compute.dim());
                 }
                 let planned = PlannedTask {
-                    x0: t.x0,
+                    x0,
                     t0: t.t0,
                     label: t.stream_label,
                     key: t.stream_key,
@@ -231,8 +245,8 @@ fn serve_tasks(
                     worker: v as u32,
                     q: rep.q as u64,
                     busy_secs: rep.busy_secs,
-                    x_k: rep.x_k,
-                    x_bar: rep.x_bar,
+                    x_k: enc_xk.encode(&rep.x_k),
+                    x_bar: enc_xbar.encode(&rep.x_bar),
                 }));
                 let sent = {
                     let _sp = crate::obs::span::span_with(

@@ -100,6 +100,14 @@ impl ByteWriter {
             self.put_u32(x);
         }
     }
+
+    /// Length-prefixed (u32 byte count) opaque byte vector — the
+    /// transport for compressed vector payloads, whose internal layout
+    /// is owned by [`crate::compress`], not the wire.
+    pub fn put_bytes(&mut self, xs: &[u8]) {
+        self.put_u32(xs.len() as u32);
+        self.buf.extend_from_slice(xs);
+    }
 }
 
 /// Bounds-checked decoder over a byte slice.
@@ -203,6 +211,12 @@ impl<'a> ByteReader<'a> {
         }
         Ok(out)
     }
+
+    /// Length-prefixed opaque byte vector.
+    pub fn get_bytes(&mut self) -> Result<Vec<u8>, BytesError> {
+        let n = self.get_len(1, "byte vec length")?;
+        Ok(self.take(n, "byte vec")?.to_vec())
+    }
 }
 
 #[cfg(test)]
@@ -265,6 +279,28 @@ mod tests {
         assert_eq!(r.get_f32s().unwrap(), Vec::<f32>::new());
         assert_eq!(r.get_u32s().unwrap(), vec![0, u32::MAX]);
         r.finish().unwrap();
+    }
+
+    #[test]
+    fn byte_vectors_round_trip_and_reject_truncation() {
+        let mut w = ByteWriter::new();
+        w.put_bytes(&[0xAB, 0, 0xFF]);
+        w.put_bytes(&[]);
+        let bytes = w.into_bytes();
+        let mut r = ByteReader::new(&bytes);
+        assert_eq!(r.get_bytes().unwrap(), vec![0xAB, 0, 0xFF]);
+        assert_eq!(r.get_bytes().unwrap(), Vec::<u8>::new());
+        r.finish().unwrap();
+        // Every proper prefix must fail cleanly.
+        for cut in 0..7 {
+            let mut r = ByteReader::new(&bytes[..cut]);
+            assert!(r.get_bytes().is_err(), "prefix of {cut} bytes must fail");
+        }
+        // A length claiming more bytes than present is rejected up front.
+        let mut w = ByteWriter::new();
+        w.put_u32(u32::MAX);
+        w.put_u8(1);
+        assert!(ByteReader::new(&w.into_bytes()).get_bytes().is_err());
     }
 
     #[test]

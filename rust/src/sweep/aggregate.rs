@@ -295,6 +295,7 @@ mod tests {
             },
             trace,
             initial_err: errs.first().copied().unwrap_or(1.0),
+            report: crate::obs::report::RunReport::from_run(&[], &[]),
         }
     }
 

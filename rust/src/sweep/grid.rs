@@ -3,8 +3,9 @@
 //!
 //! A [`Grid`] holds a base config plus per-axis value lists; empty axes
 //! mean "use the base value". [`Grid::expand`] walks the cartesian
-//! product in a fixed order (scenario → method → workers → redundancy →
-//! T → T_c → backend → seed), so cell order — and therefore every
+//! product in a fixed order (scenario → objective → method → workers →
+//! redundancy → T → T_c → backend → runtime → compressor → seed), so
+//! cell order — and therefore every
 //! downstream aggregate — is independent of thread scheduling.
 //!
 //! Cells within one group (= every axis except `seed`) differ only in
@@ -61,6 +62,10 @@ pub struct Grid {
     /// under the simulated, real-threaded, and/or distributed (TCP
     /// worker processes) runtime.
     pub runtimes: Vec<RuntimeSpec>,
+    /// Dist-wire compressor names (empty = base, i.e. `identity`).
+    /// Only the dist runtime reads the setting; sweeping it against
+    /// sim/real cells produces identical curves per value.
+    pub compressors: Vec<String>,
     /// Root seeds (never empty).
     pub seeds: Vec<u64>,
 }
@@ -81,6 +86,7 @@ impl Grid {
             objectives: Vec::new(),
             backends: Vec::new(),
             runtimes: Vec::new(),
+            compressors: Vec::new(),
             seeds: vec![seed],
         }
     }
@@ -130,6 +136,11 @@ impl Grid {
         self
     }
 
+    pub fn compressors<S: Into<String>>(mut self, v: impl IntoIterator<Item = S>) -> Self {
+        self.compressors = v.into_iter().map(Into::into).collect();
+        self
+    }
+
     pub fn seeds(mut self, v: impl IntoIterator<Item = u64>) -> Self {
         self.seeds = v.into_iter().collect();
         self
@@ -167,6 +178,7 @@ impl Grid {
             * Self::axis_len(self.t_c.len())
             * Self::axis_len(self.backends.len())
             * Self::axis_len(self.runtimes.len())
+            * Self::axis_len(self.compressors.len())
             * self.seeds.len()
     }
 
@@ -226,6 +238,12 @@ impl Grid {
         } else {
             self.objectives.iter().map(|o| Some(o.as_str())).collect()
         };
+        // Compressor axis: `None` = keep the base config's compressor.
+        let compressors: Vec<Option<&str>> = if self.compressors.is_empty() {
+            vec![None]
+        } else {
+            self.compressors.iter().map(|c| Some(c.as_str())).collect()
+        };
         let mut cells = Vec::with_capacity(self.len());
         for sc in &self.scenarios {
             for &obj in &objectives {
@@ -241,6 +259,7 @@ impl Grid {
                             for &tc in &tcs {
                                 for &bk in &backends {
                                     for &rt in &runtimes {
+                                    for &cmp in &compressors {
                                         let mut group = format!("{sc}/{method}");
                                         if let (true, Some(o)) = (objectives.len() > 1, obj) {
                                             group.push_str(&format!("/obj-{o}"));
@@ -263,6 +282,9 @@ impl Grid {
                                         if runtimes.len() > 1 {
                                             group.push_str(&format!("/rt-{}", rt.name()));
                                         }
+                                        if let (true, Some(c)) = (compressors.len() > 1, cmp) {
+                                            group.push_str(&format!("/cmp-{c}"));
+                                        }
                                         for &seed in &self.seeds {
                                             let mut cfg = self.base.clone();
                                             cfg.workers = n;
@@ -270,6 +292,10 @@ impl Grid {
                                             cfg.t_c = tc;
                                             cfg.backend = bk;
                                             cfg.runtime = rt;
+                                            if let Some(c) = cmp {
+                                                cfg.compressor =
+                                                    crate::compress::CompressorSpec::parse(c)?;
+                                            }
                                             scenarios::apply(sc, &mut cfg)?;
                                             if let Some(o) = obj {
                                                 crate::objective::apply_axis(o, &mut cfg)?;
@@ -288,6 +314,7 @@ impl Grid {
                                                 cfg,
                                             });
                                         }
+                                    }
                                     }
                                 }
                             }
@@ -313,6 +340,7 @@ impl Grid {
     ///   "t_c": [1e9],
     ///   "backends": ["native"],
     ///   "runtimes": ["sim", "real"],   // execution-runtime axis
+    ///   "compressors": ["identity", "topk"],  // dist-wire codec axis
     ///   "time_scale": 1e-4,            // compression for `real` cells
     ///   "seeds": 5            // count, or an explicit array [7, 8, 9]
     /// }
@@ -320,7 +348,7 @@ impl Grid {
     pub fn from_json(v: &Value) -> Result<Self> {
         const KNOWN: &[&str] = &[
             "base", "scenarios", "methods", "workers", "redundancy", "t", "t_c", "objectives",
-            "backends", "runtimes", "time_scale", "seeds",
+            "backends", "runtimes", "compressors", "time_scale", "seeds",
         ];
         let obj = v.as_obj().ok_or_else(|| anyhow!("sweep spec must be a JSON object"))?;
         for key in obj.keys() {
@@ -372,6 +400,12 @@ impl Grid {
                 .iter()
                 .map(|s| RuntimeSpec::parse(s, scale))
                 .collect::<Result<Vec<_>>>()?;
+        }
+        if let Some(a) = v.get("compressors") {
+            g.compressors = str_list(a, "compressors")?;
+            for c in &g.compressors {
+                crate::compress::lookup(c).map_err(|e| anyhow!("compressors: {e}"))?;
+            }
         }
         match v.get("seeds") {
             Some(Value::Num(_)) => {
@@ -640,6 +674,48 @@ mod tests {
         assert_eq!(g.objectives, vec!["linreg", "softmax"]);
         assert!(Grid::from_json(&parse(r#"{"objectives": ["hinge"]}"#).unwrap()).is_err());
         let g = Grid::new(tiny_base()).scenarios(["ideal"]).objectives(["hinge"]);
+        assert!(g.expand().is_err());
+    }
+
+    #[test]
+    fn compressor_axis_expands_and_keys_groups() {
+        use crate::compress::CompressorSpec;
+        let g = Grid::new(tiny_base())
+            .scenarios(["ideal"])
+            .methods(["anytime", "sync"])
+            .compressors(["identity", "topk", "signsgd"]);
+        assert_eq!(g.len(), 6);
+        let cells = g.expand().unwrap();
+        assert_eq!(cells.len(), 6);
+        for c in ["identity", "topk", "signsgd"] {
+            assert!(
+                cells.iter().any(|x| x.group.contains(&format!("/cmp-{c}"))),
+                "missing /cmp-{c}: {:?}",
+                cells.iter().map(|x| &x.group).collect::<Vec<_>>()
+            );
+        }
+        assert!(cells
+            .iter()
+            .any(|c| c.group.contains("/cmp-topk") && c.cfg.compressor == CompressorSpec::TopK));
+        // Aliases resolve through the spec parser.
+        let cells = Grid::new(tiny_base())
+            .scenarios(["ideal"])
+            .compressors(["id", "1bit"])
+            .expand()
+            .unwrap();
+        assert!(cells.iter().any(|c| c.cfg.compressor == CompressorSpec::SignSgd));
+        // Single-compressor grids keep their group keys unchanged.
+        let cells = Grid::new(tiny_base()).scenarios(["ideal"]).expand().unwrap();
+        assert!(cells.iter().all(|c| !c.group.contains("/cmp-")));
+        assert!(cells.iter().all(|c| c.cfg.compressor == CompressorSpec::Identity));
+        // JSON spec form + unknown names fail closed.
+        let g = Grid::from_json(
+            &parse(r#"{"scenarios": ["ideal"], "compressors": ["identity", "q8"]}"#).unwrap(),
+        )
+        .unwrap();
+        assert_eq!(g.compressors, vec!["identity", "q8"]);
+        assert!(Grid::from_json(&parse(r#"{"compressors": ["gzip"]}"#).unwrap()).is_err());
+        let g = Grid::new(tiny_base()).scenarios(["ideal"]).compressors(["gzip"]);
         assert!(g.expand().is_err());
     }
 

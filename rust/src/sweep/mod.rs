@@ -106,6 +106,13 @@ pub fn cli_command() -> Command {
             Some("0.001"),
             "wall-clock compression for `real`/`dist` runtime cells",
         )
+        .flag(
+            "compressor",
+            FlagKind::Str,
+            None,
+            "comma-separated dist-wire compressors (identity|topk|signsgd|q8|q16) — \
+             sweep the payload-codec axis (only `dist` cells read it)",
+        )
         .flag("epochs", FlagKind::Int, None, "override epochs per cell")
         .flag("threads", FlagKind::Int, Some("0"), "worker threads (0 = all cores)")
         .flag("name", FlagKind::Str, Some("sweep"), "campaign name (output file stem)")
@@ -188,6 +195,12 @@ pub fn grid_from_matches(m: &Matches) -> Result<Grid> {
             .map(|r| crate::config::RuntimeSpec::parse(r, scale))
             .collect::<Result<Vec<_>>>()?;
     }
+    if let Some(s) = m.get("compressor") {
+        g.compressors = split_names(s);
+        for c in &g.compressors {
+            crate::compress::lookup(c).map_err(|e| anyhow!("--compressor: {e}"))?;
+        }
+    }
     Ok(g)
 }
 
@@ -216,6 +229,19 @@ mod tests {
         // ec2 × (anytime, sync, fnb, gc) × 3 seeds.
         assert_eq!(g.len(), 12);
         assert_eq!(g.groups(), 4);
+    }
+
+    #[test]
+    fn compressor_flag_feeds_the_grid_axis() {
+        let args: Vec<String> =
+            ["--compressor", "identity,topk"].iter().map(|s| s.to_string()).collect();
+        let m = cli_command().parse(&args).unwrap();
+        let g = grid_from_matches(&m).unwrap();
+        assert_eq!(g.compressors, vec!["identity", "topk"]);
+        let args: Vec<String> = ["--compressor", "gzip"].iter().map(|s| s.to_string()).collect();
+        let m = cli_command().parse(&args).unwrap();
+        let err = grid_from_matches(&m).unwrap_err().to_string();
+        assert!(err.contains("identity"), "{err}");
     }
 
     #[test]

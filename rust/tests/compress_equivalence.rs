@@ -1,0 +1,202 @@
+//! Compression on the dist wire (`--compressor`, DESIGN.md §9).
+//!
+//! Three contracts, each end-to-end over real loopback worker
+//! processes:
+//!
+//! 1. **Identity is invisible.** `--compressor identity` ships raw f32
+//!    bits, so a dist run must stay bit-identical to the simulated
+//!    runtime for every registered protocol — the same pin
+//!    `dist_equivalence.rs` holds for the uncompressed wire.
+//! 2. **Lossy codecs actually shrink the wire.** A `topk` run must
+//!    report ≥4× fewer steady-state payload bytes per epoch than the
+//!    identity run of the same config, while still making progress.
+//! 3. **Error feedback preserves convergence.** `topk` and `signsgd`
+//!    runs must land near the uncompressed sync-SGD error on the
+//!    linear-regression workload — the delta/error-feedback streams
+//!    ([`anytime_sgd::compress`]) flush their residuals over rounds.
+
+// Crate-posture lint gate (see lib.rs): correctness/suspicious/perf
+// lints stay load-bearing under CI's `-D warnings`; the style/
+// complexity groups are settled here rather than per-site.
+#![allow(clippy::style, clippy::complexity)]
+
+use anytime_sgd::compress::CompressorSpec;
+use anytime_sgd::config::{DataSpec, MethodSpec, RunConfig, RuntimeSpec, Schedule};
+use anytime_sgd::coordinator::{RunResult, Trainer};
+use anytime_sgd::net::master::WORKER_BIN_ENV;
+use anytime_sgd::protocols;
+use anytime_sgd::protocols::{CombinePolicy, Iterate};
+use anytime_sgd::straggler::{CommSpec, DelaySpec, StragglerEnv};
+use std::sync::Once;
+
+/// Spawned workers must be the CLI binary, not this test harness —
+/// cargo exposes its path to integration tests.
+fn use_cli_worker_bin() {
+    static ONCE: Once = Once::new();
+    ONCE.call_once(|| {
+        std::env::set_var(WORKER_BIN_ENV, env!("CARGO_BIN_EXE_anytime-sgd"));
+    });
+}
+
+/// The `dist_equivalence.rs` fleet: deterministic 1 ms/step delays, a
+/// binding one-pass cap, and a T_c guard that never drops anyone.
+fn base_cfg() -> RunConfig {
+    let mut c = RunConfig::base();
+    c.name = "compress-equiv".into();
+    c.data = DataSpec::Synthetic { m: 2_000, d: 16, noise: 1e-3 };
+    c.workers = 4;
+    c.redundancy = 0;
+    c.batch = 8;
+    c.epochs = 3;
+    c.eval_every = 1;
+    c.max_passes = 1.0;
+    c.schedule = Schedule::Constant { lr: 5e-3 };
+    c.env = StragglerEnv {
+        delay: DelaySpec::Deterministic { secs: 0.001 },
+        persistent: vec![],
+    };
+    c.comm = CommSpec::Fixed { secs: 2.0 };
+    c.t_c = 1e9;
+    c.seed = 7;
+    c
+}
+
+fn run_dist(mut c: RunConfig, method: MethodSpec, compressor: CompressorSpec) -> RunResult {
+    c.method = method;
+    c.compressor = compressor;
+    c.runtime = RuntimeSpec::Dist { port: 0, spawn: true, time_scale: 1e-3 };
+    Trainer::new(c).unwrap().run()
+}
+
+fn run_sim(mut c: RunConfig, method: MethodSpec) -> RunResult {
+    c.method = method;
+    c.runtime = RuntimeSpec::Sim;
+    Trainer::new(c).unwrap().run()
+}
+
+/// One generously-budgeted spec per registered protocol (plus the
+/// averaged-iterate anytime variant: `x_bar` rides the compressed wire
+/// too).
+fn specs() -> Vec<(&'static str, MethodSpec)> {
+    vec![
+        ("anytime", protocols::anytime::spec(100.0)),
+        (
+            "anytime",
+            protocols::anytime::spec_with(100.0, CombinePolicy::Proportional, Iterate::Average),
+        ),
+        ("generalized", protocols::generalized::spec(100.0)),
+        ("adaptive", protocols::adaptive::spec(100.0)),
+        ("sync", protocols::sync::spec(63)),
+        ("fnb", protocols::fnb::spec(63, 1)),
+        ("gradient-coding", protocols::gradient_coding::spec(0.4)),
+        ("async", protocols::async_sgd::spec(16, 20.0)),
+    ]
+}
+
+#[test]
+fn identity_compressor_is_bit_exact_for_every_protocol() {
+    use_cli_worker_bin();
+    // Registry coverage: a new protocol must get a compressed-wire arm.
+    let covered: Vec<&str> = specs().iter().map(|(n, _)| *n).collect();
+    for name in protocols::names() {
+        assert!(covered.contains(&name), "protocol `{name}` missing from the compress suite");
+    }
+
+    for (name, spec) in specs() {
+        let sim = run_sim(base_cfg(), spec.clone());
+        let dist = run_dist(base_cfg(), spec, CompressorSpec::Identity);
+
+        assert_eq!(sim.epochs.len(), dist.epochs.len(), "{name}");
+        for (e, (a, b)) in sim.epochs.iter().zip(dist.epochs.iter()).enumerate() {
+            assert_eq!(a.q, b.q, "{name} epoch {e}: q-profiles must match bit-exactly");
+            assert_eq!(a.received, b.received, "{name} epoch {e}: χ sets must match");
+            for (la, lb) in a.lambda.iter().zip(b.lambda.iter()) {
+                assert_eq!(la.to_bits(), lb.to_bits(), "{name} epoch {e}: combine weights");
+            }
+        }
+        assert_eq!(sim.x, dist.x, "{name}: final parameter vectors must be bit-identical");
+        assert_eq!(sim.trace.points.len(), dist.trace.points.len(), "{name}");
+        for (p, q) in sim.trace.points.iter().zip(dist.trace.points.iter()) {
+            assert_eq!(p.norm_err.to_bits(), q.norm_err.to_bits(), "{name}: error curve");
+            assert_eq!(p.total_q, q.total_q, "{name}");
+        }
+        let total_q: usize = sim.epochs.iter().flat_map(|e| e.q.iter()).sum();
+        assert!(total_q > 0, "{name}: suite ran no steps");
+    }
+}
+
+#[test]
+fn topk_ships_at_least_4x_fewer_bytes_than_identity() {
+    use_cli_worker_bin();
+    // A wide model makes the iterate payloads dominate the frames: at
+    // d = 256, identity ships 1 KiB per vector where topk (k = d/16)
+    // ships ~136 B. Steady-state epochs (the last one — the first
+    // epoch's stats also carry the shard-sized Assign handshake, which
+    // is never compressed) must show the gap on BOTH directions.
+    let mut c = base_cfg();
+    c.data = DataSpec::Synthetic { m: 2_000, d: 256, noise: 1e-3 };
+    let spec = protocols::sync::spec(30);
+
+    let id = run_dist(c.clone(), spec.clone(), CompressorSpec::Identity);
+    let tk = run_dist(c, spec, CompressorSpec::TopK);
+
+    let (id_last, tk_last) = (id.net.last().unwrap(), tk.net.last().unwrap());
+    assert!(id_last.bytes_sent > 0 && id_last.bytes_recv > 0);
+    assert!(
+        id_last.bytes_sent >= 4 * tk_last.bytes_sent,
+        "downlink: identity {} vs topk {} bytes",
+        id_last.bytes_sent,
+        tk_last.bytes_sent
+    );
+    assert!(
+        id_last.bytes_recv >= 4 * tk_last.bytes_recv,
+        "uplink: identity {} vs topk {} bytes",
+        id_last.bytes_recv,
+        tk_last.bytes_recv
+    );
+
+    // Compression must not have broken the run: finite error, real
+    // progress from the initial evaluation.
+    let final_err = tk.trace.final_err();
+    assert!(final_err.is_finite(), "topk run diverged: {final_err}");
+    assert!(
+        final_err < 0.9 * tk.initial_err,
+        "topk run made no progress: {final_err} vs initial {}",
+        tk.initial_err
+    );
+}
+
+#[test]
+fn lossy_codecs_converge_to_the_sync_sgd_target() {
+    use_cli_worker_bin();
+    // Enough rounds for the error-feedback residuals to flush: 10
+    // epochs × 40 steps of plain sync-SGD on the linreg workload.
+    let mut c = base_cfg();
+    c.data = DataSpec::Synthetic { m: 2_000, d: 32, noise: 1e-3 };
+    c.epochs = 10;
+    let spec = protocols::sync::spec(40);
+
+    let target = {
+        let sim = run_sim(c.clone(), spec.clone());
+        let e = sim.trace.final_err();
+        assert!(e.is_finite() && e < 0.5 * sim.initial_err, "uncompressed baseline broke: {e}");
+        e
+    };
+
+    for cmp in [CompressorSpec::TopK, CompressorSpec::SignSgd] {
+        let res = run_dist(c.clone(), spec.clone(), cmp);
+        let e = res.trace.final_err();
+        assert!(e.is_finite(), "{}: diverged", cmp.name());
+        assert!(
+            e <= target * 3.0 + 1e-6,
+            "{}: final err {e} vs uncompressed target {target}",
+            cmp.name()
+        );
+        assert!(
+            e < 0.9 * res.initial_err,
+            "{}: no progress ({e} vs initial {})",
+            cmp.name(),
+            res.initial_err
+        );
+    }
+}
