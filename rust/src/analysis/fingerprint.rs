@@ -1,0 +1,193 @@
+//! Wire-surface fingerprinting (rule `wire-fingerprint`).
+//!
+//! `net/wire.rs` brackets its frame-format surface — the protocol
+//! version, the frame cap, the message structs/enum, and the tag
+//! bytes — between two marker comments. This module extracts that
+//! region, normalizes it (comments blanked, whitespace collapsed, so
+//! doc edits never move the hash), and FNV-1a-64 hashes it. The hash
+//! is pinned in `rust/wire.fingerprint` next to the protocol version;
+//! the rule fails whenever the surface changes without *both* a
+//! `PROTOCOL_VERSION` bump and a re-pin
+//! (`anytime-sgd lint --write-fingerprint`) — the wire-discipline
+//! contract of DESIGN.md §10.
+
+use super::source::SourceFile;
+
+/// Marker comment opening the fingerprinted region of `net/wire.rs`.
+pub const BEGIN_MARKER: &str = "=== WIRE SURFACE";
+/// Marker comment closing the region.
+pub const END_MARKER: &str = "=== END WIRE SURFACE";
+
+/// The extracted, normalized wire surface.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct WireSurface {
+    /// Normalized region text (one collapsed line per source line).
+    pub normalized: String,
+    /// FNV-1a 64-bit hash of `normalized`.
+    pub fingerprint: u64,
+    /// `PROTOCOL_VERSION` parsed out of the region, if present.
+    pub version: Option<u32>,
+}
+
+/// Extract the marker-delimited surface from a wire source file.
+/// `None` when either marker is missing.
+pub fn extract(src: &SourceFile) -> Option<WireSurface> {
+    let begin = src.raw.iter().position(|l| l.contains(BEGIN_MARKER))?;
+    let end = src.raw.iter().position(|l| l.contains(END_MARKER))?;
+    if end <= begin {
+        return None;
+    }
+    // Normalize from the *scrubbed* lines: comments are already
+    // blanked, so pure-comment lines vanish and trailing doc text
+    // never reaches the hash.
+    let mut lines: Vec<String> = Vec::new();
+    for code in src.code.iter().take(end).skip(begin + 1) {
+        let collapsed = code.split_whitespace().collect::<Vec<_>>().join(" ");
+        if !collapsed.is_empty() {
+            lines.push(collapsed);
+        }
+    }
+    let normalized = lines.join("\n");
+    let fingerprint = fnv1a64(normalized.as_bytes());
+    let version = parse_version(&normalized);
+    Some(WireSurface { normalized, fingerprint, version })
+}
+
+/// FNV-1a, 64-bit.
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+fn parse_version(normalized: &str) -> Option<u32> {
+    let at = normalized.find("PROTOCOL_VERSION")?;
+    let rest = &normalized[at..];
+    let eq = rest.find('=')?;
+    let tail = rest.get(eq + 1..)?;
+    let num: String = tail.trim_start().chars().take_while(|c| c.is_ascii_digit()).collect();
+    num.parse().ok()
+}
+
+/// The pinned (version, fingerprint) pair from `rust/wire.fingerprint`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Pin {
+    pub version: u32,
+    pub fingerprint: u64,
+}
+
+/// Parse a pin file (`#` comments, `version = N`,
+/// `fingerprint = 0x…`).
+pub fn parse_pin(text: &str) -> Result<Pin, String> {
+    let mut version: Option<u32> = None;
+    let mut fingerprint: Option<u64> = None;
+    for (idx, raw) in text.lines().enumerate() {
+        let line = raw.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let Some((key, value)) = line.split_once('=') else {
+            return Err(format!("pin file line {}: expected `key = value`", idx + 1));
+        };
+        let value = value.trim();
+        match key.trim() {
+            "version" => {
+                version = Some(
+                    value
+                        .parse()
+                        .map_err(|_| format!("pin file line {}: bad version", idx + 1))?,
+                )
+            }
+            "fingerprint" => {
+                let hex = value.strip_prefix("0x").unwrap_or(value);
+                fingerprint = Some(
+                    u64::from_str_radix(hex, 16)
+                        .map_err(|_| format!("pin file line {}: bad fingerprint", idx + 1))?,
+                )
+            }
+            other => return Err(format!("pin file line {}: unknown key `{other}`", idx + 1)),
+        }
+    }
+    match (version, fingerprint) {
+        (Some(version), Some(fingerprint)) => Ok(Pin { version, fingerprint }),
+        _ => Err("pin file must set both `version` and `fingerprint`".to_string()),
+    }
+}
+
+/// Render the pin file contents for `lint --write-fingerprint`.
+pub fn render_pin(version: u32, fingerprint: u64) -> String {
+    format!(
+        "# Pinned fingerprint of the net/wire.rs message-enum surface\n\
+         # (the marker-delimited region; see DESIGN.md §10).\n\
+         #\n\
+         # Any change to the wire surface must bump PROTOCOL_VERSION in\n\
+         # rust/src/net/wire.rs and re-pin with:\n\
+         #\n\
+         #   cargo run --release -- lint --write-fingerprint\n\
+         #\n\
+         version = {version}\n\
+         fingerprint = 0x{fingerprint:016x}\n"
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mini_wire(field: &str) -> String {
+        format!(
+            "use x;\n\
+             // === WIRE SURFACE (fingerprinted) ===\n\
+             pub const PROTOCOL_VERSION: u32 = 3;\n\
+             pub struct Frame {{\n\
+                 /// doc text that must not move the hash\n\
+                 pub {field}: u32,\n\
+             }}\n\
+             // === END WIRE SURFACE ===\n\
+             fn after() {{}}\n"
+        )
+    }
+
+    #[test]
+    fn comment_and_whitespace_churn_keeps_the_hash() {
+        let a = extract(&SourceFile::from_text("w.rs", &mini_wire("round"))).unwrap();
+        let noisy = mini_wire("round")
+            .replace("doc text that must not move the hash", "totally different words")
+            .replace("pub round: u32,", "pub   round :  u32 , // inline note");
+        let b = extract(&SourceFile::from_text("w.rs", &noisy)).unwrap();
+        assert_eq!(a.fingerprint, b.fingerprint, "\n{}\nvs\n{}", a.normalized, b.normalized);
+        assert_eq!(a.version, Some(3));
+    }
+
+    #[test]
+    fn surface_changes_move_the_hash() {
+        let a = extract(&SourceFile::from_text("w.rs", &mini_wire("round"))).unwrap();
+        let b = extract(&SourceFile::from_text("w.rs", &mini_wire("epoch"))).unwrap();
+        assert_ne!(a.fingerprint, b.fingerprint);
+    }
+
+    #[test]
+    fn missing_markers_yield_none() {
+        assert!(extract(&SourceFile::from_text("w.rs", "pub fn f() {}\n")).is_none());
+    }
+
+    #[test]
+    fn pin_round_trips() {
+        let text = render_pin(3, 0xDEAD_BEEF_0123_4567);
+        let pin = parse_pin(&text).unwrap();
+        assert_eq!(pin, Pin { version: 3, fingerprint: 0xDEAD_BEEF_0123_4567 });
+        assert!(parse_pin("version = 3\n").is_err());
+        assert!(parse_pin("version = 3\nfingerprint = xyz\n").is_err());
+        assert!(parse_pin("nonsense\n").is_err());
+    }
+
+    #[test]
+    fn fnv_vector() {
+        // Standard FNV-1a test vectors.
+        assert_eq!(fnv1a64(b""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(fnv1a64(b"a"), 0xaf63_dc4c_8601_ec8c);
+    }
+}

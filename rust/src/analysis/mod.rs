@@ -1,0 +1,312 @@
+//! `analysis` — the in-tree static-analysis pass (DESIGN.md §10).
+//!
+//! Every bit-exactness pin the repo ships — sim ≡ real ≡ dist,
+//! obs-on ≡ obs-off, identity-compressor dist ≡ sim — rests on
+//! invariants a compiler never checks: no wall-clock or ambient-RNG
+//! reads in the numeric core, no randomized-order map iteration in
+//! result paths, no panics on hostile wire bytes, and a
+//! `PROTOCOL_VERSION` bump whenever the frame format moves. This
+//! module mechanizes those contracts as a std-only lint pass over the
+//! repo's own source, exposed two ways:
+//!
+//! * `anytime-sgd lint` — the CLI gate (machine-readable findings,
+//!   `--write-fingerprint` re-pins the wire surface);
+//! * `rust/tests/analysis_gate.rs` — a tier-1 test, so plain
+//!   `cargo test` fails on any violation.
+//!
+//! Rules live in [`rules`], the comment/string-aware source model in
+//! [`source`], the waiver format in [`waivers`], and the
+//! wire-surface hash in [`fingerprint`]. Findings can be waived only
+//! through `rust/analysis_waivers.toml`, each with a written
+//! justification; the tree ships with **zero** waivers.
+
+pub mod fingerprint;
+pub mod rules;
+pub mod source;
+pub mod waivers;
+
+pub use rules::{Finding, PanicScope, RuleInfo, RULES};
+
+use anyhow::{anyhow, bail, Context, Result};
+use rules::RegistryCheck;
+use source::SourceFile;
+use std::path::{Path, PathBuf};
+use waivers::Waiver;
+
+/// Repo-relative path of the waiver file.
+pub const WAIVER_FILE: &str = "rust/analysis_waivers.toml";
+/// Repo-relative path of the wire-fingerprint pin.
+pub const PIN_FILE: &str = "rust/wire.fingerprint";
+/// Repo-relative path of the wire source.
+pub const WIRE_FILE: &str = "rust/src/net/wire.rs";
+
+/// Result of one full pass.
+pub struct Outcome {
+    /// Unwaived findings, sorted by (file, line, rule). Empty = clean.
+    pub findings: Vec<Finding>,
+    /// Waived findings with their justifications.
+    pub waived: Vec<(Finding, String)>,
+    /// Number of source files scanned.
+    pub files_scanned: usize,
+}
+
+/// Locate the repo root: walk up from `cwd` looking for the crate's
+/// `Cargo.toml` + `rust/src/lib.rs`, falling back to the compile-time
+/// manifest dir (always right for in-tree `cargo run`/`cargo test`).
+pub fn find_repo_root() -> Result<PathBuf> {
+    if let Ok(mut dir) = std::env::current_dir() {
+        loop {
+            if dir.join("Cargo.toml").is_file() && dir.join("rust/src/lib.rs").is_file() {
+                return Ok(dir);
+            }
+            if !dir.pop() {
+                break;
+            }
+        }
+    }
+    let fallback = PathBuf::from(env!("CARGO_MANIFEST_DIR"));
+    if fallback.join("rust/src/lib.rs").is_file() {
+        return Ok(fallback);
+    }
+    bail!("cannot locate the repo root (no Cargo.toml + rust/src/lib.rs above the cwd)")
+}
+
+/// Run the full pass over the tree at `root`.
+pub fn run(root: &Path) -> Result<Outcome> {
+    let files = collect_sources(root)?;
+    let mut findings: Vec<Finding> = Vec::new();
+    let sources: Vec<SourceFile> = files
+        .iter()
+        .map(|rel| {
+            SourceFile::load(&root.join(rel), rel)
+                .with_context(|| format!("reading {rel}"))
+        })
+        .collect::<Result<_>>()?;
+
+    for src in &sources {
+        findings.extend(rules::det_time(src));
+        findings.extend(rules::det_order(src));
+        if let Some(scope) = panic_scope(&src.path) {
+            findings.extend(rules::hostile_panic(src, scope));
+        }
+    }
+
+    findings.extend(registry_findings(root, &sources)?);
+
+    let wire = sources
+        .iter()
+        .find(|s| s.path == WIRE_FILE)
+        .ok_or_else(|| anyhow!("{WIRE_FILE} not found under {}", root.display()))?;
+    let pin_text = read_optional(&root.join(PIN_FILE))?;
+    findings.extend(rules::wire_fingerprint(wire, pin_text.as_deref()));
+
+    let waiver_text = read_optional(&root.join(WAIVER_FILE))?;
+    let waiver_list = match waiver_text.as_deref() {
+        Some(text) => waivers::parse(text).map_err(|e| anyhow!("{WAIVER_FILE}: {e}"))?,
+        None => Vec::new(),
+    };
+    let (mut findings, waived, unused) = apply_waivers(findings, &waiver_list);
+    for w in unused {
+        findings.push(Finding {
+            rule: "waiver-unused",
+            file: WAIVER_FILE.to_string(),
+            line: w.decl_line,
+            msg: format!(
+                "waiver for `{}` at {}{} matches no current finding — delete it",
+                w.rule,
+                w.path,
+                w.line.map(|l| format!(":{l}")).unwrap_or_default(),
+            ),
+        });
+    }
+    findings.sort_by(|a, b| {
+        (a.file.as_str(), a.line, a.rule).cmp(&(b.file.as_str(), b.line, b.rule))
+    });
+    Ok(Outcome { findings, waived, files_scanned: sources.len() })
+}
+
+/// Split findings into (unwaived, waived) against a waiver list, and
+/// return the waivers that covered nothing. Exposed for the fixture
+/// self-tests.
+pub fn apply_waivers(
+    findings: Vec<Finding>,
+    waiver_list: &[Waiver],
+) -> (Vec<Finding>, Vec<(Finding, String)>, Vec<Waiver>) {
+    let mut used = vec![false; waiver_list.len()];
+    let mut keep = Vec::new();
+    let mut waived = Vec::new();
+    for f in findings {
+        match waiver_list.iter().position(|w| w.covers(&f)) {
+            Some(i) => {
+                used[i] = true;
+                waived.push((f, waiver_list[i].justification.clone()));
+            }
+            None => keep.push(f),
+        }
+    }
+    let unused = waiver_list
+        .iter()
+        .zip(used)
+        .filter_map(|(w, u)| (!u).then(|| w.clone()))
+        .collect();
+    (keep, waived, unused)
+}
+
+/// The `hostile-panic` scope for a source path, if any (the issue's
+/// rule 2 surface: the wire decoder, both `ser` codecs end to end,
+/// and every compressor's decoder).
+pub fn panic_scope(path: &str) -> Option<PanicScope<'static>> {
+    match path {
+        "rust/src/ser/parse.rs" | "rust/src/ser/bytes.rs" => Some(PanicScope::WholeFile),
+        "rust/src/net/wire.rs" => Some(PanicScope::Fns(&["decode", "read_frame"])),
+        p if p.starts_with("rust/src/compress/") => Some(PanicScope::Fns(&["decode"])),
+        _ => None,
+    }
+}
+
+fn registry_findings(root: &Path, sources: &[SourceFile]) -> Result<Vec<Finding>> {
+    let design_text = std::fs::read_to_string(root.join("DESIGN.md"))
+        .with_context(|| "reading DESIGN.md")?;
+    let mut out = Vec::new();
+    let layers: [(&str, Vec<&str>, &str); 3] = [
+        (
+            "rust/src/protocols",
+            crate::protocols::REGISTRY.iter().map(|i| i.name).collect(),
+            "protocol",
+        ),
+        (
+            "rust/src/objective",
+            crate::objective::REGISTRY.iter().map(|i| i.name).collect(),
+            "objective",
+        ),
+        (
+            "rust/src/compress",
+            crate::compress::REGISTRY.iter().map(|i| i.name).collect(),
+            "compressor",
+        ),
+    ];
+    for (dir, registered, layer) in &layers {
+        let module_files: Vec<String> = sources
+            .iter()
+            .filter_map(|s| {
+                let rest = s.path.strip_prefix(&format!("{dir}/"))?;
+                let stem = rest.strip_suffix(".rs")?;
+                (!rest.contains('/') && stem != "mod").then(|| stem.to_string())
+            })
+            .collect();
+        let mod_src = sources
+            .iter()
+            .find(|s| s.path == format!("{dir}/mod.rs"))
+            .ok_or_else(|| anyhow!("{dir}/mod.rs not found"))?;
+        out.extend(rules::registry(&RegistryCheck {
+            dir,
+            module_files: &module_files,
+            mod_src,
+            registered,
+            design_text: &design_text,
+            layer,
+        }));
+    }
+    // `anytime-sgd list` renders these REGISTRY statics directly;
+    // losing a reference would silently drop a layer from enumeration.
+    if let Some(main) = sources.iter().find(|s| s.path == "rust/src/main.rs") {
+        for reg in ["protocols::REGISTRY", "objective::REGISTRY", "compress::REGISTRY"] {
+            let hit = main
+                .code
+                .iter()
+                .any(|l| !source::find_token(l, reg).is_empty());
+            if !hit {
+                out.push(Finding {
+                    rule: "registry",
+                    file: main.path.clone(),
+                    line: 1,
+                    msg: format!("`anytime-sgd list` no longer renders {reg}"),
+                });
+            }
+        }
+    }
+    Ok(out)
+}
+
+/// Every `.rs` file under `rust/src`, repo-relative with forward
+/// slashes, sorted (deterministic findings order).
+fn collect_sources(root: &Path) -> Result<Vec<String>> {
+    let mut out = Vec::new();
+    let base = root.join("rust/src");
+    walk(&base, &mut out)?;
+    let mut rel: Vec<String> = out
+        .iter()
+        .filter_map(|p| {
+            p.strip_prefix(root)
+                .ok()
+                .map(|r| r.components().map(|c| c.as_os_str().to_string_lossy()).collect::<Vec<_>>().join("/"))
+        })
+        .collect();
+    rel.sort();
+    Ok(rel)
+}
+
+fn walk(dir: &Path, out: &mut Vec<PathBuf>) -> Result<()> {
+    let entries =
+        std::fs::read_dir(dir).with_context(|| format!("reading {}", dir.display()))?;
+    for entry in entries {
+        let path = entry?.path();
+        if path.is_dir() {
+            walk(&path, out)?;
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+/// Read a file that may legitimately be absent.
+fn read_optional(path: &Path) -> Result<Option<String>> {
+    match std::fs::read_to_string(path) {
+        Ok(text) => Ok(Some(text)),
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => Ok(None),
+        Err(e) => Err(e).with_context(|| format!("reading {}", path.display())),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn panic_scopes_cover_the_issue_surface() {
+        assert!(matches!(panic_scope("rust/src/ser/parse.rs"), Some(PanicScope::WholeFile)));
+        assert!(matches!(panic_scope("rust/src/ser/bytes.rs"), Some(PanicScope::WholeFile)));
+        assert!(matches!(panic_scope("rust/src/net/wire.rs"), Some(PanicScope::Fns(_))));
+        assert!(matches!(panic_scope("rust/src/compress/topk.rs"), Some(PanicScope::Fns(_))));
+        assert!(panic_scope("rust/src/figures/mod.rs").is_none());
+    }
+
+    #[test]
+    fn apply_waivers_partitions_and_reports_stale() {
+        let f = |line| Finding {
+            rule: "det-time",
+            file: "rust/src/x.rs".to_string(),
+            line,
+            msg: String::new(),
+        };
+        let ws = waivers::parse(concat!(
+            "[[waiver]]\n",
+            "rule = \"det-time\"\n",
+            "path = \"rust/src/x.rs\"\n",
+            "line = 2\n",
+            "justification = \"fixture\"\n",
+            "[[waiver]]\n",
+            "rule = \"det-time\"\n",
+            "path = \"rust/src/never.rs\"\n",
+            "justification = \"stale\"\n",
+        ))
+        .unwrap();
+        let (keep, waived, unused) = apply_waivers(vec![f(1), f(2)], &ws);
+        assert_eq!(keep.len(), 1);
+        assert_eq!(keep.first().map(|k| k.line), Some(1));
+        assert_eq!(waived.len(), 1);
+        assert_eq!(unused.len(), 1);
+        assert_eq!(unused.first().map(|u| u.path.as_str()), Some("rust/src/never.rs"));
+    }
+}

@@ -1,0 +1,448 @@
+//! The contract rules of the static-analysis pass (DESIGN.md §10).
+//!
+//! Each rule is a pure function from a [`SourceFile`] (plus whatever
+//! cross-file inputs it needs) to machine-readable [`Finding`]s. The
+//! repo driver in [`super`] wires them to the real tree; the fixture
+//! self-tests in `rust/tests/analysis_gate.rs` wire them to known-bad
+//! samples under `rust/tests/analysis_fixtures/` to prove each rule
+//! actually fires.
+
+use super::fingerprint::{self, Pin};
+use super::source::{find_token, SourceFile};
+
+/// One machine-readable finding: `file:line: [rule] msg`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Finding {
+    pub rule: &'static str,
+    pub file: String,
+    pub line: usize,
+    pub msg: String,
+}
+
+impl std::fmt::Display for Finding {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}:{}: [{}] {}", self.file, self.line, self.rule, self.msg)
+    }
+}
+
+/// Rule metadata, for `lint` output and DESIGN.md's rule table.
+pub struct RuleInfo {
+    pub id: &'static str,
+    pub about: &'static str,
+}
+
+/// Every rule the pass runs (plus the synthetic `waiver-unused`).
+pub const RULES: &[RuleInfo] = &[
+    RuleInfo {
+        id: "det-time",
+        about: "wall-clock/ambient-RNG reads only in allowlisted modules",
+    },
+    RuleInfo {
+        id: "det-order",
+        about: "no HashMap/HashSet in result-producing code (iteration order)",
+    },
+    RuleInfo {
+        id: "hostile-panic",
+        about: "no unwrap/expect/panic/unchecked indexing in hostile decode paths",
+    },
+    RuleInfo {
+        id: "registry",
+        about: "every protocol/objective/compressor module is registered and documented",
+    },
+    RuleInfo {
+        id: "wire-fingerprint",
+        about: "wire-surface changes must bump PROTOCOL_VERSION and re-pin",
+    },
+    RuleInfo {
+        id: "waiver-unused",
+        about: "waivers that cover no current finding are stale",
+    },
+];
+
+/// Modules allowed to read wall clocks / ambient randomness: the
+/// real-time execution layers (`sim::RealClock`, the threaded runtime's
+/// deadline enforcement, the TCP substrate, process spawning), the
+/// observability layer, benchmarking, and the CLI entry point. The
+/// numeric core and everything that produces run results must derive
+/// all time and randomness from `SimClock` and the seeded RNG tree.
+pub const DET_TIME_ALLOW: &[&str] = &[
+    "rust/src/sim/",
+    "rust/src/obs/",
+    "rust/src/net/",
+    "rust/src/exec/",
+    "rust/src/benchkit/",
+    "rust/src/coordinator/runtime.rs",
+    "rust/src/main.rs",
+];
+
+const DET_TIME_TOKENS: &[&str] = &[
+    "Instant::now",
+    "SystemTime",
+    "UNIX_EPOCH",
+    "thread_rng",
+    "from_entropy",
+    "getrandom",
+    "RandomState",
+];
+
+/// Rule `det-time`: flag ambient time/randomness reads outside the
+/// allowlist. Test code is exempt.
+pub fn det_time(src: &SourceFile) -> Vec<Finding> {
+    if DET_TIME_ALLOW.iter().any(|p| src.path.starts_with(p)) {
+        return Vec::new();
+    }
+    scan_tokens(src, "det-time", DET_TIME_TOKENS, |tok| {
+        format!(
+            "`{tok}` outside the real-time allowlist — results must derive time/randomness \
+             from SimClock and the seeded RNG tree (DESIGN.md §10)"
+        )
+    })
+}
+
+/// Rule `det-order`: flag `HashMap`/`HashSet` anywhere in non-test
+/// library code. Their iteration order is randomized per process, so
+/// any result-producing traversal breaks the bit-exactness pins; the
+/// tree uses `BTreeMap`/`BTreeSet` (or sorted keys) instead.
+pub fn det_order(src: &SourceFile) -> Vec<Finding> {
+    scan_tokens(src, "det-order", &["HashMap", "HashSet"], |tok| {
+        format!("`{tok}` iterates in randomized order — use BTreeMap/BTreeSet or sorted keys")
+    })
+}
+
+fn scan_tokens(
+    src: &SourceFile,
+    rule: &'static str,
+    tokens: &[&str],
+    msg: impl Fn(&str) -> String,
+) -> Vec<Finding> {
+    let mut out = Vec::new();
+    for (idx, code) in src.code.iter().enumerate() {
+        if src.in_test.get(idx).copied().unwrap_or(false) {
+            continue;
+        }
+        for tok in tokens {
+            if !find_token(code, tok).is_empty() {
+                out.push(Finding {
+                    rule,
+                    file: src.path.clone(),
+                    line: idx + 1,
+                    msg: msg(tok),
+                });
+            }
+        }
+    }
+    out
+}
+
+/// Scope of the `hostile-panic` rule within one file.
+#[derive(Debug, Clone, Copy)]
+pub enum PanicScope<'a> {
+    /// Every non-test line of the file.
+    WholeFile,
+    /// Only the bodies of the named functions.
+    Fns(&'a [&'a str]),
+}
+
+const PANIC_TOKENS: &[&str] = &[
+    ".unwrap()",
+    ".expect(",
+    "panic!",
+    "unreachable!",
+    "todo!",
+    "unimplemented!",
+    "assert!",
+    "assert_eq!",
+    "assert_ne!",
+];
+
+/// Rule `hostile-panic`: in decode paths fed by sockets/files, flag
+/// every panicking construct and every unchecked slice index. Hostile
+/// bytes must decode to an error, never abort the process
+/// (`debug_assert!` is allowed — it compiles out of release builds).
+pub fn hostile_panic(src: &SourceFile, scope: PanicScope<'_>) -> Vec<Finding> {
+    let in_scope: Vec<bool> = match scope {
+        PanicScope::WholeFile => {
+            (0..src.len()).map(|i| !src.in_test.get(i).copied().unwrap_or(false)).collect()
+        }
+        PanicScope::Fns(names) => {
+            let mut mask = vec![false; src.len()];
+            for name in names {
+                for (start, end) in src.fn_spans(name) {
+                    for m in mask.iter_mut().take(end).skip(start - 1) {
+                        *m = true;
+                    }
+                }
+            }
+            mask
+        }
+    };
+    let mut out = Vec::new();
+    for (idx, code) in src.code.iter().enumerate() {
+        if !in_scope.get(idx).copied().unwrap_or(false) {
+            continue;
+        }
+        for tok in PANIC_TOKENS {
+            if !find_token(code, tok).is_empty() {
+                out.push(Finding {
+                    rule: "hostile-panic",
+                    file: src.path.clone(),
+                    line: idx + 1,
+                    msg: format!(
+                        "`{tok}` in a hostile decode path — corrupt input must error, not abort"
+                    ),
+                });
+            }
+        }
+        for col in index_sites(code) {
+            out.push(Finding {
+                rule: "hostile-panic",
+                file: src.path.clone(),
+                line: idx + 1,
+                msg: format!(
+                    "unchecked slice index at column {} — use .get()/.get_mut()/try_into()",
+                    col + 1
+                ),
+            });
+        }
+    }
+    out
+}
+
+/// Columns of `[` that index into a value: the previous non-space
+/// char is an identifier char, `)`, or `]`. Array/type literals
+/// (`[0u8; 4]`, `vec![…]`, `#[attr]`) are preceded by other chars and
+/// never match; neither does a slice type after a lifetime
+/// (`&'a [u8]` — the identifier there is the lifetime's name, not a
+/// value).
+fn index_sites(code: &str) -> Vec<usize> {
+    let b = code.as_bytes();
+    let mut out = Vec::new();
+    for (i, &c) in b.iter().enumerate() {
+        if c != b'[' {
+            continue;
+        }
+        let Some(j) = b.get(..i).and_then(|pre| pre.iter().rposition(|&p| p != b' ')) else {
+            continue;
+        };
+        let p = b.get(j).copied().unwrap_or(b' ');
+        if !(p.is_ascii_alphanumeric() || p == b'_' || p == b')' || p == b']') {
+            continue;
+        }
+        if p.is_ascii_alphanumeric() || p == b'_' {
+            let run_start = b
+                .get(..j)
+                .and_then(|pre| {
+                    pre.iter().rposition(|&q| !(q.is_ascii_alphanumeric() || q == b'_'))
+                });
+            if run_start.and_then(|s| b.get(s).copied()) == Some(b'\'') {
+                continue;
+            }
+        }
+        out.push(i);
+    }
+    out
+}
+
+/// Cross-file inputs for one registry layer's `registry` check.
+pub struct RegistryCheck<'a> {
+    /// Registry directory, repo-relative (e.g. `rust/src/protocols`).
+    pub dir: &'a str,
+    /// Module file stems found on disk, `mod.rs` excluded.
+    pub module_files: &'a [String],
+    /// The directory's `mod.rs`.
+    pub mod_src: &'a SourceFile,
+    /// Live registry names (from the compiled crate's REGISTRY).
+    pub registered: &'a [&'a str],
+    /// DESIGN.md text.
+    pub design_text: &'a str,
+    /// Layer label for messages (`protocol` / `objective` / `compressor`).
+    pub layer: &'a str,
+}
+
+/// Rule `registry`: every module under a registry directory is wired
+/// into its `REGISTRY` initializer, and every registered name is
+/// documented in DESIGN.md. (`anytime-sgd list` renders the same
+/// REGISTRY statics, so registration implies enumeration; the driver
+/// separately checks `main.rs` still references each static.)
+pub fn registry(check: &RegistryCheck<'_>) -> Vec<Finding> {
+    let mut out = Vec::new();
+    let (reg_line, reg_text) = registry_span(check.mod_src);
+    for stem in check.module_files {
+        let needle = format!("{stem}::");
+        if !reg_text.contains(&needle) {
+            out.push(Finding {
+                rule: "registry",
+                file: format!("{}/mod.rs", check.dir),
+                line: reg_line,
+                msg: format!(
+                    "{layer} module `{stem}` ({dir}/{stem}.rs) is not wired into REGISTRY",
+                    layer = check.layer,
+                    dir = check.dir,
+                ),
+            });
+        }
+    }
+    for name in check.registered {
+        if !text_has_word(check.design_text, name) {
+            out.push(Finding {
+                rule: "registry",
+                file: "DESIGN.md".to_string(),
+                line: 1,
+                msg: format!(
+                    "registered {layer} `{name}` is not named anywhere in DESIGN.md",
+                    layer = check.layer,
+                ),
+            });
+        }
+    }
+    out
+}
+
+/// The REGISTRY initializer's (line, text): from the `static REGISTRY`
+/// line through the first `;`.
+fn registry_span(src: &SourceFile) -> (usize, String) {
+    for (idx, code) in src.code.iter().enumerate() {
+        if find_token(code, "REGISTRY").is_empty() || find_token(code, "static").is_empty() {
+            continue;
+        }
+        let mut text = String::new();
+        for line in src.code.iter().skip(idx) {
+            text.push_str(line);
+            text.push('\n');
+            if line.contains(';') {
+                break;
+            }
+        }
+        return (idx + 1, text);
+    }
+    (1, String::new())
+}
+
+/// Word-boundary containment in prose (registry names may appear as
+/// `topk`, `` `topk` ``, or `topk,` — but `sync` must not match
+/// `async`).
+fn text_has_word(text: &str, word: &str) -> bool {
+    text.lines().any(|l| !find_token(l, word).is_empty())
+}
+
+/// Rule `wire-fingerprint`: the marker-delimited wire surface must
+/// hash to the pinned fingerprint, and the pinned version must equal
+/// the source `PROTOCOL_VERSION`. `pin_text` is the contents of
+/// `rust/wire.fingerprint` (`None` = file missing).
+pub fn wire_fingerprint(src: &SourceFile, pin_text: Option<&str>) -> Vec<Finding> {
+    let mut f = |line: usize, msg: String| Finding {
+        rule: "wire-fingerprint",
+        file: src.path.clone(),
+        line,
+        msg,
+    };
+    let Some(surface) = fingerprint::extract(src) else {
+        return vec![f(
+            1,
+            format!(
+                "wire-surface markers (`{}` / `{}`) missing — the frame format can drift unpinned",
+                fingerprint::BEGIN_MARKER,
+                fingerprint::END_MARKER,
+            ),
+        )];
+    };
+    let Some(version) = surface.version else {
+        return vec![f(1, "PROTOCOL_VERSION not found inside the wire-surface region".into())];
+    };
+    let Some(pin_text) = pin_text else {
+        return vec![f(
+            1,
+            "fingerprint pin file missing — run `anytime-sgd lint --write-fingerprint`".into(),
+        )];
+    };
+    let pin: Pin = match fingerprint::parse_pin(pin_text) {
+        Ok(p) => p,
+        Err(e) => return vec![f(1, format!("fingerprint pin file unreadable: {e}"))],
+    };
+    let mut out = Vec::new();
+    if pin.fingerprint != surface.fingerprint {
+        out.push(f(
+            1,
+            format!(
+                "wire surface changed: fingerprint 0x{:016x} != pinned 0x{:016x} — bump \
+                 PROTOCOL_VERSION and re-pin with `anytime-sgd lint --write-fingerprint` \
+                 (DESIGN.md §10)",
+                surface.fingerprint, pin.fingerprint,
+            ),
+        ));
+    }
+    if pin.version != version {
+        out.push(f(
+            1,
+            format!(
+                "pinned wire version {} != source PROTOCOL_VERSION {} — re-pin with \
+                 `anytime-sgd lint --write-fingerprint`",
+                pin.version, version,
+            ),
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn det_time_respects_allowlist_and_tests() {
+        let text = "fn f() { let t = Instant::now(); }\n";
+        assert_eq!(det_time(&SourceFile::from_text("rust/src/theory/x.rs", text)).len(), 1);
+        assert!(det_time(&SourceFile::from_text("rust/src/net/x.rs", text)).is_empty());
+        let test_only = "#[cfg(test)]\nmod tests {\n fn f() { let t = Instant::now(); }\n}\n";
+        assert!(det_time(&SourceFile::from_text("rust/src/theory/x.rs", test_only)).is_empty());
+        // Doc/prose mentions never fire: scrubbed before scanning.
+        let doc = "// uses Instant::now for deadlines\nfn g() {}\n";
+        assert!(det_time(&SourceFile::from_text("rust/src/theory/x.rs", doc)).is_empty());
+    }
+
+    #[test]
+    fn hostile_panic_fn_scope_is_precise() {
+        let text = concat!(
+            "pub fn decode(b: &[u8]) -> u8 {\n",
+            "    b[0]\n",
+            "}\n",
+            "pub fn encode(v: &[u8]) -> u8 {\n",
+            "    v[0] // encode side: out of rule scope\n",
+            "}\n",
+        );
+        let src = SourceFile::from_text("x.rs", text);
+        let found = hostile_panic(&src, PanicScope::Fns(&["decode"]));
+        assert_eq!(found.len(), 1, "{found:?}");
+        assert_eq!(found.first().map(|f| f.line), Some(2));
+    }
+
+    #[test]
+    fn index_detector_skips_literals_and_attributes() {
+        assert!(index_sites("let v = vec![0u8; n];").is_empty());
+        assert!(index_sites("#[derive(Debug)]").is_empty());
+        assert!(index_sites("let a: [u8; 4] = x;").is_empty());
+        assert!(index_sites("fn f() -> [f32; 3] {").is_empty());
+        // Slice types after a lifetime: the ident before `[` is the
+        // lifetime's name, not an indexed value.
+        assert!(index_sites("buf: &'a [u8],").is_empty());
+        assert!(index_sites("fn take(&self) -> Result<&'a [u8], E> {").is_empty());
+        assert!(index_sites("const T: &'static [u8] = b\"x\";").is_empty());
+        assert_eq!(index_sites("let x = buf[i];").len(), 1);
+        assert_eq!(index_sites("m[k][j] = 0;").len(), 2);
+        assert_eq!(index_sites("f(a)[0]").len(), 1);
+    }
+
+    #[test]
+    fn debug_assert_is_allowed() {
+        let text = "pub fn decode(b: &[u8]) { debug_assert!(!b.is_empty()); }\n";
+        let src = SourceFile::from_text("x.rs", text);
+        assert!(hostile_panic(&src, PanicScope::WholeFile).is_empty());
+    }
+
+    #[test]
+    fn word_boundaries_in_design_lookup() {
+        assert!(text_has_word("the `sync` baseline", "sync"));
+        assert!(!text_has_word("the async baseline", "sync"));
+        assert!(text_has_word("q8/q16 quantization", "q8"));
+    }
+}

@@ -1,0 +1,409 @@
+//! Source model for the in-tree static-analysis pass (DESIGN.md §10).
+//!
+//! Loads one Rust source file and produces a per-line *scrubbed* view:
+//! comment bodies and string/char-literal bodies are blanked to spaces
+//! (newlines preserved, so findings keep real line numbers), and lines
+//! inside `#[cfg(test)]` items are marked so rules can skip test code.
+//!
+//! The scrubber is a lexer-grade scanner, not a parser: it understands
+//! line comments, nested block comments, string and raw-string
+//! literals (`r"…"`, `r#"…"#`), byte strings/chars, and char literals
+//! vs lifetimes — enough to make naive token scans sound on real
+//! source. Anything it blanks can never produce a finding, so a rule
+//! token appearing in a doc comment or an error-message string is
+//! never a false positive.
+
+use std::path::Path;
+
+/// One parsed source file: raw lines, scrubbed lines, test-span marks.
+pub struct SourceFile {
+    /// Repo-relative path, forward slashes (the path findings report).
+    pub path: String,
+    /// Raw line text, index `i` = line `i + 1`.
+    pub raw: Vec<String>,
+    /// Scrubbed line text, same shape as `raw`.
+    pub code: Vec<String>,
+    /// Whether line `i + 1` sits inside a `#[cfg(test)]` item.
+    pub in_test: Vec<bool>,
+}
+
+impl SourceFile {
+    /// Load and scrub a file from disk. `rel` is the repo-relative
+    /// path used in findings.
+    pub fn load(abs: &Path, rel: &str) -> std::io::Result<SourceFile> {
+        let text = std::fs::read_to_string(abs)?;
+        Ok(Self::from_text(rel, &text))
+    }
+
+    /// Build the model from in-memory text (fixture self-tests).
+    pub fn from_text(rel: &str, text: &str) -> SourceFile {
+        let scrubbed = scrub(text);
+        let raw: Vec<String> = text.lines().map(str::to_string).collect();
+        let code: Vec<String> = scrubbed.lines().map(str::to_string).collect();
+        let in_test = mark_test_spans(&code);
+        SourceFile { path: rel.to_string(), raw, code, in_test }
+    }
+
+    /// Number of lines.
+    pub fn len(&self) -> usize {
+        self.raw.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.raw.is_empty()
+    }
+
+    /// Line spans (1-based, inclusive) of every non-test `fn <name>`
+    /// body. Bodiless declarations (trait methods ending in `;`) are
+    /// skipped — there is nothing in them to scan.
+    pub fn fn_spans(&self, name: &str) -> Vec<(usize, usize)> {
+        let mut spans = Vec::new();
+        let needle = format!("fn {name}");
+        for start in 0..self.code.len() {
+            if self.in_test.get(start).copied().unwrap_or(false) {
+                continue;
+            }
+            for col in find_token(&self.code[start], &needle) {
+                // `fn name` must be followed by `(` or `<`, not a
+                // longer identifier (word-boundary on the name).
+                let after = self.code[start][col + needle.len()..].trim_start();
+                if !(after.starts_with('(') || after.starts_with('<')) {
+                    continue;
+                }
+                if let Some(end) = self.match_braces_from(start, col) {
+                    spans.push((start + 1, end + 1));
+                }
+            }
+        }
+        spans
+    }
+
+    /// From (line, col), scan forward for the first `{` or `;` at
+    /// nesting depth zero; on `{`, return the line index of its
+    /// matching `}`. `None` for bodiless declarations.
+    fn match_braces_from(&self, line: usize, col: usize) -> Option<usize> {
+        let mut depth = 0usize;
+        let mut seen_open = false;
+        let mut li = line;
+        let mut ci = col;
+        while li < self.code.len() {
+            let bytes = self.code[li].as_bytes();
+            while ci < bytes.len() {
+                match bytes[ci] {
+                    b';' if !seen_open => return None,
+                    b'{' => {
+                        seen_open = true;
+                        depth += 1;
+                    }
+                    b'}' if seen_open => {
+                        depth -= 1;
+                        if depth == 0 {
+                            return Some(li);
+                        }
+                    }
+                    _ => {}
+                }
+                ci += 1;
+            }
+            li += 1;
+            ci = 0;
+        }
+        None
+    }
+}
+
+/// Occurrences of `token` in `line` with word boundaries: if the
+/// token's first (last) char is an identifier char, the preceding
+/// (following) char must not be one. Tokens starting with `.` or
+/// ending with `(`/`)`/`!` therefore match exactly as written.
+pub fn find_token(line: &str, token: &str) -> Vec<usize> {
+    let lb = line.as_bytes();
+    let tb = token.as_bytes();
+    let first_ident = tb.first().is_some_and(|&b| is_ident(b));
+    let last_ident = tb.last().is_some_and(|&b| is_ident(b));
+    let mut hits = Vec::new();
+    if tb.is_empty() || lb.len() < tb.len() {
+        return hits;
+    }
+    for i in 0..=lb.len() - tb.len() {
+        if &lb[i..i + tb.len()] != tb {
+            continue;
+        }
+        if first_ident && i > 0 && is_ident(lb[i - 1]) {
+            continue;
+        }
+        if last_ident && lb.get(i + tb.len()).copied().is_some_and(is_ident) {
+            continue;
+        }
+        hits.push(i);
+    }
+    hits
+}
+
+fn is_ident(b: u8) -> bool {
+    b.is_ascii_alphanumeric() || b == b'_'
+}
+
+/// Blank comment bodies and string/char-literal bodies to spaces,
+/// preserving newlines and everything else.
+pub fn scrub(text: &str) -> String {
+    let src: Vec<char> = text.chars().collect();
+    let mut out = String::with_capacity(text.len());
+    let mut i = 0usize;
+    let blank = |out: &mut String, src: &[char], from: usize, to: usize| {
+        for &c in src.iter().take(to).skip(from) {
+            out.push(if c == '\n' { '\n' } else { ' ' });
+        }
+    };
+    while i < src.len() {
+        let c = src[i];
+        let next = src.get(i + 1).copied();
+        // Line comment (incl. /// and //! doc comments).
+        if c == '/' && next == Some('/') {
+            let mut j = i;
+            while j < src.len() && src[j] != '\n' {
+                j += 1;
+            }
+            blank(&mut out, &src, i, j);
+            i = j;
+            continue;
+        }
+        // Block comment, nesting honored.
+        if c == '/' && next == Some('*') {
+            let mut depth = 1usize;
+            let mut j = i + 2;
+            while j < src.len() && depth > 0 {
+                if src[j] == '/' && src.get(j + 1) == Some(&'*') {
+                    depth += 1;
+                    j += 2;
+                } else if src[j] == '*' && src.get(j + 1) == Some(&'/') {
+                    depth -= 1;
+                    j += 2;
+                } else {
+                    j += 1;
+                }
+            }
+            blank(&mut out, &src, i, j);
+            i = j;
+            continue;
+        }
+        // Raw (byte) string: r"…", r#"…"#, br#"…"# — no escapes, the
+        // closing quote must carry the same number of `#`s.
+        let raw_start = match (c, next) {
+            ('r', _) => Some(i + 1),
+            ('b', Some('r')) => Some(i + 2),
+            _ => None,
+        };
+        if let Some(mut j) = raw_start {
+            let prev_ident = i > 0 && (src[i - 1].is_ascii_alphanumeric() || src[i - 1] == '_');
+            let mut hashes = 0usize;
+            while src.get(j) == Some(&'#') {
+                hashes += 1;
+                j += 1;
+            }
+            if !prev_ident && src.get(j) == Some(&'"') {
+                j += 1;
+                'scan: while j < src.len() {
+                    if src[j] == '"' {
+                        let mut k = 0usize;
+                        while k < hashes && src.get(j + 1 + k) == Some(&'#') {
+                            k += 1;
+                        }
+                        if k == hashes {
+                            j += 1 + hashes;
+                            break 'scan;
+                        }
+                    }
+                    j += 1;
+                }
+                blank(&mut out, &src, i, j);
+                i = j;
+                continue;
+            }
+        }
+        // Byte string b"…" falls through to the string arm below.
+        if c == 'b' && next == Some('"') {
+            out.push(' ');
+            i += 1;
+            continue;
+        }
+        // String literal with escapes.
+        if c == '"' {
+            let mut j = i + 1;
+            while j < src.len() {
+                if src[j] == '\\' {
+                    j += 2;
+                } else if src[j] == '"' {
+                    j += 1;
+                    break;
+                } else {
+                    j += 1;
+                }
+            }
+            blank(&mut out, &src, i, j.min(src.len()));
+            i = j.min(src.len());
+            continue;
+        }
+        // Char literal vs lifetime. `'x'`, `'\n'`, `b'{'` are
+        // literals; `'a` in `<'a>` or `'outer:` is a lifetime and is
+        // kept as-is.
+        if c == '\'' {
+            let is_escape = next == Some('\\');
+            let closes = src.get(i + 2) == Some(&'\'');
+            if is_escape || (next.is_some() && closes) {
+                // Escaped literal: '\?' (2-char escapes cover every
+                // escape the repo uses); simple literal: 'x'.
+                let end = if is_escape {
+                    let mut j = i + 2;
+                    while j < src.len() && src[j] != '\'' {
+                        j += 1;
+                    }
+                    (j + 1).min(src.len())
+                } else {
+                    i + 3
+                };
+                blank(&mut out, &src, i, end);
+                i = end;
+                continue;
+            }
+            out.push(c);
+            i += 1;
+            continue;
+        }
+        out.push(c);
+        i += 1;
+    }
+    out
+}
+
+/// Mark every line belonging to a `#[cfg(test)]` item: the attribute
+/// line through the matching `}` of the item's body (or its `;` for a
+/// bodiless item).
+fn mark_test_spans(code: &[String]) -> Vec<bool> {
+    let mut marks = vec![false; code.len()];
+    for start in 0..code.len() {
+        if find_token(&code[start], "#[cfg(test)]").is_empty() {
+            continue;
+        }
+        // Scan forward from the end of the attribute for the item's
+        // body braces (or a terminating `;`).
+        let mut depth = 0usize;
+        let mut seen_open = false;
+        let mut end = start;
+        'outer: for (off, line) in code.iter().enumerate().skip(start) {
+            let from = if off == start {
+                find_token(line, "#[cfg(test)]")
+                    .first()
+                    .map(|c| c + "#[cfg(test)]".len())
+                    .unwrap_or(0)
+            } else {
+                0
+            };
+            for b in line.as_bytes().iter().skip(from) {
+                match b {
+                    b';' if !seen_open => {
+                        end = off;
+                        break 'outer;
+                    }
+                    b'{' => {
+                        seen_open = true;
+                        depth += 1;
+                    }
+                    b'}' if seen_open => {
+                        depth -= 1;
+                        if depth == 0 {
+                            end = off;
+                            break 'outer;
+                        }
+                    }
+                    _ => {}
+                }
+            }
+            end = off;
+        }
+        for m in marks.iter_mut().take(end + 1).skip(start) {
+            *m = true;
+        }
+    }
+    marks
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scrub_blanks_comments_and_strings() {
+        let text = "let x = 1; // Instant::now\nlet s = \"HashMap\"; /* SystemTime */ let y = 2;\n";
+        let got = scrub(text);
+        assert!(!got.contains("Instant"), "{got}");
+        assert!(!got.contains("HashMap"), "{got}");
+        assert!(!got.contains("SystemTime"), "{got}");
+        assert!(got.contains("let x = 1;"));
+        assert!(got.contains("let y = 2;"));
+        // Line structure preserved.
+        assert_eq!(got.lines().count(), text.lines().count());
+    }
+
+    #[test]
+    fn scrub_handles_raw_strings_chars_and_lifetimes() {
+        let text = concat!(
+            "let r1 = r#\"unwrap() \"quoted\" body\"#;\n",
+            "let c = '\\n'; let b = b'{'; fn f<'a>(x: &'a str) {}\n",
+            "let nested = \"say \\\"unwrap()\\\" twice\";\n",
+        );
+        let got = scrub(text);
+        assert!(!got.contains("unwrap"), "{got}");
+        assert!(!got.contains("quoted"), "{got}");
+        // The lifetime survives; the brace balance is untouched by the
+        // blanked b'{' literal.
+        assert!(got.contains("<'a>"), "{got}");
+        let opens = got.matches('{').count();
+        let closes = got.matches('}').count();
+        assert_eq!(opens, closes, "{got}");
+    }
+
+    #[test]
+    fn test_spans_are_marked() {
+        let text = concat!(
+            "pub fn live() {}\n",
+            "#[cfg(test)]\n",
+            "mod tests {\n",
+            "    fn helper() { let _ = 1; }\n",
+            "}\n",
+            "pub fn also_live() {}\n",
+        );
+        let sf = SourceFile::from_text("x.rs", text);
+        assert_eq!(sf.in_test, vec![false, true, true, true, true, false]);
+    }
+
+    #[test]
+    fn fn_spans_find_bodies_and_skip_declarations() {
+        let text = concat!(
+            "trait T {\n",
+            "    fn decode(&self) -> u8;\n",
+            "}\n",
+            "impl T for () {\n",
+            "    fn decode(&self) -> u8 {\n",
+            "        0\n",
+            "    }\n",
+            "}\n",
+            "fn decoder() {}\n",
+        );
+        let sf = SourceFile::from_text("x.rs", text);
+        assert_eq!(sf.fn_spans("decode"), vec![(5, 7)]);
+        // `decoder` has a word boundary after `decode`, so it is a
+        // different token entirely.
+        assert_eq!(sf.fn_spans("decoder"), vec![(9, 9)]);
+    }
+
+    #[test]
+    fn token_boundaries() {
+        assert_eq!(find_token("Instantiate(x)", "Instant").len(), 0);
+        assert_eq!(find_token("Instant::now()", "Instant::now").len(), 1);
+        assert_eq!(find_token("debug_assert!(x)", "assert!").len(), 0);
+        assert_eq!(find_token("assert!(x)", "assert!").len(), 1);
+        assert_eq!(find_token("x.unwrap_or(0)", ".unwrap()").len(), 0);
+        assert_eq!(find_token("x.unwrap()", ".unwrap()").len(), 1);
+    }
+}

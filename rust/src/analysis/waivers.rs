@@ -1,0 +1,200 @@
+//! Waiver file parsing for the static-analysis pass.
+//!
+//! Format (a deliberately tiny TOML subset, std-parsed — see
+//! DESIGN.md §10):
+//!
+//! ```toml
+//! [[waiver]]
+//! rule = "det-time"
+//! path = "rust/src/foo.rs"
+//! line = 12                       # optional: whole file if omitted
+//! justification = "why this specific site is sound"
+//! ```
+//!
+//! Every entry must name a known rule, a repo-relative path, and a
+//! non-empty justification — an unexplained waiver is a parse error,
+//! not a finding. Waivers that match nothing produce a
+//! `waiver-unused` finding (stale waivers rot into blanket excuses).
+
+use super::rules::{Finding, RULES};
+
+/// One parsed waiver entry.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Waiver {
+    pub rule: String,
+    pub path: String,
+    pub line: Option<usize>,
+    pub justification: String,
+    /// Line of the `[[waiver]]` header (for `waiver-unused` findings).
+    pub decl_line: usize,
+}
+
+impl Waiver {
+    /// Whether this waiver covers the finding.
+    pub fn covers(&self, f: &Finding) -> bool {
+        self.rule == f.rule && self.path == f.file && self.line.map_or(true, |l| l == f.line)
+    }
+}
+
+/// Parse a waiver file. Errors carry the offending line number.
+pub fn parse(text: &str) -> Result<Vec<Waiver>, String> {
+    let mut out: Vec<Waiver> = Vec::new();
+    let mut cur: Option<Waiver> = None;
+    for (idx, raw) in text.lines().enumerate() {
+        let lineno = idx + 1;
+        let line = raw.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        if line == "[[waiver]]" {
+            if let Some(w) = cur.take() {
+                validate(&w)?;
+                out.push(w);
+            }
+            cur = Some(Waiver {
+                rule: String::new(),
+                path: String::new(),
+                line: None,
+                justification: String::new(),
+                decl_line: lineno,
+            });
+            continue;
+        }
+        let Some((key, value)) = line.split_once('=') else {
+            return Err(format!("waiver file line {lineno}: expected `key = value`"));
+        };
+        let entry = cur.as_mut().ok_or_else(|| {
+            format!("waiver file line {lineno}: `{}` before any [[waiver]]", key.trim())
+        })?;
+        let key = key.trim();
+        let value = strip_comment(value).trim().to_string();
+        match key {
+            "rule" => entry.rule = unquote(&value, lineno)?,
+            "path" => entry.path = unquote(&value, lineno)?,
+            "justification" => entry.justification = unquote(&value, lineno)?,
+            "line" => {
+                entry.line = Some(value.parse::<usize>().map_err(|_| {
+                    format!("waiver file line {lineno}: `line` must be an integer, got `{value}`")
+                })?)
+            }
+            other => return Err(format!("waiver file line {lineno}: unknown key `{other}`")),
+        }
+    }
+    if let Some(w) = cur.take() {
+        validate(&w)?;
+        out.push(w);
+    }
+    Ok(out)
+}
+
+/// Cut a trailing `# comment` — but only outside a quoted value, so a
+/// justification may mention `#123` issue numbers.
+fn strip_comment(value: &str) -> &str {
+    let mut in_str = false;
+    for (i, b) in value.bytes().enumerate() {
+        match b {
+            b'"' => in_str = !in_str,
+            b'#' if !in_str => return &value[..i],
+            _ => {}
+        }
+    }
+    value
+}
+
+fn unquote(value: &str, lineno: usize) -> Result<String, String> {
+    let inner = value
+        .strip_prefix('"')
+        .and_then(|v| v.strip_suffix('"'))
+        .ok_or_else(|| format!("waiver file line {lineno}: expected a double-quoted string"))?;
+    if inner.contains('"') || inner.contains('\\') {
+        return Err(format!("waiver file line {lineno}: quotes/escapes not supported in values"));
+    }
+    Ok(inner.to_string())
+}
+
+fn validate(w: &Waiver) -> Result<(), String> {
+    let at = w.decl_line;
+    if w.rule.is_empty() {
+        return Err(format!("waiver at line {at}: missing `rule`"));
+    }
+    if !RULES.iter().any(|r| r.id == w.rule) {
+        let known: Vec<&str> = RULES.iter().map(|r| r.id).collect();
+        return Err(format!(
+            "waiver at line {at}: unknown rule `{}` (known: {})",
+            w.rule,
+            known.join(", ")
+        ));
+    }
+    if w.path.is_empty() {
+        return Err(format!("waiver at line {at}: missing `path`"));
+    }
+    if w.justification.trim().is_empty() {
+        return Err(format!("waiver at line {at}: a non-empty `justification` is required"));
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_full_and_line_scoped_waivers() {
+        let text = concat!(
+            "# header comment\n",
+            "\n",
+            "[[waiver]]\n",
+            "rule = \"det-time\"\n",
+            "path = \"rust/src/foo.rs\"\n",
+            "justification = \"benchmark scaffolding, not a result path\"\n",
+            "\n",
+            "[[waiver]]\n",
+            "rule = \"det-order\"\n",
+            "path = \"rust/src/bar.rs\"\n",
+            "line = 42  # pinned to one site\n",
+            "justification = \"keys are sorted two lines above\"\n",
+        );
+        let ws = parse(text).unwrap();
+        assert_eq!(ws.len(), 2);
+        assert_eq!(ws[0].rule, "det-time");
+        assert_eq!(ws[0].line, None);
+        assert_eq!(ws[1].line, Some(42));
+        assert_eq!(ws[1].decl_line, 8);
+        let f = Finding {
+            rule: "det-order",
+            file: "rust/src/bar.rs".into(),
+            line: 42,
+            msg: String::new(),
+        };
+        assert!(ws[1].covers(&f));
+        assert!(!ws[0].covers(&f));
+        let off = Finding { line: 43, ..f };
+        assert!(!ws[1].covers(&off));
+    }
+
+    #[test]
+    fn missing_justification_is_a_parse_error() {
+        let text = "[[waiver]]\nrule = \"det-time\"\npath = \"x.rs\"\n";
+        let err = parse(text).unwrap_err();
+        assert!(err.contains("justification"), "{err}");
+        let text = "[[waiver]]\nrule = \"det-time\"\npath = \"x.rs\"\njustification = \"\"\n";
+        assert!(parse(text).is_err());
+    }
+
+    #[test]
+    fn unknown_rules_keys_and_shapes_rejected() {
+        assert!(parse("[[waiver]]\nrule = \"nope\"\npath = \"x\"\njustification = \"y\"\n")
+            .unwrap_err()
+            .contains("unknown rule"));
+        assert!(parse("[[waiver]]\nseverity = \"low\"\n").unwrap_err().contains("unknown key"));
+        assert!(parse("rule = \"det-time\"\n").unwrap_err().contains("before any"));
+        assert!(parse("[[waiver]]\nrule = det-time\n").unwrap_err().contains("double-quoted"));
+        assert!(parse("[[waiver]]\nline = \"ten\"\nrule = \"det-time\"\n").is_err());
+    }
+
+    #[test]
+    fn empty_file_is_zero_waivers() {
+        assert_eq!(parse("# no waivers\n").unwrap(), Vec::new());
+        assert_eq!(parse("").unwrap(), Vec::new());
+    }
+}

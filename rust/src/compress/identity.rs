@@ -7,7 +7,8 @@
 //! compressor and the registry's lossless reference point.
 
 use super::{Compressor, CompressorInfo, CompressorSpec};
-use anyhow::{bail, Result};
+use crate::ser::bytes::ByteReader;
+use anyhow::{anyhow, bail, Result};
 
 pub struct Identity;
 
@@ -40,9 +41,11 @@ impl Compressor for Identity {
         if bytes.len() != 4 * dim {
             bail!("identity payload: {} bytes for dim {dim} (want {})", bytes.len(), 4 * dim);
         }
-        Ok(bytes
-            .chunks_exact(4)
-            .map(|b| f32::from_bits(u32::from_le_bytes([b[0], b[1], b[2], b[3]])))
-            .collect())
+        let mut r = ByteReader::new(bytes);
+        let mut out = Vec::with_capacity(dim);
+        for _ in 0..dim {
+            out.push(r.get_f32().map_err(|e| anyhow!("identity payload: {e}"))?);
+        }
+        Ok(out)
     }
 }

@@ -347,8 +347,10 @@ impl StreamDecoder {
         if self.mirror.len() != dim {
             self.mirror = vec![0.0; dim];
         }
-        for i in 0..dim {
-            self.mirror[i] += dec[i];
+        // `dec` is exactly `dim` long (codec decode contract); the zip
+        // keeps this hostile-fed path free of raw indexing.
+        for (m, d) in self.mirror.iter_mut().zip(dec.iter()) {
+            *m += *d;
         }
         Ok(self.mirror.clone())
     }

@@ -13,7 +13,7 @@
 
 use super::{Compressor, CompressorInfo, CompressorSpec};
 use crate::ser::bytes::{ByteReader, ByteWriter};
-use anyhow::{bail, Result};
+use anyhow::{anyhow, bail, Result};
 
 /// Sparsification denominator: k = max(1, d / DENOM).
 pub const DENOM: usize = 16;
@@ -88,14 +88,15 @@ impl Compressor for TopK {
         for _ in 0..k {
             let i = r.get_u32()?;
             let x = r.get_f32()?;
-            if i as usize >= dim {
-                bail!("topk payload: index {i} out of range for dim {dim}");
-            }
             if prev.is_some_and(|p| i <= p) {
                 bail!("topk payload: non-ascending index {i}");
             }
             prev = Some(i);
-            out[i as usize] = x;
+            // Checked write doubles as the range check (hostile index).
+            let slot = out
+                .get_mut(i as usize)
+                .ok_or_else(|| anyhow!("topk payload: index {i} out of range for dim {dim}"))?;
+            *slot = x;
         }
         r.finish()?;
         Ok(out)

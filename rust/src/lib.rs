@@ -64,7 +64,11 @@
 // style/complexity groups (naming-level churn) are settled crate-wide
 // here rather than per-site.
 #![allow(clippy::style, clippy::complexity)]
+// The tree is unsafe-free and the bit-exactness pins assume it stays
+// that way; `forbid` (not `deny`) so no module can locally re-allow.
+#![forbid(unsafe_code)]
 
+pub mod analysis;
 pub mod backend;
 pub mod benchkit;
 pub mod data;

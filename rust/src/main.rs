@@ -13,6 +13,9 @@
 //!                 sweep scenarios, and figure presets.
 //! * `partition` — print Table I for any (N, S) and validate it.
 //! * `inspect`   — list the AOT artifacts the runtime would load.
+//! * `lint`      — run the in-tree contract linter over the repo's own
+//!                 source (determinism, hostile-path panic-freedom,
+//!                 registry completeness, wire discipline — DESIGN.md §10).
 
 // Mirrors the crate-root posture: correctness/suspicious/perf lints are
 // load-bearing in CI; style/complexity churn is settled here.
@@ -53,7 +56,9 @@ fn usage() -> String {
        list       enumerate registered protocols, objectives, compressors, runtimes,\n\
                   scenarios, presets\n\
        partition  print + validate the Table-I data assignment\n\
-       inspect    list AOT artifacts\n\n\
+       inspect    list AOT artifacts\n\
+       lint       run the in-tree contract linter (determinism, panic-freedom,\n\
+                  registries, wire fingerprint; see DESIGN.md §10)\n\n\
      Run `anytime-sgd <subcommand> --help` for flags.\n"
         .to_string()
 }
@@ -74,6 +79,7 @@ fn dispatch(args: &[String]) -> Result<()> {
         "list" => cmd_list(rest),
         "partition" => cmd_partition(rest),
         "inspect" => cmd_inspect(rest),
+        "lint" => cmd_lint(rest),
         "--help" | "-h" | "help" => {
             print!("{}", usage());
             Ok(())
@@ -575,6 +581,97 @@ fn cmd_partition(args: &[String]) -> Result<()> {
     print!("{}", figures::table1(n, s)?);
     println!("\nvalidation: OK (every block on exactly S+1 workers, every worker holds S+1 blocks)");
     Ok(())
+}
+
+fn cmd_lint(args: &[String]) -> Result<()> {
+    use anytime_sgd::analysis;
+
+    let cmd = Command::new("lint", "run the in-tree contract linter (DESIGN.md §10)")
+        .flag("root", FlagKind::Str, None, "repo root (default: auto-detect from the cwd)")
+        .flag("json", FlagKind::Bool, None, "machine-readable JSON report on stdout")
+        .flag(
+            "write-fingerprint",
+            FlagKind::Bool,
+            None,
+            "re-pin rust/wire.fingerprint from the current net/wire.rs surface \
+             (only after a deliberate PROTOCOL_VERSION bump)",
+        );
+    let m = cmd.parse(args).map_err(|e| anyhow::anyhow!("{e}"))?;
+    let root = match m.get("root") {
+        Some(r) => std::path::PathBuf::from(r),
+        None => analysis::find_repo_root()?,
+    };
+
+    if m.bool_of("write-fingerprint") {
+        let rel = analysis::WIRE_FILE;
+        let src = anytime_sgd::analysis::source::SourceFile::load(&root.join(rel), rel)?;
+        let surface = analysis::fingerprint::extract(&src)
+            .ok_or_else(|| anyhow::anyhow!("{rel}: wire-surface markers not found"))?;
+        let version = surface.version.ok_or_else(|| {
+            anyhow::anyhow!("{rel}: no PROTOCOL_VERSION inside the wire surface")
+        })?;
+        std::fs::write(
+            root.join(analysis::PIN_FILE),
+            analysis::fingerprint::render_pin(version, surface.fingerprint),
+        )?;
+        println!(
+            "pinned {} <- version {version}, fingerprint {:#018x}",
+            analysis::PIN_FILE,
+            surface.fingerprint
+        );
+        return Ok(());
+    }
+
+    let out = analysis::run(&root)?;
+    if m.bool_of("json") {
+        use anytime_sgd::ser::Value;
+        let finding_val = |f: &analysis::Finding| {
+            Value::obj(vec![
+                ("file", Value::Str(f.file.clone())),
+                ("line", Value::Num(f.line as f64)),
+                ("rule", Value::Str(f.rule.to_string())),
+                ("msg", Value::Str(f.msg.clone())),
+            ])
+        };
+        let waived_val = |f: &analysis::Finding, just: &str| {
+            Value::obj(vec![
+                ("file", Value::Str(f.file.clone())),
+                ("line", Value::Num(f.line as f64)),
+                ("rule", Value::Str(f.rule.to_string())),
+                ("msg", Value::Str(f.msg.clone())),
+                ("justification", Value::Str(just.to_string())),
+            ])
+        };
+        let report = Value::obj(vec![
+            ("clean", Value::Bool(out.findings.is_empty())),
+            ("files_scanned", Value::Num(out.files_scanned as f64)),
+            ("findings", Value::Arr(out.findings.iter().map(finding_val).collect())),
+            (
+                "waived",
+                Value::Arr(out.waived.iter().map(|(f, j)| waived_val(f, j)).collect()),
+            ),
+        ]);
+        println!("{}", anytime_sgd::ser::to_string_pretty(&report));
+    } else {
+        for f in &out.findings {
+            println!("{f}");
+        }
+        for (f, just) in &out.waived {
+            println!("waived: {f} — {just}");
+        }
+        if out.findings.is_empty() {
+            println!(
+                "lint: clean ({} files scanned, {} waived finding(s))",
+                out.files_scanned,
+                out.waived.len()
+            );
+        }
+    }
+    if out.findings.is_empty() {
+        Ok(())
+    } else {
+        bail!("lint: {} finding(s) ({} files scanned)", out.findings.len(), out.files_scanned)
+    }
 }
 
 fn cmd_inspect(args: &[String]) -> Result<()> {

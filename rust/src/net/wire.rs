@@ -30,6 +30,11 @@ use crate::ser::bytes::{ByteReader, ByteWriter, BytesError};
 use std::fmt;
 use std::io::{Read, Write};
 
+// === WIRE SURFACE (fingerprinted by `anytime-sgd lint`) ===
+// Everything down to the end marker is the frame-format surface: any
+// change here must bump PROTOCOL_VERSION and re-pin
+// rust/wire.fingerprint (`lint --write-fingerprint`) — DESIGN.md §10.
+
 /// Protocol version; bumped on any frame-format change. A worker and
 /// master disagreeing on this refuse to pair during the handshake.
 /// v2: `Assign` carries the full objective spec (kind + class count)
@@ -43,47 +48,6 @@ pub const PROTOCOL_VERSION: u32 = 3;
 /// paper-scale shard in `Assign`, small enough that a corrupt length
 /// prefix cannot drive a runaway allocation.
 pub const MAX_FRAME_BYTES: u32 = 1 << 30;
-
-/// Wire failure: framing/codec errors or the underlying socket error.
-#[derive(Debug)]
-pub enum WireError {
-    /// Frame length prefix exceeds [`MAX_FRAME_BYTES`].
-    Oversize(u32),
-    /// Unknown message tag.
-    BadTag(u8),
-    /// Payload body failed to decode.
-    Codec(BytesError),
-    /// Payload field held an out-of-domain value.
-    BadValue(&'static str),
-    /// Socket-level failure (includes EOF mid-frame).
-    Io(std::io::Error),
-}
-
-impl fmt::Display for WireError {
-    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
-        match self {
-            WireError::Oversize(n) => write!(f, "frame length {n} exceeds {MAX_FRAME_BYTES}"),
-            WireError::BadTag(t) => write!(f, "unknown message tag {t}"),
-            WireError::Codec(e) => write!(f, "frame body: {e}"),
-            WireError::BadValue(what) => write!(f, "frame body: invalid {what}"),
-            WireError::Io(e) => write!(f, "socket: {e}"),
-        }
-    }
-}
-
-impl std::error::Error for WireError {}
-
-impl From<BytesError> for WireError {
-    fn from(e: BytesError) -> Self {
-        WireError::Codec(e)
-    }
-}
-
-impl From<std::io::Error> for WireError {
-    fn from(e: std::io::Error) -> Self {
-        WireError::Io(e)
-    }
-}
 
 /// Worker registration: shard + run constants, sent once after `Hello`.
 #[derive(Clone, Debug, PartialEq)]
@@ -186,6 +150,49 @@ const TAG_TASK: u8 = 3;
 const TAG_REPORT: u8 = 4;
 const TAG_HEARTBEAT: u8 = 5;
 const TAG_SHUTDOWN: u8 = 6;
+
+// === END WIRE SURFACE ===
+
+/// Wire failure: framing/codec errors or the underlying socket error.
+#[derive(Debug)]
+pub enum WireError {
+    /// Frame length prefix exceeds [`MAX_FRAME_BYTES`].
+    Oversize(u32),
+    /// Unknown message tag.
+    BadTag(u8),
+    /// Payload body failed to decode.
+    Codec(BytesError),
+    /// Payload field held an out-of-domain value.
+    BadValue(&'static str),
+    /// Socket-level failure (includes EOF mid-frame).
+    Io(std::io::Error),
+}
+
+impl fmt::Display for WireError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            WireError::Oversize(n) => write!(f, "frame length {n} exceeds {MAX_FRAME_BYTES}"),
+            WireError::BadTag(t) => write!(f, "unknown message tag {t}"),
+            WireError::Codec(e) => write!(f, "frame body: {e}"),
+            WireError::BadValue(what) => write!(f, "frame body: invalid {what}"),
+            WireError::Io(e) => write!(f, "socket: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for WireError {}
+
+impl From<BytesError> for WireError {
+    fn from(e: BytesError) -> Self {
+        WireError::Codec(e)
+    }
+}
+
+impl From<std::io::Error> for WireError {
+    fn from(e: std::io::Error) -> Self {
+        WireError::Io(e)
+    }
+}
 
 impl Msg {
     /// Encode to a frame payload (tag + body, no length prefix).

@@ -3,7 +3,7 @@
 
 use super::Manifest;
 use anyhow::{anyhow, bail, Context, Result};
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
 use std::sync::Mutex;
 
@@ -12,11 +12,17 @@ use std::sync::Mutex;
 /// Thread-safety: `xla::PjRtClient` and executables are internally
 /// reference-counted; the executable cache is guarded by a mutex. Worker
 /// threads share one `Engine` via `Arc`.
+///
+/// The cache is a `BTreeMap`, not a `HashMap`: warm-up order and any
+/// future cache traversal stay key-sorted and platform-stable, so the
+/// engine can never become a hidden iteration-order nondeterminism
+/// source (`det-order` lint rule; `rust/tests/analysis_gate.rs` holds
+/// the regression test).
 pub struct Engine {
     client: xla::PjRtClient,
     dir: PathBuf,
     manifest: Manifest,
-    cache: Mutex<HashMap<String, std::sync::Arc<xla::PjRtLoadedExecutable>>>,
+    cache: Mutex<BTreeMap<String, std::sync::Arc<xla::PjRtLoadedExecutable>>>,
 }
 
 /// A device-resident input (uploaded once, reused per call).
@@ -38,7 +44,7 @@ impl Engine {
         let manifest = Manifest::load(&dir.join("manifest.json"))
             .with_context(|| format!("loading manifest from {}", dir.display()))?;
         let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e:?}"))?;
-        Ok(Self { client, dir, manifest, cache: Mutex::new(HashMap::new()) })
+        Ok(Self { client, dir, manifest, cache: Mutex::new(BTreeMap::new()) })
     }
 
     /// The manifest describing all artifacts.

@@ -123,7 +123,7 @@ impl<'a> ByteReader<'a> {
 
     /// Bytes not yet consumed.
     pub fn remaining(&self) -> usize {
-        self.buf.len() - self.pos
+        self.buf.len().saturating_sub(self.pos)
     }
 
     /// Current byte offset (for error reporting).
@@ -141,27 +141,40 @@ impl<'a> ByteReader<'a> {
         }
     }
 
+    // Every accessor below goes through checked slicing (`get`) and
+    // checked array conversion (`try_into`) — no raw indexing, so the
+    // `hostile-panic` lint rule can verify panic-freedom syntactically.
     fn take(&mut self, n: usize, what: &'static str) -> Result<&'a [u8], BytesError> {
-        if self.remaining() < n {
-            return Err(BytesError { what, at: self.pos });
-        }
-        let out = &self.buf[self.pos..self.pos + n];
+        let out = self
+            .buf
+            .get(self.pos..)
+            .and_then(|rest| rest.get(..n))
+            .ok_or(BytesError { what, at: self.pos })?;
         self.pos += n;
         Ok(out)
     }
 
     pub fn get_u8(&mut self) -> Result<u8, BytesError> {
-        Ok(self.take(1, "u8")?[0])
+        let at = self.pos;
+        self.take(1, "u8")?.first().copied().ok_or(BytesError { what: "u8", at })
     }
 
     pub fn get_u32(&mut self) -> Result<u32, BytesError> {
-        let b = self.take(4, "u32")?;
-        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+        let at = self.pos;
+        let b: [u8; 4] = self
+            .take(4, "u32")?
+            .try_into()
+            .map_err(|_| BytesError { what: "u32", at })?;
+        Ok(u32::from_le_bytes(b))
     }
 
     pub fn get_u64(&mut self) -> Result<u64, BytesError> {
-        let b = self.take(8, "u64")?;
-        Ok(u64::from_le_bytes([b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7]]))
+        let at = self.pos;
+        let b: [u8; 8] = self
+            .take(8, "u64")?
+            .try_into()
+            .map_err(|_| BytesError { what: "u64", at })?;
+        Ok(u64::from_le_bytes(b))
     }
 
     pub fn get_f32(&mut self) -> Result<f32, BytesError> {

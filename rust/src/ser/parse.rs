@@ -38,9 +38,13 @@ struct Parser<'a> {
 }
 
 impl<'a> Parser<'a> {
+    // The parser is fed by config files and CLI arguments as well as
+    // run artifacts, so it sits on the `hostile-panic` lint surface:
+    // all byte access below is checked (`get`), never indexed.
     fn err(&self, msg: &str) -> ParseError {
         let (mut line, mut col) = (1usize, 1usize);
-        for &b in &self.bytes[..self.pos.min(self.bytes.len())] {
+        let upto = self.pos.min(self.bytes.len());
+        for &b in self.bytes.get(..upto).unwrap_or_default() {
             if b == b'\n' {
                 line += 1;
                 col = 1;
@@ -67,7 +71,7 @@ impl<'a> Parser<'a> {
         }
     }
 
-    fn expect(&mut self, b: u8) -> Result<(), ParseError> {
+    fn expect_byte(&mut self, b: u8) -> Result<(), ParseError> {
         if self.peek() == Some(b) {
             self.pos += 1;
             Ok(())
@@ -91,7 +95,7 @@ impl<'a> Parser<'a> {
     }
 
     fn literal(&mut self, word: &str, v: Value) -> Result<Value, ParseError> {
-        if self.bytes[self.pos..].starts_with(word.as_bytes()) {
+        if self.bytes.get(self.pos..).is_some_and(|rest| rest.starts_with(word.as_bytes())) {
             self.pos += word.len();
             Ok(v)
         } else {
@@ -100,7 +104,7 @@ impl<'a> Parser<'a> {
     }
 
     fn object(&mut self) -> Result<Value, ParseError> {
-        self.expect(b'{')?;
+        self.expect_byte(b'{')?;
         let mut map = BTreeMap::new();
         self.skip_ws();
         if self.peek() == Some(b'}') {
@@ -111,7 +115,7 @@ impl<'a> Parser<'a> {
             self.skip_ws();
             let key = self.string()?;
             self.skip_ws();
-            self.expect(b':')?;
+            self.expect_byte(b':')?;
             self.skip_ws();
             let val = self.value()?;
             map.insert(key, val);
@@ -125,7 +129,7 @@ impl<'a> Parser<'a> {
     }
 
     fn array(&mut self) -> Result<Value, ParseError> {
-        self.expect(b'[')?;
+        self.expect_byte(b'[')?;
         let mut items = Vec::new();
         self.skip_ws();
         if self.peek() == Some(b']') {
@@ -145,7 +149,7 @@ impl<'a> Parser<'a> {
     }
 
     fn string(&mut self) -> Result<String, ParseError> {
-        self.expect(b'"')?;
+        self.expect_byte(b'"')?;
         let mut out = String::new();
         loop {
             match self.bump() {
@@ -189,11 +193,12 @@ impl<'a> Parser<'a> {
                     } else {
                         let start = self.pos - 1;
                         let len = utf8_len(c).ok_or_else(|| self.err("invalid utf-8"))?;
-                        if start + len > self.bytes.len() {
-                            return Err(self.err("truncated utf-8"));
-                        }
-                        let s = std::str::from_utf8(&self.bytes[start..start + len])
-                            .map_err(|_| self.err("invalid utf-8"))?;
+                        let bytes = self
+                            .bytes
+                            .get(start..start + len)
+                            .ok_or_else(|| self.err("truncated utf-8"))?;
+                        let s =
+                            std::str::from_utf8(bytes).map_err(|_| self.err("invalid utf-8"))?;
                         out.push_str(s);
                         self.pos = start + len;
                     }
@@ -235,7 +240,13 @@ impl<'a> Parser<'a> {
                 self.pos += 1;
             }
         }
-        let text = std::str::from_utf8(&self.bytes[start..self.pos]).unwrap();
+        // The span is all ASCII digits/signs by construction, but the
+        // checked path costs nothing and keeps this file panic-free.
+        let text = self
+            .bytes
+            .get(start..self.pos)
+            .and_then(|span| std::str::from_utf8(span).ok())
+            .ok_or_else(|| self.err("invalid number"))?;
         text.parse::<f64>().map(Value::Num).map_err(|_| self.err("invalid number"))
     }
 }

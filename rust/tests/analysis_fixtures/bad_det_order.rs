@@ -1,0 +1,16 @@
+//! Fixture: the pre-lint `runtime::Engine` cache shape — a
+//! randomized-iteration-order map in library code. Known-bad sample
+//! for the `det-order` rule; the live `engine.rs` now uses `BTreeMap`
+//! and `analysis_gate.rs` holds both directions: this text must flag,
+//! the real file must not.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+pub struct Cache {
+    exes: Mutex<HashMap<String, Arc<Vec<u8>>>>,
+}
+
+pub fn cached(c: &Cache) -> usize {
+    c.exes.lock().unwrap().len()
+}

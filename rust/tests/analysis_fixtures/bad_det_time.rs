@@ -1,0 +1,9 @@
+//! Fixture: ambient wall-clock read in a result-producing module.
+//! Known-bad sample for the `det-time` rule — `analysis_gate.rs` scans
+//! this text under a non-allowlisted path and expects a finding. Never
+//! compiled into the crate (no target points here).
+
+pub fn epoch_seed() -> u64 {
+    let t = std::time::Instant::now();
+    t.elapsed().as_nanos() as u64
+}

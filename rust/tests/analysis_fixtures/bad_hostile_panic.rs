@@ -1,0 +1,17 @@
+//! Fixture: a decoder that trusts its input. Known-bad sample for the
+//! `hostile-panic` rule — unchecked indexing, `.unwrap()`, and a hard
+//! assert inside `decode`, plus one `.unwrap()` on the encode side to
+//! prove the `Fns(["decode"])` scope stops at the decode body.
+
+pub fn decode(bytes: &[u8]) -> u32 {
+    let n = bytes[0] as usize;
+    let head: [u8; 4] = bytes[1..5].try_into().unwrap();
+    assert!(n > 0);
+    u32::from_le_bytes(head)
+}
+
+pub fn encode(v: u32) -> Vec<u8> {
+    let s = format!("{v}");
+    let n: u32 = s.parse().unwrap();
+    n.to_le_bytes().to_vec()
+}

@@ -1,0 +1,13 @@
+//! Fixture: a registry `mod.rs` that forgot to wire one module —
+//! `newproto.rs` exists on disk but its `INFO` never reaches REGISTRY.
+//! Known-bad sample for the `registry` rule.
+
+pub mod anytime;
+pub mod newproto;
+pub mod sync;
+
+pub struct Info {
+    pub name: &'static str,
+}
+
+pub static REGISTRY: &[&Info] = &[&anytime::INFO, &sync::INFO];

@@ -1,0 +1,11 @@
+//! Fixture: a det-time violation covered by `fixture_waivers.toml` —
+//! `analysis_gate.rs` proves the waiver workflow accepts it (findings
+//! all waived, none kept, waiver not reported stale).
+
+pub fn stamp_nanos() -> u128 {
+    use std::time::{SystemTime, UNIX_EPOCH};
+    match SystemTime::now().duration_since(UNIX_EPOCH) {
+        Ok(d) => d.as_nanos(),
+        Err(_) => 0,
+    }
+}

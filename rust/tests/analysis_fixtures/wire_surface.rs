@@ -1,0 +1,20 @@
+//! Fixture: a marker-delimited wire surface for the
+//! `wire-fingerprint` self-tests — extraction, pin acceptance, drift
+//! detection, and version-mismatch detection.
+
+// === WIRE SURFACE (fingerprinted) ===
+
+/// Protocol version for this fixture surface.
+pub const PROTOCOL_VERSION: u32 = 7;
+
+pub enum Msg {
+    Ping { nonce: u64 },
+    Pong { nonce: u64 },
+}
+
+const TAG_PING: u8 = 1;
+const TAG_PONG: u8 = 2;
+
+// === END WIRE SURFACE ===
+
+pub fn after_the_surface() {}

@@ -1,0 +1,210 @@
+//! Tier-1 gate for the in-tree contract linter (DESIGN.md §10).
+//!
+//! Two halves:
+//!
+//! 1. **The gate** — `analysis::run` over this very repo must come
+//!    back clean with zero waivers, so plain `cargo test` fails the
+//!    moment a determinism, panic-freedom, registry, or wire-discipline
+//!    contract is broken (same pass as `anytime-sgd lint`).
+//! 2. **Self-tests** — every rule is proven still-alive against
+//!    known-bad samples under `rust/tests/analysis_fixtures/`
+//!    (never compiled; scanned as text), including one waived sample
+//!    exercising the waiver workflow end to end.
+
+use anytime_sgd::analysis::rules::RegistryCheck;
+use anytime_sgd::analysis::source::SourceFile;
+use anytime_sgd::analysis::{self, fingerprint, rules, waivers, PanicScope};
+
+fn repo_root() -> std::path::PathBuf {
+    analysis::find_repo_root().expect("locating the repo root from the test cwd")
+}
+
+// ---------------------------------------------------------------- gate
+
+#[test]
+fn tree_lints_clean() {
+    let out = analysis::run(&repo_root()).expect("lint pass over the repo");
+    assert!(
+        out.files_scanned > 50,
+        "suspiciously few files scanned ({}) — wrong root?",
+        out.files_scanned
+    );
+    let rendered: Vec<String> = out.findings.iter().map(|f| f.to_string()).collect();
+    assert!(
+        out.findings.is_empty(),
+        "contract violations (fix the site or waive it in {} with justification):\n{}",
+        analysis::WAIVER_FILE,
+        rendered.join("\n")
+    );
+}
+
+#[test]
+fn tree_ships_with_zero_waivers() {
+    // The issue's bar is zero waivers on hostile-panic specifically;
+    // the tree currently holds the stronger line — no waivers at all.
+    // If a justified waiver ever lands, tighten this back to the
+    // hostile-panic assertion instead of deleting it.
+    let out = analysis::run(&repo_root()).expect("lint pass over the repo");
+    let rendered: Vec<String> =
+        out.waived.iter().map(|(f, just)| format!("{f} — {just}")).collect();
+    assert!(out.waived.is_empty(), "unexpected waivers:\n{}", rendered.join("\n"));
+    assert!(
+        !out.waived.iter().any(|(f, _)| f.rule == "hostile-panic"),
+        "hostile-panic findings must be fixed, never waived"
+    );
+}
+
+#[test]
+fn committed_pin_matches_the_wire_surface() {
+    let root = repo_root();
+    let src = SourceFile::load(&root.join(analysis::WIRE_FILE), analysis::WIRE_FILE)
+        .expect("reading net/wire.rs");
+    let pin_text = std::fs::read_to_string(root.join(analysis::PIN_FILE))
+        .expect("rust/wire.fingerprint must be committed");
+    let found = rules::wire_fingerprint(&src, Some(&pin_text));
+    assert!(found.is_empty(), "{found:?}");
+}
+
+// ---------------------------------------------- rule self-tests (fixtures)
+
+#[test]
+fn det_time_fires_on_fixture_and_respects_allowlist() {
+    let text = include_str!("analysis_fixtures/bad_det_time.rs");
+    let bad = SourceFile::from_text("rust/src/protocols/fixture.rs", text);
+    let found = rules::det_time(&bad);
+    assert!(!found.is_empty(), "det-time must flag the fixture");
+    assert!(found.iter().all(|f| f.rule == "det-time"), "{found:?}");
+    // The same text under a real-time execution path is exempt.
+    let allowed = SourceFile::from_text("rust/src/sim/fixture.rs", text);
+    assert!(rules::det_time(&allowed).is_empty(), "allowlisted paths are exempt");
+}
+
+#[test]
+fn det_order_fires_on_the_old_engine_cache_shape() {
+    let text = include_str!("analysis_fixtures/bad_det_order.rs");
+    let bad = SourceFile::from_text("rust/src/runtime/engine.rs", text);
+    let found = rules::det_order(&bad);
+    // One finding per offending line: the `use` and the cache field.
+    assert_eq!(found.len(), 2, "{found:?}");
+}
+
+#[test]
+fn engine_cache_stays_order_stable() {
+    // Regression test for the fix that motivated det-order: the PJRT
+    // engine's executable cache was a HashMap (warm-up order followed
+    // the per-process hash seed); it is a BTreeMap now and this file
+    // must stay det-order-clean.
+    let root = repo_root();
+    let rel = "rust/src/runtime/engine.rs";
+    let src = SourceFile::load(&root.join(rel), rel).expect("reading engine.rs");
+    let found = rules::det_order(&src);
+    assert!(found.is_empty(), "{found:?}");
+}
+
+#[test]
+fn hostile_panic_fires_in_decode_scope_only() {
+    let text = include_str!("analysis_fixtures/bad_hostile_panic.rs");
+    let src = SourceFile::from_text("rust/src/compress/fixture.rs", text);
+    // decode body: two unchecked indexes, one `.unwrap()`, one `assert!`.
+    let decode_only = rules::hostile_panic(&src, PanicScope::Fns(&["decode"]));
+    assert_eq!(decode_only.len(), 4, "{decode_only:?}");
+    // Whole-file scope additionally sees the encode-side `.unwrap()`.
+    let whole = rules::hostile_panic(&src, PanicScope::WholeFile);
+    assert_eq!(whole.len(), 5, "{whole:?}");
+}
+
+#[test]
+fn waiver_workflow_accepts_the_waived_fixture() {
+    let text = include_str!("analysis_fixtures/waived_det_time.rs");
+    let src = SourceFile::from_text("rust/src/theory/waived_fixture.rs", text);
+    let findings = rules::det_time(&src);
+    assert!(!findings.is_empty(), "fixture must produce findings to waive");
+    let ws = waivers::parse(include_str!("analysis_fixtures/fixture_waivers.toml"))
+        .expect("fixture waiver file must parse");
+    let total = findings.len();
+    let (keep, waived, unused) = analysis::apply_waivers(findings, &ws);
+    assert!(keep.is_empty(), "the path waiver must cover every finding: {keep:?}");
+    assert_eq!(waived.len(), total);
+    assert!(unused.is_empty(), "the fixture waiver must not be reported stale");
+}
+
+#[test]
+fn waivers_demand_justification_and_known_rules() {
+    let no_just = "[[waiver]]\nrule = \"det-time\"\npath = \"rust/src/x.rs\"\n";
+    assert!(waivers::parse(no_just).is_err(), "waiver without justification must be rejected");
+    let bad_rule =
+        "[[waiver]]\nrule = \"no-such-rule\"\npath = \"rust/src/x.rs\"\njustification = \"x\"\n";
+    assert!(waivers::parse(bad_rule).is_err(), "unknown rule ids must be rejected");
+}
+
+#[test]
+fn registry_rule_fires_on_unwired_module_and_undocumented_name() {
+    let text = include_str!("analysis_fixtures/bad_registry_mod.rs");
+    let mod_src = SourceFile::from_text("rust/src/protocols/mod.rs", text);
+    let module_files =
+        vec!["anytime".to_string(), "newproto".to_string(), "sync".to_string()];
+    // `newproto.rs` exists on disk but REGISTRY never mentions it.
+    let found = rules::registry(&RegistryCheck {
+        dir: "rust/src/protocols",
+        module_files: &module_files,
+        mod_src: &mod_src,
+        registered: &["anytime", "sync"],
+        design_text: "the `anytime` and `sync` protocols",
+        layer: "protocol",
+    });
+    assert_eq!(found.len(), 1, "{found:?}");
+    assert!(
+        found.first().is_some_and(|f| f.msg.contains("newproto")),
+        "{found:?}"
+    );
+    // A registered name DESIGN.md never documents is its own finding,
+    // and word-boundary matching means `sync` inside `async` does not
+    // count as documentation.
+    let wired = vec!["anytime".to_string(), "sync".to_string()];
+    let found = rules::registry(&RegistryCheck {
+        dir: "rust/src/protocols",
+        module_files: &wired,
+        mod_src: &mod_src,
+        registered: &["anytime", "sync"],
+        design_text: "only the `anytime` and async protocols appear here",
+        layer: "protocol",
+    });
+    assert_eq!(found.len(), 1, "{found:?}");
+    assert!(found.first().is_some_and(|f| f.file == "DESIGN.md"), "{found:?}");
+}
+
+#[test]
+fn wire_fingerprint_detects_drift_and_accepts_the_pin() {
+    let text = include_str!("analysis_fixtures/wire_surface.rs");
+    let src = SourceFile::from_text("rust/src/net/wire.rs", text);
+    let surface = fingerprint::extract(&src).expect("fixture has both markers");
+    assert_eq!(surface.version, Some(7));
+
+    // Matching pin: clean.
+    let good = fingerprint::render_pin(7, surface.fingerprint);
+    assert!(rules::wire_fingerprint(&src, Some(&good)).is_empty());
+
+    // Surface drift without a re-pin: flagged, with the recipe.
+    let drifted = fingerprint::render_pin(7, surface.fingerprint ^ 1);
+    let found = rules::wire_fingerprint(&src, Some(&drifted));
+    assert_eq!(found.len(), 1, "{found:?}");
+    assert!(
+        found.first().is_some_and(|f| f.msg.contains("--write-fingerprint")),
+        "{found:?}"
+    );
+
+    // Version moved without a re-pin (or vice versa): flagged.
+    let stale = fingerprint::render_pin(6, surface.fingerprint);
+    assert_eq!(rules::wire_fingerprint(&src, Some(&stale)).len(), 1);
+
+    // Pin file missing entirely: flagged.
+    assert_eq!(rules::wire_fingerprint(&src, None).len(), 1);
+
+    // Doc-comment churn inside the region must not move the hash.
+    let noisy = text.replace(
+        "/// Protocol version for this fixture surface.",
+        "/// Completely different prose.",
+    );
+    let noisy_src = SourceFile::from_text("rust/src/net/wire.rs", &noisy);
+    assert!(rules::wire_fingerprint(&noisy_src, Some(&good)).is_empty());
+}
