@@ -1,0 +1,116 @@
+//! Observability-layer microbenchmarks (benchkit; `cargo bench --bench
+//! bench_obs`).
+//!
+//! Guards the three costs the obs contracts rest on: the disabled-path
+//! overhead (one relaxed atomic load per span site — the obs-off
+//! bit-exactness pin's perf half), the enabled span record, the wire-v4
+//! `Telemetry` frame codec the dist fleet ships every round, and the
+//! Prometheus `/metrics` render the live endpoint serves per scrape.
+//! `BENCHLINE` rows feed EXPERIMENTS.md §Perf.
+
+// Crate-posture lint gate (see lib.rs): correctness/suspicious/perf
+// lints stay load-bearing under CI's `-D warnings`; the style/
+// complexity groups are settled here rather than per-site.
+#![allow(clippy::style, clippy::complexity)]
+
+use anytime_sgd::benchkit::{black_box, Bench};
+use anytime_sgd::net::wire::{Msg, SpanRec, TelemetryMsg};
+use anytime_sgd::obs;
+
+/// A telemetry frame the size a busy worker ships per round: 64 spans
+/// with a couple of args each plus a typical metrics snapshot.
+fn sample_telemetry() -> TelemetryMsg {
+    TelemetryMsg {
+        worker: 3,
+        run_id: 9,
+        round: 41,
+        rtt_us: 180,
+        offset_us: -1_250,
+        dropped: 0,
+        spans: (0..64u64)
+            .map(|i| SpanRec {
+                name: "task".to_string(),
+                cat: "worker".to_string(),
+                ph: 0,
+                ts_us: 1_000 * i,
+                dur_us: 950,
+                tid: 1,
+                id: (41 << 16) | 3,
+                args: vec![("worker".to_string(), 3.0), ("round".to_string(), i as f64)],
+            })
+            .collect(),
+        metrics: vec![
+            ("worker.3.steps".to_string(), 63.0),
+            ("worker.3.busy_secs".to_string(), 0.063),
+            ("net.bytes_sent".to_string(), 250_000.0),
+        ],
+    }
+}
+
+fn main() {
+    let mut b = Bench::new();
+
+    // ---- span sites: the disabled path is the one every untraced run
+    // pays at every instrumented site --------------------------------
+    obs::disable();
+    b.run("obs/span_disabled", || {
+        let sp = obs::span::span("bench", "trainer");
+        black_box(sp.is_active())
+    });
+
+    obs::enable();
+    b.run("obs/span_enabled", || {
+        let sp = obs::span::span_with("bench", "trainer", &[("epoch", 1.0)]);
+        black_box(sp.is_active())
+    });
+    obs::disable();
+    obs::span::clear();
+
+    // ---- metrics registry: the counters the trainer bumps per epoch
+    // and the f64 gauge the eval loop sets ---------------------------
+    obs::enable();
+    b.run("obs/metrics_add", || {
+        obs::metrics::add("bench.counter", 1);
+    });
+    b.run("obs/metrics_fset", || {
+        obs::metrics::fset("bench.gauge", 0.125);
+    });
+    obs::disable();
+    obs::metrics::reset();
+
+    // ---- wire v4 telemetry codec: encode + decode of one round's
+    // frame, the per-round cost every traced dist worker adds --------
+    let frame = Msg::Telemetry(Box::new(sample_telemetry()));
+    let encoded = frame.encode();
+    b.run_with_throughput("obs/telemetry_encode", encoded.len() as f64, || {
+        black_box(frame.encode().len())
+    });
+    b.run_with_throughput("obs/telemetry_roundtrip", encoded.len() as f64, || {
+        black_box(Msg::decode(black_box(&encoded)).expect("valid frame"))
+    });
+
+    // ---- /metrics render: the cost of one Prometheus scrape over a
+    // populated registry + fleet store -------------------------------
+    obs::enable();
+    for v in 0..4u32 {
+        obs::metrics::add(&format!("worker.{v}.steps"), 63);
+        obs::metrics::fadd(&format!("worker.{v}.busy_secs"), 0.063);
+        obs::telemetry::record_link(v, 150 + v as u64, 10);
+        obs::telemetry::record_worker(
+            v,
+            41,
+            0,
+            &[(format!("worker.{v}.steps"), 63.0), (format!("worker.{v}.busy_secs"), 0.063)],
+        );
+    }
+    obs::metrics::add("net.bytes_sent", 1_000_000);
+    obs::metrics::fset("trainer.err", 0.125);
+    obs::metrics::observe("dispatch.q", 63.0);
+    obs::disable();
+    b.run("obs/prometheus_render", || black_box(obs::prometheus::render().len()));
+    obs::metrics::reset();
+    obs::telemetry::clear();
+
+    // CI sets BENCH_JSON to scrape these rows into BENCH_obs.json.
+    b.write_json_env();
+}

@@ -398,6 +398,12 @@ impl Trainer {
                 if let Some(log) = self.events.as_mut() {
                     let _ = log.eval(e + 1, ev.norm_err, ev.cost, self.cfg.objective.name());
                 }
+                if crate::obs::enabled() {
+                    // Latest normalized error as a gauge: the live
+                    // surfaces (`--watch`, `/metrics`) read it between
+                    // evals.
+                    crate::obs::metrics::fset("trainer.err", ev.norm_err);
+                }
                 trace.points.push(TracePoint {
                     epoch: e + 1,
                     time: self.clock.now(),

@@ -137,6 +137,14 @@ pub struct NetEpochStats {
     /// (real `T_c` deadline misses). Counted once per miss, at expiry —
     /// a late arrival of the same report is not re-counted.
     pub dropped_reports: usize,
+    /// Fleet link RTT from the continuous heartbeat-echo estimator
+    /// (min / mean / max over live links' min-filtered samples, REAL
+    /// seconds); `None` until any link has an estimate. Unlike
+    /// `rtt_secs` these do not require a report to arrive — a link
+    /// that only ever heartbeats still shows up here.
+    pub hb_rtt_min_secs: Option<f64>,
+    pub hb_rtt_mean_secs: Option<f64>,
+    pub hb_rtt_max_secs: Option<f64>,
 }
 
 /// One runtime the crate ships (for `anytime-sgd list`).

@@ -157,12 +157,33 @@ fn cmd_train(args: &[String]) -> Result<()> {
             None,
             "print the run's time ledger (per-worker utilization, straggler \
              attribution, compute/comm/gather-stall) and write report.json to --out",
+        )
+        .flag(
+            "watch",
+            FlagKind::Bool,
+            None,
+            "live status ticker: one [watch] line per second on stderr (epoch, error, \
+             utilization, bytes, fleet RTT) + status.jsonl under --out",
+        )
+        .flag(
+            "metrics-port",
+            FlagKind::Int,
+            None,
+            "serve Prometheus text exposition at http://127.0.0.1:PORT/metrics while \
+             the run is in flight (0 picks an ephemeral port, logged at startup)",
         );
     let m = cmd.parse(args).map_err(|e| anyhow::anyhow!("{e}"))?;
     // Flip collection on before the trainer exists so dist
     // admission/handshake spans are captured too. `--report` needs no
-    // instrumentation but enables collection for symmetry of artifacts.
-    if m.is_set("trace") || m.is_set("metrics") || m.bool_of("report") {
+    // instrumentation but enables collection for symmetry of artifacts;
+    // the live surfaces (--watch, --metrics-port) read the registry, so
+    // they imply collection too.
+    if m.is_set("trace")
+        || m.is_set("metrics")
+        || m.bool_of("report")
+        || m.bool_of("watch")
+        || m.is_set("metrics-port")
+    {
         anytime_sgd::obs::enable();
     }
 
@@ -234,6 +255,36 @@ fn cmd_train(args: &[String]) -> Result<()> {
         cfg.epochs
     );
 
+    let out_dir = std::path::PathBuf::from(m.str_of("out"));
+    // Live surfaces come up before the trainer so the first epoch is
+    // already visible; both are read-only over the obs registry and a
+    // failure to bind is a warning, never a reason to abort the run.
+    let metrics_server = if m.is_set("metrics-port") {
+        let p = m.usize_of("metrics-port");
+        let port =
+            u16::try_from(p).map_err(|_| anyhow::anyhow!("--metrics-port: port {p} out of range"))?;
+        match anytime_sgd::obs::prometheus::MetricsServer::serve(port) {
+            Ok(s) => {
+                log_info!("cli", "metrics endpoint: http://127.0.0.1:{}/metrics", s.port());
+                Some(s)
+            }
+            Err(e) => {
+                log_warn!("cli", "--metrics-port {port}: bind failed ({e}); continuing without /metrics");
+                None
+            }
+        }
+    } else {
+        None
+    };
+    let watch = m
+        .bool_of("watch")
+        .then(|| {
+            anytime_sgd::obs::watch::start(
+                Some(out_dir.join("status.jsonl")),
+                std::time::Duration::from_secs(1),
+            )
+        });
+
     let t0 = std::time::Instant::now();
     let mut tr = Trainer::new(cfg)?;
     if let Some(p) = m.get("events") {
@@ -253,6 +304,11 @@ fn cmd_train(args: &[String]) -> Result<()> {
     // processes, flushing their final frame-read spans into the
     // collector.
     drop(tr);
+    // Final watch tick happens on stop, after the dist Drop above has
+    // ingested the fleet's last telemetry frames.
+    if let Some(w) = watch {
+        w.stop();
+    }
 
     let mut fig = anytime_sgd::metrics::Figure::new(res.trace.label.clone(), "time");
     println!("{}", {
@@ -260,7 +316,6 @@ fn cmd_train(args: &[String]) -> Result<()> {
         f.traces.push(res.trace.clone());
         f.render_table()
     });
-    let out_dir = std::path::PathBuf::from(m.str_of("out"));
     if m.bool_of("report") {
         let report = res.report();
         print!("{}", report.render_table());
@@ -277,6 +332,11 @@ fn cmd_train(args: &[String]) -> Result<()> {
     if let Some(p) = m.get("metrics") {
         anytime_sgd::obs::metrics::write_json(Path::new(p))?;
         log_info!("cli", "metrics snapshot written to {p}");
+    }
+    // Last out: scrapers get the complete end-of-run snapshot until the
+    // artifacts above are on disk.
+    if let Some(s) = metrics_server {
+        s.shutdown();
     }
     Ok(())
 }

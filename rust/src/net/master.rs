@@ -19,7 +19,9 @@
 //! straggler for the rest of the run (the paper's persistent-straggler
 //! regime, realized by an actual crash).
 
-use super::wire::{read_frame, write_frame, Assign, Msg, ReportMsg, TaskMsg, PROTOCOL_VERSION};
+use super::wire::{
+    read_frame, write_frame, Assign, Msg, ReportMsg, TaskMsg, TelemetryMsg, PROTOCOL_VERSION,
+};
 use super::worker::WorkerOpts;
 use crate::backend::Consts;
 use crate::compress::{CompressorSpec, StreamDecoder, StreamEncoder};
@@ -96,6 +98,18 @@ pub struct DistRuntime {
     /// generation; epochs alone would be ambiguous for protocols that
     /// dispatch several rounds per epoch).
     round: u64,
+    /// Correlation id stamped on every task and telemetry frame
+    /// (deterministic: the run seed, never a clock).
+    run_id: u64,
+    /// Whether the fleet was admitted with tracing on (`obs::enabled()`
+    /// at construction): workers collect + ship spans, and shutdown
+    /// waits a beat for final `Telemetry` frames.
+    trace: bool,
+    /// Per-link min-filtered heartbeat RTT estimate in µs (0 = none
+    /// yet) and the matching worker→master clock offset, fed
+    /// continuously from heartbeat piggybacks and `Telemetry` frames.
+    hb_rtt_us: Vec<u64>,
+    hb_offset_us: Vec<i64>,
     children: Vec<Child>,
     readers: Vec<JoinHandle<()>>,
 }
@@ -181,6 +195,10 @@ impl DistRuntime {
                     ..NetEpochStats::default()
                 },
                 round: 0,
+                run_id: seed,
+                trace: crate::obs::enabled(),
+                hb_rtt_us: vec![0; n],
+                hb_offset_us: vec![0; n],
                 children,
                 readers,
             }),
@@ -326,6 +344,8 @@ impl DistRuntime {
             a: flat,
             y: shard.y.clone(),
             global_rows: shard.global_rows.clone(),
+            run_id: seed,
+            trace: crate::obs::enabled(),
             compressor,
         }));
         let mut writer = stream;
@@ -347,13 +367,100 @@ impl DistRuntime {
                 // `decode_report`), but its values go nowhere.
                 Event::Frame(v, msg, bytes) => {
                     self.account_recv(bytes);
-                    if let Msg::Report(r) = msg {
-                        let _ = self.decode_report(v, &r);
+                    match msg {
+                        Msg::Report(r) => {
+                            let _ = self.decode_report(v, &r);
+                        }
+                        other => self.handle_aux(v, &other),
                     }
                 }
                 Event::Disconnected(v) => self.mark_dead(v),
             }
         }
+    }
+
+    /// Handle the non-report traffic a worker sends between gathers:
+    /// heartbeats (answered with a [`Msg::HeartbeatEcho`] carrying the
+    /// master clock, and mined for the piggybacked link estimate) and
+    /// [`Msg::Telemetry`] frames (spans + metrics for the merged
+    /// trace). Called from both the idle drain and the gather loop so
+    /// the link clock is fed continuously, not only when a report
+    /// happens to arrive.
+    fn handle_aux(&mut self, v: usize, msg: &Msg) {
+        match msg {
+            Msg::Heartbeat { nonce, rtt_us, offset_us } => {
+                if !self.alive[v] {
+                    return;
+                }
+                let echo = Msg::HeartbeatEcho {
+                    nonce: *nonce,
+                    master_us: crate::obs::span::now_us() as u64,
+                };
+                match write_frame(&mut self.conns[v].writer, &echo) {
+                    Ok(bytes) => {
+                        self.stats.bytes_sent += bytes;
+                        crate::obs::metrics::add("net.bytes_sent", bytes);
+                    }
+                    Err(_) => self.mark_dead(v),
+                }
+                self.record_link(v, *rtt_us, *offset_us);
+            }
+            Msg::Telemetry(t) => self.ingest_telemetry(v, t),
+            _ => {}
+        }
+    }
+
+    /// Fold one piggybacked link estimate in (min-RTT filter: the
+    /// least-queued sample carries the best offset).
+    fn record_link(&mut self, v: usize, rtt_us: u64, offset_us: i64) {
+        if rtt_us == 0 {
+            return; // worker has no estimate yet
+        }
+        if self.hb_rtt_us[v] == 0 || rtt_us <= self.hb_rtt_us[v] {
+            self.hb_rtt_us[v] = rtt_us;
+            self.hb_offset_us[v] = offset_us;
+        }
+        if crate::obs::enabled() {
+            crate::obs::metrics::fset(&format!("worker.{v}.rtt_secs"), rtt_us as f64 * 1e-6);
+            crate::obs::telemetry::record_link(v as u32, rtt_us, offset_us);
+        }
+    }
+
+    /// Absorb one worker `Telemetry` frame: rebase its span timestamps
+    /// onto the master timeline via the link-clock offset, merge them
+    /// into the external-process trace store (pid = worker index + 2;
+    /// the master is pid 1), and stash the metrics snapshot in the
+    /// fleet store for `/metrics` and `--watch`.
+    fn ingest_telemetry(&mut self, v: usize, t: &TelemetryMsg) {
+        self.record_link(v, t.rtt_us, t.offset_us);
+        if !crate::obs::enabled() {
+            return;
+        }
+        // Rebase on the best offset seen for this link; with no
+        // estimate yet the raw worker timestamps are the only timeline
+        // we have (loopback clocks share an epoch closely enough).
+        let offset = self.hb_offset_us[v];
+        let have_clock = self.hb_rtt_us[v] > 0;
+        let events: Vec<crate::obs::span::ExternalEvent> = t
+            .spans
+            .iter()
+            .map(|s| crate::obs::span::ExternalEvent {
+                name: s.name.clone(),
+                cat: s.cat.clone(),
+                ph: s.ph,
+                ts_us: if have_clock {
+                    (s.ts_us as i64).saturating_add(offset).max(0) as f64
+                } else {
+                    s.ts_us as f64
+                },
+                dur_us: s.dur_us as f64,
+                tid: s.tid,
+                id: s.id,
+                args: s.args.clone(),
+            })
+            .collect();
+        crate::obs::span::merge_external(v as u32 + 2, &format!("worker {v}"), t.dropped, events);
+        crate::obs::telemetry::record_worker(v as u32, t.round, t.dropped, &t.metrics);
     }
 
     /// Decode one report's compressed payloads. Every report received
@@ -469,8 +576,15 @@ impl WorkerRuntime for DistRuntime {
                 WorkerEpochRate::StepSecs(s) => s,
             };
             let (target, busy) = plan(&self.delay, v, epoch, task.work, rate);
+            // Correlation id: unique per (round, worker), echoed on the
+            // worker's compute span and closed by the gather's flow end
+            // — what stitches dispatch→compute→gather across processes.
+            let span_id = (round << 16) | v as u64;
             let msg = Msg::Task(Box::new(TaskMsg {
                 round,
+                run_id: self.run_id,
+                epoch: epoch as u64,
+                span_id,
                 x0: self.streams[v].enc_task.encode(&task.x0),
                 t0: task.t0,
                 stream_label: task.stream.0.to_string(),
@@ -489,6 +603,12 @@ impl WorkerRuntime for DistRuntime {
                 Ok(bytes) => {
                     self.stats.bytes_sent += bytes;
                     crate::obs::metrics::add("net.bytes_sent", bytes);
+                    crate::obs::span::flow_event(
+                        "dispatch",
+                        "net",
+                        crate::obs::span::FlowPh::Start,
+                        span_id,
+                    );
                     sent_at[v] = Some(Instant::now());
                     pending[v] = true;
                     expected += 1;
@@ -527,6 +647,12 @@ impl WorkerRuntime for DistRuntime {
                         expected -= 1;
                         self.stats.rtt_secs[v] =
                             sent_at[v].map(|t0| t0.elapsed().as_secs_f64());
+                        crate::obs::span::flow_event(
+                            "dispatch",
+                            "net",
+                            crate::obs::span::FlowPh::End,
+                            (round << 16) | v as u64,
+                        );
                         // An undecodable payload leaves None: the worker
                         // was just marked dead, same as a disconnect.
                         out[v] = decoded;
@@ -535,7 +661,10 @@ impl WorkerRuntime for DistRuntime {
                     // already counted as dropped when its own round's
                     // gather expired.
                 }
-                Ok(Event::Frame(_, _, bytes)) => self.account_recv(bytes),
+                Ok(Event::Frame(v, msg, bytes)) => {
+                    self.account_recv(bytes);
+                    self.handle_aux(v, &msg);
+                }
                 Ok(Event::Disconnected(v)) => {
                     self.mark_dead(v);
                     if pending[v] {
@@ -577,10 +706,20 @@ impl WorkerRuntime for DistRuntime {
 
     fn net_stats(&mut self) -> Option<NetEpochStats> {
         let n = self.conns.len();
-        let drained = std::mem::replace(
+        let mut drained = std::mem::replace(
             &mut self.stats,
             NetEpochStats { rtt_secs: vec![None; n], ..NetEpochStats::default() },
         );
+        // Fleet link RTT from the continuous heartbeat estimator —
+        // present for every link that has ever echoed, reports or not.
+        let live: Vec<f64> =
+            self.hb_rtt_us.iter().filter(|&&r| r > 0).map(|&r| r as f64 * 1e-6).collect();
+        if !live.is_empty() {
+            drained.hb_rtt_min_secs = Some(live.iter().cloned().fold(f64::INFINITY, f64::min));
+            drained.hb_rtt_mean_secs = Some(live.iter().sum::<f64>() / live.len() as f64);
+            drained.hb_rtt_max_secs =
+                Some(live.iter().cloned().fold(f64::NEG_INFINITY, f64::max));
+        }
         Some(drained)
     }
 }
@@ -591,10 +730,38 @@ impl Drop for DistRuntime {
             if self.alive[v] {
                 let _ = write_frame(&mut self.conns[v].writer, &Msg::Shutdown);
             }
-            let _ = self.conns[v].writer.shutdown(SockShutdown::Both);
+        }
+        // With tracing on, the agent answers Shutdown with one final
+        // Telemetry frame (its post-gather spans + metrics) before
+        // closing. Give each live link a short grace window to flush
+        // it — waiting for the EOFs, not a fixed sleep — so the merged
+        // trace includes the fleet's last epoch. Without tracing,
+        // workers just close and the Disconnected events end this
+        // loop almost immediately.
+        if self.trace {
+            let mut open: Vec<bool> = self.alive.clone();
+            let deadline = Instant::now() + Duration::from_secs(2);
+            while open.iter().any(|&o| o) && Instant::now() < deadline {
+                match self.events.recv_timeout(Duration::from_millis(50)) {
+                    Ok(Event::Frame(v, Msg::Telemetry(t), _)) => self.ingest_telemetry(v, &t),
+                    Ok(Event::Frame(..)) => {}
+                    Ok(Event::Disconnected(v)) => open[v] = false,
+                    Err(RecvTimeoutError::Timeout) => {}
+                    Err(RecvTimeoutError::Disconnected) => break,
+                }
+            }
+        }
+        for conn in &self.conns {
+            let _ = conn.writer.shutdown(SockShutdown::Both);
         }
         for h in self.readers.drain(..) {
             let _ = h.join();
+        }
+        // Final frames that raced the reader-thread joins.
+        while let Ok(ev) = self.events.try_recv() {
+            if let Event::Frame(v, Msg::Telemetry(t), _) = ev {
+                self.ingest_telemetry(v, &t);
+            }
         }
         // Children exit on Shutdown/EOF; give them a moment, then stop
         // waiting politely.

@@ -8,8 +8,13 @@
 //! sockets, real serialization cost, real worker churn:
 //!
 //! * [`wire`] — length-prefixed binary frames with a versioned
-//!   handshake; `Hello`/`Assign`/`Task`/`Report`/`Heartbeat`/`Shutdown`
-//!   message enums over the [`crate::ser::bytes`] codec.
+//!   handshake; `Hello`/`Assign`/`Task`/`Report`/`Heartbeat`/
+//!   `HeartbeatEcho`/`Telemetry`/`Shutdown` message enums over the
+//!   [`crate::ser::bytes`] codec. Since v4 the wire also carries the
+//!   observability plane: tasks are stamped with a correlation id,
+//!   heartbeats are echoed with the master clock (per-link RTT/offset
+//!   estimation), and workers ship span buffers + metrics snapshots
+//!   back in `Telemetry` frames for the master's merged trace.
 //! * [`worker`] — the worker agent loop (`anytime-sgd worker --connect
 //!   HOST:PORT`): register with capabilities, receive the shard and run
 //!   constants once, then serve `Task`s by running the *same*

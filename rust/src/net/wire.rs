@@ -16,7 +16,9 @@
 //!   |  Hello { version, caps }  ->   |   (bad Hello / version skew:
 //!   |  <- Assign { id, shard, .. }   |    rejected, slot stays open)
 //!   |  <- Task ...    Report ->      |   (repeated, one per dispatch)
+//!   |  Telemetry ->                  |   (spans + metrics, when traced)
 //!   |  Heartbeat ->                  |   (periodic, from a side thread)
+//!   |  <- HeartbeatEcho              |   (nonce + master clock: RTT/offset)
 //!   |  <- Shutdown                   |
 //! ```
 //!
@@ -42,7 +44,13 @@ use std::io::{Read, Write};
 /// v3: `Assign` negotiates a compressor, and `Task`/`Report` iterate
 /// payloads travel as opaque compressed byte vectors whose layout is
 /// owned by [`crate::compress`].
-pub const PROTOCOL_VERSION: u32 = 3;
+/// v4: the distributed observability plane — `Assign` carries the run
+/// id and a trace flag, `Task` carries a correlation id (run id, epoch,
+/// dispatch span id), `Heartbeat` piggybacks the worker's current link
+/// RTT/offset estimate and is answered by `HeartbeatEcho` (nonce +
+/// master clock), and the worker→master `Telemetry` frame ships span
+/// buffers + metrics snapshots for the master-side trace merge.
+pub const PROTOCOL_VERSION: u32 = 4;
 
 /// Hard cap on one frame's payload (1 GiB) — large enough for a
 /// paper-scale shard in `Assign`, small enough that a corrupt length
@@ -77,6 +85,12 @@ pub struct Assign {
     pub y: Vec<f32>,
     /// Global row ids (provenance; length `rows`).
     pub global_rows: Vec<u32>,
+    /// Run correlation id: stamps every span/telemetry record of this
+    /// run so fleet-wide traces from different runs never interleave.
+    pub run_id: u64,
+    /// Master-side tracing is on: the worker enables its own collector
+    /// and ships `Telemetry` frames at round boundaries and shutdown.
+    pub trace: bool,
     /// The negotiated compressor both ends apply to `Task`/`Report`
     /// iterate payloads (wire form: a kind byte).
     pub compressor: CompressorSpec,
@@ -92,6 +106,16 @@ pub struct TaskMsg {
     /// (generalized, async) run several dispatch rounds per epoch and a
     /// late round-1 reply must never be mistaken for a round-2 one.
     pub round: u64,
+    /// Correlation id: the run this task belongs to (echo of
+    /// `Assign.run_id` — stamps the task's spans on both ends).
+    pub run_id: u64,
+    /// Correlation id: the trainer epoch this dispatch round serves
+    /// (several rounds per epoch for multi-round protocols).
+    pub epoch: u64,
+    /// Correlation id: the master's dispatch span id for this
+    /// (round, worker) — the flow-event id linking master `dispatch` →
+    /// worker `compute` → master `gather` in the merged trace.
+    pub span_id: u64,
     /// Start vector of the local SGD chain, encoded by the negotiated
     /// compressor's stream encoder (empty when the round is idle).
     pub x0: Vec<u8>,
@@ -127,6 +151,54 @@ pub struct ReportMsg {
     pub x_bar: Vec<u8>,
 }
 
+/// One trace event inside a [`TelemetryMsg`]: a worker-side span,
+/// instant, or flow marker, timestamped in the *worker's* µs timeline
+/// (the master rebases via the telemetry frame's clock offset).
+#[derive(Clone, Debug, PartialEq)]
+pub struct SpanRec {
+    pub name: String,
+    pub cat: String,
+    /// Chrome phase: 0 = complete (`X`), 1 = instant (`i`),
+    /// 2 = flow start (`s`), 3 = flow step (`t`), 4 = flow end (`f`).
+    pub ph: u8,
+    /// Start, µs since the worker's trace origin.
+    pub ts_us: u64,
+    /// Duration in µs (complete events; 0 otherwise).
+    pub dur_us: u64,
+    /// Worker-local thread id.
+    pub tid: u64,
+    /// Flow-event correlation id (0 for non-flow events).
+    pub id: u64,
+    /// Numeric span args (name, value) — capped at [`MAX_SPAN_ARGS`].
+    pub args: Vec<(String, f64)>,
+}
+
+/// Cap on one [`SpanRec`]'s arg list — our spans carry ≤ 3 args, so a
+/// hostile count above this is rejected rather than allocated.
+pub const MAX_SPAN_ARGS: u32 = 32;
+
+/// Worker → master observability payload: the worker's drained span
+/// buffer, its metrics snapshot, and its current link-clock estimate —
+/// shipped at round boundaries and on shutdown when the run is traced.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TelemetryMsg {
+    pub worker: u32,
+    /// Echo of `Assign.run_id`.
+    pub run_id: u64,
+    /// Last completed dispatch round (0 before any task).
+    pub round: u64,
+    /// Current link round-trip estimate, µs (0 = no estimate yet).
+    pub rtt_us: u64,
+    /// Clock offset estimate: master_us ≈ worker_us + offset_us
+    /// (meaningful only when `rtt_us > 0`).
+    pub offset_us: i64,
+    /// Span-buffer overflow count on the worker since the last frame.
+    pub dropped: u64,
+    pub spans: Vec<SpanRec>,
+    /// Flattened metrics snapshot (name, value).
+    pub metrics: Vec<(String, f64)>,
+}
+
 /// Every message the protocol speaks.
 #[derive(Clone, Debug, PartialEq)]
 pub enum Msg {
@@ -138,8 +210,17 @@ pub enum Msg {
     Task(Box<TaskMsg>),
     /// Worker → master: task result.
     Report(Box<ReportMsg>),
-    /// Worker → master: liveness beacon (periodic side-thread send).
-    Heartbeat { nonce: u64 },
+    /// Worker → master: liveness beacon (periodic side-thread send),
+    /// piggybacking the worker's current RTT/offset estimate so the
+    /// master's per-link RTT stats update continuously (`rtt_us` 0 =
+    /// no estimate yet).
+    Heartbeat { nonce: u64, rtt_us: u64, offset_us: i64 },
+    /// Master → worker: heartbeat reply — the echoed nonce plus the
+    /// master's µs clock at receipt, the sample pair the worker's
+    /// NTP-style RTT/offset estimator feeds on.
+    HeartbeatEcho { nonce: u64, master_us: u64 },
+    /// Worker → master: span buffer + metrics snapshot (traced runs).
+    Telemetry(Box<TelemetryMsg>),
     /// Master → worker: clean exit.
     Shutdown,
 }
@@ -150,6 +231,8 @@ const TAG_TASK: u8 = 3;
 const TAG_REPORT: u8 = 4;
 const TAG_HEARTBEAT: u8 = 5;
 const TAG_SHUTDOWN: u8 = 6;
+const TAG_HEARTBEAT_ECHO: u8 = 7;
+const TAG_TELEMETRY: u8 = 8;
 
 // === END WIRE SURFACE ===
 
@@ -225,11 +308,16 @@ impl Msg {
                 w.put_f32s(&a.a);
                 w.put_f32s(&a.y);
                 w.put_u32s(&a.global_rows);
+                w.put_u64(a.run_id);
+                w.put_u8(a.trace as u8);
                 w.put_u8(a.compressor.wire_kind());
             }
             Msg::Task(t) => {
                 w.put_u8(TAG_TASK);
                 w.put_u64(t.round);
+                w.put_u64(t.run_id);
+                w.put_u64(t.epoch);
+                w.put_u64(t.span_id);
                 w.put_bytes(&t.x0);
                 w.put_f32(t.t0);
                 w.put_str(&t.stream_label);
@@ -248,9 +336,45 @@ impl Msg {
                 w.put_bytes(&r.x_k);
                 w.put_bytes(&r.x_bar);
             }
-            Msg::Heartbeat { nonce } => {
+            Msg::Heartbeat { nonce, rtt_us, offset_us } => {
                 w.put_u8(TAG_HEARTBEAT);
                 w.put_u64(*nonce);
+                w.put_u64(*rtt_us);
+                w.put_u64(*offset_us as u64);
+            }
+            Msg::HeartbeatEcho { nonce, master_us } => {
+                w.put_u8(TAG_HEARTBEAT_ECHO);
+                w.put_u64(*nonce);
+                w.put_u64(*master_us);
+            }
+            Msg::Telemetry(t) => {
+                w.put_u8(TAG_TELEMETRY);
+                w.put_u32(t.worker);
+                w.put_u64(t.run_id);
+                w.put_u64(t.round);
+                w.put_u64(t.rtt_us);
+                w.put_u64(t.offset_us as u64);
+                w.put_u64(t.dropped);
+                w.put_u32(t.spans.len() as u32);
+                for s in &t.spans {
+                    w.put_str(&s.name);
+                    w.put_str(&s.cat);
+                    w.put_u8(s.ph);
+                    w.put_u64(s.ts_us);
+                    w.put_u64(s.dur_us);
+                    w.put_u64(s.tid);
+                    w.put_u64(s.id);
+                    w.put_u32(s.args.len() as u32);
+                    for (k, v) in &s.args {
+                        w.put_str(k);
+                        w.put_f64(*v);
+                    }
+                }
+                w.put_u32(t.metrics.len() as u32);
+                for (k, v) in &t.metrics {
+                    w.put_str(k);
+                    w.put_f64(*v);
+                }
             }
             Msg::Shutdown => {
                 w.put_u8(TAG_SHUTDOWN);
@@ -292,6 +416,12 @@ impl Msg {
                 let a = r.get_f32s()?;
                 let y = r.get_f32s()?;
                 let global_rows = r.get_u32s()?;
+                let run_id = r.get_u64()?;
+                let trace = match r.get_u8()? {
+                    0 => false,
+                    1 => true,
+                    _ => return Err(WireError::BadValue("trace flag")),
+                };
                 let compressor = CompressorSpec::from_wire_kind(r.get_u8()?)
                     .ok_or(WireError::BadValue("compressor"))?;
                 if dim == 0 || a.len() != y.len() * dim as usize || y.len() != global_rows.len() {
@@ -312,11 +442,16 @@ impl Msg {
                     a,
                     y,
                     global_rows,
+                    run_id,
+                    trace,
                     compressor,
                 }))
             }
             TAG_TASK => Msg::Task(Box::new(TaskMsg {
                 round: r.get_u64()?,
+                run_id: r.get_u64()?,
+                epoch: r.get_u64()?,
+                span_id: r.get_u64()?,
                 x0: r.get_bytes()?,
                 t0: r.get_f32()?,
                 stream_label: r.get_str()?,
@@ -334,7 +469,71 @@ impl Msg {
                 x_k: r.get_bytes()?,
                 x_bar: r.get_bytes()?,
             })),
-            TAG_HEARTBEAT => Msg::Heartbeat { nonce: r.get_u64()? },
+            TAG_HEARTBEAT => Msg::Heartbeat {
+                nonce: r.get_u64()?,
+                rtt_us: r.get_u64()?,
+                offset_us: r.get_u64()? as i64,
+            },
+            TAG_HEARTBEAT_ECHO => {
+                Msg::HeartbeatEcho { nonce: r.get_u64()?, master_us: r.get_u64()? }
+            }
+            TAG_TELEMETRY => {
+                let worker = r.get_u32()?;
+                let run_id = r.get_u64()?;
+                let round = r.get_u64()?;
+                let rtt_us = r.get_u64()?;
+                let offset_us = r.get_u64()? as i64;
+                let dropped = r.get_u64()?;
+                let n_spans = r.get_u32()?;
+                // A span costs ≥ 45 encoded bytes (two empty strings,
+                // the fixed fields, an empty arg list) — a count the
+                // remaining payload cannot possibly hold is rejected
+                // before it sizes an allocation.
+                if n_spans as u64 * 45 > r.remaining() as u64 {
+                    return Err(WireError::BadValue("telemetry span count"));
+                }
+                let mut spans = Vec::with_capacity(n_spans as usize);
+                for _ in 0..n_spans {
+                    let name = r.get_str()?;
+                    let cat = r.get_str()?;
+                    let ph = r.get_u8()?;
+                    if ph > 4 {
+                        return Err(WireError::BadValue("telemetry span phase"));
+                    }
+                    let ts_us = r.get_u64()?;
+                    let dur_us = r.get_u64()?;
+                    let tid = r.get_u64()?;
+                    let id = r.get_u64()?;
+                    let n_args = r.get_u32()?;
+                    if n_args > MAX_SPAN_ARGS {
+                        return Err(WireError::BadValue("telemetry span args"));
+                    }
+                    let mut args = Vec::with_capacity(n_args as usize);
+                    for _ in 0..n_args {
+                        args.push((r.get_str()?, r.get_f64()?));
+                    }
+                    spans.push(SpanRec { name, cat, ph, ts_us, dur_us, tid, id, args });
+                }
+                let n_metrics = r.get_u32()?;
+                // Same guard: a metric entry costs ≥ 12 encoded bytes.
+                if n_metrics as u64 * 12 > r.remaining() as u64 {
+                    return Err(WireError::BadValue("telemetry metric count"));
+                }
+                let mut metrics = Vec::with_capacity(n_metrics as usize);
+                for _ in 0..n_metrics {
+                    metrics.push((r.get_str()?, r.get_f64()?));
+                }
+                Msg::Telemetry(Box::new(TelemetryMsg {
+                    worker,
+                    run_id,
+                    round,
+                    rtt_us,
+                    offset_us,
+                    dropped,
+                    spans,
+                    metrics,
+                }))
+            }
             TAG_SHUTDOWN => Msg::Shutdown,
             tag => return Err(WireError::BadTag(tag)),
         };
@@ -409,8 +608,21 @@ mod tests {
         (0..n).map(|_| rng.next_u64() as u8).collect()
     }
 
+    fn fuzz_span(rng: &mut Xoshiro256pp) -> SpanRec {
+        SpanRec {
+            name: ["task", "compute", "", "η-greek"][rng.index(4)].to_string(),
+            cat: ["worker", "net", ""][rng.index(3)].to_string(),
+            ph: rng.index(5) as u8,
+            ts_us: rng.next_u64() >> rng.index(40),
+            dur_us: rng.next_u64() >> rng.index(40),
+            tid: rng.next_u64(),
+            id: rng.next_u64(),
+            args: (0..rng.index(4)).map(|_| ("q".to_string(), fuzz_f64(rng))).collect(),
+        }
+    }
+
     fn fuzz_msg(rng: &mut Xoshiro256pp) -> Msg {
-        match rng.index(6) {
+        match rng.index(8) {
             0 => Msg::Hello {
                 version: rng.next_u64() as u32,
                 capabilities: format!("native;cores={}", rng.index(128)),
@@ -434,11 +646,16 @@ mod tests {
                     a: (0..rows * dim as usize).map(|_| fuzz_f32(rng)).collect(),
                     y: (0..rows).map(|_| fuzz_f32(rng)).collect(),
                     global_rows: (0..rows as u32).collect(),
+                    run_id: rng.next_u64(),
+                    trace: rng.index(2) == 1,
                     compressor: CompressorSpec::from_wire_kind(rng.index(5) as u8).unwrap(),
                 }))
             }
             2 => Msg::Task(Box::new(TaskMsg {
                 round: rng.next_u64(),
+                run_id: rng.next_u64(),
+                epoch: rng.next_u64(),
+                span_id: rng.next_u64(),
                 x0: fuzz_bytes(rng, 128),
                 t0: fuzz_f32(rng),
                 stream_label: ["minibatch", "mb", "", "η-greek"][rng.index(4)].to_string(),
@@ -456,7 +673,25 @@ mod tests {
                 x_k: fuzz_bytes(rng, 128),
                 x_bar: fuzz_bytes(rng, 128),
             })),
-            4 => Msg::Heartbeat { nonce: rng.next_u64() },
+            4 => Msg::Heartbeat {
+                nonce: rng.next_u64(),
+                rtt_us: rng.next_u64() >> rng.index(40),
+                offset_us: rng.next_u64() as i64,
+            },
+            5 => Msg::HeartbeatEcho { nonce: rng.next_u64(), master_us: rng.next_u64() },
+            6 => Msg::Telemetry(Box::new(TelemetryMsg {
+                worker: rng.next_u64() as u32,
+                run_id: rng.next_u64(),
+                round: rng.next_u64(),
+                rtt_us: rng.next_u64() >> rng.index(40),
+                offset_us: rng.next_u64() as i64,
+                dropped: rng.next_u64() >> rng.index(40),
+                spans: (0..rng.index(5)).map(|_| fuzz_span(rng)).collect(),
+                metrics: (0..rng.index(4))
+                    .map(|_| (["net.bytes", "worker.0.steps", ""][rng.index(3)].to_string(),
+                              fuzz_f64(rng)))
+                    .collect(),
+            })),
             _ => Msg::Shutdown,
         }
     }
@@ -470,8 +705,8 @@ mod tests {
     #[test]
     fn every_variant_round_trips_under_fuzz() {
         let mut rng = Xoshiro256pp::seed_from_u64(0xD157);
-        let mut seen = [false; 6];
-        for _ in 0..500 {
+        let mut seen = [false; 8];
+        for _ in 0..800 {
             let msg = fuzz_msg(&mut rng);
             seen[(msg.encode()[0] - 1) as usize] = true;
             let payload = msg.encode();
@@ -551,12 +786,19 @@ mod tests {
             a: vec![1.0, 2.0],
             y: vec![3.0],
             global_rows: vec![0],
+            run_id: 7,
+            trace: false,
             compressor: CompressorSpec::Identity,
         };
         // Out-of-domain compressor kind (the trailing payload byte).
         let mut a = Msg::Assign(Box::new(assign.clone())).encode();
         *a.last_mut().unwrap() = crate::compress::MAX_WIRE_KIND + 1;
         assert!(matches!(Msg::decode(&a), Err(WireError::BadValue("compressor"))));
+        // Out-of-domain trace flag (the byte before the compressor kind).
+        let mut a = Msg::Assign(Box::new(assign.clone())).encode();
+        let i = a.len() - 2;
+        a[i] = 9;
+        assert!(matches!(Msg::decode(&a), Err(WireError::BadValue("trace flag"))));
         let mut a = Msg::Assign(Box::new(assign.clone())).encode();
         // objective kind byte sits after tag(1)+worker(4)+n(4)+seed(8)+batch(4).
         a[21] = 7;
@@ -600,6 +842,8 @@ mod tests {
             a: vec![1.0, 2.0],
             y: vec![3.0],
             global_rows: vec![0],
+            run_id: 7,
+            trace: false,
             compressor: CompressorSpec::Identity,
         }));
         assert!(matches!(Msg::decode(&msg.encode()), Err(WireError::BadValue("shard shape"))));
@@ -655,5 +899,127 @@ mod tests {
         // 64 raw bytes assumed above.
         let codec = crate::compress::CompressorSpec::Identity.build();
         assert_eq!(codec.encode(&[1.5f32; 16]).len(), 64);
+    }
+
+    fn sample_telemetry() -> TelemetryMsg {
+        TelemetryMsg {
+            worker: 2,
+            run_id: 0xCAFE,
+            round: 5,
+            rtt_us: 180,
+            offset_us: -42,
+            dropped: 0,
+            spans: vec![
+                SpanRec {
+                    name: "task".into(),
+                    cat: "worker".into(),
+                    ph: 0,
+                    ts_us: 1_000,
+                    dur_us: 250,
+                    tid: 1,
+                    id: 0,
+                    args: vec![("worker".into(), 2.0), ("round".into(), 5.0)],
+                },
+                SpanRec {
+                    name: "task".into(),
+                    cat: "flow".into(),
+                    ph: 3,
+                    ts_us: 1_001,
+                    dur_us: 0,
+                    tid: 1,
+                    id: (5 << 16) | 2,
+                    args: vec![],
+                },
+            ],
+            metrics: vec![
+                ("worker.2.steps".into(), 37.0),
+                ("nan".into(), f64::from_bits(0x7FF8_0000_DEAD_BEEF)),
+                ("inf".into(), f64::NEG_INFINITY),
+            ],
+        }
+    }
+
+    #[test]
+    fn telemetry_round_trips_bit_exactly() {
+        let msg = Msg::Telemetry(Box::new(sample_telemetry()));
+        let back = Msg::decode(&msg.encode()).unwrap();
+        assert_bits_eq(&msg, &back);
+        // Empty telemetry (no spans, no metrics, no estimate) is legal.
+        let empty = Msg::Telemetry(Box::new(TelemetryMsg {
+            worker: 0,
+            run_id: 0,
+            round: 0,
+            rtt_us: 0,
+            offset_us: 0,
+            dropped: 0,
+            spans: vec![],
+            metrics: vec![],
+        }));
+        assert_bits_eq(&empty, &Msg::decode(&empty.encode()).unwrap());
+    }
+
+    #[test]
+    fn hostile_telemetry_counts_and_phases_rejected() {
+        let msg = Msg::Telemetry(Box::new(sample_telemetry()));
+        let good = msg.encode();
+        // The span count sits after tag(1)+worker(4)+run(8)+round(8)+
+        // rtt(8)+offset(8)+dropped(8) = byte 45. A count the payload
+        // cannot hold must be rejected, not allocated.
+        let mut bomb = good.clone();
+        bomb[45..49].copy_from_slice(&u32::MAX.to_le_bytes());
+        assert!(matches!(
+            Msg::decode(&bomb),
+            Err(WireError::BadValue("telemetry span count"))
+        ));
+        // A hostile phase byte (first span's, right after its two
+        // 4-byte-length strings "task" + "worker") errors cleanly.
+        let mut bad_ph = good.clone();
+        bad_ph[49 + 4 + 4 + 4 + 6] = 99;
+        assert!(matches!(
+            Msg::decode(&bad_ph),
+            Err(WireError::BadValue("telemetry span phase"))
+        ));
+        // An arg-count bomb inside a span is capped at MAX_SPAN_ARGS.
+        // Locate the arg-count u32 by construction: an arg-less
+        // encoding of the same span is the shared prefix + argc(4) +
+        // metrics-count(4), so argc sits 8 bytes from its end.
+        let mut t = sample_telemetry();
+        t.spans.truncate(1);
+        t.metrics.clear();
+        let mut no_args = t.clone();
+        no_args.spans[0].args.clear();
+        let pos = Msg::Telemetry(Box::new(no_args)).encode().len() - 8;
+        let mut bomb = Msg::Telemetry(Box::new(t)).encode();
+        bomb[pos..pos + 4].copy_from_slice(&(MAX_SPAN_ARGS + 1).to_le_bytes());
+        assert!(matches!(
+            Msg::decode(&bomb),
+            Err(WireError::BadValue("telemetry span args"))
+        ));
+        // Metric-count bomb (the last 4 bytes of an entry-less frame).
+        let mut t = sample_telemetry();
+        t.spans.clear();
+        t.metrics.clear();
+        let mut enc = Msg::Telemetry(Box::new(t)).encode();
+        let n = enc.len();
+        enc[n - 4..].copy_from_slice(&u32::MAX.to_le_bytes());
+        assert!(matches!(
+            Msg::decode(&enc),
+            Err(WireError::BadValue("telemetry metric count"))
+        ));
+        // Every truncation of a well-formed telemetry frame errors.
+        for cut in 0..good.len() {
+            assert!(Msg::decode(&good[..cut]).is_err(), "prefix {cut} must error");
+        }
+    }
+
+    #[test]
+    fn heartbeat_echo_round_trips_and_is_compact() {
+        let hb = Msg::Heartbeat { nonce: 17, rtt_us: 0, offset_us: i64::MIN };
+        assert_bits_eq(&hb, &Msg::decode(&hb.encode()).unwrap());
+        let echo = Msg::HeartbeatEcho { nonce: 17, master_us: u64::MAX };
+        assert_bits_eq(&echo, &Msg::decode(&echo.encode()).unwrap());
+        // The liveness path stays cheap: both frames are fixed-size.
+        assert_eq!(hb.encode().len(), 25);
+        assert_eq!(echo.encode().len(), 17);
     }
 }

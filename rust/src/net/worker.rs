@@ -16,8 +16,21 @@
 //! computing a long task" from "wedged or gone" — the worker's main
 //! thread may legitimately sleep through a whole epoch of injected
 //! straggling.
+//!
+//! Observability (wire v4): when the `Assign` carries `trace = true`
+//! the agent turns its own span collector on, stamps each heartbeat
+//! with its current link RTT/offset estimate (computed NTP-style from
+//! the master's `HeartbeatEcho`: `rtt = t1 - t0`,
+//! `offset = master_us - (t0 + rtt/2)`, min-RTT filtered), and after
+//! every report — and again on `Shutdown` — ships a `Telemetry` frame
+//! with its drained span buffer, metrics snapshot, drop count, and the
+//! link estimate, which the master rebases onto its own timeline for
+//! the merged Chrome trace (DESIGN.md §8).
 
-use super::wire::{read_frame, write_frame, Assign, Msg, ReportMsg, WireError, PROTOCOL_VERSION};
+use super::wire::{
+    read_frame, write_frame, Assign, Msg, ReportMsg, SpanRec, TelemetryMsg, WireError,
+    PROTOCOL_VERSION,
+};
 use crate::backend::{Consts, NativeWorker, WorkerCompute};
 use crate::compress::{CompressorSpec, StreamDecoder, StreamEncoder};
 use crate::coordinator::runtime::{execute_planned, PlannedTask};
@@ -80,6 +93,40 @@ fn send(writer: &Mutex<TcpStream>, msg: &Msg) -> Result<u64, WireError> {
     write_frame(&mut *w, msg)
 }
 
+/// The NTP-lite link-clock estimator shared by the heartbeat thread
+/// (stamps `t0`, piggybacks the current estimate) and the main loop
+/// (folds each `HeartbeatEcho` in). Min-RTT filtered: the least-queued
+/// round trip carries the least-biased offset.
+struct LinkClock {
+    /// Nonce + local send time (µs on [`crate::obs::span::now_us`]'s
+    /// timeline) of the heartbeat currently awaiting its echo.
+    pending: Option<(u64, u64)>,
+    /// Best round trip seen, µs (0 = no estimate yet — the wire's
+    /// "none" sentinel).
+    rtt_us: u64,
+    /// Estimated worker→master clock offset at the best sample, µs.
+    offset_us: i64,
+}
+
+impl LinkClock {
+    fn new() -> Self {
+        Self { pending: None, rtt_us: 0, offset_us: 0 }
+    }
+
+    /// Fold one echo in (called with the local receive time `t1_us`).
+    fn on_echo(&mut self, nonce: u64, master_us: u64, t1_us: u64) {
+        if let Some((pn, t0)) = self.pending.take() {
+            if pn == nonce && t1_us >= t0 {
+                let rtt = (t1_us - t0).max(1); // 0 means "none": round up
+                if self.rtt_us == 0 || rtt <= self.rtt_us {
+                    self.rtt_us = rtt;
+                    self.offset_us = master_us as i64 - (t0 + rtt / 2) as i64;
+                }
+            }
+        }
+    }
+}
+
 /// Serve one already-connected master (the process-free entry point the
 /// loopback tests drive directly).
 pub fn serve(stream: TcpStream, opts: WorkerOpts) -> Result<()> {
@@ -102,6 +149,11 @@ pub fn serve(stream: TcpStream, opts: WorkerOpts) -> Result<()> {
         (other, _) => bail!("handshake: expected Assign, got {other:?}"),
     };
     let v = assign.worker as usize;
+    if assign.trace {
+        // The master traced this run: collect spans/metrics here too
+        // so the Telemetry frames have something to ship.
+        crate::obs::enable();
+    }
     let (mut compute, consts, root, batch, time_scale) = build_state(&assign)?;
     crate::log_debug!(
         "net",
@@ -110,24 +162,40 @@ pub fn serve(stream: TcpStream, opts: WorkerOpts) -> Result<()> {
         assign.dim
     );
 
-    // Liveness beacon.
+    // Liveness beacon + link-clock probe.
+    let clock = Arc::new(Mutex::new(LinkClock::new()));
     let stop = Arc::new(AtomicBool::new(false));
     let hb = {
         let writer = writer.clone();
         let stop = stop.clone();
+        let clock = clock.clone();
         std::thread::Builder::new()
             .name(format!("heartbeat-{v}"))
             .spawn(move || {
                 let mut nonce = 0u64;
+                // Beat immediately, then on the interval: the first
+                // echo seeds the link-clock estimate within the first
+                // round trip, so even sub-interval runs ship telemetry
+                // with a usable offset for the merged trace.
                 while !stop.load(Ordering::Relaxed) {
-                    std::thread::sleep(super::HEARTBEAT_INTERVAL);
+                    if nonce > 0 {
+                        std::thread::sleep(super::HEARTBEAT_INTERVAL);
+                        if stop.load(Ordering::Relaxed) {
+                            break;
+                        }
+                    }
                     nonce += 1;
+                    let (rtt_us, offset_us) = {
+                        let mut lc = clock.lock().expect("link clock lock");
+                        lc.pending = Some((nonce, crate::obs::span::now_us() as u64));
+                        (lc.rtt_us, lc.offset_us)
+                    };
                     let _sp = crate::obs::span::span_with(
                         "heartbeat",
                         "net",
                         &[("worker", v as f64), ("nonce", nonce as f64)],
                     );
-                    if send(&writer, &Msg::Heartbeat { nonce }).is_err() {
+                    if send(&writer, &Msg::Heartbeat { nonce, rtt_us, offset_us }).is_err() {
                         // Master unreachable. On a half-open link (no
                         // FIN/RST — master host power loss, partition)
                         // the main loop's read would otherwise block
@@ -147,7 +215,7 @@ pub fn serve(stream: TcpStream, opts: WorkerOpts) -> Result<()> {
     };
 
     let result = serve_tasks(&mut reader, &writer, &mut compute, v, &root, consts, batch,
-        time_scale, assign.compressor, opts);
+        time_scale, assign.compressor, assign.run_id, &clock, opts);
     stop.store(true, Ordering::Relaxed);
     let _ = hb.join();
     result
@@ -187,6 +255,68 @@ fn build_state(
     Ok((compute, consts, root, batch, assign.time_scale))
 }
 
+/// Drain this thread's span buffer + the metrics snapshot into one
+/// `Telemetry` frame and ship it (best-effort: a worker must keep
+/// serving even if the master stops listening to telemetry).
+fn ship_telemetry(
+    writer: &Mutex<TcpStream>,
+    v: usize,
+    run_id: u64,
+    round: u64,
+    clock: &Mutex<LinkClock>,
+) {
+    if !crate::obs::enabled() {
+        return;
+    }
+    let (tid, events) = crate::obs::span::take_local_events();
+    let spans: Vec<SpanRec> = events
+        .into_iter()
+        .map(|e| SpanRec {
+            ph: match (e.flow, e.dur_us) {
+                (Some(('s', _)), _) => 2,
+                (Some(('t', _)), _) => 3,
+                (Some(('f', _)), _) => 4,
+                (Some(_), _) => 1, // unknown flow phase: degrade to instant
+                (None, Some(_)) => 0,
+                (None, None) => 1,
+            },
+            id: e.flow.map(|(_, id)| id).unwrap_or(0),
+            ts_us: e.ts_us.max(0.0) as u64,
+            dur_us: e.dur_us.unwrap_or(0.0).max(0.0) as u64,
+            tid,
+            name: e.name,
+            cat: e.cat.to_string(),
+            args: e.args.iter().map(|(k, x)| (k.to_string(), *x)).collect(),
+        })
+        .collect();
+    let snap = crate::obs::metrics::snapshot();
+    let mut metrics = Vec::new();
+    for section in ["counters", "gauges", "sums"] {
+        if let Some(m) = snap.get(section).and_then(|s| s.as_obj()) {
+            for (k, val) in m {
+                if let Some(x) = val.as_f64() {
+                    metrics.push((k.clone(), x));
+                }
+            }
+        }
+    }
+    let (rtt_us, offset_us) = {
+        let lc = clock.lock().expect("link clock lock");
+        (lc.rtt_us, lc.offset_us)
+    };
+    let t = TelemetryMsg {
+        worker: v as u32,
+        run_id,
+        round,
+        rtt_us,
+        offset_us,
+        dropped: crate::obs::span::dropped(),
+        spans,
+        metrics,
+    };
+    let _ = send(writer, &Msg::Telemetry(Box::new(t)));
+}
+
 #[allow(clippy::too_many_arguments)]
 fn serve_tasks(
     reader: &mut TcpStream,
@@ -198,6 +328,8 @@ fn serve_tasks(
     batch: usize,
     time_scale: f64,
     compressor: CompressorSpec,
+    run_id: u64,
+    clock: &Mutex<LinkClock>,
     opts: WorkerOpts,
 ) -> Result<()> {
     if opts.die_after_tasks == Some(0) {
@@ -212,60 +344,89 @@ fn serve_tasks(
     let mut enc_xk = StreamEncoder::new(compressor);
     let mut enc_xbar = StreamEncoder::new(compressor);
     let mut served = 0usize;
+    let mut last_round = 0u64;
     loop {
         match read_frame(reader) {
             Ok((Msg::Task(t), _)) => {
-                let _task_span = crate::obs::span::span_with(
-                    "task",
-                    "worker",
-                    &[("worker", v as f64), ("round", t.round as f64)],
-                );
-                let x0 = dec_x0
-                    .decode(&t.x0, compute.dim())
-                    .with_context(|| format!("worker {v}: undecodable task x0"))?;
-                // Busy/zero-step tasks legitimately carry an empty x0
-                // (no SGD chain runs); only step-running tasks must
-                // match the shard dimension.
-                if t.target > 0 && x0.len() != compute.dim() {
-                    bail!("task x0 dim {} != shard dim {}", x0.len(), compute.dim());
-                }
-                let planned = PlannedTask {
-                    x0,
-                    t0: t.t0,
-                    label: t.stream_label,
-                    key: t.stream_key,
-                    rate: t.rate,
-                    target: t.target as usize,
-                    busy: t.busy,
-                    budget_secs: t.budget_secs,
-                };
-                let rep = execute_planned(compute, v, &planned, root, consts, batch, time_scale);
-                let reply = Msg::Report(Box::new(ReportMsg {
-                    round: t.round,
-                    worker: v as u32,
-                    q: rep.q as u64,
-                    busy_secs: rep.busy_secs,
-                    x_k: enc_xk.encode(&rep.x_k),
-                    x_bar: enc_xbar.encode(&rep.x_bar),
-                }));
-                let sent = {
-                    let _sp = crate::obs::span::span_with(
-                        "frame-write",
-                        "net",
-                        &[("worker", v as f64)],
+                last_round = t.round;
+                {
+                    let _task_span = crate::obs::span::span_with(
+                        "task",
+                        "worker",
+                        &[
+                            ("worker", v as f64),
+                            ("round", t.round as f64),
+                            ("epoch", t.epoch as f64),
+                        ],
                     );
-                    send(writer, &reply)
-                };
-                if sent.is_err() {
-                    return Ok(()); // master gone mid-reply
+                    // The correlation step: binds this task slice into
+                    // the master's dispatch→compute→gather flow.
+                    crate::obs::span::flow_event(
+                        "dispatch",
+                        "net",
+                        crate::obs::span::FlowPh::Step,
+                        t.span_id,
+                    );
+                    let x0 = dec_x0
+                        .decode(&t.x0, compute.dim())
+                        .with_context(|| format!("worker {v}: undecodable task x0"))?;
+                    // Busy/zero-step tasks legitimately carry an empty x0
+                    // (no SGD chain runs); only step-running tasks must
+                    // match the shard dimension.
+                    if t.target > 0 && x0.len() != compute.dim() {
+                        bail!("task x0 dim {} != shard dim {}", x0.len(), compute.dim());
+                    }
+                    let planned = PlannedTask {
+                        x0,
+                        t0: t.t0,
+                        label: t.stream_label,
+                        key: t.stream_key,
+                        rate: t.rate,
+                        target: t.target as usize,
+                        busy: t.busy,
+                        budget_secs: t.budget_secs,
+                    };
+                    let rep =
+                        execute_planned(compute, v, &planned, root, consts, batch, time_scale);
+                    let reply = Msg::Report(Box::new(ReportMsg {
+                        round: t.round,
+                        worker: v as u32,
+                        q: rep.q as u64,
+                        busy_secs: rep.busy_secs,
+                        x_k: enc_xk.encode(&rep.x_k),
+                        x_bar: enc_xbar.encode(&rep.x_bar),
+                    }));
+                    let sent = {
+                        let _sp = crate::obs::span::span_with(
+                            "frame-write",
+                            "net",
+                            &[("worker", v as f64)],
+                        );
+                        send(writer, &reply)
+                    };
+                    if sent.is_err() {
+                        return Ok(()); // master gone mid-reply
+                    }
+                    served += 1;
+                    if opts.die_after_tasks == Some(served) {
+                        // Crash simulation: drop the socket with no goodbye.
+                        return Ok(());
+                    }
                 }
-                served += 1;
-                if opts.die_after_tasks == Some(served) {
-                    // Crash simulation: drop the socket with no goodbye.
-                    return Ok(());
-                }
+                // The task span has closed and the report is on the
+                // wire: this round's spans are complete — ship them.
+                ship_telemetry(writer, v, run_id, last_round, clock);
             }
-            Ok((Msg::Shutdown, _)) => return Ok(()),
+            Ok((Msg::Shutdown, _)) => {
+                // Final flush: whatever accumulated since the last
+                // report (the master grants a grace window for this).
+                ship_telemetry(writer, v, run_id, last_round, clock);
+                return Ok(());
+            }
+            Ok((Msg::HeartbeatEcho { nonce, master_us }, _)) => {
+                let t1 = crate::obs::span::now_us() as u64;
+                clock.lock().expect("link clock lock").on_echo(nonce, master_us, t1);
+            }
             Ok((Msg::Heartbeat { .. }, _)) => {} // tolerated, unused
             Ok((other, _)) => bail!("unexpected message from master: {other:?}"),
             // EOF / reset: the master is gone; exit cleanly rather than

@@ -4,8 +4,8 @@
 //!
 //! * **counter** — monotonically increasing `u64` ([`add`]): bytes on
 //!   the wire, dropped reports, epochs run.
-//! * **gauge** — last-write-wins `u64` ([`gauge`]): current round,
-//!   live worker count.
+//! * **gauge** — last-write-wins `u64` ([`gauge`]) or `f64` ([`fset`]):
+//!   current round, live worker count, latest eval error, per-link RTT.
 //! * **sum** — accumulating `f64` ([`fadd`], CAS on the bit pattern):
 //!   gather-stall seconds, per-worker busy seconds.
 //! * **histogram** — count/sum/min/max plus log2-bucketed counts
@@ -65,6 +65,7 @@ fn bucket_of(x: f64) -> usize {
 enum Metric {
     Counter(AtomicU64),
     Gauge(AtomicU64),
+    FGauge(AtomicU64),
     FSum(AtomicU64),
     Hist(HistCell),
 }
@@ -140,6 +141,18 @@ pub fn gauge(name: &str, x: u64) {
     }
 }
 
+/// Set float gauge `name` to `x` (last write wins; bits stored in an
+/// `AtomicU64`). Lands in the same `"gauges"` snapshot section as
+/// [`gauge`] — the kinds differ only in what the writer hands us.
+pub fn fset(name: &str, x: f64) {
+    if !crate::obs::enabled() {
+        return;
+    }
+    if let Metric::FGauge(g) = &*metric(name, || Metric::FGauge(AtomicU64::new(0f64.to_bits()))) {
+        g.store(x.to_bits(), Ordering::Relaxed);
+    }
+}
+
 /// Accumulate `x` into f64 sum `name`.
 pub fn fadd(name: &str, x: f64) {
     if !crate::obs::enabled() {
@@ -180,6 +193,12 @@ pub fn snapshot() -> Value {
             }
             Metric::Gauge(g) => {
                 gauges.insert(name.clone(), Value::Num(g.load(Ordering::Relaxed) as f64));
+            }
+            Metric::FGauge(g) => {
+                gauges.insert(
+                    name.clone(),
+                    Value::Num(f64::from_bits(g.load(Ordering::Relaxed))),
+                );
             }
             Metric::FSum(s) => {
                 sums.insert(
@@ -263,6 +282,8 @@ mod tests {
         add("t.counter", 3);
         gauge("t.gauge", 7);
         gauge("t.gauge", 9);
+        fset("t.fgauge", 0.5);
+        fset("t.fgauge", 0.125);
         fadd("t.sum", 0.25);
         fadd("t.sum", 0.5);
         observe("t.hist", 0.5);
@@ -272,6 +293,7 @@ mod tests {
         let snap = snapshot();
         assert_eq!(snap.get("counters").unwrap().get_f64("t.counter"), Some(5.0));
         assert_eq!(snap.get("gauges").unwrap().get_f64("t.gauge"), Some(9.0));
+        assert_eq!(snap.get("gauges").unwrap().get_f64("t.fgauge"), Some(0.125));
         assert_eq!(snap.get("sums").unwrap().get_f64("t.sum"), Some(0.75));
         let h = snap.get("hists").unwrap().get("t.hist").unwrap();
         assert_eq!(h.get_f64("count"), Some(3.0));

@@ -24,6 +24,20 @@
 //! filtered by the `ANYTIME_SGD_LOG` env var (default `info`), which
 //! replaced the net layer's ad-hoc `eprintln!`s.
 //!
+//! ## The distributed plane (wire v4)
+//!
+//! Under `--runtime dist` the plane spans processes: workers ship
+//! their span buffers and metrics snapshots to the master in
+//! `Telemetry` frames, heartbeat echoes give every link an RTT/offset
+//! estimate, and the master rebases worker timestamps onto its own
+//! [`std::time::Instant`] timeline so `--trace` writes ONE merged
+//! Perfetto trace with per-process tracks and dispatch→compute→gather
+//! flow arrows ([`span::merge_external`]). Three live surfaces read
+//! the same state: [`telemetry`] (the fleet store), [`prometheus`]
+//! (`/metrics` text exposition over a std-only `TcpListener`), and
+//! [`watch`] (the `--watch` stderr ticker + `status.jsonl`). The
+//! contract is in DESIGN.md §8.
+//!
 //! ## The overhead contract
 //!
 //! Spans and metrics are **off by default** and gated on one global
@@ -37,8 +51,11 @@
 
 pub mod log;
 pub mod metrics;
+pub mod prometheus;
 pub mod report;
 pub mod span;
+pub mod telemetry;
+pub mod watch;
 
 use std::sync::atomic::{AtomicBool, Ordering};
 

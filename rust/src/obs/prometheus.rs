@@ -1,0 +1,272 @@
+//! Prometheus text-exposition rendering and a std-only `/metrics`
+//! endpoint (DESIGN.md §8).
+//!
+//! [`render`] flattens the process-wide [`crate::obs::metrics`]
+//! snapshot plus the per-worker fleet store
+//! ([`crate::obs::telemetry`]) into Prometheus text format 0.0.4:
+//! counters stay counters, gauges/sums become gauges, histograms are
+//! summarized as `_count`/`_sum`/`_min`/`_max`, and fleet values get a
+//! `{worker="v"}` label. Metric names are sanitized to
+//! `[a-zA-Z0-9_:]` and prefixed `anytime_sgd_`.
+//!
+//! [`MetricsServer::serve`] binds a `TcpListener` (port 0 picks an
+//! ephemeral port; the bound port is reported back) and answers every
+//! HTTP request on a detached thread with the current [`render`]
+//! output — enough for `curl` and a Prometheus scraper, no HTTP
+//! library required. The server only ever *reads* observability
+//! state on wall-clock cadence, so running it cannot perturb the
+//! obs-on ≡ obs-off bit-exactness pin.
+
+use crate::ser::Value;
+use std::io::{Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Sanitize a dotted metric name into a Prometheus identifier:
+/// `[a-zA-Z0-9_:]` survive, everything else becomes `_`.
+fn sanitize(name: &str) -> String {
+    name.chars()
+        .map(|c| {
+            if c.is_ascii_alphanumeric() || c == '_' || c == ':' {
+                c
+            } else {
+                '_'
+            }
+        })
+        .collect()
+}
+
+/// Format an f64 the way the exposition format spells specials.
+fn num(x: f64) -> String {
+    if x.is_nan() {
+        "NaN".to_string()
+    } else if x == f64::INFINITY {
+        "+Inf".to_string()
+    } else if x == f64::NEG_INFINITY {
+        "-Inf".to_string()
+    } else {
+        format!("{x}")
+    }
+}
+
+fn push_family(out: &mut String, name: &str, kind: &str, value: f64) {
+    out.push_str(&format!("# TYPE {name} {kind}\n{name} {}\n", num(value)));
+}
+
+/// Render the current metrics snapshot + fleet telemetry as
+/// Prometheus text exposition format.
+pub fn render() -> String {
+    let snap = crate::obs::metrics::snapshot();
+    let mut out = String::new();
+    let section = |v: &Value, key: &str| -> Vec<(String, f64)> {
+        v.get(key)
+            .and_then(|s| s.as_obj().cloned())
+            .map(|m| {
+                m.iter()
+                    .filter_map(|(k, v)| v.as_f64().map(|x| (k.clone(), x)))
+                    .collect()
+            })
+            .unwrap_or_default()
+    };
+    for (name, x) in section(&snap, "counters") {
+        push_family(&mut out, &format!("anytime_sgd_{}", sanitize(&name)), "counter", x);
+    }
+    for (name, x) in section(&snap, "gauges") {
+        push_family(&mut out, &format!("anytime_sgd_{}", sanitize(&name)), "gauge", x);
+    }
+    for (name, x) in section(&snap, "sums") {
+        push_family(&mut out, &format!("anytime_sgd_{}", sanitize(&name)), "gauge", x);
+    }
+    if let Some(hists) = snap.get("hists").and_then(|h| h.as_obj()) {
+        for (name, h) in hists {
+            let base = format!("anytime_sgd_{}", sanitize(name));
+            for field in ["count", "sum", "min", "max"] {
+                if let Some(x) = h.get_f64(field) {
+                    push_family(&mut out, &format!("{base}_{field}"), "gauge", x);
+                }
+            }
+        }
+    }
+    let fleet = crate::obs::telemetry::fleet();
+    if !fleet.is_empty() {
+        out.push_str("# TYPE anytime_sgd_worker_link_rtt_seconds gauge\n");
+        for (v, w) in &fleet {
+            if w.rtt_us > 0 {
+                out.push_str(&format!(
+                    "anytime_sgd_worker_link_rtt_seconds{{worker=\"{v}\"}} {}\n",
+                    num(w.rtt_us as f64 * 1e-6)
+                ));
+            }
+        }
+        out.push_str("# TYPE anytime_sgd_worker_dropped_spans gauge\n");
+        for (v, w) in &fleet {
+            out.push_str(&format!(
+                "anytime_sgd_worker_dropped_spans{{worker=\"{v}\"}} {}\n",
+                w.dropped
+            ));
+        }
+        out.push_str("# TYPE anytime_sgd_worker_round gauge\n");
+        for (v, w) in &fleet {
+            out.push_str(&format!("anytime_sgd_worker_round{{worker=\"{v}\"}} {}\n", w.round));
+        }
+        // Each worker's own metrics snapshot, labeled by worker index.
+        let mut names: Vec<&String> =
+            fleet.values().flat_map(|w| w.metrics.keys()).collect();
+        names.sort();
+        names.dedup();
+        for name in names {
+            out.push_str(&format!("# TYPE anytime_sgd_fleet_{} gauge\n", sanitize(name)));
+            for (v, w) in &fleet {
+                if let Some(x) = w.metrics.get(name) {
+                    out.push_str(&format!(
+                        "anytime_sgd_fleet_{}{{worker=\"{v}\"}} {}\n",
+                        sanitize(name),
+                        num(*x)
+                    ));
+                }
+            }
+        }
+    }
+    out
+}
+
+/// A running `/metrics` endpoint; dropping the handle leaves the
+/// detached thread serving until [`MetricsServer::shutdown`] or
+/// process exit.
+pub struct MetricsServer {
+    port: u16,
+    stop: Arc<AtomicBool>,
+    join: Option<std::thread::JoinHandle<()>>,
+}
+
+impl MetricsServer {
+    /// Bind `127.0.0.1:port` (0 ⇒ ephemeral) and serve [`render`] to
+    /// every request on a background thread. Returns the server
+    /// handle; the actual bound port is [`MetricsServer::port`].
+    pub fn serve(port: u16) -> std::io::Result<MetricsServer> {
+        let listener = TcpListener::bind(("127.0.0.1", port))?;
+        let port = listener.local_addr()?.port();
+        let stop = Arc::new(AtomicBool::new(false));
+        let flag = stop.clone();
+        let join = std::thread::Builder::new()
+            .name("obs-metrics-http".to_string())
+            .spawn(move || {
+                for conn in listener.incoming() {
+                    if flag.load(Ordering::SeqCst) {
+                        break;
+                    }
+                    if let Ok(stream) = conn {
+                        // Serve inline: responses are tiny and the
+                        // endpoint is a debugging surface, not a
+                        // production load balancer.
+                        let _ = answer(stream);
+                    }
+                }
+            })?;
+        Ok(MetricsServer { port, stop, join: Some(join) })
+    }
+
+    /// The bound TCP port (useful with `serve(0)`).
+    pub fn port(&self) -> u16 {
+        self.port
+    }
+
+    /// Stop accepting and join the serving thread.
+    pub fn shutdown(mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        // Unblock the accept loop with a throwaway connection.
+        let _ = TcpStream::connect(("127.0.0.1", self.port));
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+/// Read (and discard) the request, write one HTTP/1.0 response with
+/// the current exposition body, close.
+fn answer(mut stream: TcpStream) -> std::io::Result<()> {
+    let _ = stream.set_read_timeout(Some(Duration::from_secs(2)));
+    let _ = stream.set_write_timeout(Some(Duration::from_secs(2)));
+    let mut buf = [0u8; 1024];
+    let _ = stream.read(&mut buf); // best-effort; any request gets /metrics
+    let body = render();
+    let head = format!(
+        "HTTP/1.0 200 OK\r\nContent-Type: text/plain; version=0.0.4; charset=utf-8\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
+        body.len()
+    );
+    stream.write_all(head.as_bytes())?;
+    stream.write_all(body.as_bytes())?;
+    stream.flush()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sanitize_keeps_prometheus_charset() {
+        assert_eq!(sanitize("net.bytes_sent"), "net_bytes_sent");
+        assert_eq!(sanitize("worker.3.busy secs"), "worker_3_busy_secs");
+        assert_eq!(sanitize("a:b_9"), "a:b_9");
+    }
+
+    #[test]
+    fn render_emits_typed_families_and_fleet_labels() {
+        let _g = crate::obs::test_lock();
+        crate::obs::enable();
+        crate::obs::metrics::reset();
+        crate::obs::telemetry::clear();
+        crate::obs::metrics::add("net.bytes_sent", 42);
+        crate::obs::metrics::fset("trainer.err", 0.5);
+        crate::obs::metrics::observe("dispatch.q", 3.0);
+        crate::obs::telemetry::record_link(1, 250, 10);
+        crate::obs::telemetry::record_worker(1, 4, 2, &[("worker.busy_secs".into(), 1.5)]);
+        crate::obs::disable();
+        let text = render();
+        assert!(text.contains("# TYPE anytime_sgd_net_bytes_sent counter\n"));
+        assert!(text.contains("anytime_sgd_net_bytes_sent 42\n"));
+        assert!(text.contains("# TYPE anytime_sgd_trainer_err gauge\n"));
+        assert!(text.contains("anytime_sgd_trainer_err 0.5\n"));
+        assert!(text.contains("anytime_sgd_dispatch_q_count 1\n"));
+        assert!(text.contains("anytime_sgd_worker_link_rtt_seconds{worker=\"1\"} 0.00025\n"));
+        assert!(text.contains("anytime_sgd_worker_dropped_spans{worker=\"1\"} 2\n"));
+        assert!(text.contains("anytime_sgd_fleet_worker_busy_secs{worker=\"1\"} 1.5\n"));
+        // Every non-comment line is `name[{labels}] value`.
+        for line in text.lines() {
+            if line.starts_with('#') {
+                continue;
+            }
+            let (name, val) = line.rsplit_once(' ').expect("name value");
+            assert!(!name.is_empty());
+            assert!(
+                val.parse::<f64>().is_ok() || ["NaN", "+Inf", "-Inf"].contains(&val),
+                "bad sample value {val:?}"
+            );
+        }
+        crate::obs::metrics::reset();
+        crate::obs::telemetry::clear();
+    }
+
+    #[test]
+    fn server_answers_http_with_exposition_body() {
+        let _g = crate::obs::test_lock();
+        crate::obs::enable();
+        crate::obs::metrics::reset();
+        crate::obs::metrics::add("net.bytes_sent", 7);
+        crate::obs::disable();
+        let server = MetricsServer::serve(0).expect("bind loopback");
+        let mut stream = TcpStream::connect(("127.0.0.1", server.port())).expect("connect");
+        stream
+            .write_all(b"GET /metrics HTTP/1.0\r\n\r\n")
+            .expect("send request");
+        let mut resp = String::new();
+        stream.read_to_string(&mut resp).expect("read response");
+        assert!(resp.starts_with("HTTP/1.0 200 OK\r\n"));
+        assert!(resp.contains("text/plain; version=0.0.4"));
+        assert!(resp.contains("anytime_sgd_net_bytes_sent 7\n"));
+        server.shutdown();
+        crate::obs::metrics::reset();
+    }
+}

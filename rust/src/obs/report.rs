@@ -64,6 +64,12 @@ pub struct RunReport {
     pub dropped_reports: usize,
     /// `(bytes_sent + bytes_recv) / epochs`.
     pub bytes_per_epoch: f64,
+    /// Fleet link RTT envelope from the continuous heartbeat-echo
+    /// estimator (dist only): min of per-epoch minima / mean of means /
+    /// max of maxima. `None` when no link ever produced an estimate.
+    pub link_rtt_min_secs: Option<f64>,
+    pub link_rtt_mean_secs: Option<f64>,
+    pub link_rtt_max_secs: Option<f64>,
 }
 
 impl RunReport {
@@ -119,6 +125,10 @@ impl RunReport {
         let mut bytes_sent = 0u64;
         let mut bytes_recv = 0u64;
         let mut dropped_reports = 0usize;
+        let mut hb_min = f64::INFINITY;
+        let mut hb_max = f64::NEG_INFINITY;
+        let mut hb_mean_sum = 0.0f64;
+        let mut hb_mean_cnt = 0usize;
         for ne in net {
             bytes_sent += ne.bytes_sent;
             bytes_recv += ne.bytes_recv;
@@ -128,6 +138,16 @@ impl RunReport {
                     rtt_sum[v] += r;
                     rtt_cnt[v] += 1;
                 }
+            }
+            if let Some(m) = ne.hb_rtt_min_secs {
+                hb_min = hb_min.min(m);
+            }
+            if let Some(m) = ne.hb_rtt_max_secs {
+                hb_max = hb_max.max(m);
+            }
+            if let Some(m) = ne.hb_rtt_mean_secs {
+                hb_mean_sum += m;
+                hb_mean_cnt += 1;
             }
         }
 
@@ -162,6 +182,9 @@ impl RunReport {
             } else {
                 (bytes_sent + bytes_recv) as f64 / epochs.len() as f64
             },
+            link_rtt_min_secs: hb_min.is_finite().then_some(hb_min),
+            link_rtt_mean_secs: (hb_mean_cnt > 0).then(|| hb_mean_sum / hb_mean_cnt as f64),
+            link_rtt_max_secs: hb_max.is_finite().then_some(hb_max),
         }
     }
 
@@ -182,6 +205,17 @@ impl RunReport {
                 s,
                 "wire      sent {} B · recv {} B · {:.0} B/epoch · dropped reports {}",
                 self.bytes_sent, self.bytes_recv, self.bytes_per_epoch, self.dropped_reports
+            );
+        }
+        if let (Some(lo), Some(mean), Some(hi)) =
+            (self.link_rtt_min_secs, self.link_rtt_mean_secs, self.link_rtt_max_secs)
+        {
+            let _ = writeln!(
+                s,
+                "link rtt  min {:.2} ms · mean {:.2} ms · max {:.2} ms (heartbeat echo)",
+                lo * 1e3,
+                mean * 1e3,
+                hi * 1e3
             );
         }
         let _ = writeln!(
@@ -239,6 +273,18 @@ impl RunReport {
             ("bytes_recv", Value::Num(self.bytes_recv as f64)),
             ("dropped_reports", self.dropped_reports.into()),
             ("bytes_per_epoch", Value::Num(self.bytes_per_epoch)),
+            (
+                "link_rtt_min_secs",
+                self.link_rtt_min_secs.map(Value::Num).unwrap_or(Value::Null),
+            ),
+            (
+                "link_rtt_mean_secs",
+                self.link_rtt_mean_secs.map(Value::Num).unwrap_or(Value::Null),
+            ),
+            (
+                "link_rtt_max_secs",
+                self.link_rtt_max_secs.map(Value::Num).unwrap_or(Value::Null),
+            ),
             ("workers", Value::Arr(workers)),
         ])
     }
@@ -264,6 +310,9 @@ impl RunReport {
                     .all(|x| x.is_finite())
                     && w.mean_rtt_secs.map(f64::is_finite).unwrap_or(true)
             })
+            && [self.link_rtt_min_secs, self.link_rtt_mean_secs, self.link_rtt_max_secs]
+                .iter()
+                .all(|x| x.map(f64::is_finite).unwrap_or(true))
     }
 }
 
@@ -355,6 +404,9 @@ mod tests {
             bytes_recv: 400,
             rtt_secs: vec![Some(0.02), None],
             dropped_reports: 1,
+            hb_rtt_min_secs: Some(0.001),
+            hb_rtt_mean_secs: Some(0.002),
+            hb_rtt_max_secs: Some(0.004),
         }];
         let r = RunReport::from_run(&epochs, &net);
         assert_eq!(r.bytes_sent, 1000);
@@ -363,13 +415,36 @@ mod tests {
         assert!((r.bytes_per_epoch - 1400.0).abs() < 1e-12);
         assert_eq!(r.workers[0].mean_rtt_secs, Some(0.02));
         assert_eq!(r.workers[1].mean_rtt_secs, None);
+        assert_eq!(r.link_rtt_min_secs, Some(0.001));
+        assert_eq!(r.link_rtt_mean_secs, Some(0.002));
+        assert_eq!(r.link_rtt_max_secs, Some(0.004));
+        assert!(r.is_finite());
         let table = r.render_table();
         assert!(table.contains("utilization"));
         assert!(table.contains("gather-stall"));
+        assert!(table.contains("link rtt"));
         assert!(table.contains("W0"));
         let json = r.to_json();
         assert_eq!(json.get_usize("epochs"), Some(1));
+        assert_eq!(json.get_f64("link_rtt_max_secs"), Some(0.004));
         assert_eq!(json.get("workers").unwrap().as_arr().unwrap().len(), 2);
+    }
+
+    #[test]
+    fn runs_without_link_estimates_report_null_rtt_envelope() {
+        let epochs = vec![ep(10.0, vec![Some(1.0), Some(2.0)], vec![10, 20])];
+        let net = vec![NetEpochStats {
+            bytes_sent: 10,
+            rtt_secs: vec![None, None],
+            ..NetEpochStats::default()
+        }];
+        let r = RunReport::from_run(&epochs, &net);
+        assert_eq!(r.link_rtt_min_secs, None);
+        assert_eq!(r.link_rtt_mean_secs, None);
+        assert_eq!(r.link_rtt_max_secs, None);
+        assert!(r.is_finite());
+        assert!(!r.render_table().contains("link rtt"));
+        assert_eq!(r.to_json().get("link_rtt_min_secs"), Some(&Value::Null));
     }
 
     #[test]

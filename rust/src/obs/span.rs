@@ -28,14 +28,38 @@ use std::time::Instant;
 pub struct SpanEvent {
     pub name: String,
     /// Category (fixed taxonomy: `trainer` / `runtime` / `worker` /
-    /// `net` / `sweep` — DESIGN.md §8).
+    /// `net` / `sweep` / `flow` — DESIGN.md §8).
     pub cat: &'static str,
     /// Microseconds since the process trace origin.
     pub ts_us: f64,
-    /// `Some(d)` = complete ("X") event of `d` µs; `None` = instant.
+    /// `Some(d)` = complete ("X") event of `d` µs; `None` = instant
+    /// (or flow marker when `flow` is set).
     pub dur_us: Option<f64>,
+    /// Flow-event marker: `Some((ph, id))` with ph ∈ {'s','t','f'} —
+    /// a flow start/step/finish bound to correlation id `id`, the
+    /// cross-process links of the merged dist trace (DESIGN.md §8).
+    pub flow: Option<(char, u64)>,
     /// Numeric args attached to the event (worker id, epoch, bytes…).
     pub args: Vec<(&'static str, f64)>,
+}
+
+/// Flow-event phase: the three Chrome flow markers linking spans
+/// across threads and processes (`s` → `t` → `f`, one shared id).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FlowPh {
+    Start,
+    Step,
+    End,
+}
+
+impl FlowPh {
+    fn chrome(self) -> char {
+        match self {
+            FlowPh::Start => 's',
+            FlowPh::Step => 't',
+            FlowPh::End => 'f',
+        }
+    }
 }
 
 /// One thread's buffer. Registered globally on first use and kept
@@ -66,7 +90,11 @@ fn origin() -> Instant {
     *ORIGIN.get_or_init(Instant::now)
 }
 
-fn now_us() -> f64 {
+/// Microseconds since the process trace origin — the timestamp every
+/// recorded event carries. Public because the dist link-clock estimator
+/// (heartbeat echo, DESIGN.md §8) samples the same timeline so worker
+/// spans can be rebased onto the master's.
+pub fn now_us() -> f64 {
     origin().elapsed().as_secs_f64() * 1e6
 }
 
@@ -135,6 +163,7 @@ impl Drop for Span {
                     cat: rec.cat,
                     ts_us: rec.start_us,
                     dur_us: Some((end_us - rec.start_us).max(0.0)),
+                    flow: None,
                     args: rec.args,
                 },
             );
@@ -173,7 +202,36 @@ pub fn instant(name: impl Into<String>, cat: &'static str, args: &[(&'static str
     let Some(buf) = with_buf() else { return };
     push(
         &buf,
-        SpanEvent { name: name.into(), cat, ts_us: now_us(), dur_us: None, args: args.to_vec() },
+        SpanEvent {
+            name: name.into(),
+            cat,
+            ts_us: now_us(),
+            dur_us: None,
+            flow: None,
+            args: args.to_vec(),
+        },
+    );
+}
+
+/// Record a flow marker (`s`/`t`/`f`) bound to correlation id `id` —
+/// the master stamps `Start` at scatter and `End` at gather, the
+/// worker stamps `Step` at task start, and the merged trace renders
+/// the dispatch → compute → gather arrow (DESIGN.md §8).
+pub fn flow_event(name: impl Into<String>, cat: &'static str, ph: FlowPh, id: u64) {
+    if !crate::obs::enabled() {
+        return;
+    }
+    let Some(buf) = with_buf() else { return };
+    push(
+        &buf,
+        SpanEvent {
+            name: name.into(),
+            cat,
+            ts_us: now_us(),
+            dur_us: None,
+            flow: Some((ph.chrome(), id)),
+            args: Vec::new(),
+        },
     );
 }
 
@@ -197,9 +255,70 @@ pub fn take_events() -> Vec<ThreadEvents> {
         .collect()
 }
 
+/// Drain only the *calling thread's* buffer (its tid + events). This
+/// is the dist worker's telemetry export: the serving thread ships its
+/// own spans upstream without stealing other threads' buffers — which
+/// also keeps in-process loopback tests honest, where "worker
+/// processes" are threads sharing this collector.
+pub fn take_local_events() -> (u64, Vec<SpanEvent>) {
+    match with_buf() {
+        Some(b) => {
+            let events = std::mem::take(&mut *b.events.lock().unwrap_or_else(|e| e.into_inner()));
+            (b.tid, events)
+        }
+        None => (0, Vec::new()),
+    }
+}
+
+/// One remote process's rebased events, merged by [`merge_external`].
+struct ExternalProcess {
+    pid: u32,
+    name: String,
+    /// Latest reported span-buffer overflow count for this process.
+    dropped: u64,
+    events: Vec<ExternalEvent>,
+}
+
+/// One event merged from another process, already rebased onto this
+/// process's µs timeline. `ph` uses the wire encoding: 0 = complete,
+/// 1 = instant, 2/3/4 = flow start/step/end.
+#[derive(Clone, Debug)]
+pub struct ExternalEvent {
+    pub name: String,
+    pub cat: String,
+    pub ph: u8,
+    pub ts_us: f64,
+    pub dur_us: f64,
+    pub tid: u64,
+    pub id: u64,
+    pub args: Vec<(String, f64)>,
+}
+
+fn external() -> &'static Mutex<Vec<ExternalProcess>> {
+    static EXTERNAL: OnceLock<Mutex<Vec<ExternalProcess>>> = OnceLock::new();
+    EXTERNAL.get_or_init(|| Mutex::new(Vec::new()))
+}
+
+/// Merge another process's (clock-rebased) events into the collector
+/// under `pid` — the dist master calls this per ingested `Telemetry`
+/// frame with pid = worker index + 2 (the master itself is pid 1), so
+/// [`chrome_trace_json`] emits one timeline with per-process tracks.
+/// `dropped` is the process's cumulative overflow count (kept, not
+/// summed — the sender reports a running total).
+pub fn merge_external(pid: u32, process_name: &str, dropped: u64, events: Vec<ExternalEvent>) {
+    let mut ext = external().lock().unwrap_or_else(|e| e.into_inner());
+    if let Some(p) = ext.iter_mut().find(|p| p.pid == pid) {
+        p.dropped = p.dropped.max(dropped);
+        p.events.extend(events);
+    } else {
+        ext.push(ExternalProcess { pid, name: process_name.to_string(), dropped, events });
+    }
+}
+
 /// Discard everything recorded so far (tests).
 pub fn clear() {
     let _ = take_events();
+    external().lock().unwrap_or_else(|e| e.into_inner()).clear();
     DROPPED.store(0, Ordering::Relaxed);
 }
 
@@ -208,11 +327,46 @@ pub fn dropped() -> u64 {
     DROPPED.load(Ordering::Relaxed)
 }
 
+/// This process's track in the merged trace (the dist master; also
+/// every single-process run). Worker processes merge in at
+/// `worker index + 2` — see [`merge_external`].
+pub const LOCAL_PID: u32 = 1;
+
+/// An instant record carrying a span-buffer overflow count — the
+/// visible-in-the-trace form of the drop counter (plus the one-shot
+/// `log_warn!` at write time).
+fn dropped_record(pid: u32, count: u64) -> Value {
+    Value::obj(vec![
+        ("name", "trace_dropped_events".into()),
+        ("cat", "obs".into()),
+        ("ph", "i".into()),
+        ("s", "t".into()),
+        ("pid", Value::Num(pid as f64)),
+        ("tid", Value::Num(0.0)),
+        ("ts", Value::Num(now_us())),
+        ("args", Value::obj(vec![("count", Value::Num(count as f64))])),
+    ])
+}
+
+fn process_name_record(pid: u32, name: &str) -> Value {
+    Value::obj(vec![
+        ("ph", "M".into()),
+        ("name", "process_name".into()),
+        ("pid", Value::Num(pid as f64)),
+        ("tid", Value::Num(0.0)),
+        ("args", Value::obj(vec![("name", name.into())])),
+    ])
+}
+
 /// Drain the collector into one Chrome trace-event JSON document:
 /// `{"traceEvents": [...], "displayTimeUnit": "ms"}` with "X"
-/// complete events, "i" instants, and "M" thread-name metadata.
+/// complete events, "i" instants, "s"/"t"/"f" flow markers, and "M"
+/// process/thread-name metadata. Events merged from worker processes
+/// ([`merge_external`]) land on their own pid tracks, so a dist
+/// master's document is the whole fleet on one rebased timeline.
 pub fn chrome_trace_json() -> Value {
     let mut events: Vec<Value> = Vec::new();
+    events.push(process_name_record(LOCAL_PID, "master"));
     for t in take_events() {
         if t.events.is_empty() {
             continue;
@@ -220,7 +374,7 @@ pub fn chrome_trace_json() -> Value {
         events.push(Value::obj(vec![
             ("ph", "M".into()),
             ("name", "thread_name".into()),
-            ("pid", 1usize.into()),
+            ("pid", Value::Num(LOCAL_PID as f64)),
             ("tid", Value::Num(t.tid as f64)),
             ("args", Value::obj(vec![("name", t.name.as_str().into())])),
         ]));
@@ -228,16 +382,24 @@ pub fn chrome_trace_json() -> Value {
             let mut fields: Vec<(&str, Value)> = vec![
                 ("name", e.name.as_str().into()),
                 ("cat", e.cat.into()),
-                ("pid", 1usize.into()),
+                ("pid", Value::Num(LOCAL_PID as f64)),
                 ("tid", Value::Num(t.tid as f64)),
                 ("ts", Value::Num(e.ts_us)),
             ];
-            match e.dur_us {
-                Some(d) => {
+            match (e.flow, e.dur_us) {
+                (Some((ph, id)), _) => {
+                    fields.push(("ph", format!("{ph}").as_str().into()));
+                    fields.push(("id", Value::Num(id as f64)));
+                    if ph == 's' {
+                        // Bind the start to its enclosing slice.
+                        fields.push(("bp", "e".into()));
+                    }
+                }
+                (None, Some(d)) => {
                     fields.push(("ph", "X".into()));
                     fields.push(("dur", Value::Num(d)));
                 }
-                None => {
+                (None, None) => {
                     fields.push(("ph", "i".into()));
                     // Instant scope: thread-local.
                     fields.push(("s", "t".into()));
@@ -247,6 +409,52 @@ pub fn chrome_trace_json() -> Value {
                 fields.push((
                     "args",
                     Value::obj(e.args.iter().map(|&(k, v)| (k, Value::Num(v))).collect()),
+                ));
+            }
+            events.push(Value::obj(fields));
+        }
+    }
+    let local_dropped = dropped();
+    if local_dropped > 0 {
+        events.push(dropped_record(LOCAL_PID, local_dropped));
+    }
+    for p in std::mem::take(&mut *external().lock().unwrap_or_else(|e| e.into_inner())) {
+        events.push(process_name_record(p.pid, &p.name));
+        if p.dropped > 0 {
+            events.push(dropped_record(p.pid, p.dropped));
+        }
+        for e in &p.events {
+            let mut fields: Vec<(&str, Value)> = vec![
+                ("name", e.name.as_str().into()),
+                ("cat", e.cat.as_str().into()),
+                ("pid", Value::Num(p.pid as f64)),
+                ("tid", Value::Num(e.tid as f64)),
+                ("ts", Value::Num(e.ts_us)),
+            ];
+            match e.ph {
+                0 => {
+                    fields.push(("ph", "X".into()));
+                    fields.push(("dur", Value::Num(e.dur_us)));
+                }
+                2 | 3 | 4 => {
+                    let ph = ['s', 't', 'f'][(e.ph - 2) as usize];
+                    fields.push(("ph", format!("{ph}").as_str().into()));
+                    fields.push(("id", Value::Num(e.id as f64)));
+                    if ph == 's' {
+                        fields.push(("bp", "e".into()));
+                    }
+                }
+                _ => {
+                    fields.push(("ph", "i".into()));
+                    fields.push(("s", "t".into()));
+                }
+            }
+            if !e.args.is_empty() {
+                fields.push((
+                    "args",
+                    Value::obj(
+                        e.args.iter().map(|(k, v)| (k.as_str(), Value::Num(*v))).collect(),
+                    ),
                 ));
             }
             events.push(Value::obj(fields));
@@ -363,5 +571,103 @@ mod tests {
         let text = crate::ser::to_string_compact(&v);
         assert!(!text.contains('\n'));
         assert!(crate::ser::parse(&text).is_ok());
+    }
+
+    #[test]
+    fn flow_and_external_merge_render_per_process_tracks() {
+        let _g = crate::obs::test_lock();
+        crate::obs::enable();
+        clear();
+        flow_event("task", "flow", FlowPh::Start, 42);
+        flow_event("task", "flow", FlowPh::End, 42);
+        merge_external(
+            3,
+            "worker 1",
+            2,
+            vec![
+                ExternalEvent {
+                    name: "compute".into(),
+                    cat: "worker".into(),
+                    ph: 0,
+                    ts_us: 10.0,
+                    dur_us: 5.0,
+                    tid: 1,
+                    id: 0,
+                    args: vec![("q".into(), 7.0)],
+                },
+                ExternalEvent {
+                    name: "task".into(),
+                    cat: "flow".into(),
+                    ph: 3,
+                    ts_us: 11.0,
+                    dur_us: 0.0,
+                    tid: 1,
+                    id: 42,
+                    args: vec![],
+                },
+            ],
+        );
+        crate::obs::disable();
+        let v = chrome_trace_json();
+        let evs = v.get("traceEvents").unwrap().as_arr().unwrap();
+        let pid = |e: &crate::ser::Value| e.get_f64("pid").unwrap_or(-1.0) as i64;
+        // Local flow start/end on pid 1, shared id.
+        let start = evs
+            .iter()
+            .find(|e| e.get_str("ph") == Some("s"))
+            .expect("flow start present");
+        assert_eq!(pid(start), LOCAL_PID as i64);
+        assert_eq!(start.get_f64("id"), Some(42.0));
+        assert!(evs.iter().any(|e| e.get_str("ph") == Some("f") && e.get_f64("id") == Some(42.0)));
+        // The external worker landed on its own pid track with a
+        // process_name record, its complete span, its flow step, and
+        // its drop-count instant.
+        assert!(evs.iter().any(|e| {
+            e.get_str("ph") == Some("M")
+                && e.get_str("name") == Some("process_name")
+                && pid(e) == 3
+                && e.get("args").and_then(|a| a.get_str("name")) == Some("worker 1")
+        }));
+        assert!(evs.iter().any(|e| {
+            e.get_str("ph") == Some("X") && pid(e) == 3 && e.get_str("name") == Some("compute")
+        }));
+        assert!(evs.iter().any(|e| {
+            e.get_str("ph") == Some("t") && pid(e) == 3 && e.get_f64("id") == Some(42.0)
+        }));
+        assert!(evs.iter().any(|e| {
+            e.get_str("name") == Some("trace_dropped_events")
+                && pid(e) == 3
+                && e.get("args").and_then(|a| a.get_f64("count")) == Some(2.0)
+        }));
+        // External store drained: a second document has no pid-3 events.
+        let v2 = chrome_trace_json();
+        let evs2 = v2.get("traceEvents").unwrap().as_arr().unwrap();
+        assert!(!evs2.iter().any(|e| pid(e) == 3));
+        assert!(crate::ser::parse(&crate::ser::to_string_compact(&v)).is_ok());
+    }
+
+    #[test]
+    fn take_local_events_drains_only_this_thread() {
+        let _g = crate::obs::test_lock();
+        crate::obs::enable();
+        clear();
+        {
+            let _sp = span("mine", "worker");
+        }
+        let other = std::thread::spawn(|| {
+            {
+                let _sp = span("theirs", "worker");
+            }
+            let (tid, evs) = take_local_events();
+            assert!(tid > 0);
+            assert_eq!(evs.len(), 1);
+            assert_eq!(evs[0].name, "theirs");
+        });
+        other.join().unwrap();
+        let (_, mine) = take_local_events();
+        assert!(mine.iter().any(|e| e.name == "mine"));
+        assert!(!mine.iter().any(|e| e.name == "theirs"));
+        crate::obs::disable();
+        clear();
     }
 }

@@ -1,0 +1,113 @@
+//! Fleet telemetry store: the master-side view of every worker's last
+//! `Telemetry` frame and heartbeat-derived link clock (DESIGN.md §8).
+//!
+//! The dist master feeds this from two places: continuously from each
+//! heartbeat's piggybacked RTT/offset estimate ([`record_link`]), and
+//! at epoch boundaries / shutdown from the worker's `Telemetry` frame
+//! ([`record_worker`]) which also carries the worker's own metrics
+//! snapshot and span-drop count. The live surfaces — the Prometheus
+//! `/metrics` endpoint ([`crate::obs::prometheus`]) and the `--watch`
+//! ticker ([`crate::obs::watch`]) — read the fleet back with
+//! [`fleet`].
+//!
+//! Worker metrics are kept *per worker* here rather than merged into
+//! the process-wide [`crate::obs::metrics`] registry: the master
+//! already aggregates fleet totals on its own instruments, and merging
+//! would double-count bytes and busy-seconds. Everything is behind the
+//! caller's `obs::enabled()` gate and touches only wall-clock-free
+//! state, so the obs-on ≡ obs-off bit-exactness pin is unaffected.
+
+use std::collections::BTreeMap;
+use std::sync::{Mutex, OnceLock};
+
+/// Last-known telemetry for one worker, keyed by worker index.
+#[derive(Clone, Debug, Default)]
+pub struct WorkerTelemetry {
+    /// Round stamped on the most recent `Telemetry` frame.
+    pub round: u64,
+    /// Min-filtered link round-trip estimate in µs (0 = none yet).
+    pub rtt_us: u64,
+    /// Estimated worker→master clock offset in µs (meaningless while
+    /// `rtt_us == 0`).
+    pub offset_us: i64,
+    /// Cumulative span-buffer drop count reported by the worker.
+    pub dropped: u64,
+    /// The worker's flattened metrics snapshot (`name -> value`),
+    /// stable-ordered for deterministic rendering.
+    pub metrics: BTreeMap<String, f64>,
+}
+
+fn store() -> &'static Mutex<BTreeMap<u32, WorkerTelemetry>> {
+    static STORE: OnceLock<Mutex<BTreeMap<u32, WorkerTelemetry>>> = OnceLock::new();
+    STORE.get_or_init(|| Mutex::new(BTreeMap::new()))
+}
+
+/// Continuous path: fold one heartbeat's piggybacked link estimate in.
+/// Keeps the minimum-RTT sample (least queueing ⇒ best offset).
+pub fn record_link(worker: u32, rtt_us: u64, offset_us: i64) {
+    if rtt_us == 0 {
+        return; // worker has no estimate yet
+    }
+    let mut s = store().lock().unwrap_or_else(|e| e.into_inner());
+    let w = s.entry(worker).or_default();
+    if w.rtt_us == 0 || rtt_us <= w.rtt_us {
+        w.rtt_us = rtt_us;
+        w.offset_us = offset_us;
+    }
+}
+
+/// Epoch-boundary path: absorb a full `Telemetry` frame's summary
+/// (round, drop count, metrics snapshot; the spans themselves go to
+/// [`crate::obs::span::merge_external`], not here).
+pub fn record_worker(worker: u32, round: u64, dropped: u64, metrics: &[(String, f64)]) {
+    let mut s = store().lock().unwrap_or_else(|e| e.into_inner());
+    let w = s.entry(worker).or_default();
+    w.round = w.round.max(round);
+    w.dropped = w.dropped.max(dropped); // cumulative on the worker side
+    for (k, v) in metrics {
+        w.metrics.insert(k.clone(), *v);
+    }
+}
+
+/// Snapshot the whole fleet (cloned; callers render without the lock).
+pub fn fleet() -> BTreeMap<u32, WorkerTelemetry> {
+    store().lock().unwrap_or_else(|e| e.into_inner()).clone()
+}
+
+/// Drop all fleet state (tests / between sweep cells).
+pub fn clear() {
+    store().lock().unwrap_or_else(|e| e.into_inner()).clear();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn link_estimates_keep_the_min_rtt_sample() {
+        let _g = crate::obs::test_lock();
+        clear();
+        record_link(2, 0, 99); // no estimate: ignored
+        record_link(2, 500, 10);
+        record_link(2, 900, 77); // worse RTT: offset not overwritten
+        record_link(2, 400, -3); // better RTT: wins
+        let f = fleet();
+        assert_eq!(f[&2].rtt_us, 400);
+        assert_eq!(f[&2].offset_us, -3);
+        clear();
+    }
+
+    #[test]
+    fn worker_frames_merge_cumulatively() {
+        let _g = crate::obs::test_lock();
+        clear();
+        record_worker(1, 3, 0, &[("worker.busy_secs".into(), 1.5)]);
+        record_worker(1, 5, 7, &[("worker.busy_secs".into(), 2.5)]);
+        record_worker(1, 4, 7, &[]); // stale round: round keeps max
+        let f = fleet();
+        assert_eq!(f[&1].round, 5);
+        assert_eq!(f[&1].dropped, 7);
+        assert_eq!(f[&1].metrics["worker.busy_secs"], 2.5);
+        clear();
+    }
+}

@@ -1,0 +1,191 @@
+//! `train --watch`: a live status ticker over the metrics registry and
+//! fleet telemetry store (DESIGN.md §8).
+//!
+//! A background thread wakes on a wall-time cadence, freezes
+//! [`crate::obs::metrics::snapshot`] + [`crate::obs::telemetry::fleet`],
+//! and renders one status line to stderr — epoch, latest eval error,
+//! fleet utilization, wire bytes, and per-worker RTT — plus (when a
+//! path is given) one JSON object per tick appended to `status.jsonl`,
+//! so a running sweep stops being a black box.
+//!
+//! The ticker is read-only: it never writes a metric, never touches a
+//! clock the trainer can see, and is started only when the caller has
+//! already decided observability is on — so the obs-on ≡ obs-off
+//! bit-exactness pin holds with or without `--watch`.
+
+use crate::ser::Value;
+use std::io::Write;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Build one status tick as a JSON object from the current registry +
+/// fleet state. Pure read; used by both render targets and the tests.
+pub fn status_value() -> Value {
+    let snap = crate::obs::metrics::snapshot();
+    let f = |section: &str, name: &str| snap.get(section).and_then(|s| s.get_f64(name));
+    let compute = f("sums", "trainer.compute_secs").unwrap_or(0.0);
+    let comm = f("sums", "trainer.comm_secs").unwrap_or(0.0);
+    let stall = f("sums", "net.gather_stall_secs").unwrap_or(0.0);
+    let busy_total = compute + comm + stall;
+    let utilization = if busy_total > 0.0 { compute / busy_total } else { 0.0 };
+    let workers: Vec<Value> = crate::obs::telemetry::fleet()
+        .iter()
+        .map(|(v, w)| {
+            Value::obj(vec![
+                ("worker", Value::Num(*v as f64)),
+                ("round", Value::Num(w.round as f64)),
+                (
+                    "rtt_us",
+                    if w.rtt_us > 0 { Value::Num(w.rtt_us as f64) } else { Value::Null },
+                ),
+                ("dropped_spans", Value::Num(w.dropped as f64)),
+            ])
+        })
+        .collect();
+    Value::obj(vec![
+        ("epoch", Value::Num(f("counters", "trainer.epochs").unwrap_or(0.0))),
+        (
+            "err",
+            f("gauges", "trainer.err").map(Value::Num).unwrap_or(Value::Null),
+        ),
+        ("utilization", Value::Num(utilization)),
+        ("bytes_sent", Value::Num(f("counters", "net.bytes_sent").unwrap_or(0.0))),
+        ("bytes_recv", Value::Num(f("counters", "net.bytes_recv").unwrap_or(0.0))),
+        ("workers", Value::Arr(workers)),
+    ])
+}
+
+/// Render one human-readable status line from a [`status_value`] tick.
+fn status_line(v: &Value) -> String {
+    let err = match v.get_f64("err") {
+        Some(e) => format!("{e:.6e}"),
+        None => "-".to_string(),
+    };
+    let workers = v
+        .get("workers")
+        .and_then(|w| w.as_arr())
+        .map(|w| w.len())
+        .unwrap_or(0);
+    format!(
+        "[watch] epoch={} err={} util={:.1}% bytes_sent={} bytes_recv={} workers={}",
+        v.get_f64("epoch").unwrap_or(0.0),
+        err,
+        100.0 * v.get_f64("utilization").unwrap_or(0.0),
+        v.get_f64("bytes_sent").unwrap_or(0.0),
+        v.get_f64("bytes_recv").unwrap_or(0.0),
+        workers,
+    )
+}
+
+/// A running watch ticker; call [`Watch::stop`] to flush the final
+/// tick and join the thread.
+pub struct Watch {
+    stop: Arc<AtomicBool>,
+    join: Option<std::thread::JoinHandle<()>>,
+}
+
+/// Start the ticker. Every `period` it prints a `[watch]` line to
+/// stderr and, if `status_path` is set, appends one compact JSON
+/// object per tick (JSONL). Never fails the run: file errors are
+/// logged once at stop time via the return of the thread, not raised.
+pub fn start(status_path: Option<PathBuf>, period: Duration) -> Watch {
+    let stop = Arc::new(AtomicBool::new(false));
+    let flag = stop.clone();
+    let join = std::thread::Builder::new()
+        .name("obs-watch".to_string())
+        .spawn(move || {
+            let mut file = status_path.as_ref().and_then(|p| {
+                if let Some(dir) = p.parent() {
+                    if !dir.as_os_str().is_empty() {
+                        let _ = std::fs::create_dir_all(dir);
+                    }
+                }
+                std::fs::OpenOptions::new().create(true).append(true).open(p).ok()
+            });
+            loop {
+                // Sleep in short slices so stop() returns promptly.
+                let mut slept = Duration::ZERO;
+                while slept < period && !flag.load(Ordering::SeqCst) {
+                    let slice = Duration::from_millis(25).min(period - slept);
+                    std::thread::sleep(slice);
+                    slept += slice;
+                }
+                let last = flag.load(Ordering::SeqCst);
+                let tick = status_value();
+                eprintln!("{}", status_line(&tick));
+                if let Some(f) = file.as_mut() {
+                    let _ = writeln!(f, "{}", crate::ser::to_string_compact(&tick));
+                }
+                if last {
+                    return; // final tick emitted after stop was requested
+                }
+            }
+        })
+        .ok();
+    Watch { stop, join }
+}
+
+impl Watch {
+    /// Request the final tick, then join the ticker thread.
+    pub fn stop(mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn status_value_reads_registry_and_fleet() {
+        let _g = crate::obs::test_lock();
+        crate::obs::enable();
+        crate::obs::metrics::reset();
+        crate::obs::telemetry::clear();
+        crate::obs::metrics::add("trainer.epochs", 3);
+        crate::obs::metrics::fset("trainer.err", 0.25);
+        crate::obs::metrics::fadd("trainer.compute_secs", 3.0);
+        crate::obs::metrics::fadd("trainer.comm_secs", 1.0);
+        crate::obs::telemetry::record_link(0, 150, 2);
+        crate::obs::disable();
+        let v = status_value();
+        assert_eq!(v.get_f64("epoch"), Some(3.0));
+        assert_eq!(v.get_f64("err"), Some(0.25));
+        assert_eq!(v.get_f64("utilization"), Some(0.75));
+        let ws = v.get("workers").unwrap().as_arr().unwrap();
+        assert_eq!(ws.len(), 1);
+        assert_eq!(ws[0].get_f64("rtt_us"), Some(150.0));
+        let line = status_line(&v);
+        assert!(line.contains("epoch=3"));
+        assert!(line.contains("util=75.0%"));
+        crate::obs::metrics::reset();
+        crate::obs::telemetry::clear();
+    }
+
+    #[test]
+    fn ticker_appends_jsonl_and_stops() {
+        let _g = crate::obs::test_lock();
+        crate::obs::metrics::reset();
+        let dir = std::env::temp_dir().join(format!("anytime-watch-{}", std::process::id()));
+        let path = dir.join("status.jsonl");
+        let _ = std::fs::remove_file(&path);
+        let w = start(Some(path.clone()), Duration::from_millis(10));
+        std::thread::sleep(Duration::from_millis(40));
+        w.stop();
+        let text = std::fs::read_to_string(&path).expect("status.jsonl written");
+        let lines: Vec<&str> = text.lines().collect();
+        assert!(!lines.is_empty());
+        for line in lines {
+            let v = crate::ser::parse(line).expect("each tick is one JSON object");
+            assert!(v.get("epoch").is_some());
+            assert!(v.get("workers").is_some());
+        }
+        let _ = std::fs::remove_file(&path);
+        let _ = std::fs::remove_dir(&dir);
+    }
+}

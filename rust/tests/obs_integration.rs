@@ -9,6 +9,12 @@
 //!    per-epoch trainer span enclosing that epoch's dispatch span.
 //! 3. **Deterministic snapshots** — under the sequential runtime two
 //!    identical runs produce byte-identical metrics JSON.
+//! 4. **Fleet merge (ISSUE 9, wire v4)** — a loopback dist run with
+//!    spawned worker processes writes ONE Chrome trace whose events
+//!    span the master (pid 1) and every worker (pid v+2) on a common
+//!    rebased timeline, with `dispatch` flow events stitching master
+//!    scatter → worker compute → master gather — and the run's
+//!    iterates still match `sim` bit-exactly.
 //!
 //! The obs collector is process-global, so these tests serialize on a
 //! local mutex and reset all obs state before releasing it.
@@ -35,6 +41,7 @@ fn obs_guard() -> std::sync::MutexGuard<'static, ()> {
     obs::disable();
     obs::span::clear();
     obs::metrics::reset();
+    obs::telemetry::clear();
     g
 }
 
@@ -44,6 +51,7 @@ fn obs_release(_g: std::sync::MutexGuard<'static, ()>) {
     obs::disable();
     obs::span::clear();
     obs::metrics::reset();
+    obs::telemetry::clear();
 }
 
 /// Small deterministic sim-runtime config (same regime as the
@@ -153,6 +161,93 @@ fn trace_file_is_valid_chrome_json_with_nested_spans() {
         dts + ddur,
         ets + edur
     );
+
+    obs_release(g);
+}
+
+/// Spawned workers must be the CLI binary, not this test harness —
+/// cargo exposes its path to integration tests.
+fn use_cli_worker_bin() {
+    static ONCE: std::sync::Once = std::sync::Once::new();
+    ONCE.call_once(|| {
+        std::env::set_var(
+            anytime_sgd::net::master::WORKER_BIN_ENV,
+            env!("CARGO_BIN_EXE_anytime-sgd"),
+        );
+    });
+}
+
+#[test]
+fn dist_run_merges_worker_traces_with_flow_links() {
+    use_cli_worker_bin();
+    let g = obs_guard();
+
+    // Reference run first, obs off: the merged-trace machinery (task
+    // correlation ids, telemetry frames, heartbeat echoes) must not
+    // perturb the numbers.
+    let sim = run_pinned();
+
+    obs::enable();
+    let mut cfg = pinned_cfg();
+    cfg.runtime = anytime_sgd::config::RuntimeSpec::Dist { port: 0, spawn: true, time_scale: 1e-3 };
+    // `Trainer` (and with it the dist runtime, whose Drop ingests the
+    // fleet's final telemetry frames) must be gone before the trace is
+    // written — same ordering the CLI uses.
+    let dist = Trainer::new(cfg).unwrap().run();
+    let path = std::env::temp_dir().join(format!("obs-dist-trace-{}.json", std::process::id()));
+    obs::span::write_chrome_trace(&path).unwrap();
+
+    assert_eq!(sim.x, dist.x, "dist iterates must match sim bit-exactly with obs on");
+
+    let text = std::fs::read_to_string(&path).unwrap();
+    std::fs::remove_file(&path).ok();
+    let doc = anytime_sgd::ser::parse(&text).unwrap();
+    let events = doc.get("traceEvents").unwrap().as_arr().unwrap();
+
+    // One document, every process: master is pid 1, worker v is pid
+    // v + 2, and each worker contributed at least one real span on a
+    // non-negative (rebased) timeline.
+    let mut span_pids = std::collections::BTreeSet::new();
+    for e in events {
+        let ph = e.get_str("ph").expect("every event has ph");
+        assert!(
+            ["M", "X", "i", "s", "t", "f"].contains(&ph),
+            "unexpected phase {ph:?}"
+        );
+        if ph == "X" {
+            assert!(e.get_f64("ts").unwrap() >= 0.0);
+            span_pids.insert(e.get_f64("pid").unwrap() as u64);
+        }
+    }
+    assert!(span_pids.contains(&1), "master spans missing: {span_pids:?}");
+    for v in 0..4u64 {
+        assert!(span_pids.contains(&(v + 2)), "worker {v} spans missing: {span_pids:?}");
+    }
+
+    // Flow stitching: at least one dispatch id must run the full
+    // master-scatter (`s`, pid 1) → worker-compute (`t`, worker pid) →
+    // master-gather (`f`, pid 1) chain.
+    let flows: Vec<(String, u64, u64)> = events
+        .iter()
+        .filter(|e| {
+            matches!(e.get_str("ph"), Some("s" | "t" | "f"))
+                && e.get_str("name") == Some("dispatch")
+        })
+        .map(|e| {
+            (
+                e.get_str("ph").unwrap().to_string(),
+                e.get_f64("id").unwrap() as u64,
+                e.get_f64("pid").unwrap() as u64,
+            )
+        })
+        .collect();
+    let stitched = flows.iter().any(|(ph, id, pid)| {
+        ph == "s"
+            && *pid == 1
+            && flows.iter().any(|(p2, i2, pid2)| p2 == "t" && i2 == id && *pid2 >= 2)
+            && flows.iter().any(|(p3, i3, pid3)| p3 == "f" && i3 == id && *pid3 == 1)
+    });
+    assert!(stitched, "no fully-stitched dispatch flow chain in {} flow events", flows.len());
 
     obs_release(g);
 }
