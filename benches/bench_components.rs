@@ -9,10 +9,10 @@
 // complexity groups are settled here rather than per-site.
 #![allow(clippy::style, clippy::complexity)]
 
-use anytime_sgd::backend::{Consts, NativeWorker, WorkerCompute};
+use anytime_sgd::backend::{Consts, NativeWorker, StepOut, WorkerCompute};
 use anytime_sgd::benchkit::{black_box, Bench};
 use anytime_sgd::data::synthetic_linreg;
-use anytime_sgd::linalg::{dot_f32, gemv, weighted_sum, Matrix};
+use anytime_sgd::linalg::{dot_f32, gemv, weighted_sum, KernelSpec, Matrix};
 use anytime_sgd::methods::gradient_coding::GradientCode;
 use anytime_sgd::partition::{materialize_shards, Assignment};
 use anytime_sgd::rng::Xoshiro256pp;
@@ -57,6 +57,57 @@ fn main() {
         dot_f32(black_box(a.row(0)), black_box(&x))
     });
 
+    // ---- kernel campaign: reference vs fast, per op -----------------------
+    // The BENCHLINE pairs below are the raw material for the committed
+    // BENCH_core.json baseline and the speedup table in EXPERIMENTS.md
+    // §Perf; CI's regression gate pins a subset of these names.
+    for spec in [KernelSpec::Reference, KernelSpec::Fast] {
+        let kn = spec.name();
+        for d in [64usize, 200, 1024] {
+            let u: Vec<f32> = (0..d).map(|i| (i as f32 * 0.37).sin()).collect();
+            let v: Vec<f32> = (0..d).map(|i| (i as f32 * 0.11).cos()).collect();
+            b.run_with_throughput(&format!("kernel/dot_f32 d={d} {kn}"), 2.0 * d as f64, || {
+                spec.dot_f32(black_box(&u), black_box(&v))
+            });
+            b.run_with_throughput(&format!("kernel/dot d={d} {kn}"), 2.0 * d as f64, || {
+                spec.dot(black_box(&u), black_box(&v))
+            });
+            let mut acc = vec![0.0f32; d];
+            b.run_with_throughput(&format!("kernel/axpy d={d} {kn}"), 2.0 * d as f64, || {
+                spec.axpy(black_box(0.125), black_box(&u), &mut acc);
+                acc[0]
+            });
+            for k in [1usize, 4] {
+                let m = {
+                    let mut m = Matrix::zeros(256, d);
+                    rng.fill_normal_f32(m.as_mut_slice());
+                    m
+                };
+                let batch = 32usize;
+                let rows: Vec<u32> = (0..batch).map(|_| rng.index(256) as u32).collect();
+                let coeff: Vec<f32> = (0..batch * k).map(|i| (i as f32 * 0.21).sin()).collect();
+                let mut xk = vec![0.0f32; k * d];
+                // 2*b*k*d flops: one fused multiply-add per (row, class, col).
+                let flops = 2.0 * (batch * k * d) as f64;
+                b.run_with_throughput(
+                    &format!("kernel/sgd_update k={k} d={d} b={batch} {kn}"),
+                    flops,
+                    || {
+                        spec.sgd_update(
+                            black_box(&m),
+                            black_box(&rows),
+                            black_box(&coeff),
+                            k,
+                            -1e-4,
+                            &mut xk,
+                        );
+                        xk[0]
+                    },
+                );
+            }
+        }
+    }
+
     // ---- native SGD block: the worker hot loop ----------------------------
     let ds = synthetic_linreg(5_000, 200, 1e-3, 3);
     let shards = materialize_shards(&ds, &Assignment::new(1, 0));
@@ -68,6 +119,12 @@ fn main() {
     let flops = 64.0 * 2.0 * 2.0 * 32.0 * 200.0;
     b.run_with_throughput("backend/native 64-step block (b=32,d=200)", flops, || {
         w.run_steps(black_box(&x0), black_box(&idx), 0.0, Consts::constant(1e-3)).x_k[0]
+    });
+    // Allocation-free variant: same float work, caller-owned output.
+    let mut out = StepOut::default();
+    b.run_with_throughput("backend/native run_steps_into 64-step block (b=32,d=200)", flops, || {
+        w.run_steps_into(black_box(&x0), black_box(&idx), 0.0, Consts::constant(1e-3), &mut out);
+        out.x_k[0]
     });
 
     // ---- partitioning ------------------------------------------------------
@@ -113,6 +170,9 @@ fn main() {
     b.run_with_throughput("ser/parse 500-row trace json", doc.len() as f64, || {
         anytime_sgd::ser::parse(black_box(&doc)).unwrap()
     });
+
+    // `BENCH_JSON=<path>` dumps the rows for the CI regression gate.
+    b.write_json_env();
 }
 
 fn grads_of(code: &GradientCode, v: usize, rng: &mut Xoshiro256pp) -> Vec<Vec<f32>> {

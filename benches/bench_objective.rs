@@ -14,7 +14,7 @@
 use anytime_sgd::backend::{Consts, NativeWorker, WorkerCompute};
 use anytime_sgd::benchkit::{black_box, Bench};
 use anytime_sgd::data::{synthetic_linreg, synthetic_logreg, synthetic_multiclass};
-use anytime_sgd::linalg::sgd_update;
+use anytime_sgd::linalg::{sgd_update, KernelSpec};
 use anytime_sgd::objective::{GradBuf, LinReg, LogReg, Objective, Softmax};
 use anytime_sgd::partition::{materialize_shards, Assignment, Shard};
 use anytime_sgd::rng::Xoshiro256pp;
@@ -123,6 +123,28 @@ fn main() {
             4.0 * flops_scalar,
             || black_box(w.run_steps(black_box(&x0), &idx, 0.0, consts)).x_k[0],
         );
+
+        // ---- kernel campaign headline rows: reference vs fast ------------
+        // The steps/sec multiple between each pair below is the number
+        // quoted in EXPERIMENTS.md §Perf (targets: >=1.3x linreg,
+        // >=2x softmax k=4).
+        for spec in [KernelSpec::Reference, KernelSpec::Fast] {
+            let kn = spec.name();
+            let mut w = NativeWorker::with_kernels(one_shard(&lin), BATCH, LinReg, spec);
+            let x0 = vec![0.0f32; D];
+            b.run_with_throughput(
+                &format!("kernel/run_steps linreg q={STEPS} b={BATCH} d={D} {kn}"),
+                flops_scalar,
+                || black_box(w.run_steps(black_box(&x0), &idx, 0.0, consts)).x_k[0],
+            );
+            let mut w = NativeWorker::with_kernels(one_shard(&multi), BATCH, Softmax::new(4), spec);
+            let x0 = vec![0.0f32; 4 * D];
+            b.run_with_throughput(
+                &format!("kernel/run_steps softmax k=4 q={STEPS} b={BATCH} d={D} {kn}"),
+                4.0 * flops_scalar,
+                || black_box(w.run_steps(black_box(&x0), &idx, 0.0, consts)).x_k[0],
+            );
+        }
     }
 
     // CI sets BENCH_JSON to scrape these rows into BENCH_core.json.

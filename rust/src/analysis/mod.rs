@@ -207,10 +207,33 @@ fn registry_findings(root: &Path, sources: &[SourceFile]) -> Result<Vec<Finding>
             layer,
         }));
     }
+    // The kernel registry lives in a single file (`linalg/kernels.rs`)
+    // rather than a module-per-entry directory, so there is no wiring
+    // check — but every registered kernel set must still be named in
+    // DESIGN.md, same as the other plug-in layers.
+    let kernels_src = sources
+        .iter()
+        .find(|s| s.path == "rust/src/linalg/kernels.rs")
+        .ok_or_else(|| anyhow!("rust/src/linalg/kernels.rs not found"))?;
+    let kernel_names: Vec<&str> =
+        crate::linalg::kernels::REGISTRY.iter().map(|i| i.name).collect();
+    out.extend(rules::registry(&RegistryCheck {
+        dir: "rust/src/linalg",
+        module_files: &[],
+        mod_src: kernels_src,
+        registered: &kernel_names,
+        design_text: &design_text,
+        layer: "kernel",
+    }));
     // `anytime-sgd list` renders these REGISTRY statics directly;
     // losing a reference would silently drop a layer from enumeration.
     if let Some(main) = sources.iter().find(|s| s.path == "rust/src/main.rs") {
-        for reg in ["protocols::REGISTRY", "objective::REGISTRY", "compress::REGISTRY"] {
+        for reg in [
+            "protocols::REGISTRY",
+            "objective::REGISTRY",
+            "compress::REGISTRY",
+            "linalg::kernels::REGISTRY",
+        ] {
             let hit = main
                 .code
                 .iter()

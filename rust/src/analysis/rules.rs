@@ -47,7 +47,7 @@ pub const RULES: &[RuleInfo] = &[
     },
     RuleInfo {
         id: "registry",
-        about: "every protocol/objective/compressor module is registered and documented",
+        about: "every protocol/objective/compressor/kernel module is registered and documented",
     },
     RuleInfo {
         id: "wire-fingerprint",
@@ -255,7 +255,7 @@ pub struct RegistryCheck<'a> {
     pub registered: &'a [&'a str],
     /// DESIGN.md text.
     pub design_text: &'a str,
-    /// Layer label for messages (`protocol` / `objective` / `compressor`).
+    /// Layer label for messages (`protocol` / `objective` / `compressor` / `kernel`).
     pub layer: &'a str,
 }
 

@@ -59,7 +59,12 @@ impl Consts {
 }
 
 /// Output of a K-step block.
-#[derive(Clone, Debug)]
+///
+/// `Default` is the empty (zero-capacity) pair — the natural seed for
+/// the allocation-free [`WorkerCompute::run_steps_into`] path, which
+/// clears and refills the vectors so steady-state callers stop paying
+/// two heap allocations per dispatched block.
+#[derive(Clone, Debug, Default)]
 pub struct StepOut {
     /// Final iterate `x_k`.
     pub x_k: Vec<f32>,
@@ -90,6 +95,24 @@ pub trait WorkerCompute {
     /// given minibatch row indices (flattened (k, batch)), iteration
     /// offset `t0` for schedule continuity, and schedule `consts`.
     fn run_steps(&mut self, x: &[f32], idx: &[u32], t0: f32, consts: Consts) -> StepOut;
+
+    /// Allocation-free variant of [`WorkerCompute::run_steps`]: the
+    /// block's outputs are written into a caller-owned [`StepOut`]
+    /// (buffers cleared and refilled), so steady-state callers reuse
+    /// capacity instead of allocating two fresh vectors per block.
+    ///
+    /// The default delegates to `run_steps` — backends whose hot loop
+    /// is already allocation-free (the native worker) override this as
+    /// the primitive and implement `run_steps` as a thin wrapper. Both
+    /// paths are pinned bit-identical in
+    /// `rust/tests/kernel_equivalence.rs`.
+    fn run_steps_into(&mut self, x: &[f32], idx: &[u32], t0: f32, consts: Consts, out: &mut StepOut) {
+        let res = self.run_steps(x, idx, t0, consts);
+        out.x_k.clear();
+        out.x_k.extend_from_slice(&res.x_k);
+        out.x_bar.clear();
+        out.x_bar.extend_from_slice(&res.x_bar);
+    }
 }
 
 /// Master-side evaluation: cost + the paper's normalized error.

@@ -12,7 +12,7 @@
 //! pre-refactor hard-wired loop (`rust/tests/objective_equivalence.rs`).
 
 use super::{Consts, EvalOut, Evaluator, StepOut, WorkerCompute};
-use crate::linalg::Matrix;
+use crate::linalg::{KernelSpec, Matrix};
 use crate::objective::{DynObjective, GradBuf, LinReg, Objective, ObjectiveSpec};
 use crate::partition::Shard;
 use std::sync::Arc;
@@ -20,10 +20,16 @@ use std::sync::Arc;
 /// Native per-worker compute bound to a shard, generic over the
 /// training objective (defaulting to least squares). Runtimes that
 /// pick the objective at run time use `NativeWorker<DynObjective>`.
+///
+/// The numeric kernel set ([`KernelSpec`]) is fixed at construction:
+/// `reference` reproduces the historical float-op sequence bit for bit
+/// (the golden-trace default), `fast` routes the same hot loop through
+/// the FMA/cache-blocked set in `linalg::kernels`.
 pub struct NativeWorker<O: Objective = LinReg> {
     shard: Arc<Shard>,
     batch: usize,
     objective: O,
+    kernels: KernelSpec,
     // Scratch (reused, never reallocated in the hot loop):
     x: Vec<f32>,
     xsum: Vec<f32>,
@@ -40,12 +46,23 @@ impl NativeWorker<LinReg> {
 impl<O: Objective> NativeWorker<O> {
     /// Bind a shard to an objective. The parameter dimension becomes
     /// `objective.param_dim(d)` (class-major for multi-logit
-    /// objectives).
+    /// objectives). Kernels default to `reference` — every historical
+    /// constructor stays bit-exact.
     pub fn with_objective(shard: Arc<Shard>, batch: usize, objective: O) -> Self {
+        Self::with_kernels(shard, batch, objective, KernelSpec::Reference)
+    }
+
+    /// Bind a shard to an objective and an explicit kernel set.
+    pub fn with_kernels(
+        shard: Arc<Shard>,
+        batch: usize,
+        objective: O,
+        kernels: KernelSpec,
+    ) -> Self {
         assert!(batch >= 1);
         let pd = objective.param_dim(shard.a.cols());
         let grad = GradBuf::new(batch, objective.classes());
-        Self { shard, batch, objective, x: vec![0.0; pd], xsum: vec![0.0; pd], grad }
+        Self { shard, batch, objective, kernels, x: vec![0.0; pd], xsum: vec![0.0; pd], grad }
     }
 }
 
@@ -63,6 +80,17 @@ impl<O: Objective> WorkerCompute for NativeWorker<O> {
     }
 
     fn run_steps(&mut self, x: &[f32], idx: &[u32], t0: f32, consts: Consts) -> StepOut {
+        let mut out = StepOut::default();
+        self.run_steps_into(x, idx, t0, consts, &mut out);
+        out
+    }
+
+    // The allocation-free primitive: the block loop touches only the
+    // worker's preallocated scratch, and the outputs land in the
+    // caller's reused buffers. `run_steps` above is the owned-Vec
+    // wrapper (same float ops — `kernel_equivalence.rs` pins the two
+    // bit-identical).
+    fn run_steps_into(&mut self, x: &[f32], idx: &[u32], t0: f32, consts: Consts, out: &mut StepOut) {
         let pd = self.dim();
         assert_eq!(x.len(), pd);
         assert_eq!(idx.len() % self.batch, 0, "idx must be k*batch");
@@ -78,23 +106,27 @@ impl<O: Objective> WorkerCompute for NativeWorker<O> {
         for step in 0..k {
             let rows = &idx[step * self.batch..(step + 1) * self.batch];
             // Factored per-sample gradient (the "residual layer") into
-            // the reused buffer, then the fused accumulate+axpy update.
-            self.objective.loss_grad_into(a, y, &self.x, rows, &mut self.grad);
+            // the reused buffer, then the fused accumulate+axpy update —
+            // both routed through the worker's kernel set (`reference`
+            // dispatch is bit-identical to the historical direct calls).
+            self.objective.loss_grad_with(self.kernels, a, y, &self.x, rows, &mut self.grad);
             let lr = consts.lr(t0 + step as f32);
             let scale = -lr * grad_scale / self.batch as f32;
-            crate::linalg::sgd_update(a, rows, &self.grad.coeff, classes, scale, &mut self.x);
+            self.kernels.sgd_update(a, rows, &self.grad.coeff, classes, scale, &mut self.x);
             // Running sum of iterates x_1..x_k.
             for (s, &xv) in self.xsum.iter_mut().zip(self.x.iter()) {
                 *s += xv;
             }
         }
 
-        let x_bar = if k > 0 {
-            self.xsum.iter().map(|&s| s / k as f32).collect()
+        out.x_k.clear();
+        out.x_k.extend_from_slice(&self.x);
+        out.x_bar.clear();
+        if k > 0 {
+            out.x_bar.extend(self.xsum.iter().map(|&s| s / k as f32));
         } else {
-            self.x.clone()
-        };
-        StepOut { x_k: self.x.clone(), x_bar }
+            out.x_bar.extend_from_slice(&self.x);
+        }
     }
 }
 
@@ -184,6 +216,40 @@ mod tests {
         assert!(ds.cost(&out.x_k) < ds.cost(&x0) * 0.5, "not descending");
         assert_eq!(out.x_k.len(), 16);
         assert_eq!(out.x_bar.len(), 16);
+    }
+
+    #[test]
+    fn run_steps_into_matches_run_steps_and_reuses_capacity() {
+        let (_, shard) = setup(256, 16);
+        let mut w = NativeWorker::new(shard.clone(), 8);
+        let x0 = vec![0.0f32; 16];
+        let mut rng = Xoshiro256pp::seed_from_u64(7);
+        let idx: Vec<u32> = (0..8 * 32).map(|_| rng.index(256) as u32).collect();
+        let consts = Consts::constant(0.01);
+        let owned = w.run_steps(&x0, &idx, 0.0, consts);
+
+        let mut w2 = NativeWorker::new(shard, 8);
+        let mut out = StepOut::default();
+        w2.run_steps_into(&x0, &idx, 0.0, consts, &mut out);
+        assert_eq!(owned.x_k, out.x_k);
+        assert_eq!(owned.x_bar, out.x_bar);
+
+        // Second call must refill in place (no capacity churn).
+        let (pk, pb) = (out.x_k.capacity(), out.x_bar.capacity());
+        w2.run_steps_into(&owned.x_k, &idx, 32.0, consts, &mut out);
+        assert_eq!(out.x_k.capacity(), pk);
+        assert_eq!(out.x_bar.capacity(), pb);
+    }
+
+    #[test]
+    fn fast_kernels_descend_like_reference() {
+        let (ds, shard) = setup(256, 16);
+        let mut w = NativeWorker::with_kernels(shard, 8, LinReg, KernelSpec::Fast);
+        let x0 = vec![0.0f32; 16];
+        let mut rng = Xoshiro256pp::seed_from_u64(1);
+        let idx: Vec<u32> = (0..8 * 64).map(|_| rng.index(256) as u32).collect();
+        let out = w.run_steps(&x0, &idx, 0.0, Consts::constant(0.01));
+        assert!(ds.cost(&out.x_k) < ds.cost(&x0) * 0.5, "fast kernels not descending");
     }
 
     #[test]

@@ -258,6 +258,12 @@ pub struct RunConfig {
     /// ([`crate::compress`]); the in-process runtimes pass vectors by
     /// move and ignore it. `identity` (the default) is bit-exact.
     pub compressor: CompressorSpec,
+    /// Numeric kernel set for the worker hot loop
+    /// ([`crate::linalg::kernels`]): `reference` (the default) is
+    /// bit-exact to the golden traces; `fast` trades the bit pins for
+    /// throughput within the documented tolerance contract. Rejected
+    /// for the `dist` runtime — remote agents always run `reference`.
+    pub kernels: crate::linalg::KernelSpec,
     pub seed: u64,
 }
 
@@ -302,6 +308,7 @@ impl RunConfig {
             backend: Backend::Native,
             runtime: RuntimeSpec::Sim,
             compressor: CompressorSpec::Identity,
+            kernels: crate::linalg::KernelSpec::Reference,
             seed: 42,
         }
     }
@@ -601,6 +608,11 @@ impl RunConfig {
         if let Some(x) = v.get("compressor") {
             c.compressor = CompressorSpec::from_json(x)?;
         }
+        // Kernel set: a bare registry name (`"kernels": "fast"`,
+        // aliases accepted) or the object form `{"kind": "fast"}`.
+        if let Some(x) = v.get("kernels") {
+            c.kernels = crate::linalg::KernelSpec::from_json(x)?;
+        }
         c.validate()?;
         Ok(c)
     }
@@ -691,6 +703,20 @@ impl RunConfig {
                     );
                 }
             }
+        }
+        self.kernels.validate()?;
+        // The dist wire protocol does not carry a kernel selection (the
+        // frozen wire fingerprint predates the axis), so remote worker
+        // agents always run `reference` — reject rather than silently
+        // diverge from what the user asked for.
+        if self.kernels != crate::linalg::KernelSpec::Reference
+            && matches!(self.runtime, RuntimeSpec::Dist { .. })
+        {
+            bail!(
+                "runtime `dist` only supports `--kernels reference` (the wire \
+                 protocol does not ship a kernel selection; remote workers \
+                 always run the reference set)"
+            );
         }
         protocols::validate_spec(&self.method, self)?;
         Ok(())
@@ -973,6 +999,39 @@ mod tests {
             .unwrap_err()
             .to_string();
         assert!(err.contains("identity"), "{err}");
+    }
+
+    #[test]
+    fn kernels_json_parses_and_defaults() {
+        use crate::linalg::KernelSpec;
+        // Default is the bit-exact reference set.
+        assert_eq!(RunConfig::base().kernels, KernelSpec::Reference);
+        // Bare name, alias, and object form.
+        let c = RunConfig::from_json(&parse(r#"{"kernels": "fast"}"#).unwrap()).unwrap();
+        assert_eq!(c.kernels, KernelSpec::Fast);
+        let c = RunConfig::from_json(&parse(r#"{"kernels": "opt"}"#).unwrap()).unwrap();
+        assert_eq!(c.kernels, KernelSpec::Fast);
+        let c =
+            RunConfig::from_json(&parse(r#"{"kernels": {"kind": "reference"}}"#).unwrap()).unwrap();
+        assert_eq!(c.kernels, KernelSpec::Reference);
+        // Unknown names fail closed with the registry listing.
+        let err = RunConfig::from_json(&parse(r#"{"kernels": "turbo"}"#).unwrap())
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("reference"), "{err}");
+        // Fast kernels work on real but are rejected on dist (the wire
+        // ships no kernel selection).
+        let c = RunConfig::from_json(
+            &parse(r#"{"kernels": "fast", "runtime": "real"}"#).unwrap(),
+        )
+        .unwrap();
+        assert_eq!(c.kernels, KernelSpec::Fast);
+        let err = RunConfig::from_json(
+            &parse(r#"{"kernels": "fast", "runtime": "dist"}"#).unwrap(),
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("reference"), "{err}");
     }
 
     #[test]

@@ -185,10 +185,11 @@ impl Trainer {
             Backend::Native => {
                 if cfg.runtime == RuntimeSpec::Sim {
                     for sh in &shards {
-                        workers.push(Box::new(NativeWorker::with_objective(
+                        workers.push(Box::new(NativeWorker::with_kernels(
                             sh.clone(),
                             cfg.batch,
                             objective.clone(),
+                            cfg.kernels,
                         )));
                     }
                 }
@@ -246,10 +247,11 @@ impl Trainer {
             // Real/dist × non-native is rejected by `RunConfig::validate`,
             // which every construction path runs before assembling.
             RuntimeSpec::Real { time_scale } => (
-                Box::new(ThreadedRuntime::new(
+                Box::new(ThreadedRuntime::with_kernels(
                     &shards,
                     cfg.batch,
                     objective.clone(),
+                    cfg.kernels,
                     delay.clone(),
                     root.clone(),
                     consts,
@@ -599,6 +601,16 @@ impl TrainerBuilder {
     /// `identity`, bit-exact). The in-process runtimes ignore it.
     pub fn compressor(mut self, c: crate::compress::CompressorSpec) -> Self {
         self.cfg.compressor = c;
+        self
+    }
+
+    /// Select the numeric kernel set ([`crate::linalg::kernels`];
+    /// default `reference`, bit-exact to the golden traces — `fast`
+    /// trades the bit pins for throughput within the documented
+    /// tolerance contract). Rejected for the `dist` runtime at
+    /// `build()` (remote worker agents always run `reference`).
+    pub fn kernels(mut self, k: crate::linalg::KernelSpec) -> Self {
+        self.cfg.kernels = k;
         self
     }
 

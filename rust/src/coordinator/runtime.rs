@@ -180,6 +180,10 @@ pub struct SequentialRuntime {
     root: Xoshiro256pp,
     consts: Consts,
     batch: usize,
+    /// Minibatch index scratch, reused across tasks and epochs (the
+    /// per-task `q·batch` allocation was a measurable slice of small-`d`
+    /// dispatch cost — EXPERIMENTS.md §Perf).
+    idx: Vec<u32>,
 }
 
 impl SequentialRuntime {
@@ -190,7 +194,7 @@ impl SequentialRuntime {
         consts: Consts,
         batch: usize,
     ) -> Self {
-        Self { workers, delay, root, consts, batch }
+        Self { workers, delay, root, consts, batch, idx: Vec::new() }
     }
 }
 
@@ -225,8 +229,33 @@ pub(crate) fn sample_stream(
     batch: usize,
     rows: usize,
 ) -> Vec<u32> {
+    let mut out = Vec::new();
+    sample_stream_into(root, label, key, v, q, batch, rows, &mut out);
+    out
+}
+
+/// Allocation-reusing form of [`sample_stream`]: clears and refills the
+/// caller's buffer with the *identical* draw sequence (same splits,
+/// same order), so steady-state dispatch loops stop paying one
+/// `q·batch`-sized allocation per task. The values are pinned equal to
+/// the owned form in the tests below.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn sample_stream_into(
+    root: &Xoshiro256pp,
+    label: &str,
+    key: u64,
+    v: usize,
+    q: usize,
+    batch: usize,
+    rows: usize,
+    out: &mut Vec<u32>,
+) {
     let mut rng = root.split(label, v as u64, key);
-    (0..q * batch).map(|_| rng.index(rows) as u32).collect()
+    out.clear();
+    out.reserve(q * batch);
+    for _ in 0..q * batch {
+        out.push(rng.index(rows) as u32);
+    }
 }
 
 /// Report for a worker that reported but moved nothing (zero-step
@@ -280,8 +309,8 @@ impl WorkerRuntime for SequentialRuntime {
             }
             let rows = self.workers[v].shard_rows();
             let (label, key) = task.stream;
-            let idx = sample_stream(&self.root, label, key, v, q, self.batch, rows);
-            let step_out = self.workers[v].run_steps(&task.x0, &idx, task.t0, self.consts);
+            sample_stream_into(&self.root, label, key, v, q, self.batch, rows, &mut self.idx);
+            let step_out = self.workers[v].run_steps(&task.x0, &self.idx, task.t0, self.consts);
             out.push(Some(Report { q, busy_secs: busy, x_k: step_out.x_k, x_bar: step_out.x_bar }));
         }
         out
@@ -295,6 +324,8 @@ impl WorkerRuntime for SequentialRuntime {
 /// Per-thread worker state of the threaded runtime.
 struct PoolWorker {
     compute: NativeWorker<DynObjective>,
+    /// Minibatch index scratch, reused across dispatch rounds.
+    idx: Vec<u32>,
 }
 
 /// Threaded execution under real time: N persistent worker threads
@@ -320,11 +351,39 @@ impl ThreadedRuntime {
         consts: Consts,
         time_scale: f64,
     ) -> Self {
+        Self::with_kernels(
+            shards,
+            batch,
+            objective,
+            crate::linalg::KernelSpec::Reference,
+            delay,
+            root,
+            consts,
+            time_scale,
+        )
+    }
+
+    /// Like [`ThreadedRuntime::new`] but with an explicit kernel set
+    /// for the per-thread native workers (`reference` keeps the
+    /// sim ≡ real bit-exactness pin; `fast` trades it for throughput
+    /// within the `linalg::kernels` tolerance contract).
+    #[allow(clippy::too_many_arguments)]
+    pub fn with_kernels(
+        shards: &[Arc<Shard>],
+        batch: usize,
+        objective: DynObjective,
+        kernels: crate::linalg::KernelSpec,
+        delay: DelayModel,
+        root: Xoshiro256pp,
+        consts: Consts,
+        time_scale: f64,
+    ) -> Self {
         assert!(time_scale > 0.0, "time_scale must be > 0 (got {time_scale})");
         let states: Vec<PoolWorker> = shards
             .iter()
             .map(|sh| PoolWorker {
-                compute: NativeWorker::with_objective(sh.clone(), batch, objective.clone()),
+                compute: NativeWorker::with_kernels(sh.clone(), batch, objective.clone(), kernels),
+                idx: Vec::new(),
             })
             .collect();
         Self { pool: WorkerPool::new(states), delay: Arc::new(delay), root, consts, batch, time_scale }
@@ -377,6 +436,7 @@ pub(crate) struct PlannedTask {
 /// sampling stream, which makes `x_k`/`x_bar` bit-identical to the
 /// sequential runtime whenever `q` matches (numerics are real, time is
 /// modeled — DESIGN.md §2; host compute speed never perturbs the chain).
+#[allow(clippy::too_many_arguments)]
 pub(crate) fn execute_planned(
     compute: &mut dyn WorkerCompute,
     v: usize,
@@ -385,6 +445,7 @@ pub(crate) fn execute_planned(
     consts: Consts,
     batch: usize,
     time_scale: f64,
+    idx_scratch: &mut Vec<u32>,
 ) -> Report {
     let _sp = crate::obs::span::span_with(
         "compute",
@@ -423,8 +484,8 @@ pub(crate) fn execute_planned(
 
     // Phase 2 — numerics.
     let rows = compute.shard_rows();
-    let idx = sample_stream(root, &task.label, task.key, v, q, batch, rows);
-    let out = compute.run_steps(&task.x0, &idx, task.t0, consts);
+    sample_stream_into(root, &task.label, task.key, v, q, batch, rows, idx_scratch);
+    let out = compute.run_steps(&task.x0, idx_scratch, task.t0, consts);
     let busy_secs = if q == task.target { task.busy } else { q as f64 * task.rate };
     Report { q, busy_secs, x_k: out.x_k, x_bar: out.x_bar }
 }
@@ -458,7 +519,7 @@ fn run_task_real(
         busy,
         budget_secs: budget_hedge_secs(task.work),
     };
-    Some(execute_planned(&mut w.compute, v, &planned, root, consts, batch, time_scale))
+    Some(execute_planned(&mut w.compute, v, &planned, root, consts, batch, time_scale, &mut w.idx))
 }
 
 impl WorkerRuntime for ThreadedRuntime {
@@ -653,6 +714,17 @@ mod tests {
         assert_eq!(r.q, 0);
         assert!((r.busy_secs - 0.1).abs() < 1e-12, "10 step-equivalents x 0.01 s");
         assert!(out[2].is_none());
+    }
+
+    #[test]
+    fn sample_stream_into_draws_the_identical_sequence() {
+        let root = Xoshiro256pp::seed_from_u64(42);
+        let mut buf = vec![999u32; 3]; // stale content must be cleared
+        for (q, batch, rows) in [(0usize, 4usize, 10usize), (1, 1, 1), (7, 4, 600), (64, 8, 33)] {
+            let owned = sample_stream(&root, "minibatch", 5, 2, q, batch, rows);
+            sample_stream_into(&root, "minibatch", 5, 2, q, batch, rows, &mut buf);
+            assert_eq!(owned, buf, "q={q} batch={batch} rows={rows}");
+        }
     }
 
     #[test]

@@ -41,6 +41,12 @@
 //!   registry (identity, top-k, EF-signSGD, 8/16-bit linear
 //!   quantization), negotiated per connection and applied through
 //!   delta/error-feedback streams (`--compressor topk`) — DESIGN.md §9.
+//! * **kernels** — the numeric-kernel layer ([`linalg::kernels`]): the
+//!   core float ops (dot/axpy/fused SGD update/logits) dispatch through
+//!   a registry-keyed [`linalg::KernelSpec`] — `reference` (default,
+//!   bit-exact to the golden traces) or `fast` (FMA + multi-accumulator
+//!   + cache-blocked fusion, tolerance-pinned; `--kernels fast`) —
+//!   DESIGN.md §11, EXPERIMENTS.md §Perf.
 //! * **sweep** — the experiment-campaign engine: parameter grids over
 //!   [`config::RunConfig`], a named scenario library, a bounded-thread
 //!   parallel runner, and multi-seed mean ± CI aggregation

@@ -1,0 +1,544 @@
+//! `kernels` — the kernel-dispatch layer: another registry-keyed
+//! plug-in axis (protocol × objective × compressor × **kernels**)
+//! selecting which float-op sequence the numeric core runs.
+//!
+//! Two kernel sets ship:
+//!
+//! * `reference` — the default: today's float-op-for-float-op paths
+//!   ([`super::dot_f32`], [`super::axpy`], [`super::sgd_update`], the
+//!   per-class logit loop). Every bit-exactness pin the repo carries —
+//!   golden traces, sim ≡ real ≡ dist, obs-on ≡ obs-off — runs through
+//!   this set, which is why it stays the default.
+//! * `fast` — the raw-speed set (ROADMAP item 3): FMA + 8-lane
+//!   multi-accumulator [`dot_f32_fast`]/[`axpy_fast`]/[`dot_fast`] with
+//!   `mul_add` and explicit chunking for autovectorization, a fused
+//!   multi-class [`sgd_update_fast`] that reads each minibatch row once
+//!   per cache-blocked column tile and updates all k class-major slices
+//!   while the tile is hot in L1 (the reference path re-reads the row k
+//!   times via per-class axpy), and a single-pass [`logits_fast`]
+//!   computing all k logits per row in one tile sweep (the reference
+//!   softmax path makes k separate full-row `dot_f32` passes).
+//!
+//! ## Tolerance contract
+//!
+//! `fast ≡ reference` within a pinned per-op bound, *not* bit-exactly:
+//! `mul_add` rounds once where `a*b + c` rounds twice, and the blocked
+//! accumulation orders differ. The property tests in
+//! `rust/tests/kernel_equivalence.rs` pin the bound per op across sizes
+//! 1..~300 (every remainder-lane shape) against an f64 shadow
+//! computation; a full training run under `--kernels fast` converges to
+//! the same error targets as `reference` (sweep smoke in
+//! `rust/tests/sweep_integration.rs`). `reference` itself is re-pinned
+//! bit-exact against the raw `linalg` entry points here and against the
+//! golden traces in `rust/tests/golden_traces.rs`.
+//!
+//! `mul_add` lowers to a hardware FMA only when the build enables it
+//! (`RUSTFLAGS="-C target-cpu=native"` or `-C target-feature=+fma`);
+//! without the feature it would lower to a libm call and *lose* the
+//! race, so [`fma32`]/[`fma64`] fall back to `a*b + c` at compile time.
+//! Either lowering satisfies the tolerance contract; a given build is
+//! internally deterministic (same binary → same bits), which keeps the
+//! sim ≡ real equivalence intact *within* a kernel set.
+//!
+//! The kernel choice never ships over the wire: the dist `Assign` frame
+//! (wire v4) does not negotiate kernels, so `RunConfig::validate`
+//! rejects `fast` × `--runtime dist` instead of silently downgrading a
+//! remote worker to `reference` (see DESIGN.md §11).
+//!
+//! ## Adding a kernel set (~30 LoC)
+//!
+//! 1. implement the op set here (`*_myset` functions);
+//! 2. add a variant to [`KernelSpec`] plus arms in `name()`/`parse()`
+//!    and every dispatch method;
+//! 3. add a `KernelInfo` and register it in [`REGISTRY`];
+//! 4. document the set in DESIGN.md §11 (the analysis `registry` rule
+//!    fails the build until every registered name is documented) and
+//!    pin its tolerance in `rust/tests/kernel_equivalence.rs`.
+//!
+//! Config JSON (`"kernels": "fast"`), `train --kernels`, the sweep
+//! `kernels` axis (`/krn-*` group keys), `anytime-sgd list`, and
+//! `Trainer::builder().kernels(..)` all resolve through the registry.
+
+use super::Matrix;
+use crate::ser::Value;
+use anyhow::{anyhow, bail, Result};
+
+/// Registry entry: identity and lookup metadata for one kernel set.
+pub struct KernelInfo {
+    /// Canonical registry key (CLI/JSON name).
+    pub name: &'static str,
+    /// Accepted alternate names.
+    pub aliases: &'static [&'static str],
+    /// One-line description for `anytime-sgd list`.
+    pub about: &'static str,
+    /// Whether the set reproduces the golden float-op sequence bit for
+    /// bit (only `reference` does; everything else is tolerance-pinned).
+    pub bit_exact: bool,
+}
+
+/// The `reference` registry entry.
+pub const REFERENCE_INFO: KernelInfo = KernelInfo {
+    name: "reference",
+    aliases: &["ref", "golden"],
+    about: "golden float-op sequence; every bit-exactness pin runs through it (default)",
+    bit_exact: true,
+};
+
+/// The `fast` registry entry.
+pub const FAST_INFO: KernelInfo = KernelInfo {
+    name: "fast",
+    aliases: &["opt"],
+    about: "FMA + 8-lane unrolled dot/axpy, fused cache-blocked sgd_update, single-pass logits",
+    bit_exact: false,
+};
+
+/// Every registered kernel set. Order is display order for
+/// `anytime-sgd list`.
+pub static REGISTRY: &[&KernelInfo] = &[&REFERENCE_INFO, &FAST_INFO];
+
+/// Resolve a kernel-set name (canonical or alias) to its registry entry.
+pub fn lookup(name: &str) -> Result<&'static KernelInfo> {
+    REGISTRY
+        .iter()
+        .find(|i| i.name == name || i.aliases.contains(&name))
+        .copied()
+        .ok_or_else(|| anyhow!("unknown kernel set `{name}` (available: {})", names().join(", ")))
+}
+
+/// Registry entry for a spec (infallible: every variant is registered).
+pub fn info(spec: KernelSpec) -> &'static KernelInfo {
+    REGISTRY
+        .iter()
+        .find(|i| i.name == spec.name())
+        .copied()
+        .unwrap_or_else(|| unreachable!("unregistered kernel spec {spec:?}"))
+}
+
+/// Canonical names, registry order.
+pub fn names() -> Vec<&'static str> {
+    REGISTRY.iter().map(|i| i.name).collect()
+}
+
+/// Whether `name` resolves (canonical or alias).
+pub fn exists(name: &str) -> bool {
+    lookup(name).is_ok()
+}
+
+/// Which kernel set the numeric core dispatches through — the
+/// config-level selector, threaded through JSON, the CLI, sweep grids,
+/// and the trainer builder. The hot loop holds the spec by value and
+/// dispatches per op via a two-arm match the optimizer resolves per
+/// call site.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum KernelSpec {
+    /// The golden float-op sequence (default; all bit-exactness pins).
+    #[default]
+    Reference,
+    /// The optimized set (FMA, multi-accumulator, cache-blocked fusion).
+    Fast,
+}
+
+impl KernelSpec {
+    /// Canonical registry name.
+    pub fn name(self) -> &'static str {
+        match self {
+            KernelSpec::Reference => "reference",
+            KernelSpec::Fast => "fast",
+        }
+    }
+
+    /// Parse a CLI/JSON name (canonical or alias) through the registry.
+    pub fn parse(name: &str) -> Result<Self> {
+        let info = lookup(name)?;
+        Ok(match info.name {
+            "reference" => KernelSpec::Reference,
+            "fast" => KernelSpec::Fast,
+            other => unreachable!("registry entry `{other}` has no spec arm"),
+        })
+    }
+
+    /// From a config JSON value: a bare name string (`"fast"`) or an
+    /// object with a `kind` field (`{"kind": "fast"}`).
+    pub fn from_json(v: &Value) -> Result<Self> {
+        if let Some(name) = v.as_str() {
+            return Self::parse(name);
+        }
+        if v.as_obj().is_some() {
+            let kind =
+                v.get_str("kind").ok_or_else(|| anyhow!("kernels object needs a `kind` name"))?;
+            return Self::parse(kind);
+        }
+        bail!("kernels must be a name string or an object with `kind`")
+    }
+
+    /// Config JSON form (the canonical name).
+    pub fn to_json(self) -> Value {
+        Value::Str(self.name().to_string())
+    }
+
+    /// Config-level validation hook (kept for symmetry with the other
+    /// spec enums; no kernel set currently carries parameters).
+    pub fn validate(self) -> Result<()> {
+        Ok(())
+    }
+
+    /// Whether this set reproduces the golden float-op sequence.
+    pub fn bit_exact(self) -> bool {
+        info(self).bit_exact
+    }
+
+    // ------------------------------------------------------- dispatch
+
+    /// f64-accumulated dot product (norms, metrics).
+    #[inline]
+    pub fn dot(self, a: &[f32], b: &[f32]) -> f64 {
+        match self {
+            KernelSpec::Reference => super::dot(a, b),
+            KernelSpec::Fast => dot_fast(a, b),
+        }
+    }
+
+    /// f32-accumulated dot product (the per-sample residual/logit op).
+    #[inline]
+    pub fn dot_f32(self, a: &[f32], b: &[f32]) -> f32 {
+        match self {
+            KernelSpec::Reference => super::dot_f32(a, b),
+            KernelSpec::Fast => dot_f32_fast(a, b),
+        }
+    }
+
+    /// `y += alpha * x`.
+    #[inline]
+    pub fn axpy(self, alpha: f32, x: &[f32], y: &mut [f32]) {
+        match self {
+            KernelSpec::Reference => super::axpy(alpha, x, y),
+            KernelSpec::Fast => axpy_fast(alpha, x, y),
+        }
+    }
+
+    /// Fused minibatch SGD update (see [`super::sgd_update`] for the
+    /// factored-gradient contract).
+    #[inline]
+    pub fn sgd_update(
+        self,
+        a: &Matrix,
+        rows: &[u32],
+        coeff: &[f32],
+        classes: usize,
+        scale: f32,
+        x: &mut [f32],
+    ) {
+        match self {
+            KernelSpec::Reference => super::sgd_update(a, rows, coeff, classes, scale, x),
+            KernelSpec::Fast => sgd_update_fast(a, rows, coeff, classes, scale, x),
+        }
+    }
+
+    /// All-class logits of one sample: `out[c] = row · x[c*d..(c+1)*d]`
+    /// for a class-major parameter (`d = row.len()`, `k = out.len()`).
+    #[inline]
+    pub fn logits(self, row: &[f32], x: &[f32], out: &mut [f32]) {
+        match self {
+            KernelSpec::Reference => logits_reference(row, x, out),
+            KernelSpec::Fast => logits_fast(row, x, out),
+        }
+    }
+}
+
+// ---------------------------------------------------------- fast set
+
+/// Column-tile width for the cache-blocked fast kernels: 512 f32 = 2 KiB
+/// per slice, so a row tile plus k = 4 class tiles (10 KiB) sit in L1
+/// together with room to spare.
+const TILE: usize = 512;
+
+/// Fused multiply-add that is an FMA instruction when the build enables
+/// the target feature and a plain `a*b + c` otherwise — `mul_add`
+/// without hardware FMA lowers to a libm call, which would make the
+/// "fast" set slower than `reference`.
+#[inline(always)]
+fn fma32(a: f32, b: f32, c: f32) -> f32 {
+    if cfg!(target_feature = "fma") {
+        a.mul_add(b, c)
+    } else {
+        a * b + c
+    }
+}
+
+/// f64 twin of [`fma32`].
+#[inline(always)]
+fn fma64(a: f64, b: f64, c: f64) -> f64 {
+    if cfg!(target_feature = "fma") {
+        a.mul_add(b, c)
+    } else {
+        a * b + c
+    }
+}
+
+/// `fast` f64-accumulated dot: 8 independent accumulator lanes (the
+/// reference [`super::dot`] runs 4) with FMA. f32 products widen to f64
+/// exactly, so the only difference from reference is accumulation order.
+#[inline]
+pub fn dot_fast(a: &[f32], b: &[f32]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    let n = a.len();
+    let chunks = n / 8;
+    let mut acc = [0.0f64; 8];
+    for c in 0..chunks {
+        let i = c * 8;
+        let (xs, ys) = (&a[i..i + 8], &b[i..i + 8]);
+        for l in 0..8 {
+            acc[l] = fma64(xs[l] as f64, ys[l] as f64, acc[l]);
+        }
+    }
+    let mut s = ((acc[0] + acc[1]) + (acc[2] + acc[3])) + ((acc[4] + acc[5]) + (acc[6] + acc[7]));
+    for i in chunks * 8..n {
+        s = fma64(a[i] as f64, b[i] as f64, s);
+    }
+    s
+}
+
+/// `fast` f32 dot: the reference 8-lane shape with each lane's
+/// multiply-accumulate fused. Without hardware FMA this is bit-identical
+/// to [`super::dot_f32`]; with it, each lane rounds once instead of
+/// twice (≤ 1 ulp per step, covered by the tolerance pin).
+#[inline]
+pub fn dot_f32_fast(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let n = a.len();
+    let chunks = n / 8;
+    let mut acc = [0.0f32; 8];
+    for c in 0..chunks {
+        let i = c * 8;
+        let (xs, ys) = (&a[i..i + 8], &b[i..i + 8]);
+        for l in 0..8 {
+            acc[l] = fma32(xs[l], ys[l], acc[l]);
+        }
+    }
+    let mut s = (acc[0] + acc[1]) + (acc[2] + acc[3]) + ((acc[4] + acc[5]) + (acc[6] + acc[7]));
+    for i in chunks * 8..n {
+        s = fma32(a[i], b[i], s);
+    }
+    s
+}
+
+/// `fast` `y += alpha * x`: explicit 8-wide chunks (autovectorizes to
+/// full-width vector FMAs) plus a scalar remainder. Elementwise, so
+/// fast-vs-reference differs by at most the single/double rounding of
+/// each element's multiply-add.
+#[inline]
+pub fn axpy_fast(alpha: f32, x: &[f32], y: &mut [f32]) {
+    debug_assert_eq!(x.len(), y.len());
+    let n = x.len();
+    let chunks = n / 8;
+    for c in 0..chunks {
+        let i = c * 8;
+        let xs = &x[i..i + 8];
+        let ys = &mut y[i..i + 8];
+        for l in 0..8 {
+            ys[l] = fma32(alpha, xs[l], ys[l]);
+        }
+    }
+    for i in chunks * 8..n {
+        y[i] = fma32(alpha, x[i], y[i]);
+    }
+}
+
+/// `fast` fused SGD update. For `classes == 1` it is the reference
+/// per-row loop with the FMA axpy. For `classes > 1` the reference path
+/// re-reads each minibatch row `k` times (one full-length axpy per
+/// class); here each row is walked once per cache-blocked column tile
+/// and all k class-major slices are updated while the row tile is hot
+/// in L1 — the row's memory traffic drops from `k·d` to `d` reads.
+pub fn sgd_update_fast(
+    a: &Matrix,
+    rows: &[u32],
+    coeff: &[f32],
+    classes: usize,
+    scale: f32,
+    x: &mut [f32],
+) {
+    let d = a.cols();
+    debug_assert!(classes >= 1);
+    debug_assert_eq!(x.len(), classes * d);
+    debug_assert_eq!(coeff.len(), rows.len() * classes);
+    if classes == 1 {
+        for (i, &r) in rows.iter().enumerate() {
+            axpy_fast(scale * coeff[i], a.row(r as usize), x);
+        }
+        return;
+    }
+    for (i, &r) in rows.iter().enumerate() {
+        let row = a.row(r as usize);
+        let cs = &coeff[i * classes..(i + 1) * classes];
+        let mut j0 = 0;
+        while j0 < d {
+            let j1 = (j0 + TILE).min(d);
+            let rt = &row[j0..j1];
+            for (c, &cc) in cs.iter().enumerate() {
+                axpy_fast(scale * cc, rt, &mut x[c * d + j0..c * d + j1]);
+            }
+            j0 = j1;
+        }
+    }
+}
+
+/// Reference all-class logits: k separate full-row [`super::dot_f32`]
+/// passes — exactly the float-op sequence the softmax objective ran
+/// before the dispatch layer existed (the bit-exactness contract).
+#[inline]
+pub fn logits_reference(row: &[f32], x: &[f32], out: &mut [f32]) {
+    let d = row.len();
+    debug_assert_eq!(x.len(), out.len() * d);
+    for (c, o) in out.iter_mut().enumerate() {
+        *o = super::dot_f32(row, &x[c * d..(c + 1) * d]);
+    }
+}
+
+/// `fast` all-class logits: one sweep over the row in cache-blocked
+/// column tiles, accumulating every class's partial dot while the row
+/// tile is hot in L1 — the row is read from memory once instead of k
+/// times.
+pub fn logits_fast(row: &[f32], x: &[f32], out: &mut [f32]) {
+    let d = row.len();
+    let k = out.len();
+    debug_assert_eq!(x.len(), k * d);
+    out.fill(0.0);
+    let mut j0 = 0;
+    while j0 < d {
+        let j1 = (j0 + TILE).min(d);
+        let rt = &row[j0..j1];
+        for (c, o) in out.iter_mut().enumerate() {
+            *o += dot_f32_fast(rt, &x[c * d + j0..c * d + j1]);
+        }
+        j0 = j1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const ALL: [KernelSpec; 2] = [KernelSpec::Reference, KernelSpec::Fast];
+
+    #[test]
+    fn registry_names_unique_and_resolvable() {
+        let names = names();
+        let mut sorted = names.clone();
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert_eq!(sorted.len(), names.len(), "duplicate registry names");
+        for info in REGISTRY {
+            assert!(exists(info.name));
+            assert!(!info.about.is_empty());
+            for alias in info.aliases {
+                assert_eq!(lookup(alias).unwrap().name, info.name, "alias {alias}");
+                assert!(!names.contains(alias), "alias {alias} shadows a canonical name");
+            }
+        }
+        assert_eq!(names, vec!["reference", "fast"]);
+        assert!(lookup("turbo").unwrap_err().to_string().contains("available"));
+    }
+
+    #[test]
+    fn specs_parse_and_round_trip_json() {
+        for spec in ALL {
+            assert_eq!(KernelSpec::parse(spec.name()).unwrap(), spec);
+            assert_eq!(KernelSpec::from_json(&spec.to_json()).unwrap(), spec);
+            let obj = Value::obj(vec![("kind", spec.to_json())]);
+            assert_eq!(KernelSpec::from_json(&obj).unwrap(), spec);
+            spec.validate().unwrap();
+            assert_eq!(info(spec).name, spec.name());
+        }
+        assert_eq!(KernelSpec::default(), KernelSpec::Reference);
+        assert_eq!(KernelSpec::parse("ref").unwrap(), KernelSpec::Reference);
+        assert_eq!(KernelSpec::parse("golden").unwrap(), KernelSpec::Reference);
+        assert_eq!(KernelSpec::parse("opt").unwrap(), KernelSpec::Fast);
+        assert!(KernelSpec::parse("turbo").is_err());
+        assert!(KernelSpec::from_json(&Value::Num(3.0)).is_err());
+        assert!(KernelSpec::from_json(&Value::obj(vec![("k", Value::Num(2.0))])).is_err());
+        // Only reference carries the bit-exactness flag.
+        assert!(KernelSpec::Reference.bit_exact());
+        assert!(!KernelSpec::Fast.bit_exact());
+    }
+
+    #[test]
+    fn reference_dispatch_is_bit_identical_to_the_raw_entry_points() {
+        let a: Vec<f32> = (0..133).map(|i| (i as f32) * 0.17 - 11.0).collect();
+        let b: Vec<f32> = (0..133).map(|i| (i as f32) * -0.05 + 3.0).collect();
+        let k = KernelSpec::Reference;
+        assert_eq!(k.dot(&a, &b).to_bits(), crate::linalg::dot(&a, &b).to_bits());
+        assert_eq!(k.dot_f32(&a, &b).to_bits(), crate::linalg::dot_f32(&a, &b).to_bits());
+        let mut y1 = b.clone();
+        let mut y2 = b.clone();
+        k.axpy(0.37, &a, &mut y1);
+        crate::linalg::axpy(0.37, &a, &mut y2);
+        assert_eq!(
+            y1.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            y2.iter().map(|v| v.to_bits()).collect::<Vec<_>>()
+        );
+        // Reference logits = the per-class dot_f32 loop, bit for bit.
+        let d = 19;
+        let classes = 3;
+        let row: Vec<f32> = (0..d).map(|i| (i as f32).sin()).collect();
+        let x: Vec<f32> = (0..classes * d).map(|i| (i as f32).cos()).collect();
+        let mut got = vec![0.0f32; classes];
+        k.logits(&row, &x, &mut got);
+        for c in 0..classes {
+            let want = crate::linalg::dot_f32(&row, &x[c * d..(c + 1) * d]);
+            assert_eq!(got[c].to_bits(), want.to_bits(), "class {c}");
+        }
+    }
+
+    #[test]
+    fn fast_ops_track_an_f64_shadow_across_remainder_sizes() {
+        // Smoke-level bound here; the full per-op property pins live in
+        // rust/tests/kernel_equivalence.rs.
+        for n in [1usize, 7, 8, 9, 63, 64, 65, 300] {
+            let a: Vec<f32> = (0..n).map(|i| ((i * 37 + 11) % 97) as f32 * 0.021 - 1.0).collect();
+            let b: Vec<f32> = (0..n).map(|i| ((i * 53 + 5) % 89) as f32 * 0.017 - 0.7).collect();
+            let exact: f64 = a.iter().zip(&b).map(|(x, y)| *x as f64 * *y as f64).sum();
+            let mag: f64 = a.iter().zip(&b).map(|(x, y)| (*x as f64 * *y as f64).abs()).sum();
+            let tol = 1e-4 * (1.0 + mag);
+            assert!((dot_f32_fast(&a, &b) as f64 - exact).abs() <= tol, "dot_f32 n={n}");
+            assert!((dot_fast(&a, &b) - exact).abs() <= 1e-9 * (1.0 + mag), "dot n={n}");
+            let mut y = b.clone();
+            axpy_fast(0.31, &a, &mut y);
+            for i in 0..n {
+                let want = 0.31f64 * a[i] as f64 + b[i] as f64;
+                assert!((y[i] as f64 - want).abs() <= 1e-6 * (1.0 + want.abs()), "axpy n={n} i={i}");
+            }
+        }
+    }
+
+    #[test]
+    fn fast_sgd_update_and_logits_match_reference_within_tolerance() {
+        let d = 70; // not a multiple of the 8-lane width or the tile
+        let k = 4;
+        let m = 12;
+        let mut data = vec![0.0f32; m * d];
+        for (i, v) in data.iter_mut().enumerate() {
+            *v = ((i * 29 + 13) % 101) as f32 * 0.02 - 1.0;
+        }
+        let a = Matrix::from_vec(m, d, data);
+        let rows: Vec<u32> = (0..8u32).map(|i| (i * 3) % m as u32).collect();
+        let coeff: Vec<f32> = (0..rows.len() * k).map(|i| (i as f32) * 0.07 - 1.1).collect();
+        let scale = -0.013f32;
+        let mut x_ref: Vec<f32> = (0..k * d).map(|i| (i as f32) * 0.003).collect();
+        let mut x_fast = x_ref.clone();
+        crate::linalg::sgd_update(&a, &rows, &coeff, k, scale, &mut x_ref);
+        sgd_update_fast(&a, &rows, &coeff, k, scale, &mut x_fast);
+        for i in 0..k * d {
+            let diff = (x_ref[i] as f64 - x_fast[i] as f64).abs();
+            assert!(diff <= 1e-4 * (1.0 + x_ref[i].abs() as f64), "x[{i}]: {diff}");
+        }
+        let mut l_ref = vec![0.0f32; k];
+        let mut l_fast = vec![0.0f32; k];
+        logits_reference(a.row(3), &x_ref, &mut l_ref);
+        logits_fast(a.row(3), &x_ref, &mut l_fast);
+        for c in 0..k {
+            let diff = (l_ref[c] as f64 - l_fast[c] as f64).abs();
+            assert!(diff <= 1e-4 * (1.0 + l_ref[c].abs() as f64), "logit {c}: {diff}");
+        }
+    }
+}

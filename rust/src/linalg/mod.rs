@@ -6,8 +6,10 @@
 //! accumulate in f64 where it matters for reproducibility of the error
 //! metric (‖Ax − Ax*‖ over 5e5 rows is ill-conditioned in pure f32).
 
+pub mod kernels;
 mod solve;
 
+pub use kernels::KernelSpec;
 pub use solve::{lstsq, solve, solve_consistent};
 
 /// Row-major dense f32 matrix.
@@ -108,8 +110,9 @@ pub fn dot(a: &[f32], b: &[f32]) -> f64 {
 
 /// Fast f32-accumulated dot for the SGD hot loop (residual computation).
 /// 8-way unrolled; the minibatch residual tolerates f32 accumulation.
-/// (A 32-wide 4-bank variant was tried in the perf pass and measured
-/// ~20% slower — register pressure; see EXPERIMENTS.md §Perf.)
+/// (Lane-width choice and the campaign's measurement protocol are
+/// documented in EXPERIMENTS.md §Perf; wider multi-bank variants are
+/// expected to lose to register pressure on 16-register x86-64.)
 #[inline]
 pub fn dot_f32(a: &[f32], b: &[f32]) -> f32 {
     debug_assert_eq!(a.len(), b.len());
@@ -215,9 +218,12 @@ pub fn weighted_sum(xs: &[&[f32]], w: &[f64], out: &mut [f32]) {
         assert_eq!(x.len(), d, "weighted_sum: ragged inputs");
     }
     // Column-major accumulation order over a row chunk keeps all worker
-    // vectors' chunks hot in cache.
+    // vectors' chunks hot in cache. The accumulator lives on the stack
+    // (32 KiB) so the per-epoch combine never allocates; the arithmetic
+    // order is identical to the old heap scratch, so the
+    // order-independence pin below is unaffected.
     const CHUNK: usize = 4096;
-    let mut acc = vec![0.0f64; CHUNK.min(d)];
+    let mut acc = [0.0f64; CHUNK];
     let mut start = 0;
     while start < d {
         let end = (start + CHUNK).min(d);

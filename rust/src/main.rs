@@ -53,8 +53,8 @@ fn usage() -> String {
                   parallel; mean ± CI aggregates under results/)\n\
        figures    regenerate paper figures (fig1..fig6 | theory | ablations |\n\
                   variance | async | logreg | softmax | all)\n\
-       list       enumerate registered protocols, objectives, compressors, runtimes,\n\
-                  scenarios, presets\n\
+       list       enumerate registered protocols, objectives, compressors, kernels,\n\
+                  runtimes, scenarios, presets\n\
        partition  print + validate the Table-I data assignment\n\
        inspect    list AOT artifacts\n\
        lint       run the in-tree contract linter (determinism, panic-freedom,\n\
@@ -129,6 +129,13 @@ fn cmd_train(args: &[String]) -> Result<()> {
             None,
             "dist-wire payload compressor: identity (default, bit-exact) | topk | \
              signsgd | q8 | q16; ignored by the in-process runtimes",
+        )
+        .flag(
+            "kernels",
+            FlagKind::Str,
+            None,
+            "numeric kernel set: reference (default, bit-exact to golden traces) | \
+             fast (FMA + cache-blocked hot loops, tolerance-pinned); sim/real only",
         )
         .flag(
             "spawn-workers",
@@ -217,6 +224,9 @@ fn cmd_train(args: &[String]) -> Result<()> {
     }
     if let Some(c) = m.get("compressor") {
         cfg.compressor = anytime_sgd::compress::CompressorSpec::parse(c)?;
+    }
+    if let Some(k) = m.get("kernels") {
+        cfg.kernels = anytime_sgd::linalg::KernelSpec::parse(k)?;
     }
     if m.is_set("spawn-workers") && m.is_set("listen") {
         bail!(
@@ -578,7 +588,7 @@ fn cmd_figures(args: &[String]) -> Result<()> {
 fn cmd_list(args: &[String]) -> Result<()> {
     let cmd = Command::new(
         "list",
-        "enumerate registered protocols, objectives, compressors, runtimes, scenarios, and presets",
+        "enumerate registered protocols, objectives, compressors, kernels, runtimes, scenarios, and presets",
     );
     let _m = cmd.parse(args).map_err(|e| anyhow::anyhow!("{e}"))?;
 
@@ -612,6 +622,17 @@ fn cmd_list(args: &[String]) -> Result<()> {
         };
         let loss = if c.lossless { " [lossless]" } else { "" };
         println!("  {:<16} {}{loss}{aliases}", c.name, c.about);
+    }
+
+    println!("\nKernels (`train --kernels` / `sweep --kernels` / config `kernels`):");
+    for k in anytime_sgd::linalg::kernels::REGISTRY {
+        let aliases = if k.aliases.is_empty() {
+            String::new()
+        } else {
+            format!("  (aliases: {})", k.aliases.join(", "))
+        };
+        let pin = if k.bit_exact { " [bit-exact]" } else { "" };
+        println!("  {:<16} {}{pin}{aliases}", k.name, k.about);
     }
 
     println!("\nRuntimes (`train --runtime` / `sweep --runtime` / config `runtime`):");

@@ -343,6 +343,8 @@ fn serve_tasks(
     let mut dec_x0 = StreamDecoder::new(compressor);
     let mut enc_xk = StreamEncoder::new(compressor);
     let mut enc_xbar = StreamEncoder::new(compressor);
+    // Minibatch index scratch, reused across task rounds.
+    let mut idx_scratch: Vec<u32> = Vec::new();
     let mut served = 0usize;
     let mut last_round = 0u64;
     loop {
@@ -386,8 +388,16 @@ fn serve_tasks(
                         busy: t.busy,
                         budget_secs: t.budget_secs,
                     };
-                    let rep =
-                        execute_planned(compute, v, &planned, root, consts, batch, time_scale);
+                    let rep = execute_planned(
+                        compute,
+                        v,
+                        &planned,
+                        root,
+                        consts,
+                        batch,
+                        time_scale,
+                        &mut idx_scratch,
+                    );
                     let reply = Msg::Report(Box::new(ReportMsg {
                         round: t.round,
                         worker: v as u32,

@@ -8,7 +8,7 @@
 
 use super::{GradBuf, Objective, ObjectiveInfo};
 use crate::data::Dataset;
-use crate::linalg::{axpy, dot_f32, Matrix};
+use crate::linalg::{axpy, dot_f32, KernelSpec, Matrix};
 use std::ops::Range;
 
 pub const INFO: ObjectiveInfo = ObjectiveInfo {
@@ -36,10 +36,25 @@ impl Objective for LinReg {
     }
 
     fn loss_grad_into(&self, a: &Matrix, y: &[f32], x: &[f32], rows: &[u32], buf: &mut GradBuf) {
+        self.loss_grad_with(KernelSpec::Reference, a, y, x, rows, buf)
+    }
+
+    fn loss_grad_with(
+        &self,
+        kernels: KernelSpec,
+        a: &Matrix,
+        y: &[f32],
+        x: &[f32],
+        rows: &[u32],
+        buf: &mut GradBuf,
+    ) {
+        // One loop for both sets: `Reference` dispatches to the exact
+        // `dot_f32` the pre-dispatch path called (bit-exact), `Fast` to
+        // the FMA 8-lane variant.
         for (i, &r) in rows.iter().enumerate() {
             let r = r as usize;
             debug_assert!(r < a.rows(), "row index {r} out of shard");
-            buf.coeff[i] = dot_f32(a.row(r), x) - y[r];
+            buf.coeff[i] = kernels.dot_f32(a.row(r), x) - y[r];
         }
     }
 

@@ -7,7 +7,7 @@
 
 use super::{GradBuf, Objective, ObjectiveInfo};
 use crate::data::Dataset;
-use crate::linalg::{axpy, dot_f32, Matrix};
+use crate::linalg::{axpy, dot_f32, KernelSpec, Matrix};
 use std::ops::Range;
 
 pub const INFO: ObjectiveInfo = ObjectiveInfo {
@@ -40,10 +40,24 @@ impl Objective for LogReg {
     }
 
     fn loss_grad_into(&self, a: &Matrix, y: &[f32], x: &[f32], rows: &[u32], buf: &mut GradBuf) {
+        self.loss_grad_with(KernelSpec::Reference, a, y, x, rows, buf)
+    }
+
+    fn loss_grad_with(
+        &self,
+        kernels: KernelSpec,
+        a: &Matrix,
+        y: &[f32],
+        x: &[f32],
+        rows: &[u32],
+        buf: &mut GradBuf,
+    ) {
+        // `Reference` dispatches to the exact `dot_f32` the pre-dispatch
+        // path called (bit-exact); the sigmoid is kernel-independent.
         for (i, &r) in rows.iter().enumerate() {
             let r = r as usize;
             debug_assert!(r < a.rows(), "row index {r} out of shard");
-            buf.coeff[i] = sigmoid(dot_f32(a.row(r), x)) - y[r];
+            buf.coeff[i] = sigmoid(kernels.dot_f32(a.row(r), x)) - y[r];
         }
     }
 

@@ -62,7 +62,7 @@ pub use softmax::Softmax;
 
 use crate::config::{DataSpec, RunConfig};
 use crate::data::Dataset;
-use crate::linalg::Matrix;
+use crate::linalg::{KernelSpec, Matrix};
 use crate::ser::Value;
 use anyhow::{anyhow, bail, Result};
 use std::ops::Range;
@@ -116,6 +116,25 @@ pub trait Objective: Send + Sync {
     /// `k·d`-vector.
     fn loss_grad_into(&self, a: &Matrix, y: &[f32], x: &[f32], rows: &[u32], buf: &mut GradBuf);
 
+    /// [`Objective::loss_grad_into`] with an explicit kernel set
+    /// ([`crate::linalg::kernels`]): the worker hot loop calls this so
+    /// `--kernels fast` reaches the coefficient computation. The default
+    /// ignores the spec and runs the reference path; implementations
+    /// override to dispatch, and `KernelSpec::Reference` must reproduce
+    /// `loss_grad_into` bit for bit (the golden-trace contract).
+    fn loss_grad_with(
+        &self,
+        kernels: KernelSpec,
+        a: &Matrix,
+        y: &[f32],
+        x: &[f32],
+        rows: &[u32],
+        buf: &mut GradBuf,
+    ) {
+        let _ = kernels;
+        self.loss_grad_into(a, y, x, rows, buf)
+    }
+
     /// Evaluator chunk: `(Σ cost_i, Σ ‖pred_i − ref_i‖²)` over rows
     /// `lo..hi` of the full dataset. `ref_pred` is this objective's
     /// reference-prediction vector (`classes()` values per row,
@@ -168,6 +187,17 @@ impl<T: Objective + ?Sized> Objective for Arc<T> {
     }
     fn loss_grad_into(&self, a: &Matrix, y: &[f32], x: &[f32], rows: &[u32], buf: &mut GradBuf) {
         (**self).loss_grad_into(a, y, x, rows, buf)
+    }
+    fn loss_grad_with(
+        &self,
+        kernels: KernelSpec,
+        a: &Matrix,
+        y: &[f32],
+        x: &[f32],
+        rows: &[u32],
+        buf: &mut GradBuf,
+    ) {
+        (**self).loss_grad_with(kernels, a, y, x, rows, buf)
     }
     fn eval_chunk(
         &self,

@@ -12,7 +12,7 @@
 
 use super::{GradBuf, Objective, ObjectiveInfo};
 use crate::data::Dataset;
-use crate::linalg::{axpy, dot_f32, Matrix};
+use crate::linalg::{axpy, dot_f32, KernelSpec, Matrix};
 use std::ops::Range;
 
 pub const INFO: ObjectiveInfo = ObjectiveInfo {
@@ -49,16 +49,30 @@ impl Objective for Softmax {
     }
 
     fn loss_grad_into(&self, a: &Matrix, y: &[f32], x: &[f32], rows: &[u32], buf: &mut GradBuf) {
+        self.loss_grad_with(KernelSpec::Reference, a, y, x, rows, buf)
+    }
+
+    fn loss_grad_with(
+        &self,
+        kernels: KernelSpec,
+        a: &Matrix,
+        y: &[f32],
+        x: &[f32],
+        rows: &[u32],
+        buf: &mut GradBuf,
+    ) {
         let (d, k) = (a.cols(), self.classes);
         debug_assert_eq!(x.len(), k * d);
         for (i, &r) in rows.iter().enumerate() {
             let r = r as usize;
             debug_assert!(r < a.rows(), "row index {r} out of shard");
             let row = a.row(r);
-            // Stable softmax over the k logits (scratch reused per step).
-            for c in 0..k {
-                buf.logits[c] = dot_f32(row, &x[c * d..(c + 1) * d]);
-            }
+            // All k logits of this sample (scratch reused per step):
+            // `Reference` runs the historical k separate full-row
+            // `dot_f32` passes bit for bit; `Fast` reads the row once
+            // per cache-blocked tile (`linalg::kernels::logits_fast`).
+            kernels.logits(row, x, &mut buf.logits);
+            // Stable softmax over the k logits.
             let max = buf.logits.iter().copied().fold(f32::NEG_INFINITY, f32::max);
             let mut denom = 0.0f32;
             for l in buf.logits.iter_mut() {
@@ -131,7 +145,18 @@ impl Objective for Softmax {
     fn block_grad_into(&self, a: &Matrix, y: &[f32], x: &[f32], range: Range<usize>, g: &mut [f32]) {
         let (d, k) = (a.cols(), self.classes);
         debug_assert_eq!(g.len(), k * d);
-        let mut logits = vec![0.0f32; k];
+        // Logit scratch on the stack for realistic class counts; the
+        // heap fallback only triggers beyond 64 classes (k is bounded by
+        // MAX_SOFTMAX_CLASSES, so it must stay dynamic). Same float-op
+        // sequence either way — gradient coding's numerics are pinned.
+        let mut stack = [0.0f32; 64];
+        let mut heap = Vec::new();
+        let logits: &mut [f32] = if k <= 64 {
+            &mut stack[..k]
+        } else {
+            heap.resize(k, 0.0);
+            &mut heap
+        };
         for i in range {
             let row = a.row(i);
             for c in 0..k {

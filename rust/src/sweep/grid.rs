@@ -4,7 +4,8 @@
 //! A [`Grid`] holds a base config plus per-axis value lists; empty axes
 //! mean "use the base value". [`Grid::expand`] walks the cartesian
 //! product in a fixed order (scenario → objective → method → workers →
-//! redundancy → T → T_c → backend → runtime → compressor → seed), so
+//! redundancy → T → T_c → backend → runtime → compressor → kernels →
+//! seed), so
 //! cell order — and therefore every
 //! downstream aggregate — is independent of thread scheduling.
 //!
@@ -66,6 +67,11 @@ pub struct Grid {
     /// Only the dist runtime reads the setting; sweeping it against
     /// sim/real cells produces identical curves per value.
     pub compressors: Vec<String>,
+    /// Numeric kernel-set names (empty = base, i.e. `reference`) —
+    /// [`crate::linalg::kernels`]. Sweeping `reference,fast` runs the
+    /// same grid point under both hot-loop implementations, which is
+    /// the perf campaign's convergence-equivalence check.
+    pub kernels: Vec<String>,
     /// Root seeds (never empty).
     pub seeds: Vec<u64>,
 }
@@ -87,6 +93,7 @@ impl Grid {
             backends: Vec::new(),
             runtimes: Vec::new(),
             compressors: Vec::new(),
+            kernels: Vec::new(),
             seeds: vec![seed],
         }
     }
@@ -141,6 +148,11 @@ impl Grid {
         self
     }
 
+    pub fn kernels<S: Into<String>>(mut self, v: impl IntoIterator<Item = S>) -> Self {
+        self.kernels = v.into_iter().map(Into::into).collect();
+        self
+    }
+
     pub fn seeds(mut self, v: impl IntoIterator<Item = u64>) -> Self {
         self.seeds = v.into_iter().collect();
         self
@@ -179,6 +191,7 @@ impl Grid {
             * Self::axis_len(self.backends.len())
             * Self::axis_len(self.runtimes.len())
             * Self::axis_len(self.compressors.len())
+            * Self::axis_len(self.kernels.len())
             * self.seeds.len()
     }
 
@@ -244,6 +257,12 @@ impl Grid {
         } else {
             self.compressors.iter().map(|c| Some(c.as_str())).collect()
         };
+        // Kernel axis: `None` = keep the base config's kernel set.
+        let kernels: Vec<Option<&str>> = if self.kernels.is_empty() {
+            vec![None]
+        } else {
+            self.kernels.iter().map(|k| Some(k.as_str())).collect()
+        };
         let mut cells = Vec::with_capacity(self.len());
         for sc in &self.scenarios {
             for &obj in &objectives {
@@ -260,6 +279,7 @@ impl Grid {
                                 for &bk in &backends {
                                     for &rt in &runtimes {
                                     for &cmp in &compressors {
+                                    for &krn in &kernels {
                                         let mut group = format!("{sc}/{method}");
                                         if let (true, Some(o)) = (objectives.len() > 1, obj) {
                                             group.push_str(&format!("/obj-{o}"));
@@ -285,6 +305,9 @@ impl Grid {
                                         if let (true, Some(c)) = (compressors.len() > 1, cmp) {
                                             group.push_str(&format!("/cmp-{c}"));
                                         }
+                                        if let (true, Some(k)) = (kernels.len() > 1, krn) {
+                                            group.push_str(&format!("/krn-{k}"));
+                                        }
                                         for &seed in &self.seeds {
                                             let mut cfg = self.base.clone();
                                             cfg.workers = n;
@@ -295,6 +318,10 @@ impl Grid {
                                             if let Some(c) = cmp {
                                                 cfg.compressor =
                                                     crate::compress::CompressorSpec::parse(c)?;
+                                            }
+                                            if let Some(k) = krn {
+                                                cfg.kernels =
+                                                    crate::linalg::KernelSpec::parse(k)?;
                                             }
                                             scenarios::apply(sc, &mut cfg)?;
                                             if let Some(o) = obj {
@@ -314,6 +341,7 @@ impl Grid {
                                                 cfg,
                                             });
                                         }
+                                    }
                                     }
                                     }
                                 }
@@ -341,6 +369,7 @@ impl Grid {
     ///   "backends": ["native"],
     ///   "runtimes": ["sim", "real"],   // execution-runtime axis
     ///   "compressors": ["identity", "topk"],  // dist-wire codec axis
+    ///   "kernels": ["reference", "fast"],     // numeric kernel-set axis
     ///   "time_scale": 1e-4,            // compression for `real` cells
     ///   "seeds": 5            // count, or an explicit array [7, 8, 9]
     /// }
@@ -348,7 +377,7 @@ impl Grid {
     pub fn from_json(v: &Value) -> Result<Self> {
         const KNOWN: &[&str] = &[
             "base", "scenarios", "methods", "workers", "redundancy", "t", "t_c", "objectives",
-            "backends", "runtimes", "compressors", "time_scale", "seeds",
+            "backends", "runtimes", "compressors", "kernels", "time_scale", "seeds",
         ];
         let obj = v.as_obj().ok_or_else(|| anyhow!("sweep spec must be a JSON object"))?;
         for key in obj.keys() {
@@ -405,6 +434,12 @@ impl Grid {
             g.compressors = str_list(a, "compressors")?;
             for c in &g.compressors {
                 crate::compress::lookup(c).map_err(|e| anyhow!("compressors: {e}"))?;
+            }
+        }
+        if let Some(a) = v.get("kernels") {
+            g.kernels = str_list(a, "kernels")?;
+            for k in &g.kernels {
+                crate::linalg::kernels::lookup(k).map_err(|e| anyhow!("kernels: {e}"))?;
             }
         }
         match v.get("seeds") {
@@ -716,6 +751,48 @@ mod tests {
         assert_eq!(g.compressors, vec!["identity", "q8"]);
         assert!(Grid::from_json(&parse(r#"{"compressors": ["gzip"]}"#).unwrap()).is_err());
         let g = Grid::new(tiny_base()).scenarios(["ideal"]).compressors(["gzip"]);
+        assert!(g.expand().is_err());
+    }
+
+    #[test]
+    fn kernels_axis_expands_and_keys_groups() {
+        use crate::linalg::KernelSpec;
+        let g = Grid::new(tiny_base())
+            .scenarios(["ideal"])
+            .methods(["anytime", "sync"])
+            .kernels(["reference", "fast"]);
+        assert_eq!(g.len(), 4);
+        let cells = g.expand().unwrap();
+        assert_eq!(cells.len(), 4);
+        for k in ["reference", "fast"] {
+            assert!(
+                cells.iter().any(|x| x.group.contains(&format!("/krn-{k}"))),
+                "missing /krn-{k}: {:?}",
+                cells.iter().map(|x| &x.group).collect::<Vec<_>>()
+            );
+        }
+        assert!(cells
+            .iter()
+            .any(|c| c.group.contains("/krn-fast") && c.cfg.kernels == KernelSpec::Fast));
+        // Aliases resolve through the spec parser.
+        let cells = Grid::new(tiny_base())
+            .scenarios(["ideal"])
+            .kernels(["golden", "opt"])
+            .expand()
+            .unwrap();
+        assert!(cells.iter().any(|c| c.cfg.kernels == KernelSpec::Fast));
+        // Single-kernel grids keep their group keys unchanged.
+        let cells = Grid::new(tiny_base()).scenarios(["ideal"]).expand().unwrap();
+        assert!(cells.iter().all(|c| !c.group.contains("/krn-")));
+        assert!(cells.iter().all(|c| c.cfg.kernels == KernelSpec::Reference));
+        // JSON spec form + unknown names fail closed.
+        let g = Grid::from_json(
+            &parse(r#"{"scenarios": ["ideal"], "kernels": ["reference", "fast"]}"#).unwrap(),
+        )
+        .unwrap();
+        assert_eq!(g.kernels, vec!["reference", "fast"]);
+        assert!(Grid::from_json(&parse(r#"{"kernels": ["turbo"]}"#).unwrap()).is_err());
+        let g = Grid::new(tiny_base()).scenarios(["ideal"]).kernels(["turbo"]);
         assert!(g.expand().is_err());
     }
 

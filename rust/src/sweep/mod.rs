@@ -113,6 +113,13 @@ pub fn cli_command() -> Command {
             "comma-separated dist-wire compressors (identity|topk|signsgd|q8|q16) — \
              sweep the payload-codec axis (only `dist` cells read it)",
         )
+        .flag(
+            "kernels",
+            FlagKind::Str,
+            None,
+            "comma-separated numeric kernel sets (reference|fast) — sweep both to \
+             check the perf campaign's convergence equivalence (sim/real cells only)",
+        )
         .flag("epochs", FlagKind::Int, None, "override epochs per cell")
         .flag("threads", FlagKind::Int, Some("0"), "worker threads (0 = all cores)")
         .flag("name", FlagKind::Str, Some("sweep"), "campaign name (output file stem)")
@@ -201,6 +208,12 @@ pub fn grid_from_matches(m: &Matches) -> Result<Grid> {
             crate::compress::lookup(c).map_err(|e| anyhow!("--compressor: {e}"))?;
         }
     }
+    if let Some(s) = m.get("kernels") {
+        g.kernels = split_names(s);
+        for k in &g.kernels {
+            crate::linalg::kernels::lookup(k).map_err(|e| anyhow!("--kernels: {e}"))?;
+        }
+    }
     Ok(g)
 }
 
@@ -242,6 +255,19 @@ mod tests {
         let m = cli_command().parse(&args).unwrap();
         let err = grid_from_matches(&m).unwrap_err().to_string();
         assert!(err.contains("identity"), "{err}");
+    }
+
+    #[test]
+    fn kernels_flag_feeds_the_grid_axis() {
+        let args: Vec<String> =
+            ["--kernels", "reference,fast"].iter().map(|s| s.to_string()).collect();
+        let m = cli_command().parse(&args).unwrap();
+        let g = grid_from_matches(&m).unwrap();
+        assert_eq!(g.kernels, vec!["reference", "fast"]);
+        let args: Vec<String> = ["--kernels", "turbo"].iter().map(|s| s.to_string()).collect();
+        let m = cli_command().parse(&args).unwrap();
+        let err = grid_from_matches(&m).unwrap_err().to_string();
+        assert!(err.contains("reference"), "{err}");
     }
 
     #[test]

@@ -1,0 +1,326 @@
+//! The kernel-registry contract (DESIGN.md §11):
+//!
+//! 1. `reference` via dispatch is BIT-EXACT: routing any op — or a
+//!    whole worker block — through `KernelSpec::Reference` reproduces
+//!    the free-function path bit for bit, so the golden traces and
+//!    every historical pin survive the dispatch layer.
+//! 2. `fast` is TOLERANCE-PINNED: every fast op stays within a stated
+//!    per-op bound of an f64 shadow computation (and of reference),
+//!    across sizes 1..≈300 so every remainder-lane branch is hit.
+//! 3. The allocation-free `run_steps_into` path is bit-identical to
+//!    the allocating `run_steps`.
+//! 4. Full-run convergence: a `Trainer` on `--kernels fast` reaches
+//!    the same error regime as `reference` — the tolerances are far
+//!    below the convergence scale.
+
+// Crate-posture lint gate (see lib.rs): correctness/suspicious/perf
+// lints stay load-bearing under CI's `-D warnings`; the style/
+// complexity groups are settled here rather than per-site.
+#![allow(clippy::style, clippy::complexity)]
+
+use anytime_sgd::backend::{Consts, NativeWorker, StepOut, WorkerCompute};
+use anytime_sgd::config::{DataSpec, RunConfig, Schedule};
+use anytime_sgd::coordinator::Trainer;
+use anytime_sgd::linalg::{self, KernelSpec, Matrix};
+use anytime_sgd::objective::{GradBuf, LinReg, LogReg, Objective, Softmax};
+use anytime_sgd::partition::{materialize_shards, Assignment};
+use anytime_sgd::protocols;
+use anytime_sgd::rng::Xoshiro256pp;
+use anytime_sgd::straggler::{CommSpec, DelaySpec, StragglerEnv};
+use std::sync::Arc;
+
+/// Sizes covering every unroll/remainder branch: below one lane-bank,
+/// exact multiples, and every off-by-one around the 8-lane width.
+const SIZES: &[usize] = &[1, 2, 3, 5, 7, 8, 9, 15, 16, 17, 31, 33, 63, 64, 65, 100, 128, 200, 257, 300];
+
+fn vecs(n: usize, seed: u64) -> (Vec<f32>, Vec<f32>) {
+    let mut rng = Xoshiro256pp::seed_from_u64(seed);
+    let mut a = vec![0.0f32; n];
+    let mut b = vec![0.0f32; n];
+    rng.fill_normal_f32(&mut a);
+    rng.fill_normal_f32(&mut b);
+    (a, b)
+}
+
+/// Condition-aware dot bound: error is measured against Σ|a_i·b_i|
+/// (the quantity rounding actually accumulates over), not against the
+/// possibly-cancelled result.
+fn dot_scale(a: &[f32], b: &[f32]) -> f64 {
+    a.iter().zip(b).map(|(&x, &y)| (x as f64 * y as f64).abs()).sum::<f64>().max(1e-30)
+}
+
+#[test]
+fn dot_f64_fast_matches_shadow_within_1e_12() {
+    for &n in SIZES {
+        let (a, b) = vecs(n, 0x5EED + n as u64);
+        let shadow: f64 = a.iter().zip(&b).map(|(&x, &y)| x as f64 * y as f64).sum();
+        let scale = dot_scale(&a, &b);
+        for spec in [KernelSpec::Reference, KernelSpec::Fast] {
+            let got = spec.dot(&a, &b);
+            // Both sets accumulate exact f32 products in f64 — only the
+            // summation order differs, so the bound is near machine-f64.
+            assert!(
+                (got - shadow).abs() <= 1e-12 * scale,
+                "dot n={n} {}: {got} vs shadow {shadow}",
+                spec.name()
+            );
+        }
+    }
+}
+
+#[test]
+fn dot_f32_fast_matches_shadow_within_1e_4() {
+    for &n in SIZES {
+        let (a, b) = vecs(n, 0xD07 + n as u64);
+        let shadow: f64 = a.iter().zip(&b).map(|(&x, &y)| x as f64 * y as f64).sum();
+        let scale = dot_scale(&a, &b);
+        for spec in [KernelSpec::Reference, KernelSpec::Fast] {
+            let got = spec.dot_f32(&a, &b) as f64;
+            // f32 accumulation: ~n·ε_f32 against the magnitude sum.
+            assert!(
+                (got - shadow).abs() <= 1e-4 * scale,
+                "dot_f32 n={n} {}: {got} vs shadow {shadow}",
+                spec.name()
+            );
+        }
+    }
+}
+
+#[test]
+fn axpy_fast_matches_reference_within_per_element_ulps() {
+    for &n in SIZES {
+        let (x, y0) = vecs(n, 0xA9 + n as u64);
+        let alpha = 0.37f32;
+        let mut y_ref = y0.clone();
+        KernelSpec::Reference.axpy(alpha, &x, &mut y_ref);
+        let mut y_fast = y0.clone();
+        KernelSpec::Fast.axpy(alpha, &x, &mut y_fast);
+        for i in 0..n {
+            // One op per element: the only divergence is the fused
+            // vs two-rounding multiply-add.
+            let tol = 1e-6 * (y0[i].abs() + (alpha * x[i]).abs()).max(1e-6) as f64;
+            assert!(
+                (y_ref[i] as f64 - y_fast[i] as f64).abs() <= tol,
+                "axpy n={n} i={i}: {} vs {}",
+                y_ref[i],
+                y_fast[i]
+            );
+        }
+    }
+}
+
+#[test]
+fn sgd_update_fast_matches_reference_for_k1_and_k4() {
+    let mut rng = Xoshiro256pp::seed_from_u64(0x56D);
+    for &d in &[3usize, 8, 17, 64, 200, 300] {
+        for &k in &[1usize, 4] {
+            let m = 64usize;
+            let mut a = Matrix::zeros(m, d);
+            rng.fill_normal_f32(a.as_mut_slice());
+            let batch = 16usize;
+            let rows: Vec<u32> = (0..batch).map(|_| rng.index(m) as u32).collect();
+            let mut coeff = vec![0.0f32; batch * k];
+            rng.fill_normal_f32(&mut coeff);
+            let mut x0 = vec![0.0f32; k * d];
+            rng.fill_normal_f32(&mut x0);
+            let scale = -2.5e-3f32;
+
+            let mut x_ref = x0.clone();
+            KernelSpec::Reference.sgd_update(&a, &rows, &coeff, k, scale, &mut x_ref);
+            let mut x_fast = x0.clone();
+            KernelSpec::Fast.sgd_update(&a, &rows, &coeff, k, scale, &mut x_fast);
+            for i in 0..k * d {
+                // `batch` accumulations per element; each differs by at
+                // most one rounding between the fused and split forms.
+                let tol = 1e-5 * (1.0 + x_ref[i].abs() as f64);
+                assert!(
+                    (x_ref[i] as f64 - x_fast[i] as f64).abs() <= tol,
+                    "sgd_update d={d} k={k} i={i}: {} vs {}",
+                    x_ref[i],
+                    x_fast[i]
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn logits_fast_matches_reference_within_dot_tolerance() {
+    let mut rng = Xoshiro256pp::seed_from_u64(0x106);
+    for &d in &[1usize, 7, 8, 9, 64, 200, 300] {
+        for &k in &[1usize, 3, 4, 8] {
+            let mut row = vec![0.0f32; d];
+            let mut x = vec![0.0f32; k * d];
+            rng.fill_normal_f32(&mut row);
+            rng.fill_normal_f32(&mut x);
+            let mut out_ref = vec![0.0f32; k];
+            KernelSpec::Reference.logits(&row, &x, &mut out_ref);
+            let mut out_fast = vec![0.0f32; k];
+            KernelSpec::Fast.logits(&row, &x, &mut out_fast);
+            for c in 0..k {
+                let scale = dot_scale(&row, &x[c * d..(c + 1) * d]);
+                assert!(
+                    (out_ref[c] as f64 - out_fast[c] as f64).abs() <= 1e-4 * scale,
+                    "logits d={d} k={k} c={c}: {} vs {}",
+                    out_ref[c],
+                    out_fast[c]
+                );
+            }
+        }
+    }
+}
+
+// ------------------------------------------------- reference dispatch
+
+#[test]
+fn reference_dispatch_is_bit_exact_per_op() {
+    let mut rng = Xoshiro256pp::seed_from_u64(0xB17);
+    for &n in SIZES {
+        let (a, b) = vecs(n, 0xB17 + n as u64);
+        assert_eq!(
+            KernelSpec::Reference.dot(&a, &b).to_bits(),
+            linalg::dot(&a, &b).to_bits(),
+            "dot n={n}"
+        );
+        assert_eq!(
+            KernelSpec::Reference.dot_f32(&a, &b).to_bits(),
+            linalg::dot_f32(&a, &b).to_bits(),
+            "dot_f32 n={n}"
+        );
+        let mut y1 = b.clone();
+        let mut y2 = b.clone();
+        KernelSpec::Reference.axpy(0.21, &a, &mut y1);
+        linalg::axpy(0.21, &a, &mut y2);
+        assert_eq!(bits(&y1), bits(&y2), "axpy n={n}");
+    }
+    for &k in &[1usize, 4] {
+        let (m, d, batch) = (50usize, 33usize, 8usize);
+        let mut a = Matrix::zeros(m, d);
+        rng.fill_normal_f32(a.as_mut_slice());
+        let rows: Vec<u32> = (0..batch).map(|_| rng.index(m) as u32).collect();
+        let mut coeff = vec![0.0f32; batch * k];
+        rng.fill_normal_f32(&mut coeff);
+        let mut x1 = vec![0.01f32; k * d];
+        let mut x2 = x1.clone();
+        KernelSpec::Reference.sgd_update(&a, &rows, &coeff, k, -1e-3, &mut x1);
+        linalg::sgd_update(&a, &rows, &coeff, k, -1e-3, &mut x2);
+        assert_eq!(bits(&x1), bits(&x2), "sgd_update k={k}");
+    }
+}
+
+#[test]
+fn reference_dispatch_is_bit_exact_through_every_objective() {
+    let lin = anytime_sgd::data::synthetic_linreg(500, 24, 1e-3, 11);
+    let log = anytime_sgd::data::synthetic_logreg(500, 24, 11);
+    let multi = anytime_sgd::data::synthetic_multiclass(500, 24, 4, 11);
+    let mut rng = Xoshiro256pp::seed_from_u64(0x0BB);
+    let rows: Vec<u32> = (0..16).map(|_| rng.index(500) as u32).collect();
+
+    let cases: Vec<(&str, &dyn Objective, &Matrix, &[f32], usize)> = vec![
+        ("linreg", &LinReg, &lin.a, &lin.y, 1),
+        ("logreg", &LogReg, &log.a, &log.y, 1),
+    ];
+    for (name, obj, a, y, k) in cases {
+        let mut x = vec![0.0f32; k * 24];
+        rng.fill_normal_f32(&mut x);
+        let mut b1 = GradBuf::new(16, k);
+        let mut b2 = GradBuf::new(16, k);
+        obj.loss_grad_into(a, y, &x, &rows, &mut b1);
+        obj.loss_grad_with(KernelSpec::Reference, a, y, &x, &rows, &mut b2);
+        assert_eq!(bits(&b1.coeff), bits(&b2.coeff), "{name}");
+    }
+    let sm = Softmax::new(4);
+    let mut x = vec![0.0f32; 4 * 24];
+    rng.fill_normal_f32(&mut x);
+    let mut b1 = GradBuf::new(16, 4);
+    let mut b2 = GradBuf::new(16, 4);
+    sm.loss_grad_into(&multi.a, &multi.y, &x, &rows, &mut b1);
+    sm.loss_grad_with(KernelSpec::Reference, &multi.a, &multi.y, &x, &rows, &mut b2);
+    assert_eq!(bits(&b1.coeff), bits(&b2.coeff), "softmax");
+}
+
+#[test]
+fn worker_block_reference_dispatch_and_into_path_are_bit_exact() {
+    let ds = anytime_sgd::data::synthetic_linreg(2_000, 32, 1e-3, 5);
+    let shards = materialize_shards(&ds, &Assignment::new(1, 0));
+    let shard = Arc::new(shards.into_iter().next().unwrap());
+    let mut rng = Xoshiro256pp::seed_from_u64(3);
+    let idx: Vec<u32> = (0..16 * 8).map(|_| rng.index(2_000) as u32).collect();
+    let x0 = vec![0.0f32; 32];
+    let consts = Consts::constant(1e-3);
+
+    // Legacy constructor ≡ explicit Reference kernels, allocating path.
+    let mut w_legacy = NativeWorker::with_objective(shard.clone(), 8, LinReg);
+    let mut w_ref = NativeWorker::with_kernels(shard.clone(), 8, LinReg, KernelSpec::Reference);
+    let out_legacy = w_legacy.run_steps(&x0, &idx, 0.0, consts);
+    let out_ref = w_ref.run_steps(&x0, &idx, 0.0, consts);
+    assert_eq!(bits(&out_legacy.x_k), bits(&out_ref.x_k));
+    assert_eq!(bits(&out_legacy.x_bar), bits(&out_ref.x_bar));
+
+    // Allocation-free path ≡ allocating path, bit for bit.
+    let mut w_into = NativeWorker::with_objective(shard, 8, LinReg);
+    let mut out = StepOut::default();
+    w_into.run_steps_into(&x0, &idx, 0.0, consts, &mut out);
+    assert_eq!(bits(&out_legacy.x_k), bits(&out.x_k));
+    assert_eq!(bits(&out_legacy.x_bar), bits(&out.x_bar));
+}
+
+// ---------------------------------------------- full-run convergence
+
+/// Deterministic 4-worker fleet, generous budgets, sim runtime.
+fn conv_cfg(kernels: KernelSpec) -> RunConfig {
+    let mut c = RunConfig::base();
+    c.name = "kernel-equiv".into();
+    c.data = DataSpec::Synthetic { m: 2_000, d: 16, noise: 1e-3 };
+    c.workers = 4;
+    c.redundancy = 0;
+    c.batch = 8;
+    c.epochs = 4;
+    c.eval_every = 1;
+    c.max_passes = 1.0;
+    c.schedule = Schedule::Constant { lr: 5e-3 };
+    c.env = StragglerEnv { delay: DelaySpec::Deterministic { secs: 0.001 }, persistent: vec![] };
+    c.comm = CommSpec::Fixed { secs: 2.0 };
+    c.t_c = 1e9;
+    c.method = protocols::anytime::spec(100.0);
+    c.kernels = kernels;
+    c.seed = 7;
+    c
+}
+
+#[test]
+fn fast_full_run_converges_like_reference() {
+    // Builder route on one arm so `.kernels(..)` is exercised end to end.
+    let r_ref = Trainer::new(conv_cfg(KernelSpec::Reference)).unwrap().run();
+    let r_fast = Trainer::builder()
+        .config(conv_cfg(KernelSpec::Reference))
+        .kernels(KernelSpec::Fast)
+        .build()
+        .unwrap()
+        .run();
+
+    let e_ref = r_ref.trace.final_err();
+    let e_fast = r_fast.trace.final_err();
+    assert!(e_ref < 0.5 * r_ref.initial_err, "reference did not descend: {e_ref}");
+    assert!(e_fast < 0.5 * r_fast.initial_err, "fast did not descend: {e_fast}");
+    // The per-op tolerances are ~1e-4 relative; after 4 epochs the two
+    // error curves must still sit in the same regime.
+    let rel = (e_ref - e_fast).abs() / e_ref.max(1e-12);
+    assert!(rel < 0.05, "kernel sets diverged: reference {e_ref} vs fast {e_fast} ({rel:.3})");
+}
+
+#[test]
+fn registry_enumerates_both_sets_and_rejects_unknowns() {
+    let names = anytime_sgd::linalg::kernels::names();
+    assert_eq!(names, vec!["reference", "fast"]);
+    assert!(anytime_sgd::linalg::kernels::lookup("golden").is_ok());
+    assert!(anytime_sgd::linalg::kernels::lookup("opt").is_ok());
+    let err = anytime_sgd::linalg::kernels::lookup("turbo").unwrap_err().to_string();
+    assert!(err.contains("reference"), "{err}");
+    assert!(KernelSpec::default().bit_exact());
+    assert!(!KernelSpec::Fast.bit_exact());
+}
+
+fn bits(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
+}

@@ -102,6 +102,39 @@ fn training_actually_converges_on_ideal() {
 }
 
 #[test]
+fn kernel_axis_smoke_both_arms_converge() {
+    // The perf campaign's convergence-equivalence check on the sweep
+    // surface: `--kernels reference,fast` expands both arms, keys the
+    // groups, and both arms descend on the ideal scenario.
+    let cells = Grid::new(tiny_base())
+        .scenarios(["ideal"])
+        .methods(["anytime"])
+        .kernels(["reference", "fast"])
+        .seed_count(1)
+        .expand()
+        .unwrap();
+    assert_eq!(cells.len(), 2);
+    let res = run_cells(&cells, 2).unwrap();
+    for (cell, r) in cells.iter().zip(&res) {
+        assert!(
+            r.trace.final_err() < 0.5 * r.initial_err,
+            "{} did not converge: {} -> {}",
+            cell.group,
+            r.initial_err,
+            r.trace.final_err()
+        );
+    }
+    let agg = aggregate("krn", &res);
+    for key in ["krn-reference", "krn-fast"] {
+        assert!(
+            agg.groups.iter().any(|g| g.group.contains(key)),
+            "missing group key {key}: {:?}",
+            agg.groups.iter().map(|g| &g.group).collect::<Vec<_>>()
+        );
+    }
+}
+
+#[test]
 fn cli_flags_parse_into_grids() {
     let argv = |parts: &[&str]| -> Vec<String> { parts.iter().map(|s| s.to_string()).collect() };
     let cmd = sweep::cli_command();
